@@ -1,0 +1,81 @@
+//! L3 hot-path micro-benchmarks: batcher, admission, KV pool, schedule —
+//! the coordinator-side costs that must stay negligible next to prefill
+//! execution (target: < 5% of a 512-token prefill, i.e. well under 1 ms).
+
+use std::time::{Duration, Instant};
+
+use stem::coordinator::admission::{Admission, AdmissionConfig};
+use stem::coordinator::batcher::{BatchKey, Batcher, BatcherConfig};
+use stem::coordinator::kv_cache::{KvCache, KvConfig};
+use stem::coordinator::{Method, PrefillRequest};
+use stem::sparse::schedule::{block_budget_schedule, TpdConfig};
+use stem::util::bench::{black_box, Bencher};
+
+fn req(id: u64) -> PrefillRequest {
+    PrefillRequest {
+        id,
+        checkpoint: "base".into(),
+        method: Method::Dense,
+        ids: vec![],
+        diag: false,
+        enqueued: Instant::now(),
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let bencher = if quick { Bencher::quick() } else { Bencher::default() };
+
+    // batcher push/pop
+    {
+        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(0) };
+        let mut batcher = Batcher::new(cfg);
+        let key = BatchKey { kind: "prefill_stem", bucket: 1024, checkpoint: "base".into() };
+        let mut id = 0u64;
+        let st = bencher.run("batcher: push 8 + drain", || {
+            for _ in 0..8 {
+                id += 1;
+                batcher.push(key.clone(), req(id));
+            }
+            let mut got = 0;
+            while let Some(b) = batcher.pop_ready(Instant::now()) {
+                got += b.requests.len();
+            }
+            black_box(got);
+        });
+        st.print();
+    }
+
+    // admission control
+    {
+        let adm = Admission::new(AdmissionConfig::default());
+        let st = bencher.run("admission: try_admit + release", || {
+            let a = adm.try_admit(1024);
+            black_box(&a);
+            adm.release(1024);
+        });
+        st.print();
+    }
+
+    // KV pool allocate/release
+    {
+        let mut kv = KvCache::new(KvConfig { total_pages: 4096, page_tokens: 64 });
+        let mut id = 0u64;
+        let st = bencher.run("kv: allocate+release 2048-token seq", || {
+            id += 1;
+            kv.allocate(id, 2048).unwrap();
+            kv.release(id).unwrap();
+            kv.drop_seq(id).unwrap();
+        });
+        st.print();
+    }
+
+    // TPD schedule computation (per-request cost in the scheduler)
+    {
+        let cfg = TpdConfig { k_start: 102.4, mu: 0.7, ..Default::default() };
+        let st = bencher.run("schedule: 1024-block TPD budget vector", || {
+            black_box(block_budget_schedule(1024, &cfg));
+        });
+        st.print();
+    }
+}

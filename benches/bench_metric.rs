@@ -1,0 +1,57 @@
+//! Figure 1 inset: metric-calculation overhead vs attention execution.
+//!
+//! Two measurements:
+//!  (a) pure-rust reference pipeline, decomposed — pooling, OAM scoring,
+//!      selection, sparse aggregation — to show the metric passes are a
+//!      small fraction of execution (paper: 90 ms of 420 ms at 128K);
+//!  (b) the compiled diag_stem module relative to prefill_dense as the
+//!      whole-graph check.
+
+use stem::sparse::{
+    antidiag_scores, block_sparse_attention, oam_scores, select_stem, value_block_logmag, Tensor,
+};
+use stem::sparse::schedule::TpdConfig;
+use stem::util::bench::{black_box, Bencher};
+use stem::util::rng::Rng;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let bencher = if quick { Bencher::quick() } else { Bencher::default() };
+    let (h, hk, n, dh, block, stride) = (8usize, 4usize, 2048usize, 32usize, 64usize, 16usize);
+    let mut rng = Rng::new(11);
+    let q = Tensor::randn(&[h, n, dh], &mut rng);
+    let k = Tensor::randn(&[hk, n, dh], &mut rng);
+    let v = Tensor::randn(&[hk, n, dh], &mut rng);
+    let cfg = TpdConfig { k_start: 6.4, mu: 0.7, ..Default::default() };
+
+    println!("== metric overhead decomposition (pure-rust reference, N={n}) ==");
+    let s_pool = bencher.run("pool: antidiag Q.K scores", || {
+        black_box(antidiag_scores(&q, &k, block, stride));
+    });
+    s_pool.print();
+    let s_mag = bencher.run("pool: value log-magnitude", || {
+        black_box(value_block_logmag(&v, block));
+    });
+    s_mag.print();
+    let s_oam = bencher.run("metric: OAM scores (pool + combine)", || {
+        black_box(oam_scores(&q, &k, &v, block, stride, 0.2));
+    });
+    s_oam.print();
+    let s_sel = bencher.run("select: OAM rank + TPD budget", || {
+        black_box(select_stem(&q, &k, &v, block, stride, &cfg, 0.2));
+    });
+    s_sel.print();
+    let sel = select_stem(&q, &k, &v, block, stride, &cfg, 0.2);
+    let s_attn = bencher.run("exec: block-sparse attention", || {
+        black_box(block_sparse_attention(&q, &k, &v, &sel, block));
+    });
+    s_attn.print();
+
+    let metric_ms = s_oam.median_ns / 1e6;
+    let exec_ms = s_attn.median_ns / 1e6;
+    println!(
+        "\nmetric/exec ratio: {:.1}% (paper at 128K: 90/330 = 27%; metric must not dominate)",
+        100.0 * metric_ms / exec_ms
+    );
+    println!("budget fraction selected: {:.1}%", 100.0 * sel.budget_fraction());
+}

@@ -1,0 +1,107 @@
+//! Figure 1, measured half: end-to-end prefill latency of every compiled
+//! method at every bucket on this testbed (XLA-CPU), printed alongside
+//! the analytic H20 projection so the *shape* can be compared to the
+//! paper (who wins, by what factor, where the crossovers sit).
+//!
+//!   cargo bench --bench bench_prefill            # all buckets
+//!   cargo bench --bench bench_prefill -- --quick # smaller sample counts
+
+use std::path::Path;
+
+use stem::runtime::{Engine, ScalarValue};
+use stem::sim::project_figure1;
+use stem::util::bench::{black_box, Bencher};
+
+fn scalars_for(engine: &Engine, kind: &str, n: usize) -> Vec<ScalarValue> {
+    let d = engine.manifest().defaults_for(n).expect("defaults");
+    match kind {
+        "prefill_dense" => vec![],
+        "prefill_stem" => vec![
+            ScalarValue::F32(d.k_start as f32),
+            ScalarValue::F32(d.mu as f32),
+            ScalarValue::F32(d.beta as f32),
+        ],
+        "prefill_streaming" => {
+            vec![ScalarValue::I32(d.sink_blocks as i32), ScalarValue::I32(d.local_blocks as i32)]
+        }
+        "prefill_xattn" => vec![ScalarValue::F32(d.xattn_tau as f32)],
+        "prefill_minference" => {
+            vec![ScalarValue::I32(d.minf_vertical as i32), ScalarValue::I32(d.minf_slash as i32)]
+        }
+        "prefill_flexprefill" => {
+            vec![ScalarValue::F32(d.flex_gamma as f32), ScalarValue::F32(d.flex_entropy as f32)]
+        }
+        other => panic!("unknown kind {other}"),
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let artifacts = stem::artifacts_dir();
+    let engine = Engine::new(&artifacts).expect("run `make artifacts` first");
+    let man = engine.manifest().clone();
+    let bencher = if quick { Bencher::quick() } else { Bencher::default() };
+
+    let kinds = [
+        "prefill_dense",
+        "prefill_streaming",
+        "prefill_minference",
+        "prefill_flexprefill",
+        "prefill_xattn",
+        "prefill_stem",
+    ];
+    let buckets: Vec<usize> = {
+        let mut b: Vec<usize> =
+            man.modules.iter().filter(|m| !m.is_diag()).map(|m| m.n_ctx).collect();
+        b.sort();
+        b.dedup();
+        b
+    };
+
+    println!("== Figure 1 (measured, XLA-CPU, this model) ==");
+    let mut dense_med = std::collections::HashMap::new();
+    let mut stem_med = std::collections::HashMap::new();
+    for &n in &buckets {
+        // mixed-token prompt: realistic id entropy (not all-PAD)
+        let mut rng = stem::util::rng::Rng::new(7);
+        let ids: Vec<i32> =
+            (0..n).map(|_| 16 + (rng.below(64) as i32)).collect();
+        for kind in kinds {
+            if man.module(kind, n).is_err() {
+                continue;
+            }
+            let scalars = scalars_for(&engine, kind, n);
+            engine.ensure_module(kind, n).expect("compile");
+            let st = bencher.run(&format!("{kind}@{n}"), || {
+                let o = engine.prefill("base", kind, n, &ids, &scalars).expect("exec");
+                black_box(o.budget_fraction);
+            });
+            st.print();
+            if kind == "prefill_dense" {
+                dense_med.insert(n, st.median_ns);
+            }
+            if kind == "prefill_stem" {
+                stem_med.insert(n, st.median_ns);
+            }
+        }
+    }
+    println!("\nspeedup dense/stem per bucket (paper at 128K: 3.7x):");
+    for &n in &buckets {
+        if let (Some(d), Some(s)) = (dense_med.get(&n), stem_med.get(&n)) {
+            println!("  n={n}: {:.2}x", d / s);
+        }
+    }
+
+    println!("\n== Figure 1 (analytic H20 projection, Llama-3.1-8B geometry) ==");
+    for p in project_figure1(&[16384, 32768, 65536, 131072]) {
+        println!(
+            "  {:<12} {:>6}K  kernel {:>7.0} ms  total {:>7.0} ms  budget {:>5.1}%",
+            p.method,
+            p.n_ctx / 1024,
+            p.kernel_ms,
+            p.total_ms,
+            100.0 * p.budget_fraction
+        );
+    }
+    let _ = Path::new("");
+}

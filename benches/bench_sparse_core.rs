@@ -1,0 +1,49 @@
+//! Micro-benchmarks of the pure-rust sparse core (pooling, metric,
+//! selection, attention) across sizes — the perf-pass iteration target
+//! for the L3 reference path (EXPERIMENTS.md §Perf).
+
+use stem::sparse::schedule::TpdConfig;
+use stem::sparse::{
+    antidiag_scores, block_sparse_attention, dense_attention, oam_scores, select_stem, Tensor,
+};
+use stem::util::bench::{black_box, Bencher};
+use stem::util::rng::Rng;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let bencher = if quick { Bencher::quick() } else { Bencher::default() };
+    let (h, hk, dh, block, stride) = (8usize, 4usize, 32usize, 64usize, 16usize);
+
+    for n in [512usize, 1024, 2048] {
+        let mut rng = Rng::new(3);
+        let q = Tensor::randn(&[h, n, dh], &mut rng);
+        let k = Tensor::randn(&[hk, n, dh], &mut rng);
+        let v = Tensor::randn(&[hk, n, dh], &mut rng);
+        let nblk = (n / block) as f64;
+        let cfg = TpdConfig { k_start: 0.2 * nblk, mu: 0.7, ..Default::default() };
+
+        bencher.run(&format!("antidiag_scores n={n}"), || {
+            black_box(antidiag_scores(&q, &k, block, stride));
+        }).print();
+        bencher.run(&format!("oam_scores n={n}"), || {
+            black_box(oam_scores(&q, &k, &v, block, stride, 0.2));
+        }).print();
+        bencher.run(&format!("select_stem n={n}"), || {
+            black_box(select_stem(&q, &k, &v, block, stride, &cfg, 0.2));
+        }).print();
+        let sel = select_stem(&q, &k, &v, block, stride, &cfg, 0.2);
+        let s_sparse = bencher.run(&format!("block_sparse_attention n={n}"), || {
+            black_box(block_sparse_attention(&q, &k, &v, &sel, block));
+        });
+        s_sparse.print();
+        let s_dense = bencher.run(&format!("dense_attention n={n}"), || {
+            black_box(dense_attention(&q, &k, &v));
+        });
+        s_dense.print();
+        println!(
+            "  -> rust-core dense/sparse ratio at n={n}: {:.2}x (budget {:.1}%)\n",
+            s_dense.median_ns / s_sparse.median_ns,
+            100.0 * sel.budget_fraction()
+        );
+    }
+}

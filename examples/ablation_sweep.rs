@@ -1,0 +1,66 @@
+//! Figure-5 ablation sweep through the public API: μ (decay ratio) and
+//! β (magnitude coefficient) accuracy/budget curves on the LongBench
+//! proxy suite.
+//!
+//!   cargo run --release --example ablation_sweep [-- --limit 6 --bucket 1024]
+//!
+//! Unlike `stem figure5` this sweeps finer grids and prints machine-
+//! readable CSV (for replotting) alongside the table.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use stem::coordinator::{Coordinator, CoordinatorConfig, Method};
+use stem::eval::tables::FAMILIES;
+use stem::eval::Evaluator;
+use stem::runtime::Engine;
+use stem::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(false);
+    let bucket = args.usize_or("bucket", 1024);
+    let limit = args.usize_or("limit", 6);
+
+    let engine = Arc::new(Engine::new(&stem::artifacts_dir())?);
+    let coord = Arc::new(Coordinator::new(engine, CoordinatorConfig::default()));
+    let ev = Evaluator { coordinator: Arc::clone(&coord), limit };
+    let man = coord.engine().manifest().clone();
+    let d = man.defaults_for(bucket)?.clone();
+    let fams: Vec<&str> = FAMILIES.to_vec();
+
+    println!("# mu sweep at k_start={:.1}, beta={}", d.k_start, d.beta);
+    println!("mu,acc,budget");
+    for mu10 in 5..=10 {
+        let mu = mu10 as f32 / 10.0;
+        let m = Method::Stem { k_start: d.k_start as f32, mu, beta: d.beta as f32 };
+        let out = ev.run("base", "stem", Some(m), "longbench", &fams, &[bucket])?;
+        let a = out.overall();
+        println!("{mu:.1},{:.2},{:.3}", a.token_acc(), a.budget());
+    }
+
+    println!("\n# beta sweep at k_start={:.1}, mu={}", d.k_start, d.mu);
+    println!("beta,acc,budget");
+    for b10 in 0..=5 {
+        let beta = b10 as f32 / 10.0;
+        let m = Method::Stem { k_start: d.k_start as f32, mu: d.mu as f32, beta };
+        let out = ev.run("base", "stem", Some(m), "longbench", &fams, &[bucket])?;
+        let a = out.overall();
+        println!("{beta:.1},{:.2},{:.3}", a.token_acc(), a.budget());
+    }
+
+    // budget-matched sanity: uniform vs TPD at identical cost (§3.3)
+    println!("\n# budget-matched uniform (k_uni = k_start(1+mu)/2) vs TPD");
+    for (label, m) in [
+        (
+            "uniform",
+            Method::Stem { k_start: d.k_uni_matched as f32, mu: 1.0, beta: 0.0 },
+        ),
+        ("tpd", Method::Stem { k_start: d.k_start as f32, mu: d.mu as f32, beta: 0.0 }),
+    ] {
+        let out = ev.run("base", label, Some(m), "longbench", &fams, &[bucket])?;
+        let a = out.overall();
+        println!("{label}: acc {:.2}%, budget {:.1}%", a.token_acc(), 100.0 * a.budget());
+    }
+    Ok(())
+}

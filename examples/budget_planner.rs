@@ -1,0 +1,97 @@
+//! Budget planner: paper-scale projections from the analytic cost model.
+//!
+//!   cargo run --release --example budget_planner [-- --n 131072 --mu 0.7]
+//!
+//! For a target context length and decay ratio, prints (a) the Eq. (2)/(4)
+//! pair-count budgets, (b) the per-position schedule's head/tail budgets,
+//! (c) the Figure-1 H20 latency projection, and (d) the k_start needed to
+//! hit a requested budget fraction — the planning loop an operator would
+//! run before deploying Stem on real traffic.
+
+use anyhow::Result;
+
+use stem::sim::{method_cost, project_figure1, MethodCost, LLAMA31_8B};
+use stem::sparse::schedule::{self, TpdConfig};
+use stem::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(false);
+    let n = args.usize_or("n", 131072);
+    let mu = args.f64_or("mu", 0.7);
+    let block = args.usize_or("block", 128);
+    let target_budget = args.f64_or("target-budget", 0.0);
+    let g = LLAMA31_8B;
+    let nblk = n / block;
+    let frac = if n <= 16384 { 0.2 } else { 0.1 };
+    let k_start = args.f64_or("k-start", frac * nblk as f64);
+
+    println!("=== Stem budget plan: N={n} ({nblk} blocks of {block}), k_start={k_start:.1}, mu={mu} ===\n");
+
+    // (a) pair counts
+    let c_dense = schedule::cost_dense(n);
+    let c_uni = schedule::cost_uniform(n, k_start * block as f64);
+    let c_dec = schedule::cost_decay(n, k_start * block as f64, mu);
+    println!("causal pairs     : dense {c_dense:.3e}");
+    println!("uniform top-k    : {c_uni:.3e}  ({:.1}%)", 100.0 * c_uni / c_dense);
+    println!("TPD decay        : {c_dec:.3e}  ({:.1}%)", 100.0 * c_dec / c_dense);
+    println!("decay saves      : {:.1}% vs uniform (Eq. 4 savings term)\n", 100.0 * (1.0 - c_dec / c_uni));
+
+    // (b) schedule endpoints
+    let cfg = TpdConfig { k_start, mu, ..Default::default() };
+    let sched = schedule::block_budget_schedule(nblk, &cfg);
+    println!(
+        "schedule         : k(first)={} blocks, k(mid)={}, k(last)={} (k_end = mu*k_start = {:.1})",
+        sched[0],
+        sched[nblk / 2],
+        sched[nblk - 1],
+        mu * k_start
+    );
+    println!("k_avg            : {:.1} blocks ({:.1}% of mean causal width)\n",
+        schedule::k_avg_blocks(nblk, &cfg),
+        100.0 * schedule::k_avg_blocks(nblk, &cfg) / ((nblk + 1) as f64 / 2.0));
+
+    // (c) whole-model FLOPs + H20 kernel projection
+    for (name, m) in [
+        ("dense", MethodCost::Dense),
+        ("stem", MethodCost::Stem { k_start_blocks: k_start, mu }),
+    ] {
+        let c = method_cost(&g, n, m);
+        println!(
+            "{name:>6} whole-model: attn {:.2e} FLOPs + metric {:.2e} + linear {:.2e} (budget {:.1}%)",
+            c.attn_flops, c.metric_flops, c.linear_flops, 100.0 * c.budget_fraction
+        );
+    }
+    println!();
+    if [16384usize, 32768, 65536, 131072].contains(&n) {
+        for p in project_figure1(&[n]) {
+            println!(
+                "H20 per-layer kernel projection: {:<12} {:>7.0} ms kernel / {:>7.0} ms total",
+                p.method, p.kernel_ms, p.total_ms
+            );
+        }
+        println!();
+    }
+
+    // (d) inverse planning: k_start for a requested budget fraction
+    if target_budget > 0.0 {
+        let mut lo = 1.0f64;
+        let mut hi = nblk as f64;
+        for _ in 0..60 {
+            let mid = 0.5 * (lo + hi);
+            let cfg = TpdConfig { k_start: mid, mu, ..Default::default() };
+            let got = schedule::k_avg_blocks(nblk, &cfg) / ((nblk + 1) as f64 / 2.0);
+            if got < target_budget {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        println!(
+            "to hit budget {:.0}%: k_start = {:.1} blocks ({:.1}% of N_blk)",
+            100.0 * target_budget,
+            hi,
+            100.0 * hi / nblk as f64
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Quickstart: load the AOT artifacts, run one prompt through dense and
+//! Stem prefill, and compare outputs + budget.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+//!
+//! This is the smallest end-to-end path through the public API: manifest →
+//! engine → prefill. No coordinator — see `serve_longcontext.rs` for the
+//! full serving stack.
+
+use anyhow::Result;
+
+use stem::runtime::{Engine, ScalarValue};
+
+fn main() -> Result<()> {
+    let artifacts = stem::artifacts_dir();
+    println!("loading artifacts from {}", artifacts.display());
+    let engine = Engine::new(&artifacts)?;
+    let man = engine.manifest();
+    println!(
+        "model: {} layers, d_model {}, {} q-heads / {} kv-heads, block {}",
+        man.model.n_layers, man.model.d_model, man.model.n_heads, man.model.n_kv_heads,
+        man.model.block
+    );
+
+    // a needle-in-haystack style prompt from the exported eval sets
+    let n_ctx = 1024usize;
+    let set = man
+        .eval_sets
+        .iter()
+        .find(|e| e.suite == "ruler" && e.family == "needle" && e.n_ctx == n_ctx)
+        .expect("needle eval set (run `make artifacts`)");
+    let samples = stem::workload::load_eval_set(&man.root.join(&set.file))?;
+    let sample = &samples[0];
+    let mut ids = sample.ids.clone();
+    ids.resize(n_ctx, 0);
+
+    // dense reference
+    let dense = engine.prefill("base", "prefill_dense", n_ctx, &ids, &[])?;
+
+    // Stem at the serving defaults for this bucket
+    let d = man.defaults_for(n_ctx)?;
+    let scalars = [
+        ScalarValue::F32(d.k_start as f32),
+        ScalarValue::F32(d.mu as f32),
+        ScalarValue::F32(d.beta as f32),
+    ];
+    let sparse = engine.prefill("base", "prefill_stem", n_ctx, &ids, &scalars)?;
+
+    // compare
+    let max_abs_diff = dense
+        .logits
+        .iter()
+        .zip(&sparse.logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    let answer = &sample.ids[sample.answer_start..sample.answer_start + sample.answer_len];
+    let argmax = |o: &stem::runtime::PrefillOutput, p: usize| -> i32 {
+        let row = &o.logits[p * o.vocab..(p + 1) * o.vocab];
+        row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0 as i32
+    };
+    let correct = |o: &stem::runtime::PrefillOutput| -> usize {
+        answer
+            .iter()
+            .enumerate()
+            .filter(|(i, &t)| argmax(o, sample.answer_start + i - 1) == t)
+            .count()
+    };
+
+    println!("\nprompt: {} tokens, answer span {} tokens", sample.ids.len(), answer.len());
+    println!("dense : budget 100%, answer tokens correct {}/{}", correct(&dense), answer.len());
+    println!(
+        "stem  : budget {:>5.1}%, answer tokens correct {}/{}  (k_start={:.1} blocks, mu={}, beta={})",
+        100.0 * sparse.budget_fraction,
+        correct(&sparse),
+        answer.len(),
+        d.k_start,
+        d.mu,
+        d.beta
+    );
+    println!("max |dense - stem| logit diff: {max_abs_diff:.4}");
+    Ok(())
+}

@@ -1,0 +1,149 @@
+//! End-to-end serving driver (the EXPERIMENTS.md §E2E workload).
+//!
+//!   cargo run --release --example serve_longcontext [-- --requests 96 --rps 6]
+//!
+//! Boots the full L3 stack — engine, router, admission, dynamic batcher,
+//! worker pool, KV pool — and pushes an open-loop Poisson trace of mixed
+//! long-context requests through it twice: once under dense attention,
+//! once under Stem. Reports TTFT percentiles, throughput, mean budget and
+//! answer accuracy for both, demonstrating the paper's claim end-to-end:
+//! same accuracy, ~4× less attention work, lower TTFT.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use stem::coordinator::{Coordinator, CoordinatorConfig, Method};
+use stem::eval::{score_sample, Evaluator};
+use stem::runtime::Engine;
+use stem::util::cli::Args;
+use stem::util::rng::Rng;
+use stem::workload::{load_eval_set, poisson_trace, EvalSample};
+
+struct RunStats {
+    label: String,
+    served: usize,
+    wall_s: f64,
+    em_pct: f64,
+    ttft_p50_ms: f64,
+    ttft_p95_ms: f64,
+    exec_mean_ms: f64,
+    budget_pct: f64,
+}
+
+fn run_trace(
+    coord: &Arc<Coordinator>,
+    pool: &[EvalSample],
+    method_name: &str,
+    n_requests: usize,
+    rps: f64,
+    seed: u64,
+) -> Result<RunStats> {
+    let man = coord.engine().manifest().clone();
+    let mut rng = Rng::new(seed);
+    let trace = poisson_trace(&mut rng, n_requests, rps, pool.len());
+    let start = Instant::now();
+    let mut rxs = vec![];
+    for item in &trace {
+        let now = start.elapsed();
+        if item.at > now {
+            std::thread::sleep(item.at - now);
+        }
+        let s = &pool[item.sample];
+        let bucket = man.bucket_for(s.ids.len()).ok_or_else(|| anyhow!("no bucket"))?;
+        let method = if method_name == "dense" {
+            Method::Dense
+        } else {
+            Evaluator::method_for(method_name, man.defaults_for(bucket)?)
+        };
+        let rx = coord.submit("base", method, s.ids.clone(), false)?;
+        rxs.push((rx, item.sample));
+    }
+    let mut ttfts = vec![];
+    let mut execs = vec![];
+    let mut budgets = vec![];
+    let mut em = 0usize;
+    let mut served = 0usize;
+    for (rx, si) in rxs {
+        let resp = rx.recv().map_err(|_| anyhow!("channel closed"))??;
+        let sc = score_sample(&resp, &pool[si]);
+        em += sc.exact_match as usize;
+        served += 1;
+        ttfts.push((resp.queue_us + resp.exec_us) as f64 / 1e3);
+        execs.push(resp.exec_us as f64 / 1e3);
+        budgets.push(resp.budget_fraction as f64);
+    }
+    let wall = start.elapsed().as_secs_f64();
+    ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| ttfts[((ttfts.len() - 1) as f64 * p) as usize];
+    Ok(RunStats {
+        label: method_name.to_string(),
+        served,
+        wall_s: wall,
+        em_pct: 100.0 * em as f64 / served.max(1) as f64,
+        ttft_p50_ms: pct(0.50),
+        ttft_p95_ms: pct(0.95),
+        exec_mean_ms: execs.iter().sum::<f64>() / execs.len().max(1) as f64,
+        budget_pct: 100.0 * budgets.iter().sum::<f64>() / budgets.len().max(1) as f64,
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env(false);
+    let n_requests = args.usize_or("requests", 96);
+    let rps = args.f64_or("rps", 6.0);
+
+    let artifacts = stem::artifacts_dir();
+    let engine = Arc::new(Engine::new(&artifacts)?);
+    let coord = Arc::new(Coordinator::new(engine, CoordinatorConfig::default()));
+    let man = coord.engine().manifest().clone();
+
+    // mixed long-context pool: every LongBench-proxy family and bucket
+    let mut pool = vec![];
+    for set in &man.eval_sets {
+        if set.suite == "longbench" {
+            pool.extend(load_eval_set(&man.root.join(&set.file))?);
+        }
+    }
+    println!("sample pool: {} prompts across {} eval sets", pool.len(), man.eval_sets.len());
+
+    // compile everything up front so the trace measures serving, not JIT
+    coord.engine().warmup(&["prefill_dense", "prefill_stem"], &[512, 1024, 2048])?;
+
+    let mut rows = vec![];
+    for m in ["dense", "stem"] {
+        println!("\n=== {m}: {n_requests} requests, open-loop {rps} req/s ===");
+        let st = run_trace(&coord, &pool, m, n_requests, rps, 42)?;
+        println!("{}", coord.report());
+        rows.push(st);
+    }
+
+    println!("\n===== end-to-end summary =====");
+    println!(
+        "{:<8} {:>8} {:>9} {:>10} {:>10} {:>10} {:>8}",
+        "method", "served", "req/s", "TTFT p50", "TTFT p95", "exec mean", "budget"
+    );
+    for st in &rows {
+        println!(
+            "{:<8} {:>8} {:>9.2} {:>8.1}ms {:>8.1}ms {:>8.1}ms {:>7.1}%  em={:.1}%",
+            st.label,
+            st.served,
+            st.served as f64 / st.wall_s,
+            st.ttft_p50_ms,
+            st.ttft_p95_ms,
+            st.exec_mean_ms,
+            st.budget_pct,
+            st.em_pct
+        );
+    }
+    if rows.len() == 2 {
+        println!(
+            "\nstem vs dense: exec {:.2}x faster, budget {:.1}% vs 100%, accuracy delta {:+.1}pp",
+            rows[0].exec_mean_ms / rows[1].exec_mean_ms.max(1e-9),
+            rows[1].budget_pct,
+            rows[1].em_pct - rows[0].em_pct
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,69 @@
+"""Continuation training: extend the base checkpoint's long-context
+competence (copy rungs at 1024/2048 need ~60-80 steps to crack; the main
+schedule under-allocated them — see EXPERIMENTS.md §Training).
+
+Usage:  cd python && PYTHONPATH=. python -m compile.continue_train \
+            [--phases "copy:1024:4:80,copy:2048:2:40,tasks:1024:4:40"]
+
+Loads artifacts/ckpt_base.npz, trains the extra phases, overwrites the
+checkpoint and train log ("_cont" suffixed). `make artifacts` then reuses
+the improved checkpoint and re-exports weights.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from . import train
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def parse_phases(spec: str):
+    out = []
+    for part in spec.split(","):
+        kind, n, b, s = part.strip().split(":")
+        out.append((kind, int(n), int(b), int(s)))
+    return tuple(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ckpt", default="base")
+    ap.add_argument(
+        "--phases",
+        default="copy:1024:4:90,copy:2048:2:50,tasks:1024:4:50,tasks:2048:2:24",
+    )
+    ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--native-k", type=float, default=0.0,
+                    help="train with uniform block-top-k (native ckpt)")
+    args = ap.parse_args()
+
+    cfg = M.ModelConfig()
+    npz = os.path.join(ART, f"ckpt_{args.ckpt}.npz")
+    data = np.load(npz)
+    flat = [jnp.asarray(data[n]) for n, _ in M.param_spec(cfg)]
+    init = M.unflatten_params(cfg, flat)
+
+    params, log = train.train(
+        cfg,
+        name=f"{args.ckpt}_cont",
+        phases=parse_phases(args.phases),
+        lr=args.lr,
+        native_k=args.native_k,
+        init=init,
+    )
+    flat = M.flatten_params(cfg, params)
+    np.savez(npz, **{n: np.asarray(a) for (n, _), a in
+                     zip(M.param_spec(cfg), flat)})
+    train.save_log(log, os.path.join(ART, f"train_log_{args.ckpt}_cont.json"))
+    print(f"[continue_train] {npz} updated", flush=True)
+
+
+if __name__ == "__main__":
+    main()

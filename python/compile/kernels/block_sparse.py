@@ -1,0 +1,118 @@
+"""Pallas block-sparse causal attention kernel (the paper's hot path).
+
+This is the Stem analogue of the Triton Block-Sparse-Attention kernel the
+paper builds on (Guo et al., 2024), rethought for the TPU execution model
+(see DESIGN.md §Hardware-Adaptation):
+
+  * one grid cell per (query head, query block)  — the paper's threadblock
+  * the per-row selected KV-block id list arrives as an `indices` operand
+    plus a `counts` operand (the Triton kernel reads block metadata from
+    CSR-style arrays)
+  * the inner loop is an *online-softmax* (flash-style) accumulation over
+    the `counts[h, i]` selected blocks only — a `fori_loop` with a dynamic
+    trip count, so the compiled module's work genuinely scales with the
+    Token Position-Decay budget k(i), not with kmax
+  * K/V blocks are pulled with dynamic slices (`pl.load` + `pl.dslice`) —
+    the HBM→VMEM gather the paper does with tl.load on block pointers
+
+The kernel is numerically the renormalized sparse softmax of Algorithm 1
+(steps c-d) and is asserted against `ref.block_sparse_attention`.
+
+Must run with `interpret=True`: the CPU PJRT client cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO, which XLA-CPU compiles to
+native code on the rust side.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(idx_ref, cnt_ref, q_ref, k_ref, v_ref, o_ref, *, block: int,
+            dh: int, scale: float):
+    qb = pl.program_id(1)
+    count = cnt_ref[0, 0]
+    q = q_ref[0].astype(jnp.float32) * scale                 # [B, dh]
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
+
+    def body(t, carry):
+        m, l, acc = carry
+        bidx = idx_ref[0, 0, t]
+        kblk = pl.load(
+            k_ref, (0, pl.dslice(bidx * block, block), slice(None))
+        ).astype(jnp.float32)                                # [B, dh]
+        vblk = pl.load(
+            v_ref, (0, pl.dslice(bidx * block, block), slice(None))
+        ).astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, kblk, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)              # [B, B]
+        # Within-block causal mask applies only on the diagonal block;
+        # selection guarantees bidx <= qb, so off-diagonal blocks are
+        # fully visible.
+        s = jnp.where((bidx != qb) | (cols <= rows), s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+            p, vblk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    init = (
+        jnp.full((block,), NEG_INF, jnp.float32),
+        jnp.zeros((block,), jnp.float32),
+        jnp.zeros((block, dh), jnp.float32),
+    )
+    m, l, acc = jax.lax.fori_loop(0, count, body, init)
+    # counts >= 1 always (the diagonal block is forced), so l > 0.
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def block_sparse_attention(q, k, v, indices, counts, block: int = 64):
+    """Sparse causal attention over selected KV blocks.
+
+    Args:
+      q: [H, N, dh] queries.
+      k, v: [Hk, N, dh] keys/values (GQA: H % Hk == 0).
+      indices: [H, nq, kmax] int32 selected block ids; valid slots must be
+        unique and satisfy indices <= query block id (causal).
+      counts: [H, nq] int32 number of valid slots, >= 1.
+      block: block size B (sequence length must be divisible by B).
+
+    Returns:
+      [H, N, dh] attention output, dtype of q.
+    """
+    hq, n, dh = q.shape
+    hk = k.shape[0]
+    assert n % block == 0, f"N={n} % block={block} != 0"
+    nblk = n // block
+    kmax = indices.shape[-1]
+    rep = hq // hk
+
+    grid = (hq, nblk)
+    return pl.pallas_call(
+        functools.partial(_kernel, block=block, dh=dh,
+                          scale=1.0 / (dh ** 0.5)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, kmax), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, 1), lambda h, i: (h, i)),
+            pl.BlockSpec((1, block, dh), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, n, dh), lambda h, i: (h // rep, 0, 0)),
+            pl.BlockSpec((1, n, dh), lambda h, i: (h // rep, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block, dh), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((hq, n, dh), q.dtype),
+        interpret=True,
+    )(indices, counts, q, k, v)

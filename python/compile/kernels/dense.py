@@ -1,0 +1,78 @@
+"""Pallas dense causal flash-attention kernel (the latency baseline).
+
+Identical online-softmax structure to `block_sparse.py` but iterates all
+`qb + 1` consecutive KV blocks — i.e. the FlashAttention-2 schedule the
+paper benchmarks against. Keeping both kernels structurally parallel makes
+the measured dense-vs-sparse latency gap attributable to the budget alone.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, block: int, dh: int,
+            scale: float):
+    qb = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale                 # [B, dh]
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
+
+    def body(t, carry):
+        m, l, acc = carry
+        kblk = pl.load(
+            k_ref, (0, pl.dslice(t * block, block), slice(None))
+        ).astype(jnp.float32)
+        vblk = pl.load(
+            v_ref, (0, pl.dslice(t * block, block), slice(None))
+        ).astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, kblk, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        s = jnp.where((t != qb) | (cols <= rows), s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+            p, vblk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    init = (
+        jnp.full((block,), NEG_INF, jnp.float32),
+        jnp.zeros((block,), jnp.float32),
+        jnp.zeros((block, dh), jnp.float32),
+    )
+    m, l, acc = jax.lax.fori_loop(0, qb + 1, body, init)
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def dense_attention(q, k, v, block: int = 64):
+    """Exact causal attention, flash schedule. q:[H,N,dh], k/v:[Hk,N,dh]."""
+    hq, n, dh = q.shape
+    hk = k.shape[0]
+    assert n % block == 0
+    nblk = n // block
+    rep = hq // hk
+    return pl.pallas_call(
+        functools.partial(_kernel, block=block, dh=dh,
+                          scale=1.0 / (dh ** 0.5)),
+        grid=(hq, nblk),
+        in_specs=[
+            pl.BlockSpec((1, block, dh), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, n, dh), lambda h, i: (h // rep, 0, 0)),
+            pl.BlockSpec((1, n, dh), lambda h, i: (h // rep, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block, dh), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((hq, n, dh), q.dtype),
+        interpret=True,
+    )(q, k, v)

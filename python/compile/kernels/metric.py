@@ -1,0 +1,99 @@
+"""Pallas kernels for the Output-Aware Metric (paper §2.2, Algorithm 1).
+
+Two kernels make up the "Metric Calculation" stage of Eq. (8):
+
+  * `value_logmag_kernel` — block max-pool of log||V_j||_2 (Alg. 1 line 6),
+    grid over (kv head, kv block); cost O(N d / B) per head.
+  * `oam_metric_kernel` — per query block, the anti-diagonal-sampled
+    routing estimate Q_i K_j^T / sqrt(d) plus beta * max(0, M_V) with the
+    causal block mask (Alg. 1 lines 12-13); the anti-diagonal sampling
+    reduces the quadratic routing term by B*stride.
+
+`beta` is a runtime scalar so a single AOT'd module serves both SAM
+(beta = 0) and OAM (beta > 0) as well as the Figure-5 beta sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _logmag_kernel(v_ref, o_ref):
+    v = v_ref[0].astype(jnp.float32)                         # [B, dh]
+    mag = jnp.log(jnp.sqrt((v * v).sum(axis=-1)) + 1e-12)    # [B]
+    o_ref[0, 0] = mag.max()
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def value_block_logmag(v, block: int = 64):
+    """[Hk, N, dh] -> [Hk, N/B] block max of log||V||_2 (Pallas)."""
+    hk, n, dh = v.shape
+    nblk = n // block
+    return pl.pallas_call(
+        _logmag_kernel,
+        grid=(hk, nblk),
+        in_specs=[pl.BlockSpec((1, block, dh), lambda h, j: (h, j, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda h, j: (h, j)),
+        out_shape=jax.ShapeDtypeStruct((hk, nblk), jnp.float32),
+        interpret=True,
+    )(v)
+
+
+def _oam_kernel(beta_ref, q_ref, k_ref, mv_ref, o_ref, *, block: int,
+                stride: int, nblk: int, scale: float):
+    i = pl.program_id(1)
+    t = jax.lax.iota(jnp.int32, block // stride) * stride    # sample points
+    # Dual-diagonal sampling: anti-diagonal pairs (t, B-1-t) cover ODD
+    # within-block relative offsets (2t-B+1); diagonal pairs (t, t) cover
+    # offset 0 and stand in for the even band. Anti-diagonal alone — the
+    # XAttention estimator — is provably blind to attention concentrated
+    # at even offsets (e.g. a copy/induction edge at an exact multiple of
+    # the block size), which this model's dominant head exhibits; see
+    # DESIGN.md §Hardware-Adaptation.
+    qs = q_ref[0].astype(jnp.float32)[t, :]                  # [B/s, dh]
+    ks = k_ref[0].astype(jnp.float32)                        # [N, dh]
+    ks_anti = ks.reshape(nblk, block, -1)[:, block - 1 - t, :]
+    ks_diag = ks.reshape(nblk, block, -1)[:, t, :]
+    routing = (jnp.einsum("td,jtd->j", qs, ks_anti)
+               + jnp.einsum("td,jtd->j", qs, ks_diag)) * scale
+    mv = mv_ref[0]                                           # [nk]
+    m = routing + beta_ref[0] * jnp.maximum(0.0, mv)
+    j = jax.lax.iota(jnp.int32, nblk)
+    o_ref[0, 0] = jnp.where(j <= i, m, NEG_INF)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "stride"))
+def oam_block_scores(q, k, v, beta, block: int = 64, stride: int = 16):
+    """Output-Aware Metric M[h, i, j] (Eq. 7) via Pallas kernels.
+
+    Args:
+      q: [H, N, dh]; k, v: [Hk, N, dh]; beta: scalar (runtime).
+    Returns:
+      [H, nq, nk] float32 metric, causally masked to NEG_INF.
+    """
+    hq, n, dh = q.shape
+    hk = k.shape[0]
+    nblk = n // block
+    rep = hq // hk
+    mv = value_block_logmag(v, block)                        # [Hk, nk]
+    beta_arr = jnp.asarray(beta, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        functools.partial(_oam_kernel, block=block, stride=stride,
+                          nblk=nblk, scale=1.0 / (dh ** 0.5)),
+        grid=(hq, nblk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda h, i: (0,)),
+            pl.BlockSpec((1, block, dh), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, n, dh), lambda h, i: (h // rep, 0, 0)),
+            pl.BlockSpec((1, nblk), lambda h, i: (h // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, nblk), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((hq, nblk, nblk), jnp.float32),
+        interpret=True,
+    )(beta_arr, q, k, mv)

@@ -1,0 +1,158 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: `python/tests/` asserts each Pallas
+kernel `allclose` against the function of the same name here, and `aot.py`
+emits golden vectors from these for the rust-side integration tests.
+
+Shape conventions (single sequence, multi-head):
+  Q        [H,  N, dh]   query, H query heads
+  K, V     [Hk, N, dh]   key/value, Hk <= H kv heads (GQA: H % Hk == 0)
+  indices  [H, nq, kmax] selected KV-block ids per (head, query-block)
+  counts   [H, nq]       number of valid slots in `indices` (<= kmax)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "gqa_expand",
+    "pool_mean",
+    "pool_antidiag_scores",
+    "value_block_logmag",
+    "oam_block_scores",
+    "dense_attention",
+    "block_sparse_attention",
+    "block_causal_mask",
+]
+
+NEG_INF = -1e30
+
+
+def gqa_expand(x, h_q: int):
+    """Broadcast [Hk, ...] kv-head tensors to [H, ...] query heads."""
+    hk = x.shape[0]
+    assert h_q % hk == 0, f"GQA requires H % Hk == 0, got {h_q} % {hk}"
+    rep = h_q // hk
+    return jnp.repeat(x, rep, axis=0)
+
+
+def pool_mean(x, block: int):
+    """Mean-pool the sequence axis into blocks: [H, N, d] -> [H, N/B, d]."""
+    h, n, d = x.shape
+    assert n % block == 0, f"N={n} not divisible by block={block}"
+    return x.reshape(h, n // block, block, d).mean(axis=2)
+
+
+def pool_antidiag_scores(q, k, block: int, stride: int = 16):
+    """Dual-diagonal block routing scores (XAttention-style estimator,
+    extended).
+
+    For query block i and key block j the estimator samples the block
+    pair's anti-diagonal AND diagonal at `stride`:
+        score(i, j) = sum_t q[iB + ts] . (k[jB + (B-1-ts)] + k[jB + ts])
+                      / sqrt(d).
+    Anti-diagonal pairs cover odd within-block relative offsets (2t-B+1),
+    diagonal pairs cover offset 0 / the even band — anti-diagonal alone is
+    blind to attention concentrated at even offsets (e.g. induction/copy
+    edges at exact block multiples). Cost is still O(B/s) rows per block
+    pair, 2x the pure anti-diagonal sample count.
+
+    Returns [H, nq, nk] (kv heads broadcast to query heads).
+    """
+    hq, n, d = q.shape
+    assert n % block == 0 and block % stride == 0
+    nblk = n // block
+    t = jnp.arange(0, block, stride)
+    k = gqa_expand(k, hq)
+    qs = q.reshape(hq, nblk, block, d)[:, :, t, :]          # [H, nb, B/s, d]
+    kb = k.reshape(hq, nblk, block, d)
+    ks = kb[:, :, block - 1 - t, :] + kb[:, :, t, :]
+    scores = jnp.einsum("hitd,hjtd->hij", qs.astype(jnp.float32),
+                        ks.astype(jnp.float32)) / jnp.sqrt(float(d))
+    return scores
+
+
+def value_block_logmag(v, block: int, h_q: int):
+    """Block max-pooled value log-magnitude M_V (Algorithm 1, line 6).
+
+    [Hk, N, d] -> [H, N/B] where entry (h, j) = max over tokens in block j
+    of log ||V_t||_2, broadcast to query heads.
+    """
+    hk, n, d = v.shape
+    nblk = n // block
+    mag = jnp.log(jnp.linalg.norm(v.astype(jnp.float32), axis=-1) + 1e-12)
+    pooled = mag.reshape(hk, nblk, block).max(axis=2)
+    return gqa_expand(pooled, h_q)
+
+
+def block_causal_mask(nblk: int):
+    """[nq, nk] bool, True where key block j is visible to query block i."""
+    i = jnp.arange(nblk)[:, None]
+    j = jnp.arange(nblk)[None, :]
+    return j <= i
+
+
+def oam_block_scores(q, k, v, block: int, beta, stride: int = 16):
+    """Output-Aware Metric at block granularity, Eq. (7).
+
+    M[h, i, j] = routing(i, j) + beta * max(0, pooled log||V_j||),
+    with causally masked (j > i) entries at -inf. `beta == 0` degrades to
+    the Score-Aware Metric (SAM) used by prior work.
+    """
+    hq = q.shape[0]
+    routing = pool_antidiag_scores(q, k, block, stride)
+    mv = value_block_logmag(v, block, hq)                    # [H, nk]
+    m = routing + beta * jnp.maximum(0.0, mv)[:, None, :]
+    nblk = q.shape[1] // block
+    return jnp.where(block_causal_mask(nblk)[None], m, NEG_INF)
+
+
+def dense_attention(q, k, v):
+    """Exact causal softmax attention with GQA broadcast. [H, N, dh] out."""
+    hq, n, d = q.shape
+    k = gqa_expand(k, hq)
+    v = gqa_expand(v, hq)
+    s = jnp.einsum("hid,hjd->hij", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(float(d))
+    mask = jnp.tril(jnp.ones((n, n), bool))
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hij,hjd->hid", p, v.astype(p.dtype)).astype(q.dtype)
+
+
+def block_sparse_attention(q, k, v, indices, counts, block: int):
+    """Oracle for the block-sparse kernel: renormalized softmax over the
+    union of selected KV blocks, with the within-block causal mask applied
+    to the diagonal block (Algorithm 1 steps c-d).
+
+    Selection semantics: for query block i, the visible key set is
+    {tokens of block indices[h, i, t] : t < counts[h, i]}; duplicate block
+    ids contribute once (a keep-mask is built, not a gather).
+    """
+    hq, n, d = q.shape
+    nblk = n // block
+    kmax = indices.shape[-1]
+    k = gqa_expand(k, hq)
+    v = gqa_expand(v, hq)
+
+    slot = jnp.arange(kmax)[None, None, :]
+    valid = slot < counts[:, :, None]                        # [H, nq, kmax]
+    # keep[h, i, b] = True iff block b selected for query block i.
+    onehot = jnp.zeros((hq, nblk, nblk), bool).at[
+        jnp.arange(hq)[:, None, None],
+        jnp.arange(nblk)[None, :, None],
+        indices,
+    ].max(valid)
+    keep = onehot & block_causal_mask(nblk)[None]
+
+    s = jnp.einsum("hid,hjd->hij", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(float(d))
+    tok_keep = jnp.repeat(jnp.repeat(keep, block, axis=1), block, axis=2)
+    causal = jnp.tril(jnp.ones((n, n), bool))[None]
+    s = jnp.where(tok_keep & causal, s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hij,hjd->hid", p, v.astype(p.dtype)).astype(q.dtype)

@@ -1,0 +1,264 @@
+"""Block-selection strategies: Stem and every baseline the paper compares.
+
+Every method maps (Q, K, V) to the uniform kernel interface consumed by
+`kernels.block_sparse.block_sparse_attention`:
+
+    indices [H, nq, nblk] int32   selected block ids, best-first
+    counts  [H, nq]       int32   number of valid slots (>= 1)
+
+plus a scalar *budget fraction* = selected causal block pairs / all causal
+block pairs (the BUD column of Tables 2 and 4).
+
+Methods (paper §3.1 baselines):
+  dense            — all causal blocks (FlashAttention-2 reference)
+  stem             — TPD schedule (Eq. 3) + OAM metric (Eq. 7); with
+                     runtime scalars (k_start, mu, beta) this single graph
+                     also serves `uniform SAM` (mu=1, beta=0), `+TPD`
+                     (beta=0) and the Figure-5 sweeps
+  streaming        — StreamingLLM: sink blocks + local window, static
+  xattn_like       — XAttention: anti-diagonal scores, per-row cumulative
+                     softmax-mass threshold tau
+  minference_like  — MInference: vertical (global top columns estimated
+                     from the last query window) + slash (diagonal bands)
+  flexprefill_like — FlexPrefill: per-head choice between the streaming
+                     pattern and adaptive cumulative-mass selection, driven
+                     by the estimated score entropy of the last query block
+  segment          — diagnostic for Figure 3: uniform top-k (or ratio)
+                     restricted to query blocks in [seg_lo, seg_hi), dense
+                     elsewhere
+
+All selection math is static-shape (top-k width = nblk); *cost* dynamics
+come from `counts`, which bounds the kernel's online-softmax loop.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import metric as metric_k
+from .kernels import ref
+from . import schedule as sched
+
+FORCE_BIAS = 1e9
+NEG_INF = -1e30
+
+
+def _topk_order(scores, force):
+    """Order blocks best-first with forced blocks in front.
+
+    scores: [H, nq, nk] (causally masked to NEG_INF); force: bool same
+    shape. Returns indices [H, nq, nk] — a permutation of 0..nk-1 per row.
+    """
+    biased = jnp.where(force, scores + FORCE_BIAS, scores)
+    # full-width descending argsort instead of lax.top_k: jax lowers top_k
+    # to the TopK HLO whose `largest=` attribute the xla_extension 0.5.1
+    # text parser rejects; sort round-trips. k == width so they're
+    # equivalent.
+    idx = jnp.argsort(-biased, axis=-1)
+    return idx.astype(jnp.int32)
+
+
+def _forced_mask(nblk: int, init_keep, local_keep):
+    """[nq, nk] bool: sink blocks + local window (diag included)."""
+    i = jnp.arange(nblk)[:, None]
+    j = jnp.arange(nblk)[None, :]
+    sink = j < init_keep
+    local = (j <= i) & (j > i - local_keep)
+    return (sink & (j <= i)) | local
+
+
+def _budget_fraction(counts, nblk: int):
+    total = counts.shape[0] * nblk * (nblk + 1) / 2.0
+    return counts.sum().astype(jnp.float32) / total
+
+
+def select_dense(q, block: int):
+    hq, n, _ = q.shape
+    nblk = n // block
+    idx = jnp.broadcast_to(jnp.arange(nblk, dtype=jnp.int32),
+                           (hq, nblk, nblk))
+    cnt = jnp.broadcast_to(jnp.arange(1, nblk + 1, dtype=jnp.int32),
+                           (hq, nblk))
+    return idx, cnt, jnp.float32(1.0)
+
+
+def select_stem(q, k, v, block: int, k_start, mu, beta,
+                init_keep: int = 1, local_keep: int = 2, min_total: int = 3,
+                stride: int = 16):
+    """Stem = Output-Aware Metric ranking + Token Position-Decay budget.
+
+    `k_start`, `mu`, `beta` may be runtime scalars (traced), enabling one
+    AOT module to serve stem / uniform / +TPD / hyperparameter sweeps.
+    """
+    hq, n, _ = q.shape
+    nblk = n // block
+    scores = metric_k.oam_block_scores(q, k, v, beta, block, stride)
+    force = _forced_mask(nblk, init_keep, local_keep)[None]
+    order = _topk_order(scores, force)
+    kvec = sched.block_budget_schedule_jnp(
+        nblk, k_start, mu, init_keep, local_keep, min_total)
+    cnt = jnp.broadcast_to(kvec.astype(jnp.int32), (hq, nblk))
+    return order, cnt, _budget_fraction(cnt, nblk)
+
+
+def select_streaming(q, block: int, sink_blocks, local_blocks):
+    """StreamingLLM pattern: first `sink_blocks` + last `local_blocks`."""
+    hq, n, _ = q.shape
+    nblk = n // block
+    keep = _forced_mask(nblk, sink_blocks, local_blocks)     # [nq, nk]
+    i = jnp.arange(nblk)[:, None]
+    j = jnp.arange(nblk)[None, :]
+    # Rank: kept blocks first (locals before sinks is irrelevant), then a
+    # deterministic causal fill for the unused slots.
+    scores = jnp.where(keep & (j <= i), 1.0, NEG_INF)
+    scores = jnp.broadcast_to(scores, (hq, nblk, nblk))
+    order = _topk_order(scores, jnp.zeros_like(scores, bool))
+    cnt = jnp.broadcast_to(keep.sum(-1).astype(jnp.int32), (hq, nblk))
+    cnt = jnp.maximum(cnt, 1)
+    return order, cnt, _budget_fraction(cnt, nblk)
+
+
+def _row_probs(scores):
+    """Softmax over the causally valid blocks of each row (f32)."""
+    m = scores.max(axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def select_xattn(q, k, v, block: int, tau, init_keep: int = 1,
+                 local_keep: int = 1, stride: int = 16):
+    """XAttention-like: keep the smallest prefix of anti-diagonal-scored
+    blocks whose softmax mass reaches `tau` (runtime scalar), plus forced
+    sink/diagonal blocks."""
+    hq, n, _ = q.shape
+    nblk = n // block
+    scores = metric_k.oam_block_scores(q, k, v, 0.0, block, stride)
+    force = _forced_mask(nblk, init_keep, local_keep)[None]
+    order = _topk_order(scores, force)
+    probs = _row_probs(scores)                               # [H, nq, nk]
+    sorted_p = jnp.take_along_axis(probs, order, axis=-1)
+    cum = jnp.cumsum(sorted_p, axis=-1)
+    # count = 1 + #{prefix cumsum < tau}, clamped to the causal width.
+    cnt = 1 + (cum < tau).sum(axis=-1).astype(jnp.int32)
+    forced_n = force.sum(-1).astype(jnp.int32)
+    width = jnp.arange(1, nblk + 1, dtype=jnp.int32)[None]
+    cnt = jnp.minimum(jnp.maximum(cnt, forced_n), width)
+    return order, cnt, _budget_fraction(cnt, nblk)
+
+
+def select_minference(q, k, v, block: int, n_vertical, n_slash,
+                      last_q_blocks: int = 1, stride: int = 16):
+    """MInference-like vertical-slash at block granularity.
+
+    Vertical columns are estimated from the mean routing score of the last
+    `last_q_blocks` query blocks (MInference's last-q estimation); slash
+    keeps `n_slash` diagonal bands. Both widths are runtime scalars.
+    """
+    hq, n, _ = q.shape
+    nblk = n // block
+    scores = metric_k.oam_block_scores(q, k, v, 0.0, block, stride)
+    col = scores[:, nblk - last_q_blocks:, :].mean(axis=1)   # [H, nk]
+    col_order = jnp.argsort(-col, axis=-1)                   # see _topk_order
+    rank = jnp.zeros((hq, nblk), jnp.int32).at[
+        jnp.arange(hq)[:, None], col_order].set(
+        jnp.broadcast_to(jnp.arange(nblk, dtype=jnp.int32), (hq, nblk)))
+    vertical = (rank < n_vertical)[:, None, :]               # [H, 1, nk]
+    i = jnp.arange(nblk)[:, None]
+    j = jnp.arange(nblk)[None, :]
+    slash = (j <= i) & (j > i - n_slash)
+    keep = (vertical | slash[None]) & (j <= i)[None]
+    keep = keep | _forced_mask(nblk, 1, 1)[None]
+    sel_scores = jnp.where(keep, scores, NEG_INF)
+    order = _topk_order(sel_scores, jnp.zeros_like(keep))
+    cnt = jnp.maximum(keep.sum(-1).astype(jnp.int32), 1)
+    return order, cnt, _budget_fraction(cnt, nblk)
+
+
+def select_flexprefill(q, k, v, block: int, gamma, entropy_thresh,
+                       sink_blocks: int = 1, local_blocks: int = 2,
+                       stride: int = 16):
+    """FlexPrefill-like: per-head pattern choice + adaptive budget.
+
+    A head whose last-query-block score distribution has low entropy is
+    judged "structured" and gets the cheap streaming pattern; otherwise it
+    gets query-aware cumulative-mass selection with coverage `gamma`.
+    """
+    hq, n, _ = q.shape
+    nblk = n // block
+    scores = metric_k.oam_block_scores(q, k, v, 0.0, block, stride)
+    probs = _row_probs(scores)
+    last = probs[:, -1, :]                                   # [H, nk]
+    ent = -(last * jnp.log(last + 1e-12)).sum(-1)            # [H]
+    norm_ent = ent / jnp.log(float(nblk))
+    use_stream = norm_ent < entropy_thresh                   # [H]
+
+    force = _forced_mask(nblk, sink_blocks, local_blocks)[None]
+    order = _topk_order(scores, force)
+    sorted_p = jnp.take_along_axis(probs, order, axis=-1)
+    cum = jnp.cumsum(sorted_p, axis=-1)
+    cnt_adapt = 1 + (cum < gamma).sum(axis=-1).astype(jnp.int32)
+    forced_n = force.sum(-1).astype(jnp.int32)
+    width = jnp.arange(1, nblk + 1, dtype=jnp.int32)[None]
+    cnt_adapt = jnp.minimum(jnp.maximum(cnt_adapt, forced_n), width)
+
+    keep_stream = _forced_mask(nblk, sink_blocks, local_blocks)
+    cnt_stream = jnp.broadcast_to(
+        jnp.maximum(keep_stream.sum(-1).astype(jnp.int32), 1), (hq, nblk))
+    # Streaming heads order by the forced mask, adaptive heads by score.
+    stream_scores = jnp.where(keep_stream[None], FORCE_BIAS / 2, scores)
+    order_stream = _topk_order(stream_scores, jnp.zeros_like(force))
+    order = jnp.where(use_stream[:, None, None], order_stream, order)
+    cnt = jnp.where(use_stream[:, None], cnt_stream, cnt_adapt)
+    return order, cnt, _budget_fraction(cnt, nblk)
+
+
+def select_segment(q, k, v, block: int, seg_lo, seg_hi, k_seg, ratio,
+                   stride: int = 16):
+    """Figure-3 diagnostic: sparsify only query blocks in [seg_lo, seg_hi).
+
+    Inside the segment rows use SAM top-k with either a fixed budget
+    `k_seg` (if ratio <= 0) or a dynamic budget ceil(ratio * (i+1));
+    outside the segment rows are dense. All four knobs are runtime scalars.
+    """
+    hq, n, _ = q.shape
+    nblk = n // block
+    scores = metric_k.oam_block_scores(q, k, v, 0.0, block, stride)
+    force = _forced_mask(nblk, 1, 1)[None]
+    order = _topk_order(scores, force)
+    i = jnp.arange(nblk, dtype=jnp.int32)
+    width = i + 1
+    in_seg = (i >= seg_lo) & (i < seg_hi)
+    k_fixed = jnp.broadcast_to(jnp.asarray(k_seg, jnp.int32), (nblk,))
+    k_ratio = jnp.ceil(ratio * width.astype(jnp.float32)).astype(jnp.int32)
+    k_sparse = jnp.where(ratio > 0, k_ratio, k_fixed)
+    cnt_row = jnp.where(in_seg, jnp.clip(k_sparse, 1, width), width)
+    cnt = jnp.broadcast_to(cnt_row, (hq, nblk))
+    return order, cnt, _budget_fraction(cnt, nblk)
+
+
+# --- pure-jnp reference selection (oracle for pytest) ----------------------
+
+
+def select_stem_ref(q, k, v, block: int, k_start, mu, beta,
+                    init_keep: int = 1, local_keep: int = 2,
+                    min_total: int = 3, stride: int = 16):
+    """Same as `select_stem` but on the jnp metric oracle (ref.py).
+
+    Ranks with `lax.top_k` instead of argsort: this path runs under
+    vmap+grad during native-sparse TRAINING, where argsort's batched
+    gather is unsupported by this jax/xla combo — while the AOT parser
+    constraint that forced argsort (DESIGN.md §2) only applies to lowered
+    prefill graphs, which use `select_stem`.
+    """
+    hq, n, _ = q.shape
+    nblk = n // block
+    scores = ref.oam_block_scores(q, k, v, block, beta, stride)
+    force = _forced_mask(nblk, init_keep, local_keep)[None]
+    biased = jnp.where(force, scores + FORCE_BIAS, scores)
+    _, order = jax.lax.top_k(biased, nblk)
+    order = order.astype(jnp.int32)
+    kvec = sched.block_budget_schedule_jnp(
+        nblk, k_start, mu, init_keep, local_keep, min_total)
+    cnt = jnp.broadcast_to(kvec.astype(jnp.int32), (hq, nblk))
+    return order, cnt, _budget_fraction(cnt, nblk)

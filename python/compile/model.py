@@ -1,0 +1,285 @@
+"""L2: GPT-style causal transformer with pluggable sparse attention.
+
+Architecture (a scaled-down Llama/Qwen shape — see DESIGN.md §4 for the
+substitution argument): RMSNorm, rotary position embeddings, grouped-query
+attention, SwiGLU MLP, tied embeddings.
+
+Two execution paths share the same parameters and math:
+
+  * `forward(..., attn="jnp")` — pure-jnp dense attention; fast under XLA
+    fusion; used for *training* and as the logits oracle in tests.
+  * `forward(..., attn=<method>)` — the AOT path: per-layer Q/K/V run the
+    selection method from `methods.py` and the Pallas block-sparse kernel
+    (`kernels/block_sparse.py`). This is what gets lowered to HLO text and
+    served by the rust coordinator.
+
+Prefill graphs operate on a single sequence (batch is the coordinator's
+job); training uses `vmap` over the batch axis.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import methods
+from .kernels import block_sparse, dense as dense_k, ref
+from .tasks import VOCAB_SIZE
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Default geometry sized for the single-core CPU testbed (DESIGN.md
+    §4): deep enough for induction circuits + the Table-1 depth story,
+    small enough that training reaches task competence within the build
+    budget and a 2048-token prefill stays sub-second."""
+
+    vocab_size: int = VOCAB_SIZE
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_ff: int = 344
+    rope_base: float = 10000.0
+    block: int = 64              # sparse attention block size B
+    init_keep: int = 1           # forced sink blocks
+    local_keep: int = 2          # forced local-window blocks
+    min_total: int = 4           # per-row budget floor: forced sink+local (3) + >=1 metric-chosen slot
+    metric_stride: int = 16      # anti-diagonal sampling stride
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    """Scaled-normal init; returns a flat-ish pytree (dict of dicts)."""
+    rng = np.random.default_rng(seed)
+    d = cfg.d_model
+    hk = cfg.n_kv_heads * cfg.d_head
+
+    def mat(shape, scale):
+        return jnp.asarray(rng.normal(0, scale, shape), jnp.float32)
+
+    params = {
+        "embed": mat((cfg.vocab_size, d), 0.02),
+        "ln_f": jnp.ones((d,), jnp.float32),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        params["layers"].append({
+            "ln1": jnp.ones((d,), jnp.float32),
+            "wq": mat((d, d), d ** -0.5),
+            "wk": mat((d, hk), d ** -0.5),
+            "wv": mat((d, hk), d ** -0.5),
+            "wo": mat((d, d), (d * 2 * cfg.n_layers) ** -0.5),
+            "ln2": jnp.ones((d,), jnp.float32),
+            "w_gate": mat((d, cfg.d_ff), d ** -0.5),
+            "w_up": mat((d, cfg.d_ff), d ** -0.5),
+            "w_down": mat((cfg.d_ff, d), (cfg.d_ff * 2 * cfg.n_layers) ** -0.5),
+        })
+    return params
+
+
+# --- parameter flattening (stable order shared with aot.py / rust) ---------
+
+
+def param_spec(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Canonical (name, shape) list — the AOT input order and the layout
+    of the weights file consumed by the rust runtime."""
+    d = cfg.d_model
+    hk = cfg.n_kv_heads * cfg.d_head
+    spec = [("embed", (cfg.vocab_size, d))]
+    for i in range(cfg.n_layers):
+        spec += [
+            (f"layers.{i}.ln1", (d,)),
+            (f"layers.{i}.wq", (d, d)),
+            (f"layers.{i}.wk", (d, hk)),
+            (f"layers.{i}.wv", (d, hk)),
+            (f"layers.{i}.wo", (d, d)),
+            (f"layers.{i}.ln2", (d,)),
+            (f"layers.{i}.w_gate", (d, cfg.d_ff)),
+            (f"layers.{i}.w_up", (d, cfg.d_ff)),
+            (f"layers.{i}.w_down", (cfg.d_ff, d)),
+        ]
+    spec.append(("ln_f", (d,)))
+    return spec
+
+
+def flatten_params(cfg: ModelConfig, params: dict) -> list:
+    out = [params["embed"]]
+    for lyr in params["layers"]:
+        out += [lyr["ln1"], lyr["wq"], lyr["wk"], lyr["wv"], lyr["wo"],
+                lyr["ln2"], lyr["w_gate"], lyr["w_up"], lyr["w_down"]]
+    out.append(params["ln_f"])
+    assert len(out) == len(param_spec(cfg))
+    return out
+
+
+def unflatten_params(cfg: ModelConfig, flat: list) -> dict:
+    it = iter(flat)
+    params = {"embed": next(it), "layers": []}
+    for _ in range(cfg.n_layers):
+        params["layers"].append({
+            "ln1": next(it), "wq": next(it), "wk": next(it),
+            "wv": next(it), "wo": next(it), "ln2": next(it),
+            "w_gate": next(it), "w_up": next(it), "w_down": next(it),
+        })
+    params["ln_f"] = next(it)
+    return params
+
+
+# --- building blocks --------------------------------------------------------
+
+
+def rmsnorm(x, g, eps: float = 1e-6):
+    var = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * g).astype(x.dtype)
+
+
+def rope(x, base: float):
+    """Rotary embeddings over [H, N, dh]."""
+    h, n, dh = x.shape
+    half = dh // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = jnp.arange(n, dtype=jnp.float32)[:, None] * freqs[None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)            # [N, dh/2]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+
+
+def _qkv(cfg: ModelConfig, lyr: dict, x):
+    """x [N, d] -> q [H, N, dh], k/v [Hk, N, dh], RoPE applied to q/k."""
+    n = x.shape[0]
+    dh = cfg.d_head
+    q = (x @ lyr["wq"]).reshape(n, cfg.n_heads, dh).transpose(1, 0, 2)
+    k = (x @ lyr["wk"]).reshape(n, cfg.n_kv_heads, dh).transpose(1, 0, 2)
+    v = (x @ lyr["wv"]).reshape(n, cfg.n_kv_heads, dh).transpose(1, 0, 2)
+    return rope(q, cfg.rope_base), rope(k, cfg.rope_base), v
+
+
+def _merge_heads(o):
+    """[H, N, dh] -> [N, H*dh]."""
+    h, n, dh = o.shape
+    return o.transpose(1, 0, 2).reshape(n, h * dh)
+
+
+def _mlp(lyr, x):
+    return (jax.nn.silu(x @ lyr["w_gate"]) * (x @ lyr["w_up"])) @ lyr["w_down"]
+
+
+# --- attention method dispatch ----------------------------------------------
+
+
+def attention(cfg: ModelConfig, q, k, v, method: str, hparams: dict):
+    """Dispatch to a selection method + the block-sparse kernel.
+
+    Returns (output [H, N, dh], budget_fraction scalar).
+    """
+    b = cfg.block
+    if method == "jnp":
+        return ref.dense_attention(q, k, v), jnp.float32(1.0)
+    if method == "jnp_topk":
+        # Differentiable uniform block-top-k (SAM) attention used to TRAIN
+        # the "native sparse" model of Table 3 (InfLLMv2/DSA stand-in):
+        # the hard block mask is data-dependent but gradients flow through
+        # the selected paths.
+        idx, cnt, bud = methods.select_stem_ref(
+            q, k, v, b, float(hparams["k_native"]), 1.0, 0.0,
+            cfg.init_keep, cfg.local_keep, cfg.min_total, cfg.metric_stride)
+        return ref.block_sparse_attention(q, k, v, idx, cnt, b), bud
+    if method == "dense":
+        return dense_k.dense_attention(q, k, v, block=b), jnp.float32(1.0)
+    if method == "stem":
+        idx, cnt, bud = methods.select_stem(
+            q, k, v, b, hparams["k_start"], hparams["mu"], hparams["beta"],
+            cfg.init_keep, cfg.local_keep, cfg.min_total, cfg.metric_stride)
+    elif method == "streaming":
+        idx, cnt, bud = methods.select_streaming(
+            q, b, hparams["sink_blocks"], hparams["local_blocks"])
+    elif method == "xattn":
+        idx, cnt, bud = methods.select_xattn(
+            q, k, v, b, hparams["tau"], cfg.init_keep, 1, cfg.metric_stride)
+    elif method == "minference":
+        idx, cnt, bud = methods.select_minference(
+            q, k, v, b, hparams["n_vertical"], hparams["n_slash"],
+            stride=cfg.metric_stride)
+    elif method == "flexprefill":
+        idx, cnt, bud = methods.select_flexprefill(
+            q, k, v, b, hparams["gamma"], hparams["entropy_thresh"],
+            cfg.init_keep, cfg.local_keep, cfg.metric_stride)
+    elif method == "segment":
+        idx, cnt, bud = methods.select_segment(
+            q, k, v, b, hparams["seg_lo"], hparams["seg_hi"],
+            hparams["k_seg"], hparams["ratio"], cfg.metric_stride)
+    else:
+        raise ValueError(f"unknown attention method: {method}")
+    out = block_sparse.block_sparse_attention(q, k, v, idx, cnt, block=b)
+    return out, bud
+
+
+def forward(cfg: ModelConfig, params: dict, ids, method: str = "jnp",
+            hparams: dict | None = None, collect_hidden: bool = False):
+    """Single-sequence forward.
+
+    Args:
+      ids: [N] int32 token ids.
+    Returns:
+      (logits [N, vocab], budget_fraction scalar, hidden [L, N, d] or None)
+    """
+    hparams = hparams or {}
+    x = params["embed"][ids]                                # [N, d]
+    buds = []
+    hiddens = []
+    for lyr in params["layers"]:
+        h = rmsnorm(x, lyr["ln1"])
+        q, k, v = _qkv(cfg, lyr, h)
+        o, bud = attention(cfg, q, k, v, method, hparams)
+        x = x + _merge_heads(o) @ lyr["wo"]
+        x = x + _mlp(lyr, rmsnorm(x, lyr["ln2"]))
+        buds.append(bud)
+        if collect_hidden:
+            hiddens.append(x)
+    x = rmsnorm(x, params["ln_f"])
+    logits = x @ params["embed"].T                           # tied head
+    budget = jnp.stack(buds).mean()
+    hidden = jnp.stack(hiddens) if collect_hidden else None
+    return logits, budget, hidden
+
+
+def forward_batch_jnp(cfg: ModelConfig, params: dict, ids,
+                      method: str = "jnp", hparams: dict | None = None):
+    """[B, N] -> [B, N, vocab] logits, jnp paths only (training)."""
+    assert method in ("jnp", "jnp_topk")
+    def one(seq):
+        logits, _, _ = forward(cfg, params, seq, method=method,
+                               hparams=hparams)
+        return logits
+    return jax.vmap(one)(ids)
+
+
+def lm_loss(cfg: ModelConfig, params: dict, ids, mask,
+            method: str = "jnp", hparams: dict | None = None):
+    """Masked next-token cross-entropy, normalized PER SAMPLE. ids/mask:
+    [B, N].
+
+    Per-sample normalization matters: a copy-replay sample supervises
+    ~N/2 positions while a QA sample supervises 1-3, so token-level
+    averaging lets replay drown the task gradient ~100:1 (the failure
+    mode documented in EXPERIMENTS.md §Training). Each sequence
+    contributes equally here.
+    """
+    logits = forward_batch_jnp(cfg, params, ids, method, hparams)
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    tgt = ids[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    w = mask[:, 1:]
+    per_sample = (nll * w).sum(-1) / jnp.maximum(w.sum(-1), 1.0)
+    return per_sample.mean()

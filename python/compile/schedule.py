@@ -1,0 +1,151 @@
+"""Token Position-Decay (TPD) schedule and cost model (paper §2.1).
+
+Implements Eq. (3) `k(i)`, the cost identities Eq. (2) `C_uni` and Eq. (4)
+`C_decay`, the Stem complexity Eq. (8), and the budget-matching rule used by
+the ablation (§3.3): `k_uni = k_start * (1 + mu) / 2`.
+
+Everything here exists twice: this module (build path + oracle for pytest)
+and `rust/src/sparse/schedule.rs` (request path). The two are cross-checked
+through golden vectors emitted by `aot.py`.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "TPDConfig",
+    "k_at",
+    "k_schedule",
+    "block_budget_schedule",
+    "cost_uniform",
+    "cost_decay",
+    "cost_stem",
+    "cost_dense",
+    "k_uniform_matched",
+    "k_avg",
+]
+
+
+@dataclass(frozen=True)
+class TPDConfig:
+    """Hyper-parameters of the Token Position-Decay strategy.
+
+    Attributes:
+      k_start: initial per-position budget (tokens, or blocks when used at
+        block granularity).
+      mu: decay ratio in (0, 1]; ``k_end = mu * k_start``. ``mu == 1``
+        recovers the uniform budget.
+      init_keep: number of leading blocks always kept (attention-sink /
+        recursive-anchor protection; paper keeps 4 blocks).
+      local_keep: number of trailing (local-window) blocks always kept,
+        including the diagonal block (paper keeps 4).
+      min_total: floor on the per-row budget (paper enforces a minimum
+        total of 54 blocks at 8B scale; scaled down here).
+    """
+
+    k_start: float
+    mu: float = 0.7
+    init_keep: int = 1
+    local_keep: int = 2
+    min_total: int = 3
+
+    def __post_init__(self) -> None:
+        if not (0.0 < self.mu <= 1.0):
+            raise ValueError(f"mu must be in (0, 1], got {self.mu}")
+        if self.k_start <= 0:
+            raise ValueError(f"k_start must be positive, got {self.k_start}")
+        if self.init_keep < 0 or self.local_keep < 1:
+            raise ValueError("init_keep >= 0 and local_keep >= 1 required")
+
+
+def k_at(i: int | np.ndarray, n: int, k_start: float, mu: float) -> np.ndarray:
+    """Per-position budget k(i), Eq. (3).
+
+    ``k(i) = floor(k_start - (k_start * (1 - mu) / N) * i)`` for
+    ``i in {1..N}`` (paper indexing). We accept 0-based ``i`` and shift.
+    """
+    i1 = np.asarray(i, dtype=np.float64) + 1.0  # paper is 1-based
+    k = np.floor(k_start - (k_start * (1.0 - mu) / float(n)) * i1)
+    return np.maximum(k, 1.0)
+
+
+def k_schedule(n: int, cfg: TPDConfig) -> np.ndarray:
+    """Vector of budgets for all N positions (token granularity)."""
+    return k_at(np.arange(n), n, cfg.k_start, cfg.mu)
+
+
+def block_budget_schedule(n_blocks: int, cfg: TPDConfig) -> np.ndarray:
+    """Effective per-query-block budget, in blocks, with causal clamping.
+
+    Mirrors Algorithm 1 step (b): interpolate k_start -> k_end across the
+    block axis, floor, then clamp to [min_total, i+1] (a row can never
+    attend to more blocks than exist under the causal mask) and never below
+    the forced init+local set size.
+    """
+    raw = k_at(np.arange(n_blocks), n_blocks, cfg.k_start, cfg.mu)
+    forced = np.minimum(cfg.init_keep + cfg.local_keep, np.arange(n_blocks) + 1)
+    k = np.maximum(raw, np.maximum(cfg.min_total, forced))
+    return np.minimum(k, np.arange(n_blocks) + 1.0)
+
+
+def cost_dense(n: int) -> float:
+    """Computed token pairs under full causal attention: N(N+1)/2."""
+    return n * (n + 1) / 2.0
+
+
+def cost_uniform(n: int, k_uni: float) -> float:
+    """Eq. (2): C_uni ~= N*k - k^2/2 (causal-triangle corrected)."""
+    return n * k_uni - 0.5 * k_uni * k_uni
+
+
+def cost_decay(n: int, k_start: float, mu: float) -> float:
+    """Eq. (4): uniform baseline minus the decay savings term."""
+    base = n * k_start - 0.5 * k_start * k_start
+    savings = 0.5 * k_start * (1.0 - mu) * (n - k_start)
+    return base - savings
+
+
+def cost_stem(n: int, d: int, block: int, k_avg_tokens: float) -> float:
+    """Eq. (8): metric calculation + sparse attention FLOP-ish count."""
+    metric = 2.0 * n * n * d / (block * block) + n * d / block
+    sparse = 4.0 * n * k_avg_tokens * d + 3.0 * n * k_avg_tokens
+    return metric + sparse
+
+
+def k_uniform_matched(k_start: float, mu: float) -> float:
+    """Budget-matching rule from §3.3: k_uni = k_start * (1 + mu) / 2.
+
+    Chosen so C_uni(k_uni) ~= C_decay(k_start, mu) for N >> k_start; the
+    ablation compares Uniform vs TPD at this matched budget.
+    """
+    return k_start * (1.0 + mu) / 2.0
+
+
+def k_avg(n: int, cfg: TPDConfig) -> float:
+    """Average per-position budget, k_avg = (1/N) sum_i k(i)."""
+    return float(np.mean(np.minimum(k_schedule(n, cfg), np.arange(n) + 1.0)))
+
+
+# --- jnp (traceable) versions used inside the AOT'd selection graphs -------
+
+
+def k_at_jnp(i, n: int, k_start, mu):
+    """Traceable Eq. (3); `k_start`/`mu` may be runtime scalars."""
+    i1 = i.astype(jnp.float32) + 1.0
+    k = jnp.floor(k_start - (k_start * (1.0 - mu) / float(n)) * i1)
+    return jnp.maximum(k, 1.0)
+
+
+def block_budget_schedule_jnp(n_blocks: int, k_start, mu, init_keep: int,
+                              local_keep: int, min_total):
+    """Traceable `block_budget_schedule` with runtime k_start/mu/min_total."""
+    idx = jnp.arange(n_blocks)
+    raw = k_at_jnp(idx, n_blocks, k_start, mu)
+    forced = jnp.minimum(init_keep + local_keep, idx + 1).astype(jnp.float32)
+    k = jnp.maximum(raw, jnp.maximum(jnp.asarray(min_total, jnp.float32), forced))
+    return jnp.minimum(k, (idx + 1).astype(jnp.float32))

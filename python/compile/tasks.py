@@ -1,0 +1,339 @@
+"""Synthetic long-context task suite (LongBench / RULER proxies).
+
+The paper evaluates on LongBench task families (CC, FSL, MD1, MD2, SUM,
+SYN) and RULER length-stress suites with 8B backbones. Neither the models
+nor the datasets fit this CPU testbed, so — per the substitution rule —
+each family is replaced by a synthetic proxy that stresses the same
+capability class on a small trained-from-scratch transformer:
+
+  family | proxy                      | capability exercised
+  -------|----------------------------|--------------------------------------
+  CC     | function-body completion   | repo-level retrieval + local syntax
+  FSL    | induction pairs            | few-shot pattern matching
+  MD1    | multi-doc fact lookup      | cross-document retrieval
+  MD2    | two-hop doc chain          | multi-hop aggregation
+  SUM    | majority-tag counting      | global aggregation over the context
+  SYN    | needle-in-a-haystack       | exact long-range recall
+  RULER  | {needle, multikey needle, variable tracking} at several lengths
+
+Every sample is a token-id sequence of exactly `n_ctx` positions laid out
+
+    [BOS] <context ...> [QUERY] <query> [AMARK] <answer tokens> [PAD ...]
+
+so *one prefill pass* scores it: the model is teacher-forced and judged by
+argmax exact-match on the answer positions (logits at p-1 predict token p).
+Accuracy deltas between attention methods under equal budget — the paper's
+actual claim — are measurable this way without any decode loop.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+# --- vocabulary -------------------------------------------------------------
+
+PAD, BOS, SEP, QUERY, AMARK, DOC, KEY, IS, TAG, FN, REF, END = range(12)
+WORD0 = 16
+VOCAB_SIZE = 96
+N_WORDS = VOCAB_SIZE - WORD0  # 80 "word" ids
+
+SPECIAL_NAMES = {
+    PAD: "<pad>", BOS: "<bos>", SEP: ";", QUERY: "<q>", AMARK: "=>",
+    DOC: "<doc>", KEY: "<key>", IS: "<is>", TAG: "<tag>", FN: "<fn>",
+    REF: "<ref>", END: "<end>",
+}
+
+FAMILIES = ("cc", "cp", "fsl", "md1", "md2", "sum", "syn")
+RULER_TASKS = ("needle", "multikey", "vt", "cp")
+
+
+def detok(ids) -> str:
+    """Human-readable rendering (debugging only)."""
+    out = []
+    for t in ids:
+        t = int(t)
+        out.append(SPECIAL_NAMES.get(t, f"w{t - WORD0}" if t >= WORD0 else f"?{t}"))
+    return " ".join(out)
+
+
+@dataclass
+class Sample:
+    ids: np.ndarray            # [n_ctx] int32
+    loss_mask: np.ndarray      # [n_ctx] float32 — 1 where LM loss applies
+    answer_start: int          # first answer token position
+    answer_len: int
+    family: str
+    meta: dict = field(default_factory=dict)
+
+
+def _words(rng: np.random.Generator, n: int, exclude=()) -> np.ndarray:
+    pool = np.setdiff1d(np.arange(WORD0, VOCAB_SIZE), np.asarray(exclude, int))
+    return rng.choice(pool, size=n, replace=len(pool) < n)
+
+
+def _insert_many(body: list[int], stmts: list[list[int]], rng) -> list[int]:
+    """Insert atomic statements at random positions without splitting each
+    other: positions are drawn in the ORIGINAL coordinate space, statements
+    are assigned to ascending positions (preserving list order, e.g. vt
+    chains read left-to-right), and insertion proceeds from the highest
+    position down so earlier inserts never land inside later ones.
+    """
+    # keep clear of the tail: _finish truncates body[:room] to make space
+    # for the query/answer, so statements inserted in the last ~64 tokens
+    # would be cut and the sample rendered unsolvable.
+    hi = max(1, len(body) - 64)
+    pos = sorted(int(rng.integers(0, hi)) for _ in stmts)
+    out = list(body)
+    for p, stmt in sorted(zip(pos, stmts), key=lambda t: -t[0]):
+        out[p:p] = stmt
+    return out
+
+
+def _finish(body: list[int], query: list[int], answer: list[int],
+            n_ctx: int, family: str, rng, meta=None) -> Sample:
+    """Assemble [BOS] body [QUERY] query [AMARK] answer [END] + PAD."""
+    tail = [QUERY] + query + [AMARK] + answer + [END]
+    room = n_ctx - 1 - len(tail)
+    assert room >= 0, f"context too small: n_ctx={n_ctx} tail={len(tail)}"
+    body = body[:room]
+    # top up with filler so the answer sits near the end at every length
+    filler = _words(rng, max(0, room - len(body)))
+    seq = [BOS] + body + list(filler) + tail
+    ids = np.asarray(seq, np.int32)
+    assert ids.shape[0] == n_ctx
+    ans_start = n_ctx - 1 - len(answer)  # position of first answer token
+    mask = np.zeros(n_ctx, np.float32)
+    # Loss on answer tokens ONLY. Filler tokens are uniform-random, so LM
+    # loss on them is pure gradient noise that empirically drowns the task
+    # signal at these batch sizes (sees EXPERIMENTS.md §Training).
+    mask[ans_start:n_ctx - 1] = 1.0
+    return Sample(ids, mask, ans_start, len(answer), family, meta or {})
+
+
+# --- generators -------------------------------------------------------------
+
+
+def gen_needle(rng, n_ctx: int, n_answer: int = 1) -> Sample:
+    """SYN / RULER-needle: one KEY..IS..value fact buried in filler."""
+    key = int(_words(rng, 1)[0])
+    vals = [int(x) for x in _words(rng, n_answer, exclude=[key])]
+    body = list(_words(rng, n_ctx))
+    pos = int(rng.integers(0, max(1, len(body) - 32)))
+    body[pos:pos] = [KEY, key, IS, *vals, SEP]
+    return _finish(body, [KEY, key], vals, n_ctx, "syn", rng,
+                   {"depth": pos / max(1, n_ctx)})
+
+
+def gen_multikey(rng, n_ctx: int, n_keys: int = 4) -> Sample:
+    """RULER multikey: several facts, query one (distractor robustness)."""
+    keys = _words(rng, n_keys)
+    vals = _words(rng, n_keys, exclude=keys)
+    stmts = [[KEY, int(k), IS, int(v), SEP] for k, v in zip(keys, vals)]
+    body = _insert_many(list(_words(rng, n_ctx)), stmts, rng)
+    pick = int(rng.integers(0, n_keys))
+    return _finish(body, [KEY, int(keys[pick])], [int(vals[pick])],
+                   n_ctx, "syn", rng, {"n_keys": n_keys})
+
+
+def gen_vt(rng, n_ctx: int, hops: int = 2) -> Sample:
+    """RULER variable tracking: KEY b REF a chains; resolve the chain."""
+    names = _words(rng, hops + 1)
+    val = int(_words(rng, 1, exclude=names)[0])
+    stmts = [[KEY, int(names[0]), IS, val, SEP]]
+    for h in range(1, hops + 1):
+        stmts.append([KEY, int(names[h]), REF, int(names[h - 1]), SEP])
+    # _insert_many keeps list order at ascending positions, so the chain
+    # reads left-to-right and no statement can split another.
+    body = _insert_many(list(_words(rng, n_ctx)), stmts, rng)
+    return _finish(body, [KEY, int(names[-1])], [val], n_ctx, "syn", rng,
+                   {"hops": hops})
+
+
+def gen_induction(rng, n_ctx: int, n_pairs: int = 12) -> Sample:
+    """FSL: (a => b) few-shot pairs, one queried at the end."""
+    a = _words(rng, n_pairs)
+    b = _words(rng, n_pairs)
+    stmts = [[int(x), AMARK, int(y), SEP] for x, y in zip(a, b)]
+    out = _insert_many(list(_words(rng, n_ctx)), stmts, rng)
+    pick = int(rng.integers(0, n_pairs))
+    return _finish(out, [int(a[pick])], [int(b[pick])], n_ctx, "fsl", rng)
+
+
+def gen_multidoc(rng, n_ctx: int, n_docs: int = 4, hop2: bool = False) -> Sample:
+    """MD1 (hop2=False): DOC d ... KEY t IS f — query doc id, answer fact.
+    MD2 (hop2=True): doc A holds REF to doc B; answer is B's fact."""
+    docs = _words(rng, n_docs)
+    facts = _words(rng, n_docs, exclude=docs)
+    body: list[int] = []
+    doc_words = max(8, (n_ctx // (n_docs + 2)) - 8)
+    order = rng.permutation(n_docs)
+    for d in order:
+        body += [DOC, int(docs[d]), SEP]
+        body += [int(w) for w in _words(rng, doc_words)]
+        body += [KEY, int(docs[d]), IS, int(facts[d]), SEP]
+    if not hop2:
+        pick = int(rng.integers(0, n_docs))
+        return _finish(body, [DOC, int(docs[pick])], [int(facts[pick])],
+                       n_ctx, "md1", rng)
+    # two-hop: a bridge statement "KEY docA REF docB"; query docA via REF.
+    # Inserted at a doc boundary so it cannot split a KEY..IS fact.
+    a, bdoc = rng.choice(n_docs, 2, replace=False)
+    bridge = [KEY, int(docs[a]), REF, int(docs[bdoc]), SEP]
+    starts = [i for i in range(len(body)) if body[i] == DOC] + [len(body)]
+    pos = int(starts[int(rng.integers(0, len(starts)))])
+    body[pos:pos] = bridge
+    return _finish(body, [REF, int(docs[a])], [int(facts[bdoc])],
+                   n_ctx, "md2", rng)
+
+
+def gen_majority(rng, n_ctx: int, n_tags: int = 3) -> Sample:
+    """SUM proxy: tags sprinkled through the context; answer = most
+    frequent tag (global aggregation, no single needle suffices)."""
+    tags = _words(rng, n_tags)
+    win = int(rng.integers(0, n_tags))
+    occ_win = int(rng.integers(6, 9))
+    stmts = []
+    for t_i, tag in enumerate(tags):
+        occ = occ_win if t_i == win else int(rng.integers(1, 3))
+        stmts += [[TAG, int(tag)]] * occ
+    body = _insert_many(list(_words(rng, n_ctx)), stmts, rng)
+    return _finish(body, [TAG], [int(tags[win])], n_ctx, "sum", rng)
+
+
+def gen_codecomp(rng, n_ctx: int, n_fns: int = 4, body_len: int = 3) -> Sample:
+    """CC proxy: function definitions FN f SEP b1 b2 b3 END; a later call
+    site must reproduce the first `body_len` body tokens."""
+    fns = _words(rng, n_fns)
+    bodies = [_words(rng, body_len, exclude=fns) for _ in range(n_fns)]
+    stmts = [[FN, int(f), SEP, *[int(x) for x in bb], END]
+             for f, bb in zip(fns, bodies)]
+    body = _insert_many(list(_words(rng, n_ctx)), stmts, rng)
+    pick = int(rng.integers(0, n_fns))
+    return _finish(body, [FN, int(fns[pick])],
+                   [int(x) for x in bodies[pick]], n_ctx, "cc", rng)
+
+
+def gen_copy(rng, n_ctx: int, variable: bool = False) -> Sample:
+    """Training-only: dense-supervision copy block.
+
+    Fixed layout (default): [BOS] w(half) [SEP] w(half) — the recipe the
+    backbone demonstrably learns at every length rung within the build
+    budget (EXPERIMENTS.md §Training). ~n/2 supervised positions per
+    sample vs the QA families' 1-3.
+
+    `variable=True` randomizes both the copied length and a filler prefix
+    to force content-based induction instead of the positional shortcut;
+    calibration showed it does NOT crack within this testbed's budget, so
+    it is available for longer-budget runs but off by default.
+    """
+    if variable:
+        max_l = (n_ctx - 2) // 2
+        lo = max(4, n_ctx // 5)
+        l = int(rng.integers(lo, max_l + 1))
+        f = int(rng.integers(0, n_ctx - 2 - 2 * l + 1))
+        w = _words(rng, l)
+        seq = np.concatenate([[BOS], _words(rng, f), w, [SEP], w]).astype(np.int32)
+        start = 2 + f + l
+    else:
+        l = (n_ctx - 2) // 2
+        w = _words(rng, l)
+        seq = np.concatenate([[BOS], w, [SEP], w]).astype(np.int32)
+        start = l + 2
+    ids = np.zeros(n_ctx, np.int32)
+    ids[: len(seq)] = seq
+    mask = np.zeros(n_ctx, np.float32)
+    mask[start : start + l] = 1.0
+    return Sample(ids, mask, start, l, "copy")
+
+
+def gen_cp(rng, n_ctx: int, answer_len: int = 16) -> Sample:
+    """CP — long-range copy completion ([BOS] w(half) [SEP] w(half)).
+
+    The CC-proxy variant the trained backbone is actually competent at
+    (EXPERIMENTS.md §Training documents why the sparse-supervision QA
+    families stay at chance on this testbed): reproducing a long block
+    seen half a context ago is dense retrieval across ~n/2 positions —
+    the capability class of LongBench code-completion — and is exactly
+    the signal block-sparse selection can destroy (prune the source
+    blocks and the copy fails). Scored on the LAST `answer_len` copied
+    tokens, the positions whose sources sit deepest in the context.
+    """
+    half = (n_ctx - 2) // 2
+    w = _words(rng, half)
+    seq = np.concatenate([[BOS], w, [SEP], w]).astype(np.int32)
+    ids = np.zeros(n_ctx, np.int32)
+    ids[: len(seq)] = seq
+    end = 2 * half + 2
+    ans = min(answer_len, half)
+    mask = np.zeros(n_ctx, np.float32)
+    mask[end - ans : end] = 1.0
+    return Sample(ids, mask, end - ans, ans, "cp")
+
+
+def gen_qa_multi(rng, n_ctx: int, n_facts: int = 6, n_queries: int = 4) -> Sample:
+    """Training-only: multi-query needle — one context, several QA pairs.
+
+    Densifies supervision in the exact eval format ([QUERY] KEY k [AMARK]
+    v [END] tail): n_queries answer tokens per sample instead of 1, which
+    is what lets the QA format crack within the build budget. Eval samples
+    (single query) are a strict sub-format.
+    """
+    keys = _words(rng, n_facts)
+    vals = _words(rng, n_facts, exclude=keys)
+    stmts = [[KEY, int(k), IS, int(v), SEP] for k, v in zip(keys, vals)]
+    tail: list[int] = []
+    picks = rng.choice(n_facts, size=min(n_queries, n_facts), replace=False)
+    for p in picks:
+        tail += [QUERY, KEY, int(keys[p]), AMARK, int(vals[p]), END]
+    room = n_ctx - 1 - len(tail)
+    body = _insert_many(list(_words(rng, room)), stmts, rng)[:room]
+    seq = [BOS] + body + tail
+    ids = np.asarray(seq[:n_ctx], np.int32)
+    mask = np.zeros(n_ctx, np.float32)
+    first_ans = None
+    for i, t in enumerate(seq[:n_ctx]):
+        if t == AMARK and i + 1 < n_ctx:
+            mask[i + 1] = 1.0
+            if first_ans is None:
+                first_ans = i + 1
+    return Sample(ids, mask, first_ans or n_ctx - 2, 1, "qa_multi")
+
+
+GENERATORS = {
+    "copy": gen_copy,
+    "cp": gen_cp,
+    "qa_multi": gen_qa_multi,
+    "syn": gen_needle,
+    "fsl": gen_induction,
+    "md1": lambda rng, n: gen_multidoc(rng, n, hop2=False),
+    "md2": lambda rng, n: gen_multidoc(rng, n, hop2=True),
+    "sum": gen_majority,
+    "cc": gen_codecomp,
+    "needle": gen_needle,
+    "multikey": gen_multikey,
+    "vt": gen_vt,
+}
+
+
+def gen_sample(family: str, rng, n_ctx: int) -> Sample:
+    return GENERATORS[family](rng, n_ctx)
+
+
+def gen_batch(rng, families, n_ctx: int, batch: int):
+    """Training batch: (ids [B, N], loss_mask [B, N])."""
+    ids = np.zeros((batch, n_ctx), np.int32)
+    mask = np.zeros((batch, n_ctx), np.float32)
+    for b in range(batch):
+        fam = families[int(rng.integers(0, len(families)))]
+        s = gen_sample(fam, rng, n_ctx)
+        ids[b] = s.ids
+        mask[b] = s.loss_mask
+    return ids, mask
+
+
+def gen_eval_set(family: str, seed: int, n_ctx: int, count: int):
+    """Deterministic eval set for export to the rust eval harness."""
+    rng = np.random.default_rng(seed)
+    return [gen_sample(family, rng, n_ctx) for _ in range(count)]

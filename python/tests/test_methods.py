@@ -1,0 +1,160 @@
+"""Selection-method invariants: every method must emit a valid selection
+for the uniform kernel interface (unique causal ids, counts in range,
+forced blocks present) and respect its budget semantics."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from compile import methods
+from compile.kernels import ref
+
+SET = dict(deadline=None, max_examples=8,
+           suppress_health_check=[HealthCheck.too_slow])
+
+
+def qkv(seed, h=4, hk=2, n=512, dh=16):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.normal(size=(h, n, dh)).astype(np.float32)),
+            jnp.asarray(rng.normal(size=(hk, n, dh)).astype(np.float32)),
+            jnp.asarray(rng.normal(size=(hk, n, dh)).astype(np.float32)))
+
+
+def check_valid(idx, cnt, nblk):
+    idx, cnt = np.asarray(idx), np.asarray(cnt)
+    h = idx.shape[0]
+    assert idx.shape == (h, nblk, nblk)
+    assert cnt.shape == (h, nblk)
+    assert (cnt >= 1).all()
+    for hh in range(h):
+        for i in range(nblk):
+            c = cnt[hh, i]
+            assert c <= i + 1, f"count {c} exceeds causal width {i+1}"
+            sel = idx[hh, i, :c]
+            assert (sel <= i).all(), "non-causal block selected"
+            assert len(set(sel.tolist())) == c, "duplicate block ids"
+
+
+def selected_sets(idx, cnt):
+    idx, cnt = np.asarray(idx), np.asarray(cnt)
+    return [[set(idx[h, i, :cnt[h, i]].tolist())
+             for i in range(idx.shape[1])] for h in range(idx.shape[0])]
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 1000), ks=st.sampled_from([2.0, 3.0, 5.0]),
+       mu=st.sampled_from([0.5, 0.7, 1.0]),
+       beta=st.sampled_from([0.0, 0.2]))
+def test_stem_valid_and_forced(seed, ks, mu, beta):
+    q, k, v = qkv(seed)
+    nblk = 8
+    idx, cnt, bud = methods.select_stem(q, k, v, 64, ks, mu, beta)
+    check_valid(idx, cnt, nblk)
+    sets = selected_sets(idx, cnt)
+    for h in range(4):
+        for i in range(nblk):
+            assert 0 in sets[h][i], "sink block must always survive"
+            assert i in sets[h][i], "diagonal block must always survive"
+    assert 0.0 < float(bud) <= 1.0
+
+
+def test_stem_mu_one_is_uniform_budget():
+    q, k, v = qkv(0)
+    _, cnt1, _ = methods.select_stem(q, k, v, 64, 4.0, 1.0, 0.0)
+    cnt1 = np.asarray(cnt1)
+    width = np.arange(8) + 1
+    expect = np.minimum(np.maximum(4, 3), width)  # k_start clamped
+    assert (cnt1[0] == np.minimum(4, width).clip(min=np.minimum(3, width))).all()
+
+
+def test_stem_budget_decreases_with_mu():
+    q, k, v = qkv(1, n=2048)
+    _, _, b_low = methods.select_stem(q, k, v, 64, 8.0, 0.5, 0.2)
+    _, _, b_hi = methods.select_stem(q, k, v, 64, 8.0, 1.0, 0.2)
+    assert float(b_low) < float(b_hi)
+
+
+def test_stem_ref_agrees_with_kernel_selection():
+    q, k, v = qkv(2)
+    i1, c1, b1 = methods.select_stem(q, k, v, 64, 3.0, 0.7, 0.2)
+    i2, c2, b2 = methods.select_stem_ref(q, k, v, 64, 3.0, 0.7, 0.2)
+    assert (np.asarray(c1) == np.asarray(c2)).all()
+    assert selected_sets(i1, c1) == selected_sets(i2, c2)
+
+
+def test_streaming_pattern():
+    q, k, v = qkv(3)
+    idx, cnt, bud = methods.select_streaming(q, 64, 1, 2)
+    check_valid(idx, cnt, 8)
+    sets = selected_sets(idx, cnt)
+    for i in range(8):
+        want = ({0} | {j for j in range(max(0, i - 1), i + 1)})
+        assert sets[0][i] == want, f"row {i}: {sets[0][i]} != {want}"
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 1000), tau=st.sampled_from([0.5, 0.9, 0.99]))
+def test_xattn_valid_and_tau_monotone(seed, tau):
+    q, k, v = qkv(seed)
+    idx, cnt, bud = methods.select_xattn(q, k, v, 64, tau)
+    check_valid(idx, cnt, 8)
+
+
+def test_xattn_budget_grows_with_tau():
+    q, k, v = qkv(5, n=1024)
+    _, _, b1 = methods.select_xattn(q, k, v, 64, 0.5)
+    _, _, b2 = methods.select_xattn(q, k, v, 64, 0.99)
+    assert float(b1) <= float(b2)
+
+
+def test_minference_vertical_and_slash():
+    q, k, v = qkv(6, n=1024)
+    nblk = 16
+    idx, cnt, bud = methods.select_minference(q, k, v, 64, 3, 2)
+    check_valid(idx, cnt, nblk)
+    sets = selected_sets(idx, cnt)
+    # slash: diagonal and previous band present everywhere
+    for i in range(nblk):
+        assert i in sets[0][i]
+        if i >= 1:
+            assert (i - 1) in sets[0][i]
+
+
+def test_flexprefill_mixes_patterns():
+    q, k, v = qkv(7, n=1024)
+    idx, cnt, bud = methods.select_flexprefill(q, k, v, 64, 0.9, 0.35)
+    check_valid(idx, cnt, 16)
+
+
+def test_segment_dense_outside():
+    q, k, v = qkv(8, n=1024)
+    nblk = 16
+    idx, cnt, _ = methods.select_segment(q, k, v, 64, 4, 8, 2, 0.0)
+    check_valid(idx, cnt, nblk)
+    cnt = np.asarray(cnt)
+    for i in range(nblk):
+        if 4 <= i < 8:
+            assert cnt[0, i] == min(2, i + 1)
+        else:
+            assert cnt[0, i] == i + 1, f"row {i} must be dense"
+
+
+def test_segment_ratio_mode():
+    q, k, v = qkv(9, n=1024)
+    idx, cnt, _ = methods.select_segment(q, k, v, 64, 0, 16, 0, 0.5)
+    cnt = np.asarray(cnt)
+    for i in range(16):
+        assert cnt[0, i] == int(np.ceil(0.5 * (i + 1)))
+
+
+def test_sparse_output_closer_with_larger_budget():
+    """Sanity on the whole pipeline: more budget => lower error vs dense."""
+    q, k, v = qkv(10, n=1024)
+    dense_o = ref.dense_attention(q, k, v)
+    errs = []
+    for ks in (3.0, 6.0, 12.0):
+        idx, cnt, _ = methods.select_stem(q, k, v, 64, ks, 0.7, 0.2)
+        o = ref.block_sparse_attention(q, k, v, idx, cnt, 64)
+        errs.append(float(jnp.mean((o - dense_o) ** 2)))
+    assert errs[0] >= errs[1] >= errs[2]

@@ -1,0 +1,91 @@
+"""TPD schedule and cost-model algebra (paper Eq. 2-4, §3.3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import schedule as S
+
+SET = dict(deadline=None, max_examples=50)
+
+
+def test_k_at_endpoints():
+    # k(1) ~ k_start, k(N) ~ mu * k_start (floor effects aside)
+    n, ks, mu = 1000, 100.0, 0.7
+    k = S.k_schedule(n, S.TPDConfig(k_start=ks, mu=mu))
+    assert k[0] <= ks and k[0] >= ks - 1 - ks * (1 - mu) / n
+    assert abs(k[-1] - mu * ks) <= 1.0
+
+
+@settings(**SET)
+@given(ks=st.floats(4, 64), mu=st.floats(0.3, 1.0),
+       n=st.integers(64, 4096))
+def test_schedule_monotone_nonincreasing(ks, mu, n):
+    k = S.k_schedule(n, S.TPDConfig(k_start=ks, mu=mu))
+    assert (np.diff(k) <= 0).all()
+
+
+@settings(**SET)
+@given(ks=st.floats(4, 64), mu=st.floats(0.3, 0.999),
+       n=st.integers(128, 8192))
+def test_decay_cheaper_than_uniform(ks, mu, n):
+    if ks >= n:
+        return
+    assert S.cost_decay(n, ks, mu) < S.cost_uniform(n, ks)
+
+
+def test_decay_equals_uniform_at_mu_one():
+    assert S.cost_decay(2048, 32.0, 1.0) == pytest.approx(
+        S.cost_uniform(2048, 32.0))
+
+
+@settings(**SET)
+@given(ks=st.floats(8, 64), mu=st.floats(0.4, 1.0))
+def test_budget_matching_rule(ks, mu):
+    """C_uni(k_uni) ~= C_decay(k_start, mu) for N >> k_start (§3.3)."""
+    n = 1 << 16
+    k_uni = S.k_uniform_matched(ks, mu)
+    c_uni = S.cost_uniform(n, k_uni)
+    c_dec = S.cost_decay(n, ks, mu)
+    assert abs(c_uni - c_dec) / c_dec < 0.02
+
+
+def test_eq4_matches_discrete_sum():
+    """Closed-form C_decay tracks the literal sum of clamped k(i)."""
+    n, ks, mu = 4096, 64.0, 0.7
+    k = S.k_schedule(n, S.TPDConfig(k_start=ks, mu=mu))
+    discrete = float(np.minimum(k, np.arange(n) + 1).sum())
+    closed = S.cost_decay(n, ks, mu)
+    assert abs(discrete - closed) / closed < 0.02
+
+
+@settings(**SET)
+@given(nblk=st.integers(4, 64), ks=st.floats(2, 32), mu=st.floats(0.3, 1.0))
+def test_block_schedule_bounds(nblk, ks, mu):
+    cfg = S.TPDConfig(k_start=ks, mu=mu, init_keep=1, local_keep=2,
+                      min_total=3)
+    k = S.block_budget_schedule(nblk, cfg)
+    width = np.arange(nblk) + 1
+    assert (k >= 1).all()
+    assert (k <= width).all()
+    # floor respected wherever the causal width allows it
+    ok = width >= cfg.min_total
+    assert (k[ok] >= cfg.min_total).all()
+
+
+def test_jnp_matches_numpy_schedule():
+    import jax.numpy as jnp
+    cfg = S.TPDConfig(k_start=8.0, mu=0.7)
+    a = S.block_budget_schedule(32, cfg)
+    b = np.asarray(S.block_budget_schedule_jnp(
+        32, 8.0, 0.7, cfg.init_keep, cfg.local_keep, cfg.min_total))
+    np.testing.assert_allclose(a, b)
+
+
+def test_cost_stem_linear_in_n():
+    """Eq. 8: doubling N with fixed k_avg roughly doubles C_stem's sparse
+    term (metric term is the quadratic-but-tiny remainder)."""
+    d, b, kavg = 256, 64, 512.0
+    c1 = S.cost_stem(8192, d, b, kavg)
+    c2 = S.cost_stem(16384, d, b, kavg)
+    assert c2 / c1 < 2.4

@@ -1,0 +1,157 @@
+"""Task-generator invariants: every family must emit structurally valid,
+deterministic, *solvable* samples — the eval harness depends on the layout
+contract ([BOS] body [QUERY] q [AMARK] answer [END])."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import tasks
+
+ALL_FAMILIES = (
+    list(tasks.FAMILIES) + list(tasks.RULER_TASKS) + ["copy", "qa_multi"]
+)
+
+
+@settings(deadline=None, max_examples=24)
+@given(
+    family=st.sampled_from(ALL_FAMILIES),
+    n_ctx=st.sampled_from([128, 256, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sample_structure(family, n_ctx, seed):
+    rng = np.random.default_rng(seed)
+    s = tasks.gen_sample(family, rng, n_ctx)
+    assert s.ids.shape == (n_ctx,)
+    assert s.ids.dtype == np.int32
+    assert (s.ids >= 0).all() and (s.ids < tasks.VOCAB_SIZE).all()
+    assert s.ids[0] == tasks.BOS
+    if family == "copy":
+        assert s.answer_len == (n_ctx - 2) // 2
+    elif family == "cp":
+        assert s.answer_len == min(16, (n_ctx - 2) // 2)
+    else:
+        assert 0 < s.answer_len <= 8
+    assert 0 < s.answer_start < n_ctx
+    # answer tokens are in range and the mask covers exactly them
+    ans = s.ids[s.answer_start:s.answer_start + s.answer_len]
+    assert (ans != tasks.PAD).all()
+    on = np.flatnonzero(s.loss_mask == 1.0)
+    assert on.min() == s.answer_start
+    if family not in ("copy", "cp", "qa_multi"):
+        assert on.max() == s.answer_start + s.answer_len - 1
+        # QA layout: END closes the sequence
+        assert s.ids[n_ctx - 1] == tasks.END
+        assert s.ids[s.answer_start - 1] == tasks.AMARK
+
+
+@settings(deadline=None, max_examples=12)
+@given(
+    family=st.sampled_from(ALL_FAMILIES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_determinism(family, seed):
+    a = tasks.gen_sample(family, np.random.default_rng(seed), 256)
+    b = tasks.gen_sample(family, np.random.default_rng(seed), 256)
+    assert (a.ids == b.ids).all()
+    assert a.answer_start == b.answer_start
+
+
+def _find_sub(hay, needle):
+    n = len(needle)
+    for i in range(len(hay) - n + 1):
+        if (hay[i:i + n] == needle).all():
+            return i
+    return -1
+
+
+@pytest.mark.parametrize("family", ["syn", "needle", "multikey"])
+def test_needle_families_are_solvable(family):
+    """The queried fact must appear verbatim in the context body."""
+    rng = np.random.default_rng(7)
+    for _ in range(8):
+        s = tasks.gen_sample(family, rng, 256)
+        ids = s.ids
+        # query = [KEY, key] right after QUERY
+        qpos = _find_sub(ids, np.asarray([tasks.QUERY], np.int32))
+        key = ids[qpos + 2]
+        ans = ids[s.answer_start:s.answer_start + s.answer_len]
+        fact = np.asarray([tasks.KEY, key, tasks.IS, *ans], np.int32)
+        where = _find_sub(ids[:qpos], fact)
+        assert where >= 0, "queried fact missing from the context"
+
+
+def test_vt_chain_resolvable():
+    rng = np.random.default_rng(9)
+    for _ in range(8):
+        s = tasks.gen_sample("vt", rng, 256)
+        ids = s.ids
+        # walk REF chain from the queried name down to a KEY..IS fact
+        qpos = _find_sub(ids, np.asarray([tasks.QUERY], np.int32))
+        name = ids[qpos + 2]
+        seen = set()
+        for _hop in range(8):
+            assert name not in seen, "cycle in vt chain"
+            seen.add(name)
+            ref = _find_sub(ids[:qpos], np.asarray([tasks.KEY, name, tasks.REF], np.int32))
+            if ref < 0:
+                break
+            name = ids[ref + 3]
+        fact = _find_sub(ids[:qpos], np.asarray([tasks.KEY, name, tasks.IS], np.int32))
+        assert fact >= 0
+        assert ids[fact + 3] == ids[s.answer_start]
+
+
+def test_majority_answer_is_modal_tag():
+    rng = np.random.default_rng(11)
+    for _ in range(8):
+        s = tasks.gen_sample("sum", rng, 256)
+        ids = s.ids
+        qpos = _find_sub(ids, np.asarray([tasks.QUERY], np.int32))
+        body = ids[:qpos]
+        tags = body[np.flatnonzero(body[:-1] == tasks.TAG) + 1]
+        vals, counts = np.unique(tags, return_counts=True)
+        assert vals[counts.argmax()] == ids[s.answer_start]
+
+
+def test_copy_sample_halves_match():
+    rng = np.random.default_rng(3)
+    s = tasks.gen_sample("copy", rng, 128)
+    half = (128 - 2) // 2
+    assert (s.ids[1:1 + half] == s.ids[half + 2:2 * half + 2]).all()
+    assert s.loss_mask[half + 2:2 * half + 2].all()
+
+
+def test_cp_answer_is_copy_tail():
+    rng = np.random.default_rng(4)
+    s = tasks.gen_sample("cp", rng, 256)
+    half = (256 - 2) // 2
+    # answer span = last 16 copied tokens, mirroring the first half's tail
+    src = s.ids[1 + half - 16:1 + half]
+    assert (s.ids[s.answer_start:s.answer_start + 16] == src).all()
+
+
+def test_copy_variable_offset_variant():
+    rng = np.random.default_rng(5)
+    for _ in range(6):
+        s = tasks.gen_copy(rng, 256, variable=True)
+        l = s.answer_len
+        # copied half matches the l tokens before SEP
+        sep = s.answer_start - 1
+        assert s.ids[sep] == tasks.SEP
+        assert (s.ids[sep - l:sep] == s.ids[s.answer_start:s.answer_start + l]).all()
+
+
+def test_gen_batch_shapes_and_mix():
+    rng = np.random.default_rng(5)
+    ids, mask = tasks.gen_batch(rng, ["syn", "copy"], 256, 6)
+    assert ids.shape == (6, 256) and mask.shape == (6, 256)
+    assert mask.max() == 1.0
+    assert (mask >= 0).all()
+
+
+def test_eval_set_deterministic_across_calls():
+    a = tasks.gen_eval_set("md1", seed=42, n_ctx=256, count=4)
+    b = tasks.gen_eval_set("md1", seed=42, n_ctx=256, count=4)
+    for x, y in zip(a, b):
+        assert (x.ids == y.ids).all()

@@ -1,0 +1,119 @@
+//! Admission control / backpressure: bounds outstanding prefill work so a
+//! burst cannot blow memory or queue latency. Two limits:
+//!   * outstanding tokens (the quantity the cost model says we pay for)
+//!   * outstanding requests
+//! Shed-on-overflow semantics (caller may retry); the serve example turns
+//! rejections into client backoff.
+
+use std::sync::{Condvar, Mutex};
+
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionConfig {
+    pub max_tokens: usize,
+    pub max_requests: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { max_tokens: 64 * 1024, max_requests: 256 }
+    }
+}
+
+#[derive(Debug, Default)]
+struct State {
+    tokens: usize,
+    requests: usize,
+}
+
+pub struct Admission {
+    cfg: AdmissionConfig,
+    state: Mutex<State>,
+    freed: Condvar,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum Admit {
+    Accepted,
+    Rejected { reason: &'static str },
+}
+
+impl Admission {
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        Admission { cfg, state: Mutex::new(State::default()), freed: Condvar::new() }
+    }
+
+    /// Non-blocking admission attempt.
+    pub fn try_admit(&self, n_tokens: usize) -> Admit {
+        let mut s = self.state.lock().unwrap();
+        if s.requests + 1 > self.cfg.max_requests {
+            return Admit::Rejected { reason: "max_requests" };
+        }
+        if s.tokens + n_tokens > self.cfg.max_tokens {
+            return Admit::Rejected { reason: "max_tokens" };
+        }
+        s.tokens += n_tokens;
+        s.requests += 1;
+        Admit::Accepted
+    }
+
+    /// Blocking admission (used by the synchronous eval harness).
+    pub fn admit_blocking(&self, n_tokens: usize) {
+        let mut s = self.state.lock().unwrap();
+        while s.requests + 1 > self.cfg.max_requests || s.tokens + n_tokens > self.cfg.max_tokens {
+            s = self.freed.wait(s).unwrap();
+        }
+        s.tokens += n_tokens;
+        s.requests += 1;
+    }
+
+    pub fn release(&self, n_tokens: usize) {
+        let mut s = self.state.lock().unwrap();
+        s.tokens = s.tokens.saturating_sub(n_tokens);
+        s.requests = s.requests.saturating_sub(1);
+        drop(s);
+        self.freed.notify_all();
+    }
+
+    pub fn outstanding(&self) -> (usize, usize) {
+        let s = self.state.lock().unwrap();
+        (s.tokens, s.requests)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_over_token_budget() {
+        let a = Admission::new(AdmissionConfig { max_tokens: 1000, max_requests: 10 });
+        assert_eq!(a.try_admit(600), Admit::Accepted);
+        assert!(matches!(a.try_admit(600), Admit::Rejected { reason: "max_tokens" }));
+        a.release(600);
+        assert_eq!(a.try_admit(600), Admit::Accepted);
+    }
+
+    #[test]
+    fn rejects_over_request_budget() {
+        let a = Admission::new(AdmissionConfig { max_tokens: 1_000_000, max_requests: 2 });
+        assert_eq!(a.try_admit(1), Admit::Accepted);
+        assert_eq!(a.try_admit(1), Admit::Accepted);
+        assert!(matches!(a.try_admit(1), Admit::Rejected { reason: "max_requests" }));
+    }
+
+    #[test]
+    fn blocking_admission_wakes_on_release() {
+        use std::sync::Arc;
+        let a = Arc::new(Admission::new(AdmissionConfig { max_tokens: 100, max_requests: 10 }));
+        a.admit_blocking(100);
+        let a2 = Arc::clone(&a);
+        let h = std::thread::spawn(move || {
+            a2.admit_blocking(50);
+            a2.release(50);
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        a.release(100);
+        h.join().unwrap();
+        assert_eq!(a.outstanding(), (0, 0));
+    }
+}

@@ -1,0 +1,212 @@
+//! Dynamic batcher: groups compatible prefill requests so a worker picks
+//! up a whole batch at once (vLLM-style continuous batching, restricted to
+//! the prefill phase this paper optimizes).
+//!
+//! Compatibility key = (module kind, seqlen bucket, checkpoint): the
+//! compiled artifacts are per-(kind, bucket), and mixing checkpoints would
+//! mix weight sets. Policy: emit a batch when (a) a queue reaches
+//! `max_batch`, or (b) its head request has waited `max_wait` — classic
+//! size-or-timeout. Pure logic, no threads: the server drives it, the
+//! tests poke it directly.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
+
+use super::request::PrefillRequest;
+
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct BatchKey {
+    pub kind: &'static str,
+    pub bucket: usize,
+    pub checkpoint: String,
+}
+
+#[derive(Debug)]
+pub struct Batch {
+    pub key: BatchKey,
+    pub requests: Vec<PrefillRequest>,
+    pub formed_at: Instant,
+}
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) }
+    }
+}
+
+pub struct Batcher {
+    cfg: BatcherConfig,
+    queues: BTreeMap<BatchKey, VecDeque<PrefillRequest>>,
+    pending: usize,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Batcher { cfg, queues: BTreeMap::new(), pending: 0 }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    pub fn push(&mut self, key: BatchKey, req: PrefillRequest) {
+        self.queues.entry(key).or_default().push_back(req);
+        self.pending += 1;
+    }
+
+    /// Next ready batch under the size-or-timeout policy; `now` is passed
+    /// in for testability.
+    pub fn pop_ready(&mut self, now: Instant) -> Option<Batch> {
+        // full batches first (throughput), then expired heads (latency)
+        let full = self
+            .queues
+            .iter()
+            .find(|(_, q)| q.len() >= self.cfg.max_batch)
+            .map(|(k, _)| k.clone());
+        let key = full.or_else(|| {
+            self.queues
+                .iter()
+                .filter(|(_, q)| {
+                    q.front().is_some_and(|r| now.duration_since(r.enqueued) >= self.cfg.max_wait)
+                })
+                .min_by_key(|(_, q)| q.front().map(|r| r.enqueued).unwrap())
+                .map(|(k, _)| k.clone())
+        })?;
+        let q = self.queues.get_mut(&key).unwrap();
+        let n = q.len().min(self.cfg.max_batch);
+        let requests: Vec<_> = q.drain(..n).collect();
+        if q.is_empty() {
+            self.queues.remove(&key);
+        }
+        self.pending -= requests.len();
+        Some(Batch { key, requests, formed_at: now })
+    }
+
+    /// Drain everything regardless of timers (shutdown path).
+    pub fn drain_all(&mut self, now: Instant) -> Vec<Batch> {
+        let mut out = vec![];
+        let keys: Vec<_> = self.queues.keys().cloned().collect();
+        for key in keys {
+            let mut q = self.queues.remove(&key).unwrap();
+            while !q.is_empty() {
+                let n = q.len().min(self.cfg.max_batch);
+                let requests: Vec<_> = q.drain(..n).collect();
+                self.pending -= requests.len();
+                out.push(Batch { key: key.clone(), requests, formed_at: now });
+            }
+        }
+        out
+    }
+
+    /// Earliest enqueue time among all queued requests (for sleep timing).
+    pub fn oldest_enqueue(&self) -> Option<Instant> {
+        self.queues.values().filter_map(|q| q.front()).map(|r| r.enqueued).min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Method;
+
+    fn req(id: u64, t: Instant) -> PrefillRequest {
+        PrefillRequest {
+            id,
+            checkpoint: "base".into(),
+            method: Method::Dense,
+            ids: vec![1, 2, 3],
+            diag: false,
+            enqueued: t,
+        }
+    }
+
+    fn key(bucket: usize) -> BatchKey {
+        BatchKey { kind: "prefill_dense", bucket, checkpoint: "base".into() }
+    }
+
+    #[test]
+    fn emits_full_batch_immediately() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 2, max_wait: Duration::from_secs(10) });
+        let t = Instant::now();
+        b.push(key(512), req(1, t));
+        assert!(b.pop_ready(t).is_none(), "not full, not expired");
+        b.push(key(512), req(2, t));
+        let batch = b.pop_ready(t).unwrap();
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn timeout_flushes_partial_batch() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) });
+        let t = Instant::now();
+        b.push(key(512), req(1, t));
+        assert!(b.pop_ready(t).is_none());
+        let later = t + Duration::from_millis(6);
+        let batch = b.pop_ready(later).unwrap();
+        assert_eq!(batch.requests.len(), 1);
+    }
+
+    #[test]
+    fn never_mixes_buckets() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 4, max_wait: Duration::ZERO });
+        let t = Instant::now();
+        b.push(key(512), req(1, t));
+        b.push(key(1024), req(2, t));
+        let b1 = b.pop_ready(t).unwrap();
+        let b2 = b.pop_ready(t).unwrap();
+        assert_ne!(b1.key.bucket, b2.key.bucket);
+        assert_eq!(b1.requests.len() + b2.requests.len(), 2);
+    }
+
+    #[test]
+    fn fifo_within_queue() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 3, max_wait: Duration::ZERO });
+        let t = Instant::now();
+        for i in 0..3 {
+            b.push(key(512), req(i, t + Duration::from_micros(i)));
+        }
+        let batch = b.pop_ready(t + Duration::from_secs(1)).unwrap();
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn conservation_under_random_traffic() {
+        use crate::util::prop::forall;
+        use crate::util::rng::Rng;
+        forall(
+            7,
+            50,
+            |r: &mut Rng| (0..30).map(|_| r.below(3) as usize).collect::<Vec<usize>>(),
+            |buckets| {
+                let mut b =
+                    Batcher::new(BatcherConfig { max_batch: 3, max_wait: Duration::ZERO });
+                let t = Instant::now();
+                let mut pushed = vec![];
+                for (i, &bk) in buckets.iter().enumerate() {
+                    b.push(key(512 << bk), req(i as u64, t));
+                    pushed.push(i as u64);
+                }
+                let mut popped = vec![];
+                while let Some(batch) = b.pop_ready(t + Duration::from_secs(1)) {
+                    for r in batch.requests {
+                        popped.push(r.id);
+                    }
+                }
+                popped.sort();
+                if popped == pushed {
+                    Ok(())
+                } else {
+                    Err(format!("lost/dup requests: {} vs {}", popped.len(), pushed.len()))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,280 @@
+//! Paged KV-cache manager (PagedAttention-style page pool).
+//!
+//! Prefill produces per-layer K/V blocks; a decode phase (or a later
+//! retrieval of prefill state) needs them resident. The pool hands out
+//! fixed-size pages (one attention block per page per layer-group),
+//! tracks per-sequence page tables, refcounts shared prefixes, and evicts
+//! completed sequences LRU when under pressure.
+
+use std::collections::HashMap;
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum KvError {
+    #[error("out of KV pages: need {need}, free {free}")]
+    OutOfPages { need: usize, free: usize },
+    #[error("unknown sequence {0}")]
+    UnknownSeq(u64),
+}
+
+#[derive(Debug, Clone)]
+pub struct KvConfig {
+    pub total_pages: usize,
+    pub page_tokens: usize, // tokens per page (= attention block size)
+}
+
+#[derive(Debug)]
+struct SeqEntry {
+    pages: Vec<u32>,
+    pinned: bool,
+    last_touch: u64,
+}
+
+/// Page pool + per-sequence page tables.
+pub struct KvCache {
+    cfg: KvConfig,
+    free: Vec<u32>,
+    refcount: Vec<u16>,
+    seqs: HashMap<u64, SeqEntry>,
+    clock: u64,
+    pub alloc_count: u64,
+    pub evict_count: u64,
+}
+
+impl KvCache {
+    pub fn new(cfg: KvConfig) -> Self {
+        let free = (0..cfg.total_pages as u32).rev().collect();
+        let refcount = vec![0u16; cfg.total_pages];
+        KvCache { cfg, free, refcount, seqs: HashMap::new(), clock: 0, alloc_count: 0, evict_count: 0 }
+    }
+
+    pub fn pages_needed(&self, n_tokens: usize) -> usize {
+        n_tokens.div_ceil(self.cfg.page_tokens)
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.cfg.total_pages - self.free.len()
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Allocate a page table for a sequence; evicts unpinned LRU
+    /// sequences if required.
+    pub fn allocate(&mut self, seq_id: u64, n_tokens: usize) -> Result<&[u32], KvError> {
+        let need = self.pages_needed(n_tokens);
+        while self.free.len() < need {
+            if !self.evict_lru() {
+                return Err(KvError::OutOfPages { need, free: self.free.len() });
+            }
+        }
+        let mut pages = Vec::with_capacity(need);
+        for _ in 0..need {
+            let p = self.free.pop().unwrap();
+            self.refcount[p as usize] = 1;
+            pages.push(p);
+        }
+        self.alloc_count += 1;
+        let t = self.tick();
+        let entry = SeqEntry { pages, pinned: true, last_touch: t };
+        self.seqs.insert(seq_id, entry);
+        Ok(&self.seqs[&seq_id].pages)
+    }
+
+    /// Fork `dst` from `src` sharing its pages (prefix sharing): pages are
+    /// refcounted, copy-on-write is the caller's concern.
+    pub fn fork(&mut self, src: u64, dst: u64) -> Result<(), KvError> {
+        let pages = self.seqs.get(&src).ok_or(KvError::UnknownSeq(src))?.pages.clone();
+        for &p in &pages {
+            self.refcount[p as usize] += 1;
+        }
+        let t = self.tick();
+        self.seqs.insert(dst, SeqEntry { pages, pinned: true, last_touch: t });
+        Ok(())
+    }
+
+    /// Mark a sequence's prefill complete; it becomes evictable.
+    pub fn release(&mut self, seq_id: u64) -> Result<(), KvError> {
+        let t = self.tick();
+        let e = self.seqs.get_mut(&seq_id).ok_or(KvError::UnknownSeq(seq_id))?;
+        e.pinned = false;
+        e.last_touch = t;
+        Ok(())
+    }
+
+    /// Drop a sequence immediately, returning pages whose refcount hits 0.
+    pub fn drop_seq(&mut self, seq_id: u64) -> Result<usize, KvError> {
+        let e = self.seqs.remove(&seq_id).ok_or(KvError::UnknownSeq(seq_id))?;
+        let mut freed = 0;
+        for p in e.pages {
+            let rc = &mut self.refcount[p as usize];
+            debug_assert!(*rc > 0, "double free of page {p}");
+            *rc -= 1;
+            if *rc == 0 {
+                self.free.push(p);
+                freed += 1;
+            }
+        }
+        Ok(freed)
+    }
+
+    fn evict_lru(&mut self) -> bool {
+        let victim = self
+            .seqs
+            .iter()
+            .filter(|(_, e)| !e.pinned)
+            .min_by_key(|(_, e)| e.last_touch)
+            .map(|(&id, _)| id);
+        match victim {
+            Some(id) => {
+                let _ = self.drop_seq(id);
+                self.evict_count += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn page_table(&self, seq_id: u64) -> Option<&[u32]> {
+        self.seqs.get(&seq_id).map(|e| e.pages.as_slice())
+    }
+
+    /// Invariant check used by property tests: every page is either free
+    /// or referenced, with consistent refcounts.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut counted = vec![0u16; self.cfg.total_pages];
+        for e in self.seqs.values() {
+            for &p in &e.pages {
+                counted[p as usize] += 1;
+            }
+        }
+        for (p, (&rc, &ct)) in self.refcount.iter().zip(&counted).enumerate() {
+            if rc != ct {
+                return Err(format!("page {p}: refcount {rc} != table count {ct}"));
+            }
+        }
+        let free_set: std::collections::HashSet<u32> = self.free.iter().copied().collect();
+        if free_set.len() != self.free.len() {
+            return Err("duplicate page in free list".into());
+        }
+        for &p in &self.free {
+            if self.refcount[p as usize] != 0 {
+                return Err(format!("free page {p} has refcount"));
+            }
+        }
+        if self.free.len() + counted.iter().filter(|&&c| c > 0).count() != self.cfg.total_pages {
+            // pages can be multiply referenced; free + referenced-distinct must cover all
+            return Err("page accounting mismatch".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn cache(pages: usize) -> KvCache {
+        KvCache::new(KvConfig { total_pages: pages, page_tokens: 64 })
+    }
+
+    #[test]
+    fn alloc_release_drop() {
+        let mut kv = cache(16);
+        kv.allocate(1, 300).unwrap(); // 5 pages
+        assert_eq!(kv.used_pages(), 5);
+        kv.release(1).unwrap();
+        assert_eq!(kv.drop_seq(1).unwrap(), 5);
+        assert_eq!(kv.free_pages(), 16);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_frees_released_seqs() {
+        let mut kv = cache(8);
+        kv.allocate(1, 256).unwrap(); // 4 pages
+        kv.release(1).unwrap();
+        kv.allocate(2, 256).unwrap(); // 4 pages
+        // pool full; seq 1 is evictable
+        kv.allocate(3, 256).unwrap();
+        assert_eq!(kv.evict_count, 1);
+        assert!(kv.page_table(1).is_none());
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pinned_seqs_never_evicted() {
+        let mut kv = cache(8);
+        kv.allocate(1, 512).unwrap(); // 8 pages, pinned
+        let err = kv.allocate(2, 64).unwrap_err();
+        assert!(matches!(err, KvError::OutOfPages { .. }));
+        assert!(kv.page_table(1).is_some());
+    }
+
+    #[test]
+    fn fork_shares_pages() {
+        let mut kv = cache(8);
+        kv.allocate(1, 128).unwrap(); // 2 pages
+        kv.fork(1, 2).unwrap();
+        assert_eq!(kv.used_pages(), 2);
+        assert_eq!(kv.drop_seq(1).unwrap(), 0); // still referenced by 2
+        assert_eq!(kv.drop_seq(2).unwrap(), 2);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prop_random_workload_keeps_invariants() {
+        forall(
+            99,
+            60,
+            |r: &mut Rng| {
+                let ops: Vec<(usize, usize)> =
+                    (0..40).map(|_| (r.below(4) as usize, r.below(6) as usize + 1)).collect();
+                ops
+            },
+            |ops| {
+                let mut kv = cache(12);
+                let mut next_id = 0u64;
+                let mut live: Vec<u64> = vec![];
+                for &(op, size) in ops {
+                    match op {
+                        0 => {
+                            next_id += 1;
+                            if kv.allocate(next_id, size * 64).is_ok() {
+                                live.push(next_id);
+                            }
+                        }
+                        1 => {
+                            if let Some(&id) = live.first() {
+                                let _ = kv.release(id);
+                            }
+                        }
+                        2 => {
+                            if !live.is_empty() {
+                                let id = live.remove(0);
+                                let _ = kv.drop_seq(id);
+                            }
+                        }
+                        _ => {
+                            if let Some(&src) = live.last() {
+                                next_id += 1;
+                                if kv.fork(src, next_id).is_ok() {
+                                    live.push(next_id);
+                                }
+                            }
+                        }
+                    }
+                    kv.check_invariants()?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,166 @@
+//! Serving metrics: counters + log-bucketed latency histograms with
+//! percentile estimation (the TTFT / throughput numbers in EXPERIMENTS.md
+//! come from here).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Log-scale histogram: bucket i covers [2^i, 2^(i+1)) microseconds.
+pub struct LatencyHisto {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl LatencyHisto {
+    pub fn new() -> Self {
+        LatencyHisto {
+            buckets: (0..40).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let b = (64 - us.max(1).leading_zeros() as usize - 1).min(self.buckets.len() - 1);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Percentile estimate (upper bucket bound), p in [0, 1].
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * p).ceil() as u64;
+        let mut acc = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_us()
+    }
+}
+
+impl Default for LatencyHisto {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Aggregate serving metrics shared across coordinator threads.
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    pub tokens_in: AtomicU64,
+    pub queue: LatencyHisto,
+    pub exec: LatencyHisto,
+    pub ttft: LatencyHisto,
+    /// sum of budget fractions * 1e6 (atomic fixed-point), for mean budget
+    pub budget_sum_micro: AtomicU64,
+    pub errors: Mutex<Vec<String>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_error(&self, e: String) {
+        self.errors.lock().unwrap().push(e);
+    }
+
+    pub fn mean_budget(&self) -> f64 {
+        let c = self.completed.load(Ordering::Relaxed);
+        if c == 0 {
+            0.0
+        } else {
+            self.budget_sum_micro.load(Ordering::Relaxed) as f64 / 1e6 / c as f64
+        }
+    }
+
+    pub fn report(&self, wall: Duration) -> String {
+        let completed = self.completed.load(Ordering::Relaxed);
+        let toks = self.tokens_in.load(Ordering::Relaxed);
+        format!(
+            "requests: submitted={} completed={} rejected={} batches={}\n\
+             tokens prefilled: {} ({:.0} tok/s)\n\
+             TTFT  mean={:.1}ms p50={:.1}ms p90={:.1}ms p99={:.1}ms max={:.1}ms\n\
+             queue mean={:.1}ms p90={:.1}ms | exec mean={:.1}ms p90={:.1}ms\n\
+             mean budget fraction: {:.3}",
+            self.submitted.load(Ordering::Relaxed),
+            completed,
+            self.rejected.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            toks,
+            toks as f64 / wall.as_secs_f64().max(1e-9),
+            self.ttft.mean_us() / 1e3,
+            self.ttft.percentile_us(0.5) as f64 / 1e3,
+            self.ttft.percentile_us(0.9) as f64 / 1e3,
+            self.ttft.percentile_us(0.99) as f64 / 1e3,
+            self.ttft.max_us() as f64 / 1e3,
+            self.queue.mean_us() / 1e3,
+            self.queue.percentile_us(0.9) as f64 / 1e3,
+            self.exec.mean_us() / 1e3,
+            self.exec.percentile_us(0.9) as f64 / 1e3,
+            self.mean_budget(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histo_percentiles_ordered() {
+        let h = LatencyHisto::new();
+        for us in [10u64, 100, 1000, 10_000, 100_000] {
+            for _ in 0..20 {
+                h.record(Duration::from_micros(us));
+            }
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.percentile_us(0.5);
+        let p90 = h.percentile_us(0.9);
+        let p99 = h.percentile_us(0.99);
+        assert!(p50 <= p90 && p90 <= p99, "{p50} {p90} {p99}");
+        assert!(h.mean_us() > 0.0);
+    }
+
+    #[test]
+    fn empty_histo_safe() {
+        let h = LatencyHisto::new();
+        assert_eq!(h.percentile_us(0.9), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! L3 coordinator: the serving-system half of the reproduction.
+//!
+//! request → router/admission → dynamic batcher → dispatcher → worker
+//! pool → PJRT engine; plus the paged KV pool and metrics. See
+//! `server.rs` for the threading model.
+
+pub mod admission;
+pub mod batcher;
+pub mod kv_cache;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use request::{Method, PrefillRequest, PrefillResponse};
+pub use server::{Coordinator, CoordinatorConfig};

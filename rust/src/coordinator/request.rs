@@ -1,0 +1,151 @@
+//! Request/response types flowing through the coordinator.
+
+use std::time::Instant;
+
+use crate::runtime::ScalarValue;
+
+/// Attention method requested for a prefill. `Stem` carries its runtime
+/// hyper-parameters so one compiled module serves every configuration
+/// (uniform SAM and the +TPD ablation are Stem with mu=1 / beta=0).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Method {
+    Dense,
+    Stem { k_start: f32, mu: f32, beta: f32 },
+    Streaming { sink: i32, local: i32 },
+    XAttn { tau: f32 },
+    MInference { vertical: i32, slash: i32 },
+    FlexPrefill { gamma: f32, entropy: f32 },
+    /// Figure-3 diagnostic (diag module only).
+    Segment { lo: i32, hi: i32, k_seg: i32, ratio: f32 },
+}
+
+impl Method {
+    pub fn kind(&self, diag: bool) -> &'static str {
+        let base = match self {
+            Method::Dense => "dense",
+            Method::Stem { .. } => "stem",
+            Method::Streaming { .. } => "streaming",
+            Method::XAttn { .. } => "xattn",
+            Method::MInference { .. } => "minference",
+            Method::FlexPrefill { .. } => "flexprefill",
+            Method::Segment { .. } => "segment",
+        };
+        // static strings for HashMap keys
+        match (diag, base) {
+            (false, "dense") => "prefill_dense",
+            (false, "stem") => "prefill_stem",
+            (false, "streaming") => "prefill_streaming",
+            (false, "xattn") => "prefill_xattn",
+            (false, "minference") => "prefill_minference",
+            (false, "flexprefill") => "prefill_flexprefill",
+            (true, "dense") => "diag_dense",
+            (true, "stem") => "diag_stem",
+            (true, "segment") => "diag_segment",
+            _ => panic!("no module for method {base} diag={diag}"),
+        }
+    }
+
+    pub fn scalars(&self) -> Vec<ScalarValue> {
+        use ScalarValue::*;
+        match *self {
+            Method::Dense => vec![],
+            Method::Stem { k_start, mu, beta } => vec![F32(k_start), F32(mu), F32(beta)],
+            Method::Streaming { sink, local } => vec![I32(sink), I32(local)],
+            Method::XAttn { tau } => vec![F32(tau)],
+            Method::MInference { vertical, slash } => vec![I32(vertical), I32(slash)],
+            Method::FlexPrefill { gamma, entropy } => vec![F32(gamma), F32(entropy)],
+            Method::Segment { lo, hi, k_seg, ratio } => {
+                vec![I32(lo), I32(hi), I32(k_seg), F32(ratio)]
+            }
+        }
+    }
+
+    /// Short display name (table rows).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Dense => "dense",
+            Method::Stem { .. } => "stem",
+            Method::Streaming { .. } => "streaming",
+            Method::XAttn { .. } => "xattn",
+            Method::MInference { .. } => "minference",
+            Method::FlexPrefill { .. } => "flexprefill",
+            Method::Segment { .. } => "segment",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PrefillRequest {
+    pub id: u64,
+    pub checkpoint: String,
+    pub method: Method,
+    pub ids: Vec<i32>,
+    pub diag: bool,
+    pub enqueued: Instant,
+}
+
+#[derive(Debug)]
+pub struct PrefillResponse {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub vocab: usize,
+    pub n_ctx: usize,
+    pub n_input: usize,
+    pub budget_fraction: f32,
+    pub hidden: Option<Vec<f32>>,
+    pub queue_us: u64,
+    pub exec_us: u64,
+}
+
+impl PrefillResponse {
+    /// argmax token at position `pos` (predicting token pos+1).
+    pub fn argmax_at(&self, pos: usize) -> i32 {
+        let row = &self.logits[pos * self.vocab..(pos + 1) * self.vocab];
+        let mut best = 0usize;
+        for (i, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = i;
+            }
+        }
+        best as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_mapping() {
+        assert_eq!(Method::Dense.kind(false), "prefill_dense");
+        assert_eq!(
+            Method::Stem { k_start: 4.0, mu: 0.7, beta: 0.2 }.kind(true),
+            "diag_stem"
+        );
+    }
+
+    #[test]
+    fn scalar_order_matches_manifest_contract() {
+        let s = Method::Stem { k_start: 4.0, mu: 0.7, beta: 0.2 }.scalars();
+        assert_eq!(s, vec![ScalarValue::F32(4.0), ScalarValue::F32(0.7), ScalarValue::F32(0.2)]);
+        let s = Method::Segment { lo: 1, hi: 2, k_seg: 3, ratio: 0.5 }.scalars();
+        assert_eq!(s.len(), 4);
+    }
+
+    #[test]
+    fn argmax() {
+        let r = PrefillResponse {
+            id: 0,
+            logits: vec![0.0, 1.0, 0.5, /* row1 */ 2.0, -1.0, 0.0],
+            vocab: 3,
+            n_ctx: 2,
+            n_input: 2,
+            budget_fraction: 1.0,
+            hidden: None,
+            queue_us: 0,
+            exec_us: 0,
+        };
+        assert_eq!(r.argmax_at(0), 1);
+        assert_eq!(r.argmax_at(1), 0);
+    }
+}

@@ -1,0 +1,300 @@
+//! The coordinator itself: router → admission → dynamic batcher →
+//! dispatcher → worker pool → PJRT engine, with a paged KV pool and
+//! serving metrics. This is the paper-as-a-system: the Stem budget enters
+//! through `Method::Stem` scalars and shows up as lower exec latency and
+//! budget fraction per request.
+//!
+//! Threading model (std threads; see DESIGN.md §2 on tokio):
+//!   * callers enqueue via `submit` (mpsc into the dispatcher)
+//!   * one dispatcher thread forms batches (size-or-timeout)
+//!   * `workers` threads execute batch items on the shared PJRT engine
+//!   * completions flow back through per-request channels
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::admission::{Admission, AdmissionConfig, Admit};
+use super::batcher::{Batch, BatchKey, Batcher, BatcherConfig};
+use super::kv_cache::{KvCache, KvConfig};
+use super::metrics::Metrics;
+use super::request::{Method, PrefillRequest, PrefillResponse};
+use crate::model::vocab;
+use crate::runtime::Engine;
+use crate::util::threadpool::ThreadPool;
+
+pub struct CoordinatorConfig {
+    pub workers: usize,
+    pub batcher: BatcherConfig,
+    pub admission: AdmissionConfig,
+    pub kv_pages: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8),
+            batcher: BatcherConfig::default(),
+            admission: AdmissionConfig::default(),
+            kv_pages: 4096,
+        }
+    }
+}
+
+enum Msg {
+    Request(PrefillRequest, mpsc::Sender<Result<PrefillResponse>>),
+    Shutdown,
+}
+
+pub struct Coordinator {
+    engine: Arc<Engine>,
+    tx: mpsc::Sender<Msg>,
+    dispatcher: Option<thread::JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    admission: Arc<Admission>,
+    next_id: AtomicU64,
+    started: Instant,
+}
+
+impl Coordinator {
+    pub fn new(engine: Arc<Engine>, cfg: CoordinatorConfig) -> Coordinator {
+        let metrics = Arc::new(Metrics::new());
+        let admission = Arc::new(Admission::new(cfg.admission));
+        let block = engine.manifest().model.block;
+        let kv = Arc::new(Mutex::new(KvCache::new(KvConfig {
+            total_pages: cfg.kv_pages,
+            page_tokens: block,
+        })));
+        let (tx, rx) = mpsc::channel::<Msg>();
+
+        let dispatcher = {
+            let engine = Arc::clone(&engine);
+            let metrics = Arc::clone(&metrics);
+            let admission = Arc::clone(&admission);
+            let batcher_cfg = cfg.batcher.clone();
+            let workers = cfg.workers;
+            thread::spawn(move || {
+                dispatcher_loop(rx, engine, metrics, admission, kv, batcher_cfg, workers)
+            })
+        };
+
+        Coordinator {
+            engine,
+            tx,
+            dispatcher: Some(dispatcher),
+            metrics,
+            admission,
+            next_id: AtomicU64::new(1),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    /// Route + admit + enqueue. Returns the response channel, or an
+    /// immediate rejection (backpressure).
+    pub fn submit(
+        &self,
+        checkpoint: &str,
+        method: Method,
+        ids: Vec<i32>,
+        diag: bool,
+    ) -> Result<mpsc::Receiver<Result<PrefillResponse>>> {
+        let bucket = self
+            .engine
+            .manifest()
+            .bucket_for(ids.len())
+            .ok_or_else(|| anyhow!("request of {} tokens exceeds every bucket", ids.len()))?;
+        match self.admission.try_admit(bucket) {
+            Admit::Accepted => {}
+            Admit::Rejected { reason } => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(anyhow!("rejected: {reason}"));
+            }
+        }
+        let req = PrefillRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            checkpoint: checkpoint.to_string(),
+            method,
+            ids,
+            diag,
+            enqueued: Instant::now(),
+        };
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send(Msg::Request(req, rtx)).map_err(|_| anyhow!("coordinator stopped"))?;
+        Ok(rrx)
+    }
+
+    /// Synchronous convenience wrapper (eval harness path).
+    pub fn prefill_blocking(
+        &self,
+        checkpoint: &str,
+        method: Method,
+        ids: Vec<i32>,
+        diag: bool,
+    ) -> Result<PrefillResponse> {
+        let rx = self.submit(checkpoint, method, ids, diag)?;
+        rx.recv().map_err(|_| anyhow!("response channel closed"))?
+    }
+
+    pub fn uptime(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    pub fn report(&self) -> String {
+        self.metrics.report(self.uptime())
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dispatcher_loop(
+    rx: mpsc::Receiver<Msg>,
+    engine: Arc<Engine>,
+    metrics: Arc<Metrics>,
+    admission: Arc<Admission>,
+    kv: Arc<Mutex<KvCache>>,
+    batcher_cfg: BatcherConfig,
+    workers: usize,
+) {
+    let pool = ThreadPool::new(workers);
+    let mut batcher = Batcher::new(batcher_cfg.clone());
+    let mut channels: std::collections::HashMap<u64, mpsc::Sender<Result<PrefillResponse>>> =
+        std::collections::HashMap::new();
+    let shutdown = AtomicBool::new(false);
+
+    loop {
+        // 1. pull what's available (block briefly if nothing pending)
+        let msg = if batcher.pending() == 0 {
+            match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => break,
+            }
+        } else {
+            match rx.recv_timeout(batcher_cfg.max_wait / 2) {
+                Ok(m) => Some(m),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        };
+        if let Some(msg) = msg {
+            match msg {
+                Msg::Shutdown => {
+                    shutdown.store(true, Ordering::SeqCst);
+                }
+                Msg::Request(req, ch) => {
+                    let bucket = engine.manifest().bucket_for(req.ids.len()).unwrap();
+                    let key = BatchKey {
+                        kind: req.method.kind(req.diag),
+                        bucket,
+                        checkpoint: req.checkpoint.clone(),
+                    };
+                    channels.insert(req.id, ch);
+                    batcher.push(key, req);
+                }
+            }
+        }
+
+        // 2. emit ready batches to the pool
+        let now = Instant::now();
+        let batches: Vec<Batch> = if shutdown.load(Ordering::SeqCst) {
+            batcher.drain_all(now)
+        } else {
+            let mut v = vec![];
+            while let Some(b) = batcher.pop_ready(now) {
+                v.push(b);
+            }
+            v
+        };
+        for batch in batches {
+            metrics.batches.fetch_add(1, Ordering::Relaxed);
+            for req in batch.requests {
+                let ch = channels.remove(&req.id).unwrap();
+                let engine = Arc::clone(&engine);
+                let metrics = Arc::clone(&metrics);
+                let admission = Arc::clone(&admission);
+                let kv = Arc::clone(&kv);
+                let bucket = batch.key.bucket;
+                let kind = batch.key.kind;
+                pool.submit(move || {
+                    let out = execute_one(&engine, &kv, kind, bucket, &req);
+                    match &out {
+                        Ok(resp) => {
+                            metrics.completed.fetch_add(1, Ordering::Relaxed);
+                            metrics.tokens_in.fetch_add(req.ids.len() as u64, Ordering::Relaxed);
+                            metrics.queue.record(Duration::from_micros(resp.queue_us));
+                            metrics.exec.record(Duration::from_micros(resp.exec_us));
+                            metrics
+                                .ttft
+                                .record(Duration::from_micros(resp.queue_us + resp.exec_us));
+                            metrics.budget_sum_micro.fetch_add(
+                                (resp.budget_fraction as f64 * 1e6) as u64,
+                                Ordering::Relaxed,
+                            );
+                        }
+                        Err(e) => metrics.record_error(e.to_string()),
+                    }
+                    admission.release(bucket);
+                    let _ = ch.send(out);
+                });
+            }
+        }
+
+        if shutdown.load(Ordering::SeqCst) && batcher.pending() == 0 {
+            break;
+        }
+    }
+    pool.wait_idle();
+}
+
+fn execute_one(
+    engine: &Engine,
+    kv: &Mutex<KvCache>,
+    kind: &'static str,
+    bucket: usize,
+    req: &PrefillRequest,
+) -> Result<PrefillResponse> {
+    let queue_us = req.enqueued.elapsed().as_micros() as u64;
+    // KV pages for the prefilled sequence (released right after readback —
+    // this system serves prefill; decode would hold them).
+    {
+        let mut kv = kv.lock().unwrap();
+        kv.allocate(req.id, bucket)?;
+    }
+    let mut ids = req.ids.clone();
+    ids.resize(bucket, vocab::PAD);
+    let t0 = Instant::now();
+    let result = engine.prefill(&req.checkpoint, kind, bucket, &ids, &req.method.scalars());
+    let exec_us = t0.elapsed().as_micros() as u64;
+    {
+        let mut kv = kv.lock().unwrap();
+        let _ = kv.release(req.id);
+        let _ = kv.drop_seq(req.id);
+    }
+    let out = result?;
+    Ok(PrefillResponse {
+        id: req.id,
+        logits: out.logits,
+        vocab: out.vocab,
+        n_ctx: out.n_ctx,
+        n_input: req.ids.len(),
+        budget_fraction: out.budget_fraction,
+        hidden: out.hidden,
+        queue_us,
+        exec_us,
+    })
+}

@@ -1,0 +1,9 @@
+//! Evaluation harness: accuracy scoring + the drivers that regenerate
+//! every table and figure of the paper (experiment index in DESIGN.md §6).
+
+pub mod runner;
+pub mod scoring;
+pub mod tables;
+
+pub use runner::{EvalOutcome, Evaluator};
+pub use scoring::{score_sample, SampleScore};

@@ -1,0 +1,145 @@
+//! Generic evaluation runner: fan an eval set through the coordinator
+//! under a given method and aggregate scores. All table drivers build on
+//! this.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, Method};
+use crate::eval::scoring::{score_sample, Aggregate};
+use crate::model::manifest::ServingDefaults;
+use crate::workload::{load_eval_set, EvalSample};
+
+#[derive(Debug, Clone)]
+pub struct EvalOutcome {
+    /// (family, n_ctx) -> aggregate
+    pub cells: BTreeMap<(String, usize), Aggregate>,
+    pub method_label: String,
+}
+
+impl EvalOutcome {
+    pub fn family_avg(&self, family: &str) -> Aggregate {
+        let mut a = Aggregate::default();
+        for ((f, _), agg) in &self.cells {
+            if f == family {
+                a.merge(agg);
+            }
+        }
+        a
+    }
+
+    pub fn bucket_avg(&self, n_ctx: usize) -> Aggregate {
+        let mut a = Aggregate::default();
+        for ((_, n), agg) in &self.cells {
+            if *n == n_ctx {
+                a.merge(agg);
+            }
+        }
+        a
+    }
+
+    pub fn overall(&self) -> Aggregate {
+        let mut a = Aggregate::default();
+        for agg in self.cells.values() {
+            a.merge(agg);
+        }
+        a
+    }
+}
+
+pub struct Evaluator {
+    pub coordinator: Arc<Coordinator>,
+    /// limit samples per set (fast mode); 0 = all
+    pub limit: usize,
+}
+
+impl Evaluator {
+    /// Method instance for `name` at a bucket's serving defaults.
+    /// `uniform` and `tpd` are the Table-5 ablation arms (budget-matched).
+    pub fn method_for(name: &str, d: &ServingDefaults) -> Method {
+        match name {
+            "dense" => Method::Dense,
+            "stem" => Method::Stem {
+                k_start: d.k_start as f32,
+                mu: d.mu as f32,
+                beta: d.beta as f32,
+            },
+            "uniform" => Method::Stem {
+                k_start: d.k_uni_matched as f32,
+                mu: 1.0,
+                beta: 0.0,
+            },
+            "tpd" => Method::Stem {
+                k_start: d.k_start as f32,
+                mu: d.mu as f32,
+                beta: 0.0,
+            },
+            "streaming" => Method::Streaming {
+                sink: d.sink_blocks as i32,
+                local: d.local_blocks as i32,
+            },
+            "xattn" => Method::XAttn { tau: d.xattn_tau as f32 },
+            "minference" => Method::MInference {
+                vertical: d.minf_vertical as i32,
+                slash: d.minf_slash as i32,
+            },
+            "flexprefill" => Method::FlexPrefill {
+                gamma: d.flex_gamma as f32,
+                entropy: d.flex_entropy as f32,
+            },
+            other => panic!("unknown method name `{other}`"),
+        }
+    }
+
+    fn samples_for(&self, suite: &str, family: &str, n_ctx: usize) -> Result<Vec<EvalSample>> {
+        let man = self.coordinator.engine().manifest();
+        let info = man
+            .eval_sets
+            .iter()
+            .find(|e| e.suite == suite && e.family == family && e.n_ctx == n_ctx)
+            .ok_or_else(|| anyhow::anyhow!("no eval set {suite}/{family}/{n_ctx}"))?;
+        let mut samples = load_eval_set(&man.root.join(&info.file))?;
+        if self.limit > 0 {
+            samples.truncate(self.limit);
+        }
+        Ok(samples)
+    }
+
+    /// Evaluate `method_name` (or an explicit Method) over a suite grid.
+    pub fn run(
+        &self,
+        checkpoint: &str,
+        method_name: &str,
+        explicit: Option<Method>,
+        suite: &str,
+        families: &[&str],
+        buckets: &[usize],
+    ) -> Result<EvalOutcome> {
+        let man = self.coordinator.engine().manifest();
+        let mut cells = BTreeMap::new();
+        for &n_ctx in buckets {
+            let defaults = man.defaults_for(n_ctx)?.clone();
+            let method = explicit.unwrap_or_else(|| Self::method_for(method_name, &defaults));
+            for family in families {
+                let samples = self.samples_for(suite, family, n_ctx)?;
+                let mut agg = Aggregate::default();
+                // fan the whole set into the coordinator, then collect —
+                // this exercises batching rather than serializing requests
+                let rxs: Vec<_> = samples
+                    .iter()
+                    .map(|s| {
+                        self.coordinator.submit(checkpoint, method, s.ids.clone(), false)
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                for (rx, s) in rxs.into_iter().zip(&samples) {
+                    let resp = rx.recv()??;
+                    agg.add(score_sample(&resp, s));
+                }
+                cells.insert((family.to_string(), n_ctx), agg);
+            }
+        }
+        Ok(EvalOutcome { cells, method_label: method_name.to_string() })
+    }
+}

@@ -1,0 +1,137 @@
+//! Teacher-forced scoring (DESIGN.md §4: one prefill pass scores a
+//! sample — logits at position p-1 predict token p, so the answer span is
+//! judged by argmax exact match, the decode-free analogue of the greedy
+//! generation used by lm-evaluation-harness on these short-answer tasks).
+
+use crate::coordinator::PrefillResponse;
+use crate::workload::EvalSample;
+
+#[derive(Debug, Clone, Copy)]
+pub struct SampleScore {
+    /// every answer token predicted correctly
+    pub exact_match: bool,
+    /// fraction of answer tokens predicted correctly
+    pub token_acc: f64,
+    pub budget_fraction: f64,
+}
+
+pub fn score_sample(resp: &PrefillResponse, sample: &EvalSample) -> SampleScore {
+    let ans = sample.answer_tokens();
+    let mut correct = 0usize;
+    for (i, &tok) in ans.iter().enumerate() {
+        let pos = sample.answer_start + i - 1; // logits[p-1] predict p
+        if resp.argmax_at(pos) == tok {
+            correct += 1;
+        }
+    }
+    SampleScore {
+        exact_match: correct == ans.len(),
+        token_acc: correct as f64 / ans.len().max(1) as f64,
+        budget_fraction: resp.budget_fraction as f64,
+    }
+}
+
+/// Aggregate of many sample scores.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Aggregate {
+    pub n: usize,
+    pub em_sum: f64,
+    pub tok_sum: f64,
+    pub budget_sum: f64,
+}
+
+impl Aggregate {
+    pub fn add(&mut self, s: SampleScore) {
+        self.n += 1;
+        self.em_sum += s.exact_match as u8 as f64;
+        self.tok_sum += s.token_acc;
+        self.budget_sum += s.budget_fraction;
+    }
+
+    pub fn em(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            100.0 * self.em_sum / self.n as f64
+        }
+    }
+
+    pub fn token_acc(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            100.0 * self.tok_sum / self.n as f64
+        }
+    }
+
+    pub fn budget(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.budget_sum / self.n as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &Aggregate) {
+        self.n += other.n;
+        self.em_sum += other.em_sum;
+        self.tok_sum += other.tok_sum;
+        self.budget_sum += other.budget_sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(logits: Vec<f32>, vocab: usize) -> PrefillResponse {
+        let n = logits.len() / vocab;
+        PrefillResponse {
+            id: 0,
+            logits,
+            vocab,
+            n_ctx: n,
+            n_input: n,
+            budget_fraction: 0.5,
+            hidden: None,
+            queue_us: 0,
+            exec_us: 0,
+        }
+    }
+
+    #[test]
+    fn scores_exact_match() {
+        // vocab 4, seq: [_, _, answer=2, answer=3] starting at 2
+        // logits at pos1 must argmax 2; at pos2 must argmax 3
+        let mut logits = vec![0.0; 4 * 4];
+        logits[1 * 4 + 2] = 5.0;
+        logits[2 * 4 + 3] = 5.0;
+        let sample =
+            EvalSample { ids: vec![1, 0, 2, 3], answer_start: 2, answer_len: 2 };
+        let s = score_sample(&resp(logits, 4), &sample);
+        assert!(s.exact_match);
+        assert_eq!(s.token_acc, 1.0);
+    }
+
+    #[test]
+    fn partial_credit() {
+        let mut logits = vec![0.0; 4 * 4];
+        logits[1 * 4 + 2] = 5.0; // right
+        logits[2 * 4 + 1] = 5.0; // wrong (want 3)
+        let sample =
+            EvalSample { ids: vec![1, 0, 2, 3], answer_start: 2, answer_len: 2 };
+        let s = score_sample(&resp(logits, 4), &sample);
+        assert!(!s.exact_match);
+        assert_eq!(s.token_acc, 0.5);
+    }
+
+    #[test]
+    fn aggregate_math() {
+        let mut a = Aggregate::default();
+        a.add(SampleScore { exact_match: true, token_acc: 1.0, budget_fraction: 0.2 });
+        a.add(SampleScore { exact_match: false, token_acc: 0.5, budget_fraction: 0.4 });
+        assert_eq!(a.em(), 50.0);
+        assert_eq!(a.token_acc(), 75.0);
+        assert!((a.budget() - 0.3).abs() < 1e-12);
+    }
+}

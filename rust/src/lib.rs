@@ -1,0 +1,54 @@
+//! # Stem — causal-information-flow-aligned sparse attention, reproduced.
+//!
+//! Rust coordinator (L3) for the three-layer Stem reproduction:
+//!
+//! * **L1** — Pallas block-sparse / metric kernels (`python/compile/kernels`,
+//!   build-time, checked against pure-jnp oracles).
+//! * **L2** — JAX transformer with pluggable attention methods
+//!   (`python/compile/model.py`), lowered once to HLO text.
+//! * **L3** — this crate: PJRT runtime, serving coordinator (router,
+//!   dynamic batcher, paged KV pool, admission control), the pure-rust
+//!   reference implementation of the Stem pipeline, the analytic cost
+//!   model / H20 projection, and the eval harness that regenerates every
+//!   table and figure of the paper.
+//!
+//! Python never runs on the request path: `make artifacts` lowers every
+//! (method, bucket) prefill graph to `artifacts/modules/*.hlo.txt`, and the
+//! [`runtime::Engine`] compiles and executes them natively via PJRT-CPU.
+//!
+//! Entry points:
+//! * [`runtime::Engine`] — load artifacts, execute prefill graphs.
+//! * [`coordinator::Coordinator`] — the serving runtime.
+//! * [`sparse`] — pure-rust Stem (TPD schedule + OAM selection + block
+//!   sparse attention) used by tests, the simulator and the scheduler.
+//! * [`eval`] — accuracy harness + paper table/figure drivers.
+//! * [`sim`] — Eq. (2)/(4)/(8) cost model and H20 latency projection.
+
+pub mod coordinator;
+pub mod eval;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod sparse;
+pub mod util;
+pub mod workload;
+
+use std::path::PathBuf;
+
+/// Locate the artifacts directory: `$STEM_ARTIFACTS` or `./artifacts`
+/// relative to the current dir, walking up to the workspace root.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("STEM_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}

@@ -1,0 +1,319 @@
+//! `stem` — the leader binary: serving coordinator + experiment drivers.
+//!
+//! Subcommands (each regenerates one paper artifact; DESIGN.md §6):
+//!   serve      boot the coordinator and serve an open-loop trace
+//!   table1     SAM vs OAM sparse loss at depths (Table 1)
+//!   table2     LongBench proxy accuracy × method (Table 2)
+//!   table3     Stem on the training-based sparse checkpoint (Table 3)
+//!   table4     RULER proxy accuracy × length (Table 4)
+//!   table5     Uniform / +TPD / +OAM ablation (Table 5)
+//!   figure1    latency projection on H20 geometry (Figure 1, analytic)
+//!   figure3    positional-sensitivity diagnostic (Figure 3)
+//!   figure5    μ / β sweeps (Figure 5)
+//!   cost       cost-model report for arbitrary (N, k_start, μ)
+//!   selftest   load artifacts, compile one module, check goldens
+//!
+//! Common flags: --artifacts <dir>  --limit <n per eval set>  --workers <n>
+//!               --buckets 512,1024,2048  --quiet
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use stem::coordinator::{Coordinator, CoordinatorConfig, Method};
+use stem::eval::tables;
+use stem::eval::Evaluator;
+use stem::runtime::Engine;
+use stem::sim::{method_cost, MethodCost};
+use stem::sparse::schedule;
+use stem::util::cli::Args;
+use stem::util::rng::Rng;
+use stem::workload::{load_eval_set, poisson_trace};
+
+const USAGE: &str = "\
+stem — Stem sparse-attention serving system (paper reproduction)
+
+USAGE: stem <subcommand> [flags]
+
+  serve     [--requests N] [--rps R] [--method stem|dense|...] [--mix]
+  table1    [--limit N]
+  table2    [--limit N] [--buckets 512,1024,2048]
+  table3    [--limit N] [--buckets ...] [--native-k K]
+  table4    [--limit N] [--buckets ...]
+  table5    [--limit N] [--buckets ...]
+  figure1
+  figure3   [--limit N]
+  figure5   [--limit N] [--buckets ...]
+  cost      [--n N] [--k-start K] [--mu MU] [--block B]
+  selftest
+
+flags: --artifacts DIR  --workers N  --limit N  --quiet
+";
+
+fn main() {
+    let args = Args::from_env(true);
+    if args.flag("quiet") {
+        stem::util::set_log_level(1);
+    }
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn artifacts_from(args: &Args) -> PathBuf {
+    args.get("artifacts").map(PathBuf::from).unwrap_or_else(stem::artifacts_dir)
+}
+
+fn boot(args: &Args) -> Result<(Arc<Coordinator>, Evaluator)> {
+    let dir = artifacts_from(args);
+    let engine = Arc::new(Engine::new(&dir)?);
+    let mut cfg = CoordinatorConfig::default();
+    if let Some(w) = args.get("workers") {
+        cfg.workers = w.parse().map_err(|_| anyhow!("--workers must be an integer"))?;
+    }
+    let coordinator = Arc::new(Coordinator::new(engine, cfg));
+    let limit = args.usize_or("limit", 12);
+    Ok((Arc::clone(&coordinator), Evaluator { coordinator, limit }))
+}
+
+fn buckets_from(args: &Args, default: &[usize]) -> Vec<usize> {
+    match args.get("buckets") {
+        Some(v) => v.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
+        None => default.to_vec(),
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("serve") => serve(args),
+        Some("table1") => {
+            let (coord, _) = boot(args)?;
+            println!("{}", tables::table1(&coord, args.usize_or("limit", 8))?);
+            Ok(())
+        }
+        Some("table2") => {
+            let (_, ev) = boot(args)?;
+            let b = buckets_from(args, &[512, 1024, 2048]);
+            println!("{}", tables::table2(&ev, &b)?);
+            Ok(())
+        }
+        Some("table3") => {
+            let (_, ev) = boot(args)?;
+            let b = buckets_from(args, &[512, 1024, 2048]);
+            let native_k = args.f64_or("native-k", 6.0) as f32;
+            println!("{}", tables::table3(&ev, &b, native_k)?);
+            Ok(())
+        }
+        Some("table4") => {
+            let (_, ev) = boot(args)?;
+            let b = buckets_from(args, &[512, 1024, 2048]);
+            println!("{}", tables::table4(&ev, &b)?);
+            Ok(())
+        }
+        Some("table5") => {
+            let (_, ev) = boot(args)?;
+            let b = buckets_from(args, &[512, 1024, 2048]);
+            println!("{}", tables::table5(&ev, &b)?);
+            Ok(())
+        }
+        Some("figure1") => {
+            println!("{}", tables::figure1());
+            Ok(())
+        }
+        Some("figure3") => {
+            let (coord, _) = boot(args)?;
+            println!("{}", tables::figure3(&coord, args.usize_or("limit", 6))?);
+            Ok(())
+        }
+        Some("figure5") => {
+            let (_, ev) = boot(args)?;
+            let b = buckets_from(args, &[1024]);
+            println!("{}", tables::figure5(&ev, &b)?);
+            Ok(())
+        }
+        Some("cost") => cost_report(args),
+        Some("selftest") => selftest(args),
+        _ => {
+            eprint!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+/// `stem serve`: boot the full stack and push an open-loop Poisson trace
+/// through it, then print the serving report (the e2e driver behind
+/// examples/serve_longcontext.rs).
+fn serve(args: &Args) -> Result<()> {
+    let (coord, _) = boot(args)?;
+    let man = coord.engine().manifest().clone();
+    let n_requests = args.usize_or("requests", 64);
+    let rps = args.f64_or("rps", 8.0);
+    let method_name = args.str_or("method", "stem");
+    let mix = args.flag("mix");
+
+    // sample pool: every longbench eval set, mixed families and lengths
+    let mut pool = vec![];
+    for set in &man.eval_sets {
+        if set.suite == "longbench" {
+            pool.extend(load_eval_set(&man.root.join(&set.file))?);
+        }
+    }
+    if pool.is_empty() {
+        return Err(anyhow!("no eval sets in manifest — rerun `make artifacts`"));
+    }
+    pre_warm(&coord, &method_name)?;
+
+    let mut rng = Rng::new(args.u64_or("seed", 42));
+    let trace = poisson_trace(&mut rng, n_requests, rps, pool.len());
+    let start = Instant::now();
+    let mut rxs = vec![];
+    for item in &trace {
+        // open-loop: wait until the arrival offset
+        let now = start.elapsed();
+        if item.at > now {
+            std::thread::sleep(item.at - now);
+        }
+        let sample = &pool[item.sample];
+        let bucket = man
+            .bucket_for(sample.ids.len())
+            .ok_or_else(|| anyhow!("sample longer than every bucket"))?;
+        let defaults = man.defaults_for(bucket)?;
+        let method = if method_name == "dense" || (mix && item.sample % 2 == 1) {
+            Method::Dense
+        } else {
+            Evaluator::method_for(&method_name, defaults)
+        };
+        match coord.submit("base", method, sample.ids.clone(), false) {
+            Ok(rx) => rxs.push((rx, item.sample)),
+            Err(e) => eprintln!("[stem:serve] rejected: {e}"),
+        }
+    }
+    let mut ok = 0usize;
+    let mut em = 0usize;
+    for (rx, si) in rxs {
+        let resp = rx.recv().map_err(|_| anyhow!("response channel closed"))??;
+        let score = stem::eval::score_sample(&resp, &pool[si]);
+        ok += 1;
+        em += score.exact_match as usize;
+    }
+    let wall = start.elapsed();
+    println!("{}", coord.report());
+    println!(
+        "served {ok}/{n_requests} requests in {:.2}s ({:.1} req/s), exact-match {:.1}%",
+        wall.as_secs_f64(),
+        ok as f64 / wall.as_secs_f64(),
+        100.0 * em as f64 / ok.max(1) as f64
+    );
+    Ok(())
+}
+
+fn pre_warm(coord: &Arc<Coordinator>, method: &str) -> Result<()> {
+    let sparse_kind = match method {
+        "stem" => "prefill_stem",
+        "streaming" => "prefill_streaming",
+        "xattn" => "prefill_xattn",
+        "minference" => "prefill_minference",
+        "flexprefill" => "prefill_flexprefill",
+        _ => "prefill_stem",
+    };
+    let kinds: Vec<&str> =
+        if method == "dense" { vec!["prefill_dense"] } else { vec!["prefill_dense", sparse_kind] };
+    coord.engine().warmup(&kinds, &[512, 1024, 2048])
+}
+
+/// `stem cost`: print the Eq. (2)/(4)/(8) budget/FLOP breakdown for an
+/// arbitrary configuration (the planner behind examples/budget_planner.rs).
+fn cost_report(args: &Args) -> Result<()> {
+    let n = args.usize_or("n", 131072);
+    let block = args.usize_or("block", 128);
+    let nblk = (n / block).max(1);
+    let k_start = args.f64_or("k-start", 0.1 * nblk as f64);
+    let mu = args.f64_or("mu", 0.7);
+    let g = stem::sim::LLAMA31_8B;
+
+    let c_uni = schedule::cost_uniform(n, k_start * block as f64);
+    let c_dec = schedule::cost_decay(n, k_start * block as f64, mu);
+    let c_den = schedule::cost_dense(n);
+    println!("pair-count model (Eq. 2/4), N={n}, k_start={k_start:.1} blocks, mu={mu}");
+    println!("  dense pairs    {c_den:.3e}");
+    println!("  uniform pairs  {c_uni:.3e}  ({:.1}% of dense)", 100.0 * c_uni / c_den);
+    println!("  decay pairs    {c_dec:.3e}  ({:.1}% of dense)", 100.0 * c_dec / c_den);
+    println!("  decay savings vs uniform: {:.1}%", 100.0 * (1.0 - c_dec / c_uni));
+
+    for (name, m) in [
+        ("dense", MethodCost::Dense),
+        ("stem", MethodCost::Stem { k_start_blocks: k_start, mu }),
+    ] {
+        let c = method_cost(&g, n, m);
+        println!(
+            "  {name:>6}: attn {:.2e} FLOPs, metric {:.2e}, linear {:.2e}, budget {:.1}%",
+            c.attn_flops,
+            c.metric_flops,
+            c.linear_flops,
+            100.0 * c.budget_fraction
+        );
+    }
+    Ok(())
+}
+
+/// `stem selftest`: artifact sanity — manifest parses, weights load, one
+/// module compiles and reproduces the python golden logits.
+fn selftest(args: &Args) -> Result<()> {
+    use stem::util::json::Json;
+    let dir = artifacts_from(args);
+    let engine = Engine::new(&dir)?;
+    let man = engine.manifest();
+    println!("manifest: {} modules, {} eval sets", man.modules.len(), man.eval_sets.len());
+
+    // golden logits check (model_dense_512.json from aot.py)
+    let gpath = dir.join("golden/model_dense_512.json");
+    let text = std::fs::read_to_string(&gpath)?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("golden: {e}"))?;
+    let ids: Vec<i32> = j
+        .get("ids")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("golden ids"))?
+        .iter()
+        .map(|v| v.as_i64().unwrap_or(0) as i32)
+        .collect();
+    let argmax: Vec<i32> = j
+        .get("argmax")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("golden argmax"))?
+        .iter()
+        .map(|v| v.as_i64().unwrap_or(0) as i32)
+        .collect();
+    let out = engine.prefill("base", "prefill_dense", ids.len(), &ids, &[])?;
+    let mut mismatches = 0usize;
+    for (p, &want) in argmax.iter().enumerate() {
+        let row = &out.logits[p * out.vocab..(p + 1) * out.vocab];
+        let got = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap();
+        if got != want {
+            mismatches += 1;
+        }
+    }
+    let frac = mismatches as f64 / argmax.len() as f64;
+    println!(
+        "golden argmax agreement: {:.2}% ({} / {} mismatched)",
+        100.0 * (1.0 - frac),
+        mismatches,
+        argmax.len()
+    );
+    if frac > 0.02 {
+        return Err(anyhow!("selftest failed: rust-executed HLO disagrees with python logits"));
+    }
+    println!("selftest OK");
+    Ok(())
+}

@@ -1,0 +1,322 @@
+//! Artifact manifest: the contract between the python compile path and the
+//! rust request path. Parses `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) into typed structs.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub block: usize,
+    pub init_keep: usize,
+    pub local_keep: usize,
+    pub min_total: usize,
+    pub d_head: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ScalarSpec {
+    pub name: String,
+    pub is_f32: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModuleInfo {
+    pub name: String,
+    pub kind: String,
+    pub n_ctx: usize,
+    pub file: String,
+    pub scalars: Vec<ScalarSpec>,
+    pub outputs: Vec<String>,
+}
+
+impl ModuleInfo {
+    pub fn method(&self) -> &str {
+        self.kind
+            .strip_prefix("prefill_")
+            .or_else(|| self.kind.strip_prefix("diag_"))
+            .unwrap_or(&self.kind)
+    }
+
+    pub fn is_diag(&self) -> bool {
+        self.kind.starts_with("diag_")
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServingDefaults {
+    pub n_ctx: usize,
+    pub n_blocks: usize,
+    pub k_start: f64,
+    pub mu: f64,
+    pub beta: f64,
+    pub k_uni_matched: f64,
+    pub sink_blocks: i64,
+    pub local_blocks: i64,
+    pub xattn_tau: f64,
+    pub minf_vertical: i64,
+    pub minf_slash: i64,
+    pub flex_gamma: f64,
+    pub flex_entropy: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct EvalSetInfo {
+    pub family: String,
+    pub suite: String,
+    pub n_ctx: usize,
+    pub file: String,
+    pub count: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub model: ModelConfig,
+    pub param_spec: Vec<ParamSpec>,
+    pub weights: Vec<(String, String)>,
+    pub modules: Vec<ModuleInfo>,
+    pub eval_sets: Vec<EvalSetInfo>,
+    pub defaults: Vec<ServingDefaults>,
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key).and_then(Json::as_usize).ok_or_else(|| anyhow!("manifest: missing usize `{key}`"))
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64> {
+    j.get(key).and_then(Json::as_f64).ok_or_else(|| anyhow!("manifest: missing f64 `{key}`"))
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String> {
+    Ok(j.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("manifest: missing str `{key}`"))?
+        .to_string())
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+
+        let m = j.get("model").ok_or_else(|| anyhow!("manifest: missing model"))?;
+        let model = ModelConfig {
+            vocab_size: req_usize(m, "vocab_size")?,
+            d_model: req_usize(m, "d_model")?,
+            n_layers: req_usize(m, "n_layers")?,
+            n_heads: req_usize(m, "n_heads")?,
+            n_kv_heads: req_usize(m, "n_kv_heads")?,
+            d_ff: req_usize(m, "d_ff")?,
+            block: req_usize(m, "block")?,
+            init_keep: req_usize(m, "init_keep")?,
+            local_keep: req_usize(m, "local_keep")?,
+            min_total: req_usize(m, "min_total")?,
+            d_head: req_usize(&j, "d_head")?,
+        };
+
+        let param_spec = j
+            .get("param_spec")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: param_spec"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: req_str(p, "name")?,
+                    shape: p
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("param shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let weights = j
+            .get("weights")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest: weights"))?
+            .iter()
+            .map(|(k, v)| (k.clone(), v.as_str().unwrap_or_default().to_string()))
+            .collect();
+
+        let modules = j
+            .get("modules")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: modules"))?
+            .iter()
+            .map(|mo| {
+                Ok(ModuleInfo {
+                    name: req_str(mo, "name")?,
+                    kind: req_str(mo, "kind")?,
+                    n_ctx: req_usize(mo, "n_ctx")?,
+                    file: req_str(mo, "file")?,
+                    scalars: mo
+                        .get("scalars")
+                        .and_then(Json::as_arr)
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(|s| ScalarSpec {
+                            name: s.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                            is_f32: s.get("dtype").and_then(Json::as_str) == Some("f32"),
+                        })
+                        .collect(),
+                    outputs: mo
+                        .get("outputs")
+                        .and_then(Json::as_arr)
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|o| o.as_str().map(str::to_string))
+                        .collect(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let eval_sets = j
+            .get("eval_sets")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .map(|e| {
+                Ok(EvalSetInfo {
+                    family: req_str(e, "family")?,
+                    suite: req_str(e, "suite")?,
+                    n_ctx: req_usize(e, "n_ctx")?,
+                    file: req_str(e, "file")?,
+                    count: req_usize(e, "count")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut defaults = vec![];
+        if let Some(obj) = j.get("serving_defaults").and_then(Json::as_obj) {
+            for (_, d) in obj {
+                defaults.push(ServingDefaults {
+                    n_ctx: req_usize(d, "n_ctx")?,
+                    n_blocks: req_usize(d, "n_blocks")?,
+                    k_start: req_f64(d, "k_start")?,
+                    mu: req_f64(d, "mu")?,
+                    beta: req_f64(d, "beta")?,
+                    k_uni_matched: req_f64(d, "k_uni_matched")?,
+                    sink_blocks: d.path("streaming.sink_blocks").and_then(Json::as_i64).unwrap_or(1),
+                    local_blocks: d.path("streaming.local_blocks").and_then(Json::as_i64).unwrap_or(3),
+                    xattn_tau: d.path("xattn.tau").and_then(Json::as_f64).unwrap_or(0.9),
+                    minf_vertical: d.path("minference.n_vertical").and_then(Json::as_i64).unwrap_or(2),
+                    minf_slash: d.path("minference.n_slash").and_then(Json::as_i64).unwrap_or(2),
+                    flex_gamma: d.path("flexprefill.gamma").and_then(Json::as_f64).unwrap_or(0.9),
+                    flex_entropy: d
+                        .path("flexprefill.entropy_thresh")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(0.35),
+                });
+            }
+        }
+        defaults.sort_by_key(|d| d.n_ctx);
+
+        Ok(Manifest {
+            root: artifacts_dir.to_path_buf(),
+            model,
+            param_spec,
+            weights,
+            modules,
+            eval_sets,
+            defaults,
+        })
+    }
+
+    pub fn module(&self, kind: &str, n_ctx: usize) -> Result<&ModuleInfo> {
+        self.modules
+            .iter()
+            .find(|m| m.kind == kind && m.n_ctx == n_ctx)
+            .ok_or_else(|| anyhow!("no module {kind}@{n_ctx} in manifest"))
+    }
+
+    /// Smallest bucket whose n_ctx >= the request length.
+    pub fn bucket_for(&self, n_tokens: usize) -> Option<usize> {
+        let mut buckets: Vec<usize> =
+            self.modules.iter().filter(|m| !m.is_diag()).map(|m| m.n_ctx).collect();
+        buckets.sort();
+        buckets.dedup();
+        buckets.into_iter().find(|&b| b >= n_tokens)
+    }
+
+    pub fn defaults_for(&self, n_ctx: usize) -> Result<&ServingDefaults> {
+        self.defaults
+            .iter()
+            .find(|d| d.n_ctx == n_ctx)
+            .ok_or_else(|| anyhow!("no serving defaults for n_ctx={n_ctx}"))
+    }
+
+    pub fn weights_path(&self, name: &str) -> Result<PathBuf> {
+        let f = self
+            .weights
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.clone())
+            .ok_or_else(|| anyhow!("no weights `{name}`"))?;
+        Ok(self.root.join(f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        // synthetic manifest check happens in integration tests with real
+        // artifacts; here just the bucket logic on a hand-built manifest.
+        let mk = |n| ModuleInfo {
+            name: format!("prefill_stem_{n}"),
+            kind: "prefill_stem".into(),
+            n_ctx: n,
+            file: String::new(),
+            scalars: vec![],
+            outputs: vec![],
+        };
+        let man = Manifest {
+            root: PathBuf::new(),
+            model: ModelConfig {
+                vocab_size: 96,
+                d_model: 256,
+                n_layers: 8,
+                n_heads: 8,
+                n_kv_heads: 4,
+                d_ff: 512,
+                block: 64,
+                init_keep: 1,
+                local_keep: 2,
+                min_total: 3,
+                d_head: 32,
+            },
+            param_spec: vec![],
+            weights: vec![],
+            modules: vec![mk(512), mk(1024), mk(2048)],
+            eval_sets: vec![],
+            defaults: vec![],
+        };
+        assert_eq!(man.bucket_for(100), Some(512));
+        assert_eq!(man.bucket_for(512), Some(512));
+        assert_eq!(man.bucket_for(513), Some(1024));
+        assert_eq!(man.bucket_for(4096), None);
+    }
+}

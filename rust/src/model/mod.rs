@@ -1,0 +1,6 @@
+//! Model metadata: manifest parsing and the token vocabulary mirror.
+
+pub mod manifest;
+pub mod vocab;
+
+pub use manifest::{Manifest, ModelConfig, ModuleInfo, ServingDefaults};

@@ -1,0 +1,47 @@
+//! Token vocabulary mirror of `python/compile/tasks.py` (display +
+//! workload synthesis on the serving path).
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const SEP: i32 = 2;
+pub const QUERY: i32 = 3;
+pub const AMARK: i32 = 4;
+pub const DOC: i32 = 5;
+pub const KEY: i32 = 6;
+pub const IS: i32 = 7;
+pub const TAG: i32 = 8;
+pub const FN: i32 = 9;
+pub const REF: i32 = 10;
+pub const END: i32 = 11;
+pub const WORD0: i32 = 16;
+pub const VOCAB_SIZE: usize = 96;
+
+pub fn detok(ids: &[i32]) -> String {
+    ids.iter()
+        .map(|&t| match t {
+            PAD => "<pad>".to_string(),
+            BOS => "<bos>".to_string(),
+            SEP => ";".to_string(),
+            QUERY => "<q>".to_string(),
+            AMARK => "=>".to_string(),
+            DOC => "<doc>".to_string(),
+            KEY => "<key>".to_string(),
+            IS => "<is>".to_string(),
+            TAG => "<tag>".to_string(),
+            FN => "<fn>".to_string(),
+            REF => "<ref>".to_string(),
+            END => "<end>".to_string(),
+            t if t >= WORD0 => format!("w{}", t - WORD0),
+            t => format!("?{t}"),
+        })
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn detok_words() {
+        assert_eq!(super::detok(&[1, 16, 4, 17]), "<bos> w0 => w1");
+    }
+}

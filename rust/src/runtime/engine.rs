@@ -1,0 +1,252 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them on the
+//! CPU PJRT client, pins the model weights on-device ONCE, and exposes a
+//! typed `prefill` entry point to the coordinator.
+//!
+//! Pattern follows /opt/xla-example/load_hlo.rs: HLO *text* interchange
+//! (xla_extension 0.5.1 rejects jax>=0.5 serialized protos), tupled
+//! outputs, `to_literal_sync` readback.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::manifest::{Manifest, ModuleInfo};
+use crate::runtime::weights::WeightsFile;
+
+/// A scalar hyper-parameter fed to a module at execute time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScalarValue {
+    F32(f32),
+    I32(i32),
+}
+
+/// Outputs of one prefill execution.
+#[derive(Debug)]
+pub struct PrefillOutput {
+    /// [n_ctx * vocab] row-major logits.
+    pub logits: Vec<f32>,
+    pub n_ctx: usize,
+    pub vocab: usize,
+    /// Mean per-layer budget fraction reported by the graph itself.
+    pub budget_fraction: f32,
+    /// `[n_layers * n_ctx * d_model]` hidden states (diag modules only).
+    pub hidden: Option<Vec<f32>>,
+}
+
+struct LoadedModule {
+    info: ModuleInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// SAFETY: same argument as Engine below — PJRT executables are internally
+// synchronized; the wrapper is only !Send/!Sync because of raw pointers.
+unsafe impl Send for LoadedModule {}
+unsafe impl Sync for LoadedModule {}
+
+/// The engine owns the PJRT client, the compiled executables and the
+/// on-device weight buffers for each checkpoint.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// Lock covers the *map* only; executions clone the Arc and run
+    /// outside it so concurrent prefills never serialize on compile-cache
+    /// lookups (PJRT itself handles concurrent execute).
+    modules: Mutex<HashMap<String, std::sync::Arc<LoadedModule>>>,
+    /// checkpoint name -> device-resident parameter buffers (manifest
+    /// param_spec order). Uploaded once; shared by every execution.
+    weights: HashMap<String, Vec<xla::PjRtBuffer>>,
+    /// Host literals backing the device buffers. `buffer_from_host_literal`
+    /// copies ASYNCHRONOUSLY on the TFRT CPU client: dropping the literal
+    /// before the copy lands is a use-after-free (manifests as
+    /// `literal.size_bytes() == b->size()` check failures). Kept alive for
+    /// the engine's lifetime.
+    _weight_literals: Vec<xla::Literal>,
+}
+
+// SAFETY: the PJRT CPU client is thread-safe (it is the same client JAX
+// drives from many python threads); the xla crate types are only !Send
+// because they hold raw pointers. Executions from multiple coordinator
+// workers are serialized per-module by the `modules` mutex held only for
+// lookup; PJRT itself synchronizes execute calls.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Create the engine: PJRT CPU client + weight upload (no module
+    /// compilation yet — that happens lazily per (kind, bucket)).
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        crate::info!(
+            "engine: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        let mut weights = HashMap::new();
+        let mut weight_literals = vec![];
+        for (name, _) in manifest.weights.clone() {
+            let path = manifest.weights_path(&name)?;
+            let wf = WeightsFile::load(&path)?;
+            let mut bufs = Vec::with_capacity(manifest.param_spec.len());
+            for spec in &manifest.param_spec {
+                let t = wf
+                    .get(&spec.name)
+                    .ok_or_else(|| anyhow!("weights {name}: missing {}", spec.name))?;
+                if t.shape != spec.shape {
+                    bail!("weights {name}: {} shape {:?} != {:?}", spec.name, t.shape, spec.shape);
+                }
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape {}: {e:?}", spec.name))?;
+                let buf = client
+                    .buffer_from_host_literal(None, &lit)
+                    .map_err(|e| anyhow!("upload {}: {e:?}", spec.name))?;
+                bufs.push(buf);
+                weight_literals.push(lit); // keep alive: async host->device copy
+            }
+            crate::info!("engine: uploaded checkpoint `{name}` ({} tensors)", bufs.len());
+            weights.insert(name, bufs);
+        }
+        Ok(Engine {
+            client,
+            manifest,
+            modules: Mutex::new(HashMap::new()),
+            weights,
+            _weight_literals: weight_literals,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn checkpoints(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.weights.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Compile (or fetch) the executable for `kind` at bucket `n_ctx`.
+    pub fn ensure_module(&self, kind: &str, n_ctx: usize) -> Result<String> {
+        self.module_handle(kind, n_ctx).map(|m| m.info.name.clone())
+    }
+
+    fn module_handle(&self, kind: &str, n_ctx: usize) -> Result<std::sync::Arc<LoadedModule>> {
+        let info = self.manifest.module(kind, n_ctx)?.clone();
+        let mut mods = self.modules.lock().unwrap();
+        if let Some(m) = mods.get(&info.name) {
+            return Ok(std::sync::Arc::clone(m));
+        }
+        let path = self.manifest.root.join(&info.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))
+            .with_context(|| "HLO text parse failed")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe =
+            self.client.compile(&comp).map_err(|e| anyhow!("compiling {}: {e:?}", info.name))?;
+        crate::info!("engine: compiled {} in {:.2}s", info.name, t0.elapsed().as_secs_f32());
+        let m = std::sync::Arc::new(LoadedModule { info: info.clone(), exe });
+        mods.insert(info.name.clone(), std::sync::Arc::clone(&m));
+        Ok(m)
+    }
+
+    /// Execute a prefill/diag module.
+    ///
+    /// `ids` must be exactly the module's n_ctx long (the coordinator pads
+    /// with PAD tokens); `scalars` must match the module's scalar specs.
+    pub fn prefill(
+        &self,
+        checkpoint: &str,
+        kind: &str,
+        n_ctx: usize,
+        ids: &[i32],
+        scalars: &[ScalarValue],
+    ) -> Result<PrefillOutput> {
+        let module = self.module_handle(kind, n_ctx)?;
+        let name = &module.info.name;
+        if ids.len() != module.info.n_ctx {
+            bail!("ids len {} != module n_ctx {}", ids.len(), module.info.n_ctx);
+        }
+        if scalars.len() != module.info.scalars.len() {
+            bail!(
+                "module {} expects {} scalars ({:?}), got {}",
+                name,
+                module.info.scalars.len(),
+                module.info.scalars.iter().map(|s| s.name.clone()).collect::<Vec<_>>(),
+                scalars.len()
+            );
+        }
+        let params = self
+            .weights
+            .get(checkpoint)
+            .ok_or_else(|| anyhow!("unknown checkpoint `{checkpoint}`"))?;
+
+        // assemble input buffers: params (device-resident) + ids + scalars
+        let ids_lit = xla::Literal::vec1(ids);
+        let ids_buf = self
+            .client
+            .buffer_from_host_literal(None, &ids_lit)
+            .map_err(|e| anyhow!("upload ids: {e:?}"))?;
+        let mut scalar_bufs = Vec::with_capacity(scalars.len());
+        // literals must outlive the (async) host->device copies — dropped
+        // only after execution completes below. See the `_weight_literals`
+        // note on Engine.
+        let mut scalar_lits = Vec::with_capacity(scalars.len());
+        for (spec, val) in module.info.scalars.iter().zip(scalars) {
+            let lit = match (spec.is_f32, val) {
+                (true, ScalarValue::F32(f)) => xla::Literal::vec1(&[*f]),
+                (false, ScalarValue::I32(i)) => xla::Literal::vec1(&[*i]),
+                (true, ScalarValue::I32(i)) => xla::Literal::vec1(&[*i as f32]),
+                (false, ScalarValue::F32(f)) => xla::Literal::vec1(&[*f as i32]),
+            };
+            scalar_bufs.push(
+                self.client
+                    .buffer_from_host_literal(None, &lit)
+                    .map_err(|e| anyhow!("upload scalar {}: {e:?}", spec.name))?,
+            );
+            scalar_lits.push(lit);
+        }
+        let mut args: Vec<&xla::PjRtBuffer> = params.iter().collect();
+        args.push(&ids_buf);
+        args.extend(scalar_bufs.iter());
+
+        let result = module.exe.execute_b(&args).map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("readback {name}: {e:?}"))?;
+        let mut parts = lit.to_tuple().map_err(|e| anyhow!("tuple {name}: {e:?}"))?;
+        let expected = module.info.outputs.len();
+        if parts.len() != expected {
+            bail!("{name}: {} outputs != manifest {expected}", parts.len());
+        }
+        let hidden = if module.info.is_diag() {
+            let h = parts.pop().unwrap();
+            Some(h.to_vec::<f32>().map_err(|e| anyhow!("hidden: {e:?}"))?)
+        } else {
+            None
+        };
+        let budget = parts.pop().unwrap();
+        let budget_fraction =
+            budget.to_vec::<f32>().map_err(|e| anyhow!("budget: {e:?}"))?[0];
+        let logits_lit = parts.pop().unwrap();
+        let logits = logits_lit.to_vec::<f32>().map_err(|e| anyhow!("logits: {e:?}"))?;
+        let vocab = self.manifest.model.vocab_size;
+        Ok(PrefillOutput { logits, n_ctx: module.info.n_ctx, vocab, budget_fraction, hidden })
+    }
+
+    /// Warm every (kind, bucket) pair so serving never compiles inline.
+    pub fn warmup(&self, kinds: &[&str], buckets: &[usize]) -> Result<()> {
+        for kind in kinds {
+            for &b in buckets {
+                if self.manifest.module(kind, b).is_ok() {
+                    self.ensure_module(kind, b)?;
+                }
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,7 @@
+//! L3 ⇄ XLA bridge: PJRT engine, weights loader.
+
+pub mod engine;
+pub mod weights;
+
+pub use engine::{Engine, PrefillOutput, ScalarValue};
+pub use weights::WeightsFile;

@@ -1,0 +1,150 @@
+//! Loader for the `.stw` ("stem weights") tensor file emitted by
+//! `python/compile/aot.py`:
+//!
+//!   magic "STEMWTS0" | u32 LE header-len | JSON header | raw LE tensors
+//!
+//! Header entries: {name, dtype, shape, offset, nbytes}; offsets are
+//! relative to the end of the header and 16-byte aligned.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct TensorEntry {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorEntry {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+pub struct WeightsFile {
+    pub tensors: Vec<TensorEntry>,
+}
+
+impl WeightsFile {
+    pub fn load(path: &Path) -> Result<WeightsFile> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading weights {}", path.display()))?;
+        if bytes.len() < 12 || &bytes[..8] != b"STEMWTS0" {
+            bail!("{}: not a .stw file", path.display());
+        }
+        let hlen = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let header_end = 12 + hlen;
+        if bytes.len() < header_end {
+            bail!("truncated .stw header");
+        }
+        let header = std::str::from_utf8(&bytes[12..header_end])
+            .map_err(|_| anyhow!("non-utf8 .stw header"))?;
+        let j = Json::parse(header).map_err(|e| anyhow!("stw header json: {e}"))?;
+        let body = &bytes[header_end..];
+
+        let mut tensors = vec![];
+        for entry in j.as_arr().ok_or_else(|| anyhow!("stw header not an array"))? {
+            let name = entry
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("stw entry missing name"))?
+                .to_string();
+            let dtype = entry
+                .get("dtype")
+                .and_then(Json::as_str)
+                .unwrap_or("float32")
+                .to_string();
+            let shape: Vec<usize> = entry
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("stw entry missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect();
+            let offset = entry.get("offset").and_then(Json::as_usize).unwrap_or(0);
+            let nbytes = entry.get("nbytes").and_then(Json::as_usize).unwrap_or(0);
+            if dtype != "float32" {
+                bail!("tensor {name}: unsupported dtype {dtype}");
+            }
+            if offset + nbytes > body.len() {
+                bail!("tensor {name}: out-of-range slice");
+            }
+            let raw = &body[offset..offset + nbytes];
+            let mut data = vec![0f32; nbytes / 4];
+            for (i, ch) in raw.chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes(ch.try_into().unwrap());
+            }
+            let expect: usize = shape.iter().product();
+            if data.len() != expect {
+                bail!("tensor {name}: {} elems != shape {:?}", data.len(), shape);
+            }
+            tensors.push(TensorEntry { name, dtype, shape, data });
+        }
+        Ok(WeightsFile { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&TensorEntry> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(TensorEntry::element_count).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_stw(path: &Path, tensors: &[(&str, Vec<usize>, Vec<f32>)]) {
+        let mut header = vec![];
+        let mut body: Vec<u8> = vec![];
+        for (name, shape, data) in tensors {
+            let pad = (16 - body.len() % 16) % 16;
+            body.extend(std::iter::repeat(0u8).take(pad));
+            let offset = body.len();
+            for v in data {
+                body.extend(v.to_le_bytes());
+            }
+            header.push(format!(
+                r#"{{"name":"{name}","dtype":"float32","shape":[{}],"offset":{offset},"nbytes":{}}}"#,
+                shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(","),
+                data.len() * 4
+            ));
+        }
+        let hjson = format!("[{}]", header.join(","));
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(b"STEMWTS0").unwrap();
+        f.write_all(&(hjson.len() as u32).to_le_bytes()).unwrap();
+        f.write_all(hjson.as_bytes()).unwrap();
+        f.write_all(&body).unwrap();
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("stem_stw_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.stw");
+        write_stw(&p, &[("a", vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]), ("b", vec![3], vec![5.0, 6.0, 7.0])]);
+        let w = WeightsFile::load(&p).unwrap();
+        assert_eq!(w.tensors.len(), 2);
+        assert_eq!(w.get("a").unwrap().data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(w.get("b").unwrap().shape, vec![3]);
+        assert_eq!(w.total_params(), 7);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("stem_stw_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.stw");
+        std::fs::write(&p, b"NOTMAGIC....").unwrap();
+        assert!(WeightsFile::load(&p).is_err());
+    }
+}

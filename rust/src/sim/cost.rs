@@ -1,0 +1,138 @@
+//! FLOP-level cost accounting for each attention method (per layer, per
+//! head-set) on a given model geometry.
+
+use crate::sparse::schedule::{self, TpdConfig};
+
+/// Model geometry the cost model needs.
+#[derive(Debug, Clone, Copy)]
+pub struct Geometry {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub block: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MethodCost {
+    Dense,
+    /// Stem TPD+OAM with runtime schedule.
+    Stem { k_start_blocks: f64, mu: f64 },
+    /// Uniform top-k (SAM baselines, MInference/XAttention effective
+    /// budgets enter through `budget_fraction`).
+    UniformBudget { budget_fraction: f64, metric_overhead: f64 },
+    Streaming { sink_blocks: f64, local_blocks: f64 },
+}
+
+/// Per-prefill cost breakdown in FLOPs (attention path only vs whole model).
+#[derive(Debug, Clone, Copy)]
+pub struct CostBreakdown {
+    pub attn_flops: f64,
+    pub metric_flops: f64,
+    pub linear_flops: f64,
+    pub total_flops: f64,
+    /// fraction of causal pairs computed (the paper's BUD column)
+    pub budget_fraction: f64,
+}
+
+/// FLOPs of non-attention linear layers for a length-N prefill.
+pub fn linear_flops(g: &Geometry, n: usize) -> f64 {
+    let nf = n as f64;
+    let d = g.d_model as f64;
+    let ff = g.d_ff as f64;
+    // qkvo projections + SwiGLU (3 mats) per layer, 2 flops per MAC
+    let per_layer = 2.0 * nf * d * (2.0 * d + 2.0 * d) + 2.0 * nf * d * ff * 3.0;
+    per_layer * g.n_layers as f64
+}
+
+/// Attention pair-cost → FLOPs: each computed (query, key) pair costs
+/// ~4·dh FLOPs (QK^T and PV, 2 flops/MAC each) per head.
+fn pairs_to_flops(g: &Geometry, pairs: f64) -> f64 {
+    pairs * 4.0 * g.d_head as f64 * g.n_heads as f64 * g.n_layers as f64
+}
+
+pub fn method_cost(g: &Geometry, n: usize, m: MethodCost) -> CostBreakdown {
+    let nblk = (n / g.block).max(1);
+    let dense_pairs = schedule::cost_dense(n);
+    let (pairs, metric_flops) = match m {
+        MethodCost::Dense => (dense_pairs, 0.0),
+        MethodCost::Stem { k_start_blocks, mu } => {
+            let cfg = TpdConfig { k_start: k_start_blocks, mu, ..Default::default() };
+            let kavg_blocks = schedule::k_avg_blocks(nblk, &cfg);
+            let pairs = kavg_blocks * g.block as f64 * n as f64;
+            // metric: anti-diagonal sampling (B/stride rows per block pair)
+            // + value pooling, per head per layer
+            let stride = 16.0;
+            let routing = (nblk * nblk) as f64 / 2.0 * (g.block as f64 / stride)
+                * 2.0
+                * g.d_head as f64;
+            let pooling = n as f64 * 2.0 * g.d_head as f64;
+            let metric =
+                (routing + pooling) * g.n_heads as f64 * g.n_layers as f64;
+            (pairs.min(dense_pairs), metric)
+        }
+        MethodCost::UniformBudget { budget_fraction, metric_overhead } => {
+            (dense_pairs * budget_fraction, metric_overhead)
+        }
+        MethodCost::Streaming { sink_blocks, local_blocks } => {
+            let per_row = ((sink_blocks + local_blocks) * g.block as f64).min(n as f64);
+            (per_row * n as f64, 0.0)
+        }
+    };
+    let attn = pairs_to_flops(g, pairs);
+    let linear = linear_flops(g, n);
+    CostBreakdown {
+        attn_flops: attn,
+        metric_flops,
+        linear_flops: linear,
+        total_flops: attn + metric_flops + linear,
+        budget_fraction: pairs / dense_pairs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom() -> Geometry {
+        Geometry { n_layers: 32, n_heads: 32, d_head: 128, d_model: 4096, d_ff: 14336, block: 128 }
+    }
+
+    #[test]
+    fn dense_attention_dominates_at_long_context() {
+        let g = geom();
+        let c = method_cost(&g, 131072, MethodCost::Dense);
+        assert!(c.attn_flops > c.linear_flops, "attention must dominate at 128K");
+        let c16 = method_cost(&g, 16384, MethodCost::Dense);
+        assert!(c16.attn_flops < c16.linear_flops * 2.0);
+    }
+
+    #[test]
+    fn stem_cuts_attention_cost() {
+        let g = geom();
+        let dense = method_cost(&g, 131072, MethodCost::Dense);
+        let stem = method_cost(&g, 131072, MethodCost::Stem { k_start_blocks: 102.4, mu: 0.7 });
+        assert!(stem.budget_fraction < 0.3, "bud {}", stem.budget_fraction);
+        assert!(stem.total_flops < 0.5 * dense.total_flops);
+        assert!(stem.metric_flops < 0.1 * stem.attn_flops, "metric must be negligible");
+    }
+
+    #[test]
+    fn streaming_is_linear() {
+        let g = geom();
+        let c1 = method_cost(&g, 32768, MethodCost::Streaming { sink_blocks: 4.0, local_blocks: 8.0 });
+        let c2 = method_cost(&g, 65536, MethodCost::Streaming { sink_blocks: 4.0, local_blocks: 8.0 });
+        let r = c2.attn_flops / c1.attn_flops;
+        assert!((r - 2.0).abs() < 0.05, "ratio {r}");
+    }
+
+    #[test]
+    fn budget_fraction_sane() {
+        let g = geom();
+        for &n in &[16384usize, 65536, 131072] {
+            let c = method_cost(&g, n, MethodCost::Stem { k_start_blocks: 0.2 * (n / 128) as f64, mu: 0.7 });
+            assert!(c.budget_fraction > 0.0 && c.budget_fraction <= 1.0);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Analytic cost model + hardware projection.
+//!
+//! Two uses (DESIGN.md §4, experiment F1):
+//!   * `cost` — FLOP/byte accounting of every method at any (N, model),
+//!     from the paper's Eq. (2)/(4)/(8); drives the scheduler's estimates
+//!     and the Figure-1 extrapolation beyond what this CPU can run.
+//!   * `h20` — projection of those counts onto the paper's H20 testbed
+//!     (and Llama-3.1-8B geometry), calibrated so the *ratios* — who wins,
+//!     by how much, where crossovers sit — can be compared to Figure 1.
+
+pub mod cost;
+pub mod h20;
+
+pub use cost::{method_cost, CostBreakdown, MethodCost};
+pub use h20::{project_figure1, H20Model, LLAMA31_8B};

@@ -1,0 +1,364 @@
+//! Pure-rust reference implementation of the Stem attention pipeline:
+//! pooling, the Output-Aware Metric, selection and block-sparse attention.
+//!
+//! Role (DESIGN.md §7): (a) golden cross-check against the python oracles,
+//! (b) the compute model behind the simulator and the scheduler's cost
+//! estimates, (c) the subject of the L3 property tests. The request path
+//! runs the XLA-compiled artifacts, not this.
+
+use super::schedule::TpdConfig;
+use super::tensor::{axpy, dot, norm2, Tensor};
+
+pub const NEG_INF: f32 = -1e30;
+
+/// Dual-diagonal block routing scores (mirror of
+/// ref.pool_antidiag_scores): anti-diagonal samples cover odd within-block
+/// relative offsets, diagonal samples cover the even band (pure
+/// anti-diagonal is blind to copy/induction edges at exact block
+/// multiples). q: [H, N, dh], k: [Hk, N, dh] -> [H, nq, nk] row-major.
+pub fn antidiag_scores(q: &Tensor, k: &Tensor, block: usize, stride: usize) -> Tensor {
+    let (h, n, dh) = (q.shape[0], q.shape[1], q.shape[2]);
+    let hk = k.shape[0];
+    let rep = h / hk;
+    let nblk = n / block;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = Tensor::zeros(&[h, nblk, nblk]);
+    for hh in 0..h {
+        let hkv = hh / rep;
+        for i in 0..nblk {
+            for j in 0..nblk {
+                let mut s = 0.0f32;
+                let mut t = 0;
+                while t < block {
+                    let qrow = q.row3(hh, i * block + t);
+                    s += dot(qrow, k.row3(hkv, j * block + (block - 1 - t)));
+                    s += dot(qrow, k.row3(hkv, j * block + t));
+                    t += stride;
+                }
+                out.set3(hh, i, j, s * scale);
+            }
+        }
+    }
+    out
+}
+
+/// Block max-pooled log||V|| (mirror of ref.value_block_logmag).
+/// v: [Hk, N, dh] -> [Hk, nblk].
+pub fn value_block_logmag(v: &Tensor, block: usize) -> Tensor {
+    let (hk, n, _) = (v.shape[0], v.shape[1], v.shape[2]);
+    let nblk = n / block;
+    let mut out = Tensor::zeros(&[hk, nblk, 1]);
+    for h in 0..hk {
+        for b in 0..nblk {
+            let mut m = f32::MIN;
+            for t in 0..block {
+                m = m.max((norm2(v.row3(h, b * block + t)) + 1e-12).ln());
+            }
+            out.set3(h, b, 0, m);
+        }
+    }
+    out
+}
+
+/// Output-Aware Metric Eq. (7): routing + beta * max(0, logmag), causal.
+pub fn oam_scores(q: &Tensor, k: &Tensor, v: &Tensor, block: usize, stride: usize, beta: f32) -> Tensor {
+    let mut scores = antidiag_scores(q, k, block, stride);
+    let mv = value_block_logmag(v, block);
+    let (h, nblk) = (scores.shape[0], scores.shape[1]);
+    let rep = h / mv.shape[0];
+    for hh in 0..h {
+        for i in 0..nblk {
+            for j in 0..nblk {
+                let s = if j <= i {
+                    scores.at3(hh, i, j) + beta * mv.at3(hh / rep, j, 0).max(0.0)
+                } else {
+                    NEG_INF
+                };
+                scores.set3(hh, i, j, s);
+            }
+        }
+    }
+    scores
+}
+
+/// A block selection in the uniform kernel interface.
+#[derive(Debug, Clone)]
+pub struct Selection {
+    pub nblk: usize,
+    /// [H][nq] -> selected block ids (first `counts` entries valid).
+    pub indices: Vec<Vec<Vec<u32>>>,
+    pub counts: Vec<Vec<u32>>,
+}
+
+impl Selection {
+    pub fn budget_fraction(&self) -> f64 {
+        let nblk = self.nblk as f64;
+        let total = self.counts.len() as f64 * nblk * (nblk + 1.0) / 2.0;
+        let used: u64 = self.counts.iter().flatten().map(|&c| c as u64).sum();
+        used as f64 / total
+    }
+
+    /// Validate the kernel-interface invariants (tests + debug builds).
+    pub fn validate(&self) -> Result<(), String> {
+        for (h, rows) in self.indices.iter().enumerate() {
+            for (i, row) in rows.iter().enumerate() {
+                let c = self.counts[h][i] as usize;
+                if c == 0 || c > i + 1 {
+                    return Err(format!("h{h} row{i}: count {c} out of range"));
+                }
+                let mut seen = vec![false; self.nblk];
+                for &b in &row[..c] {
+                    if b as usize > i {
+                        return Err(format!("h{h} row{i}: non-causal block {b}"));
+                    }
+                    if seen[b as usize] {
+                        return Err(format!("h{h} row{i}: duplicate block {b}"));
+                    }
+                    seen[b as usize] = true;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Stem selection: OAM ranking + TPD budget (mirror of select_stem).
+pub fn select_stem(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    block: usize,
+    stride: usize,
+    cfg: &TpdConfig,
+    beta: f32,
+) -> Selection {
+    let scores = oam_scores(q, k, v, block, stride, beta);
+    let (h, nblk) = (scores.shape[0], scores.shape[1]);
+    let kvec = super::schedule::block_budget_schedule(nblk, cfg);
+    let mut indices = vec![vec![Vec::with_capacity(nblk); nblk]; h];
+    let mut counts = vec![vec![0u32; nblk]; h];
+    for hh in 0..h {
+        for i in 0..nblk {
+            // forced: sinks + local window
+            let mut key: Vec<(f32, u32)> = (0..=i)
+                .map(|j| {
+                    let forced = j < cfg.init_keep || j + cfg.local_keep > i;
+                    let bias = if forced { 1e9 } else { 0.0 };
+                    (scores.at3(hh, i, j) + bias, j as u32)
+                })
+                .collect();
+            key.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+            indices[hh][i] = key.iter().map(|&(_, j)| j).collect();
+            counts[hh][i] = kvec[i] as u32;
+        }
+    }
+    Selection { nblk, indices, counts }
+}
+
+/// StreamingLLM selection (sinks + local window).
+pub fn select_streaming(h: usize, nblk: usize, sink: usize, local: usize) -> Selection {
+    let mut indices = vec![vec![Vec::new(); nblk]; h];
+    let mut counts = vec![vec![0u32; nblk]; h];
+    for hh in 0..h {
+        for i in 0..nblk {
+            let mut row: Vec<u32> = vec![];
+            for j in (0..=i).rev().take(local) {
+                row.push(j as u32);
+            }
+            for j in 0..sink.min(i + 1) {
+                if !row.contains(&(j as u32)) {
+                    row.push(j as u32);
+                }
+            }
+            counts[hh][i] = row.len() as u32;
+            // pad with the remaining causal blocks for interface width
+            for j in 0..=i {
+                if !row.contains(&(j as u32)) {
+                    row.push(j as u32);
+                }
+            }
+            indices[hh][i] = row;
+        }
+    }
+    Selection { nblk, indices, counts }
+}
+
+/// Exact dense causal attention (reference). q:[H,N,dh] k,v:[Hk,N,dh].
+pub fn dense_attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+    let (h, n, dh) = (q.shape[0], q.shape[1], q.shape[2]);
+    let hk = k.shape[0];
+    let rep = h / hk;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = Tensor::zeros(&[h, n, dh]);
+    let mut probs = vec![0.0f32; n];
+    for hh in 0..h {
+        let hkv = hh / rep;
+        for i in 0..n {
+            let qrow = q.row3(hh, i);
+            let mut m = f32::MIN;
+            for j in 0..=i {
+                probs[j] = dot(qrow, k.row3(hkv, j)) * scale;
+                m = m.max(probs[j]);
+            }
+            let mut l = 0.0f32;
+            for p in probs.iter_mut().take(i + 1) {
+                *p = (*p - m).exp();
+                l += *p;
+            }
+            let orow = out.row3_mut(hh, i);
+            for j in 0..=i {
+                axpy(orow, probs[j] / l, v.row3(hkv, j));
+            }
+        }
+    }
+    out
+}
+
+/// Block-sparse attention under a `Selection` (renormalized softmax over
+/// the selected blocks; within-block causal mask on the diagonal block).
+pub fn block_sparse_attention(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    sel: &Selection,
+    block: usize,
+) -> Tensor {
+    let (h, n, dh) = (q.shape[0], q.shape[1], q.shape[2]);
+    let hk = k.shape[0];
+    let rep = h / hk;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = Tensor::zeros(&[h, n, dh]);
+    let mut svals: Vec<f32> = Vec::new();
+    for hh in 0..h {
+        let hkv = hh / rep;
+        for qb in 0..sel.nblk {
+            let c = sel.counts[hh][qb] as usize;
+            let blocks = &sel.indices[hh][qb][..c];
+            for r in 0..block {
+                let i = qb * block + r;
+                let qrow = q.row3(hh, i);
+                svals.clear();
+                let mut m = f32::MIN;
+                for &b in blocks {
+                    let b = b as usize;
+                    for t in 0..block {
+                        let j = b * block + t;
+                        let s = if j <= i { dot(qrow, k.row3(hkv, j)) * scale } else { NEG_INF };
+                        svals.push(s);
+                        m = m.max(s);
+                    }
+                }
+                let mut l = 0.0f32;
+                for s in svals.iter_mut() {
+                    *s = (*s - m).exp();
+                    l += *s;
+                }
+                let orow = out.row3_mut(hh, i);
+                let mut idx = 0;
+                for &b in blocks {
+                    let b = b as usize;
+                    for t in 0..block {
+                        let p = svals[idx] / l;
+                        if p > 0.0 {
+                            axpy(orow, p, v.row3(hkv, b * block + t));
+                        }
+                        idx += 1;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn qkv(seed: u64, h: usize, hk: usize, n: usize, dh: usize) -> (Tensor, Tensor, Tensor) {
+        let mut r = Rng::new(seed);
+        (
+            Tensor::randn(&[h, n, dh], &mut r),
+            Tensor::randn(&[hk, n, dh], &mut r),
+            Tensor::randn(&[hk, n, dh], &mut r),
+        )
+    }
+
+    #[test]
+    fn full_selection_matches_dense() {
+        let (q, k, v) = qkv(1, 2, 1, 128, 16);
+        let nblk = 4;
+        let sel = Selection {
+            nblk,
+            indices: vec![(0..nblk).map(|i| (0..=i as u32).rev().collect()).collect(); 2],
+            counts: vec![(1..=nblk as u32).collect(); 2],
+        };
+        sel.validate().unwrap();
+        let sparse = block_sparse_attention(&q, &k, &v, &sel, 32);
+        let dense = dense_attention(&q, &k, &v);
+        assert!(sparse.max_abs_diff(&dense) < 1e-4, "diff {}", sparse.max_abs_diff(&dense));
+    }
+
+    #[test]
+    fn stem_selection_valid() {
+        let (q, k, v) = qkv(2, 4, 2, 256, 16);
+        let sel = select_stem(&q, &k, &v, 32, 8, &TpdConfig::default(), 0.2);
+        sel.validate().unwrap();
+        // forced blocks present
+        for h in 0..4 {
+            for i in 0..sel.nblk {
+                let c = sel.counts[h][i] as usize;
+                let set: Vec<u32> = sel.indices[h][i][..c].to_vec();
+                assert!(set.contains(&0), "sink missing h{h} i{i}");
+                assert!(set.contains(&(i as u32)), "diag missing h{h} i{i}");
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_pattern_correct() {
+        let sel = select_streaming(1, 8, 1, 2);
+        sel.validate().unwrap();
+        for i in 0..8usize {
+            let c = sel.counts[0][i] as usize;
+            let mut set: Vec<u32> = sel.indices[0][i][..c].to_vec();
+            set.sort();
+            let mut want: Vec<u32> = vec![0];
+            for j in i.saturating_sub(1)..=i {
+                if !want.contains(&(j as u32)) {
+                    want.push(j as u32);
+                }
+            }
+            want.sort();
+            assert_eq!(set, want, "row {i}");
+        }
+    }
+
+    #[test]
+    fn more_budget_less_error() {
+        let (q, k, v) = qkv(3, 2, 1, 256, 16);
+        let dense = dense_attention(&q, &k, &v);
+        let mut errs = vec![];
+        for ks in [2.0, 4.0, 8.0] {
+            let cfg = TpdConfig { k_start: ks, ..Default::default() };
+            let sel = select_stem(&q, &k, &v, 32, 8, &cfg, 0.2);
+            let o = block_sparse_attention(&q, &k, &v, &sel, 32);
+            errs.push(o.mse(&dense));
+        }
+        assert!(errs[0] >= errs[1] && errs[1] >= errs[2], "{errs:?}");
+    }
+
+    #[test]
+    fn oam_respects_causality() {
+        let (q, k, v) = qkv(4, 2, 1, 128, 16);
+        let s = oam_scores(&q, &k, &v, 32, 8, 0.2);
+        for h in 0..2 {
+            for i in 0..4 {
+                for j in (i + 1)..4 {
+                    assert_eq!(s.at3(h, i, j), NEG_INF);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Pure-rust reference implementation of the Stem pipeline (schedule,
+//! pooling, OAM metric, selection, block-sparse attention) plus the small
+//! tensor type it runs on. Serves tests, the simulator and the
+//! coordinator's cost estimates; the request path executes XLA artifacts.
+
+pub mod attention;
+pub mod schedule;
+pub mod tensor;
+
+pub use attention::{
+    antidiag_scores, block_sparse_attention, dense_attention, oam_scores, select_stem,
+    select_streaming, value_block_logmag, Selection,
+};
+pub use schedule::TpdConfig;
+pub use tensor::Tensor;

@@ -1,0 +1,180 @@
+//! Token Position-Decay schedule + cost model — rust mirror of
+//! `python/compile/schedule.py` (paper Eq. 2-4, 8; §3.3).
+//!
+//! The coordinator uses these for admission-control cost estimates and the
+//! benchmark harness uses them for the Figure-1 analytic projection; they
+//! are cross-checked against the python oracle through golden tests.
+
+/// Hyper-parameters of the Token Position-Decay strategy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TpdConfig {
+    pub k_start: f64,
+    pub mu: f64,
+    pub init_keep: usize,
+    pub local_keep: usize,
+    pub min_total: usize,
+}
+
+impl Default for TpdConfig {
+    fn default() -> Self {
+        TpdConfig { k_start: 8.0, mu: 0.7, init_keep: 1, local_keep: 2, min_total: 4 }
+    }
+}
+
+impl TpdConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.mu > 0.0 && self.mu <= 1.0) {
+            return Err(format!("mu must be in (0,1], got {}", self.mu));
+        }
+        if self.k_start <= 0.0 {
+            return Err(format!("k_start must be > 0, got {}", self.k_start));
+        }
+        if self.local_keep < 1 {
+            return Err("local_keep must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// Eq. (3): per-position budget k(i), 0-based `i` (shifted to the paper's
+/// 1-based indexing internally), floored, min 1.
+pub fn k_at(i: usize, n: usize, k_start: f64, mu: f64) -> f64 {
+    let i1 = (i + 1) as f64;
+    (k_start - (k_start * (1.0 - mu) / n as f64) * i1).floor().max(1.0)
+}
+
+/// Effective per-query-block budget with causal clamping (Algorithm 1).
+pub fn block_budget_schedule(n_blocks: usize, cfg: &TpdConfig) -> Vec<usize> {
+    (0..n_blocks)
+        .map(|i| {
+            let raw = k_at(i, n_blocks, cfg.k_start, cfg.mu);
+            let forced = (cfg.init_keep + cfg.local_keep).min(i + 1);
+            let k = raw.max(cfg.min_total as f64).max(forced as f64);
+            (k as usize).min(i + 1)
+        })
+        .collect()
+}
+
+/// Full causal attention pairs: N(N+1)/2.
+pub fn cost_dense(n: usize) -> f64 {
+    n as f64 * (n as f64 + 1.0) / 2.0
+}
+
+/// Eq. (2): C_uni ≈ N·k − k²/2.
+pub fn cost_uniform(n: usize, k_uni: f64) -> f64 {
+    n as f64 * k_uni - 0.5 * k_uni * k_uni
+}
+
+/// Eq. (4): uniform baseline minus the decay-savings term.
+pub fn cost_decay(n: usize, k_start: f64, mu: f64) -> f64 {
+    let base = n as f64 * k_start - 0.5 * k_start * k_start;
+    let savings = 0.5 * k_start * (1.0 - mu) * (n as f64 - k_start);
+    base - savings
+}
+
+/// Eq. (8): metric calculation + sparse execution cost of Stem.
+pub fn cost_stem(n: usize, d: usize, block: usize, k_avg_tokens: f64) -> f64 {
+    let (nf, df, bf) = (n as f64, d as f64, block as f64);
+    let metric = 2.0 * nf * nf * df / (bf * bf) + nf * df / bf;
+    let sparse = 4.0 * nf * k_avg_tokens * df + 3.0 * nf * k_avg_tokens;
+    metric + sparse
+}
+
+/// Dense attention FLOP-ish cost on the same scale as `cost_stem`.
+pub fn cost_dense_flops(n: usize, d: usize) -> f64 {
+    let (nf, df) = (n as f64, d as f64);
+    4.0 * nf * nf * df + 3.0 * nf * nf
+}
+
+/// §3.3 budget-matching: k_uni with the same total cost as TPD(k_start, mu).
+pub fn k_uniform_matched(k_start: f64, mu: f64) -> f64 {
+    k_start * (1.0 + mu) / 2.0
+}
+
+/// Average per-block budget under the schedule (blocks).
+pub fn k_avg_blocks(n_blocks: usize, cfg: &TpdConfig) -> f64 {
+    let k = block_budget_schedule(n_blocks, cfg);
+    k.iter().sum::<usize>() as f64 / n_blocks as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn schedule_monotone_and_bounded() {
+        forall(
+            11,
+            200,
+            |r: &mut Rng| (r.below(60) as usize + 4, r.f64() * 0.7 + 0.3, r.f64() * 30.0 + 2.0),
+            |&(nblk, mu, ks)| {
+                let cfg = TpdConfig { k_start: ks, mu, ..Default::default() };
+                let k = block_budget_schedule(nblk, &cfg);
+                for i in 0..nblk {
+                    if k[i] > i + 1 {
+                        return Err(format!("k[{i}]={} > width", k[i]));
+                    }
+                    if k[i] == 0 {
+                        return Err("zero budget".into());
+                    }
+                }
+                // The raw schedule is non-increasing. Inside the causal
+                // triangle (k(i) ≥ width) the effective budget equals the
+                // width i+1 and grows by construction, so an increase is
+                // only a bug when the next row is NOT width-clamped.
+                for i in cfg.min_total.max(cfg.init_keep + cfg.local_keep)..nblk.saturating_sub(1) {
+                    if k[i + 1] > k[i] && k[i + 1] != i + 2 {
+                        return Err(format!("not non-increasing at {i}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn decay_cheaper_iff_mu_below_one() {
+        forall(
+            12,
+            200,
+            |r: &mut Rng| (r.below(8000) as usize + 200, r.f64() * 0.69 + 0.3, r.f64() * 50.0 + 8.0),
+            |&(n, mu, ks)| {
+                if ks >= n as f64 {
+                    return Ok(());
+                }
+                let cd = cost_decay(n, ks, mu);
+                let cu = cost_uniform(n, ks);
+                if cd < cu {
+                    Ok(())
+                } else {
+                    Err(format!("C_decay {cd} !< C_uni {cu}"))
+                }
+            },
+        );
+        assert!((cost_decay(4096, 32.0, 1.0) - cost_uniform(4096, 32.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn budget_matching_rule_close() {
+        let (ks, mu, n) = (48.0, 0.7, 1 << 16);
+        let cu = cost_uniform(n, k_uniform_matched(ks, mu));
+        let cd = cost_decay(n, ks, mu);
+        assert!((cu - cd).abs() / cd < 0.02, "cu={cu} cd={cd}");
+    }
+
+    #[test]
+    fn stem_cost_below_dense_at_scale() {
+        let c_stem = cost_stem(131072, 256, 64, 8192.0);
+        let c_dense = cost_dense_flops(131072, 256);
+        assert!(c_stem < 0.2 * c_dense, "stem {c_stem} dense {c_dense}");
+    }
+
+    #[test]
+    fn k_at_endpoints() {
+        let (n, ks, mu) = (1000, 100.0, 0.7);
+        assert!(k_at(0, n, ks, mu) >= ks - 1.0);
+        assert!((k_at(n - 1, n, ks, mu) - mu * ks).abs() <= 1.0);
+    }
+}

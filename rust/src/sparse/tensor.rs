@@ -1,0 +1,155 @@
+//! Minimal dense tensor used by the pure-rust reference pipeline.
+//!
+//! Row-major `f32` storage with explicit shape; only what the sparse
+//! attention reference, the simulator and the tests need — this is *not*
+//! a general ndarray (XLA owns the heavy math on the request path).
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn randn(shape: &[usize], rng: &mut crate::util::rng::Rng) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: (0..n).map(|_| rng.normal() as f32).collect() }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn at3(&self, h: usize, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 3);
+        self.data[(h * self.shape[1] + i) * self.shape[2] + j]
+    }
+
+    #[inline]
+    pub fn set3(&mut self, h: usize, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.rank(), 3);
+        self.data[(h * self.shape[1] + i) * self.shape[2] + j] = v;
+    }
+
+    /// Contiguous row `[h, i, :]` of a rank-3 tensor.
+    #[inline]
+    pub fn row3(&self, h: usize, i: usize) -> &[f32] {
+        let d = self.shape[2];
+        let off = (h * self.shape[1] + i) * d;
+        &self.data[off..off + d]
+    }
+
+    #[inline]
+    pub fn row3_mut(&mut self, h: usize, i: usize) -> &mut [f32] {
+        let d = self.shape[2];
+        let off = (h * self.shape[1] + i) * d;
+        &mut self.data[off..off + d]
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    pub fn mse(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        let s: f64 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum();
+        s / self.data.len() as f64
+    }
+}
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f32;
+    // 4-wide manual unroll; the autovectorizer does the rest in release.
+    let chunks = a.len() / 4 * 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+    let mut i = 0;
+    while i < chunks {
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    for j in chunks..a.len() {
+        s += a[j] * b[j];
+    }
+    s + s0 + s1 + s2 + s3
+}
+
+pub fn axpy(acc: &mut [f32], alpha: f32, x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (a, b) in acc.iter_mut().zip(x) {
+        *a += alpha * b;
+    }
+}
+
+pub fn norm2(x: &[f32]) -> f32 {
+    dot(x, x).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_roundtrip() {
+        let mut t = Tensor::zeros(&[2, 3, 4]);
+        t.set3(1, 2, 3, 7.0);
+        assert_eq!(t.at3(1, 2, 3), 7.0);
+        assert_eq!(t.row3(1, 2)[3], 7.0);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..37).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..37).map(|i| (i as f32).sin()).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-3);
+    }
+
+    #[test]
+    fn mse_zero_for_identical() {
+        let mut r = crate::util::rng::Rng::new(0);
+        let t = Tensor::randn(&[3, 4, 5], &mut r);
+        assert_eq!(t.mse(&t), 0.0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Micro-benchmark substrate (criterion is not vendored).
+//!
+//! Warmup + calibrated iteration count + robust statistics (median, MAD,
+//! p10/p90), printed in a criterion-like one-liner. `benches/*.rs` use
+//! `harness = false` and drive this directly, so `cargo bench` works.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub mad_ns: f64,
+}
+
+impl Stats {
+    pub fn median(&self) -> Duration {
+        Duration::from_nanos(self.median_ns as u64)
+    }
+
+    pub fn print(&self) {
+        println!(
+            "bench {:<44} {:>12} med {:>12} p90   ({} iters, ±{})",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p90_ns),
+            self.iters,
+            fmt_ns(self.mad_ns),
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+pub struct Bencher {
+    pub warmup: Duration,
+    pub target: Duration,
+    pub max_iters: usize,
+    pub min_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            target: Duration::from_secs(1),
+            max_iters: 10_000,
+            min_iters: 5,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            target: Duration::from_millis(300),
+            max_iters: 2_000,
+            min_iters: 3,
+        }
+    }
+
+    /// Benchmark `f`, which performs ONE operation per call.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Stats {
+        // warmup + single-shot estimate
+        let w0 = Instant::now();
+        let mut warm_iters = 0usize;
+        while w0.elapsed() < self.warmup || warm_iters == 0 {
+            f();
+            warm_iters += 1;
+            if warm_iters > self.max_iters {
+                break;
+            }
+        }
+        let per = w0.elapsed().as_secs_f64() / warm_iters as f64;
+        let iters = ((self.target.as_secs_f64() / per.max(1e-9)) as usize)
+            .clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        stats_from(name, samples)
+    }
+}
+
+pub fn stats_from(name: &str, mut samples: Vec<f64>) -> Stats {
+    assert!(!samples.is_empty());
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let q = |p: f64| samples[(((n - 1) as f64) * p) as usize];
+    let median = q(0.5);
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let mut dev: Vec<f64> = samples.iter().map(|x| (x - median).abs()).collect();
+    dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Stats {
+        name: name.to_string(),
+        iters: n,
+        median_ns: median,
+        mean_ns: mean,
+        p10_ns: q(0.1),
+        p90_ns: q(0.9),
+        mad_ns: dev[n / 2],
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = stats_from("t", vec![5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(s.median_ns, 3.0);
+        assert!(s.p10_ns <= s.median_ns && s.median_ns <= s.p90_ns);
+    }
+
+    #[test]
+    fn run_measures_something() {
+        let b = Bencher::quick();
+        let mut acc = 0u64;
+        let s = b.run("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(s.iters >= 3);
+        assert!(s.median_ns >= 0.0);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5e4).ends_with("µs"));
+        assert!(fmt_ns(5e7).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with('s'));
+    }
+}

@@ -1,0 +1,120 @@
+//! Tiny argument-parsing substrate (clap is not vendored).
+//!
+//! Supports `binary <subcommand> [--flag] [--key value] [positional...]`
+//! with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]); `has_subcommand`
+    /// controls whether the first bare token is the subcommand.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, has_subcommand: bool) -> Args {
+        let mut out = Args { subcommand: None, positional: vec![], flags: BTreeMap::new() };
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // value-style flag if next token is not itself a flag
+                    match it.peek() {
+                        Some(nx) if !nx.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(name.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(name.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else if has_subcommand && out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(has_subcommand: bool) -> Args {
+        Args::parse(std::env::args().skip(1), has_subcommand)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).map(|v| v != "false").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Comma-separated list, e.g. `--methods stem,dense`.
+    pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str], sub: bool) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), sub)
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = args(&["serve", "--port", "8080", "--verbose", "--rate=2.5"], true);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.usize_or("port", 0), 8080);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.f64_or("rate", 0.0), 2.5);
+    }
+
+    #[test]
+    fn positional() {
+        let a = args(&["eval", "input.json", "--n", "4", "out.json"], true);
+        assert_eq!(a.positional, vec!["input.json", "out.json"]);
+        assert_eq!(a.usize_or("n", 0), 4);
+    }
+
+    #[test]
+    fn trailing_bool_flag() {
+        let a = args(&["--fast"], false);
+        assert!(a.flag("fast"));
+        assert!(!a.flag("slow"));
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = args(&["--methods", "stem,dense , xattn"], false);
+        assert_eq!(a.list_or("methods", &[]), vec!["stem", "dense", "xattn"]);
+        assert_eq!(a.list_or("other", &["a"]), vec!["a"]);
+    }
+}

@@ -1,0 +1,87 @@
+//! Hand-rolled substrates standing in for crates absent from the offline
+//! vendor set (DESIGN.md §2): JSON, CLI parsing, PRNG, thread pool,
+//! micro-benchmarks, property testing, and a tiny logger.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(2); // 0=off 1=error 2=info 3=debug
+
+pub fn set_log_level(level: u8) {
+    LOG_LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn log_enabled(level: u8) -> bool {
+    LOG_LEVEL.load(Ordering::Relaxed) >= level
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if $crate::util::log_enabled(2) {
+            eprintln!("[stem] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log_enabled(3) {
+            eprintln!("[stem:debug] {}", format!($($arg)*));
+        }
+    };
+}
+
+/// Format a float table cell with fixed width.
+pub fn cell(v: f64, prec: usize) -> String {
+    format!("{v:>8.prec$}")
+}
+
+/// Render an ASCII table (used by every `stem tableN` command).
+pub fn render_table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, c) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("## {title}\n"));
+    let line = |cells: Vec<String>| -> String {
+        let mut s = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+        }
+        s.push('\n');
+        s
+    };
+    out.push_str(&line(header.iter().map(|s| s.to_string()).collect()));
+    out.push_str(&line(widths.iter().map(|w| "-".repeat(*w)).collect()));
+    for row in rows {
+        out.push_str(&line(row.clone()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn table_renders() {
+        let t = super::render_table(
+            "T",
+            &["a", "bb"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+        assert!(t.contains("## T"));
+        assert!(t.lines().count() == 5);
+    }
+}

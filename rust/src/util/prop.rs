@@ -1,0 +1,155 @@
+//! Property-testing substrate (proptest is not vendored).
+//!
+//! `forall(seed, cases, gen, check)` runs `check` on `cases` random values
+//! from `gen`; on failure it performs greedy shrinking via the value's
+//! `Shrink` implementation and reports the minimal counterexample. Used by
+//! the coordinator/sparse invariant tests (DESIGN.md §7).
+
+use crate::util::rng::Rng;
+
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    /// Candidate strictly-smaller values, tried in order.
+    fn shrink(&self) -> Vec<Self> {
+        vec![]
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = vec![];
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = vec![];
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = vec![];
+        if self.abs() > 1e-9 {
+            out.push(self / 2.0);
+            out.push(0.0);
+        }
+        out
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = vec![];
+        if !self.is_empty() {
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[1..].to_vec());
+            // shrink one element
+            for (i, x) in self.iter().enumerate() {
+                for s in x.shrink().into_iter().take(1) {
+                    let mut v = self.clone();
+                    v[i] = s;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink, C: Shrink> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> =
+            self.0.shrink().into_iter().map(|a| (a, self.1.clone(), self.2.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b, self.2.clone())));
+        out.extend(self.2.shrink().into_iter().map(|c| (self.0.clone(), self.1.clone(), c)));
+        out
+    }
+}
+
+/// Run the property; panics with the minimal counterexample on failure.
+pub fn forall<T, G, C>(seed: u64, cases: usize, mut gen: G, check: C)
+where
+    T: Shrink,
+    G: FnMut(&mut Rng) -> T,
+    C: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let value = gen(&mut rng);
+        if let Err(msg) = check(&value) {
+            // greedy shrink
+            let mut cur = value;
+            let mut cur_msg = msg;
+            let mut budget = 200;
+            'outer: while budget > 0 {
+                for cand in cur.shrink() {
+                    budget -= 1;
+                    if let Err(m) = check(&cand) {
+                        cur = cand;
+                        cur_msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {seed}):\n  value: {cur:?}\n  error: {cur_msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        forall(1, 200, |r| r.below(100) as usize, |&x| {
+            if x < 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_and_shrinks() {
+        forall(2, 200, |r| r.below(1000) as usize, |&x| {
+            if x < 500 {
+                Ok(())
+            } else {
+                Err(format!("{x} too big"))
+            }
+        });
+    }
+
+    #[test]
+    fn shrink_vec_reduces() {
+        let v = vec![3usize, 4, 5];
+        assert!(v.shrink().iter().all(|s| s.len() < v.len() || s.iter().sum::<usize>() < 12));
+    }
+}

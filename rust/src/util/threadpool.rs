@@ -1,0 +1,159 @@
+//! Thread-pool substrate (tokio is not vendored; the request path is
+//! CPU-bound PJRT execution, so an OS-thread pool with an mpsc work queue
+//! is the right shape anyway).
+//!
+//! `ThreadPool` — fixed workers pulling `FnOnce` jobs from a shared queue.
+//! `scope_parallel` — fork-join helper used by the eval harness to fan an
+//! indexed job list over the pool and collect results in order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<std::collections::VecDeque<Job>>,
+    available: Condvar,
+    shutdown: Mutex<bool>,
+    in_flight: AtomicUsize,
+    done: Condvar,
+    done_lock: Mutex<()>,
+}
+
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(std::collections::VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: Mutex::new(false),
+            in_flight: AtomicUsize::new(0),
+            done: Condvar::new(),
+            done_lock: Mutex::new(()),
+        });
+        let workers = (0..n.max(1))
+            .map(|_| {
+                let sh = Arc::clone(&shared);
+                thread::spawn(move || worker_loop(sh))
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.shared.queue.lock().unwrap().push_back(Box::new(f));
+        self.shared.available.notify_one();
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let mut guard = self.shared.done_lock.lock().unwrap();
+        while self.shared.in_flight.load(Ordering::SeqCst) != 0 {
+            guard = self.shared.done.wait(guard).unwrap();
+        }
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break Some(j);
+                }
+                if *sh.shutdown.lock().unwrap() {
+                    break None;
+                }
+                q = sh.available.wait(q).unwrap();
+            }
+        };
+        match job {
+            None => return,
+            Some(j) => {
+                j();
+                if sh.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
+                    let _g = sh.done_lock.lock().unwrap();
+                    sh.done.notify_all();
+                }
+            }
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run `jobs(i)` for i in 0..n on `pool`, returning results in index order.
+pub fn scope_parallel<T, F>(pool: &ThreadPool, n: usize, f: F) -> Vec<T>
+where
+    T: Send + 'static,
+    F: Fn(usize) -> T + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    for i in 0..n {
+        let f = Arc::clone(&f);
+        let tx = tx.clone();
+        pool.submit(move || {
+            let r = f(i);
+            let _ = tx.send((i, r));
+        });
+    }
+    drop(tx);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for (i, r) in rx {
+        out[i] = Some(r);
+    }
+    out.into_iter().map(|x| x.expect("worker panicked")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scope_parallel_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = scope_parallel(&pool, 50, |i| i * i);
+        assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool_returns() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle();
+    }
+}

@@ -1,0 +1,106 @@
+//! Workload handling: eval-set loading (JSON emitted by aot.py — the
+//! python generators are the single source of truth, so there is no
+//! dual-implementation drift) and open-loop traffic synthesis for the
+//! serving example.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct EvalSample {
+    pub ids: Vec<i32>,
+    pub answer_start: usize,
+    pub answer_len: usize,
+}
+
+impl EvalSample {
+    /// Teacher-forced exact match: argmax at positions answer_start-1 ..
+    /// answer_start+len-2 must reproduce the answer tokens.
+    pub fn answer_tokens(&self) -> &[i32] {
+        &self.ids[self.answer_start..self.answer_start + self.answer_len]
+    }
+}
+
+pub fn load_eval_set(path: &Path) -> Result<Vec<EvalSample>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading eval set {}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("eval json: {e}"))?;
+    j.as_arr()
+        .ok_or_else(|| anyhow!("eval set not an array"))?
+        .iter()
+        .map(|s| {
+            Ok(EvalSample {
+                ids: s
+                    .get("ids")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("sample ids"))?
+                    .iter()
+                    .map(|t| t.as_i64().unwrap_or(0) as i32)
+                    .collect(),
+                answer_start: s
+                    .get("answer_start")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("answer_start"))?,
+                answer_len: s
+                    .get("answer_len")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("answer_len"))?,
+            })
+        })
+        .collect()
+}
+
+/// One request of an open-loop arrival trace.
+#[derive(Debug, Clone)]
+pub struct TraceItem {
+    /// offset from trace start
+    pub at: std::time::Duration,
+    /// index into the sample pool
+    pub sample: usize,
+}
+
+/// Poisson open-loop arrival trace over a sample pool.
+pub fn poisson_trace(rng: &mut Rng, n_requests: usize, rps: f64, pool: usize) -> Vec<TraceItem> {
+    let mut t = 0.0f64;
+    (0..n_requests)
+        .map(|_| {
+            t += rng.exp(rps);
+            TraceItem {
+                at: std::time::Duration::from_secs_f64(t),
+                sample: rng.below(pool as u64) as usize,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_eval_set() {
+        let dir = std::env::temp_dir().join("stem_eval_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("e.json");
+        std::fs::write(&p, r#"[{"ids":[1,2,3,4],"answer_start":2,"answer_len":1}]"#).unwrap();
+        let s = load_eval_set(&p).unwrap();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].answer_tokens(), &[3]);
+    }
+
+    #[test]
+    fn poisson_trace_monotone() {
+        let mut rng = Rng::new(5);
+        let tr = poisson_trace(&mut rng, 100, 50.0, 10);
+        assert_eq!(tr.len(), 100);
+        for w in tr.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        let mean_gap = tr.last().unwrap().at.as_secs_f64() / 100.0;
+        assert!((mean_gap - 0.02).abs() < 0.01, "gap {mean_gap}");
+    }
+}

@@ -1,0 +1,147 @@
+//! Integration tests over the compiled artifacts: engine execution,
+//! python↔rust logits agreement, coordinator request conservation,
+//! method/budget behaviour. All tests skip gracefully when artifacts are
+//! missing so `cargo test` works pre-`make artifacts`.
+
+use std::sync::Arc;
+
+use stem::coordinator::{Coordinator, CoordinatorConfig, Method};
+use stem::runtime::Engine;
+use stem::util::json::Json;
+
+fn engine() -> Option<Arc<Engine>> {
+    let dir = stem::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Arc::new(Engine::new(&dir).expect("engine boots from artifacts")))
+}
+
+#[test]
+fn dense_prefill_matches_python_golden_logits() {
+    let Some(engine) = engine() else { return };
+    let dir = stem::artifacts_dir();
+    let text = std::fs::read_to_string(dir.join("golden/model_dense_512.json")).unwrap();
+    let j = Json::parse(&text).unwrap();
+    let ids: Vec<i32> = j
+        .get("ids")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|v| v.as_i64().unwrap() as i32)
+        .collect();
+    let argmax: Vec<i32> = j
+        .get("argmax")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|v| v.as_i64().unwrap() as i32)
+        .collect();
+    let out = engine.prefill("base", "prefill_dense", ids.len(), &ids, &[]).unwrap();
+    let mut bad = 0;
+    for (p, want) in argmax.iter().enumerate() {
+        let row = &out.logits[p * out.vocab..(p + 1) * out.vocab];
+        let got =
+            row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0 as i32;
+        if got != *want {
+            bad += 1;
+        }
+    }
+    assert!(
+        (bad as f64) < 0.02 * argmax.len() as f64,
+        "XLA-executed logits disagree with python on {bad}/{} positions",
+        argmax.len()
+    );
+}
+
+#[test]
+fn stem_budget_scales_with_k_start() {
+    let Some(engine) = engine() else { return };
+    // 2048 = 32 blocks: wide enough that the forced sink/local floor does
+    // not clamp the whole schedule (at 8 blocks every k_start in 2..6
+    // collapses to the same floored budget — see EXPERIMENTS.md Table 5).
+    let n = 2048;
+    let ids: Vec<i32> = (0..n).map(|i| 16 + (i % 64) as i32).collect();
+    use stem::runtime::ScalarValue::F32;
+    let run = |ks: f32| {
+        engine
+            .prefill("base", "prefill_stem", n, &ids, &[F32(ks), F32(0.7), F32(0.2)])
+            .unwrap()
+            .budget_fraction
+    };
+    let (small, large) = (run(5.0), run(16.0));
+    assert!(small < large, "budget must grow with k_start: {small} vs {large}");
+    assert!(small > 0.0 && large <= 1.0);
+}
+
+#[test]
+fn mu_one_beta_zero_is_uniform_sam_superset_of_decay() {
+    let Some(engine) = engine() else { return };
+    let n = 512;
+    let ids: Vec<i32> = (0..n).map(|i| 16 + ((i * 7) % 60) as i32).collect();
+    use stem::runtime::ScalarValue::F32;
+    let uni =
+        engine.prefill("base", "prefill_stem", n, &ids, &[F32(4.0), F32(1.0), F32(0.0)]).unwrap();
+    let dec =
+        engine.prefill("base", "prefill_stem", n, &ids, &[F32(4.0), F32(0.7), F32(0.0)]).unwrap();
+    assert!(
+        dec.budget_fraction <= uni.budget_fraction + 1e-6,
+        "decay must not exceed uniform at same k_start: {} vs {}",
+        dec.budget_fraction,
+        uni.budget_fraction
+    );
+}
+
+#[test]
+fn diag_module_exposes_per_layer_hidden() {
+    let Some(engine) = engine() else { return };
+    let man = engine.manifest().clone();
+    let Some(m) = man.modules.iter().find(|m| m.kind == "diag_dense") else {
+        eprintln!("skipping: no diag modules");
+        return;
+    };
+    let n = m.n_ctx;
+    let ids: Vec<i32> = (0..n).map(|i| 16 + (i % 64) as i32).collect();
+    let out = engine.prefill("base", "diag_dense", n, &ids, &[]).unwrap();
+    let hidden = out.hidden.expect("diag module returns hidden states");
+    assert_eq!(hidden.len(), man.model.n_layers * n * man.model.d_model);
+    assert!(hidden.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn coordinator_conserves_requests_across_buckets_and_methods() {
+    let Some(engine) = engine() else { return };
+    let coord = Arc::new(Coordinator::new(engine, CoordinatorConfig::default()));
+    let mk_ids = |n: usize| -> Vec<i32> { (0..n).map(|i| 16 + (i % 50) as i32).collect() };
+    let mut rxs = vec![];
+    let methods =
+        [Method::Dense, Method::Stem { k_start: 4.0, mu: 0.7, beta: 0.2 }, Method::Dense];
+    for r in 0..12 {
+        let n = [200usize, 512, 700][r % 3];
+        let m = methods[r % methods.len()];
+        rxs.push(coord.submit("base", m, mk_ids(n), false).unwrap());
+    }
+    let mut got = 0;
+    for rx in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        assert!(resp.n_ctx >= resp.n_input);
+        assert!(resp.budget_fraction > 0.0 && resp.budget_fraction <= 1.0);
+        got += 1;
+    }
+    assert_eq!(got, 12, "every submitted request must complete exactly once");
+    let report = coord.report();
+    assert!(report.contains("completed"), "metrics report renders: {report}");
+}
+
+#[test]
+fn rejects_oversized_and_unknown() {
+    let Some(engine) = engine() else { return };
+    let coord = Arc::new(Coordinator::new(engine, CoordinatorConfig::default()));
+    // longer than every bucket
+    let huge: Vec<i32> = vec![16; 1 << 20];
+    assert!(coord.submit("base", Method::Dense, huge, false).is_err());
+    // unknown checkpoint surfaces as a response-level error
+    let rx = coord.submit("nope", Method::Dense, vec![16; 64], false).unwrap();
+    assert!(rx.recv().unwrap().is_err());
+}

@@ -1,0 +1,108 @@
+//! Cross-language golden tests: the pure-rust sparse core must reproduce
+//! the python jnp oracles bit-for-bit-ish (f32 tolerance) on the golden
+//! vectors exported by `python/compile/aot.py` (artifacts/golden/).
+//!
+//! Skips (with a note) when artifacts are absent so `cargo test` stays
+//! green pre-`make artifacts`; CI runs it after the artifact build.
+
+use stem::sparse::{block_sparse_attention, oam_scores, Selection, Tensor};
+use stem::util::json::Json;
+
+struct Golden {
+    block: usize,
+    h: usize,
+    hk: usize,
+    n: usize,
+    dh: usize,
+    q: Tensor,
+    k: Tensor,
+    v: Tensor,
+    indices: Vec<i64>,
+    counts: Vec<i64>,
+    attention_out: Vec<f32>,
+    oam: Vec<f32>,
+}
+
+fn load_golden() -> Option<Golden> {
+    let path = stem::artifacts_dir().join("golden/kernels.json");
+    let text = std::fs::read_to_string(&path).ok()?;
+    let j = Json::parse(&text).ok()?;
+    let us = |k: &str| j.get(k).and_then(Json::as_usize).unwrap();
+    let fv = |k: &str| -> Vec<f32> {
+        j.get(k)
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap() as f32)
+            .collect()
+    };
+    let iv = |k: &str| -> Vec<i64> {
+        j.get(k).and_then(Json::as_arr).unwrap().iter().map(|x| x.as_i64().unwrap()).collect()
+    };
+    let (h, hk, n, dh) = (us("h"), us("hk"), us("n"), us("dh"));
+    Some(Golden {
+        block: us("block"),
+        h,
+        hk,
+        n,
+        dh,
+        q: Tensor::from_vec(&[h, n, dh], fv("q")),
+        k: Tensor::from_vec(&[hk, n, dh], fv("k")),
+        v: Tensor::from_vec(&[hk, n, dh], fv("v")),
+        indices: iv("indices"),
+        counts: iv("counts"),
+        attention_out: fv("attention_out"),
+        oam: fv("oam_scores"),
+    })
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn rust_block_sparse_matches_python_oracle() {
+    let Some(g) = load_golden() else {
+        eprintln!("skipping: artifacts/golden/kernels.json missing (run `make artifacts`)");
+        return;
+    };
+    let nblk = g.n / g.block;
+    let mut indices = vec![vec![Vec::new(); nblk]; g.h];
+    let mut counts = vec![vec![0u32; nblk]; g.h];
+    for h in 0..g.h {
+        for i in 0..nblk {
+            counts[h][i] = g.counts[h * nblk + i] as u32;
+            indices[h][i] = (0..nblk)
+                .map(|t| g.indices[(h * nblk + i) * nblk + t] as u32)
+                .collect();
+        }
+    }
+    let sel = Selection { nblk, indices, counts };
+    sel.validate().expect("golden selection must satisfy kernel invariants");
+    let out = block_sparse_attention(&g.q, &g.k, &g.v, &sel, g.block);
+    let d = max_abs_diff(&out.data, &g.attention_out);
+    assert!(d < 2e-4, "rust block-sparse deviates from jnp oracle: {d}");
+    let _ = g.hk;
+}
+
+#[test]
+fn rust_oam_scores_match_python_oracle() {
+    let Some(g) = load_golden() else {
+        eprintln!("skipping: artifacts missing");
+        return;
+    };
+    // golden emitted with beta=0.2, stride=16 (aot.py export_goldens)
+    let scores = oam_scores(&g.q, &g.k, &g.v, g.block, 16, 0.2);
+    let nblk = g.n / g.block;
+    let mut worst = 0f32;
+    for h in 0..g.h {
+        for i in 0..nblk {
+            for j in 0..=i {
+                let want = g.oam[(h * nblk + i) * nblk + j];
+                let got = scores.at3(h, i, j);
+                worst = worst.max((want - got).abs());
+            }
+        }
+    }
+    assert!(worst < 2e-4, "rust OAM deviates from jnp oracle: {worst}");
+}

@@ -1,0 +1,347 @@
+//! Property tests on coordinator + sparse-core invariants (DESIGN.md §7).
+//! These need no artifacts — they drive the pure-logic substrates with
+//! the hand-rolled `forall` harness (util::prop).
+
+use std::time::{Duration, Instant};
+
+use stem::coordinator::admission::{Admission, AdmissionConfig, Admit};
+use stem::coordinator::batcher::{BatchKey, Batcher, BatcherConfig};
+use stem::coordinator::kv_cache::{KvCache, KvConfig};
+use stem::coordinator::{Method, PrefillRequest};
+use stem::sparse::schedule::{
+    block_budget_schedule, cost_decay, cost_dense, cost_uniform, k_avg_blocks,
+    k_uniform_matched, TpdConfig,
+};
+use stem::sparse::{select_stem, Tensor};
+use stem::util::json::Json;
+use stem::util::prop::forall;
+use stem::util::rng::Rng;
+
+fn req(id: u64) -> PrefillRequest {
+    PrefillRequest {
+        id,
+        checkpoint: "base".into(),
+        method: Method::Dense,
+        ids: vec![],
+        diag: false,
+        enqueued: Instant::now(),
+    }
+}
+
+// --- KV pool -----------------------------------------------------------
+
+#[test]
+fn kv_pool_conserves_pages_under_random_workload() {
+    forall(
+        101,
+        60,
+        |r: &mut Rng| {
+            // (total_pages, ops: (alloc? tokens) interleaved with frees)
+            let total = 16 + r.below(64) as usize;
+            let ops: Vec<(u64, usize)> =
+                (0..40).map(|i| (i as u64, 1 + r.below(900) as usize)).collect();
+            (total, ops)
+        },
+        |(total, ops)| {
+            let mut kv = KvCache::new(KvConfig { total_pages: *total, page_tokens: 64 });
+            let mut live: Vec<u64> = vec![];
+            for (id, tokens) in ops {
+                match kv.allocate(*id, *tokens) {
+                    Ok(pages) => {
+                        if pages.len() != tokens.div_ceil(64) {
+                            return Err(format!("wrong page count for {tokens} tokens"));
+                        }
+                        live.push(*id);
+                    }
+                    Err(_) => {
+                        // free everything live and retry once
+                        for l in live.drain(..) {
+                            let _ = kv.release(l);
+                            let _ = kv.drop_seq(l);
+                        }
+                        if kv.used_pages() != 0 {
+                            return Err("pages leaked after full drain".into());
+                        }
+                    }
+                }
+                let used: usize = kv.used_pages();
+                if used + kv.free_pages() != *total {
+                    return Err("page conservation violated".into());
+                }
+            }
+            for l in live.drain(..) {
+                let _ = kv.release(l);
+                let _ = kv.drop_seq(l);
+            }
+            if kv.used_pages() != 0 {
+                return Err("pages leaked at end".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn kv_pool_no_double_grant() {
+    let mut kv = KvCache::new(KvConfig { total_pages: 32, page_tokens: 64 });
+    let a = kv.allocate(1, 512).unwrap().to_vec();
+    let b = kv.allocate(2, 512).unwrap().to_vec();
+    for p in &a {
+        assert!(!b.contains(p), "page {p} granted twice");
+    }
+    assert_eq!(kv.allocate(3, 64 * 64), Err(stem::coordinator::kv_cache::KvError::OutOfPages { need: 64, free: 16 }));
+}
+
+// --- batcher -----------------------------------------------------------
+
+#[test]
+fn batcher_never_mixes_keys_and_preserves_fifo() {
+    forall(
+        102,
+        60,
+        |r: &mut Rng| {
+            let n = 1 + r.below(60) as usize;
+            let picks: Vec<usize> = (0..n).map(|_| r.below(3) as usize).collect();
+            picks
+        },
+        |picks| {
+            let keys = [
+                BatchKey { kind: "prefill_dense", bucket: 512, checkpoint: "base".into() },
+                BatchKey { kind: "prefill_stem", bucket: 512, checkpoint: "base".into() },
+                BatchKey { kind: "prefill_stem", bucket: 1024, checkpoint: "base".into() },
+            ];
+            let mut b = Batcher::new(BatcherConfig { max_batch: 4, max_wait: Duration::ZERO });
+            let mut pushed = 0u64;
+            for &p in picks {
+                pushed += 1;
+                b.push(keys[p].clone(), req(pushed));
+            }
+            let mut seen = 0usize;
+            let mut last_id_per_key = std::collections::BTreeMap::new();
+            let now = Instant::now() + Duration::from_secs(1);
+            let mut batches = vec![];
+            while let Some(batch) = b.pop_ready(now) {
+                batches.push(batch);
+            }
+            batches.extend(b.drain_all(now));
+            for batch in batches {
+                if batch.requests.is_empty() {
+                    return Err("empty batch emitted".into());
+                }
+                if batch.requests.len() > 4 {
+                    return Err("batch exceeds max_batch".into());
+                }
+                for r in &batch.requests {
+                    seen += 1;
+                    let last = last_id_per_key.entry(batch.key.clone()).or_insert(0u64);
+                    if r.id <= *last {
+                        return Err(format!("FIFO violated in {:?}", batch.key));
+                    }
+                    *last = r.id;
+                }
+            }
+            if seen != picks.len() {
+                return Err(format!("conservation: pushed {} popped {seen}", picks.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn batcher_timeout_flushes_partial_batches() {
+    let mut b = Batcher::new(BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) });
+    let key = BatchKey { kind: "prefill_dense", bucket: 512, checkpoint: "base".into() };
+    b.push(key.clone(), req(1));
+    assert!(b.pop_ready(Instant::now()).is_none(), "must wait for max_wait");
+    let later = Instant::now() + Duration::from_millis(5);
+    let batch = b.pop_ready(later).expect("timeout flush");
+    assert_eq!(batch.requests.len(), 1);
+}
+
+// --- admission ---------------------------------------------------------
+
+#[test]
+fn admission_never_exceeds_limits() {
+    forall(
+        103,
+        80,
+        |r: &mut Rng| {
+            // (tokens, op) — op even = admit, odd = release
+            let ops: Vec<(usize, usize)> =
+                (0..50).map(|_| (1 + r.below(2000) as usize, r.below(2) as usize)).collect();
+            ops
+        },
+        |ops| {
+            let cfg = AdmissionConfig { max_tokens: 8192, max_requests: 16 };
+            let adm = Admission::new(cfg);
+            let mut live: Vec<usize> = vec![];
+            for (tokens, op) in ops {
+                if *op == 1 {
+                    if let Some(t) = live.pop() {
+                        adm.release(t);
+                    }
+                    continue;
+                }
+                match adm.try_admit(*tokens) {
+                    Admit::Accepted => live.push(*tokens),
+                    Admit::Rejected { .. } => {}
+                }
+                let (tok, reqs) = adm.outstanding();
+                if tok > cfg.max_tokens || reqs > cfg.max_requests {
+                    return Err(format!("limits exceeded: {tok} tokens / {reqs} reqs"));
+                }
+                if tok != live.iter().sum::<usize>() || reqs != live.len() {
+                    return Err("accounting drift".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// --- schedule algebra ---------------------------------------------------
+
+#[test]
+fn budget_matched_uniform_equals_decay_cost() {
+    forall(
+        104,
+        120,
+        |r: &mut Rng| (512 + r.below(1 << 15) as usize, 0.3 + r.f64() * 0.69, 4.0 + r.f64() * 60.0),
+        |&(n, mu, ks)| {
+            // §3.3's k_uni = k_start(1+μ)/2 drops the -k²/2 term, so it is
+            // exact only for k ≪ N — the paper's operating regime
+            // (budgets ≤ ~30%). Outside it the rule legitimately drifts.
+            if ks * 64.0 >= 0.3 * n as f64 {
+                return Ok(());
+            }
+            let cu = cost_uniform(n, k_uniform_matched(ks, mu) * 64.0);
+            let cd = cost_decay(n, ks * 64.0, mu);
+            let rel = (cu - cd).abs() / cd.max(1.0);
+            if rel < 0.05 {
+                Ok(())
+            } else {
+                Err(format!("matched-cost rule off by {:.1}%", rel * 100.0))
+            }
+        },
+    );
+}
+
+#[test]
+fn decay_savings_term_matches_paper_eq4() {
+    // C_uni - C_decay == 0.5·k_start·(1-μ)·(N-k_start) exactly (Eq. 4)
+    forall(
+        105,
+        120,
+        |r: &mut Rng| (1024 + r.below(1 << 16) as usize, 0.3 + r.f64() * 0.7, 64.0 + r.f64() * 4096.0),
+        |&(n, mu, ks)| {
+            let savings = cost_uniform(n, ks) - cost_decay(n, ks, mu);
+            let want = 0.5 * ks * (1.0 - mu) * (n as f64 - ks);
+            if (savings - want).abs() < 1e-6 * want.abs().max(1.0) {
+                Ok(())
+            } else {
+                Err(format!("savings {savings} != Eq.4 {want}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn k_avg_between_k_end_and_k_start() {
+    forall(
+        106,
+        100,
+        |r: &mut Rng| (8 + r.below(120) as usize, 0.3 + r.f64() * 0.7, 3.0 + r.f64() * 20.0),
+        |&(nblk, mu, ks)| {
+            let cfg = TpdConfig { k_start: ks, mu, ..Default::default() };
+            let kavg = k_avg_blocks(nblk, &cfg);
+            // causal clamping can push below μ·k_start on tiny grids; the
+            // hard invariants are positivity and the k_start ceiling.
+            if kavg <= 0.0 {
+                return Err("k_avg <= 0".into());
+            }
+            if kavg > ks.max(cfg.min_total as f64) + 1.0 {
+                return Err(format!("k_avg {kavg} above k_start {ks}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn schedule_cost_never_exceeds_dense() {
+    forall(
+        107,
+        100,
+        |r: &mut Rng| (16 + r.below(100) as usize, 0.3 + r.f64() * 0.7, 2.0 + r.f64() * 40.0),
+        |&(nblk, mu, ks)| {
+            let cfg = TpdConfig { k_start: ks, mu, ..Default::default() };
+            let total: usize = block_budget_schedule(nblk, &cfg).iter().sum();
+            let dense = nblk * (nblk + 1) / 2;
+            if total <= dense {
+                Ok(())
+            } else {
+                Err(format!("selected {total} block-pairs > dense {dense}"))
+            }
+        },
+    );
+    let _ = cost_dense(8);
+}
+
+// --- selection invariants under random inputs ---------------------------
+
+#[test]
+fn stem_selection_always_valid() {
+    forall(
+        108,
+        20,
+        |r: &mut Rng| (r.below(1 << 31), 2 + r.below(6) as usize, 0.3 + r.f64() * 0.7),
+        |&(seed, nblk, mu)| {
+            let mut rng = Rng::new(seed);
+            let block = 32;
+            let n = nblk * block;
+            let q = Tensor::randn(&[2, n, 16], &mut rng);
+            let k = Tensor::randn(&[1, n, 16], &mut rng);
+            let v = Tensor::randn(&[1, n, 16], &mut rng);
+            let cfg = TpdConfig { k_start: 3.0, mu, ..Default::default() };
+            let sel = select_stem(&q, &k, &v, block, 8, &cfg, 0.2);
+            sel.validate()?;
+            let bud = sel.budget_fraction();
+            if !(0.0..=1.0 + 1e-9).contains(&bud) {
+                return Err(format!("budget {bud} out of range"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// --- json substrate ------------------------------------------------------
+
+#[test]
+fn json_roundtrips_numbers_and_nesting() {
+    forall(
+        109,
+        200,
+        |r: &mut Rng| {
+            let depth = r.below(4) as usize;
+            let x = (r.f64() - 0.5) * 1e6;
+            (depth, x)
+        },
+        |&(depth, x)| {
+            let mut s = format!("{x}");
+            for _ in 0..depth {
+                s = format!("[{s}, {{\"k\": {s}}}]");
+            }
+            let j = Json::parse(&s).map_err(|e| format!("parse: {e}"))?;
+            let mut cur = &j;
+            for _ in 0..depth {
+                cur = &cur.as_arr().ok_or("not arr")?[0];
+            }
+            let got = cur.as_f64().ok_or("not num")?;
+            if (got - x).abs() > 1e-9 * x.abs().max(1.0) {
+                return Err(format!("{got} != {x}"));
+            }
+            Ok(())
+        },
+    );
+}
