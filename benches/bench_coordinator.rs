@@ -57,6 +57,26 @@ fn main() {
         st.print();
     }
 
+    // admission with a cost-model work estimate attached (the new third
+    // limit; must stay as cheap as the token-only path)
+    {
+        use stem::sim::{estimate_core_prefill_ns, Geometry, MethodCost};
+        let g = Geometry { n_layers: 1, n_heads: 8, d_head: 32, d_model: 256, d_ff: 1024, block: 64 };
+        let est = estimate_core_prefill_ns(
+            &g,
+            2048,
+            MethodCost::Stem { k_start_blocks: 6.4, mu: 0.7 },
+            4,
+        );
+        let adm = Admission::new(AdmissionConfig { max_work_ns: 1e12, ..Default::default() });
+        let st = bencher.run("admission: try_admit_work + release_work", || {
+            let a = adm.try_admit_work(1024, est);
+            black_box(&a);
+            adm.release_work(1024, est);
+        });
+        st.print();
+    }
+
     // KV pool allocate/release
     {
         let mut kv = KvCache::new(KvConfig { total_pages: 4096, page_tokens: 64 });

@@ -8,14 +8,19 @@
 //!      whole-graph check.
 
 use stem::sparse::{
-    antidiag_scores, block_sparse_attention, oam_scores, select_stem, value_block_logmag, Tensor,
+    antidiag_scores, block_sparse_attention, block_sparse_attention_reference, oam_scores,
+    select_stem, value_block_logmag, Tensor,
 };
 use stem::sparse::schedule::TpdConfig;
 use stem::util::bench::{black_box, Bencher};
+use stem::util::cli::Args;
 use stem::util::rng::Rng;
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let args = Args::parse(std::env::args().skip(1), false);
+    let quick = args.flag("quick");
+    let threads = args.init_thread_pool();
+    println!("sparse-core pool: {threads} threads (--threads / STEM_THREADS)");
     let bencher = if quick { Bencher::quick() } else { Bencher::default() };
     let (h, hk, n, dh, block, stride) = (8usize, 4usize, 2048usize, 32usize, 64usize, 16usize);
     let mut rng = Rng::new(11);
@@ -42,10 +47,18 @@ fn main() {
     });
     s_sel.print();
     let sel = select_stem(&q, &k, &v, block, stride, &cfg, 0.2);
-    let s_attn = bencher.run("exec: block-sparse attention", || {
+    let s_attn = bencher.run("exec: block-sparse attention (fused)", || {
         black_box(block_sparse_attention(&q, &k, &v, &sel, block));
     });
     s_attn.print();
+    let s_attn_ref = bencher.run("exec: block-sparse attention (seed scalar)", || {
+        black_box(block_sparse_attention_reference(&q, &k, &v, &sel, block));
+    });
+    s_attn_ref.print();
+    println!(
+        "fused kernel speedup vs seed scalar path: {:.2}x",
+        s_attn_ref.median_ns / s_attn.median_ns
+    );
 
     let metric_ms = s_oam.median_ns / 1e6;
     let exec_ms = s_attn.median_ns / 1e6;

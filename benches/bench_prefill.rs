@@ -9,8 +9,9 @@
 use std::path::Path;
 
 use stem::runtime::{Engine, ScalarValue};
-use stem::sim::project_figure1;
+use stem::sim::{estimate_core_prefill_ns, project_figure1, Geometry, MethodCost};
 use stem::util::bench::{black_box, Bencher};
+use stem::util::cli::Args;
 
 fn scalars_for(engine: &Engine, kind: &str, n: usize) -> Vec<ScalarValue> {
     let d = engine.manifest().defaults_for(n).expect("defaults");
@@ -36,7 +37,9 @@ fn scalars_for(engine: &Engine, kind: &str, n: usize) -> Vec<ScalarValue> {
 }
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let args = Args::parse(std::env::args().skip(1), false);
+    let quick = args.flag("quick");
+    let threads = args.init_thread_pool();
     let artifacts = stem::artifacts_dir();
     let engine = Engine::new(&artifacts).expect("run `make artifacts` first");
     let man = engine.manifest().clone();
@@ -101,6 +104,27 @@ fn main() {
             p.kernel_ms,
             p.total_ms,
             100.0 * p.budget_fraction
+        );
+    }
+
+    // pure-rust reference core: calibrated wall-clock projection of the
+    // same comparison (the admission-control work estimator)
+    println!("\n== pure-rust core projection (calibrated constants, {threads} threads) ==");
+    let g = Geometry { n_layers: 1, n_heads: 8, d_head: 32, d_model: 256, d_ff: 1024, block: 64 };
+    for n in [2048usize, 4096, 8192] {
+        let nblk = (n / g.block) as f64;
+        let dense = estimate_core_prefill_ns(&g, n, MethodCost::Dense, threads);
+        let stem = estimate_core_prefill_ns(
+            &g,
+            n,
+            MethodCost::Stem { k_start_blocks: 0.2 * nblk, mu: 0.7 },
+            threads,
+        );
+        println!(
+            "  n={n:<6} dense {:>9.2} ms  stem {:>9.2} ms  projected speedup {:.2}x",
+            dense / 1e6,
+            stem / 1e6,
+            dense / stem
         );
     }
     let _ = Path::new("");

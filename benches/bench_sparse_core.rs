@@ -1,20 +1,48 @@
 //! Micro-benchmarks of the pure-rust sparse core (pooling, metric,
 //! selection, attention) across sizes — the perf-pass iteration target
 //! for the L3 reference path (EXPERIMENTS.md §Perf).
+//!
+//! Measures the PR-1 flat-CSR parallel pipeline against the retained
+//! seed-shaped scalar path (`select_stem_reference`,
+//! `block_sparse_attention_reference`) and writes machine-readable
+//! results to `BENCH_sparse_core.json` so future PRs have a perf
+//! trajectory.
+//!
+//!   cargo bench --bench bench_sparse_core                 # full sizes
+//!   cargo bench --bench bench_sparse_core -- --quick      # small samples
+//!   cargo bench --bench bench_sparse_core -- --threads 1  # serial core
 
 use stem::sparse::schedule::TpdConfig;
 use stem::sparse::{
-    antidiag_scores, block_sparse_attention, dense_attention, oam_scores, select_stem, Tensor,
+    antidiag_scores, block_sparse_attention, block_sparse_attention_reference, dense_attention,
+    oam_scores, select_stem, select_stem_reference, Tensor,
 };
-use stem::util::bench::{black_box, Bencher};
+use stem::util::bench::{black_box, Bencher, Stats};
+use stem::util::cli::Args;
+use stem::util::json::Json;
 use stem::util::rng::Rng;
 
+struct Row {
+    method: String,
+    n: usize,
+    median_ns: f64,
+    /// vs the retained seed scalar path at the same (method, n); 0 = n/a
+    speedup_vs_seed: f64,
+}
+
+fn row(st: &Stats, n: usize, speedup: f64) -> Row {
+    Row { method: st.name.clone(), n, median_ns: st.median_ns, speedup_vs_seed: speedup }
+}
+
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let args = Args::parse(std::env::args().skip(1), false);
+    let quick = args.flag("quick");
+    let threads = args.init_thread_pool();
     let bencher = if quick { Bencher::quick() } else { Bencher::default() };
     let (h, hk, dh, block, stride) = (8usize, 4usize, 32usize, 64usize, 16usize);
+    let mut rows: Vec<Row> = vec![];
 
-    for n in [512usize, 1024, 2048] {
+    for n in [512usize, 1024, 2048, 4096] {
         let mut rng = Rng::new(3);
         let q = Tensor::randn(&[h, n, dh], &mut rng);
         let k = Tensor::randn(&[hk, n, dh], &mut rng);
@@ -22,28 +50,107 @@ fn main() {
         let nblk = (n / block) as f64;
         let cfg = TpdConfig { k_start: 0.2 * nblk, mu: 0.7, ..Default::default() };
 
-        bencher.run(&format!("antidiag_scores n={n}"), || {
+        let s = bencher.run(&format!("antidiag_scores n={n}"), || {
             black_box(antidiag_scores(&q, &k, block, stride));
-        }).print();
-        bencher.run(&format!("oam_scores n={n}"), || {
+        });
+        s.print();
+        rows.push(row(&s, n, 0.0));
+        let s = bencher.run(&format!("oam_scores n={n}"), || {
             black_box(oam_scores(&q, &k, &v, block, stride, 0.2));
-        }).print();
-        bencher.run(&format!("select_stem n={n}"), || {
+        });
+        s.print();
+        rows.push(row(&s, n, 0.0));
+
+        let s_sel_ref = bencher.run(&format!("select_stem_reference n={n}"), || {
+            black_box(select_stem_reference(&q, &k, &v, block, stride, &cfg, 0.2));
+        });
+        s_sel_ref.print();
+        rows.push(row(&s_sel_ref, n, 1.0));
+        let s_sel = bencher.run(&format!("select_stem n={n}"), || {
             black_box(select_stem(&q, &k, &v, block, stride, &cfg, 0.2));
-        }).print();
+        });
+        s_sel.print();
+        rows.push(row(&s_sel, n, s_sel_ref.median_ns / s_sel.median_ns));
+
         let sel = select_stem(&q, &k, &v, block, stride, &cfg, 0.2);
-        let s_sparse = bencher.run(&format!("block_sparse_attention n={n}"), || {
+        let s_attn_ref = bencher.run(&format!("block_sparse_attention_reference n={n}"), || {
+            black_box(block_sparse_attention_reference(&q, &k, &v, &sel, block));
+        });
+        s_attn_ref.print();
+        rows.push(row(&s_attn_ref, n, 1.0));
+        let s_attn = bencher.run(&format!("block_sparse_attention n={n}"), || {
             black_box(block_sparse_attention(&q, &k, &v, &sel, block));
         });
-        s_sparse.print();
-        let s_dense = bencher.run(&format!("dense_attention n={n}"), || {
-            black_box(dense_attention(&q, &k, &v));
+        s_attn.print();
+        rows.push(row(&s_attn, n, s_attn_ref.median_ns / s_attn.median_ns));
+
+        // acceptance figure: selection + execution, new pipeline vs seed
+        let combined_seed = s_sel_ref.median_ns + s_attn_ref.median_ns;
+        let combined_new = s_sel.median_ns + s_attn.median_ns;
+        rows.push(Row {
+            method: "select_stem+block_sparse_attention".into(),
+            n,
+            median_ns: combined_new,
+            speedup_vs_seed: combined_seed / combined_new,
         });
-        s_dense.print();
         println!(
-            "  -> rust-core dense/sparse ratio at n={n}: {:.2}x (budget {:.1}%)\n",
-            s_dense.median_ns / s_sparse.median_ns,
-            100.0 * sel.budget_fraction()
+            "  -> select+attention speedup vs seed scalar path at n={n}: {:.2}x ({threads} threads)",
+            combined_seed / combined_new
         );
+
+        // dense reference is O(N²·dh) scalar work per head: cap the size
+        if n <= 2048 {
+            let s_dense = bencher.run(&format!("dense_attention n={n}"), || {
+                black_box(dense_attention(&q, &k, &v));
+            });
+            s_dense.print();
+            rows.push(row(&s_dense, n, 0.0));
+            println!(
+                "  -> rust-core dense/sparse ratio at n={n}: {:.2}x (budget {:.1}%)\n",
+                s_dense.median_ns / s_attn.median_ns,
+                100.0 * sel.budget_fraction()
+            );
+        } else {
+            println!(
+                "  -> budget {:.1}% at n={n} (dense reference skipped above 2048)\n",
+                100.0 * sel.budget_fraction()
+            );
+        }
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("bench_sparse_core".into())),
+        ("threads", Json::Num(threads as f64)),
+        ("quick", Json::Bool(quick)),
+        (
+            "geometry",
+            Json::obj(vec![
+                ("h", Json::Num(h as f64)),
+                ("hk", Json::Num(hk as f64)),
+                ("dh", Json::Num(dh as f64)),
+                ("block", Json::Num(block as f64)),
+                ("stride", Json::Num(stride as f64)),
+            ]),
+        ),
+        (
+            "results",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("method", Json::Str(r.method.clone())),
+                            ("n", Json::Num(r.n as f64)),
+                            ("ns_per_iter", Json::Num(r.median_ns)),
+                            ("speedup_vs_seed", Json::Num(r.speedup_vs_seed)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let path = "BENCH_sparse_core.json";
+    match std::fs::write(path, format!("{out}")) {
+        Ok(()) => println!("wrote {path} ({} result rows)", rows.len()),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

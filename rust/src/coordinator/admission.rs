@@ -1,7 +1,11 @@
 //! Admission control / backpressure: bounds outstanding prefill work so a
-//! burst cannot blow memory or queue latency. Two limits:
+//! burst cannot blow memory or queue latency. Three limits:
 //!   * outstanding tokens (the quantity the cost model says we pay for)
 //!   * outstanding requests
+//!   * outstanding estimated work (wall-clock ns from the calibrated core
+//!     cost model, `sim::cost::estimate_core_prefill_ns` — constants
+//!     re-fit to the PR-1 flat-CSR parallel kernel, so the same token
+//!     count now admits more concurrent work than the seed scalar path)
 //! Shed-on-overflow semantics (caller may retry); the serve example turns
 //! rejections into client backoff.
 
@@ -11,11 +15,14 @@ use std::sync::{Condvar, Mutex};
 pub struct AdmissionConfig {
     pub max_tokens: usize,
     pub max_requests: usize,
+    /// Ceiling on summed estimated work of admitted requests, in ns;
+    /// `f64::INFINITY` (the default) disables the work dimension.
+    pub max_work_ns: f64,
 }
 
 impl Default for AdmissionConfig {
     fn default() -> Self {
-        AdmissionConfig { max_tokens: 64 * 1024, max_requests: 256 }
+        AdmissionConfig { max_tokens: 64 * 1024, max_requests: 256, max_work_ns: f64::INFINITY }
     }
 }
 
@@ -23,6 +30,7 @@ impl Default for AdmissionConfig {
 struct State {
     tokens: usize,
     requests: usize,
+    work_ns: f64,
 }
 
 pub struct Admission {
@@ -31,7 +39,7 @@ pub struct Admission {
     freed: Condvar,
 }
 
-#[derive(Debug, PartialEq, Eq)]
+#[derive(Debug, PartialEq)]
 pub enum Admit {
     Accepted,
     Rejected { reason: &'static str },
@@ -44,6 +52,13 @@ impl Admission {
 
     /// Non-blocking admission attempt.
     pub fn try_admit(&self, n_tokens: usize) -> Admit {
+        self.try_admit_work(n_tokens, 0.0)
+    }
+
+    /// Non-blocking admission with a work estimate (ns) from the cost
+    /// model attached; the estimate must be passed back to
+    /// [`Admission::release_work`].
+    pub fn try_admit_work(&self, n_tokens: usize, est_ns: f64) -> Admit {
         let mut s = self.state.lock().unwrap();
         if s.requests + 1 > self.cfg.max_requests {
             return Admit::Rejected { reason: "max_requests" };
@@ -51,8 +66,13 @@ impl Admission {
         if s.tokens + n_tokens > self.cfg.max_tokens {
             return Admit::Rejected { reason: "max_tokens" };
         }
+        if s.requests > 0 && s.work_ns + est_ns > self.cfg.max_work_ns {
+            // never starve: an empty system admits any single request
+            return Admit::Rejected { reason: "max_work_ns" };
+        }
         s.tokens += n_tokens;
         s.requests += 1;
+        s.work_ns += est_ns;
         Admit::Accepted
     }
 
@@ -67,9 +87,14 @@ impl Admission {
     }
 
     pub fn release(&self, n_tokens: usize) {
+        self.release_work(n_tokens, 0.0);
+    }
+
+    pub fn release_work(&self, n_tokens: usize, est_ns: f64) {
         let mut s = self.state.lock().unwrap();
         s.tokens = s.tokens.saturating_sub(n_tokens);
         s.requests = s.requests.saturating_sub(1);
+        s.work_ns = (s.work_ns - est_ns).max(0.0);
         drop(s);
         self.freed.notify_all();
     }
@@ -77,6 +102,11 @@ impl Admission {
     pub fn outstanding(&self) -> (usize, usize) {
         let s = self.state.lock().unwrap();
         (s.tokens, s.requests)
+    }
+
+    /// Summed work estimate (ns) of currently admitted requests.
+    pub fn outstanding_work_ns(&self) -> f64 {
+        self.state.lock().unwrap().work_ns
     }
 }
 
@@ -86,7 +116,11 @@ mod tests {
 
     #[test]
     fn rejects_over_token_budget() {
-        let a = Admission::new(AdmissionConfig { max_tokens: 1000, max_requests: 10 });
+        let a = Admission::new(AdmissionConfig {
+            max_tokens: 1000,
+            max_requests: 10,
+            ..Default::default()
+        });
         assert_eq!(a.try_admit(600), Admit::Accepted);
         assert!(matches!(a.try_admit(600), Admit::Rejected { reason: "max_tokens" }));
         a.release(600);
@@ -95,16 +129,63 @@ mod tests {
 
     #[test]
     fn rejects_over_request_budget() {
-        let a = Admission::new(AdmissionConfig { max_tokens: 1_000_000, max_requests: 2 });
+        let a = Admission::new(AdmissionConfig {
+            max_tokens: 1_000_000,
+            max_requests: 2,
+            ..Default::default()
+        });
         assert_eq!(a.try_admit(1), Admit::Accepted);
         assert_eq!(a.try_admit(1), Admit::Accepted);
         assert!(matches!(a.try_admit(1), Admit::Rejected { reason: "max_requests" }));
     }
 
     #[test]
+    fn rejects_over_work_budget_but_never_starves() {
+        let a = Admission::new(AdmissionConfig { max_work_ns: 1e6, ..Default::default() });
+        // a single oversized request is always admitted on an empty system
+        assert_eq!(a.try_admit_work(64, 5e6), Admit::Accepted);
+        assert!(matches!(a.try_admit_work(64, 1.0), Admit::Rejected { reason: "max_work_ns" }));
+        a.release_work(64, 5e6);
+        assert_eq!(a.outstanding_work_ns(), 0.0);
+        assert_eq!(a.try_admit_work(64, 4e5), Admit::Accepted);
+        assert_eq!(a.try_admit_work(64, 4e5), Admit::Accepted);
+        assert!(matches!(a.try_admit_work(64, 4e5), Admit::Rejected { reason: "max_work_ns" }));
+    }
+
+    #[test]
+    fn work_budget_from_calibrated_cost_model() {
+        use crate::sim::cost::{estimate_core_prefill_ns, Geometry, MethodCost};
+        let g = Geometry {
+            n_layers: 1,
+            n_heads: 8,
+            d_head: 32,
+            d_model: 256,
+            d_ff: 1024,
+            block: 64,
+        };
+        let est =
+            |n: usize| estimate_core_prefill_ns(&g, n, MethodCost::Stem { k_start_blocks: 6.4, mu: 0.7 }, 4);
+        // budget two mid-size prefills' worth of work
+        let a = Admission::new(AdmissionConfig {
+            max_work_ns: 2.1 * est(2048),
+            ..Default::default()
+        });
+        assert_eq!(a.try_admit_work(2048, est(2048)), Admit::Accepted);
+        assert_eq!(a.try_admit_work(2048, est(2048)), Admit::Accepted);
+        assert!(matches!(
+            a.try_admit_work(2048, est(2048)),
+            Admit::Rejected { reason: "max_work_ns" }
+        ));
+    }
+
+    #[test]
     fn blocking_admission_wakes_on_release() {
         use std::sync::Arc;
-        let a = Arc::new(Admission::new(AdmissionConfig { max_tokens: 100, max_requests: 10 }));
+        let a = Arc::new(Admission::new(AdmissionConfig {
+            max_tokens: 100,
+            max_requests: 10,
+            ..Default::default()
+        }));
         a.admit_blocking(100);
         let a2 = Arc::clone(&a);
         let h = std::thread::spawn(move || {

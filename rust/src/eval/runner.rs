@@ -10,6 +10,7 @@ use anyhow::Result;
 use crate::coordinator::{Coordinator, Method};
 use crate::eval::scoring::{score_sample, Aggregate};
 use crate::model::manifest::ServingDefaults;
+use crate::util::threadpool;
 use crate::workload::{load_eval_set, EvalSample};
 
 #[derive(Debug, Clone)]
@@ -133,9 +134,19 @@ impl Evaluator {
                         self.coordinator.submit(checkpoint, method, s.ids.clone(), false)
                     })
                     .collect::<Result<Vec<_>>>()?;
-                for (rx, s) in rxs.into_iter().zip(&samples) {
-                    let resp = rx.recv()??;
-                    agg.add(score_sample(&resp, s));
+                let resps: Vec<_> = rxs
+                    .into_iter()
+                    .map(|rx| rx.recv()?)
+                    .collect::<Result<Vec<_>>>()?;
+                // teacher-forced scoring is per-sample independent: fan it
+                // over the sparse-core pool
+                let scores = threadpool::scope_parallel_borrowed(
+                    threadpool::global(),
+                    resps.len(),
+                    |i| score_sample(&resps[i], &samples[i]),
+                );
+                for s in scores {
+                    agg.add(s);
                 }
                 cells.insert((family.to_string(), n_ctx), agg);
             }

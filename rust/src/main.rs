@@ -49,7 +49,8 @@ USAGE: stem <subcommand> [flags]
   cost      [--n N] [--k-start K] [--mu MU] [--block B]
   selftest
 
-flags: --artifacts DIR  --workers N  --limit N  --quiet
+flags: --artifacts DIR  --workers N  --threads N  --limit N  --quiet
+       (--threads / STEM_THREADS size the pure-rust sparse-core pool)
 ";
 
 fn main() {
@@ -57,6 +58,9 @@ fn main() {
     if args.flag("quiet") {
         stem::util::set_log_level(1);
     }
+    // size the sparse-core pool before any kernel runs (--threads /
+    // STEM_THREADS / available cores)
+    args.init_thread_pool();
     let code = match run(&args) {
         Ok(()) => 0,
         Err(e) => {

@@ -91,6 +91,65 @@ pub fn method_cost(g: &Geometry, n: usize, m: MethodCost) -> CostBreakdown {
     }
 }
 
+/// Throughput constants of the *pure-rust* reference core, used to turn
+/// the pair counts above into wall-clock estimates for admission control.
+///
+/// Re-fit for the PR-1 flat-CSR parallel pipeline (partial top-k
+/// selection + fused tiled execution): the fused kernel amortizes one
+/// K/V-slab load per `block×block` tile instead of one gather per pair,
+/// and selection dropped from a full per-row sort to an O(width·log k)
+/// bounded heap, so the per-pair and per-candidate constants are ~2–3×
+/// below the seed scalar path. Refresh these against
+/// `BENCH_sparse_core.json` (emitted by `benches/bench_sparse_core.rs`)
+/// whenever the kernels change.
+#[derive(Debug, Clone, Copy)]
+pub struct RustCoreCalibration {
+    /// ns per computed (query, key) pair per head-dim unit, single thread,
+    /// fused tiled kernel
+    pub ns_per_pair_dh: f64,
+    /// ns per metric FLOP (antidiag sampling + pooling), single thread
+    pub ns_per_metric_flop: f64,
+    /// ns per selection candidate (one bounded-heap offer)
+    pub ns_per_select_candidate: f64,
+    /// fraction of linear scaling realized per extra worker thread
+    pub parallel_efficiency: f64,
+}
+
+pub const RUST_CORE: RustCoreCalibration = RustCoreCalibration {
+    ns_per_pair_dh: 0.11,
+    ns_per_metric_flop: 0.35,
+    ns_per_select_candidate: 2.0,
+    parallel_efficiency: 0.80,
+};
+
+/// Estimated wall-clock ns for one pure-rust reference prefill of length
+/// `n` under `m` on `threads` workers — the quantity the coordinator's
+/// admission control budgets against (see `coordinator::admission`).
+pub fn estimate_core_prefill_ns(
+    g: &Geometry,
+    n: usize,
+    m: MethodCost,
+    threads: usize,
+) -> f64 {
+    let cal = &RUST_CORE;
+    let c = method_cost(g, n, m);
+    // attn_flops counts 4·dh FLOPs per pair: undo to pairs·dh units
+    let pair_dh_units = c.attn_flops / 4.0;
+    let nblk = (n / g.block).max(1) as f64;
+    // only OAM-ranked selection scans every causal candidate per head per
+    // layer; dense skips selection and streaming builds rows in O(nblk)
+    let candidates = if matches!(m, MethodCost::Stem { .. }) {
+        nblk * (nblk + 1.0) / 2.0 * g.n_heads as f64 * g.n_layers as f64
+    } else {
+        0.0
+    };
+    let serial_ns = pair_dh_units * cal.ns_per_pair_dh
+        + c.metric_flops * cal.ns_per_metric_flop
+        + candidates * cal.ns_per_select_candidate;
+    let speedup = 1.0 + (threads.max(1) as f64 - 1.0) * cal.parallel_efficiency;
+    serial_ns / speedup
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -125,6 +184,18 @@ mod tests {
         let c2 = method_cost(&g, 65536, MethodCost::Streaming { sink_blocks: 4.0, local_blocks: 8.0 });
         let r = c2.attn_flops / c1.attn_flops;
         assert!((r - 2.0).abs() < 0.05, "ratio {r}");
+    }
+
+    #[test]
+    fn core_estimate_scales_down_with_threads_and_sparsity() {
+        let g = geom();
+        let stem = MethodCost::Stem { k_start_blocks: 25.6, mu: 0.7 };
+        let e1 = estimate_core_prefill_ns(&g, 32768, stem, 1);
+        let e8 = estimate_core_prefill_ns(&g, 32768, stem, 8);
+        assert!(e1 > 0.0 && e8 > 0.0);
+        assert!(e1 / e8 > 4.0, "8 threads must cut the estimate >4x, got {:.2}", e1 / e8);
+        let dense = estimate_core_prefill_ns(&g, 32768, MethodCost::Dense, 1);
+        assert!(e1 < dense, "stem estimate {e1} must undercut dense {dense}");
     }
 
     #[test]

@@ -11,5 +11,8 @@
 pub mod cost;
 pub mod h20;
 
-pub use cost::{method_cost, CostBreakdown, MethodCost};
+pub use cost::{
+    estimate_core_prefill_ns, method_cost, CostBreakdown, Geometry, MethodCost,
+    RustCoreCalibration, RUST_CORE,
+};
 pub use h20::{project_figure1, H20Model, LLAMA31_8B};

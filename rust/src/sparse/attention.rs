@@ -5,39 +5,115 @@
 //! (b) the compute model behind the simulator and the scheduler's cost
 //! estimates, (c) the subject of the L3 property tests. The request path
 //! runs the XLA-compiled artifacts, not this.
+//!
+//! # Flat CSR selection layout
+//!
+//! A [`Selection`] stores every (head, query-block) row in one contiguous
+//! `indices: Vec<u32>` addressed through `row_offsets` (length
+//! `n_heads·nblk + 1`, CSR-style): row `(h, i)` owns
+//! `indices[row_offsets[h·nblk+i] .. row_offsets[h·nblk+i+1]]`, of which
+//! the first `counts[h·nblk+i]` entries are the *selected* key blocks
+//! (any remainder is interface padding, e.g. from fixed-width python
+//! goldens). Stem rows are emitted sorted ascending by block id so the
+//! execution kernel walks K/V monotonically.
+//!
+//! # Parallel decomposition
+//!
+//! Every stage fans independent `(head, query-block)` work items over the
+//! process-wide pool (`util::threadpool::global()`, sized by
+//! `STEM_THREADS` / `--threads` / `available_parallelism`):
+//!
+//! * `antidiag_scores` / `oam_scores` — one item per (head, query-block
+//!   row) of the routing-score matrix; OAM only computes the causal
+//!   triangle.
+//! * `select_stem` — one item per (head, query-block) row; each performs
+//!   an O(width·log k) bounded-heap partial selection instead of a full
+//!   sort (only the top `k(i)` entries are ever consumed), then writes a
+//!   pre-sized CSR slice.
+//! * `block_sparse_attention` — fused tiled kernel: one item per (head,
+//!   query-block) walks the row's selected key blocks once, computes the
+//!   whole `block×block` score tile with the K slab held in cache, runs
+//!   the online-softmax update per query row, and skips the within-block
+//!   causal mask entirely for off-diagonal blocks.
+//! * `dense_attention` — one item per (head, query-row-chunk).
+//!
+//! Work items return owned row buffers that are stitched into the output
+//! tensor on the calling thread, so no unsafe aliasing leaks out of the
+//! pool helper. The scalar seed-shaped paths are retained as
+//! [`select_stem_reference`] / [`block_sparse_attention_reference`] and
+//! the property tests pin the parallel kernels to them within 1e-5.
 
 use super::schedule::TpdConfig;
-use super::tensor::{axpy, dot, norm2, Tensor};
+use super::tensor::{axpy, dot, norm2, score_tile, score_tile_causal, Tensor};
+use crate::util::threadpool;
 
 pub const NEG_INF: f32 = -1e30;
+
+/// Fan `f(i)` for `i in 0..n_items` over the global pool, serially when
+/// the pool is single-threaded (or there is nothing to fan out).
+fn parallel_items<T, F>(n_items: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let pool = threadpool::global();
+    if n_items <= 1 || pool.workers() == 1 {
+        (0..n_items).map(f).collect()
+    } else {
+        threadpool::scope_parallel_borrowed(pool, n_items, f)
+    }
+}
+
+/// One (head, query-block-row) of the dual-diagonal routing scores; kept
+/// bitwise-identical to the scalar loop so parallelism cannot move floats.
+#[allow(clippy::too_many_arguments)]
+fn antidiag_row(
+    q: &Tensor,
+    k: &Tensor,
+    hh: usize,
+    hkv: usize,
+    i: usize,
+    j_hi: usize,
+    block: usize,
+    stride: usize,
+    scale: f32,
+    out: &mut [f32],
+) {
+    for (j, o) in out.iter_mut().enumerate().take(j_hi) {
+        let mut s = 0.0f32;
+        let mut t = 0;
+        while t < block {
+            let qrow = q.row3(hh, i * block + t);
+            s += dot(qrow, k.row3(hkv, j * block + (block - 1 - t)));
+            s += dot(qrow, k.row3(hkv, j * block + t));
+            t += stride;
+        }
+        *o = s * scale;
+    }
+}
 
 /// Dual-diagonal block routing scores (mirror of
 /// ref.pool_antidiag_scores): anti-diagonal samples cover odd within-block
 /// relative offsets, diagonal samples cover the even band (pure
 /// anti-diagonal is blind to copy/induction edges at exact block
 /// multiples). q: [H, N, dh], k: [Hk, N, dh] -> [H, nq, nk] row-major.
+/// Parallel across (head, query-block-row) items.
 pub fn antidiag_scores(q: &Tensor, k: &Tensor, block: usize, stride: usize) -> Tensor {
-    let (h, n, dh) = (q.shape[0], q.shape[1], q.shape[2]);
+    let (h, dh) = (q.shape[0], q.shape[2]);
     let hk = k.shape[0];
     let rep = h / hk;
-    let nblk = n / block;
+    let nblk = q.shape[1] / block;
     let scale = 1.0 / (dh as f32).sqrt();
+    let rows = parallel_items(h * nblk, |item| {
+        let (hh, i) = (item / nblk, item % nblk);
+        let mut row = vec![0.0f32; nblk];
+        antidiag_row(q, k, hh, hh / rep, i, nblk, block, stride, scale, &mut row);
+        row
+    });
     let mut out = Tensor::zeros(&[h, nblk, nblk]);
-    for hh in 0..h {
-        let hkv = hh / rep;
-        for i in 0..nblk {
-            for j in 0..nblk {
-                let mut s = 0.0f32;
-                let mut t = 0;
-                while t < block {
-                    let qrow = q.row3(hh, i * block + t);
-                    s += dot(qrow, k.row3(hkv, j * block + (block - 1 - t)));
-                    s += dot(qrow, k.row3(hkv, j * block + t));
-                    t += stride;
-                }
-                out.set3(hh, i, j, s * scale);
-            }
-        }
+    for (item, row) in rows.iter().enumerate() {
+        let off = item * nblk;
+        out.data[off..off + nblk].copy_from_slice(row);
     }
     out
 }
@@ -61,60 +137,146 @@ pub fn value_block_logmag(v: &Tensor, block: usize) -> Tensor {
 }
 
 /// Output-Aware Metric Eq. (7): routing + beta * max(0, logmag), causal.
-pub fn oam_scores(q: &Tensor, k: &Tensor, v: &Tensor, block: usize, stride: usize, beta: f32) -> Tensor {
-    let mut scores = antidiag_scores(q, k, block, stride);
+/// Only the causal triangle is computed (the strict upper triangle is
+/// NEG_INF by construction); parallel across (head, query-block-row).
+pub fn oam_scores(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    block: usize,
+    stride: usize,
+    beta: f32,
+) -> Tensor {
+    let (h, dh) = (q.shape[0], q.shape[2]);
+    let hk = k.shape[0];
+    let rep = h / hk;
+    let nblk = q.shape[1] / block;
+    let scale = 1.0 / (dh as f32).sqrt();
     let mv = value_block_logmag(v, block);
-    let (h, nblk) = (scores.shape[0], scores.shape[1]);
-    let rep = h / mv.shape[0];
-    for hh in 0..h {
-        for i in 0..nblk {
-            for j in 0..nblk {
-                let s = if j <= i {
-                    scores.at3(hh, i, j) + beta * mv.at3(hh / rep, j, 0).max(0.0)
-                } else {
-                    NEG_INF
-                };
-                scores.set3(hh, i, j, s);
-            }
+    let rows = parallel_items(h * nblk, |item| {
+        let (hh, i) = (item / nblk, item % nblk);
+        let hkv = hh / rep;
+        let mut row = vec![NEG_INF; nblk];
+        antidiag_row(q, k, hh, hkv, i, i + 1, block, stride, scale, &mut row);
+        for (j, o) in row.iter_mut().enumerate().take(i + 1) {
+            *o += beta * mv.at3(hkv, j, 0).max(0.0);
         }
+        row
+    });
+    let mut out = Tensor::zeros(&[h, nblk, nblk]);
+    for (item, row) in rows.iter().enumerate() {
+        let off = item * nblk;
+        out.data[off..off + nblk].copy_from_slice(row);
     }
-    scores
+    out
 }
 
-/// A block selection in the uniform kernel interface.
+/// A block selection in the uniform kernel interface, flat CSR layout
+/// (see the module docs for the row addressing scheme).
 #[derive(Debug, Clone)]
 pub struct Selection {
     pub nblk: usize,
-    /// [H][nq] -> selected block ids (first `counts` entries valid).
-    pub indices: Vec<Vec<Vec<u32>>>,
-    pub counts: Vec<Vec<u32>>,
+    pub n_heads: usize,
+    /// Concatenated per-row key-block ids for all `n_heads·nblk` rows.
+    pub indices: Vec<u32>,
+    /// CSR row starts into `indices`; length `n_heads·nblk + 1`.
+    pub row_offsets: Vec<u32>,
+    /// Selected entries per row (prefix of the row slice); length
+    /// `n_heads·nblk`.
+    pub counts: Vec<u32>,
 }
 
 impl Selection {
+    #[inline]
+    fn row_id(&self, h: usize, i: usize) -> usize {
+        h * self.nblk + i
+    }
+
+    /// Full stored row (selected prefix + interface padding).
+    #[inline]
+    pub fn row(&self, h: usize, i: usize) -> &[u32] {
+        let r = self.row_id(h, i);
+        &self.indices[self.row_offsets[r] as usize..self.row_offsets[r + 1] as usize]
+    }
+
+    /// Number of selected key blocks in row `(h, i)`.
+    #[inline]
+    pub fn count(&self, h: usize, i: usize) -> usize {
+        self.counts[self.row_id(h, i)] as usize
+    }
+
+    /// The selected key blocks of row `(h, i)` (first `count` entries).
+    #[inline]
+    pub fn selected(&self, h: usize, i: usize) -> &[u32] {
+        let r = self.row_id(h, i);
+        &self.indices[self.row_offsets[r] as usize
+            ..self.row_offsets[r] as usize + self.counts[r] as usize]
+    }
+
+    /// The full causal selection (every row keeps all its causal blocks) —
+    /// the dense-equivalence fixture used by tests and benches.
+    pub fn full_causal(n_heads: usize, nblk: usize) -> Selection {
+        let mut b = SelectionBuilder::with_capacity(n_heads, nblk, n_heads * nblk * (nblk + 1) / 2);
+        for _ in 0..n_heads {
+            for i in 0..nblk {
+                let row: Vec<u32> = (0..=i as u32).rev().collect();
+                b.push_row(&row, (i + 1) as u32);
+            }
+        }
+        b.finish()
+    }
+
     pub fn budget_fraction(&self) -> f64 {
         let nblk = self.nblk as f64;
-        let total = self.counts.len() as f64 * nblk * (nblk + 1.0) / 2.0;
-        let used: u64 = self.counts.iter().flatten().map(|&c| c as u64).sum();
+        let total = self.n_heads as f64 * nblk * (nblk + 1.0) / 2.0;
+        let used: u64 = self.counts.iter().map(|&c| c as u64).sum();
         used as f64 / total
     }
 
-    /// Validate the kernel-interface invariants (tests + debug builds).
+    /// Validate the kernel-interface invariants (tests + debug builds):
+    /// CSR structure, per-row count range, causality and no duplicates in
+    /// each selected prefix.
     pub fn validate(&self) -> Result<(), String> {
-        for (h, rows) in self.indices.iter().enumerate() {
-            for (i, row) in rows.iter().enumerate() {
-                let c = self.counts[h][i] as usize;
+        let rows = self.n_heads * self.nblk;
+        if self.row_offsets.len() != rows + 1 {
+            return Err(format!(
+                "row_offsets length {} != rows+1 {}",
+                self.row_offsets.len(),
+                rows + 1
+            ));
+        }
+        if self.counts.len() != rows {
+            return Err(format!("counts length {} != rows {rows}", self.counts.len()));
+        }
+        if self.row_offsets[0] != 0 || self.row_offsets[rows] as usize != self.indices.len() {
+            return Err("row_offsets must span exactly indices".into());
+        }
+        // one seen-mask reused across rows via epoch stamps: O(total) work
+        let mut seen = vec![0u32; self.nblk];
+        let mut stamp = 0u32;
+        for h in 0..self.n_heads {
+            for i in 0..self.nblk {
+                let r = self.row_id(h, i);
+                let (lo, hi) = (self.row_offsets[r] as usize, self.row_offsets[r + 1] as usize);
+                if hi < lo || hi > self.indices.len() {
+                    return Err(format!("h{h} row{i}: row_offsets not monotone"));
+                }
+                let c = self.counts[r] as usize;
                 if c == 0 || c > i + 1 {
                     return Err(format!("h{h} row{i}: count {c} out of range"));
                 }
-                let mut seen = vec![false; self.nblk];
-                for &b in &row[..c] {
+                if c > hi - lo {
+                    return Err(format!("h{h} row{i}: count {c} exceeds row width {}", hi - lo));
+                }
+                stamp += 1;
+                for &b in &self.indices[lo..lo + c] {
                     if b as usize > i {
                         return Err(format!("h{h} row{i}: non-causal block {b}"));
                     }
-                    if seen[b as usize] {
+                    if seen[b as usize] == stamp {
                         return Err(format!("h{h} row{i}: duplicate block {b}"));
                     }
-                    seen[b as usize] = true;
+                    seen[b as usize] = stamp;
                 }
             }
         }
@@ -122,7 +284,136 @@ impl Selection {
     }
 }
 
+/// Incremental builder for the flat CSR [`Selection`]; rows must be pushed
+/// in `(head-major, query-block)` order.
+pub struct SelectionBuilder {
+    nblk: usize,
+    n_heads: usize,
+    indices: Vec<u32>,
+    row_offsets: Vec<u32>,
+    counts: Vec<u32>,
+}
+
+impl SelectionBuilder {
+    pub fn new(n_heads: usize, nblk: usize) -> Self {
+        Self::with_capacity(n_heads, nblk, 0)
+    }
+
+    pub fn with_capacity(n_heads: usize, nblk: usize, cap: usize) -> Self {
+        let rows = n_heads * nblk;
+        let mut row_offsets = Vec::with_capacity(rows + 1);
+        row_offsets.push(0);
+        SelectionBuilder {
+            nblk,
+            n_heads,
+            indices: Vec::with_capacity(cap),
+            row_offsets,
+            counts: Vec::with_capacity(rows),
+        }
+    }
+
+    /// Append the next row: `row` is the stored slice (selected prefix +
+    /// optional padding), `count` the number of selected entries.
+    pub fn push_row(&mut self, row: &[u32], count: u32) {
+        debug_assert!(count as usize <= row.len());
+        self.indices.extend_from_slice(row);
+        self.row_offsets.push(self.indices.len() as u32);
+        self.counts.push(count);
+    }
+
+    pub fn finish(self) -> Selection {
+        assert_eq!(
+            self.counts.len(),
+            self.n_heads * self.nblk,
+            "SelectionBuilder: pushed {} rows, expected {}",
+            self.counts.len(),
+            self.n_heads * self.nblk
+        );
+        Selection {
+            nblk: self.nblk,
+            n_heads: self.n_heads,
+            indices: self.indices,
+            row_offsets: self.row_offsets,
+            counts: self.counts,
+        }
+    }
+}
+
+/// Bounded worst-at-root heap keeping the `k` best (score desc, block id
+/// asc on ties) entries of a streamed row: O(width·log k) per row versus
+/// the full sort's O(width·log width).
+struct TopK {
+    buf: Vec<(f32, u32)>,
+    k: usize,
+}
+
+impl TopK {
+    fn new(k: usize) -> Self {
+        TopK { buf: Vec::with_capacity(k), k }
+    }
+
+    /// `a` ranks strictly below `b` under (score desc, id asc).
+    #[inline]
+    fn worse(a: (f32, u32), b: (f32, u32)) -> bool {
+        a.0 < b.0 || (a.0 == b.0 && a.1 > b.1)
+    }
+
+    fn offer(&mut self, cand: (f32, u32)) {
+        if self.buf.len() < self.k {
+            self.buf.push(cand);
+            let mut i = self.buf.len() - 1;
+            while i > 0 {
+                let p = (i - 1) / 2;
+                if Self::worse(self.buf[i], self.buf[p]) {
+                    self.buf.swap(i, p);
+                    i = p;
+                } else {
+                    break;
+                }
+            }
+        } else if Self::worse(self.buf[0], cand) {
+            self.buf[0] = cand;
+            let mut i = 0;
+            loop {
+                let (lc, rc) = (2 * i + 1, 2 * i + 2);
+                let mut w = i;
+                if lc < self.buf.len() && Self::worse(self.buf[lc], self.buf[w]) {
+                    w = lc;
+                }
+                if rc < self.buf.len() && Self::worse(self.buf[rc], self.buf[w]) {
+                    w = rc;
+                }
+                if w == i {
+                    break;
+                }
+                self.buf.swap(i, w);
+                i = w;
+            }
+        }
+    }
+
+    /// Drain into ascending block-id order (cache-friendly K/V walk).
+    fn into_sorted_ids(self) -> Vec<u32> {
+        let mut ids: Vec<u32> = self.buf.into_iter().map(|(_, j)| j).collect();
+        ids.sort_unstable();
+        ids
+    }
+}
+
+#[inline]
+fn forced_bias(j: usize, i: usize, cfg: &TpdConfig) -> f32 {
+    // forced: sinks + local window
+    if j < cfg.init_keep || j + cfg.local_keep > i {
+        1e9
+    } else {
+        0.0
+    }
+}
+
 /// Stem selection: OAM ranking + TPD budget (mirror of select_stem).
+/// Partial top-k per row (bounded heap sized by the TPD budget `k(i)`),
+/// parallel across (head, query-block) rows, emitting the flat CSR layout
+/// directly (row `(h, i)` holds exactly `k(i)` sorted block ids).
 pub fn select_stem(
     q: &Tensor,
     k: &Tensor,
@@ -135,67 +426,122 @@ pub fn select_stem(
     let scores = oam_scores(q, k, v, block, stride, beta);
     let (h, nblk) = (scores.shape[0], scores.shape[1]);
     let kvec = super::schedule::block_budget_schedule(nblk, cfg);
-    let mut indices = vec![vec![Vec::with_capacity(nblk); nblk]; h];
-    let mut counts = vec![vec![0u32; nblk]; h];
-    for hh in 0..h {
-        for i in 0..nblk {
-            // forced: sinks + local window
-            let mut key: Vec<(f32, u32)> = (0..=i)
-                .map(|j| {
-                    let forced = j < cfg.init_keep || j + cfg.local_keep > i;
-                    let bias = if forced { 1e9 } else { 0.0 };
-                    (scores.at3(hh, i, j) + bias, j as u32)
-                })
-                .collect();
-            key.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
-            indices[hh][i] = key.iter().map(|&(_, j)| j).collect();
-            counts[hh][i] = kvec[i] as u32;
+    let rows = parallel_items(h * nblk, |item| {
+        let (hh, i) = (item / nblk, item % nblk);
+        let ki = kvec[i];
+        if ki >= i + 1 {
+            // budget covers the whole causal width: no ranking needed
+            return (0..=i as u32).collect::<Vec<u32>>();
         }
+        let mut top = TopK::new(ki);
+        for j in 0..=i {
+            top.offer((scores.at3(hh, i, j) + forced_bias(j, i, cfg), j as u32));
+        }
+        top.into_sorted_ids()
+    });
+    let mut b = SelectionBuilder::with_capacity(
+        h,
+        nblk,
+        h * super::schedule::block_budget_total(nblk, cfg),
+    );
+    for row in &rows {
+        b.push_row(row, row.len() as u32);
     }
-    Selection { nblk, indices, counts }
+    b.finish()
 }
 
-/// StreamingLLM selection (sinks + local window).
-pub fn select_streaming(h: usize, nblk: usize, sink: usize, local: usize) -> Selection {
-    let mut indices = vec![vec![Vec::new(); nblk]; h];
-    let mut counts = vec![vec![0u32; nblk]; h];
+/// The seed-shaped scalar selection path, retained as the equivalence
+/// oracle for [`select_stem`]: full sort of every row, single thread.
+pub fn select_stem_reference(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    block: usize,
+    stride: usize,
+    cfg: &TpdConfig,
+    beta: f32,
+) -> Selection {
+    let scores = oam_scores(q, k, v, block, stride, beta);
+    let (h, nblk) = (scores.shape[0], scores.shape[1]);
+    let kvec = super::schedule::block_budget_schedule(nblk, cfg);
+    let mut b = SelectionBuilder::with_capacity(
+        h,
+        nblk,
+        h * super::schedule::block_budget_total(nblk, cfg),
+    );
     for hh in 0..h {
         for i in 0..nblk {
-            let mut row: Vec<u32> = vec![];
-            for j in (0..=i).rev().take(local) {
-                row.push(j as u32);
-            }
-            for j in 0..sink.min(i + 1) {
-                if !row.contains(&(j as u32)) {
-                    row.push(j as u32);
-                }
-            }
-            counts[hh][i] = row.len() as u32;
-            // pad with the remaining causal blocks for interface width
-            for j in 0..=i {
-                if !row.contains(&(j as u32)) {
-                    row.push(j as u32);
-                }
-            }
-            indices[hh][i] = row;
+            let mut key: Vec<(f32, u32)> = (0..=i)
+                .map(|j| (scores.at3(hh, i, j) + forced_bias(j, i, cfg), j as u32))
+                .collect();
+            key.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+            let mut row: Vec<u32> = key.iter().take(kvec[i]).map(|&(_, j)| j).collect();
+            row.sort_unstable();
+            b.push_row(&row, kvec[i] as u32);
         }
     }
-    Selection { nblk, indices, counts }
+    b.finish()
+}
+
+/// StreamingLLM selection (sinks + local window). Each row is built in
+/// one pass over its causal width with an epoch-stamped seen-mask (the
+/// seed version re-scanned the row per candidate block, O(width²)).
+pub fn select_streaming(h: usize, nblk: usize, sink: usize, local: usize) -> Selection {
+    // rows are identical across heads: build head 0 once, replicate
+    let mut rows: Vec<(Vec<u32>, u32)> = Vec::with_capacity(nblk);
+    let mut seen = vec![0u32; nblk];
+    for i in 0..nblk {
+        let stamp = i as u32 + 1;
+        let mut row: Vec<u32> = Vec::with_capacity(i + 1);
+        for j in (0..=i).rev().take(local) {
+            row.push(j as u32);
+            seen[j] = stamp;
+        }
+        for j in 0..sink.min(i + 1) {
+            if seen[j] != stamp {
+                row.push(j as u32);
+                seen[j] = stamp;
+            }
+        }
+        let count = row.len() as u32;
+        // pad with the remaining causal blocks for interface width
+        for j in 0..=i {
+            if seen[j] != stamp {
+                row.push(j as u32);
+            }
+        }
+        rows.push((row, count));
+    }
+    let per_head: usize = rows.iter().map(|(r, _)| r.len()).sum();
+    let mut b = SelectionBuilder::with_capacity(h, nblk, h * per_head);
+    for _ in 0..h {
+        for (row, count) in &rows {
+            b.push_row(row, *count);
+        }
+    }
+    b.finish()
 }
 
 /// Exact dense causal attention (reference). q:[H,N,dh] k,v:[Hk,N,dh].
+/// Parallel across (head, query-row-chunk) items; per-row math is
+/// unchanged, so the result is identical at any thread count.
 pub fn dense_attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
     let (h, n, dh) = (q.shape[0], q.shape[1], q.shape[2]);
     let hk = k.shape[0];
     let rep = h / hk;
     let scale = 1.0 / (dh as f32).sqrt();
-    let mut out = Tensor::zeros(&[h, n, dh]);
-    let mut probs = vec![0.0f32; n];
-    for hh in 0..h {
+    const CHUNK: usize = 64;
+    let chunks_per_head = n.div_ceil(CHUNK);
+    let bufs = parallel_items(h * chunks_per_head, |item| {
+        let (hh, c) = (item / chunks_per_head, item % chunks_per_head);
         let hkv = hh / rep;
-        for i in 0..n {
+        let (lo, hi) = (c * CHUNK, ((c + 1) * CHUNK).min(n));
+        let mut out = vec![0.0f32; (hi - lo) * dh];
+        let mut probs = vec![0.0f32; hi];
+        for i in lo..hi {
             let qrow = q.row3(hh, i);
-            let mut m = f32::MIN;
+            // running max initialized from the first computed score
+            let mut m = f32::NEG_INFINITY;
             for j in 0..=i {
                 probs[j] = dot(qrow, k.row3(hkv, j)) * scale;
                 m = m.max(probs[j]);
@@ -205,18 +551,122 @@ pub fn dense_attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
                 *p = (*p - m).exp();
                 l += *p;
             }
-            let orow = out.row3_mut(hh, i);
+            if l == 0.0 {
+                continue; // degenerate row: emit zeros, not NaN
+            }
+            let orow = &mut out[(i - lo) * dh..(i - lo + 1) * dh];
             for j in 0..=i {
                 axpy(orow, probs[j] / l, v.row3(hkv, j));
             }
         }
+        out
+    });
+    let mut out = Tensor::zeros(&[h, n, dh]);
+    for (item, buf) in bufs.iter().enumerate() {
+        let (hh, c) = (item / chunks_per_head, item % chunks_per_head);
+        let lo = c * CHUNK;
+        let off = (hh * n + lo) * dh;
+        out.data[off..off + buf.len()].copy_from_slice(buf);
     }
     out
 }
 
-/// Block-sparse attention under a `Selection` (renormalized softmax over
+/// Block-sparse attention under a [`Selection`] (renormalized softmax over
 /// the selected blocks; within-block causal mask on the diagonal block).
+///
+/// Fused tiled kernel: each (head, query-block) work item walks its
+/// selected key blocks once, computes the `block×block` score tile with
+/// the K slab reused from cache ([`score_tile`]), applies the within-block
+/// causal mask only on the diagonal block ([`score_tile_causal`] — fully
+/// causal off-diagonal blocks skip masking entirely), and folds the tile
+/// into a per-row online softmax. Rows with no computable score (all
+/// selected blocks non-causal) yield zeros rather than NaN.
 pub fn block_sparse_attention(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    sel: &Selection,
+    block: usize,
+) -> Tensor {
+    let (h, n, dh) = (q.shape[0], q.shape[1], q.shape[2]);
+    let hk = k.shape[0];
+    let rep = h / hk;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let nblk = sel.nblk;
+    let bufs = parallel_items(h * nblk, |item| {
+        let (hh, qb) = (item / nblk, item % nblk);
+        let hkv = hh / rep;
+        let qs = q.block3(hh, qb, block);
+        let mut tile = vec![0.0f32; block * block];
+        let mut m = vec![f32::NEG_INFINITY; block];
+        let mut l = vec![0.0f32; block];
+        let mut acc = vec![0.0f32; block * dh];
+        for &kb in sel.selected(hh, qb) {
+            let kb = kb as usize;
+            if kb > qb {
+                continue; // fully non-causal block: every entry masked
+            }
+            let ks = k.block3(hkv, kb, block);
+            let vs = v.block3(hkv, kb, block);
+            let diag = kb == qb;
+            if diag {
+                score_tile_causal(qs, ks, dh, block, scale, &mut tile);
+            } else {
+                score_tile(qs, ks, dh, block, scale, &mut tile);
+            }
+            for r in 0..block {
+                let nvalid = if diag { r + 1 } else { block };
+                let trow = &tile[r * block..r * block + nvalid];
+                // running max initialized from the first computed score
+                let mut tmax = trow[0];
+                for &s in &trow[1..] {
+                    if s > tmax {
+                        tmax = s;
+                    }
+                }
+                let new_m = if m[r] > tmax { m[r] } else { tmax };
+                let arow = &mut acc[r * dh..(r + 1) * dh];
+                if l[r] > 0.0 && new_m > m[r] {
+                    let corr = (m[r] - new_m).exp();
+                    l[r] *= corr;
+                    for a in arow.iter_mut() {
+                        *a *= corr;
+                    }
+                }
+                m[r] = new_m;
+                for (t, &s) in trow.iter().enumerate() {
+                    let p = (s - new_m).exp();
+                    l[r] += p;
+                    axpy(arow, p, &vs[t * dh..(t + 1) * dh]);
+                }
+            }
+        }
+        let mut out = vec![0.0f32; block * dh];
+        for r in 0..block {
+            if l[r] > 0.0 {
+                let inv = 1.0 / l[r];
+                for (o, a) in out[r * dh..(r + 1) * dh].iter_mut().zip(&acc[r * dh..]) {
+                    *o = a * inv;
+                }
+            }
+        }
+        out
+    });
+    let mut out = Tensor::zeros(&[h, n, dh]);
+    for (item, buf) in bufs.iter().enumerate() {
+        let (hh, qb) = (item / nblk, item % nblk);
+        let off = (hh * n + qb * block) * dh;
+        out.data[off..off + buf.len()].copy_from_slice(buf);
+    }
+    out
+}
+
+/// The seed-shaped scalar execution path, retained as the equivalence
+/// oracle for the fused parallel kernel: per-query-row gather of every
+/// selected score, one global max, one normalize pass. Masked entries are
+/// skipped (not exponentiated), and a row with no computable score yields
+/// zeros rather than NaN — the same semantics as the fused kernel.
+pub fn block_sparse_attention_reference(
     q: &Tensor,
     k: &Tensor,
     v: &Tensor,
@@ -229,23 +679,29 @@ pub fn block_sparse_attention(
     let scale = 1.0 / (dh as f32).sqrt();
     let mut out = Tensor::zeros(&[h, n, dh]);
     let mut svals: Vec<f32> = Vec::new();
+    let mut sidx: Vec<u32> = Vec::new();
     for hh in 0..h {
         let hkv = hh / rep;
         for qb in 0..sel.nblk {
-            let c = sel.counts[hh][qb] as usize;
-            let blocks = &sel.indices[hh][qb][..c];
+            let blocks = sel.selected(hh, qb);
             for r in 0..block {
                 let i = qb * block + r;
                 let qrow = q.row3(hh, i);
                 svals.clear();
-                let mut m = f32::MIN;
+                sidx.clear();
+                let mut m = f32::NEG_INFINITY;
                 for &b in blocks {
                     let b = b as usize;
                     for t in 0..block {
                         let j = b * block + t;
-                        let s = if j <= i { dot(qrow, k.row3(hkv, j)) * scale } else { NEG_INF };
-                        svals.push(s);
-                        m = m.max(s);
+                        if j <= i {
+                            let s = dot(qrow, k.row3(hkv, j)) * scale;
+                            if s > m {
+                                m = s;
+                            }
+                            svals.push(s);
+                            sidx.push(j as u32);
+                        }
                     }
                 }
                 let mut l = 0.0f32;
@@ -253,17 +709,12 @@ pub fn block_sparse_attention(
                     *s = (*s - m).exp();
                     l += *s;
                 }
+                if l == 0.0 {
+                    continue; // degenerate row: zeros, not NaN
+                }
                 let orow = out.row3_mut(hh, i);
-                let mut idx = 0;
-                for &b in blocks {
-                    let b = b as usize;
-                    for t in 0..block {
-                        let p = svals[idx] / l;
-                        if p > 0.0 {
-                            axpy(orow, p, v.row3(hkv, b * block + t));
-                        }
-                        idx += 1;
-                    }
+                for (p, &j) in svals.iter().zip(&sidx) {
+                    axpy(orow, p / l, v.row3(hkv, j as usize));
                 }
             }
         }
@@ -288,16 +739,13 @@ mod tests {
     #[test]
     fn full_selection_matches_dense() {
         let (q, k, v) = qkv(1, 2, 1, 128, 16);
-        let nblk = 4;
-        let sel = Selection {
-            nblk,
-            indices: vec![(0..nblk).map(|i| (0..=i as u32).rev().collect()).collect(); 2],
-            counts: vec![(1..=nblk as u32).collect(); 2],
-        };
+        let sel = Selection::full_causal(2, 4);
         sel.validate().unwrap();
         let sparse = block_sparse_attention(&q, &k, &v, &sel, 32);
         let dense = dense_attention(&q, &k, &v);
         assert!(sparse.max_abs_diff(&dense) < 1e-4, "diff {}", sparse.max_abs_diff(&dense));
+        let reference = block_sparse_attention_reference(&q, &k, &v, &sel, 32);
+        assert!(reference.max_abs_diff(&dense) < 1e-4, "ref diff {}", reference.max_abs_diff(&dense));
     }
 
     #[test]
@@ -308,11 +756,23 @@ mod tests {
         // forced blocks present
         for h in 0..4 {
             for i in 0..sel.nblk {
-                let c = sel.counts[h][i] as usize;
-                let set: Vec<u32> = sel.indices[h][i][..c].to_vec();
+                let set = sel.selected(h, i);
                 assert!(set.contains(&0), "sink missing h{h} i{i}");
                 assert!(set.contains(&(i as u32)), "diag missing h{h} i{i}");
             }
+        }
+    }
+
+    #[test]
+    fn partial_topk_matches_full_sort_reference() {
+        for seed in [7u64, 8, 9] {
+            let (q, k, v) = qkv(seed, 4, 2, 256, 16);
+            let cfg = TpdConfig { k_start: 3.0, mu: 0.6, ..Default::default() };
+            let fast = select_stem(&q, &k, &v, 32, 8, &cfg, 0.2);
+            let slow = select_stem_reference(&q, &k, &v, 32, 8, &cfg, 0.2);
+            assert_eq!(fast.counts, slow.counts);
+            assert_eq!(fast.row_offsets, slow.row_offsets);
+            assert_eq!(fast.indices, slow.indices, "selected sets diverge (seed {seed})");
         }
     }
 
@@ -321,8 +781,7 @@ mod tests {
         let sel = select_streaming(1, 8, 1, 2);
         sel.validate().unwrap();
         for i in 0..8usize {
-            let c = sel.counts[0][i] as usize;
-            let mut set: Vec<u32> = sel.indices[0][i][..c].to_vec();
+            let mut set: Vec<u32> = sel.selected(0, i).to_vec();
             set.sort();
             let mut want: Vec<u32> = vec![0];
             for j in i.saturating_sub(1)..=i {
@@ -332,6 +791,10 @@ mod tests {
             }
             want.sort();
             assert_eq!(set, want, "row {i}");
+            // padding must complete the causal width without duplicates
+            let mut full: Vec<u32> = sel.row(0, i).to_vec();
+            full.sort();
+            assert_eq!(full, (0..=i as u32).collect::<Vec<_>>(), "padding row {i}");
         }
     }
 
@@ -350,6 +813,36 @@ mod tests {
     }
 
     #[test]
+    fn fused_matches_reference_kernel() {
+        let (q, k, v) = qkv(5, 4, 2, 256, 16);
+        let cfg = TpdConfig { k_start: 3.0, ..Default::default() };
+        let sel = select_stem(&q, &k, &v, 32, 8, &cfg, 0.2);
+        let fused = block_sparse_attention(&q, &k, &v, &sel, 32);
+        let reference = block_sparse_attention_reference(&q, &k, &v, &sel, 32);
+        let d = fused.max_abs_diff(&reference);
+        assert!(d < 1e-5, "fused deviates from reference by {d}");
+    }
+
+    #[test]
+    fn degenerate_all_masked_row_yields_zeros() {
+        let (q, k, v) = qkv(6, 1, 1, 64, 8);
+        // row 0 selects only block 1 (non-causal): every score is masked
+        let mut b = SelectionBuilder::new(1, 2);
+        b.push_row(&[1], 1);
+        b.push_row(&[1, 0], 2);
+        let sel = b.finish();
+        assert!(sel.validate().is_err(), "non-causal selection must not validate");
+        for out in [
+            block_sparse_attention(&q, &k, &v, &sel, 32),
+            block_sparse_attention_reference(&q, &k, &v, &sel, 32),
+        ] {
+            assert!(out.data.iter().all(|x| x.is_finite()), "NaN leaked from masked row");
+            assert!(out.data[..32 * 8].iter().all(|&x| x == 0.0), "masked rows must be zero");
+            assert!(out.data[32 * 8..].iter().any(|&x| x != 0.0), "live rows must attend");
+        }
+    }
+
+    #[test]
     fn oam_respects_causality() {
         let (q, k, v) = qkv(4, 2, 1, 128, 16);
         let s = oam_scores(&q, &k, &v, 32, 8, 0.2);
@@ -360,5 +853,21 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn csr_accessors_roundtrip() {
+        let mut b = SelectionBuilder::new(2, 3);
+        for _ in 0..2 {
+            b.push_row(&[0], 1);
+            b.push_row(&[0, 1], 2);
+            b.push_row(&[2, 0, 1], 2); // one padding entry
+        }
+        let sel = b.finish();
+        sel.validate().unwrap();
+        assert_eq!(sel.count(1, 2), 2);
+        assert_eq!(sel.selected(1, 2), &[2, 0]);
+        assert_eq!(sel.row(1, 2), &[2, 0, 1]);
+        assert!((sel.budget_fraction() - 5.0 / 6.0).abs() < 1e-12);
     }
 }

@@ -8,8 +8,9 @@ pub mod schedule;
 pub mod tensor;
 
 pub use attention::{
-    antidiag_scores, block_sparse_attention, dense_attention, oam_scores, select_stem,
-    select_streaming, value_block_logmag, Selection,
+    antidiag_scores, block_sparse_attention, block_sparse_attention_reference, dense_attention,
+    oam_scores, select_stem, select_stem_reference, select_streaming, value_block_logmag,
+    Selection, SelectionBuilder,
 };
 pub use schedule::TpdConfig;
 pub use tensor::Tensor;

@@ -97,6 +97,13 @@ pub fn k_avg_blocks(n_blocks: usize, cfg: &TpdConfig) -> f64 {
     k.iter().sum::<usize>() as f64 / n_blocks as f64
 }
 
+/// Total selected (query-block, key-block) pairs per head under the
+/// schedule — the exact CSR `indices` length one head of a Stem
+/// [`crate::sparse::Selection`] occupies, used to pre-size the flat layout.
+pub fn block_budget_total(n_blocks: usize, cfg: &TpdConfig) -> usize {
+    block_budget_schedule(n_blocks, cfg).iter().sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,6 +176,15 @@ mod tests {
         let c_stem = cost_stem(131072, 256, 64, 8192.0);
         let c_dense = cost_dense_flops(131072, 256);
         assert!(c_stem < 0.2 * c_dense, "stem {c_stem} dense {c_dense}");
+    }
+
+    #[test]
+    fn budget_total_is_schedule_sum() {
+        let cfg = TpdConfig::default();
+        for nblk in [1usize, 7, 32] {
+            let want: usize = block_budget_schedule(nblk, &cfg).iter().sum();
+            assert_eq!(block_budget_total(nblk, &cfg), want);
+        }
     }
 
     #[test]

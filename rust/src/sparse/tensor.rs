@@ -64,6 +64,15 @@ impl Tensor {
         &self.data[off..off + d]
     }
 
+    /// Contiguous `[block, d]` slab of rows `[h, b*block .. (b+1)*block, :]`
+    /// — the gather-free way the tiled kernels address one attention block.
+    #[inline]
+    pub fn block3(&self, h: usize, b: usize, block: usize) -> &[f32] {
+        let d = self.shape[2];
+        let off = (h * self.shape[1] + b * block) * d;
+        &self.data[off..off + block * d]
+    }
+
     #[inline]
     pub fn row3_mut(&mut self, h: usize, i: usize) -> &mut [f32] {
         let d = self.shape[2];
@@ -126,6 +135,46 @@ pub fn norm2(x: &[f32]) -> f32 {
     dot(x, x).sqrt()
 }
 
+/// Scaled `block × block` score tile between a query slab and a key slab
+/// (both `[block, d]`, see [`Tensor::block3`]): `out[r*block + t] =
+/// scale · q_r · k_t`. One pass over the key slab per query row, so the
+/// whole K block is reused from cache across the tile.
+pub fn score_tile(qs: &[f32], ks: &[f32], d: usize, block: usize, scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(qs.len(), block * d);
+    debug_assert_eq!(ks.len(), block * d);
+    debug_assert!(out.len() >= block * block);
+    for r in 0..block {
+        let qrow = &qs[r * d..(r + 1) * d];
+        let orow = &mut out[r * block..(r + 1) * block];
+        for (t, o) in orow.iter_mut().enumerate() {
+            *o = dot(qrow, &ks[t * d..(t + 1) * d]) * scale;
+        }
+    }
+}
+
+/// Like [`score_tile`] but only fills the within-block causal triangle
+/// (`t <= r`); entries above the diagonal are left untouched and must not
+/// be read by the caller.
+pub fn score_tile_causal(
+    qs: &[f32],
+    ks: &[f32],
+    d: usize,
+    block: usize,
+    scale: f32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(qs.len(), block * d);
+    debug_assert_eq!(ks.len(), block * d);
+    debug_assert!(out.len() >= block * block);
+    for r in 0..block {
+        let qrow = &qs[r * d..(r + 1) * d];
+        let orow = &mut out[r * block..r * block + r + 1];
+        for (t, o) in orow.iter_mut().enumerate() {
+            *o = dot(qrow, &ks[t * d..(t + 1) * d]) * scale;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -151,5 +200,38 @@ mod tests {
         let mut r = crate::util::rng::Rng::new(0);
         let t = Tensor::randn(&[3, 4, 5], &mut r);
         assert_eq!(t.mse(&t), 0.0);
+    }
+
+    #[test]
+    fn block3_matches_rows() {
+        let mut r = crate::util::rng::Rng::new(5);
+        let t = Tensor::randn(&[2, 8, 3], &mut r);
+        let slab = t.block3(1, 1, 4);
+        for i in 0..4 {
+            assert_eq!(&slab[i * 3..(i + 1) * 3], t.row3(1, 4 + i));
+        }
+    }
+
+    #[test]
+    fn score_tile_matches_per_pair_dot() {
+        let mut r = crate::util::rng::Rng::new(6);
+        let (d, block) = (5usize, 4usize);
+        let q = Tensor::randn(&[1, block, d], &mut r);
+        let k = Tensor::randn(&[1, block, d], &mut r);
+        let mut full = vec![0.0f32; block * block];
+        score_tile(q.block3(0, 0, block), k.block3(0, 0, block), d, block, 0.5, &mut full);
+        let mut tri = vec![f32::NAN; block * block];
+        score_tile_causal(q.block3(0, 0, block), k.block3(0, 0, block), d, block, 0.5, &mut tri);
+        for r_ in 0..block {
+            for t_ in 0..block {
+                let want = dot(q.row3(0, r_), k.row3(0, t_)) * 0.5;
+                assert!((full[r_ * block + t_] - want).abs() < 1e-6);
+                if t_ <= r_ {
+                    assert!((tri[r_ * block + t_] - want).abs() < 1e-6);
+                } else {
+                    assert!(tri[r_ * block + t_].is_nan(), "above-diag must stay untouched");
+                }
+            }
+        }
     }
 }

@@ -78,6 +78,23 @@ impl Args {
             None => default.iter().map(|s| s.to_string()).collect(),
         }
     }
+
+    /// Worker-thread count for the sparse-core pool: `--threads N` wins,
+    /// else `STEM_THREADS`, else every available core.
+    pub fn threads(&self) -> usize {
+        self.get("threads")
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(crate::util::threadpool::configured_threads)
+    }
+
+    /// Install the global sparse-core pool from [`Args::threads`]; call
+    /// once near process start (later calls keep the first pool).
+    pub fn init_thread_pool(&self) -> usize {
+        let n = self.threads();
+        crate::util::threadpool::init_global(n);
+        crate::util::threadpool::global().workers()
+    }
 }
 
 #[cfg(test)]
@@ -109,6 +126,16 @@ mod tests {
         let a = args(&["--fast"], false);
         assert!(a.flag("fast"));
         assert!(!a.flag("slow"));
+    }
+
+    #[test]
+    fn threads_flag_overrides() {
+        let a = args(&["--threads", "3"], false);
+        assert_eq!(a.threads(), 3);
+        let a = args(&["--threads", "0"], false); // invalid: fall through
+        assert!(a.threads() >= 1);
+        let a = args(&[], false);
+        assert!(a.threads() >= 1);
     }
 
     #[test]

@@ -84,6 +84,27 @@ impl<A: Shrink, B: Shrink, C: Shrink> Shrink for (A, B, C) {
     }
 }
 
+impl<A: Shrink, B: Shrink, C: Shrink, D: Shrink> Shrink for (A, B, C, D) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone(), self.3.clone()))
+            .collect();
+        out.extend(
+            self.1.shrink().into_iter().map(|b| (self.0.clone(), b, self.2.clone(), self.3.clone())),
+        );
+        out.extend(
+            self.2.shrink().into_iter().map(|c| (self.0.clone(), self.1.clone(), c, self.3.clone())),
+        );
+        out.extend(
+            self.3.shrink().into_iter().map(|d| (self.0.clone(), self.1.clone(), self.2.clone(), d)),
+        );
+        out
+    }
+}
+
 /// Run the property; panics with the minimal counterexample on failure.
 pub fn forall<T, G, C>(seed: u64, cases: usize, mut gen: G, check: C)
 where
@@ -151,5 +172,15 @@ mod tests {
     fn shrink_vec_reduces() {
         let v = vec![3usize, 4, 5];
         assert!(v.shrink().iter().all(|s| s.len() < v.len() || s.iter().sum::<usize>() < 12));
+    }
+
+    #[test]
+    fn shrink_tuple4_varies_one_component() {
+        let t = (4usize, 2u64, 1.0f64, 8usize);
+        for cand in t.shrink() {
+            let changed = [cand.0 != t.0, cand.1 != t.1, cand.2 != t.2, cand.3 != t.3];
+            assert_eq!(changed.iter().filter(|&&c| c).count(), 1, "{cand:?}");
+        }
+        assert!(!t.shrink().is_empty());
     }
 }

@@ -5,9 +5,14 @@
 //! `ThreadPool` — fixed workers pulling `FnOnce` jobs from a shared queue.
 //! `scope_parallel` — fork-join helper used by the eval harness to fan an
 //! indexed job list over the pool and collect results in order.
+//! `scope_parallel_borrowed` — same fork-join shape, but the closure may
+//! borrow from the caller's stack; this is what the sparse-core kernels
+//! fan (head, query-block) work items through.
+//! `global()` — lazily-initialized process-wide pool sized by
+//! `STEM_THREADS` (env) falling back to `available_parallelism()`.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -62,6 +67,67 @@ impl ThreadPool {
             guard = self.shared.done.wait(guard).unwrap();
         }
     }
+
+    /// Pop and execute one queued job on the calling thread, with the same
+    /// accounting a worker would perform. Returns false if the queue was
+    /// empty. Lets a blocked forker help drain the queue, which keeps
+    /// nested `scope_parallel_borrowed` calls deadlock-free. A panicking
+    /// job is contained (see [`run_job`]): it must not unwind through a
+    /// forker whose other jobs still borrow its stack frame.
+    pub fn run_pending_one(&self) -> bool {
+        let job = self.shared.queue.lock().unwrap().pop_front();
+        match job {
+            Some(j) => {
+                run_job(&self.shared, j);
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+/// Execute one job with pool accounting. The job is run under
+/// `catch_unwind` so a panic can neither kill a worker thread, leak
+/// `in_flight` (which would hang `wait_idle`), nor unwind through a
+/// `scope_parallel_borrowed` caller draining the queue. Fork-join callers
+/// observe panics through their own channels/flags instead.
+fn run_job(sh: &Shared, j: Job) {
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(j));
+    if sh.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
+        let _g = sh.done_lock.lock().unwrap();
+        sh.done.notify_all();
+    }
+    if outcome.is_err() {
+        eprintln!("[stem] thread-pool job panicked (contained)");
+    }
+}
+
+/// Worker-thread count for the global pool: `STEM_THREADS` (if set to a
+/// positive integer) else `available_parallelism()`.
+pub fn configured_threads() -> usize {
+    std::env::var("STEM_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+
+/// Install the global pool with an explicit worker count (e.g. from a
+/// `--threads` flag). Returns false if the pool was already initialized,
+/// in which case the existing pool is kept.
+pub fn init_global(n: usize) -> bool {
+    if GLOBAL.get().is_some() {
+        return false;
+    }
+    GLOBAL.set(ThreadPool::new(n.max(1))).is_ok()
+}
+
+/// The process-wide pool used by the sparse-core kernels and the eval
+/// harness. First use wins: `init_global` (CLI) or `configured_threads()`.
+pub fn global() -> &'static ThreadPool {
+    GLOBAL.get_or_init(|| ThreadPool::new(configured_threads()))
 }
 
 fn worker_loop(sh: Arc<Shared>) {
@@ -80,13 +146,7 @@ fn worker_loop(sh: Arc<Shared>) {
         };
         match job {
             None => return,
-            Some(j) => {
-                j();
-                if sh.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
-                    let _g = sh.done_lock.lock().unwrap();
-                    sh.done.notify_all();
-                }
-            }
+            Some(j) => run_job(&sh, j),
         }
     }
 }
@@ -125,6 +185,75 @@ where
     out.into_iter().map(|x| x.expect("worker panicked")).collect()
 }
 
+/// Fork-join over borrowed state: run `f(i)` for i in 0..n on `pool` and
+/// return results in index order. Unlike [`scope_parallel`], `f` (and `T`)
+/// may borrow from the caller's stack: the call only returns once every
+/// job has finished, which is what makes the lifetime erasure below sound.
+/// While blocked, the calling thread helps drain the pool's queue, so the
+/// caller acts as an extra worker and nested calls cannot deadlock.
+pub fn scope_parallel_borrowed<T, F>(pool: &ThreadPool, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    if n == 1 {
+        return vec![f(0)];
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let pending = Arc::new((Mutex::new(n), Condvar::new()));
+    let panicked = Arc::new(AtomicBool::new(false));
+    // Smuggle the borrows through the pool's `'static` job type as raw
+    // addresses. SAFETY: this frame blocks on `pending` below until all n
+    // jobs have run, so `f` and `out` outlive every access; each job
+    // writes a distinct slot, so slots never alias.
+    let f_addr = &f as *const F as usize;
+    let out_addr = out.as_mut_ptr() as usize;
+    for i in 0..n {
+        let pending = Arc::clone(&pending);
+        let panicked = Arc::clone(&panicked);
+        pool.submit(move || {
+            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+                let f = &*(f_addr as *const F);
+                let slot = (out_addr as *mut Option<T>).add(i);
+                *slot = Some(f(i));
+            }));
+            if run.is_err() {
+                panicked.store(true, Ordering::SeqCst);
+            }
+            let (lock, cv) = &*pending;
+            let mut left = lock.lock().unwrap();
+            *left -= 1;
+            if *left == 0 {
+                cv.notify_all();
+            }
+        });
+    }
+    let (lock, cv) = &*pending;
+    loop {
+        if *lock.lock().unwrap() == 0 {
+            break;
+        }
+        if pool.run_pending_one() {
+            continue;
+        }
+        // Queue drained from our side; block until in-flight jobs finish.
+        // The completion path locks `pending.0` before notifying, so this
+        // re-check-then-wait cannot miss a wakeup.
+        let left = lock.lock().unwrap();
+        if *left == 0 {
+            break;
+        }
+        drop(cv.wait(left).unwrap());
+    }
+    if panicked.load(Ordering::SeqCst) {
+        panic!("scope_parallel_borrowed: a parallel job panicked");
+    }
+    out.into_iter().map(|x| x.expect("job did not run")).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -155,5 +284,60 @@ mod tests {
     fn wait_idle_on_empty_pool_returns() {
         let pool = ThreadPool::new(2);
         pool.wait_idle();
+    }
+
+    #[test]
+    fn scope_parallel_borrowed_borrows_caller_state() {
+        let pool = ThreadPool::new(4);
+        let data: Vec<u64> = (0..256).collect();
+        let out = scope_parallel_borrowed(&pool, data.len(), |i| data[i] * 3);
+        assert_eq!(out, data.iter().map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_parallel_borrowed_handles_nesting() {
+        // inner fork-join from inside an outer job must not deadlock even
+        // on a single-worker pool (the forker helps drain the queue)
+        let pool = ThreadPool::new(1);
+        let out = scope_parallel_borrowed(&pool, 4, |i| {
+            scope_parallel_borrowed(&pool, 3, |j| i * 10 + j).iter().sum::<usize>()
+        });
+        assert_eq!(out, vec![3, 33, 63, 93]);
+    }
+
+    #[test]
+    fn run_pending_one_drains_queue() {
+        let pool = ThreadPool::new(1);
+        // saturate the single worker so jobs stay queued; wait until the
+        // worker actually holds the gate job so we cannot pop it ourselves
+        let gate = Arc::new(AtomicU64::new(0));
+        let started = Arc::new(AtomicU64::new(0));
+        let (g, s) = (Arc::clone(&gate), Arc::clone(&started));
+        pool.submit(move || {
+            s.store(1, Ordering::SeqCst);
+            while g.load(Ordering::SeqCst) == 0 {
+                std::thread::yield_now();
+            }
+        });
+        while started.load(Ordering::SeqCst) == 0 {
+            std::thread::yield_now();
+        }
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..5 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        while pool.run_pending_one() {}
+        assert_eq!(counter.load(Ordering::SeqCst), 5);
+        gate.store(1, Ordering::SeqCst);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn configured_threads_is_positive() {
+        assert!(configured_threads() >= 1);
+        assert!(global().workers() >= 1);
     }
 }

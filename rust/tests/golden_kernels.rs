@@ -5,7 +5,9 @@
 //! Skips (with a note) when artifacts are absent so `cargo test` stays
 //! green pre-`make artifacts`; CI runs it after the artifact build.
 
-use stem::sparse::{block_sparse_attention, oam_scores, Selection, Tensor};
+use stem::sparse::{
+    block_sparse_attention, block_sparse_attention_reference, oam_scores, SelectionBuilder, Tensor,
+};
 use stem::util::json::Json;
 
 struct Golden {
@@ -67,21 +69,25 @@ fn rust_block_sparse_matches_python_oracle() {
         return;
     };
     let nblk = g.n / g.block;
-    let mut indices = vec![vec![Vec::new(); nblk]; g.h];
-    let mut counts = vec![vec![0u32; nblk]; g.h];
+    // python exports fixed-width rows: CSR keeps them as selected prefix
+    // + interface padding under per-row counts
+    let mut b = SelectionBuilder::with_capacity(g.h, nblk, g.h * nblk * nblk);
     for h in 0..g.h {
         for i in 0..nblk {
-            counts[h][i] = g.counts[h * nblk + i] as u32;
-            indices[h][i] = (0..nblk)
+            let row: Vec<u32> = (0..nblk)
                 .map(|t| g.indices[(h * nblk + i) * nblk + t] as u32)
                 .collect();
+            b.push_row(&row, g.counts[h * nblk + i] as u32);
         }
     }
-    let sel = Selection { nblk, indices, counts };
+    let sel = b.finish();
     sel.validate().expect("golden selection must satisfy kernel invariants");
     let out = block_sparse_attention(&g.q, &g.k, &g.v, &sel, g.block);
     let d = max_abs_diff(&out.data, &g.attention_out);
     assert!(d < 2e-4, "rust block-sparse deviates from jnp oracle: {d}");
+    let reference = block_sparse_attention_reference(&g.q, &g.k, &g.v, &sel, g.block);
+    let dr = max_abs_diff(&reference.data, &g.attention_out);
+    assert!(dr < 2e-4, "rust reference block-sparse deviates from jnp oracle: {dr}");
     let _ = g.hk;
 }
 

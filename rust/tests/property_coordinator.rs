@@ -12,7 +12,10 @@ use stem::sparse::schedule::{
     block_budget_schedule, cost_decay, cost_dense, cost_uniform, k_avg_blocks,
     k_uniform_matched, TpdConfig,
 };
-use stem::sparse::{select_stem, Tensor};
+use stem::sparse::{
+    block_sparse_attention, block_sparse_attention_reference, select_stem, select_stem_reference,
+    SelectionBuilder, Tensor,
+};
 use stem::util::json::Json;
 use stem::util::prop::forall;
 use stem::util::rng::Rng;
@@ -173,7 +176,7 @@ fn admission_never_exceeds_limits() {
             ops
         },
         |ops| {
-            let cfg = AdmissionConfig { max_tokens: 8192, max_requests: 16 };
+            let cfg = AdmissionConfig { max_tokens: 8192, max_requests: 16, ..Default::default() };
             let adm = Admission::new(cfg);
             let mut live: Vec<usize> = vec![];
             for (tokens, op) in ops {
@@ -309,6 +312,122 @@ fn stem_selection_always_valid() {
             let bud = sel.budget_fraction();
             if !(0.0..=1.0 + 1e-9).contains(&bud) {
                 return Err(format!("budget {bud} out of range"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// --- parallel fused kernel vs retained scalar reference ------------------
+
+#[test]
+fn fused_parallel_kernel_matches_scalar_reference() {
+    forall(
+        110,
+        12,
+        |r: &mut Rng| {
+            (
+                r.below(1 << 31),
+                2 + r.below(5) as usize,      // nblk
+                2 + 2 * r.below(2) as usize,  // h in {2, 4}
+                2.0 + r.f64() * 6.0,          // k_start
+            )
+        },
+        |&(seed, nblk, h, ks)| {
+            if nblk == 0 || h < 2 || ks <= 0.0 {
+                return Ok(()); // shrink candidates outside the domain
+            }
+            let mut rng = Rng::new(seed);
+            let block = 32;
+            let n = nblk * block;
+            let hk = h / 2;
+            let q = Tensor::randn(&[h, n, 16], &mut rng);
+            let k = Tensor::randn(&[hk, n, 16], &mut rng);
+            let v = Tensor::randn(&[hk, n, 16], &mut rng);
+            let cfg = TpdConfig { k_start: ks, mu: 0.7, ..Default::default() };
+            let fast = select_stem(&q, &k, &v, block, 8, &cfg, 0.2);
+            let slow = select_stem_reference(&q, &k, &v, block, 8, &cfg, 0.2);
+            if fast.indices != slow.indices
+                || fast.counts != slow.counts
+                || fast.row_offsets != slow.row_offsets
+            {
+                return Err("partial top-k selection diverges from full sort".into());
+            }
+            fast.validate()?;
+            let fused = block_sparse_attention(&q, &k, &v, &fast, block);
+            let reference = block_sparse_attention_reference(&q, &k, &v, &fast, block);
+            let d = fused.max_abs_diff(&reference);
+            if d >= 1e-5 {
+                return Err(format!("fused kernel deviates from reference by {d}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn csr_selection_validate_rejects_adversarial_rows() {
+    forall(
+        111,
+        120,
+        |r: &mut Rng| {
+            (
+                r.below(1 << 31),
+                2 + r.below(8) as usize, // nblk
+                r.below(3) as usize,     // corruption kind
+            )
+        },
+        |&(seed, nblk, kind)| {
+            if nblk == 0 {
+                return Ok(()); // shrink candidates outside the domain
+            }
+            let mut rng = Rng::new(seed);
+            // build a random *valid* selection: each row keeps a random
+            // nonempty subset of its causal width
+            let mut rows: Vec<Vec<u32>> = vec![];
+            for i in 0..nblk {
+                let mut row: Vec<u32> = (0..=i as u32).collect();
+                // random causal permutation prefix
+                for j in (1..row.len()).rev() {
+                    let swap = rng.below(j as u64 + 1) as usize;
+                    row.swap(j, swap);
+                }
+                let keep = 1 + rng.below(i as u64 + 1) as usize;
+                row.truncate(keep);
+                rows.push(row);
+            }
+            let mut b = SelectionBuilder::new(1, nblk);
+            for row in &rows {
+                b.push_row(row, row.len() as u32);
+            }
+            let sel = b.finish();
+            sel.validate().map_err(|e| format!("valid CSR rejected: {e}"))?;
+
+            // corrupt one row and require validate() to reject it
+            let victim = rng.below(nblk as u64) as usize;
+            let mut bad_rows = rows.clone();
+            match kind {
+                0 => {
+                    // duplicate entry
+                    let first = bad_rows[victim][0];
+                    bad_rows[victim].push(first);
+                }
+                1 => {
+                    // non-causal entry
+                    bad_rows[victim].push(victim as u32 + 1);
+                }
+                _ => {
+                    // zero count handled below
+                }
+            }
+            let mut bb = SelectionBuilder::new(1, nblk);
+            for (i, row) in bad_rows.iter().enumerate() {
+                let count = if kind == 2 && i == victim { 0 } else { row.len() as u32 };
+                bb.push_row(row, count);
+            }
+            let bad = bb.finish();
+            if bad.validate().is_ok() {
+                return Err(format!("corruption kind {kind} at row {victim} not rejected"));
             }
             Ok(())
         },
