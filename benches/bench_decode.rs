@@ -1,0 +1,146 @@
+//! Decode-phase micro-benchmarks: ns/token of the single-query kernels
+//! (sparse selection + attention vs. dense full-context attention) across
+//! cached-context lengths, plus the end-to-end paged session step. Writes
+//! machine-readable results to `BENCH_decode.json` so future PRs have a
+//! decode perf trajectory (the acceptance figure is sparse beating dense
+//! ns/token at n >= 2048).
+//!
+//!   cargo bench --bench bench_decode                 # full sizes
+//!   cargo bench --bench bench_decode -- --quick      # small samples
+//!   cargo bench --bench bench_decode -- --threads 1  # serial core
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use stem::coordinator::kv_cache::{KvCache, KvConfig};
+use stem::decode::{DecodePolicy, DecodeSession, TinyLm};
+use stem::model::vocab;
+use stem::sparse::{
+    decode_block_scores, select_decode, sparse_decode_attention, KvBlocks, Selection, Tensor,
+    TensorKv,
+};
+use stem::util::bench::{black_box, stats_from, Bencher, Stats};
+use stem::util::cli::Args;
+use stem::util::json::Json;
+use stem::util::rng::Rng;
+
+struct Row {
+    method: String,
+    n: usize,
+    ns_per_token: f64,
+    /// vs the dense decode path at the same n; 0 = n/a
+    speedup_vs_dense: f64,
+}
+
+fn row(st: &Stats, n: usize, speedup: f64) -> Row {
+    Row { method: st.name.clone(), n, ns_per_token: st.median_ns, speedup_vs_dense: speedup }
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1), false);
+    let quick = args.flag("quick");
+    let threads = args.init_thread_pool();
+    let bencher = if quick { Bencher::quick() } else { Bencher::default() };
+    let (h, hk, dh, block, stride, beta) = (8usize, 4usize, 32usize, 64usize, 8usize, 0.2f32);
+    let sizes: &[usize] = if quick { &[512, 2048, 4096] } else { &[512, 1024, 2048, 4096, 8192] };
+    let mut rows: Vec<Row> = vec![];
+
+    for &n in sizes {
+        let mut rng = Rng::new(9);
+        let q = Tensor::randn(&[h, dh], &mut rng);
+        let k = Tensor::randn(&[hk, n, dh], &mut rng);
+        let v = Tensor::randn(&[hk, n, dh], &mut rng);
+        let kv = TensorKv { k: &k, v: &v, n_tokens: n, block };
+        let nblk = kv.n_blocks();
+        let budget = ((nblk as f64 * 0.15) as usize).max(4);
+
+        // dense decode: full selection through the same parallel kernel
+        let full = Selection::decode_full(h, nblk);
+        let s_dense = bencher.run(&format!("decode_dense n={n}"), || {
+            black_box(sparse_decode_attention(&q, &kv, &full));
+        });
+        s_dense.print();
+        rows.push(row(&s_dense, n, 1.0));
+
+        // sparse decode: metric + selection + attention per step
+        let s_sparse = bencher.run(&format!("decode_sparse n={n}"), || {
+            let scores = decode_block_scores(&q, &kv, stride, beta);
+            let sel = select_decode(&scores, budget, 1, 2);
+            black_box(sparse_decode_attention(&q, &kv, &sel));
+        });
+        s_sparse.print();
+        rows.push(row(&s_sparse, n, s_dense.median_ns / s_sparse.median_ns));
+        println!(
+            "  -> sparse/dense decode speedup at n={n}: {:.2}x (budget {}/{nblk} blocks, {threads} threads)\n",
+            s_dense.median_ns / s_sparse.median_ns,
+            budget.min(nblk)
+        );
+    }
+
+    // end-to-end paged session steps (projections + paged append +
+    // policy + kernel) at one representative context; the context grows
+    // by one page per `block` steps, so we measure a fixed step count
+    // by hand instead of letting the calibrated runner loop.
+    for (label, policy) in [
+        ("session_step_sparse", DecodePolicy { dense_below: 0, ..Default::default() }),
+        ("session_step_dense", DecodePolicy::dense()),
+    ] {
+        let n0 = 2048usize;
+        let kvpool = Arc::new(Mutex::new(KvCache::new(KvConfig {
+            total_pages: 1024,
+            page_tokens: block,
+        })));
+        let model = Arc::new(TinyLm::new(0xD0C0DE, h, hk, dh, vocab::VOCAB_SIZE));
+        let mut session = DecodeSession::new(kvpool, model, policy, 1).unwrap();
+        let mut rng = Rng::new(11);
+        let prompt: Vec<i32> =
+            (0..n0).map(|_| vocab::WORD0 + rng.below(64) as i32).collect();
+        session.prefill(&prompt).unwrap();
+        let steps = if quick { 16 } else { 64 };
+        let mut samples = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let t = Instant::now();
+            black_box(session.step_once().unwrap());
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        let st = stats_from(&format!("{label} n={n0}"), samples);
+        st.print();
+        rows.push(row(&st, n0, 0.0));
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("bench_decode".into())),
+        ("threads", Json::Num(threads as f64)),
+        ("quick", Json::Bool(quick)),
+        (
+            "geometry",
+            Json::obj(vec![
+                ("h", Json::Num(h as f64)),
+                ("hk", Json::Num(hk as f64)),
+                ("dh", Json::Num(dh as f64)),
+                ("block", Json::Num(block as f64)),
+                ("stride", Json::Num(stride as f64)),
+            ]),
+        ),
+        (
+            "results",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("method", Json::Str(r.method.clone())),
+                            ("n", Json::Num(r.n as f64)),
+                            ("ns_per_token", Json::Num(r.ns_per_token)),
+                            ("speedup_vs_dense", Json::Num(r.speedup_vs_dense)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let path = "BENCH_decode.json";
+    match std::fs::write(path, format!("{out}")) {
+        Ok(()) => println!("wrote {path} ({} result rows)", rows.len()),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

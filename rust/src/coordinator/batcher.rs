@@ -1,13 +1,20 @@
 //! Dynamic batcher: groups compatible prefill requests so a worker picks
-//! up a whole batch at once (vLLM-style continuous batching, restricted to
-//! the prefill phase this paper optimizes).
+//! up a whole batch at once, and continuously batches decode steps
+//! between them (vLLM-style continuous batching across both phases).
 //!
-//! Compatibility key = (module kind, seqlen bucket, checkpoint): the
-//! compiled artifacts are per-(kind, bucket), and mixing checkpoints would
-//! mix weight sets. Policy: emit a batch when (a) a queue reaches
+//! Prefill compatibility key = (module kind, seqlen bucket, checkpoint):
+//! the compiled artifacts are per-(kind, bucket), and mixing checkpoints
+//! would mix weight sets. Policy: emit a batch when (a) a queue reaches
 //! `max_batch`, or (b) its head request has waited `max_wait` — classic
-//! size-or-timeout. Pure logic, no threads: the server drives it, the
-//! tests poke it directly.
+//! size-or-timeout.
+//!
+//! Decode steps live in their own lane: every active generation
+//! re-enqueues one [`DecodeStep`] after each token, and
+//! [`Batcher::pop_ready_any`] alternates between the lanes so a stream of
+//! prefill bursts cannot starve inter-token latency (nor vice versa).
+//! Decode uses a much shorter timeout — a step is one token of someone's
+//! stream. Pure logic, no threads: the server drives it, the tests poke
+//! it directly.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
@@ -40,23 +47,90 @@ impl Default for BatcherConfig {
     }
 }
 
+/// One pending decode step of an active generation (the sequence id is
+/// enough — the dispatcher owns the session state).
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeStep {
+    pub seq: u64,
+    pub enqueued: Instant,
+}
+
+/// A group of decode steps emitted together (steps of *different*
+/// sequences — one sequence has at most one step in flight).
+#[derive(Debug)]
+pub struct DecodeBatch {
+    pub steps: Vec<DecodeStep>,
+    pub formed_at: Instant,
+}
+
+/// Size-or-timeout policy of the decode lane. The timeout is an order of
+/// magnitude tighter than prefill's: a decode step is one token of a
+/// live stream, so holding it for batch-fill hurts inter-token latency.
+#[derive(Debug, Clone)]
+pub struct DecodeLaneConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for DecodeLaneConfig {
+    fn default() -> Self {
+        DecodeLaneConfig { max_batch: 8, max_wait: Duration::from_micros(200) }
+    }
+}
+
+/// Either kind of ready work ([`Batcher::pop_ready_any`]).
+#[derive(Debug)]
+pub enum AnyBatch {
+    Prefill(Batch),
+    Decode(DecodeBatch),
+}
+
 pub struct Batcher {
     cfg: BatcherConfig,
+    decode_cfg: DecodeLaneConfig,
     queues: BTreeMap<BatchKey, VecDeque<PrefillRequest>>,
+    decode_q: VecDeque<DecodeStep>,
     pending: usize,
+    /// Lane-fairness toggle: flips after every emitted batch.
+    prefer_decode: bool,
 }
 
 impl Batcher {
     pub fn new(cfg: BatcherConfig) -> Self {
-        Batcher { cfg, queues: BTreeMap::new(), pending: 0 }
+        Self::with_decode(cfg, DecodeLaneConfig::default())
     }
 
+    pub fn with_decode(cfg: BatcherConfig, decode_cfg: DecodeLaneConfig) -> Self {
+        Batcher {
+            cfg,
+            decode_cfg,
+            queues: BTreeMap::new(),
+            decode_q: VecDeque::new(),
+            pending: 0,
+            prefer_decode: true,
+        }
+    }
+
+    /// Pending work across both lanes.
     pub fn pending(&self) -> usize {
         self.pending
     }
 
+    /// Queued decode steps (the dispatcher uses this to pick its sleep
+    /// quantum — a waiting step must be re-checked at the decode lane's
+    /// timeout, not prefill's).
+    pub fn decode_pending(&self) -> usize {
+        self.decode_q.len()
+    }
+
     pub fn push(&mut self, key: BatchKey, req: PrefillRequest) {
         self.queues.entry(key).or_default().push_back(req);
+        self.pending += 1;
+    }
+
+    /// Enqueue one decode step (a generation's next token).
+    pub fn push_decode(&mut self, step: DecodeStep) {
+        self.decode_q.push_back(step);
         self.pending += 1;
     }
 
@@ -88,6 +162,40 @@ impl Batcher {
         Some(Batch { key, requests, formed_at: now })
     }
 
+    /// Next ready decode batch (size-or-timeout over the decode lane).
+    pub fn pop_decode_ready(&mut self, now: Instant) -> Option<DecodeBatch> {
+        let ready = self.decode_q.len() >= self.decode_cfg.max_batch
+            || self
+                .decode_q
+                .front()
+                .is_some_and(|s| now.duration_since(s.enqueued) >= self.decode_cfg.max_wait);
+        if !ready {
+            return None;
+        }
+        let n = self.decode_q.len().min(self.decode_cfg.max_batch);
+        let steps: Vec<_> = self.decode_q.drain(..n).collect();
+        self.pending -= steps.len();
+        Some(DecodeBatch { steps, formed_at: now })
+    }
+
+    /// Next ready batch from either lane, alternating lanes after every
+    /// emission so neither phase starves the other under sustained load.
+    pub fn pop_ready_any(&mut self, now: Instant) -> Option<AnyBatch> {
+        let decode_first = self.prefer_decode;
+        for lane in [decode_first, !decode_first] {
+            if lane {
+                if let Some(b) = self.pop_decode_ready(now) {
+                    self.prefer_decode = false;
+                    return Some(AnyBatch::Decode(b));
+                }
+            } else if let Some(b) = self.pop_ready(now) {
+                self.prefer_decode = true;
+                return Some(AnyBatch::Prefill(b));
+            }
+        }
+        None
+    }
+
     /// Drain everything regardless of timers (shutdown path).
     pub fn drain_all(&mut self, now: Instant) -> Vec<Batch> {
         let mut out = vec![];
@@ -104,9 +212,24 @@ impl Batcher {
         out
     }
 
-    /// Earliest enqueue time among all queued requests (for sleep timing).
+    /// Flush the decode lane regardless of timers (shutdown path).
+    pub fn drain_decode(&mut self, now: Instant) -> Option<DecodeBatch> {
+        if self.decode_q.is_empty() {
+            return None;
+        }
+        let steps: Vec<_> = self.decode_q.drain(..).collect();
+        self.pending -= steps.len();
+        Some(DecodeBatch { steps, formed_at: now })
+    }
+
+    /// Earliest enqueue time among all queued work (for sleep timing).
     pub fn oldest_enqueue(&self) -> Option<Instant> {
-        self.queues.values().filter_map(|q| q.front()).map(|r| r.enqueued).min()
+        let prefill = self.queues.values().filter_map(|q| q.front()).map(|r| r.enqueued).min();
+        let decode = self.decode_q.front().map(|s| s.enqueued);
+        match (prefill, decode) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
     }
 }
 
@@ -175,6 +298,89 @@ mod tests {
         let batch = b.pop_ready(t + Duration::from_secs(1)).unwrap();
         let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    fn step(seq: u64, t: Instant) -> DecodeStep {
+        DecodeStep { seq, enqueued: t }
+    }
+
+    #[test]
+    fn decode_lane_size_or_timeout() {
+        let mut b = Batcher::with_decode(
+            BatcherConfig::default(),
+            DecodeLaneConfig { max_batch: 3, max_wait: Duration::from_millis(5) },
+        );
+        let t = Instant::now();
+        b.push_decode(step(1, t));
+        b.push_decode(step(2, t));
+        assert!(b.pop_decode_ready(t).is_none(), "not full, not expired");
+        b.push_decode(step(3, t));
+        let batch = b.pop_decode_ready(t).expect("full batch");
+        assert_eq!(batch.steps.len(), 3);
+        assert_eq!(b.pending(), 0);
+        // timeout path
+        b.push_decode(step(4, t));
+        assert!(b.pop_decode_ready(t).is_none());
+        let batch = b.pop_decode_ready(t + Duration::from_millis(6)).expect("timeout flush");
+        assert_eq!(batch.steps.len(), 1);
+        assert_eq!(batch.steps[0].seq, 4);
+    }
+
+    #[test]
+    fn lanes_alternate_so_neither_starves() {
+        let mut b = Batcher::with_decode(
+            BatcherConfig { max_batch: 1, max_wait: Duration::ZERO },
+            DecodeLaneConfig { max_batch: 1, max_wait: Duration::ZERO },
+        );
+        let t = Instant::now();
+        for i in 0..3 {
+            b.push(key(512), req(i, t));
+            b.push_decode(step(100 + i, t));
+        }
+        let mut kinds = vec![];
+        while let Some(any) = b.pop_ready_any(t + Duration::from_secs(1)) {
+            kinds.push(match any {
+                AnyBatch::Decode(_) => 'd',
+                AnyBatch::Prefill(_) => 'p',
+            });
+        }
+        assert_eq!(kinds, vec!['d', 'p', 'd', 'p', 'd', 'p'], "lanes must alternate");
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn pop_ready_any_falls_through_to_nonempty_lane() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 1, max_wait: Duration::ZERO });
+        let t = Instant::now();
+        b.push(key(512), req(1, t));
+        // decode lane empty: prefill must still come out even on a
+        // decode-preferring turn
+        assert!(matches!(b.pop_ready_any(t), Some(AnyBatch::Prefill(_))));
+        b.push_decode(step(7, t));
+        assert!(matches!(b.pop_ready_any(t), Some(AnyBatch::Decode(_))));
+        assert!(b.pop_ready_any(t).is_none());
+    }
+
+    #[test]
+    fn drain_decode_flushes_everything() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        let t = Instant::now();
+        for i in 0..5 {
+            b.push_decode(step(i, t));
+        }
+        let batch = b.drain_decode(t).unwrap();
+        assert_eq!(batch.steps.len(), 5);
+        assert_eq!(b.pending(), 0);
+        assert!(b.drain_decode(t).is_none());
+    }
+
+    #[test]
+    fn oldest_enqueue_spans_both_lanes() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        let t = Instant::now();
+        b.push(key(512), req(1, t + Duration::from_millis(10)));
+        b.push_decode(step(2, t));
+        assert_eq!(b.oldest_enqueue(), Some(t));
     }
 
     #[test]

@@ -1,10 +1,14 @@
 //! Paged KV-cache manager (PagedAttention-style page pool).
 //!
-//! Prefill produces per-layer K/V blocks; a decode phase (or a later
-//! retrieval of prefill state) needs them resident. The pool hands out
-//! fixed-size pages (one attention block per page per layer-group),
-//! tracks per-sequence page tables, refcounts shared prefixes, and evicts
-//! completed sequences LRU when under pressure.
+//! Prefill produces per-layer K/V blocks; the decode phase (see
+//! `decode::session`) keeps them resident and appends one token per step
+//! through [`KvCache::append_tokens`]. The pool hands out fixed-size
+//! pages (one attention block per page per layer-group), tracks
+//! per-sequence page tables and token counts, refcounts shared prefixes
+//! (fork), copy-on-write remaps a shared tail page before a decode
+//! append writes into it, and evicts completed sequences LRU when under
+//! pressure. The pool manages page *identity* only; the decode store
+//! owns the slab payloads keyed by these page ids.
 
 use std::collections::HashMap;
 
@@ -14,6 +18,8 @@ pub enum KvError {
     OutOfPages { need: usize, free: usize },
     #[error("unknown sequence {0}")]
     UnknownSeq(u64),
+    #[error("sequence {0} already has a page table")]
+    SeqExists(u64),
 }
 
 #[derive(Debug, Clone)]
@@ -22,9 +28,21 @@ pub struct KvConfig {
     pub page_tokens: usize, // tokens per page (= attention block size)
 }
 
+/// Outcome of [`KvCache::append_tokens`], telling the owner of the page
+/// payloads what bookkeeping the append performed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Append {
+    /// `(old_page, new_page)` if the shared tail page was copy-on-write
+    /// remapped; the caller must copy the slab payload old -> new.
+    pub cow: Option<(u32, u32)>,
+    /// Pages newly appended to the table for growth (possibly empty).
+    pub grown: Vec<u32>,
+}
+
 #[derive(Debug)]
 struct SeqEntry {
     pages: Vec<u32>,
+    n_tokens: usize,
     pinned: bool,
     last_touch: u64,
 }
@@ -59,14 +77,32 @@ impl KvCache {
         self.cfg.total_pages - self.free.len()
     }
 
+    pub fn total_pages(&self) -> usize {
+        self.cfg.total_pages
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.cfg.page_tokens
+    }
+
+    /// Fraction of the pool currently referenced (serving-report gauge).
+    pub fn occupancy(&self) -> f64 {
+        self.used_pages() as f64 / self.cfg.total_pages.max(1) as f64
+    }
+
     fn tick(&mut self) -> u64 {
         self.clock += 1;
         self.clock
     }
 
     /// Allocate a page table for a sequence; evicts unpinned LRU
-    /// sequences if required.
+    /// sequences if required. A `seq_id` that already has a table is a
+    /// hard [`KvError::SeqExists`] — silently replacing it would leak the
+    /// old pages' refcounts.
     pub fn allocate(&mut self, seq_id: u64, n_tokens: usize) -> Result<&[u32], KvError> {
+        if self.seqs.contains_key(&seq_id) {
+            return Err(KvError::SeqExists(seq_id));
+        }
         let need = self.pages_needed(n_tokens);
         while self.free.len() < need {
             if !self.evict_lru() {
@@ -81,21 +117,90 @@ impl KvCache {
         }
         self.alloc_count += 1;
         let t = self.tick();
-        let entry = SeqEntry { pages, pinned: true, last_touch: t };
+        let entry = SeqEntry { pages, n_tokens, pinned: true, last_touch: t };
         self.seqs.insert(seq_id, entry);
         Ok(&self.seqs[&seq_id].pages)
     }
 
-    /// Fork `dst` from `src` sharing its pages (prefix sharing): pages are
-    /// refcounted, copy-on-write is the caller's concern.
+    /// Fork `dst` from `src` sharing its pages (prefix sharing): pages
+    /// are refcounted; a decode append to either sequence copy-on-write
+    /// remaps the shared tail ([`KvCache::append_tokens`]). The fork
+    /// inherits the source's pin state — a fork of a released sequence
+    /// is itself evictable, so nothing leaks if the caller never
+    /// releases it.
     pub fn fork(&mut self, src: u64, dst: u64) -> Result<(), KvError> {
-        let pages = self.seqs.get(&src).ok_or(KvError::UnknownSeq(src))?.pages.clone();
+        if self.seqs.contains_key(&dst) {
+            return Err(KvError::SeqExists(dst));
+        }
+        let e = self.seqs.get(&src).ok_or(KvError::UnknownSeq(src))?;
+        let (pages, n_tokens, pinned) = (e.pages.clone(), e.n_tokens, e.pinned);
         for &p in &pages {
             self.refcount[p as usize] += 1;
         }
         let t = self.tick();
-        self.seqs.insert(dst, SeqEntry { pages, pinned: true, last_touch: t });
+        self.seqs.insert(dst, SeqEntry { pages, n_tokens, pinned, last_touch: t });
         Ok(())
+    }
+
+    /// Cached token count of a sequence.
+    pub fn seq_tokens(&self, seq_id: u64) -> Option<usize> {
+        self.seqs.get(&seq_id).map(|e| e.n_tokens)
+    }
+
+    /// Extend a sequence by `extra` tokens (the decode append path):
+    /// copy-on-write remaps the tail page if it is shared and about to be
+    /// written, then appends pages as the new tokens cross page
+    /// boundaries, evicting unpinned LRU sequences (never this one) under
+    /// pressure. Pages needed are reserved up front, so a failed append
+    /// leaves the table untouched.
+    pub fn append_tokens(&mut self, seq_id: u64, extra: usize) -> Result<Append, KvError> {
+        let pt = self.cfg.page_tokens;
+        let (cur, have) = {
+            let e = self.seqs.get(&seq_id).ok_or(KvError::UnknownSeq(seq_id))?;
+            (e.n_tokens, e.pages.len())
+        };
+        if extra == 0 {
+            let t = self.tick();
+            self.seqs.get_mut(&seq_id).unwrap().last_touch = t;
+            return Ok(Append { cow: None, grown: vec![] });
+        }
+        let tail_shared = |kv: &Self| -> bool {
+            if cur % pt == 0 {
+                return false; // next write opens a fresh page
+            }
+            let tail = kv.seqs[&seq_id].pages[cur / pt];
+            kv.refcount[tail as usize] > 1
+        };
+        // reserve every page this append can need before mutating
+        let grow = self.pages_needed(cur + extra).saturating_sub(have);
+        let need = grow + tail_shared(self) as usize;
+        while self.free.len() < need {
+            if !self.evict_lru_excluding(seq_id) {
+                return Err(KvError::OutOfPages { need, free: self.free.len() });
+            }
+        }
+        // eviction may have dropped the sibling sharing our tail: re-check
+        let mut cow = None;
+        if tail_shared(self) {
+            let new = self.free.pop().unwrap();
+            self.refcount[new as usize] = 1;
+            let e = self.seqs.get_mut(&seq_id).unwrap();
+            let old = std::mem::replace(&mut e.pages[cur / pt], new);
+            self.refcount[old as usize] -= 1;
+            cow = Some((old, new));
+        }
+        let mut grown = Vec::with_capacity(grow);
+        for _ in 0..grow {
+            let p = self.free.pop().unwrap();
+            self.refcount[p as usize] = 1;
+            grown.push(p);
+        }
+        let t = self.tick();
+        let e = self.seqs.get_mut(&seq_id).unwrap();
+        e.pages.extend_from_slice(&grown);
+        e.n_tokens = cur + extra;
+        e.last_touch = t;
+        Ok(Append { cow, grown })
     }
 
     /// Mark a sequence's prefill complete; it becomes evictable.
@@ -124,10 +229,20 @@ impl KvCache {
     }
 
     fn evict_lru(&mut self) -> bool {
+        self.evict_victim(None)
+    }
+
+    /// LRU eviction that never selects `keep` — the appending sequence
+    /// must not evict itself even if the caller released it early.
+    fn evict_lru_excluding(&mut self, keep: u64) -> bool {
+        self.evict_victim(Some(keep))
+    }
+
+    fn evict_victim(&mut self, keep: Option<u64>) -> bool {
         let victim = self
             .seqs
             .iter()
-            .filter(|(_, e)| !e.pinned)
+            .filter(|(&id, e)| !e.pinned && Some(id) != keep)
             .min_by_key(|(_, e)| e.last_touch)
             .map(|(&id, _)| id);
         match victim {
@@ -145,10 +260,19 @@ impl KvCache {
     }
 
     /// Invariant check used by property tests: every page is either free
-    /// or referenced, with consistent refcounts.
+    /// or referenced, with consistent refcounts, and every page table is
+    /// exactly sized for its token count.
     pub fn check_invariants(&self) -> Result<(), String> {
         let mut counted = vec![0u16; self.cfg.total_pages];
-        for e in self.seqs.values() {
+        for (id, e) in &self.seqs {
+            if e.pages.len() != self.pages_needed(e.n_tokens) {
+                return Err(format!(
+                    "seq {id}: {} pages for {} tokens (want {})",
+                    e.pages.len(),
+                    e.n_tokens,
+                    self.pages_needed(e.n_tokens)
+                ));
+            }
             for &p in &e.pages {
                 counted[p as usize] += 1;
             }
@@ -227,6 +351,112 @@ mod tests {
         assert_eq!(kv.drop_seq(1).unwrap(), 0); // still referenced by 2
         assert_eq!(kv.drop_seq(2).unwrap(), 2);
         kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn allocate_existing_seq_is_hard_error() {
+        let mut kv = cache(8);
+        kv.allocate(1, 64).unwrap();
+        assert_eq!(kv.allocate(1, 64), Err(KvError::SeqExists(1)));
+        kv.fork(1, 2).unwrap();
+        assert_eq!(kv.fork(1, 2), Err(KvError::SeqExists(2)));
+        assert_eq!(kv.used_pages(), 1);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_inherits_pin_state() {
+        let mut kv = cache(8);
+        kv.allocate(1, 256).unwrap(); // 4 pages
+        kv.release(1).unwrap();
+        kv.fork(1, 2).unwrap(); // fork of a released seq is evictable
+        // pool full after another pinned alloc; both 1 and 2 can evict
+        kv.allocate(3, 256).unwrap();
+        kv.allocate(4, 256).unwrap();
+        assert!(kv.page_table(1).is_none() && kv.page_table(2).is_none());
+        kv.check_invariants().unwrap();
+        // a fork of a *pinned* seq stays pinned
+        kv.drop_seq(3).unwrap();
+        kv.drop_seq(4).unwrap();
+        kv.allocate(5, 256).unwrap();
+        kv.fork(5, 6).unwrap();
+        assert!(matches!(kv.allocate(7, 512), Err(KvError::OutOfPages { .. })));
+        assert!(kv.page_table(5).is_some() && kv.page_table(6).is_some());
+    }
+
+    #[test]
+    fn append_crosses_page_boundary() {
+        let mut kv = cache(8); // page_tokens = 64
+        kv.allocate(1, 60).unwrap(); // 1 page, 60 tokens
+        assert_eq!(kv.seq_tokens(1), Some(60));
+        // 4 more tokens fill the page exactly: no growth, no cow
+        let a = kv.append_tokens(1, 4).unwrap();
+        assert_eq!(a, Append { cow: None, grown: vec![] });
+        assert_eq!(kv.page_table(1).unwrap().len(), 1);
+        // one more token opens a second page
+        let a = kv.append_tokens(1, 1).unwrap();
+        assert_eq!(a.grown.len(), 1);
+        assert_eq!(kv.page_table(1).unwrap().len(), 2);
+        // a long append spans several pages at once
+        let a = kv.append_tokens(1, 200).unwrap();
+        assert_eq!(kv.seq_tokens(1), Some(265));
+        assert_eq!(kv.page_table(1).unwrap().len(), 5);
+        assert_eq!(a.grown.len(), 3);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn append_cow_remaps_shared_tail() {
+        let mut kv = cache(8);
+        kv.allocate(1, 100).unwrap(); // 2 pages, tail partially filled
+        let tail = kv.page_table(1).unwrap()[1];
+        kv.fork(1, 2).unwrap();
+        let a = kv.append_tokens(2, 1).unwrap();
+        let (old, new) = a.cow.expect("shared tail must copy-on-write");
+        assert_eq!(old, tail);
+        assert_ne!(new, tail);
+        assert_eq!(kv.page_table(2).unwrap()[1], new);
+        assert_eq!(kv.page_table(1).unwrap()[1], tail);
+        // the source now owns its tail alone: its own append needs no cow
+        let a = kv.append_tokens(1, 1).unwrap();
+        assert_eq!(a.cow, None);
+        // a full tail page is never cow'd: writes go to a fresh page
+        let mut kv = cache(8);
+        kv.allocate(1, 64).unwrap();
+        kv.fork(1, 2).unwrap();
+        let a = kv.append_tokens(2, 1).unwrap();
+        assert_eq!(a.cow, None);
+        assert_eq!(a.grown.len(), 1);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn append_pressure_evicts_but_never_self() {
+        let mut kv = cache(4);
+        kv.allocate(1, 128).unwrap(); // 2 pages
+        kv.release(1).unwrap();
+        kv.allocate(2, 128).unwrap(); // 2 pages, pool full
+        kv.release(2).unwrap(); // seq 2 unpinned but appending
+        let a = kv.append_tokens(2, 64).unwrap(); // needs 1 page -> evict seq 1
+        assert_eq!(a.grown.len(), 1);
+        assert!(kv.page_table(1).is_none(), "LRU seq 1 must be evicted");
+        assert!(kv.page_table(2).is_some(), "appender must never evict itself");
+        assert_eq!(kv.evict_count, 1);
+        kv.check_invariants().unwrap();
+        // nothing evictable left: append past capacity is a clean error
+        let err = kv.append_tokens(2, 256).unwrap_err();
+        assert!(matches!(err, KvError::OutOfPages { .. }));
+        assert_eq!(kv.seq_tokens(2), Some(192), "failed append must not change state");
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn append_unknown_seq_and_zero_extra() {
+        let mut kv = cache(4);
+        assert_eq!(kv.append_tokens(9, 1), Err(KvError::UnknownSeq(9)));
+        kv.allocate(1, 64).unwrap();
+        assert_eq!(kv.append_tokens(1, 0).unwrap(), Append { cow: None, grown: vec![] });
+        assert_eq!(kv.seq_tokens(1), Some(64));
     }
 
     #[test]

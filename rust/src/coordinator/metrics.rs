@@ -87,6 +87,20 @@ pub struct Metrics {
     pub ttft: LatencyHisto,
     /// sum of budget fractions * 1e6 (atomic fixed-point), for mean budget
     pub budget_sum_micro: AtomicU64,
+    // --- decode phase ---------------------------------------------------
+    pub generates_submitted: AtomicU64,
+    pub generates_completed: AtomicU64,
+    /// Decode-step batches emitted by the continuous-batching lane.
+    pub decode_batches: AtomicU64,
+    /// Individual decode steps executed (one generated token each, so
+    /// this is also the tokens-out counter).
+    pub decode_steps: AtomicU64,
+    /// Steps that ran the dense fallback path.
+    pub decode_dense_steps: AtomicU64,
+    /// Per-step decode latency.
+    pub decode_step: LatencyHisto,
+    /// sum of per-step decode budget fractions * 1e6, for the mean
+    pub decode_budget_sum_micro: AtomicU64,
     pub errors: Mutex<Vec<String>>,
 }
 
@@ -108,10 +122,29 @@ impl Metrics {
         }
     }
 
+    pub fn mean_decode_budget(&self) -> f64 {
+        let c = self.decode_steps.load(Ordering::Relaxed);
+        if c == 0 {
+            0.0
+        } else {
+            self.decode_budget_sum_micro.load(Ordering::Relaxed) as f64 / 1e6 / c as f64
+        }
+    }
+
+    pub fn record_decode_step(&self, d: Duration, budget_fraction: f64, dense: bool) {
+        self.decode_steps.fetch_add(1, Ordering::Relaxed);
+        self.decode_step.record(d);
+        self.decode_budget_sum_micro
+            .fetch_add((budget_fraction * 1e6) as u64, Ordering::Relaxed);
+        if dense {
+            self.decode_dense_steps.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     pub fn report(&self, wall: Duration) -> String {
         let completed = self.completed.load(Ordering::Relaxed);
         let toks = self.tokens_in.load(Ordering::Relaxed);
-        format!(
+        let mut out = format!(
             "requests: submitted={} completed={} rejected={} batches={}\n\
              tokens prefilled: {} ({:.0} tok/s)\n\
              TTFT  mean={:.1}ms p50={:.1}ms p90={:.1}ms p99={:.1}ms max={:.1}ms\n\
@@ -133,7 +166,26 @@ impl Metrics {
             self.exec.mean_us() / 1e3,
             self.exec.percentile_us(0.9) as f64 / 1e3,
             self.mean_budget(),
-        )
+        );
+        let steps = self.decode_steps.load(Ordering::Relaxed);
+        if steps > 0 || self.generates_submitted.load(Ordering::Relaxed) > 0 {
+            out.push_str(&format!(
+                "\ndecode: generations submitted={} completed={} | steps={} batches={}\n\
+                 tokens generated: {} ({:.0} tok/s) | step mean={:.1}µs p90={:.1}µs\n\
+                 dense-fallback steps: {} | mean decode budget fraction: {:.3}",
+                self.generates_submitted.load(Ordering::Relaxed),
+                self.generates_completed.load(Ordering::Relaxed),
+                steps,
+                self.decode_batches.load(Ordering::Relaxed),
+                steps,
+                steps as f64 / wall.as_secs_f64().max(1e-9),
+                self.decode_step.mean_us(),
+                self.decode_step.percentile_us(0.9) as f64,
+                self.decode_dense_steps.load(Ordering::Relaxed),
+                self.mean_decode_budget(),
+            ));
+        }
+        out
     }
 }
 
@@ -162,5 +214,19 @@ mod tests {
         let h = LatencyHisto::new();
         assert_eq!(h.percentile_us(0.9), 0);
         assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn decode_section_appears_once_steps_recorded() {
+        let m = Metrics::new();
+        let quiet = m.report(Duration::from_secs(1));
+        assert!(!quiet.contains("decode:"), "no decode section before any decode work");
+        m.record_decode_step(Duration::from_micros(120), 0.25, false);
+        m.record_decode_step(Duration::from_micros(80), 1.0, true);
+        let loud = m.report(Duration::from_secs(1));
+        assert!(loud.contains("decode:"));
+        assert!(loud.contains("tokens generated: 2"));
+        assert_eq!(m.decode_dense_steps.load(Ordering::Relaxed), 1);
+        assert!((m.mean_decode_budget() - 0.625).abs() < 1e-6);
     }
 }

@@ -1,7 +1,9 @@
 //! L3 coordinator: the serving-system half of the reproduction.
 //!
 //! request → router/admission → dynamic batcher → dispatcher → worker
-//! pool → PJRT engine; plus the paged KV pool and metrics. See
+//! pool → PJRT engine; plus the paged KV pool and metrics. Prefill
+//! requests and decode generations share the pool and the batcher, with
+//! decode steps continuously batched between prefill batches. See
 //! `server.rs` for the threading model.
 
 pub mod admission;
@@ -11,5 +13,5 @@ pub mod metrics;
 pub mod request;
 pub mod server;
 
-pub use request::{Method, PrefillRequest, PrefillResponse};
+pub use request::{GenerateRequest, GenerateResponse, Method, PrefillRequest, PrefillResponse};
 pub use server::{Coordinator, CoordinatorConfig};

@@ -2,6 +2,7 @@
 
 use std::time::Instant;
 
+use crate::decode::DecodePolicy;
 use crate::runtime::ScalarValue;
 
 /// Attention method requested for a prefill. `Stem` carries its runtime
@@ -95,6 +96,40 @@ pub struct PrefillResponse {
     pub hidden: Option<Vec<f32>>,
     pub queue_us: u64,
     pub exec_us: u64,
+}
+
+/// An autoregressive generation request ([`crate::coordinator::Coordinator::submit_generate`]):
+/// prompt ingest followed by up to `max_new_tokens` policy-directed
+/// decode steps over the paged KV cache.
+#[derive(Debug, Clone)]
+pub struct GenerateRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub policy: DecodePolicy,
+    pub enqueued: Instant,
+}
+
+/// Final result of a generation (per-token streaming happens inside the
+/// decode session; the coordinator returns the aggregate).
+#[derive(Debug, Clone)]
+pub struct GenerateResponse {
+    pub id: u64,
+    /// Generated tokens, in order (may stop early on the END token).
+    pub tokens: Vec<i32>,
+    pub n_prompt: usize,
+    pub steps: usize,
+    /// Mean fraction of the cached context attended per step.
+    pub mean_budget_fraction: f64,
+    /// Steps that ran the dense fallback path.
+    pub dense_steps: usize,
+    /// Time from submit to the first decode step starting.
+    pub queue_us: u64,
+    /// Summed per-step execution time (the session's own step clocks);
+    /// inter-step scheduling gaps are excluded.
+    pub exec_us: u64,
+    /// Mean decode latency per generated token.
+    pub ns_per_token: f64,
 }
 
 impl PrefillResponse {

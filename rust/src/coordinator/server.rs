@@ -1,16 +1,22 @@
 //! The coordinator itself: router → admission → dynamic batcher →
 //! dispatcher → worker pool → PJRT engine, with a paged KV pool and
 //! serving metrics. This is the paper-as-a-system: the Stem budget enters
-//! through `Method::Stem` scalars and shows up as lower exec latency and
-//! budget fraction per request.
+//! through `Method::Stem` scalars on the prefill side and through the
+//! decode [`DecodePolicy`] on the generation side, and shows up as lower
+//! exec latency and budget fraction per request.
 //!
 //! Threading model (std threads; see DESIGN.md §2 on tokio):
-//!   * callers enqueue via `submit` (mpsc into the dispatcher)
-//!   * one dispatcher thread forms batches (size-or-timeout)
-//!   * `workers` threads execute batch items on the shared PJRT engine
+//!   * callers enqueue via `submit` / `submit_generate` (mpsc into the
+//!     dispatcher)
+//!   * one dispatcher thread forms batches (size-or-timeout, prefill and
+//!     decode lanes alternating — see `batcher`)
+//!   * `workers` threads execute batch items on the shared PJRT engine;
+//!     decode steps advance their `DecodeSession` one token and then
+//!     re-enqueue themselves through the dispatcher (continuous
+//!     batching), so a long generation never monopolizes a worker
 //!   * completions flow back through per-request channels
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -18,17 +24,23 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::admission::{Admission, AdmissionConfig, Admit};
-use super::batcher::{Batch, BatchKey, Batcher, BatcherConfig};
+use super::batcher::{
+    AnyBatch, Batch, BatchKey, Batcher, BatcherConfig, DecodeLaneConfig, DecodeStep,
+};
 use super::kv_cache::{KvCache, KvConfig};
 use super::metrics::Metrics;
-use super::request::{Method, PrefillRequest, PrefillResponse};
+use super::request::{GenerateRequest, GenerateResponse, Method, PrefillRequest, PrefillResponse};
+use crate::decode::{DecodePolicy, DecodeSession, StepPlan, TinyLm};
 use crate::model::vocab;
 use crate::runtime::Engine;
+use crate::sim::cost::{estimate_generate_ns, Geometry};
 use crate::util::threadpool::ThreadPool;
 
 pub struct CoordinatorConfig {
     pub workers: usize,
     pub batcher: BatcherConfig,
+    /// Size-or-timeout policy of the decode-step lane.
+    pub decode_lane: DecodeLaneConfig,
     pub admission: AdmissionConfig,
     pub kv_pages: usize,
 }
@@ -38,6 +50,7 @@ impl Default for CoordinatorConfig {
         CoordinatorConfig {
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8),
             batcher: BatcherConfig::default(),
+            decode_lane: DecodeLaneConfig::default(),
             admission: AdmissionConfig::default(),
             kv_pages: 4096,
         }
@@ -46,8 +59,31 @@ impl Default for CoordinatorConfig {
 
 enum Msg {
     Request(PrefillRequest, mpsc::Sender<Result<PrefillResponse>>),
+    /// The f64 is the admitted work estimate (ns) to release on completion.
+    Generate(GenerateRequest, mpsc::Sender<Result<GenerateResponse>>, f64),
+    /// A generation finished a step and wants its next one scheduled.
+    DecodeReady(u64),
     Shutdown,
 }
+
+/// One active generation owned by the dispatcher/worker handoff: the
+/// session leaves the map while its step runs and returns afterwards, so
+/// a sequence can never run two steps concurrently.
+struct DecodeTask {
+    session: DecodeSession,
+    ch: mpsc::Sender<Result<GenerateResponse>>,
+    prompt: Vec<i32>,
+    max_new: usize,
+    tokens: Vec<i32>,
+    prefilled: bool,
+    enqueued: Instant,
+    first_step_at: Option<Instant>,
+    /// Admission bookkeeping to release on completion.
+    admit_tokens: usize,
+    admit_ns: f64,
+}
+
+type DecodeTasks = Arc<Mutex<std::collections::HashMap<u64, DecodeTask>>>;
 
 pub struct Coordinator {
     engine: Arc<Engine>,
@@ -55,6 +91,10 @@ pub struct Coordinator {
     dispatcher: Option<thread::JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
     admission: Arc<Admission>,
+    kv: Arc<Mutex<KvCache>>,
+    decode_model: Arc<TinyLm>,
+    geometry: Geometry,
+    workers: usize,
     next_id: AtomicU64,
     started: Instant,
 }
@@ -63,21 +103,48 @@ impl Coordinator {
     pub fn new(engine: Arc<Engine>, cfg: CoordinatorConfig) -> Coordinator {
         let metrics = Arc::new(Metrics::new());
         let admission = Arc::new(Admission::new(cfg.admission));
-        let block = engine.manifest().model.block;
+        let m = &engine.manifest().model;
         let kv = Arc::new(Mutex::new(KvCache::new(KvConfig {
             total_pages: cfg.kv_pages,
-            page_tokens: block,
+            page_tokens: m.block,
         })));
+        // decode stand-in LM shares the manifest geometry (see
+        // decode::session docs); one attention layer today.
+        let decode_model =
+            Arc::new(TinyLm::new(0xD0C0DE, m.n_heads, m.n_kv_heads.max(1), m.d_head, m.vocab_size));
+        let geometry = Geometry {
+            n_layers: 1,
+            n_heads: m.n_heads,
+            d_head: m.d_head,
+            d_model: m.n_heads * m.d_head,
+            d_ff: m.d_ff,
+            block: m.block,
+        };
         let (tx, rx) = mpsc::channel::<Msg>();
 
         let dispatcher = {
             let engine = Arc::clone(&engine);
             let metrics = Arc::clone(&metrics);
             let admission = Arc::clone(&admission);
+            let kv = Arc::clone(&kv);
+            let decode_model = Arc::clone(&decode_model);
             let batcher_cfg = cfg.batcher.clone();
+            let decode_cfg = cfg.decode_lane.clone();
             let workers = cfg.workers;
+            let tx2 = tx.clone();
             thread::spawn(move || {
-                dispatcher_loop(rx, engine, metrics, admission, kv, batcher_cfg, workers)
+                dispatcher_loop(DispatcherCtx {
+                    rx,
+                    tx: tx2,
+                    engine,
+                    metrics,
+                    admission,
+                    kv,
+                    decode_model,
+                    batcher_cfg,
+                    decode_cfg,
+                    workers,
+                })
             })
         };
 
@@ -87,6 +154,10 @@ impl Coordinator {
             dispatcher: Some(dispatcher),
             metrics,
             admission,
+            kv,
+            decode_model,
+            geometry,
+            workers: cfg.workers,
             next_id: AtomicU64::new(1),
             started: Instant::now(),
         }
@@ -94,6 +165,12 @@ impl Coordinator {
 
     pub fn engine(&self) -> &Arc<Engine> {
         &self.engine
+    }
+
+    /// The deterministic decode LM (exposed so tests/benches can share
+    /// the exact serving geometry).
+    pub fn decode_model(&self) -> &Arc<TinyLm> {
+        &self.decode_model
     }
 
     /// Route + admit + enqueue. Returns the response channel, or an
@@ -143,12 +220,85 @@ impl Coordinator {
         rx.recv().map_err(|_| anyhow!("response channel closed"))?
     }
 
+    /// Submit an autoregressive generation: admit against the decode cost
+    /// model ([`estimate_generate_ns`]), then hand the prompt to the
+    /// dispatcher, which interleaves its decode steps with prefill
+    /// batches. The response arrives once on the returned channel.
+    pub fn submit_generate(
+        &self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        policy: DecodePolicy,
+    ) -> Result<mpsc::Receiver<Result<GenerateResponse>>> {
+        policy.validate().map_err(|e| anyhow!("invalid decode policy: {e}"))?;
+        if max_new_tokens == 0 {
+            return Err(anyhow!("max_new_tokens must be >= 1"));
+        }
+        let n_tokens = prompt.len() + max_new_tokens;
+        // budget the whole generation's estimated work up front — a
+        // decode stream holds pages and a worker slice for its lifetime
+        let budget = match policy.plan(n_tokens, 0, self.geometry.block) {
+            StepPlan::Dense => None,
+            StepPlan::Sparse { budget_blocks } => Some(budget_blocks as f64),
+        };
+        let est_ns = estimate_generate_ns(
+            &self.geometry,
+            prompt.len(),
+            max_new_tokens,
+            budget,
+            policy.stride,
+            self.workers,
+        );
+        match self.admission.try_admit_work(n_tokens, est_ns) {
+            Admit::Accepted => {}
+            Admit::Rejected { reason } => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(anyhow!("rejected: {reason}"));
+            }
+        }
+        let req = GenerateRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            prompt,
+            max_new_tokens,
+            policy,
+            enqueued: Instant::now(),
+        };
+        self.metrics.generates_submitted.fetch_add(1, Ordering::Relaxed);
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Generate(req, rtx, est_ns))
+            .map_err(|_| anyhow!("coordinator stopped"))?;
+        Ok(rrx)
+    }
+
+    /// Synchronous convenience wrapper around [`Coordinator::submit_generate`].
+    pub fn generate_blocking(
+        &self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        policy: DecodePolicy,
+    ) -> Result<GenerateResponse> {
+        let rx = self.submit_generate(prompt, max_new_tokens, policy)?;
+        rx.recv().map_err(|_| anyhow!("response channel closed"))?
+    }
+
     pub fn uptime(&self) -> Duration {
         self.started.elapsed()
     }
 
+    /// Current KV page occupancy (used, total, fraction).
+    pub fn kv_occupancy(&self) -> (usize, usize, f64) {
+        let kv = self.kv.lock().unwrap();
+        (kv.used_pages(), kv.total_pages(), kv.occupancy())
+    }
+
     pub fn report(&self) -> String {
-        self.metrics.report(self.uptime())
+        let (used, total, frac) = self.kv_occupancy();
+        format!(
+            "{}\nkv pages: {used}/{total} in use ({:.1}%)",
+            self.metrics.report(self.uptime()),
+            100.0 * frac
+        )
     }
 }
 
@@ -161,31 +311,63 @@ impl Drop for Coordinator {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn dispatcher_loop(
+struct DispatcherCtx {
     rx: mpsc::Receiver<Msg>,
+    tx: mpsc::Sender<Msg>,
     engine: Arc<Engine>,
     metrics: Arc<Metrics>,
     admission: Arc<Admission>,
     kv: Arc<Mutex<KvCache>>,
+    decode_model: Arc<TinyLm>,
     batcher_cfg: BatcherConfig,
+    decode_cfg: DecodeLaneConfig,
     workers: usize,
-) {
+}
+
+fn dispatcher_loop(ctx: DispatcherCtx) {
+    let DispatcherCtx {
+        rx,
+        tx,
+        engine,
+        metrics,
+        admission,
+        kv,
+        decode_model,
+        batcher_cfg,
+        decode_cfg,
+        workers,
+    } = ctx;
     let pool = ThreadPool::new(workers);
-    let mut batcher = Batcher::new(batcher_cfg.clone());
+    let mut batcher = Batcher::with_decode(batcher_cfg.clone(), decode_cfg.clone());
     let mut channels: std::collections::HashMap<u64, mpsc::Sender<Result<PrefillResponse>>> =
         std::collections::HashMap::new();
+    let tasks: DecodeTasks = Arc::new(Mutex::new(std::collections::HashMap::new()));
+    // generations admitted but not yet completed (steps may be in flight
+    // outside both the batcher and the task map)
+    let active_decodes = Arc::new(AtomicUsize::new(0));
     let shutdown = AtomicBool::new(false);
 
     loop {
-        // 1. pull what's available (block briefly if nothing pending)
-        let msg = if batcher.pending() == 0 {
+        // 1. pull what's available (block briefly if nothing pending);
+        //    while decode steps are in flight we must keep serving
+        //    DecodeReady messages even with an empty batcher
+        let draining = shutdown.load(Ordering::SeqCst);
+        let idle = batcher.pending() == 0;
+        let msg = if idle && !draining && active_decodes.load(Ordering::SeqCst) == 0 {
             match rx.recv() {
                 Ok(m) => Some(m),
                 Err(_) => break,
             }
         } else {
-            match rx.recv_timeout(batcher_cfg.max_wait / 2) {
+            // sleep no longer than the tightest lane deadline: a queued
+            // decode step must not wait out the (much longer) prefill
+            // quantum before its age-based flush is re-checked
+            let quantum = if batcher.decode_pending() > 0 {
+                (batcher_cfg.max_wait / 2).min(decode_cfg.max_wait)
+            } else {
+                batcher_cfg.max_wait / 2
+            };
+            match rx.recv_timeout(quantum) {
                 Ok(m) => Some(m),
                 Err(mpsc::RecvTimeoutError::Timeout) => None,
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
@@ -206,59 +388,228 @@ fn dispatcher_loop(
                     channels.insert(req.id, ch);
                     batcher.push(key, req);
                 }
+                Msg::Generate(req, ch, est_ns) => {
+                    if shutdown.load(Ordering::SeqCst) {
+                        let _ = ch.send(Err(anyhow!("coordinator shutting down")));
+                        admission
+                            .release_work(req.prompt.len() + req.max_new_tokens, est_ns);
+                        continue;
+                    }
+                    // on None the rejection already went out on the channel
+                    if let Some((seq, task)) =
+                        start_decode_task(&kv, &decode_model, &admission, req, ch, est_ns)
+                    {
+                        active_decodes.fetch_add(1, Ordering::SeqCst);
+                        let enqueued = task.enqueued;
+                        tasks.lock().unwrap().insert(seq, task);
+                        batcher.push_decode(DecodeStep { seq, enqueued });
+                    }
+                }
+                Msg::DecodeReady(seq) => {
+                    batcher.push_decode(DecodeStep { seq, enqueued: Instant::now() });
+                }
             }
         }
 
         // 2. emit ready batches to the pool
         let now = Instant::now();
-        let batches: Vec<Batch> = if shutdown.load(Ordering::SeqCst) {
-            batcher.drain_all(now)
-        } else {
-            let mut v = vec![];
-            while let Some(b) = batcher.pop_ready(now) {
-                v.push(b);
+        let mut any: Vec<AnyBatch> = vec![];
+        if shutdown.load(Ordering::SeqCst) {
+            any.extend(batcher.drain_all(now).into_iter().map(AnyBatch::Prefill));
+            if let Some(d) = batcher.drain_decode(now) {
+                any.push(AnyBatch::Decode(d));
             }
-            v
-        };
-        for batch in batches {
-            metrics.batches.fetch_add(1, Ordering::Relaxed);
-            for req in batch.requests {
-                let ch = channels.remove(&req.id).unwrap();
-                let engine = Arc::clone(&engine);
-                let metrics = Arc::clone(&metrics);
-                let admission = Arc::clone(&admission);
-                let kv = Arc::clone(&kv);
-                let bucket = batch.key.bucket;
-                let kind = batch.key.kind;
-                pool.submit(move || {
-                    let out = execute_one(&engine, &kv, kind, bucket, &req);
-                    match &out {
-                        Ok(resp) => {
-                            metrics.completed.fetch_add(1, Ordering::Relaxed);
-                            metrics.tokens_in.fetch_add(req.ids.len() as u64, Ordering::Relaxed);
-                            metrics.queue.record(Duration::from_micros(resp.queue_us));
-                            metrics.exec.record(Duration::from_micros(resp.exec_us));
-                            metrics
-                                .ttft
-                                .record(Duration::from_micros(resp.queue_us + resp.exec_us));
-                            metrics.budget_sum_micro.fetch_add(
-                                (resp.budget_fraction as f64 * 1e6) as u64,
-                                Ordering::Relaxed,
-                            );
-                        }
-                        Err(e) => metrics.record_error(e.to_string()),
+        } else {
+            while let Some(b) = batcher.pop_ready_any(now) {
+                any.push(b);
+            }
+        }
+        for batch in any {
+            match batch {
+                AnyBatch::Prefill(batch) => {
+                    metrics.batches.fetch_add(1, Ordering::Relaxed);
+                    for req in batch.requests {
+                        let ch = channels.remove(&req.id).unwrap();
+                        let engine = Arc::clone(&engine);
+                        let metrics = Arc::clone(&metrics);
+                        let admission = Arc::clone(&admission);
+                        let kv = Arc::clone(&kv);
+                        let bucket = batch.key.bucket;
+                        let kind = batch.key.kind;
+                        pool.submit(move || {
+                            let out = execute_one(&engine, &kv, kind, bucket, &req);
+                            match &out {
+                                Ok(resp) => {
+                                    metrics.completed.fetch_add(1, Ordering::Relaxed);
+                                    metrics
+                                        .tokens_in
+                                        .fetch_add(req.ids.len() as u64, Ordering::Relaxed);
+                                    metrics.queue.record(Duration::from_micros(resp.queue_us));
+                                    metrics.exec.record(Duration::from_micros(resp.exec_us));
+                                    metrics
+                                        .ttft
+                                        .record(Duration::from_micros(resp.queue_us + resp.exec_us));
+                                    metrics.budget_sum_micro.fetch_add(
+                                        (resp.budget_fraction as f64 * 1e6) as u64,
+                                        Ordering::Relaxed,
+                                    );
+                                }
+                                Err(e) => metrics.record_error(e.to_string()),
+                            }
+                            admission.release(bucket);
+                            let _ = ch.send(out);
+                        });
                     }
-                    admission.release(bucket);
-                    let _ = ch.send(out);
-                });
+                }
+                AnyBatch::Decode(batch) => {
+                    metrics.decode_batches.fetch_add(1, Ordering::Relaxed);
+                    for step in batch.steps {
+                        let metrics = Arc::clone(&metrics);
+                        let admission = Arc::clone(&admission);
+                        let tasks = Arc::clone(&tasks);
+                        let active = Arc::clone(&active_decodes);
+                        let tx = tx.clone();
+                        pool.submit(move || {
+                            run_decode_step(step.seq, &tasks, &metrics, &admission, &active, &tx);
+                        });
+                    }
+                }
             }
         }
 
-        if shutdown.load(Ordering::SeqCst) && batcher.pending() == 0 {
+        if shutdown.load(Ordering::SeqCst)
+            && batcher.pending() == 0
+            && active_decodes.load(Ordering::SeqCst) == 0
+        {
             break;
         }
     }
     pool.wait_idle();
+}
+
+/// Build the decode session for an admitted generation; on failure the
+/// error goes straight back on the response channel (admission released).
+fn start_decode_task(
+    kv: &Arc<Mutex<KvCache>>,
+    model: &Arc<TinyLm>,
+    admission: &Arc<Admission>,
+    req: GenerateRequest,
+    ch: mpsc::Sender<Result<GenerateResponse>>,
+    est_ns: f64,
+) -> Option<(u64, DecodeTask)> {
+    let admit_tokens = req.prompt.len() + req.max_new_tokens;
+    let session =
+        DecodeSession::new(Arc::clone(kv), Arc::clone(model), req.policy, req.id);
+    match session {
+        Ok(session) => Some((
+            req.id,
+            DecodeTask {
+                session,
+                ch,
+                prompt: req.prompt,
+                max_new: req.max_new_tokens,
+                tokens: Vec::new(),
+                prefilled: false,
+                enqueued: req.enqueued,
+                first_step_at: None,
+                admit_tokens,
+                admit_ns: est_ns,
+            },
+        )),
+        Err(e) => {
+            admission.release_work(admit_tokens, est_ns);
+            let _ = ch.send(Err(anyhow!("kv allocation failed: {e}")));
+            None
+        }
+    }
+}
+
+/// Advance one generation by one token on a worker thread, then either
+/// complete it or hand it back to the dispatcher for its next step.
+fn run_decode_step(
+    seq: u64,
+    tasks: &DecodeTasks,
+    metrics: &Arc<Metrics>,
+    admission: &Arc<Admission>,
+    active: &Arc<AtomicUsize>,
+    tx: &mpsc::Sender<Msg>,
+) {
+    let Some(mut task) = tasks.lock().unwrap().remove(&seq) else {
+        return; // task vanished (completed with an error elsewhere)
+    };
+    let finish = |task: DecodeTask, out: Result<GenerateResponse>| {
+        if let Err(e) = &out {
+            metrics.record_error(e.to_string());
+        } else {
+            metrics.generates_completed.fetch_add(1, Ordering::Relaxed);
+        }
+        admission.release_work(task.admit_tokens, task.admit_ns);
+        let _ = task.ch.send(out);
+        active.fetch_sub(1, Ordering::SeqCst);
+    };
+    if task.first_step_at.is_none() {
+        task.first_step_at = Some(Instant::now());
+    }
+    if !task.prefilled {
+        let prompt = std::mem::take(&mut task.prompt);
+        if let Err(e) = task.session.prefill(&prompt) {
+            finish(task, Err(anyhow!("prompt ingest failed: {e}")));
+            return;
+        }
+        metrics.tokens_in.fetch_add(prompt.len() as u64, Ordering::Relaxed);
+        task.prompt = prompt;
+        task.prefilled = true;
+    }
+    match task.session.step_once() {
+        Ok(info) => {
+            metrics.record_decode_step(
+                Duration::from_nanos(info.step_ns),
+                info.budget_fraction,
+                info.dense,
+            );
+            task.tokens.push(info.token);
+            let done = task.tokens.len() >= task.max_new || info.token == vocab::END;
+            if done {
+                let resp = generate_response(seq, &mut task);
+                finish(task, Ok(resp));
+            } else {
+                tasks.lock().unwrap().insert(seq, task);
+                if tx.send(Msg::DecodeReady(seq)).is_err() {
+                    // dispatcher gone: complete what we have so the
+                    // caller is not left hanging
+                    if let Some(mut task) = tasks.lock().unwrap().remove(&seq) {
+                        let resp = generate_response(seq, &mut task);
+                        finish(task, Ok(resp));
+                    }
+                }
+            }
+        }
+        Err(e) => finish(task, Err(anyhow!("decode step failed: {e}"))),
+    }
+}
+
+/// Assemble the final [`GenerateResponse`] from a task's accumulated
+/// state (single construction point for the done and dispatcher-gone
+/// paths). `exec_us` is the *summed step execution time* from the
+/// session's own clocks; scheduling gaps between steps show up in
+/// end-to-end wall time, not here.
+fn generate_response(seq: u64, task: &mut DecodeTask) -> GenerateResponse {
+    let queue_us = task
+        .first_step_at
+        .map(|t| (t - task.enqueued).as_micros() as u64)
+        .unwrap_or(0);
+    let steps = task.tokens.len();
+    GenerateResponse {
+        id: seq,
+        tokens: std::mem::take(&mut task.tokens),
+        n_prompt: task.prompt.len(),
+        steps,
+        mean_budget_fraction: task.session.mean_budget_fraction(),
+        dense_steps: task.session.dense_steps(),
+        queue_us,
+        exec_us: task.session.decode_ns() / 1_000,
+        ns_per_token: task.session.decode_ns() as f64 / steps.max(1) as f64,
+    }
 }
 
 fn execute_one(
@@ -269,8 +620,9 @@ fn execute_one(
     req: &PrefillRequest,
 ) -> Result<PrefillResponse> {
     let queue_us = req.enqueued.elapsed().as_micros() as u64;
-    // KV pages for the prefilled sequence (released right after readback —
-    // this system serves prefill; decode would hold them).
+    // KV pages for the prefilled sequence. Pure-prefill requests read the
+    // logits back and release immediately; generations hold their pages
+    // through a `DecodeSession` for the whole token stream instead.
     {
         let mut kv = kv.lock().unwrap();
         kv.allocate(req.id, bucket)?;

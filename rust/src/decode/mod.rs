@@ -1,0 +1,32 @@
+//! Decode subsystem: Stem-aware autoregressive token generation over the
+//! paged KV cache.
+//!
+//! The prefill side of this repo reproduces the paper's selection and
+//! execution kernels; this module extends the same information-flow view
+//! past prefill into generation, where Lil (PAPERS.md) shows naive
+//! uniform top-k sparsity is most harmful:
+//!
+//! * [`policy`] — [`DecodePolicy`]: Stem's TPD budget schedule applied
+//!   over generation steps, with a dense fallback for short contexts and
+//!   configurable sink/recent always-keep sets.
+//! * [`sparse_decode`] — one attention step (`decode_attend`): plan →
+//!   decode-OAM block ranking → bounded-heap selection → single-query
+//!   online-softmax attention, all on the `sparse::attention` kernels.
+//! * [`session`] — [`DecodeSession`]: prompt ingest + token loop against
+//!   the shared [`crate::coordinator::kv_cache::KvCache`] page pool
+//!   (append, copy-on-write, growth across page boundaries), streaming
+//!   every token through a callback. [`TinyLm`] is the deterministic
+//!   reference LM standing in for per-step decode HLO modules.
+//!
+//! The coordinator drives sessions through `Coordinator::submit_generate`
+//! with decode steps continuously batched between prefill batches; the
+//! `stem generate` subcommand and `examples/generate_stream.rs` drive a
+//! session directly (no artifacts needed).
+
+pub mod policy;
+pub mod session;
+pub mod sparse_decode;
+
+pub use policy::{DecodePolicy, StepPlan};
+pub use session::{DecodeSession, PagedKv, SeqKvView, SessionStats, StepInfo, TinyLm};
+pub use sparse_decode::{decode_attend, decode_attend_dense_reference, DecodeAttnOut};

@@ -1,0 +1,179 @@
+//! Per-step sparsity policy for the decode phase.
+//!
+//! Stem's Token Position-Decay budget (Eq. 3) reinterpreted over
+//! *generation steps*: the block budget starts at `k_start` and decays
+//! toward `mu·k_start` across the configured horizon, mirroring the
+//! paper's observation that later positions need fewer routed blocks.
+//! Two guards come from Lil ("Less is Less…", PAPERS.md), whose central
+//! finding is that naive uniform top-k sparsity *hurts* in the long
+//! decode stage: short contexts fall back to dense attention
+//! (`dense_below`), and the attention sinks plus the most recent blocks
+//! are always kept regardless of score (`sink_blocks` / `recent_blocks`).
+
+use crate::sparse::schedule;
+
+/// Decode-phase sparsity policy (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DecodePolicy {
+    /// Contexts shorter than this many tokens decode dense — sparse
+    /// selection over a handful of blocks costs more than it saves and
+    /// measurably hurts quality (Lil).
+    pub dense_below: usize,
+    /// Block budget at step 0.
+    pub k_start: f64,
+    /// Decay floor: the budget approaches `mu·k_start` at the horizon.
+    pub mu: f64,
+    /// Steps the decay is spread over (≈ the expected generation length).
+    pub horizon: usize,
+    /// Always-keep leading blocks (attention sinks).
+    pub sink_blocks: usize,
+    /// Always-keep trailing blocks (local window).
+    pub recent_blocks: usize,
+    /// Hard floor on the sparse budget, in blocks.
+    pub min_blocks: usize,
+    /// Output-Aware Metric value-magnitude weight (Eq. 7).
+    pub beta: f32,
+    /// Within-block sampling stride of the decode routing metric.
+    pub stride: usize,
+}
+
+impl Default for DecodePolicy {
+    fn default() -> Self {
+        DecodePolicy {
+            dense_below: 1024,
+            k_start: 8.0,
+            mu: 0.7,
+            horizon: 256,
+            sink_blocks: 1,
+            recent_blocks: 2,
+            min_blocks: 4,
+            beta: 0.2,
+            stride: 8,
+        }
+    }
+}
+
+/// What one decode step should do, as decided by [`DecodePolicy::plan`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepPlan {
+    /// Attend the full cached context.
+    Dense,
+    /// Rank blocks with the decode OAM and keep `budget_blocks`.
+    Sparse { budget_blocks: usize },
+}
+
+impl DecodePolicy {
+    /// A policy that always decodes dense (the Lil baseline / fallback).
+    pub fn dense() -> Self {
+        DecodePolicy { dense_below: usize::MAX, ..Default::default() }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.mu > 0.0 && self.mu <= 1.0) {
+            return Err(format!("mu must be in (0,1], got {}", self.mu));
+        }
+        if self.k_start <= 0.0 {
+            return Err(format!("k_start must be > 0, got {}", self.k_start));
+        }
+        if self.recent_blocks < 1 {
+            return Err("recent_blocks must be >= 1 (the query's own block)".into());
+        }
+        if self.stride < 1 {
+            return Err("stride must be >= 1".into());
+        }
+        Ok(())
+    }
+
+    /// Sparse block budget at `step` (before context clamping).
+    fn budget_at(&self, step: usize) -> usize {
+        let horizon = self.horizon.max(1);
+        let raw = schedule::k_at(step.min(horizon - 1), horizon, self.k_start, self.mu);
+        let forced = self.sink_blocks + self.recent_blocks;
+        raw.max(self.min_blocks as f64).max(forced as f64) as usize
+    }
+
+    /// Decide what step `step` does against a cached context of
+    /// `n_ctx` tokens in blocks of `block` tokens.
+    pub fn plan(&self, n_ctx: usize, step: usize, block: usize) -> StepPlan {
+        if n_ctx < self.dense_below {
+            return StepPlan::Dense;
+        }
+        let nblk = n_ctx.div_ceil(block.max(1));
+        let budget = self.budget_at(step);
+        if budget >= nblk {
+            StepPlan::Dense // budget covers everything: skip ranking
+        } else {
+            StepPlan::Sparse { budget_blocks: budget }
+        }
+    }
+
+    /// Fraction of the cached context a plan attends (the decode analogue
+    /// of the prefill budget fraction).
+    pub fn plan_fraction(plan: StepPlan, n_ctx: usize, block: usize) -> f64 {
+        match plan {
+            StepPlan::Dense => 1.0,
+            StepPlan::Sparse { budget_blocks } => {
+                let nblk = n_ctx.div_ceil(block.max(1)).max(1);
+                (budget_blocks as f64 / nblk as f64).min(1.0)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn short_contexts_decode_dense() {
+        let p = DecodePolicy::default();
+        assert_eq!(p.plan(512, 0, 64), StepPlan::Dense);
+        assert!(matches!(p.plan(4096, 0, 64), StepPlan::Sparse { .. }));
+        assert_eq!(DecodePolicy::dense().plan(1 << 20, 10, 64), StepPlan::Dense);
+    }
+
+    #[test]
+    fn budget_decays_over_steps_but_never_below_forced() {
+        let p = DecodePolicy {
+            dense_below: 0,
+            k_start: 24.0,
+            mu: 0.5,
+            horizon: 100,
+            min_blocks: 2,
+            sink_blocks: 2,
+            recent_blocks: 2,
+            ..Default::default()
+        };
+        let budget = |step| match p.plan(1 << 16, step, 64) {
+            StepPlan::Sparse { budget_blocks } => budget_blocks,
+            StepPlan::Dense => unreachable!("65536 tokens never fit 24 blocks"),
+        };
+        let (b0, b50, b99) = (budget(0), budget(50), budget(99));
+        assert!(b0 >= b50 && b50 >= b99, "{b0} {b50} {b99}");
+        assert!(b99 >= 4, "decay must respect forced sink+recent floor");
+        // past the horizon the budget holds at the floor value
+        assert_eq!(budget(500), b99);
+    }
+
+    #[test]
+    fn tiny_context_with_big_budget_is_dense() {
+        let p = DecodePolicy { dense_below: 0, k_start: 64.0, ..Default::default() };
+        assert_eq!(p.plan(1024, 0, 64), StepPlan::Dense); // 16 blocks < 64 budget
+    }
+
+    #[test]
+    fn plan_fraction_bounds() {
+        let f = DecodePolicy::plan_fraction(StepPlan::Sparse { budget_blocks: 8 }, 4096, 64);
+        assert!((f - 8.0 / 64.0).abs() < 1e-12);
+        assert_eq!(DecodePolicy::plan_fraction(StepPlan::Dense, 4096, 64), 1.0);
+    }
+
+    #[test]
+    fn validate_catches_bad_configs() {
+        assert!(DecodePolicy::default().validate().is_ok());
+        assert!(DecodePolicy { mu: 0.0, ..Default::default() }.validate().is_err());
+        assert!(DecodePolicy { k_start: -1.0, ..Default::default() }.validate().is_err());
+        assert!(DecodePolicy { recent_blocks: 0, ..Default::default() }.validate().is_err());
+        assert!(DecodePolicy { stride: 0, ..Default::default() }.validate().is_err());
+    }
+}

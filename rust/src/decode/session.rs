@@ -1,0 +1,551 @@
+//! Autoregressive decode sessions over the paged KV cache.
+//!
+//! Three pieces:
+//!
+//! * [`PagedKv`] — the slab store behind the page ids the coordinator's
+//!   [`KvCache`] hands out: one `[Hk, page_tokens, dh]` K and V slab per
+//!   page, allocated lazily on first write and copied on a
+//!   copy-on-write remap. The store is owned by its session (no locks on
+//!   the attention hot path); the *pool* — which bounds aggregate KV
+//!   memory, refcounts forked prefixes and evicts under pressure — is the
+//!   shared `KvCache`.
+//! * [`TinyLm`] — a deterministic seeded reference LM (embedding +
+//!   sinusoidal positions + tied-unembedding, single attention layer)
+//!   sharing the manifest geometry. The PJRT engine only lowers prefill
+//!   graphs, so the decode phase runs the pure-rust core end-to-end with
+//!   this stand-in; swapping in per-step decode HLO modules is a ROADMAP
+//!   item and only replaces the projection calls here.
+//! * [`DecodeSession`] — ingests a prompt, then generates tokens one
+//!   step at a time: project q/k/v for the last token, append K/V into
+//!   pages ([`KvCache::append_tokens`] + slab writes), run the
+//!   policy-directed sparse/dense attention step, unembed, take the
+//!   argmax, and stream every token through a caller-supplied callback.
+//!
+//! A `SeqKvView` adapts (store, page table, token count) to the
+//! storage-agnostic `sparse::KvBlocks` trait the kernels consume — one
+//! attention block per page, the tail block partial.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::kv_cache::{KvCache, KvError};
+use crate::model::vocab;
+use crate::sparse::{KvBlocks, Tensor};
+use crate::util::rng::Rng;
+
+use super::policy::DecodePolicy;
+use super::sparse_decode::decode_attend;
+
+/// Per-page K/V slab store addressed by `KvCache` page ids (see module
+/// docs for the ownership split between store and pool).
+pub struct PagedKv {
+    page_tokens: usize,
+    hk: usize,
+    dh: usize,
+    k_pages: HashMap<u32, Box<[f32]>>,
+    v_pages: HashMap<u32, Box<[f32]>>,
+}
+
+impl PagedKv {
+    pub fn new(page_tokens: usize, hk: usize, dh: usize) -> Self {
+        PagedKv { page_tokens, hk, dh, k_pages: HashMap::new(), v_pages: HashMap::new() }
+    }
+
+    fn slab_len(&self) -> usize {
+        self.hk * self.page_tokens * self.dh
+    }
+
+    pub fn pages_resident(&self) -> usize {
+        self.k_pages.len()
+    }
+
+    /// Write one token's K/V rows (`[Hk·dh]` each) into `slot` of `page`.
+    pub fn write_token(&mut self, page: u32, slot: usize, k_rows: &[f32], v_rows: &[f32]) {
+        debug_assert!(slot < self.page_tokens);
+        debug_assert_eq!(k_rows.len(), self.hk * self.dh);
+        let len = self.slab_len();
+        let (pt, dh) = (self.page_tokens, self.dh);
+        for (pages, rows) in [(&mut self.k_pages, k_rows), (&mut self.v_pages, v_rows)] {
+            let slab = pages.entry(page).or_insert_with(|| vec![0.0f32; len].into_boxed_slice());
+            for hkv in 0..self.hk {
+                let off = (hkv * pt + slot) * dh;
+                slab[off..off + dh].copy_from_slice(&rows[hkv * dh..(hkv + 1) * dh]);
+            }
+        }
+    }
+
+    /// Copy-on-write support: duplicate `src`'s payload under `dst`
+    /// (called right after [`KvCache::append_tokens`] reports a remap).
+    pub fn copy_page(&mut self, src: u32, dst: u32) {
+        if let Some(s) = self.k_pages.get(&src).cloned() {
+            self.k_pages.insert(dst, s);
+        }
+        if let Some(s) = self.v_pages.get(&src).cloned() {
+            self.v_pages.insert(dst, s);
+        }
+    }
+}
+
+/// `sparse::KvBlocks` over (store, page table, token count): logical
+/// block `b` lives in page `table[b]`.
+pub struct SeqKvView<'a> {
+    pub store: &'a PagedKv,
+    pub table: &'a [u32],
+    pub n_tokens: usize,
+}
+
+impl SeqKvView<'_> {
+    fn slab<'s>(
+        &self,
+        pages: &'s HashMap<u32, Box<[f32]>>,
+        hkv: usize,
+        b: usize,
+    ) -> &'s [f32] {
+        let slab = &pages[&self.table[b]];
+        let off = hkv * self.store.page_tokens * self.store.dh;
+        &slab[off..off + self.block_len(b) * self.store.dh]
+    }
+}
+
+impl KvBlocks for SeqKvView<'_> {
+    fn n_tokens(&self) -> usize {
+        self.n_tokens
+    }
+
+    fn block_tokens(&self) -> usize {
+        self.store.page_tokens
+    }
+
+    fn n_kv_heads(&self) -> usize {
+        self.store.hk
+    }
+
+    fn head_dim(&self) -> usize {
+        self.store.dh
+    }
+
+    fn k_block(&self, hkv: usize, b: usize) -> &[f32] {
+        self.slab(&self.store.k_pages, hkv, b)
+    }
+
+    fn v_block(&self, hkv: usize, b: usize) -> &[f32] {
+        self.slab(&self.store.v_pages, hkv, b)
+    }
+}
+
+/// Deterministic seeded reference LM with the serving geometry (see
+/// module docs): tied embedding `[vocab, d_model]`, per-head q/k/v
+/// projections stored `[out, d_model]` row-major so every matvec is a
+/// contiguous `dot`, sinusoidal positions, single attention layer.
+pub struct TinyLm {
+    pub h: usize,
+    pub hk: usize,
+    pub dh: usize,
+    pub vocab: usize,
+    d_model: usize,
+    embed: Tensor,
+    wq: Tensor,
+    wk: Tensor,
+    wv: Tensor,
+    wo: Tensor,
+}
+
+impl TinyLm {
+    pub fn new(seed: u64, h: usize, hk: usize, dh: usize, vocab: usize) -> Self {
+        assert!(h % hk.max(1) == 0, "query heads must be a multiple of kv heads");
+        let d_model = h * dh;
+        let mut r = Rng::new(seed);
+        let scaled = |shape: &[usize], r: &mut Rng| {
+            let mut t = Tensor::randn(shape, r);
+            let s = 1.0 / (d_model as f32).sqrt();
+            for x in t.data.iter_mut() {
+                *x *= s;
+            }
+            t
+        };
+        let embed = Tensor::randn(&[vocab, d_model], &mut r);
+        TinyLm {
+            h,
+            hk,
+            dh,
+            vocab,
+            d_model,
+            embed,
+            wq: scaled(&[h * dh, d_model], &mut r),
+            wk: scaled(&[hk * dh, d_model], &mut r),
+            wv: scaled(&[hk * dh, d_model], &mut r),
+            wo: scaled(&[d_model, d_model], &mut r),
+        }
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.d_model
+    }
+
+    fn embedded(&self, token: i32, pos: usize) -> Vec<f32> {
+        let t = (token.max(0) as usize) % self.vocab;
+        let mut e = self.embed.data[t * self.d_model..(t + 1) * self.d_model].to_vec();
+        // sinusoidal positions so routing can distinguish block offsets
+        for (d, x) in e.iter_mut().enumerate() {
+            let omega = 1.0f64 / 10000f64.powf((2 * (d / 2)) as f64 / self.d_model as f64);
+            let phase = pos as f64 * omega;
+            *x += (if d % 2 == 0 { phase.sin() } else { phase.cos() }) as f32;
+        }
+        e
+    }
+
+    fn matvec(w: &Tensor, x: &[f32]) -> Vec<f32> {
+        let (out, dm) = (w.shape[0], w.shape[1]);
+        (0..out).map(|o| crate::sparse::tensor::dot(&w.data[o * dm..(o + 1) * dm], x)).collect()
+    }
+
+    /// Project one token at `pos`: `(Some(q) if with_q, k, v)`, each
+    /// `[heads·dh]` row-major. Prompt ingestion skips the q projection.
+    pub fn project(
+        &self,
+        token: i32,
+        pos: usize,
+        with_q: bool,
+    ) -> (Option<Vec<f32>>, Vec<f32>, Vec<f32>) {
+        let e = self.embedded(token, pos);
+        let q = with_q.then(|| Self::matvec(&self.wq, &e));
+        (q, Self::matvec(&self.wk, &e), Self::matvec(&self.wv, &e))
+    }
+
+    /// Unembed an attention output (`[h·dh]`) into vocab logits.
+    pub fn logits(&self, attn_out: &[f32]) -> Vec<f32> {
+        let y = Self::matvec(&self.wo, attn_out);
+        Self::matvec(&self.embed, &y)
+    }
+
+    /// Deterministic greedy pick (ties break toward the lowest id).
+    pub fn argmax(logits: &[f32]) -> i32 {
+        let mut best = 0usize;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = i;
+            }
+        }
+        best as i32
+    }
+}
+
+/// One streamed decode step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepInfo {
+    /// 0-based generation step.
+    pub step: usize,
+    /// The token this step emitted.
+    pub token: i32,
+    /// Cached tokens *including* this step's own K/V.
+    pub n_ctx: usize,
+    /// Fraction of the cached context attended.
+    pub budget_fraction: f64,
+    /// Whether the step ran the dense path.
+    pub dense: bool,
+    /// Wall-clock of the step (projection + append + attention + unembed).
+    pub step_ns: u64,
+}
+
+/// Aggregate result of [`DecodeSession::generate`].
+#[derive(Debug, Clone, Default)]
+pub struct SessionStats {
+    pub tokens: Vec<i32>,
+    pub steps: usize,
+    pub dense_steps: usize,
+    pub mean_budget_fraction: f64,
+    pub decode_ns: u64,
+}
+
+/// An autoregressive generation against the shared paged KV pool (see
+/// module docs). The sequence stays pinned in the pool for the session's
+/// lifetime; `Drop` releases and frees its pages.
+pub struct DecodeSession {
+    seq: u64,
+    kv: Arc<Mutex<KvCache>>,
+    store: PagedKv,
+    model: Arc<TinyLm>,
+    policy: DecodePolicy,
+    page_tokens: usize,
+    table: Vec<u32>,
+    n_ctx: usize,
+    step: usize,
+    last_token: i32,
+    budget_sum: f64,
+    dense_steps: usize,
+    decode_ns: u64,
+    closed: bool,
+}
+
+impl DecodeSession {
+    /// Register `seq` in the pool (empty page table, pinned) and set up
+    /// the per-session store.
+    pub fn new(
+        kv: Arc<Mutex<KvCache>>,
+        model: Arc<TinyLm>,
+        policy: DecodePolicy,
+        seq: u64,
+    ) -> Result<Self, KvError> {
+        let page_tokens = {
+            let mut g = kv.lock().unwrap();
+            g.allocate(seq, 0)?;
+            g.page_tokens()
+        };
+        let store = PagedKv::new(page_tokens, model.hk, model.dh);
+        Ok(DecodeSession {
+            seq,
+            kv,
+            store,
+            model,
+            policy,
+            page_tokens,
+            table: vec![],
+            n_ctx: 0,
+            step: 0,
+            last_token: vocab::BOS,
+            budget_sum: 0.0,
+            dense_steps: 0,
+            decode_ns: 0,
+            closed: false,
+        })
+    }
+
+    pub fn seq_id(&self) -> u64 {
+        self.seq
+    }
+
+    pub fn n_ctx(&self) -> usize {
+        self.n_ctx
+    }
+
+    pub fn steps(&self) -> usize {
+        self.step
+    }
+
+    fn append_kv(&mut self, k_rows: &[f32], v_rows: &[f32]) -> Result<(), KvError> {
+        let pos = self.n_ctx;
+        {
+            let mut g = self.kv.lock().unwrap();
+            let app = g.append_tokens(self.seq, 1)?;
+            if let Some((old, new)) = app.cow {
+                self.store.copy_page(old, new);
+            }
+            self.table.clear();
+            self.table.extend_from_slice(g.page_table(self.seq).expect("live seq"));
+        }
+        let page = self.table[pos / self.page_tokens];
+        self.store.write_token(page, pos % self.page_tokens, k_rows, v_rows);
+        self.n_ctx = pos + 1;
+        Ok(())
+    }
+
+    /// Ingest the prompt: append K/V for every prompt token (no
+    /// attention output is needed until the first generated token).
+    pub fn prefill(&mut self, prompt: &[i32]) -> Result<(), KvError> {
+        for &t in prompt {
+            let (_, k, v) = self.model.project(t, self.n_ctx, false);
+            self.append_kv(&k, &v)?;
+        }
+        if let Some(&last) = prompt.last() {
+            self.last_token = last;
+        }
+        Ok(())
+    }
+
+    /// One decode step: project the last token, append its K/V into the
+    /// paged cache, attend under the policy, unembed and pick the next
+    /// token greedily.
+    pub fn step_once(&mut self) -> Result<StepInfo, KvError> {
+        let t0 = Instant::now();
+        let pos = self.n_ctx;
+        let (q, k, v) = self.model.project(self.last_token, pos, true);
+        self.append_kv(&k, &v)?;
+        let q = Tensor::from_vec(&[self.model.h, self.model.dh], q.expect("with_q"));
+        let view = SeqKvView { store: &self.store, table: &self.table, n_tokens: self.n_ctx };
+        let att = decode_attend(&q, &view, &self.policy, self.step);
+        let logits = self.model.logits(&att.out);
+        let token = TinyLm::argmax(&logits);
+        let step_ns = t0.elapsed().as_nanos() as u64;
+        let info = StepInfo {
+            step: self.step,
+            token,
+            n_ctx: self.n_ctx,
+            budget_fraction: att.budget_fraction,
+            dense: att.dense,
+            step_ns,
+        };
+        self.last_token = token;
+        self.step += 1;
+        self.budget_sum += att.budget_fraction;
+        self.dense_steps += att.dense as usize;
+        self.decode_ns += step_ns;
+        Ok(info)
+    }
+
+    /// Generate up to `max_new` tokens, streaming each through
+    /// `on_token`; the callback returning `false` — or `stop_token`
+    /// being emitted — ends the generation early.
+    pub fn generate(
+        &mut self,
+        max_new: usize,
+        stop_token: Option<i32>,
+        mut on_token: impl FnMut(&StepInfo) -> bool,
+    ) -> Result<SessionStats, KvError> {
+        let mut tokens = Vec::with_capacity(max_new);
+        for _ in 0..max_new {
+            let info = self.step_once()?;
+            tokens.push(info.token);
+            let keep_going = on_token(&info);
+            if !keep_going || stop_token == Some(info.token) {
+                break;
+            }
+        }
+        Ok(SessionStats {
+            steps: tokens.len(),
+            tokens,
+            dense_steps: self.dense_steps,
+            mean_budget_fraction: self.mean_budget_fraction(),
+            decode_ns: self.decode_ns,
+        })
+    }
+
+    pub fn mean_budget_fraction(&self) -> f64 {
+        if self.step == 0 {
+            1.0
+        } else {
+            self.budget_sum / self.step as f64
+        }
+    }
+
+    pub fn dense_steps(&self) -> usize {
+        self.dense_steps
+    }
+
+    pub fn decode_ns(&self) -> u64 {
+        self.decode_ns
+    }
+
+    /// Release the sequence and free its pages; idempotent (also runs on
+    /// `Drop`).
+    pub fn close(&mut self) {
+        if self.closed {
+            return;
+        }
+        self.closed = true;
+        let mut g = self.kv.lock().unwrap();
+        let _ = g.release(self.seq);
+        let _ = g.drop_seq(self.seq);
+    }
+}
+
+impl Drop for DecodeSession {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::kv_cache::KvConfig;
+
+    fn pool(pages: usize, page_tokens: usize) -> Arc<Mutex<KvCache>> {
+        Arc::new(Mutex::new(KvCache::new(KvConfig { total_pages: pages, page_tokens })))
+    }
+
+    fn model() -> Arc<TinyLm> {
+        Arc::new(TinyLm::new(7, 4, 2, 8, vocab::VOCAB_SIZE))
+    }
+
+    fn prompt(n: usize) -> Vec<i32> {
+        let mut p = vec![vocab::BOS];
+        p.extend((0..n.saturating_sub(1)).map(|i| vocab::WORD0 + (i % 40) as i32));
+        p
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_in_vocab() {
+        let run = || {
+            let kv = pool(64, 16);
+            let mut s =
+                DecodeSession::new(kv, model(), DecodePolicy::default(), 1).unwrap();
+            s.prefill(&prompt(40)).unwrap();
+            s.generate(12, None, |_| true).unwrap().tokens
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a, b, "same seed + prompt must reproduce the stream");
+        assert_eq!(a.len(), 12);
+        assert!(a.iter().all(|&t| (0..vocab::VOCAB_SIZE as i32).contains(&t)));
+    }
+
+    #[test]
+    fn pages_grow_with_context_and_free_on_close() {
+        let kv = pool(64, 16);
+        let mut s =
+            DecodeSession::new(Arc::clone(&kv), model(), DecodePolicy::default(), 9).unwrap();
+        s.prefill(&prompt(33)).unwrap(); // 33 tokens -> 3 pages of 16
+        assert_eq!(kv.lock().unwrap().page_table(9).unwrap().len(), 3);
+        s.generate(16, None, |_| true).unwrap(); // 49 tokens -> 4 pages
+        assert_eq!(kv.lock().unwrap().page_table(9).unwrap().len(), 4);
+        assert_eq!(kv.lock().unwrap().seq_tokens(9), Some(49));
+        kv.lock().unwrap().check_invariants().unwrap();
+        drop(s);
+        assert_eq!(kv.lock().unwrap().used_pages(), 0, "drop must free the pages");
+    }
+
+    #[test]
+    fn policy_dense_fallback_and_sparse_steps_report_budget() {
+        let kv = pool(256, 16);
+        // dense_below larger than the context: every step dense
+        let mut s = DecodeSession::new(
+            Arc::clone(&kv),
+            model(),
+            DecodePolicy { dense_below: 1 << 20, ..Default::default() },
+            1,
+        )
+        .unwrap();
+        s.prefill(&prompt(64)).unwrap();
+        let st = s.generate(4, None, |i| {
+            assert!(i.dense);
+            true
+        });
+        assert_eq!(st.unwrap().dense_steps, 4);
+        drop(s);
+        // sparse policy over a longer context reports fractional budgets
+        let mut s = DecodeSession::new(
+            kv,
+            model(),
+            DecodePolicy { dense_below: 0, k_start: 4.0, min_blocks: 2, ..Default::default() },
+            2,
+        )
+        .unwrap();
+        s.prefill(&prompt(160)).unwrap(); // 10 blocks of 16
+        let st = s.generate(4, None, |i| {
+            assert!(!i.dense);
+            assert!(i.budget_fraction < 1.0);
+            true
+        });
+        let st = st.unwrap();
+        assert_eq!(st.dense_steps, 0);
+        assert!(st.mean_budget_fraction < 0.6, "{}", st.mean_budget_fraction);
+    }
+
+    #[test]
+    fn callback_can_stop_early() {
+        let kv = pool(64, 16);
+        let mut s = DecodeSession::new(kv, model(), DecodePolicy::default(), 1).unwrap();
+        s.prefill(&prompt(8)).unwrap();
+        let st = s.generate(100, None, |i| i.step < 2).unwrap();
+        assert_eq!(st.steps, 3, "stop after the callback's third step");
+    }
+
+    #[test]
+    fn empty_prompt_decodes_from_bos() {
+        let kv = pool(16, 16);
+        let mut s = DecodeSession::new(kv, model(), DecodePolicy::default(), 1).unwrap();
+        s.prefill(&[]).unwrap();
+        let st = s.generate(3, None, |_| true).unwrap();
+        assert_eq!(st.steps, 3);
+    }
+}

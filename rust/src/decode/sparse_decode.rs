@@ -1,0 +1,106 @@
+//! One decode attention step: plan → rank → select → attend.
+//!
+//! Thin orchestration over the single-query kernels in
+//! `sparse::attention` (`decode_block_scores` / `select_decode` /
+//! `sparse_decode_attention`): the [`DecodePolicy`] picks dense or
+//! sparse for this step, sparse steps rank the cached blocks with the
+//! decode Output-Aware Metric and keep the top budget (sinks + recent
+//! window forced), and both paths run the same online-softmax kernel —
+//! dense is just the full selection. Head-level work fans over
+//! `util::threadpool::global()` inside the kernels.
+
+use crate::sparse::{
+    decode_block_scores, dense_decode_attention_reference, select_decode,
+    sparse_decode_attention, KvBlocks, Selection, Tensor,
+};
+
+use super::policy::{DecodePolicy, StepPlan};
+
+/// Output of one decode attention step.
+#[derive(Debug, Clone)]
+pub struct DecodeAttnOut {
+    /// `[H·dh]` attention output for the single query row.
+    pub out: Vec<f32>,
+    /// Fraction of the cached context attended this step.
+    pub budget_fraction: f64,
+    /// Whether this step ran the dense path.
+    pub dense: bool,
+    /// Blocks attended per head (== context blocks when dense).
+    pub selected_blocks: usize,
+}
+
+/// Run one policy-directed decode attention step. `q` is `[H, dh]` (all
+/// query heads of the new token); `kv` must hold at least one cached
+/// token (the step's own K/V is appended before attending).
+pub fn decode_attend(
+    q: &Tensor,
+    kv: &impl KvBlocks,
+    policy: &DecodePolicy,
+    step: usize,
+) -> DecodeAttnOut {
+    let n_ctx = kv.n_tokens();
+    debug_assert!(n_ctx > 0, "decode_attend needs a non-empty context");
+    let block = kv.block_tokens();
+    let nblk = kv.n_blocks();
+    let plan = policy.plan(n_ctx, step, block);
+    let (sel, dense) = match plan {
+        StepPlan::Dense => (Selection::decode_full(q.shape[0], nblk), true),
+        StepPlan::Sparse { budget_blocks } => {
+            let scores = decode_block_scores(q, kv, policy.stride, policy.beta);
+            (
+                select_decode(&scores, budget_blocks, policy.sink_blocks, policy.recent_blocks),
+                false,
+            )
+        }
+    };
+    debug_assert!(sel.validate_decode(nblk).is_ok());
+    let out = sparse_decode_attention(q, kv, &sel);
+    DecodeAttnOut {
+        out,
+        budget_fraction: DecodePolicy::plan_fraction(plan, n_ctx, block),
+        dense,
+        selected_blocks: sel.count(0, 0),
+    }
+}
+
+/// Scalar full-context oracle (re-export for tests and benches).
+pub fn decode_attend_dense_reference(q: &Tensor, kv: &impl KvBlocks) -> Vec<f32> {
+    dense_decode_attention_reference(q, kv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dense_plan_matches_reference_sparse_plan_approximates() {
+        let mut r = Rng::new(21);
+        let (h, hk, dh, block, n) = (4usize, 2usize, 16usize, 32usize, 480usize);
+        let q = Tensor::randn(&[h, dh], &mut r);
+        let k = Tensor::randn(&[hk, 512, dh], &mut r);
+        let v = Tensor::randn(&[hk, 512, dh], &mut r);
+        let kv = crate::sparse::TensorKv { k: &k, v: &v, n_tokens: n, block };
+        let reference = decode_attend_dense_reference(&q, &kv);
+
+        let dense = decode_attend(&q, &kv, &DecodePolicy::dense(), 0);
+        assert!(dense.dense);
+        assert_eq!(dense.budget_fraction, 1.0);
+        let d = dense
+            .out
+            .iter()
+            .zip(&reference)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(d < 1e-5, "dense plan deviates from reference by {d}");
+
+        let sparse_policy =
+            DecodePolicy { dense_below: 0, k_start: 6.0, ..Default::default() };
+        let sparse = decode_attend(&q, &kv, &sparse_policy, 0);
+        assert!(!sparse.dense);
+        assert!(sparse.budget_fraction < 0.5, "{}", sparse.budget_fraction);
+        // k_at floors the schedule: budget lands in [min_blocks, k_start]
+        assert!((4..=6).contains(&sparse.selected_blocks), "{}", sparse.selected_blocks);
+        assert!(sparse.out.iter().all(|x| x.is_finite()));
+    }
+}

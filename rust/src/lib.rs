@@ -18,13 +18,18 @@
 //!
 //! Entry points:
 //! * [`runtime::Engine`] — load artifacts, execute prefill graphs.
-//! * [`coordinator::Coordinator`] — the serving runtime.
+//! * [`coordinator::Coordinator`] — the serving runtime (prefill
+//!   requests and decode generations over the paged KV pool).
+//! * [`decode`] — autoregressive decode subsystem: per-step sparsity
+//!   policy, single-query sparse attention steps, paged KV sessions.
 //! * [`sparse`] — pure-rust Stem (TPD schedule + OAM selection + block
-//!   sparse attention) used by tests, the simulator and the scheduler.
+//!   sparse attention + single-query decode kernels) used by tests, the
+//!   simulator and the scheduler.
 //! * [`eval`] — accuracy harness + paper table/figure drivers.
 //! * [`sim`] — Eq. (2)/(4)/(8) cost model and H20 latency projection.
 
 pub mod coordinator;
+pub mod decode;
 pub mod eval;
 pub mod model;
 pub mod runtime;

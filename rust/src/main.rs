@@ -2,6 +2,7 @@
 //!
 //! Subcommands (each regenerates one paper artifact; DESIGN.md §6):
 //!   serve      boot the coordinator and serve an open-loop trace
+//!   generate   stream tokens from a decode session (no artifacts needed)
 //!   table1     SAM vs OAM sparse loss at depths (Table 1)
 //!   table2     LongBench proxy accuracy × method (Table 2)
 //!   table3     Stem on the training-based sparse checkpoint (Table 3)
@@ -38,6 +39,9 @@ stem — Stem sparse-attention serving system (paper reproduction)
 USAGE: stem <subcommand> [flags]
 
   serve     [--requests N] [--rps R] [--method stem|dense|...] [--mix]
+  generate  [--prompt 1,16,17 | --prompt-len N] [--max-new N] [--dense]
+            [--k-start K] [--mu MU] [--sink S] [--recent R]
+            [--dense-below TOKENS] [--block B] [--pages P] [--seed S]
   table1    [--limit N]
   table2    [--limit N] [--buckets 512,1024,2048]
   table3    [--limit N] [--buckets ...] [--native-k K]
@@ -97,6 +101,7 @@ fn buckets_from(args: &Args, default: &[usize]) -> Vec<usize> {
 fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("serve") => serve(args),
+        Some("generate") => generate(args),
         Some("table1") => {
             let (coord, _) = boot(args)?;
             println!("{}", tables::table1(&coord, args.usize_or("limit", 8))?);
@@ -230,6 +235,100 @@ fn pre_warm(coord: &Arc<Coordinator>, method: &str) -> Result<()> {
     let kinds: Vec<&str> =
         if method == "dense" { vec!["prefill_dense"] } else { vec!["prefill_dense", sparse_kind] };
     coord.engine().warmup(&kinds, &[512, 1024, 2048])
+}
+
+/// `stem generate`: stream tokens from a decode session against the
+/// paged KV pool — the pure-rust decode stack end to end (policy →
+/// selection → single-query kernel → paged append), no artifacts needed.
+fn generate(args: &Args) -> Result<()> {
+    use std::sync::{Arc, Mutex};
+    use stem::coordinator::kv_cache::{KvCache, KvConfig};
+    use stem::decode::{DecodePolicy, DecodeSession, TinyLm};
+    use stem::model::vocab;
+
+    let block = args.usize_or("block", 64);
+    let pages = args.usize_or("pages", 4096);
+    let max_new = args.usize_or("max-new", 64);
+    let seed = args.u64_or("seed", 42);
+    let (h, hk, dh) = (
+        args.usize_or("heads", 8),
+        args.usize_or("kv-heads", 4),
+        args.usize_or("dh", 32),
+    );
+
+    let prompt: Vec<i32> = match args.get("prompt") {
+        Some(spec) => spec.split(',').filter_map(|t| t.trim().parse().ok()).collect(),
+        None => {
+            // synthetic prompt: BOS + seeded word salad
+            let n = args.usize_or("prompt-len", 512);
+            let mut r = Rng::new(seed);
+            let mut p = vec![vocab::BOS];
+            p.extend((1..n).map(|_| vocab::WORD0 + r.below(64) as i32));
+            p
+        }
+    };
+
+    let policy = if args.flag("dense") {
+        DecodePolicy::dense()
+    } else {
+        DecodePolicy {
+            dense_below: args.usize_or("dense-below", 1024),
+            k_start: args.f64_or("k-start", 8.0),
+            mu: args.f64_or("mu", 0.7),
+            horizon: max_new.max(1),
+            sink_blocks: args.usize_or("sink", 1),
+            recent_blocks: args.usize_or("recent", 2),
+            ..Default::default()
+        }
+    };
+    policy.validate().map_err(|e| anyhow!("invalid policy: {e}"))?;
+
+    let kv = Arc::new(Mutex::new(KvCache::new(KvConfig { total_pages: pages, page_tokens: block })));
+    let model = Arc::new(TinyLm::new(0xD0C0DE, h, hk, dh, vocab::VOCAB_SIZE));
+    let mut session = DecodeSession::new(Arc::clone(&kv), model, policy, 1)?;
+
+    let t0 = Instant::now();
+    session.prefill(&prompt)?;
+    let ingest = t0.elapsed();
+    println!(
+        "ingested {} prompt tokens in {:.1}ms ({} pages)",
+        prompt.len(),
+        ingest.as_secs_f64() * 1e3,
+        kv.lock().unwrap().used_pages()
+    );
+
+    let quiet = args.flag("quiet");
+    let stats = session.generate(max_new, Some(vocab::END), |info| {
+        if !quiet {
+            println!(
+                "step {:>4}  tok {:>3} {:<8} ctx {:>6}  budget {:>5.1}%{}  {:>8.1}µs",
+                info.step,
+                info.token,
+                vocab::detok(&[info.token]),
+                info.n_ctx,
+                100.0 * info.budget_fraction,
+                if info.dense { " (dense)" } else { "        " },
+                info.step_ns as f64 / 1e3,
+            );
+        }
+        true
+    })?;
+
+    let (used, total) = {
+        let g = kv.lock().unwrap();
+        (g.used_pages(), g.total_pages())
+    };
+    println!("---");
+    println!("stream: {}", vocab::detok(&stats.tokens));
+    println!(
+        "{} tokens in {:.1}ms ({:.1}µs/token) | dense steps {} | mean budget {:.1}% | kv {used}/{total} pages",
+        stats.steps,
+        stats.decode_ns as f64 / 1e6,
+        stats.decode_ns as f64 / 1e3 / stats.steps.max(1) as f64,
+        stats.dense_steps,
+        100.0 * stats.mean_budget_fraction,
+    );
+    Ok(())
 }
 
 /// `stem cost`: print the Eq. (2)/(4)/(8) budget/FLOP breakdown for an

@@ -122,6 +122,89 @@ pub const RUST_CORE: RustCoreCalibration = RustCoreCalibration {
     parallel_efficiency: 0.80,
 };
 
+/// Throughput constants of the pure-rust *decode* step (single-query
+/// kernels + the reference-LM projections), used by the coordinator to
+/// budget `submit_generate` admissions. Head-level fan-out is much
+/// shallower than prefill's (head, query-block) grid, so the parallel
+/// efficiency is lower. Refresh against `BENCH_decode.json` (emitted by
+/// `benches/bench_decode.rs`) whenever the decode kernels change.
+#[derive(Debug, Clone, Copy)]
+pub struct RustDecodeCalibration {
+    /// ns per attended (key, query) pair per head-dim unit in the
+    /// single-query online-softmax kernel
+    pub ns_per_pair_dh: f64,
+    /// ns per strided routing sample per head-dim unit (decode OAM)
+    pub ns_per_metric_sample_dh: f64,
+    /// ns per selection candidate (one bounded-heap offer)
+    pub ns_per_select_candidate: f64,
+    /// ns per projection/unembedding MAC of the per-step model glue
+    pub ns_per_proj_mac: f64,
+    /// fraction of linear scaling realized per extra worker thread
+    pub parallel_efficiency: f64,
+}
+
+pub const DECODE_CORE: RustDecodeCalibration = RustDecodeCalibration {
+    ns_per_pair_dh: 0.15,
+    ns_per_metric_sample_dh: 0.25,
+    ns_per_select_candidate: 3.0,
+    ns_per_proj_mac: 0.6,
+    parallel_efficiency: 0.50,
+};
+
+/// Estimated wall-clock ns for ONE decode step at a cached context of
+/// `n_ctx` tokens. `budget_blocks = None` is the dense path (attend
+/// everything, no metric/selection); `Some(k)` the Stem-sparse path with
+/// a `k`-block budget and routing sampled every `stride` tokens.
+pub fn estimate_decode_step_ns(
+    g: &Geometry,
+    n_ctx: usize,
+    budget_blocks: Option<f64>,
+    stride: usize,
+    threads: usize,
+) -> f64 {
+    let cal = &DECODE_CORE;
+    let heads_layers = (g.n_heads * g.n_layers) as f64;
+    let nblk = n_ctx.div_ceil(g.block).max(1) as f64;
+    let (attended, metric_samples, candidates) = match budget_blocks {
+        None => (n_ctx as f64, 0.0, 0.0),
+        Some(k) => {
+            let attended = (k * g.block as f64).min(n_ctx as f64);
+            let samples = nblk * (g.block as f64 / stride.max(1) as f64).ceil();
+            (attended, samples, nblk)
+        }
+    };
+    let attn_ns = attended * g.d_head as f64 * heads_layers * cal.ns_per_pair_dh
+        + metric_samples * g.d_head as f64 * heads_layers * cal.ns_per_metric_sample_dh
+        + candidates * heads_layers * cal.ns_per_select_candidate;
+    // projections + unembedding are serial per step (qkv + output + tied
+    // unembed ≈ 4·d_model² MACs per layer)
+    let proj_ns = 4.0 * (g.d_model * g.d_model) as f64 * g.n_layers as f64 * cal.ns_per_proj_mac;
+    let speedup = 1.0 + (threads.max(1) as f64 - 1.0) * cal.parallel_efficiency;
+    attn_ns / speedup + proj_ns
+}
+
+/// Estimated wall-clock ns for a whole `submit_generate` request:
+/// prompt ingest (projection-only, no attention) plus `max_new` decode
+/// steps at the mean context length.
+pub fn estimate_generate_ns(
+    g: &Geometry,
+    n_prompt: usize,
+    max_new: usize,
+    budget_blocks: Option<f64>,
+    stride: usize,
+    threads: usize,
+) -> f64 {
+    let cal = &DECODE_CORE;
+    // k/v projections per ingested prompt token: 2·d_model² MACs/layer
+    let ingest_ns = n_prompt as f64
+        * 2.0
+        * (g.d_model * g.d_model) as f64
+        * g.n_layers as f64
+        * cal.ns_per_proj_mac;
+    let mean_ctx = n_prompt + max_new / 2;
+    ingest_ns + max_new as f64 * estimate_decode_step_ns(g, mean_ctx, budget_blocks, stride, threads)
+}
+
 /// Estimated wall-clock ns for one pure-rust reference prefill of length
 /// `n` under `m` on `threads` workers — the quantity the coordinator's
 /// admission control budgets against (see `coordinator::admission`).
@@ -196,6 +279,39 @@ mod tests {
         assert!(e1 / e8 > 4.0, "8 threads must cut the estimate >4x, got {:.2}", e1 / e8);
         let dense = estimate_core_prefill_ns(&g, 32768, MethodCost::Dense, 1);
         assert!(e1 < dense, "stem estimate {e1} must undercut dense {dense}");
+    }
+
+    #[test]
+    fn decode_step_estimate_sparse_beats_dense_at_long_context() {
+        let g = Geometry { n_layers: 1, n_heads: 8, d_head: 32, d_model: 256, d_ff: 1024, block: 64 };
+        for &n in &[2048usize, 8192, 65536] {
+            let dense = estimate_decode_step_ns(&g, n, None, 8, 4);
+            let sparse = estimate_decode_step_ns(&g, n, Some(8.0), 8, 4);
+            assert!(
+                sparse < dense,
+                "sparse step {sparse} must undercut dense {dense} at n={n}"
+            );
+        }
+        // short contexts: selection overhead makes sparse a wash or worse,
+        // which is exactly why DecodePolicy::dense_below exists
+        let short_dense = estimate_decode_step_ns(&g, 256, None, 8, 4);
+        let short_sparse = estimate_decode_step_ns(&g, 256, Some(8.0), 8, 4);
+        assert!(short_sparse >= 0.9 * short_dense);
+        // more threads cut the attention part
+        let t1 = estimate_decode_step_ns(&g, 65536, None, 8, 1);
+        let t8 = estimate_decode_step_ns(&g, 65536, None, 8, 8);
+        assert!(t1 > t8);
+    }
+
+    #[test]
+    fn generate_estimate_monotone() {
+        let g = Geometry { n_layers: 1, n_heads: 8, d_head: 32, d_model: 256, d_ff: 1024, block: 64 };
+        let e32 = estimate_generate_ns(&g, 2048, 32, Some(8.0), 8, 4);
+        let e64 = estimate_generate_ns(&g, 2048, 64, Some(8.0), 8, 4);
+        let long_prompt = estimate_generate_ns(&g, 8192, 32, Some(8.0), 8, 4);
+        assert!(e64 > e32, "more steps must cost more");
+        assert!(long_prompt > e32, "longer prompts must cost more");
+        assert!(e32 > 0.0);
     }
 
     #[test]

@@ -42,6 +42,26 @@
 //! pool helper. The scalar seed-shaped paths are retained as
 //! [`select_stem_reference`] / [`block_sparse_attention_reference`] and
 //! the property tests pin the parallel kernels to them within 1e-5.
+//!
+//! # Single-query decode kernels
+//!
+//! The decode phase scores one new query row against the cached K/V at a
+//! time. Cached K/V is addressed through the storage-agnostic [`KvBlocks`]
+//! trait (one attention block per paged-KV page; the last block may be
+//! partial), so the same kernels run over a dense [`TensorKv`] view in
+//! tests/benches and over the coordinator's paged store in serving:
+//!
+//! * [`decode_block_scores`] — per-(head, key-block) Output-Aware routing
+//!   scores for the single query row: max strided q·k sample plus the
+//!   value-magnitude term of Eq. (7), parallel across heads.
+//! * [`select_decode`] — bounded-heap partial top-k over those scores
+//!   (reusing the prefill `TopK`), with forced sink/recent blocks, emitted
+//!   as a decode-shaped [`Selection`] (one CSR row per head,
+//!   [`Selection::validate_decode`]).
+//! * [`sparse_decode_attention`] — single-query online-softmax attention
+//!   over the selected blocks, parallel across heads.
+//! * [`dense_decode_attention_reference`] — scalar full-context oracle the
+//!   property tests pin the sparse kernel to within 1e-5.
 
 use super::schedule::TpdConfig;
 use super::tensor::{axpy, dot, norm2, score_tile, score_tile_causal, Tensor};
@@ -277,6 +297,60 @@ impl Selection {
                         return Err(format!("h{h} row{i}: duplicate block {b}"));
                     }
                     seen[b as usize] = stamp;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// A decode-shaped selection covering the whole cached context: one
+    /// row per query head (`nblk == 1`), every key block selected. This is
+    /// the dense decode path and the dense-equivalence fixture.
+    pub fn decode_full(n_heads: usize, n_key_blocks: usize) -> Selection {
+        let mut b = SelectionBuilder::with_capacity(n_heads, 1, n_heads * n_key_blocks);
+        let row: Vec<u32> = (0..n_key_blocks as u32).collect();
+        for _ in 0..n_heads {
+            b.push_row(&row, n_key_blocks as u32);
+        }
+        b.finish()
+    }
+
+    /// Validate a decode-shaped selection: `nblk == 1` (a single query
+    /// row per head) whose causal width is the whole cached context of
+    /// `n_key_blocks` blocks rather than the prefill row index — so
+    /// [`Selection::validate`]'s per-row causality bound does not apply.
+    /// Checks CSR structure, non-empty rows, block ids in range and
+    /// strictly ascending order (the monotone K/V walk the kernel needs).
+    pub fn validate_decode(&self, n_key_blocks: usize) -> Result<(), String> {
+        if self.nblk != 1 {
+            return Err(format!("decode selection must have nblk=1, got {}", self.nblk));
+        }
+        let rows = self.n_heads;
+        if self.row_offsets.len() != rows + 1 || self.counts.len() != rows {
+            return Err("decode selection: CSR length mismatch".into());
+        }
+        if self.row_offsets[0] != 0 || self.row_offsets[rows] as usize != self.indices.len() {
+            return Err("decode selection: row_offsets must span exactly indices".into());
+        }
+        for h in 0..rows {
+            let (lo, hi) = (self.row_offsets[h] as usize, self.row_offsets[h + 1] as usize);
+            if hi < lo || hi > self.indices.len() {
+                return Err(format!("head {h}: row_offsets not monotone"));
+            }
+            let c = self.counts[h] as usize;
+            if c == 0 || c > n_key_blocks {
+                return Err(format!("head {h}: count {c} out of range (ctx {n_key_blocks})"));
+            }
+            if c > hi - lo {
+                return Err(format!("head {h}: count {c} exceeds row width {}", hi - lo));
+            }
+            let sel = &self.indices[lo..lo + c];
+            for (t, &b) in sel.iter().enumerate() {
+                if b as usize >= n_key_blocks {
+                    return Err(format!("head {h}: block {b} beyond context"));
+                }
+                if t > 0 && sel[t - 1] >= b {
+                    return Err(format!("head {h}: blocks not strictly ascending"));
                 }
             }
         }
@@ -722,6 +796,262 @@ pub fn block_sparse_attention_reference(
     out
 }
 
+/// Storage-agnostic block view of a decoded sequence's cached K/V.
+///
+/// One logical block holds `block_tokens` consecutive tokens (the paged
+/// KV cache maps one block to one page); the final block may be partial.
+/// Implementations: [`TensorKv`] (contiguous tensors, tests/benches) and
+/// the coordinator's paged store (`decode::session::SeqKvView`).
+pub trait KvBlocks: Sync {
+    /// Cached tokens (the causal width of the next query row).
+    fn n_tokens(&self) -> usize;
+    /// Tokens per block (= KV page size = attention block).
+    fn block_tokens(&self) -> usize;
+    fn n_kv_heads(&self) -> usize;
+    fn head_dim(&self) -> usize;
+    /// Contiguous `[block_len(b), head_dim]` K slab of block `b` for
+    /// kv-head `hkv`.
+    fn k_block(&self, hkv: usize, b: usize) -> &[f32];
+    /// Contiguous `[block_len(b), head_dim]` V slab of block `b` for
+    /// kv-head `hkv`.
+    fn v_block(&self, hkv: usize, b: usize) -> &[f32];
+
+    fn n_blocks(&self) -> usize {
+        self.n_tokens().div_ceil(self.block_tokens())
+    }
+
+    /// Valid tokens in block `b` (full except possibly the last).
+    fn block_len(&self, b: usize) -> usize {
+        let bt = self.block_tokens();
+        self.n_tokens().saturating_sub(b * bt).min(bt)
+    }
+}
+
+/// [`KvBlocks`] over contiguous `[Hk, N, dh]` tensors with a logical
+/// token count `n_tokens <= N` — the dense fixture decode tests and
+/// benches score the paged kernels against.
+pub struct TensorKv<'a> {
+    pub k: &'a Tensor,
+    pub v: &'a Tensor,
+    pub n_tokens: usize,
+    pub block: usize,
+}
+
+impl TensorKv<'_> {
+    fn slab(t: &Tensor, hkv: usize, b: usize, block: usize, len: usize) -> &[f32] {
+        let (n, dh) = (t.shape[1], t.shape[2]);
+        let off = (hkv * n + b * block) * dh;
+        &t.data[off..off + len * dh]
+    }
+}
+
+impl KvBlocks for TensorKv<'_> {
+    fn n_tokens(&self) -> usize {
+        self.n_tokens
+    }
+
+    fn block_tokens(&self) -> usize {
+        self.block
+    }
+
+    fn n_kv_heads(&self) -> usize {
+        self.k.shape[0]
+    }
+
+    fn head_dim(&self) -> usize {
+        self.k.shape[2]
+    }
+
+    fn k_block(&self, hkv: usize, b: usize) -> &[f32] {
+        Self::slab(self.k, hkv, b, self.block, self.block_len(b))
+    }
+
+    fn v_block(&self, hkv: usize, b: usize) -> &[f32] {
+        Self::slab(self.v, hkv, b, self.block, self.block_len(b))
+    }
+}
+
+/// Decode-time Output-Aware routing scores: for the single query row of
+/// each head, score every cached key block as the *max* strided q·k
+/// sample in the block (scaled) plus the `beta·max(0, log‖v‖)`
+/// value-magnitude term of Eq. (7) over the same samples. One row per
+/// query head; parallel across heads. q: `[H, dh]` -> `[H, n_blocks]`.
+pub fn decode_block_scores(q: &Tensor, kv: &impl KvBlocks, stride: usize, beta: f32) -> Tensor {
+    let (h, dh) = (q.shape[0], q.shape[1]);
+    let hk = kv.n_kv_heads();
+    let rep = h / hk;
+    let nblk = kv.n_blocks();
+    let scale = 1.0 / (dh as f32).sqrt();
+    let stride = stride.max(1);
+    let rows = parallel_items(h, |hh| {
+        let hkv = hh / rep;
+        let qrow = &q.data[hh * dh..(hh + 1) * dh];
+        let mut row = vec![NEG_INF; nblk];
+        for (b, o) in row.iter_mut().enumerate() {
+            let len = kv.block_len(b);
+            let ks = kv.k_block(hkv, b);
+            let vs = kv.v_block(hkv, b);
+            let mut s = f32::NEG_INFINITY;
+            let mut vmag = f32::MIN;
+            let mut t = 0;
+            while t < len {
+                let d = dot(qrow, &ks[t * dh..(t + 1) * dh]);
+                if d > s {
+                    s = d;
+                }
+                vmag = vmag.max((norm2(&vs[t * dh..(t + 1) * dh]) + 1e-12).ln());
+                t += stride;
+            }
+            *o = s * scale + beta * vmag.max(0.0);
+        }
+        row
+    });
+    let mut out = Tensor::zeros(&[h, nblk]);
+    for (hh, row) in rows.iter().enumerate() {
+        out.data[hh * nblk..(hh + 1) * nblk].copy_from_slice(row);
+    }
+    out
+}
+
+/// Decode selection: bounded-heap partial top-`budget` over the per-head
+/// block scores (the prefill `TopK` machinery, O(nblk·log budget)), with
+/// the first `sink` and last `recent` blocks force-kept (Lil's finding:
+/// dropping sinks or the local window is what hurts long decode). Emits a
+/// decode-shaped CSR [`Selection`] — one ascending row per head. The
+/// forced sets are only fully kept when `budget >= sink + recent`
+/// (`DecodePolicy` maintains that floor); a smaller budget ranks and
+/// truncates the forced set itself.
+pub fn select_decode(
+    scores: &Tensor,
+    budget: usize,
+    sink: usize,
+    recent: usize,
+) -> Selection {
+    let (h, nblk) = (scores.shape[0], scores.shape[1]);
+    let budget = budget.max(1);
+    let rows = parallel_items(h, |hh| {
+        if budget >= nblk {
+            return (0..nblk as u32).collect::<Vec<u32>>();
+        }
+        let mut top = TopK::new(budget);
+        for b in 0..nblk {
+            let forced = if b < sink || b + recent >= nblk { 1e9 } else { 0.0 };
+            top.offer((scores.at2(hh, b) + forced, b as u32));
+        }
+        top.into_sorted_ids()
+    });
+    let mut b = SelectionBuilder::with_capacity(h, 1, h * budget.min(nblk));
+    for row in &rows {
+        b.push_row(row, row.len() as u32);
+    }
+    b.finish()
+}
+
+/// Single-query block-sparse attention over cached K/V: one online-softmax
+/// pass per head over that head's selected blocks (decode-shaped
+/// [`Selection`], see [`select_decode`]), the last partial block handled
+/// by [`KvBlocks::block_len`]. Causality is structural — only cached
+/// tokens exist. Parallel across heads; returns `[H·dh]` row-major.
+pub fn sparse_decode_attention(q: &Tensor, kv: &impl KvBlocks, sel: &Selection) -> Vec<f32> {
+    let (h, dh) = (q.shape[0], q.shape[1]);
+    let hk = kv.n_kv_heads();
+    let rep = h / hk;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let rows = parallel_items(h, |hh| {
+        let hkv = hh / rep;
+        let qrow = &q.data[hh * dh..(hh + 1) * dh];
+        let mut m = f32::NEG_INFINITY;
+        let mut l = 0.0f32;
+        let mut acc = vec![0.0f32; dh];
+        for &b in sel.selected(hh, 0) {
+            let b = b as usize;
+            let len = kv.block_len(b);
+            if len == 0 {
+                continue;
+            }
+            let ks = kv.k_block(hkv, b);
+            let vs = kv.v_block(hkv, b);
+            for t in 0..len {
+                let s = dot(qrow, &ks[t * dh..(t + 1) * dh]) * scale;
+                if s > m {
+                    if l > 0.0 {
+                        let corr = (m - s).exp();
+                        l *= corr;
+                        for a in acc.iter_mut() {
+                            *a *= corr;
+                        }
+                    }
+                    m = s;
+                }
+                let p = (s - m).exp();
+                l += p;
+                axpy(&mut acc, p, &vs[t * dh..(t + 1) * dh]);
+            }
+        }
+        if l > 0.0 {
+            let inv = 1.0 / l;
+            for a in acc.iter_mut() {
+                *a *= inv;
+            }
+        }
+        acc
+    });
+    let mut out = vec![0.0f32; h * dh];
+    for (hh, row) in rows.iter().enumerate() {
+        out[hh * dh..(hh + 1) * dh].copy_from_slice(row);
+    }
+    out
+}
+
+/// Scalar single-query dense attention over the whole cached context —
+/// the equivalence oracle for [`sparse_decode_attention`] under a full
+/// selection (one gather of every score, one global max, one normalize
+/// pass; single thread).
+pub fn dense_decode_attention_reference(q: &Tensor, kv: &impl KvBlocks) -> Vec<f32> {
+    let (h, dh) = (q.shape[0], q.shape[1]);
+    let hk = kv.n_kv_heads();
+    let rep = h / hk;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = vec![0.0f32; h * dh];
+    let mut svals: Vec<f32> = Vec::new();
+    for hh in 0..h {
+        let hkv = hh / rep;
+        let qrow = &q.data[hh * dh..(hh + 1) * dh];
+        svals.clear();
+        let mut m = f32::NEG_INFINITY;
+        for b in 0..kv.n_blocks() {
+            let len = kv.block_len(b);
+            let ks = kv.k_block(hkv, b);
+            for t in 0..len {
+                let s = dot(qrow, &ks[t * dh..(t + 1) * dh]) * scale;
+                if s > m {
+                    m = s;
+                }
+                svals.push(s);
+            }
+        }
+        let mut l = 0.0f32;
+        for s in svals.iter_mut() {
+            *s = (*s - m).exp();
+            l += *s;
+        }
+        if l == 0.0 {
+            continue; // empty context: zeros, not NaN
+        }
+        let orow = &mut out[hh * dh..(hh + 1) * dh];
+        let mut idx = 0;
+        for b in 0..kv.n_blocks() {
+            let len = kv.block_len(b);
+            let vs = kv.v_block(hkv, b);
+            for t in 0..len {
+                axpy(orow, svals[idx] / l, &vs[t * dh..(t + 1) * dh]);
+                idx += 1;
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -853,6 +1183,100 @@ mod tests {
                 }
             }
         }
+    }
+
+    fn decode_qkv(seed: u64, h: usize, hk: usize, n_cap: usize, dh: usize) -> (Tensor, Tensor, Tensor) {
+        let mut r = Rng::new(seed);
+        (
+            Tensor::randn(&[h, dh], &mut r),
+            Tensor::randn(&[hk, n_cap, dh], &mut r),
+            Tensor::randn(&[hk, n_cap, dh], &mut r),
+        )
+    }
+
+    #[test]
+    fn decode_full_selection_matches_dense_reference() {
+        // 200 = 6 full blocks + one 8-token partial block at block=32
+        for n_tokens in [1usize, 31, 32, 200] {
+            let (q, k, v) = decode_qkv(11, 4, 2, 256, 16);
+            let kv = TensorKv { k: &k, v: &v, n_tokens, block: 32 };
+            let sel = Selection::decode_full(4, kv.n_blocks());
+            sel.validate_decode(kv.n_blocks()).unwrap();
+            let sparse = sparse_decode_attention(&q, &kv, &sel);
+            let dense = dense_decode_attention_reference(&q, &kv);
+            let d = sparse
+                .iter()
+                .zip(&dense)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(d < 1e-5, "n_tokens={n_tokens}: sparse deviates from dense by {d}");
+        }
+    }
+
+    #[test]
+    fn select_decode_keeps_forced_blocks_and_budget() {
+        let (q, k, v) = decode_qkv(12, 4, 2, 512, 16);
+        let kv = TensorKv { k: &k, v: &v, n_tokens: 512, block: 32 };
+        let scores = decode_block_scores(&q, &kv, 8, 0.2);
+        assert_eq!(scores.shape, vec![4, 16]);
+        let sel = select_decode(&scores, 6, 2, 2);
+        sel.validate_decode(16).unwrap();
+        for h in 0..4 {
+            let row = sel.selected(h, 0);
+            assert_eq!(row.len(), 6, "head {h} must fill its budget");
+            for s in 0..2u32 {
+                assert!(row.contains(&s), "sink {s} missing in head {h}");
+            }
+            for r in 14..16u32 {
+                assert!(row.contains(&r), "recent {r} missing in head {h}");
+            }
+        }
+        // budget >= context keeps everything
+        let full = select_decode(&scores, 99, 1, 1);
+        for h in 0..4 {
+            assert_eq!(full.selected(h, 0).len(), 16);
+        }
+    }
+
+    #[test]
+    fn decode_more_budget_less_error() {
+        let (q, k, v) = decode_qkv(13, 2, 1, 512, 16);
+        let kv = TensorKv { k: &k, v: &v, n_tokens: 500, block: 32 };
+        let dense = dense_decode_attention_reference(&q, &kv);
+        let scores = decode_block_scores(&q, &kv, 4, 0.2);
+        let mut errs = vec![];
+        for budget in [3usize, 6, 12] {
+            let sel = select_decode(&scores, budget, 1, 2);
+            let out = sparse_decode_attention(&q, &kv, &sel);
+            let mse: f64 = out
+                .iter()
+                .zip(&dense)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                / out.len() as f64;
+            errs.push(mse);
+        }
+        assert!(errs[0] >= errs[1] && errs[1] >= errs[2], "{errs:?}");
+    }
+
+    #[test]
+    fn validate_decode_rejects_malformed_rows() {
+        // empty row
+        let mut b = SelectionBuilder::new(1, 1);
+        b.push_row(&[], 0);
+        assert!(b.finish().validate_decode(4).is_err());
+        // out-of-range block
+        let mut b = SelectionBuilder::new(1, 1);
+        b.push_row(&[4], 1);
+        assert!(b.finish().validate_decode(4).is_err());
+        // non-ascending
+        let mut b = SelectionBuilder::new(1, 1);
+        b.push_row(&[2, 1], 2);
+        assert!(b.finish().validate_decode(4).is_err());
+        // well-formed
+        let mut b = SelectionBuilder::new(1, 1);
+        b.push_row(&[0, 2, 3], 3);
+        b.finish().validate_decode(4).unwrap();
     }
 
     #[test]

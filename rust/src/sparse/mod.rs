@@ -8,9 +8,10 @@ pub mod schedule;
 pub mod tensor;
 
 pub use attention::{
-    antidiag_scores, block_sparse_attention, block_sparse_attention_reference, dense_attention,
-    oam_scores, select_stem, select_stem_reference, select_streaming, value_block_logmag,
-    Selection, SelectionBuilder,
+    antidiag_scores, block_sparse_attention, block_sparse_attention_reference,
+    decode_block_scores, dense_attention, dense_decode_attention_reference, oam_scores,
+    select_decode, select_stem, select_stem_reference, select_streaming,
+    sparse_decode_attention, value_block_logmag, KvBlocks, Selection, SelectionBuilder, TensorKv,
 };
 pub use schedule::TpdConfig;
 pub use tensor::Tensor;

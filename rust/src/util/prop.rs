@@ -36,6 +36,38 @@ impl Shrink for u64 {
     }
 }
 
+impl Shrink for u32 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = vec![];
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Shrink for i32 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = vec![];
+        if *self != 0 {
+            out.push(self / 2);
+            out.push(self - self.signum());
+        }
+        out
+    }
+}
+
+impl Shrink for bool {
+    fn shrink(&self) -> Vec<Self> {
+        if *self {
+            vec![false]
+        } else {
+            vec![]
+        }
+    }
+}
+
 impl Shrink for f64 {
     fn shrink(&self) -> Vec<Self> {
         let mut out = vec![];
@@ -102,6 +134,18 @@ impl<A: Shrink, B: Shrink, C: Shrink, D: Shrink> Shrink for (A, B, C, D) {
             self.3.shrink().into_iter().map(|d| (self.0.clone(), self.1.clone(), self.2.clone(), d)),
         );
         out
+    }
+}
+
+impl<A: Shrink, B: Shrink, C: Shrink, D: Shrink, E: Shrink> Shrink for (A, B, C, D, E) {
+    fn shrink(&self) -> Vec<Self> {
+        // delegate to the 4-tuple impl over a nested split
+        let nested = ((self.0.clone(), self.1.clone()), self.2.clone(), self.3.clone(), self.4.clone());
+        nested
+            .shrink()
+            .into_iter()
+            .map(|((a, b), c, d, e)| (a, b, c, d, e))
+            .collect()
     }
 }
 
@@ -172,6 +216,26 @@ mod tests {
     fn shrink_vec_reduces() {
         let v = vec![3usize, 4, 5];
         assert!(v.shrink().iter().all(|s| s.len() < v.len() || s.iter().sum::<usize>() < 12));
+    }
+
+    #[test]
+    fn shrink_tuple5_and_scalar_impls_reduce() {
+        let t = (4usize, 2u64, 1.0f64, 8usize, 3u32);
+        for cand in t.shrink() {
+            let changed = [
+                cand.0 != t.0,
+                cand.1 != t.1,
+                cand.2 != t.2,
+                cand.3 != t.3,
+                cand.4 != t.4,
+            ];
+            assert_eq!(changed.iter().filter(|&&c| c).count(), 1, "{cand:?}");
+        }
+        assert!(!t.shrink().is_empty());
+        assert_eq!(0u32.shrink(), vec![]);
+        assert!((-4i32).shrink().contains(&-3));
+        assert_eq!(true.shrink(), vec![false]);
+        assert!(false.shrink().is_empty());
     }
 
     #[test]

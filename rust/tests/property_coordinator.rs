@@ -434,6 +434,236 @@ fn csr_selection_validate_rejects_adversarial_rows() {
     );
 }
 
+// --- KV pool decode paths (fork / append / cow / evict) ------------------
+
+#[test]
+fn kv_pool_invariants_under_random_fork_append_drop() {
+    forall(
+        112,
+        50,
+        |r: &mut Rng| {
+            // (op, magnitude): 0 alloc, 1 append, 2 fork, 3 release, 4 drop
+            let ops: Vec<(usize, usize)> =
+                (0..50).map(|_| (r.below(5) as usize, 1 + r.below(200) as usize)).collect();
+            ops
+        },
+        |ops| {
+            let mut kv = KvCache::new(KvConfig { total_pages: 24, page_tokens: 64 });
+            let mut next_id = 0u64;
+            let mut live: Vec<u64> = vec![];
+            for &(op, mag) in ops {
+                match op {
+                    0 => {
+                        next_id += 1;
+                        if kv.allocate(next_id, mag).is_ok() {
+                            live.push(next_id);
+                        }
+                    }
+                    1 => {
+                        if let Some(&id) = live.last() {
+                            let before = kv.seq_tokens(id);
+                            match kv.append_tokens(id, mag) {
+                                Ok(a) => {
+                                    if let Some((old, new)) = a.cow {
+                                        if old == new {
+                                            return Err("cow to the same page".into());
+                                        }
+                                    }
+                                    if kv.seq_tokens(id) != before.map(|b| b + mag) {
+                                        return Err("append lost tokens".into());
+                                    }
+                                }
+                                Err(_) => {
+                                    if kv.seq_tokens(id) != before {
+                                        return Err(
+                                            "failed append must not change tokens".into()
+                                        );
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    2 => {
+                        if let Some(&src) = live.first() {
+                            next_id += 1;
+                            if kv.fork(src, next_id).is_ok() {
+                                live.push(next_id);
+                            }
+                        }
+                    }
+                    3 => {
+                        if !live.is_empty() {
+                            let _ = kv.release(live[mag % live.len()]);
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let id = live.remove(mag % live.len());
+                            let _ = kv.drop_seq(id);
+                        }
+                    }
+                }
+                // drop evicted sequences from our live set
+                live.retain(|id| kv.page_table(*id).is_some());
+                kv.check_invariants()?;
+            }
+            for id in live.drain(..) {
+                let _ = kv.release(id);
+                let _ = kv.drop_seq(id);
+            }
+            if kv.used_pages() != 0 {
+                return Err("pages leaked after full drain".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// --- decode kernels vs dense oracle --------------------------------------
+
+#[test]
+fn sparse_decode_full_budget_matches_dense_oracle() {
+    use stem::sparse::{
+        dense_decode_attention_reference, sparse_decode_attention, KvBlocks, Selection, TensorKv,
+    };
+    forall(
+        113,
+        16,
+        |r: &mut Rng| {
+            (
+                r.below(1 << 31),
+                1 + r.below(300) as usize,    // n_tokens (partial tail blocks)
+                2 + 2 * r.below(2) as usize,  // h in {2, 4}
+                1 + r.below(31) as usize,     // block
+                r.below(2) == 0,              // gqa
+            )
+        },
+        |&(seed, n_tokens, h, block, gqa)| {
+            if n_tokens == 0 || h < 2 || block == 0 {
+                return Ok(()); // shrink candidates outside the domain
+            }
+            let mut rng = Rng::new(seed);
+            let hk = if gqa { h / 2 } else { h };
+            let dh = 16;
+            let q = Tensor::randn(&[h, dh], &mut rng);
+            let k = Tensor::randn(&[hk, 320, dh], &mut rng);
+            let v = Tensor::randn(&[hk, 320, dh], &mut rng);
+            let kv = TensorKv { k: &k, v: &v, n_tokens, block };
+            let sel = Selection::decode_full(h, kv.n_blocks());
+            sel.validate_decode(kv.n_blocks())?;
+            let sparse = sparse_decode_attention(&q, &kv, &sel);
+            let dense = dense_decode_attention_reference(&q, &kv);
+            let d = sparse
+                .iter()
+                .zip(&dense)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            if d >= 1e-5 {
+                return Err(format!("decode kernel deviates from dense oracle by {d}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn decode_selection_always_valid_under_random_budgets() {
+    use stem::sparse::{decode_block_scores, select_decode, KvBlocks, TensorKv};
+    forall(
+        114,
+        30,
+        |r: &mut Rng| {
+            (
+                r.below(1 << 31),
+                32 + r.below(480) as usize, // n_tokens
+                1 + r.below(12) as usize,   // budget
+                r.below(3) as usize,        // sink
+                1 + r.below(3) as usize,    // recent
+            )
+        },
+        |&(seed, n_tokens, budget, sink, recent)| {
+            if n_tokens == 0 || budget == 0 || recent == 0 {
+                return Ok(()); // shrink candidates outside the domain
+            }
+            let mut rng = Rng::new(seed);
+            let (h, hk, dh, block) = (4usize, 2usize, 8usize, 32usize);
+            let q = Tensor::randn(&[h, dh], &mut rng);
+            let k = Tensor::randn(&[hk, 512, dh], &mut rng);
+            let v = Tensor::randn(&[hk, 512, dh], &mut rng);
+            let kv = TensorKv { k: &k, v: &v, n_tokens, block };
+            let scores = decode_block_scores(&q, &kv, 8, 0.2);
+            let sel = select_decode(&scores, budget, sink, recent);
+            sel.validate_decode(kv.n_blocks())?;
+            let nblk = kv.n_blocks();
+            for hh in 0..h {
+                let row = sel.selected(hh, 0);
+                if row.len() != budget.min(nblk) {
+                    return Err(format!("head {hh}: {} != budget {}", row.len(), budget.min(nblk)));
+                }
+                // forced sets are only guaranteed when the budget can hold
+                // them (DecodePolicy keeps budget >= sink + recent)
+                if budget < nblk && budget >= sink + recent {
+                    for s in 0..sink.min(nblk) as u32 {
+                        if !row.contains(&s) {
+                            return Err(format!("head {hh}: sink {s} dropped"));
+                        }
+                    }
+                    let last = (nblk - 1) as u32;
+                    if !row.contains(&last) {
+                        return Err(format!("head {hh}: newest block dropped"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// --- decode sessions against the shared pool -----------------------------
+
+#[test]
+fn concurrent_decode_sessions_share_the_pool_without_corruption() {
+    use std::sync::{Arc, Mutex};
+    use stem::decode::{DecodePolicy, DecodeSession, TinyLm};
+
+    let kv = Arc::new(Mutex::new(KvCache::new(KvConfig { total_pages: 256, page_tokens: 16 })));
+    let model = Arc::new(TinyLm::new(3, 4, 2, 8, 96));
+    // reference stream, generated alone
+    let solo = {
+        let kv2 = Arc::new(Mutex::new(KvCache::new(KvConfig { total_pages: 256, page_tokens: 16 })));
+        let mut s =
+            DecodeSession::new(kv2, Arc::clone(&model), DecodePolicy::default(), 1).unwrap();
+        s.prefill(&[1, 17, 18, 19]).unwrap();
+        s.generate(8, None, |_| true).unwrap().tokens
+    };
+    // three sessions interleaved step-by-step on one pool
+    let mut sessions: Vec<DecodeSession> = (1..=3)
+        .map(|i| {
+            let mut s = DecodeSession::new(
+                Arc::clone(&kv),
+                Arc::clone(&model),
+                DecodePolicy::default(),
+                i,
+            )
+            .unwrap();
+            s.prefill(&[1, 17, 18, 19]).unwrap();
+            s
+        })
+        .collect();
+    let mut streams = vec![vec![]; 3];
+    for _ in 0..8 {
+        for (i, s) in sessions.iter_mut().enumerate() {
+            streams[i].push(s.step_once().unwrap().token);
+        }
+    }
+    kv.lock().unwrap().check_invariants().unwrap();
+    for stream in &streams {
+        assert_eq!(stream, &solo, "interleaving must not change any stream");
+    }
+    drop(sessions);
+    assert_eq!(kv.lock().unwrap().used_pages(), 0);
+}
+
 // --- json substrate ------------------------------------------------------
 
 #[test]
