@@ -9,11 +9,11 @@
 //!   cargo bench --bench bench_decode -- --quick      # small samples
 //!   cargo bench --bench bench_decode -- --threads 1  # serial core
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
-use stem::coordinator::kv_cache::{KvCache, KvConfig};
-use stem::decode::{DecodePolicy, DecodeSession, TinyLm};
+use stem::coordinator::kv_cache::KvConfig;
+use stem::decode::{DecodePolicy, DecodeSession, SharedKv, TinyLm};
 use stem::model::vocab;
 use stem::sparse::{
     decode_block_scores, select_decode, sparse_decode_attention, KvBlocks, Selection, Tensor,
@@ -86,10 +86,7 @@ fn main() {
         ("session_step_dense", DecodePolicy::dense()),
     ] {
         let n0 = 2048usize;
-        let kvpool = Arc::new(Mutex::new(KvCache::new(KvConfig {
-            total_pages: 1024,
-            page_tokens: block,
-        })));
+        let kvpool = SharedKv::new(KvConfig { total_pages: 1024, page_tokens: block }, hk, dh);
         let model = Arc::new(TinyLm::new(0xD0C0DE, h, hk, dh, vocab::VOCAB_SIZE));
         let mut session = DecodeSession::new(kvpool, model, policy, 1).unwrap();
         let mut rng = Rng::new(11);

@@ -1,0 +1,221 @@
+//! Shared-prefix fan-out macro-benchmark: serve N continuations of one
+//! prompt as (a) forks of a single ingested prefix (refcounted pages,
+//! CoW divergence) and (b) N fully independent sessions, and compare
+//! aggregate ns/token and page residency. Also re-checks the decode
+//! parity acceptance on forked state: the full-budget decode kernel must
+//! match the scalar dense oracle to 1e-5 on every branch's view after it
+//! has diverged. Writes machine-readable results to `BENCH_fanout.json`
+//! (targets: >= 2x page savings, >= 1.5x aggregate throughput at
+//! fanout 4).
+//!
+//!   cargo bench --bench bench_fanout                 # full sizes
+//!   cargo bench --bench bench_fanout -- --quick      # small samples
+//!   cargo bench --bench bench_fanout -- --fanout 8
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use stem::coordinator::kv_cache::KvConfig;
+use stem::decode::{
+    decode_attend, decode_attend_dense_reference, DecodePolicy, DecodeSession, SharedKv, TinyLm,
+};
+use stem::model::vocab;
+use stem::sparse::Tensor;
+use stem::util::cli::Args;
+use stem::util::json::Json;
+use stem::util::rng::Rng;
+
+const BLOCK: usize = 64;
+const GEO: (usize, usize, usize) = (8, 4, 32); // (h, hk, dh)
+
+struct ModeResult {
+    wall_ns: u64,
+    tokens: usize,
+    pages_used: usize,
+    slab_pages: usize,
+}
+
+impl ModeResult {
+    fn ns_per_token(&self) -> f64 {
+        self.wall_ns as f64 / self.tokens.max(1) as f64
+    }
+}
+
+fn policy(max_new: usize) -> DecodePolicy {
+    DecodePolicy { dense_below: 1024, k_start: 8.0, horizon: max_new.max(1), ..Default::default() }
+}
+
+fn prompt(len: usize) -> Vec<i32> {
+    let mut r = Rng::new(42);
+    let mut p = vec![vocab::BOS];
+    p.extend((1..len).map(|_| vocab::WORD0 + r.below(64) as i32));
+    p
+}
+
+fn pool(pages: usize) -> Arc<SharedKv> {
+    let (_, hk, dh) = GEO;
+    SharedKv::new(KvConfig { total_pages: pages, page_tokens: BLOCK }, hk, dh)
+}
+
+fn model() -> Arc<TinyLm> {
+    let (h, hk, dh) = GEO;
+    Arc::new(TinyLm::new(0xD0C0DE, h, hk, dh, vocab::VOCAB_SIZE))
+}
+
+/// Full-budget decode kernel vs. scalar dense oracle on a session's
+/// current (possibly forked/CoW'd) view; returns the max abs deviation.
+fn parity_diff(session: &DecodeSession) -> f32 {
+    let m = session.model();
+    let (q, _, _) = m.project(session.last_token(), session.n_ctx(), true);
+    let q = Tensor::from_vec(&[m.h, m.dh], q.expect("with_q"));
+    session
+        .with_kv_view(|view| {
+            let att = decode_attend(&q, view, &DecodePolicy::dense(), 0);
+            let oracle = decode_attend_dense_reference(&q, view);
+            att.out
+                .iter()
+                .zip(&oracle)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max)
+        })
+        .expect("kv view")
+}
+
+/// One ingest + `fanout` forked branches, each steered by a divergence
+/// token then decoded `max_new` steps. Returns the mode stats and the
+/// worst parity deviation across branches (checked *after* divergence so
+/// CoW'd tails and grown pages are covered).
+fn run_forked(p: &[i32], fanout: usize, max_new: usize) -> (ModeResult, f32) {
+    let kv = pool(4096);
+    let t0 = Instant::now();
+    let mut root = DecodeSession::new(Arc::clone(&kv), model(), policy(max_new), 1).unwrap();
+    root.prefill(p).unwrap();
+    let mut branches: Vec<DecodeSession> = Vec::with_capacity(fanout);
+    for i in 0..fanout {
+        let mut b = root.fork(2 + i as u64).unwrap();
+        b.prefill(&[vocab::WORD0 + (i % 40) as i32]).unwrap();
+        branches.push(b);
+    }
+    let mut tokens = 0usize;
+    for b in branches.iter_mut() {
+        tokens += b.generate(max_new, None, |_| true).unwrap().steps;
+    }
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    let parity = branches.iter().map(parity_diff).fold(0.0f32, f32::max);
+    let res = ModeResult {
+        wall_ns,
+        tokens,
+        pages_used: kv.occupancy().0,
+        slab_pages: kv.pages_resident(),
+    };
+    (res, parity)
+}
+
+/// The baseline: `fanout` independent sessions each ingesting the full
+/// prompt (+ the same divergence token) before decoding.
+fn run_independent(p: &[i32], fanout: usize, max_new: usize) -> ModeResult {
+    let kv = pool(4096);
+    let m = model();
+    let t0 = Instant::now();
+    let mut sessions: Vec<DecodeSession> = Vec::with_capacity(fanout);
+    for i in 0..fanout {
+        let mut s =
+            DecodeSession::new(Arc::clone(&kv), Arc::clone(&m), policy(max_new), 1 + i as u64)
+                .unwrap();
+        s.prefill(p).unwrap();
+        s.prefill(&[vocab::WORD0 + (i % 40) as i32]).unwrap();
+        sessions.push(s);
+    }
+    let mut tokens = 0usize;
+    for s in sessions.iter_mut() {
+        tokens += s.generate(max_new, None, |_| true).unwrap().steps;
+    }
+    ModeResult {
+        wall_ns: t0.elapsed().as_nanos() as u64,
+        tokens,
+        pages_used: kv.occupancy().0,
+        slab_pages: kv.pages_resident(),
+    }
+}
+
+fn mode_json(r: &ModeResult) -> Json {
+    Json::obj(vec![
+        ("wall_ns", Json::Num(r.wall_ns as f64)),
+        ("tokens", Json::Num(r.tokens as f64)),
+        ("ns_per_token", Json::Num(r.ns_per_token())),
+        ("pages_used", Json::Num(r.pages_used as f64)),
+        ("slab_pages_resident", Json::Num(r.slab_pages as f64)),
+    ])
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1), false);
+    let quick = args.flag("quick");
+    let threads = args.init_thread_pool();
+    let fanout = args.usize_or("fanout", 4).max(1);
+    let prompt_len = args.usize_or("prompt-len", if quick { 1024 } else { 4096 });
+    let max_new = args.usize_or("max-new", if quick { 16 } else { 64 });
+    let (h, hk, dh) = GEO;
+
+    let p = prompt(prompt_len);
+    let (forked, parity) = run_forked(&p, fanout, max_new);
+    let independent = run_independent(&p, fanout, max_new);
+
+    let page_savings = independent.pages_used as f64 / forked.pages_used.max(1) as f64;
+    let throughput_ratio = independent.wall_ns as f64 / forked.wall_ns.max(1) as f64;
+    println!(
+        "fanout={fanout} prompt={prompt_len} max_new={max_new} ({threads} threads)\n\
+         forked:      {:>10.0} ns/token | {:>4} pages used | {:>4} slabs resident\n\
+         independent: {:>10.0} ns/token | {:>4} pages used | {:>4} slabs resident\n\
+         -> page savings {page_savings:.2}x (target >= 2x) | aggregate throughput \
+         {throughput_ratio:.2}x (target >= 1.5x)\n\
+         -> forked decode parity vs dense oracle: max |diff| = {parity:.2e} (gate 1e-5)",
+        forked.ns_per_token(),
+        forked.pages_used,
+        forked.slab_pages,
+        independent.ns_per_token(),
+        independent.pages_used,
+        independent.slab_pages,
+    );
+    assert!(parity < 1e-5, "forked decode parity broke the 1e-5 oracle gate: {parity}");
+    // page accounting is deterministic (unlike wall time), so the
+    // savings target is a hard gate even on noisy runners; the 2x
+    // acceptance number is defined at fanout >= 4
+    assert!(
+        fanout < 4 || page_savings >= 2.0,
+        "fanout={fanout} page savings {page_savings:.2}x below the 2x acceptance target"
+    );
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("bench_fanout".into())),
+        ("threads", Json::Num(threads as f64)),
+        ("quick", Json::Bool(quick)),
+        ("fanout", Json::Num(fanout as f64)),
+        ("prompt_len", Json::Num(prompt_len as f64)),
+        ("max_new", Json::Num(max_new as f64)),
+        (
+            "geometry",
+            Json::obj(vec![
+                ("h", Json::Num(h as f64)),
+                ("hk", Json::Num(hk as f64)),
+                ("dh", Json::Num(dh as f64)),
+                ("block", Json::Num(BLOCK as f64)),
+            ]),
+        ),
+        (
+            "results",
+            Json::obj(vec![
+                ("forked", mode_json(&forked)),
+                ("independent", mode_json(&independent)),
+                ("page_savings", Json::Num(page_savings)),
+                ("throughput_ratio", Json::Num(throughput_ratio)),
+                ("parity_max_diff", Json::Num(parity as f64)),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_fanout.json";
+    match std::fs::write(path, format!("{out}")) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

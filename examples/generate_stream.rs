@@ -11,18 +11,18 @@
 //! --prompt-len past --dense-below to see the sparse path engage.
 
 use std::io::Write;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use stem::coordinator::kv_cache::{KvCache, KvConfig};
-use stem::decode::{DecodePolicy, DecodeSession, SessionStats, TinyLm};
+use stem::coordinator::kv_cache::KvConfig;
+use stem::decode::{DecodePolicy, DecodeSession, SessionStats, SharedKv, TinyLm};
 use stem::model::vocab;
 use stem::util::cli::Args;
 use stem::util::rng::Rng;
 
 fn run(
-    kv: &Arc<Mutex<KvCache>>,
+    kv: &Arc<SharedKv>,
     model: &Arc<TinyLm>,
     policy: DecodePolicy,
     seq: u64,
@@ -45,7 +45,7 @@ fn run(
         stats.decode_ns as f64 / 1e3 / stats.steps.max(1) as f64,
         100.0 * stats.mean_budget_fraction,
         stats.dense_steps,
-        kv.lock().unwrap().used_pages(),
+        kv.occupancy().0,
     );
     Ok(stats)
 }
@@ -57,10 +57,11 @@ fn main() -> Result<()> {
     let prompt_len = args.usize_or("prompt-len", 2048);
     let max_new = args.usize_or("max-new", 48);
 
-    let kv = Arc::new(Mutex::new(KvCache::new(KvConfig {
-        total_pages: args.usize_or("pages", 4096),
-        page_tokens: block,
-    })));
+    let kv = SharedKv::new(
+        KvConfig { total_pages: args.usize_or("pages", 4096), page_tokens: block },
+        4,
+        32,
+    );
     let model = Arc::new(TinyLm::new(0xD0C0DE, 8, 4, 32, vocab::VOCAB_SIZE));
     let mut rng = Rng::new(args.u64_or("seed", 42));
     let mut prompt = vec![vocab::BOS];

@@ -59,19 +59,31 @@ impl Admission {
     /// model attached; the estimate must be passed back to
     /// [`Admission::release_work`].
     pub fn try_admit_work(&self, n_tokens: usize, est_ns: f64) -> Admit {
+        self.try_admit_work_n(1, n_tokens, est_ns)
+    }
+
+    /// Admit a group of `n_requests` at once (a shared-prefix fan-out:
+    /// one admission decision, but every branch later calls
+    /// [`Admission::release_work`] individually, so the request count
+    /// must be charged per branch up front to stay balanced).
+    pub fn try_admit_work_n(&self, n_requests: usize, n_tokens: usize, est_ns: f64) -> Admit {
         let mut s = self.state.lock().unwrap();
-        if s.requests + 1 > self.cfg.max_requests {
-            return Admit::Rejected { reason: "max_requests" };
+        // checked adds: caller-supplied group sizes must reject, never
+        // wrap past the ceilings in release builds
+        match s.requests.checked_add(n_requests) {
+            Some(r) if r <= self.cfg.max_requests => {}
+            _ => return Admit::Rejected { reason: "max_requests" },
         }
-        if s.tokens + n_tokens > self.cfg.max_tokens {
-            return Admit::Rejected { reason: "max_tokens" };
+        match s.tokens.checked_add(n_tokens) {
+            Some(t) if t <= self.cfg.max_tokens => {}
+            _ => return Admit::Rejected { reason: "max_tokens" },
         }
         if s.requests > 0 && s.work_ns + est_ns > self.cfg.max_work_ns {
             // never starve: an empty system admits any single request
             return Admit::Rejected { reason: "max_work_ns" };
         }
         s.tokens += n_tokens;
-        s.requests += 1;
+        s.requests += n_requests;
         s.work_ns += est_ns;
         Admit::Accepted
     }
@@ -176,6 +188,25 @@ mod tests {
             a.try_admit_work(2048, est(2048)),
             Admit::Rejected { reason: "max_work_ns" }
         ));
+    }
+
+    #[test]
+    fn group_admission_balances_per_branch_release() {
+        let a = Admission::new(AdmissionConfig {
+            max_tokens: 10_000,
+            max_requests: 4,
+            ..Default::default()
+        });
+        // a fanout-3 group takes 3 request slots atomically
+        assert_eq!(a.try_admit_work_n(3, 300, 3e5), Admit::Accepted);
+        assert_eq!(a.outstanding(), (300, 3));
+        assert!(matches!(a.try_admit_work_n(2, 10, 1.0), Admit::Rejected { reason: "max_requests" }));
+        // branches release individually (100 tokens + 1e5 ns each)
+        a.release_work(100, 1e5);
+        a.release_work(100, 1e5);
+        a.release_work(100, 1e5);
+        assert_eq!(a.outstanding(), (0, 0), "per-branch releases must zero the group");
+        assert_eq!(a.outstanding_work_ns(), 0.0);
     }
 
     #[test]

@@ -134,6 +134,16 @@ impl Batcher {
         self.pending += 1;
     }
 
+    /// Enqueue a sibling group of decode steps (the branches of one
+    /// shared-prefix fan-out) back to back, so one `pop_ready_any` round
+    /// emits them in the same decode batch whenever the group fits
+    /// `max_batch` — sibling steps then share a dispatch round instead of
+    /// trickling through separate timeout flushes.
+    pub fn push_decode_many(&mut self, steps: Vec<DecodeStep>) {
+        self.pending += steps.len();
+        self.decode_q.extend(steps);
+    }
+
     /// Next ready batch under the size-or-timeout policy; `now` is passed
     /// in for testability.
     pub fn pop_ready(&mut self, now: Instant) -> Option<Batch> {
@@ -359,6 +369,21 @@ mod tests {
         b.push_decode(step(7, t));
         assert!(matches!(b.pop_ready_any(t), Some(AnyBatch::Decode(_))));
         assert!(b.pop_ready_any(t).is_none());
+    }
+
+    #[test]
+    fn sibling_group_lands_in_one_decode_batch() {
+        let mut b = Batcher::with_decode(
+            BatcherConfig::default(),
+            DecodeLaneConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+        );
+        let t = Instant::now();
+        b.push_decode_many((0..4).map(|i| step(100 + i, t)).collect());
+        assert_eq!(b.pending(), 4);
+        let batch = b.pop_decode_ready(t + Duration::from_millis(2)).expect("timeout flush");
+        let seqs: Vec<u64> = batch.steps.iter().map(|s| s.seq).collect();
+        assert_eq!(seqs, vec![100, 101, 102, 103], "siblings share one batch, in order");
+        assert_eq!(b.pending(), 0);
     }
 
     #[test]

@@ -20,6 +20,17 @@ pub enum KvError {
     UnknownSeq(u64),
     #[error("sequence {0} already has a page table")]
     SeqExists(u64),
+    /// A lock guarding the shared KV (identity pool or slab store) was
+    /// poisoned by a panicking sibling session. Surfacing this instead of
+    /// re-panicking keeps one broken session from taking down every fork
+    /// sharing the store.
+    #[error("shared KV lock poisoned by a panicked sibling session")]
+    Poisoned,
+    /// A fork would push a page's u16 refcount past its maximum; wrapping
+    /// silently would corrupt the free-list/refcount invariants under
+    /// mass fan-out.
+    #[error("refcount overflow: page {page} is already at the u16 sharing limit")]
+    RefcountOverflow { page: u32 },
 }
 
 #[derive(Debug, Clone)]
@@ -54,6 +65,11 @@ pub struct KvCache {
     refcount: Vec<u16>,
     seqs: HashMap<u64, SeqEntry>,
     clock: u64,
+    /// Pages whose refcount hit 0 since the last [`KvCache::take_freed`]
+    /// drain — the slab-store owner uses this to drop payloads exactly
+    /// when the identity is recycled (evictions free pages deep inside
+    /// `allocate`/`append_tokens`, where the caller never sees the ids).
+    freed_log: Vec<u32>,
     pub alloc_count: u64,
     pub evict_count: u64,
 }
@@ -62,7 +78,16 @@ impl KvCache {
     pub fn new(cfg: KvConfig) -> Self {
         let free = (0..cfg.total_pages as u32).rev().collect();
         let refcount = vec![0u16; cfg.total_pages];
-        KvCache { cfg, free, refcount, seqs: HashMap::new(), clock: 0, alloc_count: 0, evict_count: 0 }
+        KvCache {
+            cfg,
+            free,
+            refcount,
+            seqs: HashMap::new(),
+            clock: 0,
+            freed_log: Vec::new(),
+            alloc_count: 0,
+            evict_count: 0,
+        }
     }
 
     pub fn pages_needed(&self, n_tokens: usize) -> usize {
@@ -111,7 +136,17 @@ impl KvCache {
         }
         let mut pages = Vec::with_capacity(need);
         for _ in 0..need {
-            let p = self.free.pop().unwrap();
+            // the eviction loop above guarantees enough free pages, but an
+            // empty pop must stay a clean error, never a panic: roll back
+            // the partial reservation and report out-of-pages
+            let Some(p) = self.free.pop() else {
+                let free_now = self.free.len() + pages.len();
+                for p in pages {
+                    self.refcount[p as usize] = 0;
+                    self.free.push(p);
+                }
+                return Err(KvError::OutOfPages { need, free: free_now });
+            };
             self.refcount[p as usize] = 1;
             pages.push(p);
         }
@@ -134,6 +169,11 @@ impl KvCache {
         }
         let e = self.seqs.get(&src).ok_or(KvError::UnknownSeq(src))?;
         let (pages, n_tokens, pinned) = (e.pages.clone(), e.n_tokens, e.pinned);
+        // check-then-increment: refusing *before* touching any refcount
+        // keeps a failed fork side-effect free (no partial increments)
+        if let Some(&p) = pages.iter().find(|&&p| self.refcount[p as usize] == u16::MAX) {
+            return Err(KvError::RefcountOverflow { page: p });
+        }
         for &p in &pages {
             self.refcount[p as usize] += 1;
         }
@@ -182,7 +222,11 @@ impl KvCache {
         // eviction may have dropped the sibling sharing our tail: re-check
         let mut cow = None;
         if tail_shared(self) {
-            let new = self.free.pop().unwrap();
+            let Some(new) = self.free.pop() else {
+                // unreachable given the reservation loop, but keep the
+                // clean error path: nothing has been mutated yet
+                return Err(KvError::OutOfPages { need, free: 0 });
+            };
             self.refcount[new as usize] = 1;
             let e = self.seqs.get_mut(&seq_id).unwrap();
             let old = std::mem::replace(&mut e.pages[cur / pt], new);
@@ -191,7 +235,22 @@ impl KvCache {
         }
         let mut grown = Vec::with_capacity(grow);
         for _ in 0..grow {
-            let p = self.free.pop().unwrap();
+            let Some(p) = self.free.pop() else {
+                // roll back the partial growth + the CoW remap so a failed
+                // append leaves the table untouched, as documented
+                let free_now = self.free.len() + grown.len();
+                for p in grown {
+                    self.refcount[p as usize] = 0;
+                    self.free.push(p);
+                }
+                if let Some((old, new)) = cow.take() {
+                    self.seqs.get_mut(&seq_id).unwrap().pages[cur / pt] = old;
+                    self.refcount[old as usize] += 1;
+                    self.refcount[new as usize] = 0;
+                    self.free.push(new);
+                }
+                return Err(KvError::OutOfPages { need, free: free_now });
+            };
             self.refcount[p as usize] = 1;
             grown.push(p);
         }
@@ -212,6 +271,17 @@ impl KvCache {
         Ok(())
     }
 
+    /// Re-pin a sequence (the inverse of [`KvCache::release`]): a fork
+    /// taken from an unpinned prefix holder must not be LRU-evicted while
+    /// it is actively decoding.
+    pub fn pin(&mut self, seq_id: u64) -> Result<(), KvError> {
+        let t = self.tick();
+        let e = self.seqs.get_mut(&seq_id).ok_or(KvError::UnknownSeq(seq_id))?;
+        e.pinned = true;
+        e.last_touch = t;
+        Ok(())
+    }
+
     /// Drop a sequence immediately, returning pages whose refcount hits 0.
     pub fn drop_seq(&mut self, seq_id: u64) -> Result<usize, KvError> {
         let e = self.seqs.remove(&seq_id).ok_or(KvError::UnknownSeq(seq_id))?;
@@ -222,10 +292,22 @@ impl KvCache {
             *rc -= 1;
             if *rc == 0 {
                 self.free.push(p);
+                self.freed_log.push(p);
                 freed += 1;
             }
         }
         Ok(freed)
+    }
+
+    /// Drain the freed-page log: every page id whose refcount reached 0
+    /// since the previous drain, including pages freed by LRU eviction
+    /// inside `allocate`/`append_tokens`. Owners of per-page payloads
+    /// (the decode slab store) drain this after every mutating call to
+    /// garbage-collect exactly the retired identities; callers that keep
+    /// no payloads can ignore it — the log is cleared on drain and only
+    /// grows while undrained.
+    pub fn take_freed(&mut self) -> Vec<u32> {
+        std::mem::take(&mut self.freed_log)
     }
 
     fn evict_lru(&mut self) -> bool {
@@ -447,6 +529,74 @@ mod tests {
         let err = kv.append_tokens(2, 256).unwrap_err();
         assert!(matches!(err, KvError::OutOfPages { .. }));
         assert_eq!(kv.seq_tokens(2), Some(192), "failed append must not change state");
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_refcount_overflow_is_a_clean_error() {
+        let mut kv = KvCache::new(KvConfig { total_pages: 1, page_tokens: 64 });
+        kv.allocate(0, 64).unwrap(); // page 0, refcount 1
+        for i in 1..u16::MAX as u64 {
+            kv.fork(0, i).unwrap();
+        }
+        // page 0 is now referenced u16::MAX times: one more fork must
+        // refuse instead of wrapping to 0
+        let err = kv.fork(0, u16::MAX as u64).unwrap_err();
+        assert_eq!(err, KvError::RefcountOverflow { page: 0 });
+        // the failed fork left no sequence entry and no partial increment
+        assert!(kv.page_table(u16::MAX as u64).is_none());
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn allocate_survives_eviction_that_frees_nothing() {
+        // an evictable victim whose pages are all shared with a pinned
+        // sequence "evicts" without freeing a single page; the allocation
+        // loop must land on the out-of-pages error, not a free-list panic
+        let mut kv = cache(4);
+        kv.allocate(1, 128).unwrap(); // 2 pages, pinned
+        kv.fork(1, 2).unwrap(); // shares both pages
+        kv.release(2).unwrap(); // evictable, but frees 0 pages
+        let err = kv.allocate(3, 256).unwrap_err();
+        assert!(matches!(err, KvError::OutOfPages { .. }));
+        assert_eq!(kv.used_pages(), 2, "failed allocate must not leak reservations");
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pin_reverses_release() {
+        let mut kv = cache(8);
+        kv.allocate(1, 256).unwrap(); // 4 pages
+        kv.release(1).unwrap();
+        kv.pin(1).unwrap();
+        // pool full after another pinned alloc; nothing is evictable now
+        kv.allocate(2, 256).unwrap();
+        assert!(matches!(kv.allocate(3, 64), Err(KvError::OutOfPages { .. })));
+        assert!(kv.page_table(1).is_some(), "re-pinned seq must survive pressure");
+        assert_eq!(kv.pin(99), Err(KvError::UnknownSeq(99)));
+    }
+
+    #[test]
+    fn freed_log_reports_every_zero_refcount_page() {
+        let mut kv = cache(8);
+        kv.allocate(1, 128).unwrap(); // 2 pages
+        kv.fork(1, 2).unwrap();
+        assert_eq!(kv.take_freed(), vec![], "nothing freed yet");
+        kv.drop_seq(1).unwrap(); // still shared: frees nothing
+        assert_eq!(kv.take_freed(), vec![]);
+        let pages: Vec<u32> = kv.page_table(2).unwrap().to_vec();
+        kv.drop_seq(2).unwrap();
+        let mut freed = kv.take_freed();
+        freed.sort_unstable();
+        let mut want = pages;
+        want.sort_unstable();
+        assert_eq!(freed, want);
+        // eviction inside allocate logs too
+        kv.allocate(3, 128).unwrap();
+        kv.release(3).unwrap();
+        kv.take_freed();
+        kv.allocate(4, 512).unwrap(); // forces evicting seq 3
+        assert_eq!(kv.take_freed().len(), 2, "evicted pages must be logged");
         kv.check_invariants().unwrap();
     }
 

@@ -101,6 +101,15 @@ pub struct Metrics {
     pub decode_step: LatencyHisto,
     /// sum of per-step decode budget fractions * 1e6, for the mean
     pub decode_budget_sum_micro: AtomicU64,
+    // --- shared-prefix fan-out ------------------------------------------
+    /// Branch sessions forked off a refcounted prefix (every admitted
+    /// generation branch forks exactly once).
+    pub forks: AtomicU64,
+    /// Branches whose prompt prefix was already resident (or mid-ingest):
+    /// the prefill cost was paid by an earlier request.
+    pub prefix_hits: AtomicU64,
+    /// Unique prefixes that had to be ingested from scratch.
+    pub prefix_misses: AtomicU64,
     pub errors: Mutex<Vec<String>>,
 }
 
@@ -185,6 +194,15 @@ impl Metrics {
                 self.mean_decode_budget(),
             ));
         }
+        let forks = self.forks.load(Ordering::Relaxed);
+        let hits = self.prefix_hits.load(Ordering::Relaxed);
+        let misses = self.prefix_misses.load(Ordering::Relaxed);
+        if forks > 0 || hits > 0 || misses > 0 {
+            out.push_str(&format!(
+                "\nfanout: forks={forks} | prefix hits={hits} misses={misses} ({:.0}% reuse)",
+                100.0 * hits as f64 / (hits + misses).max(1) as f64,
+            ));
+        }
         out
     }
 }
@@ -228,5 +246,17 @@ mod tests {
         assert!(loud.contains("tokens generated: 2"));
         assert_eq!(m.decode_dense_steps.load(Ordering::Relaxed), 1);
         assert!((m.mean_decode_budget() - 0.625).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fanout_section_appears_once_forks_recorded() {
+        let m = Metrics::new();
+        assert!(!m.report(Duration::from_secs(1)).contains("fanout:"));
+        m.forks.fetch_add(4, Ordering::Relaxed);
+        m.prefix_misses.fetch_add(1, Ordering::Relaxed);
+        m.prefix_hits.fetch_add(3, Ordering::Relaxed);
+        let r = m.report(Duration::from_secs(1));
+        assert!(r.contains("fanout: forks=4"), "{r}");
+        assert!(r.contains("hits=3 misses=1 (75% reuse)"), "{r}");
     }
 }

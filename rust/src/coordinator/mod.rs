@@ -1,10 +1,13 @@
 //! L3 coordinator: the serving-system half of the reproduction.
 //!
 //! request → router/admission → dynamic batcher → dispatcher → worker
-//! pool → PJRT engine; plus the paged KV pool and metrics. Prefill
-//! requests and decode generations share the pool and the batcher, with
-//! decode steps continuously batched between prefill batches. See
-//! `server.rs` for the threading model.
+//! pool → PJRT engine; plus the shared paged KV store and metrics.
+//! Prefill requests and decode generations share the store and the
+//! batcher, with decode steps continuously batched between prefill
+//! batches. Generations route through refcounted prefix holders
+//! (shared-prefix fan-out: one ingest per unique prompt, N forked
+//! continuations diverging copy-on-write — `submit_generate_many`). See
+//! `server.rs` for the threading model and the prefix cache.
 
 pub mod admission;
 pub mod batcher;
@@ -14,4 +17,4 @@ pub mod request;
 pub mod server;
 
 pub use request::{GenerateRequest, GenerateResponse, Method, PrefillRequest, PrefillResponse};
-pub use server::{Coordinator, CoordinatorConfig};
+pub use server::{prompt_hash, Coordinator, CoordinatorConfig, PrefixIndex};

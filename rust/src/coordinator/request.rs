@@ -98,15 +98,25 @@ pub struct PrefillResponse {
     pub exec_us: u64,
 }
 
-/// An autoregressive generation request ([`crate::coordinator::Coordinator::submit_generate`]):
-/// prompt ingest followed by up to `max_new_tokens` policy-directed
-/// decode steps over the paged KV cache.
+/// An autoregressive generation request ([`crate::coordinator::Coordinator::submit_generate`]
+/// / `submit_generate_many`): prompt ingest followed by up to
+/// `max_new_tokens` policy-directed decode steps per branch over the
+/// paged KV cache.
 #[derive(Debug, Clone)]
 pub struct GenerateRequest {
+    /// Base id of the request: the prefix-holder sequence is `id`, the
+    /// branch sequences `id+1 ..= id+fanout`.
     pub id: u64,
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
     pub policy: DecodePolicy,
+    /// Continuations to serve off one shared prompt prefix (>= 1). The
+    /// prompt is prefilled once; every branch forks the refcounted
+    /// prefix and diverges copy-on-write.
+    pub fanout: usize,
+    /// `prompt_hash(&prompt)`, computed once at submit so the dispatcher
+    /// hot path does not re-hash long prompts.
+    pub prefix_hash: u64,
     pub enqueued: Instant,
 }
 

@@ -1,21 +1,37 @@
 //! The coordinator itself: router → admission → dynamic batcher →
-//! dispatcher → worker pool → PJRT engine, with a paged KV pool and
-//! serving metrics. This is the paper-as-a-system: the Stem budget enters
-//! through `Method::Stem` scalars on the prefill side and through the
-//! decode [`DecodePolicy`] on the generation side, and shows up as lower
-//! exec latency and budget fraction per request.
+//! dispatcher → worker pool → PJRT engine, with a shared paged KV store
+//! and serving metrics. This is the paper-as-a-system: the Stem budget
+//! enters through `Method::Stem` scalars on the prefill side and through
+//! the decode [`DecodePolicy`] on the generation side, and shows up as
+//! lower exec latency and budget fraction per request.
+//!
+//! Shared-prefix fan-out: Stem's core observation — initial tokens feed
+//! every later token's aggregation — makes the prompt prefix the most
+//! reused KV in the system, so generations route through a *prefix
+//! holder* session keyed by prompt hash: the first request ingests the
+//! prompt once, every branch (`submit_generate_many` / `fanout`) forks
+//! the refcounted prefix and diverges copy-on-write. Parked holders form
+//! a prefix cache (unpinned, LRU-evictable under page pressure, capped
+//! at [`MAX_PREFIX_HOLDERS`]); the [`PrefixIndex`] lets admission charge
+//! the ingest cost only to the first branch of a prefix that is not
+//! already resident.
 //!
 //! Threading model (std threads; see DESIGN.md §2 on tokio):
-//!   * callers enqueue via `submit` / `submit_generate` (mpsc into the
-//!     dispatcher)
+//!   * callers enqueue via `submit` / `submit_generate` /
+//!     `submit_generate_many` (mpsc into the dispatcher)
 //!   * one dispatcher thread forms batches (size-or-timeout, prefill and
-//!     decode lanes alternating — see `batcher`)
+//!     decode lanes alternating — see `batcher`) and owns the prefix
+//!     holders; prompt ingest runs on a worker and reports back via
+//!     `Msg::PrefixFilled`
 //!   * `workers` threads execute batch items on the shared PJRT engine;
 //!     decode steps advance their `DecodeSession` one token and then
 //!     re-enqueue themselves through the dispatcher (continuous
-//!     batching), so a long generation never monopolizes a worker
+//!     batching), so a long generation never monopolizes a worker —
+//!     sibling branches of one fan-out enter the decode lane together
+//!     and share a dispatch round
 //!   * completions flow back through per-request channels
 
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
@@ -25,16 +41,20 @@ use anyhow::{anyhow, Result};
 
 use super::admission::{Admission, AdmissionConfig, Admit};
 use super::batcher::{
-    AnyBatch, Batch, BatchKey, Batcher, BatcherConfig, DecodeLaneConfig, DecodeStep,
+    AnyBatch, BatchKey, Batcher, BatcherConfig, DecodeLaneConfig, DecodeStep,
 };
-use super::kv_cache::{KvCache, KvConfig};
+use super::kv_cache::{KvConfig, KvError};
 use super::metrics::Metrics;
 use super::request::{GenerateRequest, GenerateResponse, Method, PrefillRequest, PrefillResponse};
-use crate::decode::{DecodePolicy, DecodeSession, StepPlan, TinyLm};
+use crate::decode::{DecodeError, DecodePolicy, DecodeSession, SharedKv, StepPlan, TinyLm};
 use crate::model::vocab;
 use crate::runtime::Engine;
-use crate::sim::cost::{estimate_generate_ns, Geometry};
+use crate::sim::cost::{estimate_generate_ns, estimate_ingest_ns, Geometry};
 use crate::util::threadpool::ThreadPool;
+
+/// Parked prefix holders kept as a cache before the oldest are retired
+/// (their pages also yield to LRU eviction under pool pressure).
+const MAX_PREFIX_HOLDERS: usize = 32;
 
 pub struct CoordinatorConfig {
     pub workers: usize,
@@ -57,25 +77,85 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// FNV-1a over the token stream: the prefix identity used by the prefix
+/// cache and the admission-side [`PrefixIndex`].
+pub fn prompt_hash(prompt: &[i32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in prompt {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1_0000_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Prompt-hash → live-prefix set shared between the submit side (charge
+/// prefill once per unique prefix) and the dispatcher (which owns the
+/// entries: inserted when a holder starts ingesting, removed when it
+/// retires). Admission reads are advisory — a stale hit merely
+/// undercharges one request's estimate.
+#[derive(Default)]
+pub struct PrefixIndex {
+    live: Mutex<HashSet<u64>>,
+}
+
+impl PrefixIndex {
+    pub fn is_live(&self, hash: u64) -> bool {
+        self.live.lock().map(|s| s.contains(&hash)).unwrap_or(false)
+    }
+
+    fn insert(&self, hash: u64) {
+        if let Ok(mut s) = self.live.lock() {
+            s.insert(hash);
+        }
+    }
+
+    fn remove(&self, hash: u64) {
+        if let Ok(mut s) = self.live.lock() {
+            s.remove(&hash);
+        }
+    }
+
+    /// Live (resident or mid-ingest) cached prefixes.
+    pub fn len(&self) -> usize {
+        self.live.lock().map(|s| s.len()).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Admission share of one fan-out branch, released when it completes.
+#[derive(Debug, Clone, Copy)]
+struct BranchAdmit {
+    tokens: usize,
+    ns: f64,
+}
+
 enum Msg {
     Request(PrefillRequest, mpsc::Sender<Result<PrefillResponse>>),
-    /// The f64 is the admitted work estimate (ns) to release on completion.
-    Generate(GenerateRequest, mpsc::Sender<Result<GenerateResponse>>, f64),
+    /// One fan-out group: `req.fanout` branches over one shared prompt,
+    /// one response channel + admission share per branch.
+    Generate(GenerateRequest, Vec<mpsc::Sender<Result<GenerateResponse>>>, Vec<BranchAdmit>),
+    /// A prefix holder finished (or failed) its one-time prompt ingest
+    /// on a worker; the session comes back to be parked in the cache.
+    PrefixFilled { key: u64, session: Result<Box<DecodeSession>, String> },
     /// A generation finished a step and wants its next one scheduled.
     DecodeReady(u64),
     Shutdown,
 }
 
-/// One active generation owned by the dispatcher/worker handoff: the
-/// session leaves the map while its step runs and returns afterwards, so
-/// a sequence can never run two steps concurrently.
+/// One active generation branch owned by the dispatcher/worker handoff:
+/// the session leaves the map while its step runs and returns
+/// afterwards, so a sequence can never run two steps concurrently.
 struct DecodeTask {
     session: DecodeSession,
     ch: mpsc::Sender<Result<GenerateResponse>>,
-    prompt: Vec<i32>,
+    n_prompt: usize,
     max_new: usize,
     tokens: Vec<i32>,
-    prefilled: bool,
     enqueued: Instant,
     first_step_at: Option<Instant>,
     /// Admission bookkeeping to release on completion.
@@ -83,7 +163,30 @@ struct DecodeTask {
     admit_ns: f64,
 }
 
-type DecodeTasks = Arc<Mutex<std::collections::HashMap<u64, DecodeTask>>>;
+type DecodeTasks = Arc<Mutex<HashMap<u64, DecodeTask>>>;
+
+/// One branch of a fan-out group waiting to fork its prefix.
+struct BranchSpec {
+    seq: u64,
+    ch: mpsc::Sender<Result<GenerateResponse>>,
+    max_new: usize,
+    policy: DecodePolicy,
+    n_prompt: usize,
+    enqueued: Instant,
+    admit: BranchAdmit,
+}
+
+/// A prefix-holder entry: the session that ingested (or is ingesting)
+/// one unique prompt, plus branches queued while the ingest runs.
+struct Holder {
+    seq: u64,
+    prompt: Vec<i32>,
+    /// Parked after ingest; `None` while the prefill job runs on a worker.
+    session: Option<DecodeSession>,
+    waiting: Vec<BranchSpec>,
+    /// LRU clock for cap-retirement: bumped on creation and every hit.
+    last_used: u64,
+}
 
 pub struct Coordinator {
     engine: Arc<Engine>,
@@ -91,7 +194,8 @@ pub struct Coordinator {
     dispatcher: Option<thread::JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
     admission: Arc<Admission>,
-    kv: Arc<Mutex<KvCache>>,
+    kv: Arc<SharedKv>,
+    prefix_index: Arc<PrefixIndex>,
     decode_model: Arc<TinyLm>,
     geometry: Geometry,
     workers: usize,
@@ -104,14 +208,16 @@ impl Coordinator {
         let metrics = Arc::new(Metrics::new());
         let admission = Arc::new(Admission::new(cfg.admission));
         let m = &engine.manifest().model;
-        let kv = Arc::new(Mutex::new(KvCache::new(KvConfig {
-            total_pages: cfg.kv_pages,
-            page_tokens: m.block,
-        })));
         // decode stand-in LM shares the manifest geometry (see
         // decode::session docs); one attention layer today.
         let decode_model =
             Arc::new(TinyLm::new(0xD0C0DE, m.n_heads, m.n_kv_heads.max(1), m.d_head, m.vocab_size));
+        let kv = SharedKv::new(
+            KvConfig { total_pages: cfg.kv_pages, page_tokens: m.block },
+            decode_model.hk,
+            decode_model.dh,
+        );
+        let prefix_index = Arc::new(PrefixIndex::default());
         let geometry = Geometry {
             n_layers: 1,
             n_heads: m.n_heads,
@@ -127,6 +233,7 @@ impl Coordinator {
             let metrics = Arc::clone(&metrics);
             let admission = Arc::clone(&admission);
             let kv = Arc::clone(&kv);
+            let prefix_index = Arc::clone(&prefix_index);
             let decode_model = Arc::clone(&decode_model);
             let batcher_cfg = cfg.batcher.clone();
             let decode_cfg = cfg.decode_lane.clone();
@@ -140,6 +247,7 @@ impl Coordinator {
                     metrics,
                     admission,
                     kv,
+                    prefix_index,
                     decode_model,
                     batcher_cfg,
                     decode_cfg,
@@ -155,6 +263,7 @@ impl Coordinator {
             metrics,
             admission,
             kv,
+            prefix_index,
             decode_model,
             geometry,
             workers: cfg.workers,
@@ -171,6 +280,17 @@ impl Coordinator {
     /// the exact serving geometry).
     pub fn decode_model(&self) -> &Arc<TinyLm> {
         &self.decode_model
+    }
+
+    /// The shared paged KV store (pool + slabs) behind every decode
+    /// session and prefill reservation.
+    pub fn shared_kv(&self) -> &Arc<SharedKv> {
+        &self.kv
+    }
+
+    /// The live-prefix index (admission-side view of the prefix cache).
+    pub fn prefix_index(&self) -> &Arc<PrefixIndex> {
+        &self.prefix_index
     }
 
     /// Route + admit + enqueue. Returns the response channel, or an
@@ -220,28 +340,36 @@ impl Coordinator {
         rx.recv().map_err(|_| anyhow!("response channel closed"))?
     }
 
-    /// Submit an autoregressive generation: admit against the decode cost
-    /// model ([`estimate_generate_ns`]), then hand the prompt to the
-    /// dispatcher, which interleaves its decode steps with prefill
-    /// batches. The response arrives once on the returned channel.
-    pub fn submit_generate(
+    /// Submit `fanout` continuations of one prompt: the prompt is
+    /// ingested once into a prefix-holder session (reused across
+    /// requests with the same prompt), each branch forks the refcounted
+    /// prefix and decodes independently with copy-on-write divergence.
+    /// Admission charges the decode work per branch but the prefill work
+    /// once per unique prefix ([`estimate_ingest_ns`]), and not at all
+    /// when the prefix is already resident. Returns one response channel
+    /// per branch, in branch order.
+    pub fn submit_generate_many(
         &self,
         prompt: Vec<i32>,
         max_new_tokens: usize,
         policy: DecodePolicy,
-    ) -> Result<mpsc::Receiver<Result<GenerateResponse>>> {
+        fanout: usize,
+    ) -> Result<Vec<mpsc::Receiver<Result<GenerateResponse>>>> {
         policy.validate().map_err(|e| anyhow!("invalid decode policy: {e}"))?;
         if max_new_tokens == 0 {
             return Err(anyhow!("max_new_tokens must be >= 1"));
         }
+        if fanout == 0 {
+            return Err(anyhow!("fanout must be >= 1"));
+        }
         let n_tokens = prompt.len() + max_new_tokens;
-        // budget the whole generation's estimated work up front — a
-        // decode stream holds pages and a worker slice for its lifetime
+        // budget each branch's estimated work up front — a decode stream
+        // holds pages and a worker slice for its lifetime
         let budget = match policy.plan(n_tokens, 0, self.geometry.block) {
             StepPlan::Dense => None,
             StepPlan::Sparse { budget_blocks } => Some(budget_blocks as f64),
         };
-        let est_ns = estimate_generate_ns(
+        let full_ns = estimate_generate_ns(
             &self.geometry,
             prompt.len(),
             max_new_tokens,
@@ -249,26 +377,75 @@ impl Coordinator {
             policy.stride,
             self.workers,
         );
-        match self.admission.try_admit_work(n_tokens, est_ns) {
+        let ingest_ns = estimate_ingest_ns(&self.geometry, prompt.len());
+        let decode_ns = (full_ns - ingest_ns).max(0.0);
+        let prefix_hash = prompt_hash(&prompt);
+        // the one-time ingest is charged to the first branch only, and
+        // skipped entirely on a live prefix; totals are closed-form so
+        // the admission decision runs BEFORE any per-branch allocation
+        // (a huge fanout must reject cleanly, not OOM building vectors —
+        // `max_requests` bounds the group size)
+        let charge_ingest = !self.prefix_index.is_live(prefix_hash);
+        let Some(total_tokens) = fanout
+            .checked_mul(max_new_tokens)
+            .and_then(|t| t.checked_add(if charge_ingest { prompt.len() } else { 0 }))
+        else {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow!("rejected: fanout x max_new_tokens overflows"));
+        };
+        let total_ns = fanout as f64 * decode_ns + if charge_ingest { ingest_ns } else { 0.0 };
+        match self.admission.try_admit_work_n(fanout, total_tokens, total_ns) {
             Admit::Accepted => {}
             Admit::Rejected { reason } => {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 return Err(anyhow!("rejected: {reason}"));
             }
         }
+        let mut admits = Vec::with_capacity(fanout);
+        for i in 0..fanout {
+            let first = i == 0 && charge_ingest;
+            admits.push(BranchAdmit {
+                tokens: max_new_tokens + if first { prompt.len() } else { 0 },
+                ns: decode_ns + if first { ingest_ns } else { 0.0 },
+            });
+        }
+        // id block: holder seq = id, branch seqs = id+1 ..= id+fanout
+        let id = self.next_id.fetch_add(1 + fanout as u64, Ordering::Relaxed);
         let req = GenerateRequest {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            id,
             prompt,
             max_new_tokens,
             policy,
+            fanout,
+            prefix_hash,
             enqueued: Instant::now(),
         };
-        self.metrics.generates_submitted.fetch_add(1, Ordering::Relaxed);
-        let (rtx, rrx) = mpsc::channel();
+        self.metrics.generates_submitted.fetch_add(fanout as u64, Ordering::Relaxed);
+        let mut txs = Vec::with_capacity(fanout);
+        let mut rxs = Vec::with_capacity(fanout);
+        for _ in 0..fanout {
+            let (rtx, rrx) = mpsc::channel();
+            txs.push(rtx);
+            rxs.push(rrx);
+        }
         self.tx
-            .send(Msg::Generate(req, rtx, est_ns))
+            .send(Msg::Generate(req, txs, admits))
             .map_err(|_| anyhow!("coordinator stopped"))?;
-        Ok(rrx)
+        Ok(rxs)
+    }
+
+    /// Submit a single autoregressive generation (fan-out of one); the
+    /// response arrives once on the returned channel.
+    pub fn submit_generate(
+        &self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        policy: DecodePolicy,
+    ) -> Result<mpsc::Receiver<Result<GenerateResponse>>> {
+        Ok(self
+            .submit_generate_many(prompt, max_new_tokens, policy, 1)?
+            .pop()
+            .expect("fanout=1 yields exactly one channel"))
     }
 
     /// Synchronous convenience wrapper around [`Coordinator::submit_generate`].
@@ -288,16 +465,17 @@ impl Coordinator {
 
     /// Current KV page occupancy (used, total, fraction).
     pub fn kv_occupancy(&self) -> (usize, usize, f64) {
-        let kv = self.kv.lock().unwrap();
-        (kv.used_pages(), kv.total_pages(), kv.occupancy())
+        self.kv.occupancy()
     }
 
     pub fn report(&self) -> String {
         let (used, total, frac) = self.kv_occupancy();
         format!(
-            "{}\nkv pages: {used}/{total} in use ({:.1}%)",
+            "{}\nkv pages: {used}/{total} in use ({:.1}%) | slab pages resident: {} | cached prefixes: {}",
             self.metrics.report(self.uptime()),
-            100.0 * frac
+            100.0 * frac,
+            self.kv.pages_resident(),
+            self.prefix_index.len(),
         )
     }
 }
@@ -317,7 +495,8 @@ struct DispatcherCtx {
     engine: Arc<Engine>,
     metrics: Arc<Metrics>,
     admission: Arc<Admission>,
-    kv: Arc<Mutex<KvCache>>,
+    kv: Arc<SharedKv>,
+    prefix_index: Arc<PrefixIndex>,
     decode_model: Arc<TinyLm>,
     batcher_cfg: BatcherConfig,
     decode_cfg: DecodeLaneConfig,
@@ -332,6 +511,7 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
         metrics,
         admission,
         kv,
+        prefix_index,
         decode_model,
         batcher_cfg,
         decode_cfg,
@@ -339,18 +519,20 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
     } = ctx;
     let pool = ThreadPool::new(workers);
     let mut batcher = Batcher::with_decode(batcher_cfg.clone(), decode_cfg.clone());
-    let mut channels: std::collections::HashMap<u64, mpsc::Sender<Result<PrefillResponse>>> =
-        std::collections::HashMap::new();
-    let tasks: DecodeTasks = Arc::new(Mutex::new(std::collections::HashMap::new()));
-    // generations admitted but not yet completed (steps may be in flight
-    // outside both the batcher and the task map)
+    let mut channels: HashMap<u64, mpsc::Sender<Result<PrefillResponse>>> = HashMap::new();
+    let tasks: DecodeTasks = Arc::new(Mutex::new(HashMap::new()));
+    // prefix cache: holder sessions keyed by prompt hash (see module docs)
+    let mut holders: HashMap<u64, Holder> = HashMap::new();
+    let mut holder_clock: u64 = 0;
+    // generations admitted but not yet completed (branches may be queued
+    // on a filling holder, in the batcher, or running a step)
     let active_decodes = Arc::new(AtomicUsize::new(0));
     let shutdown = AtomicBool::new(false);
 
     loop {
         // 1. pull what's available (block briefly if nothing pending);
         //    while decode steps are in flight we must keep serving
-        //    DecodeReady messages even with an empty batcher
+        //    DecodeReady/PrefixFilled messages even with an empty batcher
         let draining = shutdown.load(Ordering::SeqCst);
         let idle = batcher.pending() == 0;
         let msg = if idle && !draining && active_decodes.load(Ordering::SeqCst) == 0 {
@@ -388,22 +570,189 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                     channels.insert(req.id, ch);
                     batcher.push(key, req);
                 }
-                Msg::Generate(req, ch, est_ns) => {
+                Msg::Generate(req, chs, admits) => {
+                    let n_prompt = req.prompt.len();
+                    let specs: Vec<BranchSpec> = chs
+                        .into_iter()
+                        .zip(admits)
+                        .enumerate()
+                        .map(|(i, (ch, admit))| BranchSpec {
+                            seq: req.id + 1 + i as u64,
+                            ch,
+                            max_new: req.max_new_tokens,
+                            policy: req.policy,
+                            n_prompt,
+                            enqueued: req.enqueued,
+                            admit,
+                        })
+                        .collect();
                     if shutdown.load(Ordering::SeqCst) {
-                        let _ = ch.send(Err(anyhow!("coordinator shutting down")));
-                        admission
-                            .release_work(req.prompt.len() + req.max_new_tokens, est_ns);
+                        for spec in specs {
+                            admission.release_work(spec.admit.tokens, spec.admit.ns);
+                            let _ = spec.ch.send(Err(anyhow!("coordinator shutting down")));
+                        }
                         continue;
                     }
-                    // on None the rejection already went out on the channel
-                    if let Some((seq, task)) =
-                        start_decode_task(&kv, &decode_model, &admission, req, ch, est_ns)
-                    {
-                        active_decodes.fetch_add(1, Ordering::SeqCst);
-                        let enqueued = task.enqueued;
-                        tasks.lock().unwrap().insert(seq, task);
-                        batcher.push_decode(DecodeStep { seq, enqueued });
+                    active_decodes.fetch_add(specs.len(), Ordering::SeqCst);
+                    let hash = req.prefix_hash;
+                    // hash collision with a cached *different* prompt:
+                    // bypass the cache under a synthetic single-use key
+                    let key = match holders.get(&hash) {
+                        Some(h) if h.prompt != req.prompt => {
+                            hash ^ req.id.rotate_left(17) ^ 0x9e37_79b9_7f4a_7c15
+                        }
+                        _ => hash,
+                    };
+                    enum Route {
+                        Hit,
+                        Filling,
+                        Refill,
+                        Miss,
                     }
+                    let route = match holders.get(&key) {
+                        None => Route::Miss,
+                        Some(h) => match &h.session {
+                            None => Route::Filling,
+                            // verify the parked prefix survived LRU pressure
+                            Some(_)
+                                if kv.seq_tokens(h.seq).ok().flatten() == Some(n_prompt) =>
+                            {
+                                Route::Hit
+                            }
+                            Some(_) => Route::Refill,
+                        },
+                    };
+                    match route {
+                        Route::Hit => {
+                            metrics.prefix_hits.fetch_add(specs.len() as u64, Ordering::Relaxed);
+                            // touch the holder so cap-retirement is LRU,
+                            // not FIFO — hot prefixes must stay cached
+                            holder_clock += 1;
+                            let holder = holders.get_mut(&key).unwrap();
+                            holder.last_used = holder_clock;
+                            let bounced = launch_branches(
+                                holder.session.as_ref().unwrap(),
+                                specs,
+                                &tasks,
+                                &mut batcher,
+                                &metrics,
+                                &admission,
+                                &active_decodes,
+                            );
+                            if !bounced.is_empty() {
+                                // the parked holder was evicted between the
+                                // freshness check and the fork: retire it
+                                // and re-ingest for the bounced branches
+                                metrics
+                                    .prefix_hits
+                                    .fetch_sub(bounced.len() as u64, Ordering::Relaxed);
+                                holders.remove(&key);
+                                prefix_index.remove(key);
+                                start_prefix_fill(
+                                    key,
+                                    req,
+                                    bounced,
+                                    &mut holders,
+                                    &mut holder_clock,
+                                    &prefix_index,
+                                    &kv,
+                                    &decode_model,
+                                    &metrics,
+                                    &admission,
+                                    &active_decodes,
+                                    &pool,
+                                    &tx,
+                                );
+                            }
+                        }
+                        Route::Filling => {
+                            // ingest already in flight: ride it for free
+                            metrics.prefix_hits.fetch_add(specs.len() as u64, Ordering::Relaxed);
+                            holders.get_mut(&key).unwrap().waiting.extend(specs);
+                        }
+                        Route::Refill => {
+                            // the parked prefix was evicted under pressure:
+                            // retire the stale holder and ingest afresh
+                            holders.remove(&key);
+                            prefix_index.remove(key);
+                            start_prefix_fill(
+                                key,
+                                req,
+                                specs,
+                                &mut holders,
+                                &mut holder_clock,
+                                &prefix_index,
+                                &kv,
+                                &decode_model,
+                                &metrics,
+                                &admission,
+                                &active_decodes,
+                                &pool,
+                                &tx,
+                            );
+                        }
+                        Route::Miss => start_prefix_fill(
+                            key,
+                            req,
+                            specs,
+                            &mut holders,
+                            &mut holder_clock,
+                            &prefix_index,
+                            &kv,
+                            &decode_model,
+                            &metrics,
+                            &admission,
+                            &active_decodes,
+                            &pool,
+                            &tx,
+                        ),
+                    }
+                }
+                Msg::PrefixFilled { key, session } => {
+                    if !holders.contains_key(&key) {
+                        // holder retired while filling; dropping `session`
+                        // (if Ok) closes the seq and frees its pages
+                        continue;
+                    }
+                    match session {
+                        Ok(sess) => {
+                            let holder = holders.get_mut(&key).unwrap();
+                            let specs = std::mem::take(&mut holder.waiting);
+                            let bounced = launch_branches(
+                                &sess,
+                                specs,
+                                &tasks,
+                                &mut batcher,
+                                &metrics,
+                                &admission,
+                                &active_decodes,
+                            );
+                            // the holder is still pinned here, so its seq
+                            // cannot have been evicted mid-fork
+                            for spec in bounced {
+                                fail_branch(
+                                    spec,
+                                    "prefix vanished during ingest".into(),
+                                    &metrics,
+                                    &admission,
+                                    &active_decodes,
+                                );
+                            }
+                            // park unpinned: the cached prefix yields to
+                            // live traffic under page pressure (forks
+                            // re-pin themselves)
+                            let _ = sess.unpin();
+                            holder.session = Some(*sess);
+                        }
+                        Err(msg) => {
+                            let holder = holders.remove(&key).unwrap();
+                            prefix_index.remove(key);
+                            for spec in holder.waiting {
+                                fail_branch(spec, msg.clone(), &metrics, &admission, &active_decodes);
+                            }
+                        }
+                    }
+                    retire_excess_holders(&mut holders, &prefix_index);
                 }
                 Msg::DecodeReady(seq) => {
                     batcher.push_decode(DecodeStep { seq, enqueued: Instant::now() });
@@ -485,41 +834,150 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
         }
     }
     pool.wait_idle();
+    // parked prefix holders drop here, freeing their cached pages
 }
 
-/// Build the decode session for an admitted generation; on failure the
-/// error goes straight back on the response channel (admission released).
-fn start_decode_task(
-    kv: &Arc<Mutex<KvCache>>,
-    model: &Arc<TinyLm>,
+/// Fail one branch: record, release its admission share, answer its
+/// channel, and retire it from the active count.
+fn fail_branch(
+    spec: BranchSpec,
+    msg: String,
+    metrics: &Arc<Metrics>,
     admission: &Arc<Admission>,
+    active: &Arc<AtomicUsize>,
+) {
+    metrics.record_error(msg.clone());
+    admission.release_work(spec.admit.tokens, spec.admit.ns);
+    let _ = spec.ch.send(Err(anyhow!(msg)));
+    active.fetch_sub(1, Ordering::SeqCst);
+}
+
+/// Fork every branch off the (prefilled) holder session and push their
+/// first decode steps into the lane as one sibling group. Returns the
+/// specs whose fork found the holder's sequence *gone* — a parked,
+/// unpinned holder can be LRU-evicted by a concurrent worker between
+/// the dispatcher's freshness check and the fork — so the caller can
+/// fall back to a fresh ingest instead of failing the request.
+fn launch_branches(
+    holder: &DecodeSession,
+    specs: Vec<BranchSpec>,
+    tasks: &DecodeTasks,
+    batcher: &mut Batcher,
+    metrics: &Arc<Metrics>,
+    admission: &Arc<Admission>,
+    active: &Arc<AtomicUsize>,
+) -> Vec<BranchSpec> {
+    let mut steps = Vec::with_capacity(specs.len());
+    let mut bounced = Vec::new();
+    for spec in specs {
+        match holder.fork(spec.seq) {
+            Ok(mut session) => {
+                session.set_policy(spec.policy);
+                metrics.forks.fetch_add(1, Ordering::Relaxed);
+                let task = DecodeTask {
+                    session,
+                    ch: spec.ch,
+                    n_prompt: spec.n_prompt,
+                    max_new: spec.max_new,
+                    tokens: Vec::new(),
+                    enqueued: spec.enqueued,
+                    first_step_at: None,
+                    admit_tokens: spec.admit.tokens,
+                    admit_ns: spec.admit.ns,
+                };
+                tasks.lock().unwrap().insert(spec.seq, task);
+                steps.push(DecodeStep { seq: spec.seq, enqueued: spec.enqueued });
+            }
+            Err(DecodeError::Kv(KvError::UnknownSeq(_))) => bounced.push(spec),
+            Err(e) => fail_branch(
+                spec,
+                format!("prefix fork failed: {e}"),
+                metrics,
+                admission,
+                active,
+            ),
+        }
+    }
+    batcher.push_decode_many(steps);
+    bounced
+}
+
+/// Start a fresh prefix holder: allocate its session now (cheap), run
+/// the one-time prompt ingest on a worker, report back via
+/// [`Msg::PrefixFilled`]. Branches queue on the holder meanwhile.
+#[allow(clippy::too_many_arguments)]
+fn start_prefix_fill(
+    key: u64,
     req: GenerateRequest,
-    ch: mpsc::Sender<Result<GenerateResponse>>,
-    est_ns: f64,
-) -> Option<(u64, DecodeTask)> {
-    let admit_tokens = req.prompt.len() + req.max_new_tokens;
-    let session =
-        DecodeSession::new(Arc::clone(kv), Arc::clone(model), req.policy, req.id);
-    match session {
-        Ok(session) => Some((
-            req.id,
-            DecodeTask {
-                session,
-                ch,
-                prompt: req.prompt,
-                max_new: req.max_new_tokens,
-                tokens: Vec::new(),
-                prefilled: false,
-                enqueued: req.enqueued,
-                first_step_at: None,
-                admit_tokens,
-                admit_ns: est_ns,
-            },
-        )),
-        Err(e) => {
-            admission.release_work(admit_tokens, est_ns);
-            let _ = ch.send(Err(anyhow!("kv allocation failed: {e}")));
-            None
+    specs: Vec<BranchSpec>,
+    holders: &mut HashMap<u64, Holder>,
+    holder_clock: &mut u64,
+    prefix_index: &Arc<PrefixIndex>,
+    kv: &Arc<SharedKv>,
+    model: &Arc<TinyLm>,
+    metrics: &Arc<Metrics>,
+    admission: &Arc<Admission>,
+    active: &Arc<AtomicUsize>,
+    pool: &ThreadPool,
+    tx: &mpsc::Sender<Msg>,
+) {
+    metrics.prefix_misses.fetch_add(1, Ordering::Relaxed);
+    // `mut`: the move closure below ingests through `&mut self`
+    let mut session =
+        match DecodeSession::new(Arc::clone(kv), Arc::clone(model), req.policy, req.id) {
+            Ok(s) => s,
+            Err(e) => {
+                let msg = format!("kv allocation failed: {e}");
+                for spec in specs {
+                    fail_branch(spec, msg.clone(), metrics, admission, active);
+                }
+                return;
+            }
+        };
+    *holder_clock += 1;
+    holders.insert(
+        key,
+        Holder {
+            seq: req.id,
+            prompt: req.prompt.clone(),
+            session: None,
+            waiting: specs,
+            last_used: *holder_clock,
+        },
+    );
+    prefix_index.insert(key);
+    let prompt = req.prompt;
+    let metrics = Arc::clone(metrics);
+    let tx = tx.clone();
+    pool.submit(move || {
+        let res = match session.prefill(&prompt) {
+            Ok(()) => {
+                metrics.tokens_in.fetch_add(prompt.len() as u64, Ordering::Relaxed);
+                Ok(Box::new(session))
+            }
+            Err(e) => Err(format!("prompt ingest failed: {e}")),
+        };
+        let _ = tx.send(Msg::PrefixFilled { key, session: res });
+    });
+}
+
+/// Retire the least-recently-used parked holders beyond
+/// [`MAX_PREFIX_HOLDERS`] (never one mid-ingest or with branches still
+/// waiting); dropping the session frees the prefix pages not shared
+/// with live forks.
+fn retire_excess_holders(holders: &mut HashMap<u64, Holder>, prefix_index: &Arc<PrefixIndex>) {
+    while holders.len() > MAX_PREFIX_HOLDERS {
+        let victim = holders
+            .iter()
+            .filter(|(_, h)| h.session.is_some() && h.waiting.is_empty())
+            .min_by_key(|(_, h)| h.last_used)
+            .map(|(&k, _)| k);
+        match victim {
+            Some(k) => {
+                holders.remove(&k);
+                prefix_index.remove(k);
+            }
+            None => break,
         }
     }
 }
@@ -549,16 +1007,6 @@ fn run_decode_step(
     };
     if task.first_step_at.is_none() {
         task.first_step_at = Some(Instant::now());
-    }
-    if !task.prefilled {
-        let prompt = std::mem::take(&mut task.prompt);
-        if let Err(e) = task.session.prefill(&prompt) {
-            finish(task, Err(anyhow!("prompt ingest failed: {e}")));
-            return;
-        }
-        metrics.tokens_in.fetch_add(prompt.len() as u64, Ordering::Relaxed);
-        task.prompt = prompt;
-        task.prefilled = true;
     }
     match task.session.step_once() {
         Ok(info) => {
@@ -602,7 +1050,7 @@ fn generate_response(seq: u64, task: &mut DecodeTask) -> GenerateResponse {
     GenerateResponse {
         id: seq,
         tokens: std::mem::take(&mut task.tokens),
-        n_prompt: task.prompt.len(),
+        n_prompt: task.n_prompt,
         steps,
         mean_budget_fraction: task.session.mean_budget_fraction(),
         dense_steps: task.session.dense_steps(),
@@ -614,7 +1062,7 @@ fn generate_response(seq: u64, task: &mut DecodeTask) -> GenerateResponse {
 
 fn execute_one(
     engine: &Engine,
-    kv: &Mutex<KvCache>,
+    kv: &SharedKv,
     kind: &'static str,
     bucket: usize,
     req: &PrefillRequest,
@@ -623,20 +1071,14 @@ fn execute_one(
     // KV pages for the prefilled sequence. Pure-prefill requests read the
     // logits back and release immediately; generations hold their pages
     // through a `DecodeSession` for the whole token stream instead.
-    {
-        let mut kv = kv.lock().unwrap();
-        kv.allocate(req.id, bucket)?;
-    }
+    kv.allocate(req.id, bucket)?;
     let mut ids = req.ids.clone();
     ids.resize(bucket, vocab::PAD);
     let t0 = Instant::now();
     let result = engine.prefill(&req.checkpoint, kind, bucket, &ids, &req.method.scalars());
     let exec_us = t0.elapsed().as_micros() as u64;
-    {
-        let mut kv = kv.lock().unwrap();
-        let _ = kv.release(req.id);
-        let _ = kv.drop_seq(req.id);
-    }
+    let _ = kv.release(req.id);
+    let _ = kv.drop_seq(req.id);
     let out = result?;
     Ok(PrefillResponse {
         id: req.id,
@@ -649,4 +1091,30 @@ fn execute_one(
         queue_us,
         exec_us,
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prompt_hash_distinguishes_prompts_not_order_of_calls() {
+        let a = prompt_hash(&[1, 2, 3]);
+        assert_eq!(a, prompt_hash(&[1, 2, 3]), "hash must be deterministic");
+        assert_ne!(a, prompt_hash(&[1, 2, 4]));
+        assert_ne!(a, prompt_hash(&[3, 2, 1]));
+        assert_ne!(prompt_hash(&[]), prompt_hash(&[0]));
+    }
+
+    #[test]
+    fn prefix_index_tracks_live_hashes() {
+        let ix = PrefixIndex::default();
+        assert!(ix.is_empty());
+        assert!(!ix.is_live(7));
+        ix.insert(7);
+        assert!(ix.is_live(7));
+        assert_eq!(ix.len(), 1);
+        ix.remove(7);
+        assert!(!ix.is_live(7));
+    }
 }

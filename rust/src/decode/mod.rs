@@ -12,21 +12,33 @@
 //! * [`sparse_decode`] — one attention step (`decode_attend`): plan →
 //!   decode-OAM block ranking → bounded-heap selection → single-query
 //!   online-softmax attention, all on the `sparse::attention` kernels.
+//! * [`store`] — [`SharedKv`]: the shared page-id-addressed K/V slab
+//!   store living alongside the coordinator's refcounted
+//!   [`crate::coordinator::kv_cache::KvCache`] identity pool, so forked
+//!   page tables alias real K/V payloads. Slab GC tracks the pool's
+//!   freed-page log exactly; poisoned locks surface as errors, not
+//!   panics.
 //! * [`session`] — [`DecodeSession`]: prompt ingest + token loop against
-//!   the shared [`crate::coordinator::kv_cache::KvCache`] page pool
-//!   (append, copy-on-write, growth across page boundaries), streaming
-//!   every token through a callback. [`TinyLm`] is the deterministic
-//!   reference LM standing in for per-step decode HLO modules.
+//!   the shared store (append, copy-on-write, growth across page
+//!   boundaries), streaming every token through a callback, plus
+//!   [`DecodeSession::fork`] — prefill once, serve N divergent
+//!   continuations off one refcounted prefix. [`TinyLm`] is the
+//!   deterministic reference LM standing in for per-step decode HLO
+//!   modules.
 //!
 //! The coordinator drives sessions through `Coordinator::submit_generate`
-//! with decode steps continuously batched between prefill batches; the
-//! `stem generate` subcommand and `examples/generate_stream.rs` drive a
-//! session directly (no artifacts needed).
+//! / `submit_generate_many` (shared-prefix fan-out) with decode steps
+//! continuously batched between prefill batches; the `stem generate`
+//! subcommand (`--fanout N`) and `examples/generate_stream.rs` /
+//! `examples/fanout_stream.rs` drive sessions directly (no artifacts
+//! needed).
 
 pub mod policy;
 pub mod session;
 pub mod sparse_decode;
+pub mod store;
 
 pub use policy::{DecodePolicy, StepPlan};
-pub use session::{DecodeSession, PagedKv, SeqKvView, SessionStats, StepInfo, TinyLm};
+pub use session::{DecodeError, DecodeSession, SessionStats, StepInfo, TinyLm};
 pub use sparse_decode::{decode_attend, decode_attend_dense_reference, DecodeAttnOut};
+pub use store::{PagedKv, SeqKvView, SharedKv};

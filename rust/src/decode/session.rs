@@ -1,14 +1,7 @@
-//! Autoregressive decode sessions over the paged KV cache.
+//! Autoregressive decode sessions over the shared paged KV store.
 //!
 //! Three pieces:
 //!
-//! * [`PagedKv`] — the slab store behind the page ids the coordinator's
-//!   [`KvCache`] hands out: one `[Hk, page_tokens, dh]` K and V slab per
-//!   page, allocated lazily on first write and copied on a
-//!   copy-on-write remap. The store is owned by its session (no locks on
-//!   the attention hot path); the *pool* — which bounds aggregate KV
-//!   memory, refcounts forked prefixes and evicts under pressure — is the
-//!   shared `KvCache`.
 //! * [`TinyLm`] — a deterministic seeded reference LM (embedding +
 //!   sinusoidal positions + tied-unembedding, single attention layer)
 //!   sharing the manifest geometry. The PJRT engine only lowers prefill
@@ -17,121 +10,40 @@
 //!   item and only replaces the projection calls here.
 //! * [`DecodeSession`] — ingests a prompt, then generates tokens one
 //!   step at a time: project q/k/v for the last token, append K/V into
-//!   pages ([`KvCache::append_tokens`] + slab writes), run the
-//!   policy-directed sparse/dense attention step, unembed, take the
-//!   argmax, and stream every token through a caller-supplied callback.
+//!   pages (pool append + shared slab writes), run the policy-directed
+//!   sparse/dense attention step, unembed, take the argmax, and stream
+//!   every token through a caller-supplied callback.
+//! * [`DecodeSession::fork`] — shared-prefix fan-out: a fork shares the
+//!   source's cached pages through the refcounted pool and the
+//!   [`SharedKv`](super::SharedKv) slab store; the first divergent
+//!   append copy-on-write remaps the shared tail, so N continuations of
+//!   one prompt pay the prefix KV once.
 //!
-//! A `SeqKvView` adapts (store, page table, token count) to the
-//! storage-agnostic `sparse::KvBlocks` trait the kernels consume — one
-//! attention block per page, the tail block partial.
+//! Errors: every pool/slab interaction goes through [`SharedKv`], which
+//! maps poisoned locks to `KvError::Poisoned`; sessions surface that as
+//! [`DecodeError`] instead of panicking, so one crashed fork never takes
+//! down its siblings.
 
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
-use crate::coordinator::kv_cache::{KvCache, KvError};
+use crate::coordinator::kv_cache::KvError;
 use crate::model::vocab;
-use crate::sparse::{KvBlocks, Tensor};
+use crate::sparse::Tensor;
 use crate::util::rng::Rng;
 
 use super::policy::DecodePolicy;
 use super::sparse_decode::decode_attend;
+use super::store::{SeqKvView, SharedKv};
 
-/// Per-page K/V slab store addressed by `KvCache` page ids (see module
-/// docs for the ownership split between store and pool).
-pub struct PagedKv {
-    page_tokens: usize,
-    hk: usize,
-    dh: usize,
-    k_pages: HashMap<u32, Box<[f32]>>,
-    v_pages: HashMap<u32, Box<[f32]>>,
-}
-
-impl PagedKv {
-    pub fn new(page_tokens: usize, hk: usize, dh: usize) -> Self {
-        PagedKv { page_tokens, hk, dh, k_pages: HashMap::new(), v_pages: HashMap::new() }
-    }
-
-    fn slab_len(&self) -> usize {
-        self.hk * self.page_tokens * self.dh
-    }
-
-    pub fn pages_resident(&self) -> usize {
-        self.k_pages.len()
-    }
-
-    /// Write one token's K/V rows (`[Hk·dh]` each) into `slot` of `page`.
-    pub fn write_token(&mut self, page: u32, slot: usize, k_rows: &[f32], v_rows: &[f32]) {
-        debug_assert!(slot < self.page_tokens);
-        debug_assert_eq!(k_rows.len(), self.hk * self.dh);
-        let len = self.slab_len();
-        let (pt, dh) = (self.page_tokens, self.dh);
-        for (pages, rows) in [(&mut self.k_pages, k_rows), (&mut self.v_pages, v_rows)] {
-            let slab = pages.entry(page).or_insert_with(|| vec![0.0f32; len].into_boxed_slice());
-            for hkv in 0..self.hk {
-                let off = (hkv * pt + slot) * dh;
-                slab[off..off + dh].copy_from_slice(&rows[hkv * dh..(hkv + 1) * dh]);
-            }
-        }
-    }
-
-    /// Copy-on-write support: duplicate `src`'s payload under `dst`
-    /// (called right after [`KvCache::append_tokens`] reports a remap).
-    pub fn copy_page(&mut self, src: u32, dst: u32) {
-        if let Some(s) = self.k_pages.get(&src).cloned() {
-            self.k_pages.insert(dst, s);
-        }
-        if let Some(s) = self.v_pages.get(&src).cloned() {
-            self.v_pages.insert(dst, s);
-        }
-    }
-}
-
-/// `sparse::KvBlocks` over (store, page table, token count): logical
-/// block `b` lives in page `table[b]`.
-pub struct SeqKvView<'a> {
-    pub store: &'a PagedKv,
-    pub table: &'a [u32],
-    pub n_tokens: usize,
-}
-
-impl SeqKvView<'_> {
-    fn slab<'s>(
-        &self,
-        pages: &'s HashMap<u32, Box<[f32]>>,
-        hkv: usize,
-        b: usize,
-    ) -> &'s [f32] {
-        let slab = &pages[&self.table[b]];
-        let off = hkv * self.store.page_tokens * self.store.dh;
-        &slab[off..off + self.block_len(b) * self.store.dh]
-    }
-}
-
-impl KvBlocks for SeqKvView<'_> {
-    fn n_tokens(&self) -> usize {
-        self.n_tokens
-    }
-
-    fn block_tokens(&self) -> usize {
-        self.store.page_tokens
-    }
-
-    fn n_kv_heads(&self) -> usize {
-        self.store.hk
-    }
-
-    fn head_dim(&self) -> usize {
-        self.store.dh
-    }
-
-    fn k_block(&self, hkv: usize, b: usize) -> &[f32] {
-        self.slab(&self.store.k_pages, hkv, b)
-    }
-
-    fn v_block(&self, hkv: usize, b: usize) -> &[f32] {
-        self.slab(&self.store.v_pages, hkv, b)
-    }
+/// Decode-subsystem error: today every failure is a KV-pool/store
+/// condition (capacity, unknown/duplicate sequences, poisoned shared
+/// locks); a dedicated type keeps the session API stable as non-KV
+/// failure modes (per-step HLO execution, sampling) arrive.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum DecodeError {
+    #[error("kv: {0}")]
+    Kv(#[from] KvError),
 }
 
 /// Deterministic seeded reference LM with the serving geometry (see
@@ -258,13 +170,13 @@ pub struct SessionStats {
     pub decode_ns: u64,
 }
 
-/// An autoregressive generation against the shared paged KV pool (see
+/// An autoregressive generation against the shared paged KV store (see
 /// module docs). The sequence stays pinned in the pool for the session's
-/// lifetime; `Drop` releases and frees its pages.
+/// lifetime (unless [`DecodeSession::unpin`] parks it as a prefix
+/// holder); `Drop` releases and frees its exclusively-owned pages.
 pub struct DecodeSession {
     seq: u64,
-    kv: Arc<Mutex<KvCache>>,
-    store: PagedKv,
+    kv: Arc<SharedKv>,
     model: Arc<TinyLm>,
     policy: DecodePolicy,
     page_tokens: usize,
@@ -279,24 +191,24 @@ pub struct DecodeSession {
 }
 
 impl DecodeSession {
-    /// Register `seq` in the pool (empty page table, pinned) and set up
-    /// the per-session store.
+    /// Register `seq` in the pool (empty page table, pinned) against the
+    /// shared store.
     pub fn new(
-        kv: Arc<Mutex<KvCache>>,
+        kv: Arc<SharedKv>,
         model: Arc<TinyLm>,
         policy: DecodePolicy,
         seq: u64,
-    ) -> Result<Self, KvError> {
-        let page_tokens = {
-            let mut g = kv.lock().unwrap();
-            g.allocate(seq, 0)?;
-            g.page_tokens()
-        };
-        let store = PagedKv::new(page_tokens, model.hk, model.dh);
+    ) -> Result<Self, DecodeError> {
+        debug_assert_eq!(
+            (model.hk, model.dh),
+            (kv.kv_heads(), kv.head_dim()),
+            "model geometry must match the shared store"
+        );
+        kv.allocate(seq, 0)?;
+        let page_tokens = kv.page_tokens();
         Ok(DecodeSession {
             seq,
             kv,
-            store,
             model,
             policy,
             page_tokens,
@@ -311,6 +223,47 @@ impl DecodeSession {
         })
     }
 
+    /// Fork a new session continuing this one's cached context: the fork
+    /// shares every page through the refcounted pool (no K/V copied) and
+    /// diverges lazily — its first append copy-on-write remaps the
+    /// shared tail. The fork inherits the context (token count, last
+    /// token) and policy, but its stream statistics and TPD step clock
+    /// restart at zero; it is pinned regardless of the source's pin
+    /// state. Intended use: prefill once, fork N times, serve N
+    /// continuations off one prefix.
+    pub fn fork(&self, new_seq: u64) -> Result<DecodeSession, DecodeError> {
+        let table = self.kv.fork(self.seq, new_seq)?;
+        Ok(DecodeSession {
+            seq: new_seq,
+            kv: Arc::clone(&self.kv),
+            model: Arc::clone(&self.model),
+            policy: self.policy,
+            page_tokens: self.page_tokens,
+            table,
+            n_ctx: self.n_ctx,
+            step: 0,
+            last_token: self.last_token,
+            budget_sum: 0.0,
+            dense_steps: 0,
+            decode_ns: 0,
+            closed: false,
+        })
+    }
+
+    /// Swap the per-step policy (a fork serving a different request may
+    /// carry different sparsity settings than the prefix holder).
+    pub fn set_policy(&mut self, policy: DecodePolicy) {
+        self.policy = policy;
+    }
+
+    /// Unpin the sequence without closing the session: parked prefix
+    /// holders yield to live traffic under page pressure. A later
+    /// [`DecodeSession::fork`] re-pins the fork itself.
+    pub fn unpin(&self) -> Result<(), DecodeError> {
+        self.kv.release(self.seq)?;
+        Ok(())
+    }
+
     pub fn seq_id(&self) -> u64 {
         self.seq
     }
@@ -323,26 +276,52 @@ impl DecodeSession {
         self.step
     }
 
-    fn append_kv(&mut self, k_rows: &[f32], v_rows: &[f32]) -> Result<(), KvError> {
+    /// The token the next step will condition on.
+    pub fn last_token(&self) -> i32 {
+        self.last_token
+    }
+
+    /// The model this session projects with.
+    pub fn model(&self) -> &Arc<TinyLm> {
+        &self.model
+    }
+
+    /// The shared store this session decodes against.
+    pub fn shared_kv(&self) -> &Arc<SharedKv> {
+        &self.kv
+    }
+
+    /// Run `f` against this session's current cached-KV view, holding
+    /// the shared slab read lock for the duration — benches and tests
+    /// use this to score kernels against oracles on the exact serving
+    /// state (forked tables included).
+    pub fn with_kv_view<R>(&self, f: impl FnOnce(&SeqKvView) -> R) -> Result<R, DecodeError> {
+        let slabs = self.kv.slabs()?;
+        let view = SeqKvView { store: &slabs, table: &self.table, n_tokens: self.n_ctx };
+        Ok(f(&view))
+    }
+
+    fn append_kv(&mut self, k_rows: &[f32], v_rows: &[f32]) -> Result<(), DecodeError> {
         let pos = self.n_ctx;
-        {
-            let mut g = self.kv.lock().unwrap();
-            let app = g.append_tokens(self.seq, 1)?;
-            if let Some((old, new)) = app.cow {
-                self.store.copy_page(old, new);
-            }
-            self.table.clear();
-            self.table.extend_from_slice(g.page_table(self.seq).expect("live seq"));
+        let app = self.kv.append_tokens(self.seq, 1)?;
+        // patch the cached table from the append delta instead of
+        // re-cloning the whole table every token
+        if let Some((old, new)) = app.cow {
+            let slot = pos / self.page_tokens;
+            debug_assert_eq!(self.table[slot], old, "CoW remap must hit our tail page");
+            self.table[slot] = new;
         }
+        self.table.extend_from_slice(&app.grown);
         let page = self.table[pos / self.page_tokens];
-        self.store.write_token(page, pos % self.page_tokens, k_rows, v_rows);
+        self.kv.write_token(page, pos % self.page_tokens, k_rows, v_rows)?;
         self.n_ctx = pos + 1;
         Ok(())
     }
 
     /// Ingest the prompt: append K/V for every prompt token (no
-    /// attention output is needed until the first generated token).
-    pub fn prefill(&mut self, prompt: &[i32]) -> Result<(), KvError> {
+    /// attention output is needed until the first generated token). Also
+    /// used on a fork to inject a divergence suffix before generating.
+    pub fn prefill(&mut self, prompt: &[i32]) -> Result<(), DecodeError> {
         for &t in prompt {
             let (_, k, v) = self.model.project(t, self.n_ctx, false);
             self.append_kv(&k, &v)?;
@@ -356,14 +335,19 @@ impl DecodeSession {
     /// One decode step: project the last token, append its K/V into the
     /// paged cache, attend under the policy, unembed and pick the next
     /// token greedily.
-    pub fn step_once(&mut self) -> Result<StepInfo, KvError> {
+    pub fn step_once(&mut self) -> Result<StepInfo, DecodeError> {
         let t0 = Instant::now();
         let pos = self.n_ctx;
         let (q, k, v) = self.model.project(self.last_token, pos, true);
         self.append_kv(&k, &v)?;
         let q = Tensor::from_vec(&[self.model.h, self.model.dh], q.expect("with_q"));
-        let view = SeqKvView { store: &self.store, table: &self.table, n_tokens: self.n_ctx };
-        let att = decode_attend(&q, &view, &self.policy, self.step);
+        let att = {
+            // hold the slab read lock only for the attention step itself;
+            // sibling forks attend concurrently under the same read lock
+            let slabs = self.kv.slabs()?;
+            let view = SeqKvView { store: &*slabs, table: &self.table, n_tokens: self.n_ctx };
+            decode_attend(&q, &view, &self.policy, self.step)
+        };
         let logits = self.model.logits(&att.out);
         let token = TinyLm::argmax(&logits);
         let step_ns = t0.elapsed().as_nanos() as u64;
@@ -391,7 +375,7 @@ impl DecodeSession {
         max_new: usize,
         stop_token: Option<i32>,
         mut on_token: impl FnMut(&StepInfo) -> bool,
-    ) -> Result<SessionStats, KvError> {
+    ) -> Result<SessionStats, DecodeError> {
         let mut tokens = Vec::with_capacity(max_new);
         for _ in 0..max_new {
             let info = self.step_once()?;
@@ -426,16 +410,16 @@ impl DecodeSession {
         self.decode_ns
     }
 
-    /// Release the sequence and free its pages; idempotent (also runs on
-    /// `Drop`).
+    /// Release the sequence and free its exclusively-owned pages;
+    /// idempotent (also runs on `Drop`). Pages shared with live forks
+    /// survive through their refcounts.
     pub fn close(&mut self) {
         if self.closed {
             return;
         }
         self.closed = true;
-        let mut g = self.kv.lock().unwrap();
-        let _ = g.release(self.seq);
-        let _ = g.drop_seq(self.seq);
+        let _ = self.kv.release(self.seq);
+        let _ = self.kv.drop_seq(self.seq);
     }
 }
 
@@ -449,9 +433,10 @@ impl Drop for DecodeSession {
 mod tests {
     use super::*;
     use crate::coordinator::kv_cache::KvConfig;
+    use crate::decode::decode_attend_dense_reference;
 
-    fn pool(pages: usize, page_tokens: usize) -> Arc<Mutex<KvCache>> {
-        Arc::new(Mutex::new(KvCache::new(KvConfig { total_pages: pages, page_tokens })))
+    fn pool(pages: usize, page_tokens: usize) -> Arc<SharedKv> {
+        SharedKv::new(KvConfig { total_pages: pages, page_tokens }, 2, 8)
     }
 
     fn model() -> Arc<TinyLm> {
@@ -468,8 +453,7 @@ mod tests {
     fn generation_is_deterministic_and_in_vocab() {
         let run = || {
             let kv = pool(64, 16);
-            let mut s =
-                DecodeSession::new(kv, model(), DecodePolicy::default(), 1).unwrap();
+            let mut s = DecodeSession::new(kv, model(), DecodePolicy::default(), 1).unwrap();
             s.prefill(&prompt(40)).unwrap();
             s.generate(12, None, |_| true).unwrap().tokens
         };
@@ -485,13 +469,14 @@ mod tests {
         let mut s =
             DecodeSession::new(Arc::clone(&kv), model(), DecodePolicy::default(), 9).unwrap();
         s.prefill(&prompt(33)).unwrap(); // 33 tokens -> 3 pages of 16
-        assert_eq!(kv.lock().unwrap().page_table(9).unwrap().len(), 3);
+        assert_eq!(kv.pool().unwrap().page_table(9).unwrap().len(), 3);
         s.generate(16, None, |_| true).unwrap(); // 49 tokens -> 4 pages
-        assert_eq!(kv.lock().unwrap().page_table(9).unwrap().len(), 4);
-        assert_eq!(kv.lock().unwrap().seq_tokens(9), Some(49));
-        kv.lock().unwrap().check_invariants().unwrap();
+        assert_eq!(kv.pool().unwrap().page_table(9).unwrap().len(), 4);
+        assert_eq!(kv.seq_tokens(9).unwrap(), Some(49));
+        kv.pool().unwrap().check_invariants().unwrap();
         drop(s);
-        assert_eq!(kv.lock().unwrap().used_pages(), 0, "drop must free the pages");
+        assert_eq!(kv.pool().unwrap().used_pages(), 0, "drop must free the pages");
+        assert_eq!(kv.pages_resident(), 0, "drop must GC the slabs");
     }
 
     #[test]
@@ -547,5 +532,117 @@ mod tests {
         s.prefill(&[]).unwrap();
         let st = s.generate(3, None, |_| true).unwrap();
         assert_eq!(st.steps, 3);
+    }
+
+    // --- shared-prefix fork -------------------------------------------
+
+    #[test]
+    fn fork_matches_independent_session_exactly() {
+        // a fork must behave exactly like a fresh session that prefilled
+        // the same prompt: same stream, same per-step budget plan
+        let kv = pool(256, 16);
+        let p = prompt(48);
+        let mut root =
+            DecodeSession::new(Arc::clone(&kv), model(), DecodePolicy::default(), 1).unwrap();
+        root.prefill(&p).unwrap();
+        let mut forked = root.fork(2).unwrap();
+        let mut indep =
+            DecodeSession::new(Arc::clone(&kv), model(), DecodePolicy::default(), 3).unwrap();
+        indep.prefill(&p).unwrap();
+        let a = forked.generate(10, None, |_| true).unwrap().tokens;
+        let b = indep.generate(10, None, |_| true).unwrap().tokens;
+        assert_eq!(a, b, "fork and independent session must agree token-for-token");
+        kv.pool().unwrap().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_shares_prefix_pages_and_diverges_by_cow() {
+        let kv = pool(256, 16);
+        let p = prompt(40); // 3 pages (40 tokens / 16), tail partial
+        let mut root =
+            DecodeSession::new(Arc::clone(&kv), model(), DecodePolicy::default(), 1).unwrap();
+        root.prefill(&p).unwrap();
+        let before = kv.pool().unwrap().used_pages();
+        assert_eq!(before, 3);
+        let mut forks: Vec<DecodeSession> =
+            (0..4).map(|i| root.fork(10 + i as u64).unwrap()).collect();
+        assert_eq!(kv.pool().unwrap().used_pages(), 3, "forks alias, not copy");
+        // diverge each fork with a distinct steering token, then generate
+        let mut streams = vec![];
+        for (i, f) in forks.iter_mut().enumerate() {
+            f.prefill(&[vocab::WORD0 + i as i32]).unwrap();
+            streams.push(f.generate(6, None, |_| true).unwrap().tokens);
+        }
+        // CoW isolation both ways: each fork equals an independent session
+        // with the same steered prompt, and the root stays untouched
+        for (i, stream) in streams.iter().enumerate() {
+            let kv2 = pool(256, 16);
+            let mut c = DecodeSession::new(kv2, model(), DecodePolicy::default(), 1).unwrap();
+            c.prefill(&p).unwrap();
+            c.prefill(&[vocab::WORD0 + i as i32]).unwrap();
+            let want = c.generate(6, None, |_| true).unwrap().tokens;
+            assert_eq!(stream, &want, "fork {i} deviates from its independent twin");
+        }
+        let control = {
+            let kv2 = pool(256, 16);
+            let mut c = DecodeSession::new(kv2, model(), DecodePolicy::default(), 1).unwrap();
+            c.prefill(&p).unwrap();
+            c.generate(6, None, |_| true).unwrap().tokens
+        };
+        let root_stream = root.generate(6, None, |_| true).unwrap().tokens;
+        assert_eq!(root_stream, control, "forks must never leak into the root");
+        // page accounting: shared prefix counted once + per-fork tails
+        let used = kv.pool().unwrap().used_pages();
+        let independent_equiv = 5 * 3 + 5; // 5 sessions x 3 prefix pages + ~1 tail each
+        assert!(
+            used < independent_equiv / 2,
+            "fan-out must at least halve page residency: {used} vs {independent_equiv}"
+        );
+        kv.pool().unwrap().check_invariants().unwrap();
+        drop(forks);
+        drop(root);
+        assert_eq!(kv.pool().unwrap().used_pages(), 0);
+        assert_eq!(kv.pages_resident(), 0);
+    }
+
+    #[test]
+    fn forked_dense_step_matches_dense_oracle() {
+        // sparse-vs-dense parity must hold on a *forked* session's view
+        let kv = pool(256, 16);
+        let m = model();
+        let mut root =
+            DecodeSession::new(Arc::clone(&kv), Arc::clone(&m), DecodePolicy::dense(), 1).unwrap();
+        root.prefill(&prompt(80)).unwrap();
+        let mut fork = root.fork(2).unwrap();
+        fork.prefill(&[vocab::WORD0 + 7]).unwrap();
+        // project the fork's next query and compare kernel vs oracle on
+        // the exact view the step would use
+        let (q, k, v) = m.project(vocab::WORD0 + 7, fork.n_ctx(), true);
+        let _ = (k, v);
+        let q = Tensor::from_vec(&[m.h, m.dh], q.unwrap());
+        let slabs = kv.slabs().unwrap();
+        let view = SeqKvView { store: &*slabs, table: &fork.table, n_tokens: fork.n_ctx() };
+        let att = decode_attend(&q, &view, &DecodePolicy::dense(), 0);
+        let oracle = decode_attend_dense_reference(&q, &view);
+        let d = att
+            .out
+            .iter()
+            .zip(&oracle)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(d < 1e-5, "forked dense step deviates from oracle by {d}");
+    }
+
+    #[test]
+    fn poisoned_store_surfaces_as_decode_error() {
+        let kv = pool(16, 16);
+        let kv2 = Arc::clone(&kv);
+        let _ = std::thread::spawn(move || {
+            let _g = kv2.pool().unwrap();
+            panic!("poison the shared pool");
+        })
+        .join();
+        let err = DecodeSession::new(kv, model(), DecodePolicy::default(), 1).unwrap_err();
+        assert_eq!(err, DecodeError::Kv(KvError::Poisoned));
     }
 }

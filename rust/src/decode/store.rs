@@ -1,0 +1,387 @@
+//! Shared K/V slab storage behind the paged cache's page ids.
+//!
+//! The coordinator's [`KvCache`] manages page *identity* — tables,
+//! refcounts, copy-on-write remaps, eviction. This module owns the page
+//! *payloads* and glues the two together so forked sequences alias real
+//! K/V data, not just bookkeeping ids:
+//!
+//! * [`PagedKv`] — the raw slab map: one `[Hk, page_tokens, dh]` K and V
+//!   slab per page id, allocated lazily on first write and duplicated on
+//!   a copy-on-write remap.
+//! * [`SharedKv`] — one instance per serving pool, shared by every
+//!   [`crate::decode::DecodeSession`] (and their forks): the identity
+//!   pool behind a `Mutex`, the slabs behind a `RwLock` so concurrent
+//!   sessions attend (read) in parallel while appends (write) stay
+//!   exclusive. Every pool mutation drains [`KvCache::take_freed`] and
+//!   drops the retired slabs, so slab residency tracks live pages
+//!   exactly even when eviction fires deep inside an append. Poisoned
+//!   locks surface as [`KvError::Poisoned`] instead of panicking — one
+//!   crashed session must not take down the siblings sharing the store.
+//! * [`SeqKvView`] — adapts (slab store, page table, token count) to the
+//!   storage-agnostic [`KvBlocks`] trait the single-query kernels
+//!   consume: logical attention block `b` lives in page `table[b]`, the
+//!   tail block partial.
+//!
+//! Lock order is always pool → slabs; nothing acquires them in the
+//! opposite direction, so the pair cannot deadlock.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+use crate::coordinator::kv_cache::{Append, KvCache, KvConfig, KvError};
+use crate::sparse::KvBlocks;
+
+/// Per-page K/V slab map addressed by [`KvCache`] page ids (see module
+/// docs for the identity/payload split).
+pub struct PagedKv {
+    page_tokens: usize,
+    hk: usize,
+    dh: usize,
+    k_pages: HashMap<u32, Box<[f32]>>,
+    v_pages: HashMap<u32, Box<[f32]>>,
+}
+
+impl PagedKv {
+    pub fn new(page_tokens: usize, hk: usize, dh: usize) -> Self {
+        PagedKv { page_tokens, hk, dh, k_pages: HashMap::new(), v_pages: HashMap::new() }
+    }
+
+    fn slab_len(&self) -> usize {
+        self.hk * self.page_tokens * self.dh
+    }
+
+    pub fn pages_resident(&self) -> usize {
+        self.k_pages.len()
+    }
+
+    /// Write one token's K/V rows (`[Hk·dh]` each) into `slot` of `page`.
+    pub fn write_token(&mut self, page: u32, slot: usize, k_rows: &[f32], v_rows: &[f32]) {
+        debug_assert!(slot < self.page_tokens);
+        debug_assert_eq!(k_rows.len(), self.hk * self.dh);
+        let len = self.slab_len();
+        let (pt, dh) = (self.page_tokens, self.dh);
+        for (pages, rows) in [(&mut self.k_pages, k_rows), (&mut self.v_pages, v_rows)] {
+            let slab = pages.entry(page).or_insert_with(|| vec![0.0f32; len].into_boxed_slice());
+            for hkv in 0..self.hk {
+                let off = (hkv * pt + slot) * dh;
+                slab[off..off + dh].copy_from_slice(&rows[hkv * dh..(hkv + 1) * dh]);
+            }
+        }
+    }
+
+    /// Copy-on-write support: duplicate `src`'s payload under `dst`
+    /// (called right after [`KvCache::append_tokens`] reports a remap).
+    pub fn copy_page(&mut self, src: u32, dst: u32) {
+        if let Some(s) = self.k_pages.get(&src).cloned() {
+            self.k_pages.insert(dst, s);
+        }
+        if let Some(s) = self.v_pages.get(&src).cloned() {
+            self.v_pages.insert(dst, s);
+        }
+    }
+
+    /// Drop the payload of a retired page id (its pool refcount hit 0).
+    pub fn drop_page(&mut self, page: u32) {
+        self.k_pages.remove(&page);
+        self.v_pages.remove(&page);
+    }
+}
+
+/// [`KvBlocks`] over (slab store, page table, token count): logical
+/// block `b` lives in page `table[b]`.
+pub struct SeqKvView<'a> {
+    pub store: &'a PagedKv,
+    pub table: &'a [u32],
+    pub n_tokens: usize,
+}
+
+impl SeqKvView<'_> {
+    fn slab<'s>(&self, pages: &'s HashMap<u32, Box<[f32]>>, hkv: usize, b: usize) -> &'s [f32] {
+        let slab = pages
+            .get(&self.table[b])
+            .expect("slab missing for a resident page (GC/table invariant broken)");
+        let off = hkv * self.store.page_tokens * self.store.dh;
+        &slab[off..off + self.block_len(b) * self.store.dh]
+    }
+}
+
+impl KvBlocks for SeqKvView<'_> {
+    fn n_tokens(&self) -> usize {
+        self.n_tokens
+    }
+
+    fn block_tokens(&self) -> usize {
+        self.store.page_tokens
+    }
+
+    fn n_kv_heads(&self) -> usize {
+        self.store.hk
+    }
+
+    fn head_dim(&self) -> usize {
+        self.store.dh
+    }
+
+    fn k_block(&self, hkv: usize, b: usize) -> &[f32] {
+        self.slab(&self.store.k_pages, hkv, b)
+    }
+
+    fn v_block(&self, hkv: usize, b: usize) -> &[f32] {
+        self.slab(&self.store.v_pages, hkv, b)
+    }
+}
+
+/// The shared serving KV: identity pool + slab payloads under one roof
+/// (see module docs). All methods map poisoned locks to
+/// [`KvError::Poisoned`].
+pub struct SharedKv {
+    page_tokens: usize,
+    total_pages: usize,
+    hk: usize,
+    dh: usize,
+    pool: Mutex<KvCache>,
+    slabs: RwLock<PagedKv>,
+}
+
+impl SharedKv {
+    /// Build a pool + slab store for `hk` kv-heads of dimension `dh`.
+    pub fn new(cfg: KvConfig, hk: usize, dh: usize) -> Arc<SharedKv> {
+        let (page_tokens, total_pages) = (cfg.page_tokens, cfg.total_pages);
+        Arc::new(SharedKv {
+            page_tokens,
+            total_pages,
+            hk,
+            dh,
+            slabs: RwLock::new(PagedKv::new(page_tokens, hk, dh)),
+            pool: Mutex::new(KvCache::new(cfg)),
+        })
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.total_pages
+    }
+
+    pub fn kv_heads(&self) -> usize {
+        self.hk
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.dh
+    }
+
+    /// Lock the identity pool directly (invariant checks, stats, tests).
+    pub fn pool(&self) -> Result<MutexGuard<'_, KvCache>, KvError> {
+        self.pool.lock().map_err(|_| KvError::Poisoned)
+    }
+
+    /// Read-lock the slab store — the attention step holds this guard
+    /// while a [`SeqKvView`] borrows from it.
+    pub fn slabs(&self) -> Result<RwLockReadGuard<'_, PagedKv>, KvError> {
+        self.slabs.read().map_err(|_| KvError::Poisoned)
+    }
+
+    fn slabs_mut(&self) -> Result<RwLockWriteGuard<'_, PagedKv>, KvError> {
+        self.slabs.write().map_err(|_| KvError::Poisoned)
+    }
+
+    /// Drop slabs of pages the pool retired. MUST run while the caller
+    /// still holds the pool lock: a freed page id has to be scrubbed
+    /// before the pool can hand it to a concurrent `allocate`/`append`,
+    /// or the late GC would destroy the new owner's fresh slab. Lock
+    /// order is pool → slabs everywhere, the read side (attention views)
+    /// takes slabs alone, so this cannot deadlock.
+    fn gc_locked(&self, _pool: &mut KvCache, freed: Vec<u32>) -> Result<(), KvError> {
+        if freed.is_empty() {
+            return Ok(());
+        }
+        let mut slabs = self.slabs_mut()?;
+        for p in freed {
+            slabs.drop_page(p);
+        }
+        Ok(())
+    }
+
+    /// Pool `allocate` + slab GC; returns the new page table.
+    pub fn allocate(&self, seq: u64, n_tokens: usize) -> Result<Vec<u32>, KvError> {
+        let mut pool = self.pool()?;
+        let res = pool.allocate(seq, n_tokens).map(<[u32]>::to_vec);
+        let freed = pool.take_freed();
+        self.gc_locked(&mut pool, freed)?;
+        res
+    }
+
+    /// Pool `fork` + pin: the new sequence shares `src`'s pages and is
+    /// pinned regardless of the source's pin state — forks are taken to
+    /// decode, and an active decode must not be LRU-evicted even when its
+    /// prefix holder has been released. Returns the fork's page table.
+    pub fn fork(&self, src: u64, dst: u64) -> Result<Vec<u32>, KvError> {
+        let mut pool = self.pool()?;
+        pool.fork(src, dst)?;
+        pool.pin(dst)?;
+        Ok(pool.page_table(dst).expect("fork target is live").to_vec())
+    }
+
+    /// Pool `append_tokens` + slab bookkeeping, all under the pool lock:
+    /// GCs pages freed by any eviction *before* duplicating the CoW tail
+    /// payload (an evicted page id may be the very page the CoW lands
+    /// on). Returns the append outcome; callers patch their cached page
+    /// table from the `cow`/`grown` delta — the common no-eviction,
+    /// no-CoW append never touches the slab write lock, so sibling
+    /// attention readers stay unblocked.
+    pub fn append_tokens(&self, seq: u64, extra: usize) -> Result<Append, KvError> {
+        let mut pool = self.pool()?;
+        let res = pool.append_tokens(seq, extra);
+        let freed = pool.take_freed();
+        let cow = res.as_ref().ok().and_then(|app| app.cow);
+        if !freed.is_empty() || cow.is_some() {
+            let mut slabs = self.slabs_mut()?;
+            for p in freed {
+                slabs.drop_page(p);
+            }
+            if let Some((old, new)) = cow {
+                slabs.copy_page(old, new);
+            }
+        }
+        res
+    }
+
+    /// Unpin a sequence (it becomes LRU-evictable).
+    pub fn release(&self, seq: u64) -> Result<(), KvError> {
+        self.pool()?.release(seq)
+    }
+
+    /// Drop a sequence + GC its exclusively-owned slabs.
+    pub fn drop_seq(&self, seq: u64) -> Result<usize, KvError> {
+        let mut pool = self.pool()?;
+        let res = pool.drop_seq(seq);
+        let freed = pool.take_freed();
+        self.gc_locked(&mut pool, freed)?;
+        res
+    }
+
+    /// Cached token count of a sequence (`None` if unknown/evicted).
+    pub fn seq_tokens(&self, seq: u64) -> Result<Option<usize>, KvError> {
+        Ok(self.pool()?.seq_tokens(seq))
+    }
+
+    /// Write one token's K/V rows into the shared slabs.
+    pub fn write_token(
+        &self,
+        page: u32,
+        slot: usize,
+        k_rows: &[f32],
+        v_rows: &[f32],
+    ) -> Result<(), KvError> {
+        self.slabs_mut()?.write_token(page, slot, k_rows, v_rows);
+        Ok(())
+    }
+
+    /// Slab pages currently materialized (≤ pool `used_pages`: slabs are
+    /// lazy and prefill-only page reservations never write any).
+    pub fn pages_resident(&self) -> usize {
+        self.slabs.read().map(|s| s.pages_resident()).unwrap_or(0)
+    }
+
+    /// Pool occupancy `(used, total, fraction)`; zeros-used on a poisoned
+    /// pool so the metrics path never panics.
+    pub fn occupancy(&self) -> (usize, usize, f64) {
+        match self.pool.lock() {
+            Ok(p) => (p.used_pages(), p.total_pages(), p.occupancy()),
+            Err(_) => (0, self.total_pages, 0.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shared(pages: usize, page_tokens: usize) -> Arc<SharedKv> {
+        SharedKv::new(KvConfig { total_pages: pages, page_tokens }, 2, 4)
+    }
+
+    fn rows(tag: f32, hk: usize, dh: usize) -> Vec<f32> {
+        (0..hk * dh).map(|i| tag + i as f32).collect()
+    }
+
+    #[test]
+    fn slabs_gc_with_pool_lifecycle() {
+        let kv = shared(8, 4);
+        let table = kv.allocate(1, 4).unwrap();
+        assert_eq!(table.len(), 1);
+        kv.write_token(table[0], 0, &rows(1.0, 2, 4), &rows(2.0, 2, 4)).unwrap();
+        assert_eq!(kv.pages_resident(), 1);
+        kv.release(1).unwrap();
+        kv.drop_seq(1).unwrap();
+        assert_eq!(kv.pages_resident(), 0, "dropping the seq must GC its slabs");
+        kv.pool().unwrap().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_pins_and_shares_slabs() {
+        let kv = shared(8, 4);
+        let table = kv.allocate(1, 6).unwrap(); // 2 pages, tail partial
+        for (slot, page) in [(0, table[0]), (1, table[0]), (0, table[1])] {
+            kv.write_token(page, slot, &rows(3.0, 2, 4), &rows(4.0, 2, 4)).unwrap();
+        }
+        kv.release(1).unwrap(); // holder-style: unpinned source
+        let ftable = kv.fork(1, 2).unwrap();
+        assert_eq!(ftable, table, "fork aliases the source pages");
+        assert_eq!(kv.pages_resident(), 2, "no payload duplication on fork");
+        // the fork is pinned: pressure evicts the unpinned source's entry
+        // (its shared pages stay, refcounted by the fork), never the fork
+        let err = kv.allocate(3, 28).unwrap_err(); // 7 pages > 6 free, nothing freeable
+        assert!(matches!(err, KvError::OutOfPages { .. }));
+        assert!(kv.seq_tokens(1).unwrap().is_none(), "unpinned source evicted");
+        assert_eq!(kv.seq_tokens(2).unwrap(), Some(6), "pinned fork survives");
+        // shared pages stayed resident because the fork still references them
+        assert_eq!(kv.pages_resident(), 2);
+        kv.pool().unwrap().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn append_cow_duplicates_payload_then_diverges() {
+        let kv = shared(8, 4);
+        let table = kv.allocate(1, 2).unwrap(); // 1 page, 2 tokens
+        kv.write_token(table[0], 0, &rows(1.0, 2, 4), &rows(1.5, 2, 4)).unwrap();
+        kv.write_token(table[0], 1, &rows(2.0, 2, 4), &rows(2.5, 2, 4)).unwrap();
+        kv.fork(1, 2).unwrap();
+        let app = kv.append_tokens(2, 1).unwrap();
+        let (old, new) = app.cow.expect("shared tail must CoW");
+        assert_eq!(old, table[0]);
+        let ftable = kv.pool().unwrap().page_table(2).unwrap().to_vec();
+        assert_eq!(ftable[0], new);
+        // the fork's new tail starts as a byte-for-byte copy
+        {
+            let slabs = kv.slabs().unwrap();
+            let src = SeqKvView { store: &slabs, table: &table, n_tokens: 2 };
+            let dst = SeqKvView { store: &slabs, table: &ftable, n_tokens: 2 };
+            assert_eq!(src.k_block(0, 0), dst.k_block(0, 0));
+        }
+        // divergent write lands only in the fork's page
+        kv.write_token(new, 2, &rows(9.0, 2, 4), &rows(9.5, 2, 4)).unwrap();
+        let slabs = kv.slabs().unwrap();
+        let src = SeqKvView { store: &slabs, table: &table, n_tokens: 2 };
+        let dst = SeqKvView { store: &slabs, table: &ftable, n_tokens: 3 };
+        assert_eq!(dst.k_block(0, 0)[2 * 4], 9.0, "fork sees its appended row");
+        assert_eq!(src.k_block(0, 0).len(), 2 * 4, "source still exposes 2 tokens");
+    }
+
+    #[test]
+    fn poisoned_pool_is_an_error_not_a_panic() {
+        let kv = shared(4, 4);
+        let kv2 = Arc::clone(&kv);
+        // poison the pool lock by panicking while holding it
+        let _ = std::thread::spawn(move || {
+            let _g = kv2.pool().unwrap();
+            panic!("poison the shared pool");
+        })
+        .join();
+        assert_eq!(kv.allocate(1, 4).unwrap_err(), KvError::Poisoned);
+        assert_eq!(kv.occupancy(), (0, 4, 0.0), "metrics path degrades gracefully");
+    }
+}

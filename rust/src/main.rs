@@ -40,7 +40,7 @@ USAGE: stem <subcommand> [flags]
 
   serve     [--requests N] [--rps R] [--method stem|dense|...] [--mix]
   generate  [--prompt 1,16,17 | --prompt-len N] [--max-new N] [--dense]
-            [--k-start K] [--mu MU] [--sink S] [--recent R]
+            [--fanout N] [--k-start K] [--mu MU] [--sink S] [--recent R]
             [--dense-below TOKENS] [--block B] [--pages P] [--seed S]
   table1    [--limit N]
   table2    [--limit N] [--buckets 512,1024,2048]
@@ -238,18 +238,22 @@ fn pre_warm(coord: &Arc<Coordinator>, method: &str) -> Result<()> {
 }
 
 /// `stem generate`: stream tokens from a decode session against the
-/// paged KV pool — the pure-rust decode stack end to end (policy →
-/// selection → single-query kernel → paged append), no artifacts needed.
+/// shared paged KV store — the pure-rust decode stack end to end (policy
+/// → selection → single-query kernel → paged append), no artifacts
+/// needed. With `--fanout N` the prompt is ingested once and N forked
+/// continuations (each steered by a distinct divergence token) decode
+/// off the shared refcounted prefix.
 fn generate(args: &Args) -> Result<()> {
-    use std::sync::{Arc, Mutex};
-    use stem::coordinator::kv_cache::{KvCache, KvConfig};
-    use stem::decode::{DecodePolicy, DecodeSession, TinyLm};
+    use std::sync::Arc;
+    use stem::coordinator::kv_cache::KvConfig;
+    use stem::decode::{DecodePolicy, DecodeSession, SharedKv, TinyLm};
     use stem::model::vocab;
 
     let block = args.usize_or("block", 64);
     let pages = args.usize_or("pages", 4096);
     let max_new = args.usize_or("max-new", 64);
     let seed = args.u64_or("seed", 42);
+    let fanout = args.usize_or("fanout", 1);
     let (h, hk, dh) = (
         args.usize_or("heads", 8),
         args.usize_or("kv-heads", 4),
@@ -283,19 +287,23 @@ fn generate(args: &Args) -> Result<()> {
     };
     policy.validate().map_err(|e| anyhow!("invalid policy: {e}"))?;
 
-    let kv = Arc::new(Mutex::new(KvCache::new(KvConfig { total_pages: pages, page_tokens: block })));
+    let kv = SharedKv::new(KvConfig { total_pages: pages, page_tokens: block }, hk, dh);
     let model = Arc::new(TinyLm::new(0xD0C0DE, h, hk, dh, vocab::VOCAB_SIZE));
     let mut session = DecodeSession::new(Arc::clone(&kv), model, policy, 1)?;
 
     let t0 = Instant::now();
     session.prefill(&prompt)?;
     let ingest = t0.elapsed();
+    let prefix_pages = kv.pool().map(|g| g.used_pages()).unwrap_or(0);
     println!(
-        "ingested {} prompt tokens in {:.1}ms ({} pages)",
+        "ingested {} prompt tokens in {:.1}ms ({prefix_pages} pages)",
         prompt.len(),
         ingest.as_secs_f64() * 1e3,
-        kv.lock().unwrap().used_pages()
     );
+
+    if fanout > 1 {
+        return generate_fanout(&kv, session, fanout, max_new, prefix_pages);
+    }
 
     let quiet = args.flag("quiet");
     let stats = session.generate(max_new, Some(vocab::END), |info| {
@@ -314,10 +322,7 @@ fn generate(args: &Args) -> Result<()> {
         true
     })?;
 
-    let (used, total) = {
-        let g = kv.lock().unwrap();
-        (g.used_pages(), g.total_pages())
-    };
+    let (used, total, _) = kv.occupancy();
     println!("---");
     println!("stream: {}", vocab::detok(&stats.tokens));
     println!(
@@ -327,6 +332,58 @@ fn generate(args: &Args) -> Result<()> {
         stats.decode_ns as f64 / 1e3 / stats.steps.max(1) as f64,
         stats.dense_steps,
         100.0 * stats.mean_budget_fraction,
+    );
+    Ok(())
+}
+
+/// `stem generate --fanout N`: serve N divergent continuations off the
+/// one ingested prefix — fork the root session per branch, steer each
+/// with a distinct divergence token, decode, and report the page savings
+/// vs. N independent sessions.
+fn generate_fanout(
+    kv: &std::sync::Arc<stem::decode::SharedKv>,
+    root: stem::decode::DecodeSession,
+    fanout: usize,
+    max_new: usize,
+    prefix_pages: usize,
+) -> Result<()> {
+    use stem::model::vocab;
+
+    let t0 = Instant::now();
+    let mut total_tokens = 0usize;
+    let mut total_ns = 0u64;
+    // keep every branch alive so the page report shows true fan-out
+    // residency (shared prefix counted once + per-branch CoW tails)
+    let mut branches = Vec::with_capacity(fanout);
+    for i in 0..fanout {
+        let mut branch = root.fork(2 + i as u64)?;
+        // distinct steering token per branch so the streams diverge
+        branch.prefill(&[vocab::WORD0 + (i % 40) as i32])?;
+        branches.push(branch);
+    }
+    for (i, branch) in branches.iter_mut().enumerate() {
+        let stats = branch.generate(max_new, Some(vocab::END), |_| true)?;
+        println!(
+            "[branch {i}] {:<48} ({} tokens, {:.1}µs/token, budget {:.1}%)",
+            vocab::detok(&stats.tokens),
+            stats.steps,
+            stats.decode_ns as f64 / 1e3 / stats.steps.max(1) as f64,
+            100.0 * stats.mean_budget_fraction,
+        );
+        total_tokens += stats.steps;
+        total_ns += stats.decode_ns;
+    }
+    let wall = t0.elapsed();
+    let (used, total, _) = kv.occupancy();
+    let independent_pages = fanout * (prefix_pages + 1);
+    println!("---");
+    println!(
+        "fanout {fanout}: {total_tokens} tokens in {:.1}ms ({:.1}µs/token decode) | kv {used}/{total} pages now",
+        wall.as_secs_f64() * 1e3,
+        total_ns as f64 / 1e3 / total_tokens.max(1) as f64,
+    );
+    println!(
+        "shared prefix: {prefix_pages} pages ingested once vs ~{independent_pages} for {fanout} independent sessions",
     );
     Ok(())
 }

@@ -183,9 +183,23 @@ pub fn estimate_decode_step_ns(
     attn_ns / speedup + proj_ns
 }
 
+/// Estimated wall-clock ns of prompt ingest alone (k/v projections per
+/// token, no attention): the part of a generation that shared-prefix
+/// fan-out pays exactly once per unique prefix, however many
+/// continuations fork off it — the coordinator's prefix-aware admission
+/// charges it to the first branch only.
+pub fn estimate_ingest_ns(g: &Geometry, n_prompt: usize) -> f64 {
+    // k/v projections per ingested prompt token: 2·d_model² MACs/layer
+    n_prompt as f64
+        * 2.0
+        * (g.d_model * g.d_model) as f64
+        * g.n_layers as f64
+        * DECODE_CORE.ns_per_proj_mac
+}
+
 /// Estimated wall-clock ns for a whole `submit_generate` request:
-/// prompt ingest (projection-only, no attention) plus `max_new` decode
-/// steps at the mean context length.
+/// prompt ingest ([`estimate_ingest_ns`]) plus `max_new` decode steps at
+/// the mean context length.
 pub fn estimate_generate_ns(
     g: &Geometry,
     n_prompt: usize,
@@ -194,15 +208,9 @@ pub fn estimate_generate_ns(
     stride: usize,
     threads: usize,
 ) -> f64 {
-    let cal = &DECODE_CORE;
-    // k/v projections per ingested prompt token: 2·d_model² MACs/layer
-    let ingest_ns = n_prompt as f64
-        * 2.0
-        * (g.d_model * g.d_model) as f64
-        * g.n_layers as f64
-        * cal.ns_per_proj_mac;
     let mean_ctx = n_prompt + max_new / 2;
-    ingest_ns + max_new as f64 * estimate_decode_step_ns(g, mean_ctx, budget_blocks, stride, threads)
+    estimate_ingest_ns(g, n_prompt)
+        + max_new as f64 * estimate_decode_step_ns(g, mean_ctx, budget_blocks, stride, threads)
 }
 
 /// Estimated wall-clock ns for one pure-rust reference prefill of length
@@ -301,6 +309,22 @@ mod tests {
         let t1 = estimate_decode_step_ns(&g, 65536, None, 8, 1);
         let t8 = estimate_decode_step_ns(&g, 65536, None, 8, 8);
         assert!(t1 > t8);
+    }
+
+    #[test]
+    fn ingest_split_decomposes_generate_estimate() {
+        let g = Geometry { n_layers: 1, n_heads: 8, d_head: 32, d_model: 256, d_ff: 1024, block: 64 };
+        // the fan-out admission math relies on generate = ingest + decode
+        let full = estimate_generate_ns(&g, 2048, 32, Some(8.0), 8, 4);
+        let ingest = estimate_ingest_ns(&g, 2048);
+        let decode_only = full - ingest;
+        assert!(ingest > 0.0 && decode_only > 0.0);
+        // exact decomposition: full = ingest + max_new * step(mean_ctx)
+        let step = estimate_decode_step_ns(&g, 2048 + 16, Some(8.0), 8, 4);
+        assert!((full - (ingest + 32.0 * step)).abs() / full < 1e-9);
+        // ingest is linear in the prompt
+        assert!((estimate_ingest_ns(&g, 4096) / ingest - 2.0).abs() < 1e-9);
+        assert_eq!(estimate_ingest_ns(&g, 0), 0.0);
     }
 
     #[test]

@@ -801,7 +801,11 @@ pub fn block_sparse_attention_reference(
 /// One logical block holds `block_tokens` consecutive tokens (the paged
 /// KV cache maps one block to one page); the final block may be partial.
 /// Implementations: [`TensorKv`] (contiguous tensors, tests/benches) and
-/// the coordinator's paged store (`decode::session::SeqKvView`).
+/// the shared slab store's view (`decode::store::SeqKvView`), through
+/// which any number of forked sequences expose refcounted pages of one
+/// `decode::store::SharedKv` to the same kernels — the view carries only
+/// (store ref, page table, token count), so aliased prefixes cost
+/// nothing per session.
 pub trait KvBlocks: Sync {
     /// Cached tokens (the causal width of the next query row).
     fn n_tokens(&self) -> usize;

@@ -135,6 +135,44 @@ fn coordinator_conserves_requests_across_buckets_and_methods() {
 }
 
 #[test]
+fn fanout_shares_one_prefix_across_branches_and_requests() {
+    use std::sync::atomic::Ordering;
+    use stem::decode::DecodePolicy;
+
+    let Some(engine) = engine() else { return };
+    let coord = Arc::new(Coordinator::new(engine, CoordinatorConfig::default()));
+    let prompt: Vec<i32> = (0..200).map(|i| 16 + (i % 50) as i32).collect();
+    let rxs = coord
+        .submit_generate_many(prompt.clone(), 8, DecodePolicy::default(), 4)
+        .expect("fanout submit admits");
+    assert_eq!(rxs.len(), 4);
+    let mut streams = vec![];
+    for rx in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.n_prompt, prompt.len());
+        assert_eq!(resp.steps, resp.tokens.len());
+        streams.push(resp.tokens);
+    }
+    // greedy decode without a divergence suffix: branches must agree
+    // (they share one prefix and the same deterministic LM)
+    for w in streams.windows(2) {
+        assert_eq!(w[0], w[1], "sibling branches must decode identically");
+    }
+    // one ingest for the whole group, one fork per branch
+    assert_eq!(coord.metrics.prefix_misses.load(Ordering::Relaxed), 1);
+    assert_eq!(coord.metrics.forks.load(Ordering::Relaxed), 4);
+    // a follow-up request with the same prompt rides the cached prefix
+    let again = coord.generate_blocking(prompt, 8, DecodePolicy::default()).unwrap();
+    assert_eq!(again.tokens, streams[0], "prefix-cache hit must not change the stream");
+    assert_eq!(coord.metrics.prefix_misses.load(Ordering::Relaxed), 1, "no re-ingest");
+    assert!(coord.metrics.prefix_hits.load(Ordering::Relaxed) >= 1);
+    assert_eq!(coord.metrics.forks.load(Ordering::Relaxed), 5);
+    let report = coord.report();
+    assert!(report.contains("fanout: forks=5"), "{report}");
+    assert!(report.contains("cached prefixes: 1"), "{report}");
+}
+
+#[test]
 fn rejects_oversized_and_unknown() {
     let Some(engine) = engine() else { return };
     let coord = Arc::new(Coordinator::new(engine, CoordinatorConfig::default()));

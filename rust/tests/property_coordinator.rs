@@ -623,20 +623,20 @@ fn decode_selection_always_valid_under_random_budgets() {
 
 #[test]
 fn concurrent_decode_sessions_share_the_pool_without_corruption() {
-    use std::sync::{Arc, Mutex};
-    use stem::decode::{DecodePolicy, DecodeSession, TinyLm};
+    use std::sync::Arc;
+    use stem::decode::{DecodePolicy, DecodeSession, SharedKv, TinyLm};
 
-    let kv = Arc::new(Mutex::new(KvCache::new(KvConfig { total_pages: 256, page_tokens: 16 })));
+    let kv = SharedKv::new(KvConfig { total_pages: 256, page_tokens: 16 }, 2, 8);
     let model = Arc::new(TinyLm::new(3, 4, 2, 8, 96));
     // reference stream, generated alone
     let solo = {
-        let kv2 = Arc::new(Mutex::new(KvCache::new(KvConfig { total_pages: 256, page_tokens: 16 })));
+        let kv2 = SharedKv::new(KvConfig { total_pages: 256, page_tokens: 16 }, 2, 8);
         let mut s =
             DecodeSession::new(kv2, Arc::clone(&model), DecodePolicy::default(), 1).unwrap();
         s.prefill(&[1, 17, 18, 19]).unwrap();
         s.generate(8, None, |_| true).unwrap().tokens
     };
-    // three sessions interleaved step-by-step on one pool
+    // three sessions interleaved step-by-step on one shared store
     let mut sessions: Vec<DecodeSession> = (1..=3)
         .map(|i| {
             let mut s = DecodeSession::new(
@@ -656,12 +656,148 @@ fn concurrent_decode_sessions_share_the_pool_without_corruption() {
             streams[i].push(s.step_once().unwrap().token);
         }
     }
-    kv.lock().unwrap().check_invariants().unwrap();
+    kv.pool().unwrap().check_invariants().unwrap();
     for stream in &streams {
         assert_eq!(stream, &solo, "interleaving must not change any stream");
     }
     drop(sessions);
-    assert_eq!(kv.lock().unwrap().used_pages(), 0);
+    assert_eq!(kv.pool().unwrap().used_pages(), 0);
+    assert_eq!(kv.pages_resident(), 0, "shared slabs must GC with their pages");
+}
+
+/// Satellite: randomized fork-tree property test. Builds a root → child
+/// → grandchild chain (depth 3) over the shared store, then interleaves
+/// random forks, appends and drops across the tree. After every op,
+/// every live session's `SeqKvView` must expose exactly the K/V of its
+/// own token history — a sibling's appended tokens must never leak
+/// through a shared page — and the pool invariants must hold.
+#[test]
+fn fork_tree_cow_isolation_under_random_ops() {
+    use std::sync::Arc;
+    use stem::decode::{DecodePolicy, DecodeSession, SharedKv, TinyLm};
+    use stem::sparse::KvBlocks;
+
+    const PT: usize = 8; // page_tokens
+    const HK: usize = 2;
+    const DH: usize = 8;
+
+    forall(
+        117,
+        10,
+        |r: &mut Rng| {
+            // (op selector, session selector, token) triples
+            let ops: Vec<(usize, usize, usize)> = (0..24)
+                .map(|_| (r.below(8) as usize, r.below(32) as usize, r.below(40) as usize))
+                .collect();
+            ops
+        },
+        |ops| {
+            let kv = SharedKv::new(KvConfig { total_pages: 256, page_tokens: PT }, HK, DH);
+            let model = Arc::new(TinyLm::new(5, 4, HK, DH, 96));
+            let mut next_seq = 1u64;
+            let mut seq = || {
+                next_seq += 1;
+                next_seq
+            };
+            // live sessions with their expected token histories
+            let mut live: Vec<(DecodeSession, Vec<i32>)> = vec![];
+            let policy = DecodePolicy::default();
+            let mut root =
+                DecodeSession::new(Arc::clone(&kv), Arc::clone(&model), policy, 1)
+                    .map_err(|e| e.to_string())?;
+            let base: Vec<i32> = (0..12).map(|i| 16 + (i % 40)).collect();
+            root.prefill(&base).map_err(|e| e.to_string())?;
+            // guarantee depth >= 3: root -> child -> grandchild, each
+            // diverged by one appended token
+            let mut child = root.fork(seq()).map_err(|e| e.to_string())?;
+            child.prefill(&[17]).map_err(|e| e.to_string())?;
+            let mut grandchild = child.fork(seq()).map_err(|e| e.to_string())?;
+            grandchild.prefill(&[18]).map_err(|e| e.to_string())?;
+            let mut hist = base.clone();
+            live.push((root, hist.clone()));
+            hist.push(17);
+            live.push((child, hist.clone()));
+            hist.push(18);
+            live.push((grandchild, hist));
+
+            let verify = |live: &[(DecodeSession, Vec<i32>)]| -> Result<(), String> {
+                for (s, hist) in live {
+                    if s.n_ctx() != hist.len() {
+                        return Err(format!(
+                            "seq {}: n_ctx {} != history {}",
+                            s.seq_id(),
+                            s.n_ctx(),
+                            hist.len()
+                        ));
+                    }
+                    s.with_kv_view(|view| -> Result<(), String> {
+                        for (pos, &tok) in hist.iter().enumerate() {
+                            let (_, k, v) = model.project(tok, pos, false);
+                            let (b, slot) = (pos / PT, pos % PT);
+                            for hkv in 0..HK {
+                                let want_k = &k[hkv * DH..(hkv + 1) * DH];
+                                let got_k = &view.k_block(hkv, b)[slot * DH..(slot + 1) * DH];
+                                if got_k != want_k {
+                                    return Err(format!(
+                                        "seq {}: K leak at pos {pos} head {hkv}",
+                                        s.seq_id()
+                                    ));
+                                }
+                                let want_v = &v[hkv * DH..(hkv + 1) * DH];
+                                let got_v = &view.v_block(hkv, b)[slot * DH..(slot + 1) * DH];
+                                if got_v != want_v {
+                                    return Err(format!(
+                                        "seq {}: V leak at pos {pos} head {hkv}",
+                                        s.seq_id()
+                                    ));
+                                }
+                            }
+                        }
+                        Ok(())
+                    })
+                    .map_err(|e| e.to_string())??;
+                }
+                kv.pool().map_err(|e| e.to_string())?.check_invariants()?;
+                Ok(())
+            };
+
+            verify(&live)?;
+            for &(op, who, tok) in ops {
+                let idx = who % live.len();
+                match op {
+                    // fork the chosen session (tree grows arbitrarily deep)
+                    0..=2 => {
+                        let fork =
+                            live[idx].0.fork(seq()).map_err(|e| e.to_string())?;
+                        let hist = live[idx].1.clone();
+                        live.push((fork, hist));
+                    }
+                    // append a token: diverges from every sharer via CoW
+                    3..=6 => {
+                        let t = 16 + tok as i32;
+                        live[idx].0.prefill(&[t]).map_err(|e| e.to_string())?;
+                        live[idx].1.push(t);
+                    }
+                    // drop a session (never the last one)
+                    _ => {
+                        if live.len() > 1 {
+                            live.remove(idx);
+                        }
+                    }
+                }
+                verify(&live)?;
+            }
+            drop(live);
+            let used = kv.pool().map_err(|e| e.to_string())?.used_pages();
+            if used != 0 {
+                return Err(format!("{used} pages leaked after dropping the tree"));
+            }
+            if kv.pages_resident() != 0 {
+                return Err("slabs leaked after dropping the tree".into());
+            }
+            Ok(())
+        },
+    );
 }
 
 // --- json substrate ------------------------------------------------------
