@@ -8,6 +8,15 @@
 //! (targets: >= 2x page savings, >= 1.5x aggregate throughput at
 //! fanout 4).
 //!
+//! Second act — token-granular prefix reuse: a family of prompts sharing
+//! a 75% token prefix is served through a session-level prefix cache in
+//! both `--prefix-mode` disciplines. Exact mode re-ingests every
+//! distinct prompt in full; radix mode forks the page-aligned covered
+//! prefix off the best cached holder ([`stem::coordinator::RadixIndex`])
+//! and ingests only the suffix. Hard gates: >= 1.5x fewer prompt-ingest
+//! tokens in radix mode, identical branch token streams across modes,
+//! and 1e-5 dense-oracle parity on every reused branch's view.
+//!
 //!   cargo bench --bench bench_fanout                 # full sizes
 //!   cargo bench --bench bench_fanout -- --quick      # small samples
 //!   cargo bench --bench bench_fanout -- --fanout 8
@@ -16,6 +25,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use stem::coordinator::kv_cache::KvConfig;
+use stem::coordinator::RadixIndex;
 use stem::decode::{
     decode_attend, decode_attend_dense_reference, DecodePolicy, DecodeSession, SharedKv, TinyLm,
 };
@@ -138,6 +148,137 @@ fn run_independent(p: &[i32], fanout: usize, max_new: usize) -> ModeResult {
     }
 }
 
+/// Stats of one prefix-reuse serving run (exact or radix discipline).
+struct ReuseResult {
+    /// Prompt tokens actually projected + appended (the cost the radix
+    /// tree exists to cut).
+    ingest_tokens: usize,
+    /// Groups served by forking a page-aligned partial prefix.
+    partial_hits: usize,
+    /// Branch token streams, in submission order.
+    streams: Vec<Vec<i32>>,
+    pages_used: usize,
+    wall_ns: u64,
+    /// Worst dense-oracle deviation across all branches.
+    parity: f32,
+}
+
+/// A family of `count` prompts: a shared page-aligned prefix covering
+/// `shared` tokens, then a distinct seeded suffix per prompt.
+fn prompt_family(count: usize, total_len: usize, shared: usize) -> Vec<Vec<i32>> {
+    let stem = prompt(shared);
+    (0..count)
+        .map(|i| {
+            let mut p = stem.clone();
+            let mut r = Rng::new(1000 + i as u64);
+            p.extend((shared..total_len).map(|_| vocab::WORD0 + r.below(64) as i32));
+            p
+        })
+        .collect()
+}
+
+/// Serve each prompt at `fanout` through a session-level prefix cache.
+/// `radix = false` models exact mode (only byte-identical prompts reuse
+/// a holder); `radix = true` additionally forks the longest page-aligned
+/// common prefix of any cached holder and ingests just the suffix —
+/// the same routing the coordinator's dispatcher performs, minus the
+/// threading.
+fn run_prefix_reuse(
+    prompts: &[Vec<i32>],
+    fanout: usize,
+    max_new: usize,
+    radix: bool,
+) -> ReuseResult {
+    let kv = pool(8192);
+    let m = model();
+    let index = RadixIndex::new(BLOCK);
+    // holder sessions with their full prompts; RadixIndex keys are
+    // indices into this vec
+    let mut holders: Vec<(Vec<i32>, DecodeSession)> = Vec::new();
+    let mut next_seq = 1u64;
+    let mut seq = move || {
+        next_seq += 1;
+        next_seq
+    };
+    let mut ingest_tokens = 0usize;
+    let mut partial_hits = 0usize;
+    let mut streams = Vec::new();
+    let mut branches = Vec::new();
+    let t0 = Instant::now();
+    for p in prompts {
+        let holder_idx = match holders.iter().position(|(held, _)| held == p) {
+            Some(i) => i, // exact hit: both modes fork the parked holder
+            None => {
+                let (mut sess, covered) = if radix {
+                    match index.lookup(p) {
+                        Some(mtc) if mtc.covered > 0 => {
+                            partial_hits += 1;
+                            let src = &holders[mtc.key as usize].1;
+                            (
+                                src.fork_prefix(seq(), mtc.covered, p[mtc.covered - 1])
+                                    .expect("prefix fork"),
+                                mtc.covered,
+                            )
+                        }
+                        _ => (
+                            DecodeSession::new(
+                                Arc::clone(&kv),
+                                Arc::clone(&m),
+                                policy(max_new),
+                                seq(),
+                            )
+                            .expect("session"),
+                            0,
+                        ),
+                    }
+                } else {
+                    (
+                        DecodeSession::new(
+                            Arc::clone(&kv),
+                            Arc::clone(&m),
+                            policy(max_new),
+                            seq(),
+                        )
+                        .expect("session"),
+                        0,
+                    )
+                };
+                sess.extend_prompt(&p[covered..]).expect("suffix ingest");
+                ingest_tokens += p.len() - covered;
+                index.insert(holders.len() as u64, p);
+                holders.push((p.clone(), sess));
+                holders.len() - 1
+            }
+        };
+        for b in 0..fanout {
+            let mut br = holders[holder_idx].1.fork(seq()).expect("branch fork");
+            br.prefill(&[vocab::WORD0 + (b % 40) as i32]).expect("divergence token");
+            streams.push(br.generate(max_new, None, |_| true).expect("decode").tokens);
+            branches.push(br);
+        }
+    }
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    let parity = branches.iter().map(parity_diff).fold(0.0f32, f32::max);
+    ReuseResult {
+        ingest_tokens,
+        partial_hits,
+        streams,
+        pages_used: kv.occupancy().0,
+        wall_ns,
+        parity,
+    }
+}
+
+fn reuse_json(r: &ReuseResult) -> Json {
+    Json::obj(vec![
+        ("ingest_tokens", Json::Num(r.ingest_tokens as f64)),
+        ("partial_hits", Json::Num(r.partial_hits as f64)),
+        ("pages_used", Json::Num(r.pages_used as f64)),
+        ("wall_ns", Json::Num(r.wall_ns as f64)),
+        ("parity_max_diff", Json::Num(r.parity as f64)),
+    ])
+}
+
 fn mode_json(r: &ModeResult) -> Json {
     Json::obj(vec![
         ("wall_ns", Json::Num(r.wall_ns as f64)),
@@ -160,6 +301,18 @@ fn main() {
     let p = prompt(prompt_len);
     let (forked, parity) = run_forked(&p, fanout, max_new);
     let independent = run_independent(&p, fanout, max_new);
+
+    // --- token-granular prefix reuse: exact vs radix ---------------------
+    // 8 prompts sharing a 75% page-aligned token prefix, each served at
+    // fanout 2 (the acceptance workload for the radix prefix cache)
+    let family_n = 8usize;
+    let reuse_fanout = 2usize;
+    let reuse_max_new = if quick { 12 } else { 24 };
+    let shared = (prompt_len * 3 / 4) / BLOCK * BLOCK; // page-aligned 75%
+    let family = prompt_family(family_n, prompt_len, shared);
+    let exact = run_prefix_reuse(&family, reuse_fanout, reuse_max_new, false);
+    let radix = run_prefix_reuse(&family, reuse_fanout, reuse_max_new, true);
+    let ingest_savings = exact.ingest_tokens as f64 / radix.ingest_tokens.max(1) as f64;
 
     let page_savings = independent.pages_used as f64 / forked.pages_used.max(1) as f64;
     let throughput_ratio = independent.wall_ns as f64 / forked.wall_ns.max(1) as f64;
@@ -186,6 +339,30 @@ fn main() {
         "fanout={fanout} page savings {page_savings:.2}x below the 2x acceptance target"
     );
 
+    println!(
+        "prefix reuse: {family_n} prompts, {shared}/{prompt_len} shared tokens, fanout {reuse_fanout}\n\
+         exact: {:>6} ingest tokens | {:>4} pages | radix: {:>6} ingest tokens \
+         ({} partial hits) | {:>4} pages\n\
+         -> ingest savings {ingest_savings:.2}x (target >= 1.5x) | radix parity max |diff| = {:.2e}",
+        exact.ingest_tokens,
+        exact.pages_used,
+        radix.ingest_tokens,
+        radix.partial_hits,
+        radix.pages_used,
+        radix.parity,
+    );
+    // token accounting is deterministic: all three reuse gates are hard
+    assert_eq!(
+        exact.streams, radix.streams,
+        "radix prefix reuse changed a decode stream vs exact-mode full ingest"
+    );
+    assert!(radix.parity < 1e-5, "radix-reused decode parity broke 1e-5: {}", radix.parity);
+    assert!(radix.partial_hits > 0, "the 75%-shared family must produce partial prefix hits");
+    assert!(
+        ingest_savings >= 1.5,
+        "radix ingest savings {ingest_savings:.2}x below the 1.5x acceptance target"
+    );
+
     let out = Json::obj(vec![
         ("bench", Json::Str("bench_fanout".into())),
         ("threads", Json::Num(threads as f64)),
@@ -210,6 +387,20 @@ fn main() {
                 ("page_savings", Json::Num(page_savings)),
                 ("throughput_ratio", Json::Num(throughput_ratio)),
                 ("parity_max_diff", Json::Num(parity as f64)),
+            ]),
+        ),
+        (
+            "prefix_reuse",
+            Json::obj(vec![
+                ("prompts", Json::Num(family_n as f64)),
+                ("shared_tokens", Json::Num(shared as f64)),
+                ("prompt_len", Json::Num(prompt_len as f64)),
+                ("fanout", Json::Num(reuse_fanout as f64)),
+                ("max_new", Json::Num(reuse_max_new as f64)),
+                ("exact", reuse_json(&exact)),
+                ("radix", reuse_json(&radix)),
+                ("ingest_savings", Json::Num(ingest_savings)),
+                ("streams_identical", Json::Bool(exact.streams == radix.streams)),
             ]),
         ),
     ]);

@@ -11,9 +11,12 @@
 
 use std::sync::{Condvar, Mutex};
 
+/// Backpressure ceilings (see module docs for the three dimensions).
 #[derive(Debug, Clone, Copy)]
 pub struct AdmissionConfig {
+    /// Ceiling on summed tokens of admitted, uncompleted requests.
     pub max_tokens: usize,
+    /// Ceiling on admitted, uncompleted requests.
     pub max_requests: usize,
     /// Ceiling on summed estimated work of admitted requests, in ns;
     /// `f64::INFINITY` (the default) disables the work dimension.
@@ -33,19 +36,29 @@ struct State {
     work_ns: f64,
 }
 
+/// Shared admission state: counts outstanding work against the
+/// configured ceilings and sheds on overflow.
 pub struct Admission {
     cfg: AdmissionConfig,
     state: Mutex<State>,
     freed: Condvar,
 }
 
+/// Outcome of an admission attempt.
 #[derive(Debug, PartialEq)]
 pub enum Admit {
+    /// Admitted; the caller owes a matching release on completion.
     Accepted,
-    Rejected { reason: &'static str },
+    /// Shed (backpressure); the caller may retry later.
+    Rejected {
+        /// Which ceiling rejected: `"max_tokens"`, `"max_requests"` or
+        /// `"max_work_ns"`.
+        reason: &'static str,
+    },
 }
 
 impl Admission {
+    /// Build an admission gate with the given ceilings.
     pub fn new(cfg: AdmissionConfig) -> Self {
         Admission { cfg, state: Mutex::new(State::default()), freed: Condvar::new() }
     }
@@ -78,8 +91,11 @@ impl Admission {
             Some(t) if t <= self.cfg.max_tokens => {}
             _ => return Admit::Rejected { reason: "max_tokens" },
         }
-        if s.requests > 0 && s.work_ns + est_ns > self.cfg.max_work_ns {
-            // never starve: an empty system admits any single request
+        // never starve: an empty system admits any SINGLE request however
+        // large its estimate — but a multi-branch group gets no such
+        // exemption, or one burst could blow past the work ceiling
+        // wholesale on an idle system
+        if (s.requests > 0 || n_requests > 1) && s.work_ns + est_ns > self.cfg.max_work_ns {
             return Admit::Rejected { reason: "max_work_ns" };
         }
         s.tokens += n_tokens;
@@ -98,10 +114,13 @@ impl Admission {
         s.requests += 1;
     }
 
+    /// Release a completed request's token share (no work estimate).
     pub fn release(&self, n_tokens: usize) {
         self.release_work(n_tokens, 0.0);
     }
 
+    /// Release a completed request's token share and the work estimate
+    /// it was admitted with.
     pub fn release_work(&self, n_tokens: usize, est_ns: f64) {
         let mut s = self.state.lock().unwrap();
         s.tokens = s.tokens.saturating_sub(n_tokens);
@@ -111,6 +130,7 @@ impl Admission {
         self.freed.notify_all();
     }
 
+    /// Currently admitted `(tokens, requests)`.
     pub fn outstanding(&self) -> (usize, usize) {
         let s = self.state.lock().unwrap();
         (s.tokens, s.requests)

@@ -21,23 +21,36 @@ use std::time::{Duration, Instant};
 
 use super::request::PrefillRequest;
 
+/// Prefill batch compatibility key: requests in one batch must share
+/// the compiled module kind, the sequence-length bucket and the weight
+/// checkpoint.
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
 pub struct BatchKey {
+    /// Compiled module kind (e.g. `"prefill_stem"`).
     pub kind: &'static str,
+    /// Padded sequence-length bucket.
     pub bucket: usize,
+    /// Weight checkpoint name.
     pub checkpoint: String,
 }
 
+/// A formed prefill batch handed to a worker.
 #[derive(Debug)]
 pub struct Batch {
+    /// Compatibility key every request in the batch shares.
     pub key: BatchKey,
+    /// The batched requests, FIFO within the key.
     pub requests: Vec<PrefillRequest>,
+    /// When the batcher emitted this batch.
     pub formed_at: Instant,
 }
 
+/// Size-or-timeout policy of the prefill lane.
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
+    /// Emit a batch as soon as a queue reaches this many requests.
     pub max_batch: usize,
+    /// Emit a partial batch once its head request has waited this long.
     pub max_wait: Duration,
 }
 
@@ -51,7 +64,9 @@ impl Default for BatcherConfig {
 /// enough — the dispatcher owns the session state).
 #[derive(Debug, Clone, Copy)]
 pub struct DecodeStep {
+    /// Sequence id of the generation this step advances.
     pub seq: u64,
+    /// When the step entered the decode lane.
     pub enqueued: Instant,
 }
 
@@ -59,7 +74,9 @@ pub struct DecodeStep {
 /// sequences — one sequence has at most one step in flight).
 #[derive(Debug)]
 pub struct DecodeBatch {
+    /// The batched steps (distinct sequences), FIFO.
     pub steps: Vec<DecodeStep>,
+    /// When the batcher emitted this batch.
     pub formed_at: Instant,
 }
 
@@ -68,7 +85,9 @@ pub struct DecodeBatch {
 /// live stream, so holding it for batch-fill hurts inter-token latency.
 #[derive(Debug, Clone)]
 pub struct DecodeLaneConfig {
+    /// Emit a decode batch as soon as this many steps are queued.
     pub max_batch: usize,
+    /// Emit a partial batch once its head step has waited this long.
     pub max_wait: Duration,
 }
 
@@ -81,10 +100,14 @@ impl Default for DecodeLaneConfig {
 /// Either kind of ready work ([`Batcher::pop_ready_any`]).
 #[derive(Debug)]
 pub enum AnyBatch {
+    /// A prefill batch from the request lane.
     Prefill(Batch),
+    /// A decode-step batch from the continuous-batching lane.
     Decode(DecodeBatch),
 }
 
+/// The two-lane dynamic batcher (see module docs). Pure logic, no
+/// threads: the dispatcher drives it.
 pub struct Batcher {
     cfg: BatcherConfig,
     decode_cfg: DecodeLaneConfig,
@@ -96,10 +119,12 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Build a batcher with the default decode-lane policy.
     pub fn new(cfg: BatcherConfig) -> Self {
         Self::with_decode(cfg, DecodeLaneConfig::default())
     }
 
+    /// Build a batcher with explicit policies for both lanes.
     pub fn with_decode(cfg: BatcherConfig, decode_cfg: DecodeLaneConfig) -> Self {
         Batcher {
             cfg,
@@ -123,6 +148,7 @@ impl Batcher {
         self.decode_q.len()
     }
 
+    /// Enqueue one prefill request under its compatibility key.
     pub fn push(&mut self, key: BatchKey, req: PrefillRequest) {
         self.queues.entry(key).or_default().push_back(req);
         self.pending += 1;

@@ -12,12 +12,22 @@
 
 use std::collections::HashMap;
 
+/// Errors of the paged KV pool and the shared store built on it.
 #[derive(Debug, thiserror::Error, PartialEq)]
 pub enum KvError {
+    /// The pool cannot free enough pages (nothing evictable is left).
     #[error("out of KV pages: need {need}, free {free}")]
-    OutOfPages { need: usize, free: usize },
+    OutOfPages {
+        /// Pages the operation required.
+        need: usize,
+        /// Pages actually free.
+        free: usize,
+    },
+    /// The sequence id has no page table (never allocated, or evicted).
     #[error("unknown sequence {0}")]
     UnknownSeq(u64),
+    /// Allocate/fork targeted a sequence id that already has a page
+    /// table; silently replacing it would leak the old refcounts.
     #[error("sequence {0} already has a page table")]
     SeqExists(u64),
     /// A lock guarding the shared KV (identity pool or slab store) was
@@ -30,13 +40,30 @@ pub enum KvError {
     /// silently would corrupt the free-list/refcount invariants under
     /// mass fan-out.
     #[error("refcount overflow: page {page} is already at the u16 sharing limit")]
-    RefcountOverflow { page: u32 },
+    RefcountOverflow {
+        /// The saturated page id.
+        page: u32,
+    },
+    /// A prefix fork asked for a split point that is not page-aligned
+    /// (or exceeds the source). Forked page tables share whole pages, so
+    /// a mid-page split would leak the source's tokens past the split
+    /// into the fork.
+    #[error("cannot fork a {n_tokens}-token prefix: split points must be multiples of {page_tokens} tokens within the source")]
+    MisalignedFork {
+        /// The requested split point, in tokens.
+        n_tokens: usize,
+        /// The pool's page size, in tokens.
+        page_tokens: usize,
+    },
 }
 
+/// Pool geometry: how many pages exist and how many tokens each holds.
 #[derive(Debug, Clone)]
 pub struct KvConfig {
+    /// Total pages in the pool.
     pub total_pages: usize,
-    pub page_tokens: usize, // tokens per page (= attention block size)
+    /// Tokens per page (= the attention block size).
+    pub page_tokens: usize,
 }
 
 /// Outcome of [`KvCache::append_tokens`], telling the owner of the page
@@ -70,11 +97,14 @@ pub struct KvCache {
     /// when the identity is recycled (evictions free pages deep inside
     /// `allocate`/`append_tokens`, where the caller never sees the ids).
     freed_log: Vec<u32>,
+    /// Lifetime count of successful `allocate` calls.
     pub alloc_count: u64,
+    /// Lifetime count of LRU evictions.
     pub evict_count: u64,
 }
 
 impl KvCache {
+    /// Build an empty pool with every page free.
     pub fn new(cfg: KvConfig) -> Self {
         let free = (0..cfg.total_pages as u32).rev().collect();
         let refcount = vec![0u16; cfg.total_pages];
@@ -90,22 +120,27 @@ impl KvCache {
         }
     }
 
+    /// Pages required to hold `n_tokens` (ceiling division).
     pub fn pages_needed(&self, n_tokens: usize) -> usize {
         n_tokens.div_ceil(self.cfg.page_tokens)
     }
 
+    /// Pages currently on the free list.
     pub fn free_pages(&self) -> usize {
         self.free.len()
     }
 
+    /// Pages currently referenced by at least one page table.
     pub fn used_pages(&self) -> usize {
         self.cfg.total_pages - self.free.len()
     }
 
+    /// Total pages in the pool.
     pub fn total_pages(&self) -> usize {
         self.cfg.total_pages
     }
 
+    /// Tokens per page.
     pub fn page_tokens(&self) -> usize {
         self.cfg.page_tokens
     }
@@ -167,8 +202,30 @@ impl KvCache {
         if self.seqs.contains_key(&dst) {
             return Err(KvError::SeqExists(dst));
         }
+        let n_tokens = self.seqs.get(&src).ok_or(KvError::UnknownSeq(src))?.n_tokens;
+        self.fork_prefix(src, dst, n_tokens)
+    }
+
+    /// Fork `dst` from the leading `n_tokens` of `src` only (token-
+    /// granular prefix sharing): the fork shares exactly the pages that
+    /// hold those tokens and starts with `n_tokens` cached. The split
+    /// must land on a page boundary — or cover the whole source, which
+    /// is plain [`KvCache::fork`] — because a shared tail page would
+    /// expose the source's tokens past the split to the fork
+    /// ([`KvError::MisalignedFork`] otherwise). Like `fork`, a failed
+    /// call is side-effect free.
+    pub fn fork_prefix(&mut self, src: u64, dst: u64, n_tokens: usize) -> Result<(), KvError> {
+        if self.seqs.contains_key(&dst) {
+            return Err(KvError::SeqExists(dst));
+        }
         let e = self.seqs.get(&src).ok_or(KvError::UnknownSeq(src))?;
-        let (pages, n_tokens, pinned) = (e.pages.clone(), e.n_tokens, e.pinned);
+        if n_tokens > e.n_tokens
+            || (n_tokens % self.cfg.page_tokens != 0 && n_tokens != e.n_tokens)
+        {
+            return Err(KvError::MisalignedFork { n_tokens, page_tokens: self.cfg.page_tokens });
+        }
+        let pages = e.pages[..self.pages_needed(n_tokens)].to_vec();
+        let pinned = e.pinned;
         // check-then-increment: refusing *before* touching any refcount
         // keeps a failed fork side-effect free (no partial increments)
         if let Some(&p) = pages.iter().find(|&&p| self.refcount[p as usize] == u16::MAX) {
@@ -185,6 +242,17 @@ impl KvCache {
     /// Cached token count of a sequence.
     pub fn seq_tokens(&self, seq_id: u64) -> Option<usize> {
         self.seqs.get(&seq_id).map(|e| e.n_tokens)
+    }
+
+    /// Reuse weight of a cached sequence: the sum of its pages'
+    /// refcounts times the page size — covered-token length scaled by
+    /// how many sequences share each page. The coordinator retires the
+    /// *lightest* prefix holders first (LCP-aware eviction): a long,
+    /// heavily-forked prefix outweighs a short or unshared one.
+    pub fn seq_share_weight(&self, seq_id: u64) -> Option<u64> {
+        let e = self.seqs.get(&seq_id)?;
+        let refs: u64 = e.pages.iter().map(|&p| self.refcount[p as usize] as u64).sum();
+        Some(refs * self.cfg.page_tokens as u64)
     }
 
     /// Extend a sequence by `extra` tokens (the decode append path):
@@ -337,6 +405,7 @@ impl KvCache {
         }
     }
 
+    /// The page table of a live sequence (`None` if unknown/evicted).
     pub fn page_table(&self, seq_id: u64) -> Option<&[u32]> {
         self.seqs.get(&seq_id).map(|e| e.pages.as_slice())
     }
@@ -433,6 +502,48 @@ mod tests {
         assert_eq!(kv.drop_seq(1).unwrap(), 0); // still referenced by 2
         assert_eq!(kv.drop_seq(2).unwrap(), 2);
         kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_prefix_shares_only_the_covered_pages() {
+        let mut kv = cache(8); // page_tokens = 64
+        kv.allocate(1, 300).unwrap(); // 5 pages, tail partial
+        let src_pages = kv.page_table(1).unwrap().to_vec();
+        kv.fork_prefix(1, 2, 128).unwrap(); // 2 whole pages
+        assert_eq!(kv.seq_tokens(2), Some(128));
+        assert_eq!(kv.page_table(2).unwrap(), &src_pages[..2]);
+        assert_eq!(kv.used_pages(), 5, "prefix fork must not allocate");
+        kv.check_invariants().unwrap();
+        // the fork appends into a fresh page (its tail is exactly full)
+        let a = kv.append_tokens(2, 1).unwrap();
+        assert_eq!(a.cow, None);
+        assert_eq!(a.grown.len(), 1);
+        // misaligned or oversized splits are clean errors
+        assert!(matches!(
+            kv.fork_prefix(1, 3, 100),
+            Err(KvError::MisalignedFork { n_tokens: 100, page_tokens: 64 })
+        ));
+        assert!(matches!(kv.fork_prefix(1, 3, 320), Err(KvError::MisalignedFork { .. })));
+        assert!(kv.page_table(3).is_none(), "failed prefix fork must be side-effect free");
+        // full-length split is allowed even when the tail is partial
+        kv.fork_prefix(1, 3, 300).unwrap();
+        assert_eq!(kv.page_table(3).unwrap(), &src_pages[..]);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn seq_share_weight_scales_with_length_and_sharing() {
+        let mut kv = cache(16);
+        kv.allocate(1, 128).unwrap(); // 2 pages
+        kv.allocate(2, 320).unwrap(); // 5 pages
+        let (w1, w2) = (kv.seq_share_weight(1).unwrap(), kv.seq_share_weight(2).unwrap());
+        assert_eq!(w1, 2 * 64);
+        assert!(w2 > w1, "longer prefixes must weigh more: {w2} vs {w1}");
+        // two forks of seq 1 triple its pages' refcounts
+        kv.fork(1, 3).unwrap();
+        kv.fork(1, 4).unwrap();
+        assert_eq!(kv.seq_share_weight(1).unwrap(), 3 * 2 * 64);
+        assert_eq!(kv.seq_share_weight(99), None);
     }
 
     #[test]

@@ -15,6 +15,7 @@ pub struct LatencyHisto {
 }
 
 impl LatencyHisto {
+    /// Build an empty histogram (40 power-of-two µs buckets).
     pub fn new() -> Self {
         LatencyHisto {
             buckets: (0..40).map(|_| AtomicU64::new(0)).collect(),
@@ -24,6 +25,7 @@ impl LatencyHisto {
         }
     }
 
+    /// Record one latency sample.
     pub fn record(&self, d: Duration) {
         let us = d.as_micros() as u64;
         let b = (64 - us.max(1).leading_zeros() as usize - 1).min(self.buckets.len() - 1);
@@ -33,10 +35,12 @@ impl LatencyHisto {
         self.max_us.fetch_max(us, Ordering::Relaxed);
     }
 
+    /// Samples recorded so far.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Mean latency in microseconds (0 when empty).
     pub fn mean_us(&self) -> f64 {
         let c = self.count();
         if c == 0 {
@@ -46,6 +50,7 @@ impl LatencyHisto {
         }
     }
 
+    /// Largest recorded sample in microseconds.
     pub fn max_us(&self) -> u64 {
         self.max_us.load(Ordering::Relaxed)
     }
@@ -77,18 +82,28 @@ impl Default for LatencyHisto {
 /// Aggregate serving metrics shared across coordinator threads.
 #[derive(Default)]
 pub struct Metrics {
+    /// Prefill requests accepted by admission.
     pub submitted: AtomicU64,
+    /// Prefill requests completed successfully.
     pub completed: AtomicU64,
+    /// Requests shed by admission (all kinds).
     pub rejected: AtomicU64,
+    /// Prefill batches emitted.
     pub batches: AtomicU64,
+    /// Tokens ingested (prefill inputs + prompt ingests).
     pub tokens_in: AtomicU64,
+    /// Queue-wait latency (submit → batch emission).
     pub queue: LatencyHisto,
+    /// Execution latency on a worker.
     pub exec: LatencyHisto,
+    /// Time to first token (queue + exec).
     pub ttft: LatencyHisto,
     /// sum of budget fractions * 1e6 (atomic fixed-point), for mean budget
     pub budget_sum_micro: AtomicU64,
     // --- decode phase ---------------------------------------------------
+    /// Generation branches accepted by admission.
     pub generates_submitted: AtomicU64,
+    /// Generation branches completed successfully.
     pub generates_completed: AtomicU64,
     /// Decode-step batches emitted by the continuous-batching lane.
     pub decode_batches: AtomicU64,
@@ -110,18 +125,33 @@ pub struct Metrics {
     pub prefix_hits: AtomicU64,
     /// Unique prefixes that had to be ingested from scratch.
     pub prefix_misses: AtomicU64,
+    /// Fan-out groups served as a *partial* prefix hit (radix mode):
+    /// a page-aligned prefix was forked from a cached holder and only
+    /// the uncovered prompt suffix was ingested.
+    pub prefix_partial_hits: AtomicU64,
+    /// Prompt tokens across all routed generate groups — the
+    /// denominator of the covered-token ratio gauge.
+    pub prefix_tokens_total: AtomicU64,
+    /// Prompt tokens served from cached prefixes (full or partial hits)
+    /// instead of being re-ingested. Advisory: a holder evicted between
+    /// routing and fork can make this overcount slightly.
+    pub prefix_tokens_covered: AtomicU64,
+    /// Serving-path error strings, newest last (drained by operators).
     pub errors: Mutex<Vec<String>>,
 }
 
 impl Metrics {
+    /// Build a zeroed metrics block.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Append a serving-path error string.
     pub fn record_error(&self, e: String) {
         self.errors.lock().unwrap().push(e);
     }
 
+    /// Mean prefill budget fraction over completed requests.
     pub fn mean_budget(&self) -> f64 {
         let c = self.completed.load(Ordering::Relaxed);
         if c == 0 {
@@ -131,6 +161,7 @@ impl Metrics {
         }
     }
 
+    /// Mean per-step decode budget fraction over executed steps.
     pub fn mean_decode_budget(&self) -> f64 {
         let c = self.decode_steps.load(Ordering::Relaxed);
         if c == 0 {
@@ -140,6 +171,7 @@ impl Metrics {
         }
     }
 
+    /// Record one executed decode step (latency, budget, dense flag).
     pub fn record_decode_step(&self, d: Duration, budget_fraction: f64, dense: bool) {
         self.decode_steps.fetch_add(1, Ordering::Relaxed);
         self.decode_step.record(d);
@@ -150,6 +182,8 @@ impl Metrics {
         }
     }
 
+    /// Render the multi-line serving report (rates computed over
+    /// `wall`, the coordinator's uptime).
     pub fn report(&self, wall: Duration) -> String {
         let completed = self.completed.load(Ordering::Relaxed);
         let toks = self.tokens_in.load(Ordering::Relaxed);
@@ -197,13 +231,30 @@ impl Metrics {
         let forks = self.forks.load(Ordering::Relaxed);
         let hits = self.prefix_hits.load(Ordering::Relaxed);
         let misses = self.prefix_misses.load(Ordering::Relaxed);
-        if forks > 0 || hits > 0 || misses > 0 {
+        let partial = self.prefix_partial_hits.load(Ordering::Relaxed);
+        if forks > 0 || hits > 0 || misses > 0 || partial > 0 {
+            let ptot = self.prefix_tokens_total.load(Ordering::Relaxed);
+            let pcov = self.prefix_tokens_covered.load(Ordering::Relaxed);
             out.push_str(&format!(
-                "\nfanout: forks={forks} | prefix hits={hits} misses={misses} ({:.0}% reuse)",
+                "\nfanout: forks={forks} | prefix hits={hits} partial={partial} misses={misses} \
+                 ({:.0}% reuse) | prompt tokens covered: {pcov}/{ptot} ({:.0}%)",
                 100.0 * hits as f64 / (hits + misses).max(1) as f64,
+                100.0 * pcov as f64 / ptot.max(1) as f64,
             ));
         }
         out
+    }
+
+    /// Covered-token ratio gauge: the fraction of routed prompt tokens
+    /// that were served from a cached prefix (full or partial hit)
+    /// instead of being re-ingested. `0.0` before any generation routes.
+    pub fn covered_token_ratio(&self) -> f64 {
+        let total = self.prefix_tokens_total.load(Ordering::Relaxed);
+        if total == 0 {
+            0.0
+        } else {
+            self.prefix_tokens_covered.load(Ordering::Relaxed) as f64 / total as f64
+        }
     }
 }
 
@@ -252,11 +303,17 @@ mod tests {
     fn fanout_section_appears_once_forks_recorded() {
         let m = Metrics::new();
         assert!(!m.report(Duration::from_secs(1)).contains("fanout:"));
+        assert_eq!(m.covered_token_ratio(), 0.0);
         m.forks.fetch_add(4, Ordering::Relaxed);
         m.prefix_misses.fetch_add(1, Ordering::Relaxed);
         m.prefix_hits.fetch_add(3, Ordering::Relaxed);
+        m.prefix_partial_hits.fetch_add(2, Ordering::Relaxed);
+        m.prefix_tokens_total.fetch_add(1000, Ordering::Relaxed);
+        m.prefix_tokens_covered.fetch_add(750, Ordering::Relaxed);
         let r = m.report(Duration::from_secs(1));
         assert!(r.contains("fanout: forks=4"), "{r}");
-        assert!(r.contains("hits=3 misses=1 (75% reuse)"), "{r}");
+        assert!(r.contains("hits=3 partial=2 misses=1 (75% reuse)"), "{r}");
+        assert!(r.contains("prompt tokens covered: 750/1000 (75%)"), "{r}");
+        assert!((m.covered_token_ratio() - 0.75).abs() < 1e-12);
     }
 }

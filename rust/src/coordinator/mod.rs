@@ -6,15 +6,21 @@
 //! batcher, with decode steps continuously batched between prefill
 //! batches. Generations route through refcounted prefix holders
 //! (shared-prefix fan-out: one ingest per unique prompt, N forked
-//! continuations diverging copy-on-write — `submit_generate_many`). See
-//! `server.rs` for the threading model and the prefix cache.
+//! continuations diverging copy-on-write — `submit_generate_many`),
+//! matched either by exact prompt hash or token-granularly through the
+//! [`prefix::RadixIndex`] (`--prefix-mode`), where a partial hit forks
+//! the covered pages and ingests only the prompt suffix. See `server.rs`
+//! for the threading model and the prefix cache, and
+//! `docs/ARCHITECTURE.md` for the end-to-end dataflow.
 
 pub mod admission;
 pub mod batcher;
 pub mod kv_cache;
 pub mod metrics;
+pub mod prefix;
 pub mod request;
 pub mod server;
 
+pub use prefix::{PrefixIndex, PrefixMode, RadixIndex, RadixMatch};
 pub use request::{GenerateRequest, GenerateResponse, Method, PrefillRequest, PrefillResponse};
-pub use server::{prompt_hash, Coordinator, CoordinatorConfig, PrefixIndex};
+pub use server::{prompt_hash, Coordinator, CoordinatorConfig};

@@ -1,0 +1,539 @@
+//! Prefix-cache indexes: how the coordinator decides which cached
+//! prompt prefix (if any) a new generation can reuse.
+//!
+//! Two lookup modes back `--prefix-mode {exact,radix}`:
+//!
+//! * [`PrefixIndex`] — the exact mode: a live set of prompt *hashes*. A
+//!   generation reuses a cached prefix only when its prompt is
+//!   byte-identical to a parked holder's prompt. Cheap, but a prompt
+//!   that shares 99% of its tokens with a cached one still re-ingests
+//!   everything.
+//! * [`RadixIndex`] — the token-granular mode (the Stem argument taken
+//!   to serving: early tokens feed *every* later aggregation, so a
+//!   cached prefix is reusable by any request sharing a token prefix,
+//!   not just an identical prompt). A compressed radix tree over prompt
+//!   token sequences maps a new prompt to the parked holder with the
+//!   longest common prefix; the reusable amount is floored to a page
+//!   boundary ([`RadixMatch::covered`]) because forked page tables
+//!   share whole pages — a partially-matching tail page would leak the
+//!   holder's diverging tokens into the fork.
+//!
+//! Both indexes are advisory on the submit side (admission charges the
+//! ingest estimate against the uncovered suffix only) and authoritative
+//! on the dispatcher side, which owns the holder sessions and keeps the
+//! index in sync as holders are created and retired. Locks degrade
+//! gracefully: a poisoned index reports "no match" rather than
+//! panicking the serving path.
+
+use std::collections::HashMap;
+use std::collections::HashSet;
+use std::sync::Mutex;
+
+/// How the coordinator matches new prompts against cached prefix
+/// holders (`--prefix-mode`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PrefixMode {
+    /// Prompt-hash matching: reuse only byte-identical prompts.
+    Exact,
+    /// Token-granular radix matching: reuse the longest page-aligned
+    /// common token prefix of any cached prompt (the default).
+    #[default]
+    Radix,
+}
+
+impl std::str::FromStr for PrefixMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "exact" => Ok(PrefixMode::Exact),
+            "radix" => Ok(PrefixMode::Radix),
+            other => Err(format!("unknown prefix mode {other:?} (want exact|radix)")),
+        }
+    }
+}
+
+/// Prompt-hash → live-prefix set shared between the submit side (charge
+/// prefill once per unique prefix) and the dispatcher (which owns the
+/// entries: inserted when a holder starts ingesting, removed when it
+/// retires). Admission reads are advisory — a stale hit merely
+/// undercharges one request's estimate.
+#[derive(Default)]
+pub struct PrefixIndex {
+    live: Mutex<HashSet<u64>>,
+}
+
+impl PrefixIndex {
+    /// Whether `hash` names a resident or mid-ingest cached prefix.
+    pub fn is_live(&self, hash: u64) -> bool {
+        self.live.lock().map(|s| s.contains(&hash)).unwrap_or(false)
+    }
+
+    pub(crate) fn insert(&self, hash: u64) {
+        if let Ok(mut s) = self.live.lock() {
+            s.insert(hash);
+        }
+    }
+
+    pub(crate) fn remove(&self, hash: u64) {
+        if let Ok(mut s) = self.live.lock() {
+            s.remove(&hash);
+        }
+    }
+
+    /// Live (resident or mid-ingest) cached prefixes.
+    pub fn len(&self) -> usize {
+        self.live.lock().map(|s| s.len()).unwrap_or(0)
+    }
+
+    /// Whether no cached prefix is live.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Result of a [`RadixIndex::lookup`]: the best cached holder for a
+/// prompt and how much of it is reusable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RadixMatch {
+    /// Holder key the coordinator registered the matching prompt under.
+    pub key: u64,
+    /// Raw longest-common-prefix length, in tokens.
+    pub lcp: usize,
+    /// Reusable token count: `lcp` floored to a page boundary, or the
+    /// whole prompt on an exact match (a full fork shares even the
+    /// partially-filled tail page).
+    pub covered: usize,
+    /// Whether the prompt is byte-identical to the matched holder's.
+    pub exact: bool,
+}
+
+/// One node of the compressed radix tree: a token run (`edge`) plus
+/// children keyed by their edge's first token. `holders` lists every
+/// key whose prompt passes through (or ends in) this node's subtree —
+/// holder counts are capped by the coordinator's holder cache, so the
+/// per-node lists stay tiny. `terminal` lists keys whose prompt ends
+/// exactly at the end of this node's edge.
+#[derive(Debug, Default)]
+struct Node {
+    edge: Vec<i32>,
+    children: HashMap<i32, usize>,
+    holders: Vec<u64>,
+    terminal: Vec<u64>,
+}
+
+/// The tree proper (kept behind [`RadixIndex`]'s lock). Nodes live in a
+/// slab `Vec` with a free list so holder churn does not grow memory
+/// without bound.
+#[derive(Debug)]
+struct RadixTree {
+    nodes: Vec<Node>,
+    free: Vec<usize>,
+    count: usize,
+}
+
+fn common_prefix_len(a: &[i32], b: &[i32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+fn vec_remove(v: &mut Vec<u64>, key: u64) {
+    if let Some(i) = v.iter().position(|&k| k == key) {
+        v.swap_remove(i);
+    }
+}
+
+impl RadixTree {
+    fn new() -> Self {
+        // node 0 is the root (empty edge)
+        RadixTree { nodes: vec![Node::default()], free: vec![], count: 0 }
+    }
+
+    fn alloc(&mut self, node: Node) -> usize {
+        match self.free.pop() {
+            Some(i) => {
+                self.nodes[i] = node;
+                i
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    /// Free `idx` and its whole subtree (only called when the subtree
+    /// holds no keys — descendants of an empty node are empty too,
+    /// because every descendant key also appears in the ancestor's
+    /// `holders`).
+    fn free_subtree(&mut self, idx: usize) {
+        let mut stack = vec![idx];
+        while let Some(i) = stack.pop() {
+            stack.extend(self.nodes[i].children.values().copied());
+            self.nodes[i] = Node::default();
+            self.free.push(i);
+        }
+    }
+
+    fn insert(&mut self, key: u64, prompt: &[i32]) {
+        self.count += 1;
+        let mut cur = 0usize;
+        let mut i = 0usize;
+        loop {
+            if i == prompt.len() {
+                self.nodes[cur].terminal.push(key);
+                return;
+            }
+            let t = prompt[i];
+            let Some(&child) = self.nodes[cur].children.get(&t) else {
+                let leaf = self.alloc(Node {
+                    edge: prompt[i..].to_vec(),
+                    children: HashMap::new(),
+                    holders: vec![key],
+                    terminal: vec![key],
+                });
+                self.nodes[cur].children.insert(t, leaf);
+                return;
+            };
+            let j = common_prefix_len(&self.nodes[child].edge, &prompt[i..]);
+            if j == self.nodes[child].edge.len() {
+                self.nodes[child].holders.push(key);
+                cur = child;
+                i += j;
+                continue;
+            }
+            // split the child's edge at the divergence point
+            let rest_first = self.nodes[child].edge[j];
+            let mid_edge = self.nodes[child].edge[..j].to_vec();
+            self.nodes[child].edge.drain(..j);
+            let mut mid_holders = self.nodes[child].holders.clone();
+            mid_holders.push(key);
+            let mid = self.alloc(Node {
+                edge: mid_edge,
+                children: HashMap::from([(rest_first, child)]),
+                holders: mid_holders,
+                terminal: vec![],
+            });
+            self.nodes[cur].children.insert(t, mid);
+            if i + j == prompt.len() {
+                self.nodes[mid].terminal.push(key);
+            } else {
+                let leaf = self.alloc(Node {
+                    edge: prompt[i + j..].to_vec(),
+                    children: HashMap::new(),
+                    holders: vec![key],
+                    terminal: vec![key],
+                });
+                self.nodes[mid].children.insert(prompt[i + j], leaf);
+            }
+            return;
+        }
+    }
+
+    fn remove(&mut self, key: u64, prompt: &[i32]) {
+        let mut cur = 0usize;
+        let mut i = 0usize;
+        // (parent, first edge token, child) hops taken, for pruning
+        let mut path: Vec<(usize, i32, usize)> = vec![];
+        loop {
+            if i == prompt.len() {
+                // decrement the live count only for a real registration —
+                // removing an absent (key, prompt) must stay a full no-op
+                // so the len() gauge cannot drift
+                if let Some(pos) = self.nodes[cur].terminal.iter().position(|&k| k == key) {
+                    self.nodes[cur].terminal.swap_remove(pos);
+                    self.count = self.count.saturating_sub(1);
+                }
+                break;
+            }
+            let t = prompt[i];
+            let Some(&child) = self.nodes[cur].children.get(&t) else {
+                break; // key was never inserted with this prompt: tolerate
+            };
+            let elen = self.nodes[child].edge.len();
+            if prompt[i..].len() < elen || prompt[i..i + elen] != self.nodes[child].edge[..] {
+                break;
+            }
+            vec_remove(&mut self.nodes[child].holders, key);
+            path.push((cur, t, child));
+            cur = child;
+            i += elen;
+        }
+        // prune now-empty subtrees bottom-up (stop at the first survivor)
+        for &(parent, t, child) in path.iter().rev() {
+            if self.nodes[child].holders.is_empty() {
+                self.nodes[parent].children.remove(&t);
+                self.free_subtree(child);
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn lookup(&self, prompt: &[i32], page_tokens: usize) -> Option<RadixMatch> {
+        let mut cur = 0usize;
+        let mut i = 0usize;
+        loop {
+            if i == prompt.len() {
+                if let Some(&key) = self.nodes[cur].terminal.last() {
+                    return Some(RadixMatch { key, lcp: i, covered: i, exact: true });
+                }
+                return self.best_partial(cur, i, page_tokens);
+            }
+            let Some(&child) = self.nodes[cur].children.get(&prompt[i]) else {
+                return self.best_partial(cur, i, page_tokens);
+            };
+            let j = common_prefix_len(&self.nodes[child].edge, &prompt[i..]);
+            if j == self.nodes[child].edge.len() {
+                cur = child;
+                i += j;
+                continue;
+            }
+            // stopped mid-edge: every holder under `child` shares i+j tokens
+            return self.best_partial(child, i + j, page_tokens);
+        }
+    }
+
+    /// Best non-exact candidate at a stop point: any holder in `node`'s
+    /// subtree shares exactly `lcp` leading tokens with the query.
+    fn best_partial(&self, node: usize, lcp: usize, page_tokens: usize) -> Option<RadixMatch> {
+        let covered = lcp - lcp % page_tokens.max(1);
+        if covered == 0 {
+            return None;
+        }
+        let key = *self.nodes[node].holders.last()?;
+        Some(RadixMatch { key, lcp, covered, exact: false })
+    }
+}
+
+/// Token-granular prefix index: a compressed radix tree over the
+/// prompts of live prefix holders, shared (like [`PrefixIndex`])
+/// between the submit side and the dispatcher. See module docs for the
+/// matching semantics and [`RadixMatch`] for what a lookup returns.
+pub struct RadixIndex {
+    page_tokens: usize,
+    tree: Mutex<RadixTree>,
+}
+
+impl RadixIndex {
+    /// Build an empty index; `page_tokens` is the KV page size used to
+    /// floor partial matches to page-aligned split points.
+    pub fn new(page_tokens: usize) -> Self {
+        RadixIndex { page_tokens, tree: Mutex::new(RadixTree::new()) }
+    }
+
+    /// Register `prompt` under a holder `key` (keys are unique per
+    /// holder; the dispatcher allocates them from the request id space).
+    pub fn insert(&self, key: u64, prompt: &[i32]) {
+        if let Ok(mut t) = self.tree.lock() {
+            t.insert(key, prompt);
+        }
+    }
+
+    /// Remove the `(key, prompt)` registration (no-op if absent).
+    pub fn remove(&self, key: u64, prompt: &[i32]) {
+        if let Ok(mut t) = self.tree.lock() {
+            t.remove(key, prompt);
+        }
+    }
+
+    /// The holder sharing the longest token prefix with `prompt`, if any
+    /// of it is reusable (exact match, or at least one whole page).
+    pub fn lookup(&self, prompt: &[i32]) -> Option<RadixMatch> {
+        self.tree.lock().ok().and_then(|t| t.lookup(prompt, self.page_tokens))
+    }
+
+    /// Live registered holders.
+    pub fn len(&self) -> usize {
+        self.tree.lock().map(|t| t.count).unwrap_or(0)
+    }
+
+    /// Whether no holder is registered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    const PT: usize = 4; // page_tokens for the unit tests
+
+    #[test]
+    fn prefix_index_tracks_live_hashes() {
+        let ix = PrefixIndex::default();
+        assert!(ix.is_empty());
+        assert!(!ix.is_live(7));
+        ix.insert(7);
+        assert!(ix.is_live(7));
+        assert_eq!(ix.len(), 1);
+        ix.remove(7);
+        assert!(!ix.is_live(7));
+    }
+
+    #[test]
+    fn prefix_mode_parses() {
+        assert_eq!("exact".parse::<PrefixMode>().unwrap(), PrefixMode::Exact);
+        assert_eq!("radix".parse::<PrefixMode>().unwrap(), PrefixMode::Radix);
+        assert!("fuzzy".parse::<PrefixMode>().is_err());
+        assert_eq!(PrefixMode::default(), PrefixMode::Radix);
+    }
+
+    #[test]
+    fn exact_match_beats_page_flooring() {
+        let ix = RadixIndex::new(PT);
+        let p: Vec<i32> = vec![1, 2, 3, 4, 5, 6]; // 6 tokens: not page-aligned
+        ix.insert(9, &p);
+        let m = ix.lookup(&p).expect("exact hit");
+        assert_eq!(m, RadixMatch { key: 9, lcp: 6, covered: 6, exact: true });
+    }
+
+    #[test]
+    fn partial_match_floors_to_page_boundary() {
+        let ix = RadixIndex::new(PT);
+        ix.insert(1, &[1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        // shares 6 tokens -> 1 whole page of 4
+        let m = ix.lookup(&[1, 2, 3, 4, 5, 6, 99, 98]).expect("partial hit");
+        assert_eq!((m.key, m.lcp, m.covered, m.exact), (1, 6, 4, false));
+        // shares only 3 tokens -> below a page: no usable match
+        assert!(ix.lookup(&[1, 2, 3, 99]).is_none());
+        // query that is a strict prefix of the holder still matches
+        let m = ix.lookup(&[1, 2, 3, 4, 5]).expect("prefix-of-holder hit");
+        assert_eq!((m.lcp, m.covered, m.exact), (5, 4, false));
+    }
+
+    #[test]
+    fn longest_of_several_holders_wins() {
+        let ix = RadixIndex::new(PT);
+        ix.insert(1, &[1, 2, 3, 4, 9, 9, 9, 9]);
+        ix.insert(2, &[1, 2, 3, 4, 5, 6, 7, 8, 50]);
+        let m = ix.lookup(&[1, 2, 3, 4, 5, 6, 7, 8, 60, 61]).expect("hit");
+        assert_eq!((m.key, m.lcp, m.covered), (2, 8, 8));
+        // diverging right after the shared run still finds the short one
+        let m = ix.lookup(&[1, 2, 3, 4, 9, 9, 70, 71]).expect("hit");
+        assert_eq!((m.key, m.lcp, m.covered), (1, 6, 4));
+    }
+
+    #[test]
+    fn remove_retires_holders_and_prunes() {
+        let ix = RadixIndex::new(PT);
+        let a: Vec<i32> = (0..12).collect();
+        let b: Vec<i32> = (0..8).chain([90, 91, 92, 93]).collect();
+        ix.insert(1, &a);
+        ix.insert(2, &b);
+        assert_eq!(ix.len(), 2);
+        ix.remove(1, &a);
+        assert_eq!(ix.len(), 1);
+        // the shared prefix must now resolve to holder 2 only
+        let m = ix.lookup(&a).expect("shared prefix still cached via b");
+        assert_eq!((m.key, m.covered, m.exact), (2, 8, false));
+        ix.remove(2, &b);
+        assert!(ix.is_empty());
+        assert!(ix.lookup(&a).is_none());
+        // removing an unknown key is a no-op, not a panic
+        ix.remove(3, &a);
+    }
+
+    #[test]
+    fn empty_prompt_only_matches_an_empty_holder_exactly() {
+        let ix = RadixIndex::new(PT);
+        ix.insert(5, &[1, 2, 3, 4]);
+        assert!(ix.lookup(&[]).is_none());
+        ix.insert(6, &[]);
+        let m = ix.lookup(&[]).expect("empty exact hit");
+        assert_eq!((m.key, m.lcp, m.covered, m.exact), (6, 0, 0, true));
+    }
+
+    /// Satellite property test: against a random prompt set, every
+    /// lookup must return the true longest page-aligned common prefix —
+    /// checked against a brute-force LCP oracle over all live prompts —
+    /// and removals must keep the index consistent.
+    #[test]
+    fn prop_lookup_finds_true_longest_page_aligned_prefix() {
+        forall(
+            42,
+            60,
+            |r: &mut Rng| {
+                // small alphabet + shared stems force deep prefix overlap
+                let n_prompts = 2 + r.below(6) as usize;
+                let prompts: Vec<Vec<i32>> = (0..n_prompts)
+                    .map(|_| {
+                        let len = 1 + r.below(24) as usize;
+                        (0..len).map(|_| r.below(3) as i32).collect()
+                    })
+                    .collect();
+                let queries: Vec<Vec<i32>> = (0..6)
+                    .map(|_| {
+                        let len = 1 + r.below(24) as usize;
+                        (0..len).map(|_| r.below(3) as i32).collect()
+                    })
+                    .collect();
+                let drop_mask: Vec<bool> = (0..n_prompts).map(|_| r.below(3) == 0).collect();
+                (prompts, queries, drop_mask)
+            },
+            |(prompts, queries, drop_mask)| {
+                let ix = RadixIndex::new(PT);
+                for (k, p) in prompts.iter().enumerate() {
+                    ix.insert(k as u64, p);
+                }
+                // retire a random subset, as holder churn would
+                let mut live: Vec<(u64, &Vec<i32>)> = vec![];
+                for (k, p) in prompts.iter().enumerate() {
+                    if drop_mask.get(k).copied().unwrap_or(false) {
+                        ix.remove(k as u64, p);
+                    } else {
+                        live.push((k as u64, p));
+                    }
+                }
+                if ix.len() != live.len() {
+                    return Err(format!("len {} != live {}", ix.len(), live.len()));
+                }
+                for q in prompts.iter().chain(queries) {
+                    let lcp = |p: &[i32]| common_prefix_len(q, p);
+                    let oracle_lcp = live.iter().map(|(_, p)| lcp(p)).max().unwrap_or(0);
+                    let oracle_exact = live.iter().any(|(_, p)| p.as_slice() == q.as_slice());
+                    let oracle_covered = if oracle_exact {
+                        q.len()
+                    } else {
+                        oracle_lcp - oracle_lcp % PT
+                    };
+                    match ix.lookup(q) {
+                        None => {
+                            if oracle_exact || oracle_covered > 0 {
+                                return Err(format!(
+                                    "missed match for {q:?}: oracle covered {oracle_covered}"
+                                ));
+                            }
+                        }
+                        Some(m) => {
+                            let (_, held) = live
+                                .iter()
+                                .find(|(k, _)| *k == m.key)
+                                .ok_or_else(|| format!("lookup returned dead key {}", m.key))?;
+                            if lcp(held) != m.lcp {
+                                return Err(format!(
+                                    "reported lcp {} but true lcp with key {} is {}",
+                                    m.lcp,
+                                    m.key,
+                                    lcp(held)
+                                ));
+                            }
+                            if m.exact != (held.as_slice() == q.as_slice()) {
+                                return Err(format!("exactness misreported for {q:?}"));
+                            }
+                            if m.covered != oracle_covered {
+                                return Err(format!(
+                                    "covered {} != oracle {oracle_covered} for {q:?}",
+                                    m.covered
+                                ));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -10,17 +10,59 @@ use crate::runtime::ScalarValue;
 /// (uniform SAM and the +TPD ablation are Stem with mu=1 / beta=0).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Method {
+    /// Full causal attention (the quality/latency baseline).
     Dense,
-    Stem { k_start: f32, mu: f32, beta: f32 },
-    Streaming { sink: i32, local: i32 },
-    XAttn { tau: f32 },
-    MInference { vertical: i32, slash: i32 },
-    FlexPrefill { gamma: f32, entropy: f32 },
+    /// Stem: TPD budget decay + OAM block selection.
+    Stem {
+        /// Starting block budget of the TPD schedule.
+        k_start: f32,
+        /// Decay floor multiplier (budget → `mu·k_start`).
+        mu: f32,
+        /// OAM value-magnitude weight (Eq. 7).
+        beta: f32,
+    },
+    /// StreamingLLM-style sinks + local window.
+    Streaming {
+        /// Leading sink blocks always kept.
+        sink: i32,
+        /// Trailing local blocks always kept.
+        local: i32,
+    },
+    /// XAttention baseline (threshold on antidiagonal scores).
+    XAttn {
+        /// Score-mass threshold.
+        tau: f32,
+    },
+    /// MInference vertical-slash baseline.
+    MInference {
+        /// Vertical stripes kept.
+        vertical: i32,
+        /// Slash diagonals kept.
+        slash: i32,
+    },
+    /// FlexPrefill baseline (entropy-adaptive budget).
+    FlexPrefill {
+        /// Coverage parameter.
+        gamma: f32,
+        /// Entropy threshold.
+        entropy: f32,
+    },
     /// Figure-3 diagnostic (diag module only).
-    Segment { lo: i32, hi: i32, k_seg: i32, ratio: f32 },
+    Segment {
+        /// First block of the probed segment.
+        lo: i32,
+        /// One past the last block of the probed segment.
+        hi: i32,
+        /// Blocks kept inside the segment.
+        k_seg: i32,
+        /// Keep ratio outside the segment.
+        ratio: f32,
+    },
 }
 
 impl Method {
+    /// The compiled-module kind serving this method (`diag` selects the
+    /// diagnostic variant that also returns hidden states).
     pub fn kind(&self, diag: bool) -> &'static str {
         let base = match self {
             Method::Dense => "dense",
@@ -46,6 +88,8 @@ impl Method {
         }
     }
 
+    /// Runtime scalar arguments in the order the compiled module's
+    /// manifest declares them.
     pub fn scalars(&self) -> Vec<ScalarValue> {
         use ScalarValue::*;
         match *self {
@@ -75,26 +119,43 @@ impl Method {
     }
 }
 
+/// One prefill request as queued in the coordinator.
 #[derive(Debug, Clone)]
 pub struct PrefillRequest {
+    /// Coordinator-assigned request id.
     pub id: u64,
+    /// Weight checkpoint to execute against.
     pub checkpoint: String,
+    /// Attention method + its runtime scalars.
     pub method: Method,
+    /// Input token ids (padded to the bucket at execution).
     pub ids: Vec<i32>,
+    /// Route to the diagnostic module (also returns hidden states).
     pub diag: bool,
+    /// Submission time (queue-latency accounting).
     pub enqueued: Instant,
 }
 
+/// Result of one prefill execution.
 #[derive(Debug)]
 pub struct PrefillResponse {
+    /// The request id this answers.
     pub id: u64,
+    /// Row-major `[n_ctx, vocab]` logits.
     pub logits: Vec<f32>,
+    /// Vocabulary size (row stride of `logits`).
     pub vocab: usize,
+    /// Padded context length executed.
     pub n_ctx: usize,
+    /// Unpadded input length.
     pub n_input: usize,
+    /// Fraction of causal pairs computed (the paper's BUD column).
     pub budget_fraction: f32,
+    /// Per-layer hidden states (diagnostic modules only).
     pub hidden: Option<Vec<f32>>,
+    /// Microseconds spent queued before execution.
     pub queue_us: u64,
+    /// Microseconds spent executing on a worker.
     pub exec_us: u64,
 }
 
@@ -107,16 +168,20 @@ pub struct GenerateRequest {
     /// Base id of the request: the prefix-holder sequence is `id`, the
     /// branch sequences `id+1 ..= id+fanout`.
     pub id: u64,
+    /// Prompt token ids shared by every branch.
     pub prompt: Vec<i32>,
+    /// Per-branch generation-length cap.
     pub max_new_tokens: usize,
+    /// Per-step sparsity policy every branch decodes under.
     pub policy: DecodePolicy,
     /// Continuations to serve off one shared prompt prefix (>= 1). The
     /// prompt is prefilled once; every branch forks the refcounted
     /// prefix and diverges copy-on-write.
     pub fanout: usize,
     /// `prompt_hash(&prompt)`, computed once at submit so the dispatcher
-    /// hot path does not re-hash long prompts.
+    /// hot path does not re-hash long prompts (exact prefix mode).
     pub prefix_hash: u64,
+    /// Submission time (queue-latency accounting).
     pub enqueued: Instant,
 }
 
@@ -124,10 +189,13 @@ pub struct GenerateRequest {
 /// decode session; the coordinator returns the aggregate).
 #[derive(Debug, Clone)]
 pub struct GenerateResponse {
+    /// The branch's sequence id.
     pub id: u64,
     /// Generated tokens, in order (may stop early on the END token).
     pub tokens: Vec<i32>,
+    /// Prompt length the branch conditioned on.
     pub n_prompt: usize,
+    /// Decode steps executed (equals `tokens.len()`).
     pub steps: usize,
     /// Mean fraction of the cached context attended per step.
     pub mean_budget_fraction: f64,

@@ -7,14 +7,30 @@
 //!
 //! Shared-prefix fan-out: Stem's core observation — initial tokens feed
 //! every later token's aggregation — makes the prompt prefix the most
-//! reused KV in the system, so generations route through a *prefix
-//! holder* session keyed by prompt hash: the first request ingests the
-//! prompt once, every branch (`submit_generate_many` / `fanout`) forks
-//! the refcounted prefix and diverges copy-on-write. Parked holders form
-//! a prefix cache (unpinned, LRU-evictable under page pressure, capped
-//! at [`MAX_PREFIX_HOLDERS`]); the [`PrefixIndex`] lets admission charge
-//! the ingest cost only to the first branch of a prefix that is not
-//! already resident.
+//! reused KV in the system, so generations route through *prefix
+//! holder* sessions: the first request ingests a prompt once, every
+//! branch (`submit_generate_many` / `fanout`) forks the refcounted
+//! prefix and diverges copy-on-write. Parked holders form a prefix
+//! cache (unpinned, LRU-evictable under page pressure, capped at
+//! [`MAX_PREFIX_HOLDERS`] with LCP-aware retirement — the lightest
+//! covered-tokens × refcount holder goes first).
+//!
+//! Holder lookup is governed by [`PrefixMode`] (`--prefix-mode`):
+//!
+//! * **exact** — prompt-hash keyed; only byte-identical prompts reuse a
+//!   holder ([`PrefixIndex`]).
+//! * **radix** (default) — token-granular: a [`RadixIndex`] maps the new
+//!   prompt to the holder with the longest page-aligned common token
+//!   prefix. A *partial* hit forks just the covered pages off the
+//!   matched holder ([`DecodeSession::fork_prefix`]) into a fresh
+//!   holder, ingests only the uncovered prompt suffix
+//!   ([`DecodeSession::extend_prompt`]), and parks it under the full
+//!   prompt — so overlapping prompt families converge onto shared page
+//!   prefixes instead of re-ingesting from scratch.
+//!
+//! Either index lets admission charge the ingest estimate against the
+//! uncovered suffix only ([`estimate_ingest_ns`] on the suffix length);
+//! every branch still pays its own decode estimate.
 //!
 //! Threading model (std threads; see DESIGN.md §2 on tokio):
 //!   * callers enqueue via `submit` / `submit_generate` /
@@ -31,7 +47,7 @@
 //!     and share a dispatch round
 //!   * completions flow back through per-request channels
 
-use std::collections::{HashMap, HashSet};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
@@ -45,6 +61,7 @@ use super::batcher::{
 };
 use super::kv_cache::{KvConfig, KvError};
 use super::metrics::Metrics;
+use super::prefix::{PrefixIndex, PrefixMode, RadixIndex};
 use super::request::{GenerateRequest, GenerateResponse, Method, PrefillRequest, PrefillResponse};
 use crate::decode::{DecodeError, DecodePolicy, DecodeSession, SharedKv, StepPlan, TinyLm};
 use crate::model::vocab;
@@ -52,17 +69,26 @@ use crate::runtime::Engine;
 use crate::sim::cost::{estimate_generate_ns, estimate_ingest_ns, Geometry};
 use crate::util::threadpool::ThreadPool;
 
-/// Parked prefix holders kept as a cache before the oldest are retired
-/// (their pages also yield to LRU eviction under pool pressure).
-const MAX_PREFIX_HOLDERS: usize = 32;
+/// Parked prefix holders kept as a cache before the lightest are
+/// retired (their pages also yield to LRU eviction under pool pressure).
+pub const MAX_PREFIX_HOLDERS: usize = 32;
 
+/// Construction-time knobs of a [`Coordinator`].
 pub struct CoordinatorConfig {
+    /// Worker threads executing prefill batches and decode steps.
     pub workers: usize,
+    /// Size-or-timeout policy of the prefill batcher.
     pub batcher: BatcherConfig,
     /// Size-or-timeout policy of the decode-step lane.
     pub decode_lane: DecodeLaneConfig,
+    /// Backpressure limits (tokens, requests, estimated work).
     pub admission: AdmissionConfig,
+    /// Total pages in the shared KV pool.
     pub kv_pages: usize,
+    /// How generations match cached prompt prefixes (`--prefix-mode`):
+    /// exact prompt-hash equality, or token-granular radix matching with
+    /// partial (page-aligned) reuse. Defaults to radix.
+    pub prefix_mode: PrefixMode,
 }
 
 impl Default for CoordinatorConfig {
@@ -73,6 +99,7 @@ impl Default for CoordinatorConfig {
             decode_lane: DecodeLaneConfig::default(),
             admission: AdmissionConfig::default(),
             kv_pages: 4096,
+            prefix_mode: PrefixMode::default(),
         }
     }
 }
@@ -84,46 +111,36 @@ pub fn prompt_hash(prompt: &[i32]) -> u64 {
     for &t in prompt {
         for b in t.to_le_bytes() {
             h ^= b as u64;
-            h = h.wrapping_mul(0x1_0000_0000_01b3);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
         }
     }
     h
 }
 
-/// Prompt-hash → live-prefix set shared between the submit side (charge
-/// prefill once per unique prefix) and the dispatcher (which owns the
-/// entries: inserted when a holder starts ingesting, removed when it
-/// retires). Admission reads are advisory — a stale hit merely
-/// undercharges one request's estimate.
-#[derive(Default)]
-pub struct PrefixIndex {
-    live: Mutex<HashSet<u64>>,
+/// Mode-dispatched view over the two prefix indexes, so holder
+/// bookkeeping (insert on fill start, remove on retirement) is written
+/// once. Copyable borrow bundle — the dispatcher threads it through the
+/// routing helpers.
+#[derive(Clone, Copy)]
+struct PrefixTables<'a> {
+    mode: PrefixMode,
+    exact: &'a PrefixIndex,
+    radix: &'a RadixIndex,
 }
 
-impl PrefixIndex {
-    pub fn is_live(&self, hash: u64) -> bool {
-        self.live.lock().map(|s| s.contains(&hash)).unwrap_or(false)
-    }
-
-    fn insert(&self, hash: u64) {
-        if let Ok(mut s) = self.live.lock() {
-            s.insert(hash);
+impl PrefixTables<'_> {
+    fn insert(&self, key: u64, prompt: &[i32]) {
+        match self.mode {
+            PrefixMode::Exact => self.exact.insert(key),
+            PrefixMode::Radix => self.radix.insert(key, prompt),
         }
     }
 
-    fn remove(&self, hash: u64) {
-        if let Ok(mut s) = self.live.lock() {
-            s.remove(&hash);
+    fn remove(&self, key: u64, prompt: &[i32]) {
+        match self.mode {
+            PrefixMode::Exact => self.exact.remove(key),
+            PrefixMode::Radix => self.radix.remove(key, prompt),
         }
-    }
-
-    /// Live (resident or mid-ingest) cached prefixes.
-    pub fn len(&self) -> usize {
-        self.live.lock().map(|s| s.len()).unwrap_or(0)
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
     }
 }
 
@@ -188,14 +205,18 @@ struct Holder {
     last_used: u64,
 }
 
+/// The serving runtime (see module docs for the threading model).
 pub struct Coordinator {
     engine: Arc<Engine>,
     tx: mpsc::Sender<Msg>,
     dispatcher: Option<thread::JoinHandle<()>>,
+    /// Serving counters/histograms behind [`Coordinator::report`].
     pub metrics: Arc<Metrics>,
     admission: Arc<Admission>,
     kv: Arc<SharedKv>,
     prefix_index: Arc<PrefixIndex>,
+    radix_index: Arc<RadixIndex>,
+    prefix_mode: PrefixMode,
     decode_model: Arc<TinyLm>,
     geometry: Geometry,
     workers: usize,
@@ -204,6 +225,9 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
+    /// Boot the serving stack over a compiled [`Engine`]: spawn the
+    /// dispatcher thread, size the shared KV pool from the manifest
+    /// geometry, and wire up admission + both prefix indexes.
     pub fn new(engine: Arc<Engine>, cfg: CoordinatorConfig) -> Coordinator {
         let metrics = Arc::new(Metrics::new());
         let admission = Arc::new(Admission::new(cfg.admission));
@@ -218,6 +242,7 @@ impl Coordinator {
             decode_model.dh,
         );
         let prefix_index = Arc::new(PrefixIndex::default());
+        let radix_index = Arc::new(RadixIndex::new(m.block));
         let geometry = Geometry {
             n_layers: 1,
             n_heads: m.n_heads,
@@ -234,6 +259,8 @@ impl Coordinator {
             let admission = Arc::clone(&admission);
             let kv = Arc::clone(&kv);
             let prefix_index = Arc::clone(&prefix_index);
+            let radix_index = Arc::clone(&radix_index);
+            let prefix_mode = cfg.prefix_mode;
             let decode_model = Arc::clone(&decode_model);
             let batcher_cfg = cfg.batcher.clone();
             let decode_cfg = cfg.decode_lane.clone();
@@ -248,6 +275,8 @@ impl Coordinator {
                     admission,
                     kv,
                     prefix_index,
+                    radix_index,
+                    prefix_mode,
                     decode_model,
                     batcher_cfg,
                     decode_cfg,
@@ -264,6 +293,8 @@ impl Coordinator {
             admission,
             kv,
             prefix_index,
+            radix_index,
+            prefix_mode: cfg.prefix_mode,
             decode_model,
             geometry,
             workers: cfg.workers,
@@ -272,6 +303,7 @@ impl Coordinator {
         }
     }
 
+    /// The PJRT engine executing prefill graphs.
     pub fn engine(&self) -> &Arc<Engine> {
         &self.engine
     }
@@ -288,9 +320,29 @@ impl Coordinator {
         &self.kv
     }
 
-    /// The live-prefix index (admission-side view of the prefix cache).
+    /// The exact-mode live-prefix index (admission-side view of the
+    /// prefix cache when `prefix_mode` is [`PrefixMode::Exact`]).
     pub fn prefix_index(&self) -> &Arc<PrefixIndex> {
         &self.prefix_index
+    }
+
+    /// The token-granular radix index (admission-side view of the
+    /// prefix cache when `prefix_mode` is [`PrefixMode::Radix`]).
+    pub fn radix_index(&self) -> &Arc<RadixIndex> {
+        &self.radix_index
+    }
+
+    /// The active prefix-matching mode.
+    pub fn prefix_mode(&self) -> PrefixMode {
+        self.prefix_mode
+    }
+
+    /// Live cached prefixes under the active mode.
+    pub fn cached_prefixes(&self) -> usize {
+        match self.prefix_mode {
+            PrefixMode::Exact => self.prefix_index.len(),
+            PrefixMode::Radix => self.radix_index.len(),
+        }
     }
 
     /// Route + admit + enqueue. Returns the response channel, or an
@@ -342,12 +394,13 @@ impl Coordinator {
 
     /// Submit `fanout` continuations of one prompt: the prompt is
     /// ingested once into a prefix-holder session (reused across
-    /// requests with the same prompt), each branch forks the refcounted
-    /// prefix and decodes independently with copy-on-write divergence.
-    /// Admission charges the decode work per branch but the prefill work
-    /// once per unique prefix ([`estimate_ingest_ns`]), and not at all
-    /// when the prefix is already resident. Returns one response channel
-    /// per branch, in branch order.
+    /// requests, exactly or — in radix mode — by longest page-aligned
+    /// common prefix), each branch forks the refcounted prefix and
+    /// decodes independently with copy-on-write divergence. Admission
+    /// charges the decode work per branch but the ingest work only for
+    /// the prompt suffix not covered by a cached prefix
+    /// ([`estimate_ingest_ns`] on the suffix length — zero on a full
+    /// hit). Returns one response channel per branch, in branch order.
     pub fn submit_generate_many(
         &self,
         prompt: Vec<i32>,
@@ -377,23 +430,40 @@ impl Coordinator {
             policy.stride,
             self.workers,
         );
-        let ingest_ns = estimate_ingest_ns(&self.geometry, prompt.len());
-        let decode_ns = (full_ns - ingest_ns).max(0.0);
+        let full_ingest_ns = estimate_ingest_ns(&self.geometry, prompt.len());
+        let decode_ns = (full_ns - full_ingest_ns).max(0.0);
         let prefix_hash = prompt_hash(&prompt);
-        // the one-time ingest is charged to the first branch only, and
-        // skipped entirely on a live prefix; totals are closed-form so
-        // the admission decision runs BEFORE any per-branch allocation
-        // (a huge fanout must reject cleanly, not OOM building vectors —
-        // `max_requests` bounds the group size)
-        let charge_ingest = !self.prefix_index.is_live(prefix_hash);
-        let Some(total_tokens) = fanout
-            .checked_mul(max_new_tokens)
-            .and_then(|t| t.checked_add(if charge_ingest { prompt.len() } else { 0 }))
+        // token-granular admission: only the *uncovered* prompt suffix
+        // is charged, once, to the first branch — an exact live prefix
+        // covers everything (the charge-once-per-unique-prefix rule), a
+        // radix match covers its page-aligned LCP. Index reads are
+        // advisory; a stale hit merely undercharges one estimate. Totals
+        // are closed-form so the admission decision runs BEFORE any
+        // per-branch allocation (a huge fanout must reject cleanly, not
+        // OOM building vectors — `max_requests` bounds the group size).
+        let covered = match self.prefix_mode {
+            PrefixMode::Exact => {
+                if self.prefix_index.is_live(prefix_hash) {
+                    prompt.len()
+                } else {
+                    0
+                }
+            }
+            PrefixMode::Radix => self
+                .radix_index
+                .lookup(&prompt)
+                .map(|m| m.covered.min(prompt.len()))
+                .unwrap_or(0),
+        };
+        let suffix_len = prompt.len() - covered;
+        let ingest_ns = estimate_ingest_ns(&self.geometry, suffix_len);
+        let Some(total_tokens) =
+            fanout.checked_mul(max_new_tokens).and_then(|t| t.checked_add(suffix_len))
         else {
             self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
             return Err(anyhow!("rejected: fanout x max_new_tokens overflows"));
         };
-        let total_ns = fanout as f64 * decode_ns + if charge_ingest { ingest_ns } else { 0.0 };
+        let total_ns = fanout as f64 * decode_ns + ingest_ns;
         match self.admission.try_admit_work_n(fanout, total_tokens, total_ns) {
             Admit::Accepted => {}
             Admit::Rejected { reason } => {
@@ -403,9 +473,9 @@ impl Coordinator {
         }
         let mut admits = Vec::with_capacity(fanout);
         for i in 0..fanout {
-            let first = i == 0 && charge_ingest;
+            let first = i == 0 && suffix_len > 0;
             admits.push(BranchAdmit {
-                tokens: max_new_tokens + if first { prompt.len() } else { 0 },
+                tokens: max_new_tokens + if first { suffix_len } else { 0 },
                 ns: decode_ns + if first { ingest_ns } else { 0.0 },
             });
         }
@@ -459,6 +529,7 @@ impl Coordinator {
         rx.recv().map_err(|_| anyhow!("response channel closed"))?
     }
 
+    /// Wall-clock time since the coordinator booted.
     pub fn uptime(&self) -> Duration {
         self.started.elapsed()
     }
@@ -468,6 +539,8 @@ impl Coordinator {
         self.kv.occupancy()
     }
 
+    /// Human-readable serving report: request/decode/fan-out counters,
+    /// latency percentiles, KV occupancy and prefix-cache gauges.
     pub fn report(&self) -> String {
         let (used, total, frac) = self.kv_occupancy();
         format!(
@@ -475,7 +548,7 @@ impl Coordinator {
             self.metrics.report(self.uptime()),
             100.0 * frac,
             self.kv.pages_resident(),
-            self.prefix_index.len(),
+            self.cached_prefixes(),
         )
     }
 }
@@ -497,6 +570,8 @@ struct DispatcherCtx {
     admission: Arc<Admission>,
     kv: Arc<SharedKv>,
     prefix_index: Arc<PrefixIndex>,
+    radix_index: Arc<RadixIndex>,
+    prefix_mode: PrefixMode,
     decode_model: Arc<TinyLm>,
     batcher_cfg: BatcherConfig,
     decode_cfg: DecodeLaneConfig,
@@ -512,16 +587,21 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
         admission,
         kv,
         prefix_index,
+        radix_index,
+        prefix_mode,
         decode_model,
         batcher_cfg,
         decode_cfg,
         workers,
     } = ctx;
+    let tables = PrefixTables { mode: prefix_mode, exact: &prefix_index, radix: &radix_index };
     let pool = ThreadPool::new(workers);
     let mut batcher = Batcher::with_decode(batcher_cfg.clone(), decode_cfg.clone());
     let mut channels: HashMap<u64, mpsc::Sender<Result<PrefillResponse>>> = HashMap::new();
     let tasks: DecodeTasks = Arc::new(Mutex::new(HashMap::new()));
-    // prefix cache: holder sessions keyed by prompt hash (see module docs)
+    // prefix cache: holder sessions keyed by prompt hash (exact mode)
+    // or by their own holder id with prompts indexed in the radix tree
+    // (see module docs)
     let mut holders: HashMap<u64, Holder> = HashMap::new();
     let mut holder_clock: u64 = 0;
     // generations admitted but not yet completed (branches may be queued
@@ -594,39 +674,92 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                         continue;
                     }
                     active_decodes.fetch_add(specs.len(), Ordering::SeqCst);
-                    let hash = req.prefix_hash;
-                    // hash collision with a cached *different* prompt:
-                    // bypass the cache under a synthetic single-use key
-                    let key = match holders.get(&hash) {
-                        Some(h) if h.prompt != req.prompt => {
-                            hash ^ req.id.rotate_left(17) ^ 0x9e37_79b9_7f4a_7c15
-                        }
-                        _ => hash,
-                    };
+                    // covered-token gauge: every routed group contributes
+                    // its prompt length; hits add back what the cache
+                    // actually covered
+                    metrics.prefix_tokens_total.fetch_add(n_prompt as u64, Ordering::Relaxed);
                     enum Route {
-                        Hit,
-                        Filling,
-                        Refill,
-                        Miss,
+                        // parked holder with this exact prompt: fork it
+                        Hit(u64),
+                        // same prompt mid-ingest: queue on the holder
+                        Filling(u64),
+                        // holder exists but its pages were evicted:
+                        // retire `stale`, re-ingest under `fresh`
+                        Refill { stale: u64, fresh: u64 },
+                        // radix-only: a holder covers a page-aligned
+                        // prefix; fork it and ingest just the suffix
+                        Partial { src: u64, covered: usize },
+                        // nothing reusable: ingest under a new holder
+                        Miss(u64),
                     }
-                    let route = match holders.get(&key) {
-                        None => Route::Miss,
-                        Some(h) => match &h.session {
-                            None => Route::Filling,
-                            // verify the parked prefix survived LRU pressure
-                            Some(_)
-                                if kv.seq_tokens(h.seq).ok().flatten() == Some(n_prompt) =>
-                            {
-                                Route::Hit
+                    let route = match prefix_mode {
+                        PrefixMode::Exact => {
+                            let hash = req.prefix_hash;
+                            // hash collision with a cached *different*
+                            // prompt: bypass the cache under a synthetic
+                            // single-use key
+                            let key = match holders.get(&hash) {
+                                Some(h) if h.prompt != req.prompt => {
+                                    hash ^ req.id.rotate_left(17) ^ 0x9e37_79b9_7f4a_7c15
+                                }
+                                _ => hash,
+                            };
+                            match holders.get(&key) {
+                                None => Route::Miss(key),
+                                Some(h) => match &h.session {
+                                    None => Route::Filling(key),
+                                    // verify the parked prefix survived
+                                    // LRU pressure
+                                    Some(_)
+                                        if kv.seq_tokens(h.seq).ok().flatten()
+                                            == Some(n_prompt) =>
+                                    {
+                                        Route::Hit(key)
+                                    }
+                                    Some(_) => Route::Refill { stale: key, fresh: key },
+                                },
                             }
-                            Some(_) => Route::Refill,
+                        }
+                        PrefixMode::Radix => match radix_index.lookup(&req.prompt) {
+                            None => Route::Miss(req.id),
+                            Some(m) => match holders.get(&m.key) {
+                                // index/holder desync (holder retired
+                                // between lookup and here): re-ingest
+                                None => Route::Miss(req.id),
+                                Some(h) if m.exact => match &h.session {
+                                    None => Route::Filling(m.key),
+                                    Some(_)
+                                        if kv.seq_tokens(h.seq).ok().flatten()
+                                            == Some(n_prompt) =>
+                                    {
+                                        Route::Hit(m.key)
+                                    }
+                                    Some(_) => {
+                                        Route::Refill { stale: m.key, fresh: req.id }
+                                    }
+                                },
+                                // partial overlap is only usable against a
+                                // parked holder whose pages are still fresh
+                                Some(h)
+                                    if m.covered > 0
+                                        && h.session.is_some()
+                                        && kv.seq_tokens(h.seq).ok().flatten()
+                                            == Some(h.prompt.len()) =>
+                                {
+                                    Route::Partial { src: m.key, covered: m.covered }
+                                }
+                                Some(_) => Route::Miss(req.id),
+                            },
                         },
                     };
                     match route {
-                        Route::Hit => {
+                        Route::Hit(key) => {
                             metrics.prefix_hits.fetch_add(specs.len() as u64, Ordering::Relaxed);
-                            // touch the holder so cap-retirement is LRU,
-                            // not FIFO — hot prefixes must stay cached
+                            metrics
+                                .prefix_tokens_covered
+                                .fetch_add(n_prompt as u64, Ordering::Relaxed);
+                            // touch the holder so cap-retirement favors
+                            // hot prefixes
                             holder_clock += 1;
                             let holder = holders.get_mut(&key).unwrap();
                             holder.last_used = holder_clock;
@@ -646,15 +779,20 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                                 metrics
                                     .prefix_hits
                                     .fetch_sub(bounced.len() as u64, Ordering::Relaxed);
-                                holders.remove(&key);
-                                prefix_index.remove(key);
+                                let stale = holders.remove(&key).unwrap();
+                                tables.remove(key, &stale.prompt);
+                                let fresh = match prefix_mode {
+                                    PrefixMode::Exact => key,
+                                    PrefixMode::Radix => req.id,
+                                };
                                 start_prefix_fill(
-                                    key,
+                                    fresh,
                                     req,
                                     bounced,
+                                    None,
                                     &mut holders,
                                     &mut holder_clock,
-                                    &prefix_index,
+                                    tables,
                                     &kv,
                                     &decode_model,
                                     &metrics,
@@ -665,23 +803,27 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                                 );
                             }
                         }
-                        Route::Filling => {
+                        Route::Filling(key) => {
                             // ingest already in flight: ride it for free
                             metrics.prefix_hits.fetch_add(specs.len() as u64, Ordering::Relaxed);
+                            metrics
+                                .prefix_tokens_covered
+                                .fetch_add(n_prompt as u64, Ordering::Relaxed);
                             holders.get_mut(&key).unwrap().waiting.extend(specs);
                         }
-                        Route::Refill => {
+                        Route::Refill { stale, fresh } => {
                             // the parked prefix was evicted under pressure:
                             // retire the stale holder and ingest afresh
-                            holders.remove(&key);
-                            prefix_index.remove(key);
+                            let old = holders.remove(&stale).unwrap();
+                            tables.remove(stale, &old.prompt);
                             start_prefix_fill(
-                                key,
+                                fresh,
                                 req,
                                 specs,
+                                None,
                                 &mut holders,
                                 &mut holder_clock,
-                                &prefix_index,
+                                tables,
                                 &kv,
                                 &decode_model,
                                 &metrics,
@@ -691,13 +833,91 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                                 &tx,
                             );
                         }
-                        Route::Miss => start_prefix_fill(
+                        Route::Partial { src, covered } => {
+                            // token-granular reuse: fork the covered pages
+                            // off the matched holder into a NEW holder for
+                            // this full prompt, then ingest only the
+                            // suffix on a worker; branches queue on the
+                            // new holder exactly like a fresh ingest
+                            holder_clock += 1;
+                            let src_holder = holders.get_mut(&src).unwrap();
+                            src_holder.last_used = holder_clock;
+                            let last_tok = req.prompt[covered - 1];
+                            let forked = src_holder
+                                .session
+                                .as_ref()
+                                .unwrap()
+                                .fork_prefix(req.id, covered, last_tok);
+                            match forked {
+                                Ok(session) => {
+                                    metrics
+                                        .prefix_partial_hits
+                                        .fetch_add(1, Ordering::Relaxed);
+                                    metrics
+                                        .prefix_tokens_covered
+                                        .fetch_add(covered as u64, Ordering::Relaxed);
+                                    start_prefix_fill(
+                                        req.id,
+                                        req,
+                                        specs,
+                                        Some((session, covered)),
+                                        &mut holders,
+                                        &mut holder_clock,
+                                        tables,
+                                        &kv,
+                                        &decode_model,
+                                        &metrics,
+                                        &admission,
+                                        &active_decodes,
+                                        &pool,
+                                        &tx,
+                                    );
+                                }
+                                Err(DecodeError::Kv(KvError::UnknownSeq(_))) => {
+                                    // holder pages vanished between the
+                                    // freshness check and the fork: retire
+                                    // it and fall back to a full ingest
+                                    let stale = holders.remove(&src).unwrap();
+                                    tables.remove(src, &stale.prompt);
+                                    start_prefix_fill(
+                                        req.id,
+                                        req,
+                                        specs,
+                                        None,
+                                        &mut holders,
+                                        &mut holder_clock,
+                                        tables,
+                                        &kv,
+                                        &decode_model,
+                                        &metrics,
+                                        &admission,
+                                        &active_decodes,
+                                        &pool,
+                                        &tx,
+                                    );
+                                }
+                                Err(e) => {
+                                    let msg = format!("prefix fork failed: {e}");
+                                    for spec in specs {
+                                        fail_branch(
+                                            spec,
+                                            msg.clone(),
+                                            &metrics,
+                                            &admission,
+                                            &active_decodes,
+                                        );
+                                    }
+                                }
+                            }
+                        }
+                        Route::Miss(key) => start_prefix_fill(
                             key,
                             req,
                             specs,
+                            None,
                             &mut holders,
                             &mut holder_clock,
-                            &prefix_index,
+                            tables,
                             &kv,
                             &decode_model,
                             &metrics,
@@ -746,13 +966,13 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                         }
                         Err(msg) => {
                             let holder = holders.remove(&key).unwrap();
-                            prefix_index.remove(key);
+                            tables.remove(key, &holder.prompt);
                             for spec in holder.waiting {
                                 fail_branch(spec, msg.clone(), &metrics, &admission, &active_decodes);
                             }
                         }
                     }
-                    retire_excess_holders(&mut holders, &prefix_index);
+                    retire_excess_holders(&mut holders, tables, &kv);
                 }
                 Msg::DecodeReady(seq) => {
                     batcher.push_decode(DecodeStep { seq, enqueued: Instant::now() });
@@ -902,17 +1122,23 @@ fn launch_branches(
     bounced
 }
 
-/// Start a fresh prefix holder: allocate its session now (cheap), run
-/// the one-time prompt ingest on a worker, report back via
+/// Start a prefix holder for `req.prompt` under `key`: allocate (or
+/// adopt, for a radix partial hit) its session now — cheap — then run
+/// the prompt-suffix ingest on a worker and report back via
 /// [`Msg::PrefixFilled`]. Branches queue on the holder meanwhile.
+/// `base` is `None` for a full ingest (counted as a prefix miss) or
+/// `Some((forked_session, covered))` when the leading `covered` tokens
+/// were already forked off a matched holder and only the remaining
+/// suffix needs projecting.
 #[allow(clippy::too_many_arguments)]
 fn start_prefix_fill(
     key: u64,
     req: GenerateRequest,
     specs: Vec<BranchSpec>,
+    base: Option<(DecodeSession, usize)>,
     holders: &mut HashMap<u64, Holder>,
     holder_clock: &mut u64,
-    prefix_index: &Arc<PrefixIndex>,
+    tables: PrefixTables<'_>,
     kv: &Arc<SharedKv>,
     model: &Arc<TinyLm>,
     metrics: &Arc<Metrics>,
@@ -921,38 +1147,42 @@ fn start_prefix_fill(
     pool: &ThreadPool,
     tx: &mpsc::Sender<Msg>,
 ) {
-    metrics.prefix_misses.fetch_add(1, Ordering::Relaxed);
     // `mut`: the move closure below ingests through `&mut self`
-    let mut session =
-        match DecodeSession::new(Arc::clone(kv), Arc::clone(model), req.policy, req.id) {
-            Ok(s) => s,
-            Err(e) => {
-                let msg = format!("kv allocation failed: {e}");
-                for spec in specs {
-                    fail_branch(spec, msg.clone(), metrics, admission, active);
+    let (mut session, covered) = match base {
+        Some((session, covered)) => (session, covered),
+        None => {
+            metrics.prefix_misses.fetch_add(1, Ordering::Relaxed);
+            match DecodeSession::new(Arc::clone(kv), Arc::clone(model), req.policy, req.id) {
+                Ok(s) => (s, 0),
+                Err(e) => {
+                    let msg = format!("kv allocation failed: {e}");
+                    for spec in specs {
+                        fail_branch(spec, msg.clone(), metrics, admission, active);
+                    }
+                    return;
                 }
-                return;
             }
-        };
+        }
+    };
     *holder_clock += 1;
     holders.insert(
         key,
         Holder {
-            seq: req.id,
+            seq: session.seq_id(),
             prompt: req.prompt.clone(),
             session: None,
             waiting: specs,
             last_used: *holder_clock,
         },
     );
-    prefix_index.insert(key);
-    let prompt = req.prompt;
+    tables.insert(key, &req.prompt);
+    let suffix: Vec<i32> = req.prompt[covered..].to_vec();
     let metrics = Arc::clone(metrics);
     let tx = tx.clone();
     pool.submit(move || {
-        let res = match session.prefill(&prompt) {
+        let res = match session.extend_prompt(&suffix) {
             Ok(()) => {
-                metrics.tokens_in.fetch_add(prompt.len() as u64, Ordering::Relaxed);
+                metrics.tokens_in.fetch_add(suffix.len() as u64, Ordering::Relaxed);
                 Ok(Box::new(session))
             }
             Err(e) => Err(format!("prompt ingest failed: {e}")),
@@ -961,21 +1191,28 @@ fn start_prefix_fill(
     });
 }
 
-/// Retire the least-recently-used parked holders beyond
-/// [`MAX_PREFIX_HOLDERS`] (never one mid-ingest or with branches still
-/// waiting); dropping the session frees the prefix pages not shared
-/// with live forks.
-fn retire_excess_holders(holders: &mut HashMap<u64, Holder>, prefix_index: &Arc<PrefixIndex>) {
+/// Retire parked holders beyond [`MAX_PREFIX_HOLDERS`] (never one
+/// mid-ingest or with branches still waiting). Victim selection is
+/// LCP-aware, not blind LRU: the holder with the lowest covered-tokens ×
+/// refcount weight ([`SharedKv::seq_weight`]) goes first — an evicted or
+/// short, unshared prefix before a long, heavily-forked one — with the
+/// LRU clock as the tie-break. Dropping the session frees the prefix
+/// pages not shared with live forks.
+fn retire_excess_holders(
+    holders: &mut HashMap<u64, Holder>,
+    tables: PrefixTables<'_>,
+    kv: &SharedKv,
+) {
     while holders.len() > MAX_PREFIX_HOLDERS {
         let victim = holders
             .iter()
             .filter(|(_, h)| h.session.is_some() && h.waiting.is_empty())
-            .min_by_key(|(_, h)| h.last_used)
+            .min_by_key(|(_, h)| (kv.seq_weight(h.seq).ok().flatten().unwrap_or(0), h.last_used))
             .map(|(&k, _)| k);
         match victim {
             Some(k) => {
-                holders.remove(&k);
-                prefix_index.remove(k);
+                let h = holders.remove(&k).unwrap();
+                tables.remove(k, &h.prompt);
             }
             None => break,
         }
@@ -1106,15 +1343,4 @@ mod tests {
         assert_ne!(prompt_hash(&[]), prompt_hash(&[0]));
     }
 
-    #[test]
-    fn prefix_index_tracks_live_hashes() {
-        let ix = PrefixIndex::default();
-        assert!(ix.is_empty());
-        assert!(!ix.is_live(7));
-        ix.insert(7);
-        assert!(ix.is_live(7));
-        assert_eq!(ix.len(), 1);
-        ix.remove(7);
-        assert!(!ix.is_live(7));
-    }
 }

@@ -22,9 +22,12 @@
 //!   the shared store (append, copy-on-write, growth across page
 //!   boundaries), streaming every token through a callback, plus
 //!   [`DecodeSession::fork`] — prefill once, serve N divergent
-//!   continuations off one refcounted prefix. [`TinyLm`] is the
-//!   deterministic reference LM standing in for per-step decode HLO
-//!   modules.
+//!   continuations off one refcounted prefix — and its token-granular
+//!   variant [`DecodeSession::fork_prefix`] +
+//!   [`DecodeSession::extend_prompt`], which share only a page-aligned
+//!   prefix and ingest the rest (the radix prefix cache's primitive).
+//!   [`TinyLm`] is the deterministic reference LM standing in for
+//!   per-step decode HLO modules.
 //!
 //! The coordinator drives sessions through `Coordinator::submit_generate`
 //! / `submit_generate_many` (shared-prefix fan-out) with decode steps

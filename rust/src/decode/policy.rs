@@ -59,7 +59,10 @@ pub enum StepPlan {
     /// Attend the full cached context.
     Dense,
     /// Rank blocks with the decode OAM and keep `budget_blocks`.
-    Sparse { budget_blocks: usize },
+    Sparse {
+        /// Blocks to keep this step (forced sets included).
+        budget_blocks: usize,
+    },
 }
 
 impl DecodePolicy {
@@ -68,6 +71,8 @@ impl DecodePolicy {
         DecodePolicy { dense_below: usize::MAX, ..Default::default() }
     }
 
+    /// Reject configurations the planner cannot honor (bad decay,
+    /// non-positive budget, empty recent window, zero stride).
     pub fn validate(&self) -> Result<(), String> {
         if !(self.mu > 0.0 && self.mu <= 1.0) {
             return Err(format!("mu must be in (0,1], got {}", self.mu));

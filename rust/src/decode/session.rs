@@ -42,6 +42,7 @@ use super::store::{SeqKvView, SharedKv};
 /// failure modes (per-step HLO execution, sampling) arrive.
 #[derive(Debug, thiserror::Error, PartialEq)]
 pub enum DecodeError {
+    /// A KV-pool/store failure (see [`KvError`]).
     #[error("kv: {0}")]
     Kv(#[from] KvError),
 }
@@ -51,9 +52,13 @@ pub enum DecodeError {
 /// projections stored `[out, d_model]` row-major so every matvec is a
 /// contiguous `dot`, sinusoidal positions, single attention layer.
 pub struct TinyLm {
+    /// Query heads.
     pub h: usize,
+    /// K/V heads (GQA groups).
     pub hk: usize,
+    /// Head dimension.
     pub dh: usize,
+    /// Vocabulary size.
     pub vocab: usize,
     d_model: usize,
     embed: Tensor,
@@ -64,6 +69,8 @@ pub struct TinyLm {
 }
 
 impl TinyLm {
+    /// Build a seeded LM with `h` query heads over `hk` K/V heads of
+    /// dimension `dh` (weights drawn deterministically from `seed`).
     pub fn new(seed: u64, h: usize, hk: usize, dh: usize, vocab: usize) -> Self {
         assert!(h % hk.max(1) == 0, "query heads must be a multiple of kv heads");
         let d_model = h * dh;
@@ -91,6 +98,7 @@ impl TinyLm {
         }
     }
 
+    /// Model width (`h · dh`).
     pub fn d_model(&self) -> usize {
         self.d_model
     }
@@ -163,10 +171,15 @@ pub struct StepInfo {
 /// Aggregate result of [`DecodeSession::generate`].
 #[derive(Debug, Clone, Default)]
 pub struct SessionStats {
+    /// Generated tokens, in order.
     pub tokens: Vec<i32>,
+    /// Steps executed (equals `tokens.len()`).
     pub steps: usize,
+    /// Steps that ran the dense fallback path.
     pub dense_steps: usize,
+    /// Mean fraction of the cached context attended per step.
     pub mean_budget_fraction: f64,
+    /// Summed per-step wall time in nanoseconds.
     pub decode_ns: u64,
 }
 
@@ -250,6 +263,40 @@ impl DecodeSession {
         })
     }
 
+    /// Fork a new session continuing only the leading `n_tokens` of this
+    /// one's cached context — the token-granular variant of
+    /// [`DecodeSession::fork`] behind radix prefix reuse: a prompt that
+    /// shares a page-aligned prefix with this session forks just the
+    /// covered pages and ingests the rest via
+    /// [`DecodeSession::extend_prompt`]. `n_tokens` must be a whole
+    /// number of pages (or the full context); `last_token` is the token
+    /// at stream position `n_tokens - 1`, which the caller must supply
+    /// because this session only tracks its *own* final token. Like
+    /// `fork`, the result is pinned with fresh stream statistics.
+    pub fn fork_prefix(
+        &self,
+        new_seq: u64,
+        n_tokens: usize,
+        last_token: i32,
+    ) -> Result<DecodeSession, DecodeError> {
+        let table = self.kv.fork_prefix(self.seq, new_seq, n_tokens)?;
+        Ok(DecodeSession {
+            seq: new_seq,
+            kv: Arc::clone(&self.kv),
+            model: Arc::clone(&self.model),
+            policy: self.policy,
+            page_tokens: self.page_tokens,
+            table,
+            n_ctx: n_tokens,
+            step: 0,
+            last_token,
+            budget_sum: 0.0,
+            dense_steps: 0,
+            decode_ns: 0,
+            closed: false,
+        })
+    }
+
     /// Swap the per-step policy (a fork serving a different request may
     /// carry different sparsity settings than the prefix holder).
     pub fn set_policy(&mut self, policy: DecodePolicy) {
@@ -264,14 +311,17 @@ impl DecodeSession {
         Ok(())
     }
 
+    /// The sequence id this session owns in the shared pool.
     pub fn seq_id(&self) -> u64 {
         self.seq
     }
 
+    /// Tokens currently cached (prompt + generated).
     pub fn n_ctx(&self) -> usize {
         self.n_ctx
     }
 
+    /// Decode steps executed so far.
     pub fn steps(&self) -> usize {
         self.step
     }
@@ -322,11 +372,24 @@ impl DecodeSession {
     /// attention output is needed until the first generated token). Also
     /// used on a fork to inject a divergence suffix before generating.
     pub fn prefill(&mut self, prompt: &[i32]) -> Result<(), DecodeError> {
-        for &t in prompt {
+        self.extend_prompt(prompt)
+    }
+
+    /// Append a prompt *suffix* at the current context position — the
+    /// ingest half of radix prefix reuse: after
+    /// [`DecodeSession::fork_prefix`] covered the shared pages, only the
+    /// uncovered tail of the prompt is projected and appended (each
+    /// token one [`crate::coordinator::kv_cache::KvCache::append_tokens`]
+    /// + slab write), so ingest cost scales with the suffix, not the
+    /// prompt. K/V depend only on `(token, position)`, so the combined
+    /// fork+suffix state is bit-identical to a full ingest of the whole
+    /// prompt. (`prefill` is this with the suffix starting at zero.)
+    pub fn extend_prompt(&mut self, suffix: &[i32]) -> Result<(), DecodeError> {
+        for &t in suffix {
             let (_, k, v) = self.model.project(t, self.n_ctx, false);
             self.append_kv(&k, &v)?;
         }
-        if let Some(&last) = prompt.last() {
+        if let Some(&last) = suffix.last() {
             self.last_token = last;
         }
         Ok(())
@@ -394,6 +457,8 @@ impl DecodeSession {
         })
     }
 
+    /// Mean fraction of the cached context attended per executed step
+    /// (1.0 before any step runs).
     pub fn mean_budget_fraction(&self) -> f64 {
         if self.step == 0 {
             1.0
@@ -402,10 +467,12 @@ impl DecodeSession {
         }
     }
 
+    /// Steps that ran the dense fallback path.
     pub fn dense_steps(&self) -> usize {
         self.dense_steps
     }
 
+    /// Summed per-step wall time in nanoseconds.
     pub fn decode_ns(&self) -> u64 {
         self.decode_ns
     }
@@ -602,6 +669,81 @@ mod tests {
         drop(forks);
         drop(root);
         assert_eq!(kv.pool().unwrap().used_pages(), 0);
+        assert_eq!(kv.pages_resident(), 0);
+    }
+
+    #[test]
+    fn prefix_fork_plus_suffix_matches_full_ingest_exactly() {
+        // satellite acceptance: a continuation served as (page-aligned
+        // prefix fork + suffix ingest) must be indistinguishable from a
+        // session that ingested the whole prompt from scratch — token
+        // streams identical, dense kernel vs oracle within 1e-5
+        let kv = pool(256, 16);
+        let m = model();
+        let shared = prompt(48); // 3 whole pages of 16
+        let mut full_a: Vec<i32> = shared.clone();
+        full_a.extend([vocab::WORD0 + 5, vocab::WORD0 + 9, vocab::WORD0 + 2]);
+        let mut root =
+            DecodeSession::new(Arc::clone(&kv), Arc::clone(&m), DecodePolicy::default(), 1)
+                .unwrap();
+        root.prefill(&full_a).unwrap();
+        // a second prompt shares the 48-token prefix, then diverges
+        let mut full_b: Vec<i32> = shared.clone();
+        full_b.extend((0..20).map(|i| vocab::WORD0 + ((i * 3) % 40) as i32));
+        let covered = 48;
+        let mut reused = root.fork_prefix(2, covered, full_b[covered - 1]).unwrap();
+        reused.extend_prompt(&full_b[covered..]).unwrap();
+        assert_eq!(reused.n_ctx(), full_b.len());
+        assert_eq!(reused.last_token(), *full_b.last().unwrap());
+        let got = reused.generate(12, None, |_| true).unwrap().tokens;
+        let want = {
+            let kv2 = pool(256, 16);
+            let mut c =
+                DecodeSession::new(kv2, Arc::clone(&m), DecodePolicy::default(), 1).unwrap();
+            c.prefill(&full_b).unwrap();
+            c.generate(12, None, |_| true).unwrap().tokens
+        };
+        assert_eq!(got, want, "prefix-fork continuation must match a clean full ingest");
+        // numeric parity of the reused session's view vs the dense oracle
+        let (q, _, _) = m.project(reused.last_token(), reused.n_ctx(), true);
+        let q = Tensor::from_vec(&[m.h, m.dh], q.unwrap());
+        let d = reused
+            .with_kv_view(|view| {
+                let att = decode_attend(&q, view, &DecodePolicy::dense(), 0);
+                let oracle = decode_attend_dense_reference(&q, view);
+                att.out.iter().zip(&oracle).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max)
+            })
+            .unwrap();
+        assert!(d < 1e-5, "prefix-forked view deviates from dense oracle by {d}");
+        // the root is untouched by the reused branch's suffix
+        let root_stream = root.generate(4, None, |_| true).unwrap().tokens;
+        let control = {
+            let kv2 = pool(256, 16);
+            let mut c =
+                DecodeSession::new(kv2, Arc::clone(&m), DecodePolicy::default(), 1).unwrap();
+            c.prefill(&full_a).unwrap();
+            c.generate(4, None, |_| true).unwrap().tokens
+        };
+        assert_eq!(root_stream, control, "prefix fork must never leak into the source");
+        kv.pool().unwrap().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn dropping_a_prefix_fork_frees_its_divergent_slabs() {
+        // regression (slab-GC satellite): a dropped fork tail must free
+        // its slab payloads, leaving only the shared prefix resident
+        let kv = pool(256, 16);
+        let mut root =
+            DecodeSession::new(Arc::clone(&kv), model(), DecodePolicy::default(), 1).unwrap();
+        root.prefill(&prompt(32)).unwrap(); // 2 whole pages
+        assert_eq!(kv.pages_resident(), 2);
+        let mut fork = root.fork_prefix(2, 16, prompt(32)[15]).unwrap();
+        fork.extend_prompt(&prompt(40)[16..]).unwrap(); // diverge + grow
+        assert!(kv.pages_resident() > 2, "divergent tail must materialize slabs");
+        drop(fork);
+        assert_eq!(kv.pages_resident(), 2, "dropped fork tail must GC its slabs");
+        assert_eq!(kv.pool().unwrap().used_pages(), 2);
+        drop(root);
         assert_eq!(kv.pages_resident(), 0);
     }
 

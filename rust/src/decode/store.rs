@@ -42,6 +42,8 @@ pub struct PagedKv {
 }
 
 impl PagedKv {
+    /// Build an empty slab map for pages of `page_tokens` tokens, `hk`
+    /// K/V heads of dimension `dh`.
     pub fn new(page_tokens: usize, hk: usize, dh: usize) -> Self {
         PagedKv { page_tokens, hk, dh, k_pages: HashMap::new(), v_pages: HashMap::new() }
     }
@@ -50,6 +52,7 @@ impl PagedKv {
         self.hk * self.page_tokens * self.dh
     }
 
+    /// Pages with materialized slabs (lazy: only written pages count).
     pub fn pages_resident(&self) -> usize {
         self.k_pages.len()
     }
@@ -90,8 +93,11 @@ impl PagedKv {
 /// [`KvBlocks`] over (slab store, page table, token count): logical
 /// block `b` lives in page `table[b]`.
 pub struct SeqKvView<'a> {
+    /// The slab store the page ids resolve into.
     pub store: &'a PagedKv,
+    /// The sequence's page table (logical block → page id).
     pub table: &'a [u32],
+    /// Cached tokens of the sequence (the tail block is partial).
     pub n_tokens: usize,
 }
 
@@ -157,18 +163,22 @@ impl SharedKv {
         })
     }
 
+    /// Tokens per page.
     pub fn page_tokens(&self) -> usize {
         self.page_tokens
     }
 
+    /// Total pages in the identity pool.
     pub fn total_pages(&self) -> usize {
         self.total_pages
     }
 
+    /// K/V heads per page slab.
     pub fn kv_heads(&self) -> usize {
         self.hk
     }
 
+    /// Head dimension of the stored K/V rows.
     pub fn head_dim(&self) -> usize {
         self.dh
     }
@@ -222,6 +232,23 @@ impl SharedKv {
         let mut pool = self.pool()?;
         pool.fork(src, dst)?;
         pool.pin(dst)?;
+        let freed = pool.take_freed();
+        self.gc_locked(&mut pool, freed)?;
+        Ok(pool.page_table(dst).expect("fork target is live").to_vec())
+    }
+
+    /// Pool [`KvCache::fork_prefix`] + pin: like [`SharedKv::fork`], but
+    /// the new sequence shares only the pages holding `src`'s leading
+    /// `n_tokens` (a page-aligned split, or the full source). The
+    /// radix-mode prefix cache uses this to serve a prompt that shares
+    /// only part of a cached prompt: fork the covered pages, then ingest
+    /// just the uncovered suffix. Returns the fork's page table.
+    pub fn fork_prefix(&self, src: u64, dst: u64, n_tokens: usize) -> Result<Vec<u32>, KvError> {
+        let mut pool = self.pool()?;
+        pool.fork_prefix(src, dst, n_tokens)?;
+        pool.pin(dst)?;
+        let freed = pool.take_freed();
+        self.gc_locked(&mut pool, freed)?;
         Ok(pool.page_table(dst).expect("fork target is live").to_vec())
     }
 
@@ -249,9 +276,17 @@ impl SharedKv {
         res
     }
 
-    /// Unpin a sequence (it becomes LRU-evictable).
+    /// Unpin a sequence (it becomes LRU-evictable). Like every other
+    /// pool mutation this drains the freed-page log before returning —
+    /// unpin itself frees nothing today, but a drain here keeps slab
+    /// residency exact even when an undrained retirement (e.g. a direct
+    /// pool mutation in tests or tooling) left freed ids behind.
     pub fn release(&self, seq: u64) -> Result<(), KvError> {
-        self.pool()?.release(seq)
+        let mut pool = self.pool()?;
+        let res = pool.release(seq);
+        let freed = pool.take_freed();
+        self.gc_locked(&mut pool, freed)?;
+        res
     }
 
     /// Drop a sequence + GC its exclusively-owned slabs.
@@ -266,6 +301,13 @@ impl SharedKv {
     /// Cached token count of a sequence (`None` if unknown/evicted).
     pub fn seq_tokens(&self, seq: u64) -> Result<Option<usize>, KvError> {
         Ok(self.pool()?.seq_tokens(seq))
+    }
+
+    /// Reuse weight of a sequence ([`KvCache::seq_share_weight`]):
+    /// covered-token length × page refcounts. The coordinator's
+    /// LCP-aware holder eviction retires the lightest prefix first.
+    pub fn seq_weight(&self, seq: u64) -> Result<Option<u64>, KvError> {
+        Ok(self.pool()?.seq_share_weight(seq))
     }
 
     /// Write one token's K/V rows into the shared slabs.
@@ -369,6 +411,42 @@ mod tests {
         let dst = SeqKvView { store: &slabs, table: &ftable, n_tokens: 3 };
         assert_eq!(dst.k_block(0, 0)[2 * 4], 9.0, "fork sees its appended row");
         assert_eq!(src.k_block(0, 0).len(), 2 * 4, "source still exposes 2 tokens");
+    }
+
+    #[test]
+    fn fork_prefix_aliases_only_covered_pages() {
+        let kv = shared(8, 4);
+        let table = kv.allocate(1, 10).unwrap(); // 3 pages, tail partial
+        for (slot, page) in [(0, table[0]), (1, table[1]), (1, table[2])] {
+            kv.write_token(page, slot, &rows(5.0, 2, 4), &rows(6.0, 2, 4)).unwrap();
+        }
+        let ftable = kv.fork_prefix(1, 2, 8).unwrap(); // 2 whole pages
+        assert_eq!(ftable, &table[..2], "prefix fork aliases the covered pages only");
+        assert_eq!(kv.seq_tokens(2).unwrap(), Some(8));
+        assert_eq!(kv.pages_resident(), 3, "no payload duplication on a prefix fork");
+        assert!(matches!(kv.fork_prefix(1, 3, 7), Err(KvError::MisalignedFork { .. })));
+        kv.pool().unwrap().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn release_and_fork_drain_stale_freed_pages() {
+        // regression (slab-GC drain): retire a sequence through the raw
+        // pool — bypassing SharedKv's GC — then check that the *next*
+        // SharedKv mutation of any kind scrubs the stale slab payloads
+        let kv = shared(8, 4);
+        let t1 = kv.allocate(1, 4).unwrap();
+        kv.write_token(t1[0], 0, &rows(1.0, 2, 4), &rows(2.0, 2, 4)).unwrap();
+        let t2 = kv.allocate(2, 4).unwrap();
+        kv.write_token(t2[0], 0, &rows(3.0, 2, 4), &rows(4.0, 2, 4)).unwrap();
+        {
+            let mut pool = kv.pool().unwrap();
+            pool.release(1).unwrap();
+            pool.drop_seq(1).unwrap(); // freed id logged, slab NOT dropped
+        }
+        assert_eq!(kv.pages_resident(), 2, "stale slab awaiting a drain");
+        kv.release(2).unwrap(); // unpin path must drain the log too
+        assert_eq!(kv.pages_resident(), 1, "release must GC stale freed pages");
+        kv.pool().unwrap().check_invariants().unwrap();
     }
 
     #[test]

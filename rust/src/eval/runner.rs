@@ -13,14 +13,17 @@ use crate::model::manifest::ServingDefaults;
 use crate::util::threadpool;
 use crate::workload::{load_eval_set, EvalSample};
 
+/// Aggregated scores of one method over a (family × bucket) grid.
 #[derive(Debug, Clone)]
 pub struct EvalOutcome {
     /// (family, n_ctx) -> aggregate
     pub cells: BTreeMap<(String, usize), Aggregate>,
+    /// The method name the grid was run under.
     pub method_label: String,
 }
 
 impl EvalOutcome {
+    /// Aggregate over every bucket of one family.
     pub fn family_avg(&self, family: &str) -> Aggregate {
         let mut a = Aggregate::default();
         for ((f, _), agg) in &self.cells {
@@ -31,6 +34,7 @@ impl EvalOutcome {
         a
     }
 
+    /// Aggregate over every family of one bucket.
     pub fn bucket_avg(&self, n_ctx: usize) -> Aggregate {
         let mut a = Aggregate::default();
         for ((_, n), agg) in &self.cells {
@@ -41,6 +45,7 @@ impl EvalOutcome {
         a
     }
 
+    /// Aggregate over the whole grid.
     pub fn overall(&self) -> Aggregate {
         let mut a = Aggregate::default();
         for agg in self.cells.values() {
@@ -50,7 +55,9 @@ impl EvalOutcome {
     }
 }
 
+/// Runs eval sets through a live coordinator (see module docs).
 pub struct Evaluator {
+    /// The coordinator requests are fanned into.
     pub coordinator: Arc<Coordinator>,
     /// limit samples per set (fast mode); 0 = all
     pub limit: usize,

@@ -6,15 +6,18 @@
 use crate::coordinator::PrefillResponse;
 use crate::workload::EvalSample;
 
+/// Per-sample teacher-forced scores.
 #[derive(Debug, Clone, Copy)]
 pub struct SampleScore {
     /// every answer token predicted correctly
     pub exact_match: bool,
     /// fraction of answer tokens predicted correctly
     pub token_acc: f64,
+    /// Budget fraction the serving response reported.
     pub budget_fraction: f64,
 }
 
+/// Score one prefill response against its sample's answer span.
 pub fn score_sample(resp: &PrefillResponse, sample: &EvalSample) -> SampleScore {
     let ans = sample.answer_tokens();
     let mut correct = 0usize;
@@ -34,13 +37,18 @@ pub fn score_sample(resp: &PrefillResponse, sample: &EvalSample) -> SampleScore 
 /// Aggregate of many sample scores.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Aggregate {
+    /// Samples aggregated.
     pub n: usize,
+    /// Summed exact-match indicators.
     pub em_sum: f64,
+    /// Summed token accuracies.
     pub tok_sum: f64,
+    /// Summed budget fractions.
     pub budget_sum: f64,
 }
 
 impl Aggregate {
+    /// Fold one sample score in.
     pub fn add(&mut self, s: SampleScore) {
         self.n += 1;
         self.em_sum += s.exact_match as u8 as f64;
@@ -48,6 +56,7 @@ impl Aggregate {
         self.budget_sum += s.budget_fraction;
     }
 
+    /// Exact-match percentage.
     pub fn em(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -56,6 +65,7 @@ impl Aggregate {
         }
     }
 
+    /// Mean token accuracy, in percent.
     pub fn token_acc(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -64,6 +74,7 @@ impl Aggregate {
         }
     }
 
+    /// Mean budget fraction.
     pub fn budget(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -72,6 +83,7 @@ impl Aggregate {
         }
     }
 
+    /// Fold another aggregate in.
     pub fn merge(&mut self, other: &Aggregate) {
         self.n += other.n;
         self.em_sum += other.em_sum;

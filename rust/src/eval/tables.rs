@@ -38,7 +38,9 @@ fn bud_pct(v: f64) -> String {
 pub struct DiagLoss {
     /// MSE per layer, length n_layers.
     pub layer_mse: Vec<f64>,
+    /// MSE of the final logits against the dense run.
     pub logit_mse: f64,
+    /// Budget fraction the sparse run reported.
     pub budget_fraction: f64,
 }
 

@@ -27,6 +27,11 @@
 //!   simulator and the scheduler.
 //! * [`eval`] — accuracy harness + paper table/figure drivers.
 //! * [`sim`] — Eq. (2)/(4)/(8) cost model and H20 latency projection.
+//!
+//! The serving-stack architecture (dataflow, KV ownership, the page
+//! refcount/CoW lifecycle) is documented in `docs/ARCHITECTURE.md`.
+
+#![warn(missing_docs)]
 
 pub mod coordinator;
 pub mod decode;

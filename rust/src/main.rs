@@ -39,6 +39,7 @@ stem — Stem sparse-attention serving system (paper reproduction)
 USAGE: stem <subcommand> [flags]
 
   serve     [--requests N] [--rps R] [--method stem|dense|...] [--mix]
+            [--prefix-mode exact|radix]
   generate  [--prompt 1,16,17 | --prompt-len N] [--max-new N] [--dense]
             [--fanout N] [--k-start K] [--mu MU] [--sink S] [--recent R]
             [--dense-below TOKENS] [--block B] [--pages P] [--seed S]
@@ -54,6 +55,9 @@ USAGE: stem <subcommand> [flags]
   selftest
 
 flags: --artifacts DIR  --workers N  --threads N  --limit N  --quiet
+       --prefix-mode exact|radix  (how the coordinator matches cached
+       prompt prefixes: byte-identical prompts only, or token-granular
+       longest-common-prefix reuse with partial-page forks; default radix)
        (--threads / STEM_THREADS size the pure-rust sparse-core pool)
 ";
 
@@ -85,6 +89,9 @@ fn boot(args: &Args) -> Result<(Arc<Coordinator>, Evaluator)> {
     let mut cfg = CoordinatorConfig::default();
     if let Some(w) = args.get("workers") {
         cfg.workers = w.parse().map_err(|_| anyhow!("--workers must be an integer"))?;
+    }
+    if let Some(pm) = args.get("prefix-mode") {
+        cfg.prefix_mode = pm.parse().map_err(|e: String| anyhow!(e))?;
     }
     let coordinator = Arc::new(Coordinator::new(engine, cfg));
     let limit = args.usize_or("limit", 12);

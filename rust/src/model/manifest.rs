@@ -8,38 +8,61 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::util::json::Json;
 
+/// The compiled model's geometry and Stem keep-set parameters.
 #[derive(Debug, Clone)]
 pub struct ModelConfig {
+    /// Vocabulary size.
     pub vocab_size: usize,
+    /// Model width.
     pub d_model: usize,
+    /// Transformer layers.
     pub n_layers: usize,
+    /// Query heads per layer.
     pub n_heads: usize,
+    /// K/V heads per layer (GQA).
     pub n_kv_heads: usize,
+    /// Feed-forward inner width.
     pub d_ff: usize,
+    /// Attention block size (= KV page tokens).
     pub block: usize,
+    /// Leading blocks always kept by the schedule.
     pub init_keep: usize,
+    /// Trailing blocks always kept by the schedule.
     pub local_keep: usize,
+    /// Hard floor on kept blocks per row.
     pub min_total: usize,
+    /// Head dimension.
     pub d_head: usize,
 }
 
+/// One runtime scalar a compiled module takes (name + dtype).
 #[derive(Debug, Clone)]
 pub struct ScalarSpec {
+    /// Scalar name as declared by the compile path.
     pub name: String,
+    /// `true` for f32 scalars, `false` for i32.
     pub is_f32: bool,
 }
 
+/// One compiled HLO module: a (kind, context-bucket) prefill graph.
 #[derive(Debug, Clone)]
 pub struct ModuleInfo {
+    /// Unique module name.
     pub name: String,
+    /// Module kind (e.g. `"prefill_stem"`, `"diag_dense"`).
     pub kind: String,
+    /// Padded context length the graph was lowered at.
     pub n_ctx: usize,
+    /// HLO text file, relative to the artifacts root.
     pub file: String,
+    /// Runtime scalars, in call order.
     pub scalars: Vec<ScalarSpec>,
+    /// Named outputs the module returns.
     pub outputs: Vec<String>,
 }
 
 impl ModuleInfo {
+    /// The attention-method part of the kind (prefix stripped).
     pub fn method(&self) -> &str {
         self.kind
             .strip_prefix("prefill_")
@@ -47,51 +70,83 @@ impl ModuleInfo {
             .unwrap_or(&self.kind)
     }
 
+    /// Whether this is a diagnostic module (returns hidden states).
     pub fn is_diag(&self) -> bool {
         self.kind.starts_with("diag_")
     }
 }
 
+/// Declared shape of one weight tensor.
 #[derive(Debug, Clone)]
 pub struct ParamSpec {
+    /// Parameter name.
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
 }
 
+/// Per-bucket serving defaults the compile path recommends.
 #[derive(Debug, Clone)]
 pub struct ServingDefaults {
+    /// Context bucket these defaults apply to.
     pub n_ctx: usize,
+    /// Blocks in that bucket.
     pub n_blocks: usize,
+    /// Stem starting block budget.
     pub k_start: f64,
+    /// Stem decay floor multiplier.
     pub mu: f64,
+    /// OAM value-magnitude weight.
     pub beta: f64,
+    /// Budget-matched uniform k (Eq. 4 comparison).
     pub k_uni_matched: f64,
+    /// Streaming baseline: sink blocks.
     pub sink_blocks: i64,
+    /// Streaming baseline: local blocks.
     pub local_blocks: i64,
+    /// XAttention threshold.
     pub xattn_tau: f64,
+    /// MInference vertical stripes.
     pub minf_vertical: i64,
+    /// MInference slash diagonals.
     pub minf_slash: i64,
+    /// FlexPrefill coverage parameter.
     pub flex_gamma: f64,
+    /// FlexPrefill entropy threshold.
     pub flex_entropy: f64,
 }
 
+/// One eval-set file listed in the manifest.
 #[derive(Debug, Clone)]
 pub struct EvalSetInfo {
+    /// Task family (e.g. `"qa"`, `"ruler"`).
     pub family: String,
+    /// Suite the family belongs to (e.g. `"longbench"`).
     pub suite: String,
+    /// Context bucket the samples target.
     pub n_ctx: usize,
+    /// JSON file, relative to the artifacts root.
     pub file: String,
+    /// Samples in the file.
     pub count: usize,
 }
 
+/// The parsed artifacts manifest (see module docs).
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Artifacts directory the manifest was loaded from.
     pub root: PathBuf,
+    /// Model geometry + Stem keep-set parameters.
     pub model: ModelConfig,
+    /// Declared weight-tensor shapes.
     pub param_spec: Vec<ParamSpec>,
+    /// Checkpoint name → weights file, as listed.
     pub weights: Vec<(String, String)>,
+    /// Compiled modules (kind × bucket).
     pub modules: Vec<ModuleInfo>,
+    /// Eval sets shipped with the artifacts.
     pub eval_sets: Vec<EvalSetInfo>,
+    /// Per-bucket serving defaults, sorted by `n_ctx`.
     pub defaults: Vec<ServingDefaults>,
 }
 
@@ -111,6 +166,7 @@ fn req_str(j: &Json, key: &str) -> Result<String> {
 }
 
 impl Manifest {
+    /// Parse `artifacts/manifest.json` under `artifacts_dir`.
     pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
         let path = artifacts_dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -243,6 +299,7 @@ impl Manifest {
         })
     }
 
+    /// The compiled module serving `(kind, n_ctx)` exactly.
     pub fn module(&self, kind: &str, n_ctx: usize) -> Result<&ModuleInfo> {
         self.modules
             .iter()
@@ -259,6 +316,7 @@ impl Manifest {
         buckets.into_iter().find(|&b| b >= n_tokens)
     }
 
+    /// The serving defaults declared for bucket `n_ctx`.
     pub fn defaults_for(&self, n_ctx: usize) -> Result<&ServingDefaults> {
         self.defaults
             .iter()
@@ -266,6 +324,7 @@ impl Manifest {
             .ok_or_else(|| anyhow!("no serving defaults for n_ctx={n_ctx}"))
     }
 
+    /// Absolute path of the named checkpoint's weights file.
     pub fn weights_path(&self, name: &str) -> Result<PathBuf> {
         let f = self
             .weights

@@ -1,21 +1,36 @@
 //! Token vocabulary mirror of `python/compile/tasks.py` (display +
 //! workload synthesis on the serving path).
 
+/// Padding token.
 pub const PAD: i32 = 0;
+/// Beginning-of-sequence token.
 pub const BOS: i32 = 1;
+/// Separator token.
 pub const SEP: i32 = 2;
+/// Query-section marker.
 pub const QUERY: i32 = 3;
+/// Answer marker.
 pub const AMARK: i32 = 4;
+/// Document marker.
 pub const DOC: i32 = 5;
+/// Key marker (KV tasks).
 pub const KEY: i32 = 6;
+/// "is" connective (KV tasks).
 pub const IS: i32 = 7;
+/// Tag marker.
 pub const TAG: i32 = 8;
+/// Function marker (code-ish tasks).
 pub const FN: i32 = 9;
+/// Reference marker.
 pub const REF: i32 = 10;
+/// End-of-generation token.
 pub const END: i32 = 11;
+/// First content-word id; words are `WORD0 + n`.
 pub const WORD0: i32 = 16;
+/// Total vocabulary size.
 pub const VOCAB_SIZE: usize = 96;
 
+/// Render token ids as a human-readable string.
 pub fn detok(ids: &[i32]) -> String {
     ids.iter()
         .map(|&t| match t {

@@ -18,7 +18,9 @@ use crate::runtime::weights::WeightsFile;
 /// A scalar hyper-parameter fed to a module at execute time.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ScalarValue {
+    /// A 32-bit float scalar.
     F32(f32),
+    /// A 32-bit integer scalar.
     I32(i32),
 }
 
@@ -27,7 +29,9 @@ pub enum ScalarValue {
 pub struct PrefillOutput {
     /// [n_ctx * vocab] row-major logits.
     pub logits: Vec<f32>,
+    /// Padded context length executed.
     pub n_ctx: usize,
+    /// Vocabulary size (row stride of `logits`).
     pub vocab: usize,
     /// Mean per-layer budget fraction reported by the graph itself.
     pub budget_fraction: f32,
@@ -119,10 +123,12 @@ impl Engine {
         })
     }
 
+    /// The parsed artifacts manifest this engine serves.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// Names of the uploaded weight checkpoints, sorted.
     pub fn checkpoints(&self) -> Vec<String> {
         let mut v: Vec<String> = self.weights.keys().cloned().collect();
         v.sort();

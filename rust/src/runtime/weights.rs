@@ -12,25 +12,34 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
 
+/// One tensor parsed from a `.stw` file.
 #[derive(Debug, Clone)]
 pub struct TensorEntry {
+    /// Parameter name.
     pub name: String,
+    /// Element dtype (only `"float32"` is supported).
     pub dtype: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Row-major element data.
     pub data: Vec<f32>,
 }
 
 impl TensorEntry {
+    /// Number of elements (`shape` product).
     pub fn element_count(&self) -> usize {
         self.shape.iter().product()
     }
 }
 
+/// A parsed `.stw` weights file.
 pub struct WeightsFile {
+    /// Tensors in file order.
     pub tensors: Vec<TensorEntry>,
 }
 
 impl WeightsFile {
+    /// Parse a `.stw` file from disk (see module docs for the format).
     pub fn load(path: &Path) -> Result<WeightsFile> {
         let bytes = std::fs::read(path)
             .with_context(|| format!("reading weights {}", path.display()))?;
@@ -88,10 +97,12 @@ impl WeightsFile {
         Ok(WeightsFile { tensors })
     }
 
+    /// Look up a tensor by parameter name.
     pub fn get(&self, name: &str) -> Option<&TensorEntry> {
         self.tensors.iter().find(|t| t.name == name)
     }
 
+    /// Total parameter count across all tensors.
     pub fn total_params(&self) -> usize {
         self.tensors.iter().map(TensorEntry::element_count).sum()
     }

@@ -1,36 +1,95 @@
 //! FLOP-level cost accounting for each attention method (per layer, per
-//! head-set) on a given model geometry.
+//! head-set) on a given model geometry, plus the calibrated wall-clock
+//! estimators the coordinator budgets admission against.
+//!
+//! Two layers:
+//!
+//! * **Analytic pair counts** — [`method_cost`] turns the paper's
+//!   Eq. (2)/(4)/(8) budget algebra into attention/metric/linear FLOPs
+//!   and the BUD fraction for any [`MethodCost`].
+//! * **Calibrated estimators** — [`estimate_core_prefill_ns`],
+//!   [`estimate_decode_step_ns`], [`estimate_ingest_ns`] and
+//!   [`estimate_generate_ns`] convert those counts into nanoseconds
+//!   using measured per-op constants ([`RUST_CORE`], [`DECODE_CORE`]).
+//!
+//! **Re-fitting the constants from `BENCH_*.json`:** the constants are
+//! throughput measurements of the pure-rust kernels, so they drift
+//! whenever the kernels change. Each bench emits a machine-readable
+//! trajectory file — `cargo bench --bench bench_sparse_core` writes
+//! `BENCH_sparse_core.json` (per-stage ns for selection/attention →
+//! [`RUST_CORE`]'s `ns_per_pair_dh` / `ns_per_select_candidate` /
+//! `ns_per_metric_flop`), `bench_decode` writes `BENCH_decode.json`
+//! (sparse-vs-dense ns/token → [`DECODE_CORE`]), and `bench_fanout`
+//! writes `BENCH_fanout.json` (ingest vs decode split → sanity for
+//! [`estimate_ingest_ns`]'s `ns_per_proj_mac` share). To re-fit, divide
+//! the measured ns by the op counts the estimator charges for the same
+//! shape and update the constant; the admission limits (`max_work_ns`)
+//! then keep rejecting at the same *wall-clock* backlog after a kernel
+//! speedup, instead of at a stale token count.
+//!
+//! Token-granular prefix reuse relies on [`estimate_ingest_ns`] being
+//! linear in the prompt length: the coordinator charges it on the
+//! *uncovered suffix only*, so a radix partial hit admits more
+//! concurrent work than a cold prompt of the same length.
 
 use crate::sparse::schedule::{self, TpdConfig};
 
 /// Model geometry the cost model needs.
 #[derive(Debug, Clone, Copy)]
 pub struct Geometry {
+    /// Transformer layers.
     pub n_layers: usize,
+    /// Query heads per layer.
     pub n_heads: usize,
+    /// Head dimension.
     pub d_head: usize,
+    /// Model width.
     pub d_model: usize,
+    /// Feed-forward inner width.
     pub d_ff: usize,
+    /// Attention block size (= KV page tokens).
     pub block: usize,
 }
 
+/// Attention method being costed.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum MethodCost {
+    /// Full causal attention.
     Dense,
     /// Stem TPD+OAM with runtime schedule.
-    Stem { k_start_blocks: f64, mu: f64 },
+    Stem {
+        /// Starting block budget of the TPD schedule.
+        k_start_blocks: f64,
+        /// Decay floor multiplier.
+        mu: f64,
+    },
     /// Uniform top-k (SAM baselines, MInference/XAttention effective
     /// budgets enter through `budget_fraction`).
-    UniformBudget { budget_fraction: f64, metric_overhead: f64 },
-    Streaming { sink_blocks: f64, local_blocks: f64 },
+    UniformBudget {
+        /// Fraction of causal pairs kept.
+        budget_fraction: f64,
+        /// Flat metric/pattern-estimation FLOPs.
+        metric_overhead: f64,
+    },
+    /// StreamingLLM-style sinks + local window.
+    Streaming {
+        /// Leading sink blocks kept per row.
+        sink_blocks: f64,
+        /// Trailing local blocks kept per row.
+        local_blocks: f64,
+    },
 }
 
 /// Per-prefill cost breakdown in FLOPs (attention path only vs whole model).
 #[derive(Debug, Clone, Copy)]
 pub struct CostBreakdown {
+    /// Attention (QK^T + PV) FLOPs over the computed pairs.
     pub attn_flops: f64,
+    /// Routing-metric FLOPs (sampling + pooling).
     pub metric_flops: f64,
+    /// Non-attention linear-layer FLOPs.
     pub linear_flops: f64,
+    /// Sum of the three components.
     pub total_flops: f64,
     /// fraction of causal pairs computed (the paper's BUD column)
     pub budget_fraction: f64,
@@ -52,6 +111,7 @@ fn pairs_to_flops(g: &Geometry, pairs: f64) -> f64 {
     pairs * 4.0 * g.d_head as f64 * g.n_heads as f64 * g.n_layers as f64
 }
 
+/// FLOP/budget breakdown of one length-`n` prefill under method `m`.
 pub fn method_cost(g: &Geometry, n: usize, m: MethodCost) -> CostBreakdown {
     let nblk = (n / g.block).max(1);
     let dense_pairs = schedule::cost_dense(n);
@@ -115,6 +175,7 @@ pub struct RustCoreCalibration {
     pub parallel_efficiency: f64,
 }
 
+/// Current prefill-core calibration (re-fit from `BENCH_sparse_core.json`).
 pub const RUST_CORE: RustCoreCalibration = RustCoreCalibration {
     ns_per_pair_dh: 0.11,
     ns_per_metric_flop: 0.35,
@@ -143,6 +204,7 @@ pub struct RustDecodeCalibration {
     pub parallel_efficiency: f64,
 }
 
+/// Current decode-step calibration (re-fit from `BENCH_decode.json`).
 pub const DECODE_CORE: RustDecodeCalibration = RustDecodeCalibration {
     ns_per_pair_dh: 0.15,
     ns_per_metric_sample_dh: 0.25,

@@ -40,6 +40,7 @@ pub struct H20Model {
     pub sparse_penalty: f64,
 }
 
+/// Calibrated H20 constants (dense 128K point matched to the paper).
 pub const H20: H20Model = H20Model {
     // H20: 148 TFLOPs BF16 peak. 91 TFLOP/s effective reproduces the
     // paper's dense 128K point (1540 ms) exactly from the FLOP count.
@@ -49,12 +50,18 @@ pub const H20: H20Model = H20Model {
     sparse_penalty: 1.15,
 };
 
+/// One projected (method, context-length) latency sample of Figure 1.
 #[derive(Debug, Clone)]
 pub struct LatencyPoint {
+    /// Method label (e.g. `"stem"`, `"dense"`).
     pub method: String,
+    /// Context length projected at.
     pub n_ctx: usize,
+    /// Attention-kernel milliseconds.
     pub kernel_ms: f64,
+    /// Kernel + metric/pattern-estimation milliseconds.
     pub total_ms: f64,
+    /// Fraction of causal pairs computed.
     pub budget_fraction: f64,
 }
 

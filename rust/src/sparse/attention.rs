@@ -67,6 +67,8 @@ use super::schedule::TpdConfig;
 use super::tensor::{axpy, dot, norm2, score_tile, score_tile_causal, Tensor};
 use crate::util::threadpool;
 
+/// Masked-score sentinel: finite (unlike `f32::NEG_INFINITY`) so the
+/// online-softmax rescaling never produces NaNs on fully-masked tiles.
 pub const NEG_INF: f32 = -1e30;
 
 /// Fan `f(i)` for `i in 0..n_items` over the global pool, serially when
@@ -195,7 +197,9 @@ pub fn oam_scores(
 /// (see the module docs for the row addressing scheme).
 #[derive(Debug, Clone)]
 pub struct Selection {
+    /// Query/key blocks per head (the causal grid is `nblk × nblk`).
     pub nblk: usize,
+    /// Heads the selection covers.
     pub n_heads: usize,
     /// Concatenated per-row key-block ids for all `n_heads·nblk` rows.
     pub indices: Vec<u32>,
@@ -246,6 +250,7 @@ impl Selection {
         b.finish()
     }
 
+    /// Fraction of causal block pairs this selection keeps.
     pub fn budget_fraction(&self) -> f64 {
         let nblk = self.nblk as f64;
         let total = self.n_heads as f64 * nblk * (nblk + 1.0) / 2.0;
@@ -369,10 +374,12 @@ pub struct SelectionBuilder {
 }
 
 impl SelectionBuilder {
+    /// Builder for an `n_heads × nblk`-row selection.
     pub fn new(n_heads: usize, nblk: usize) -> Self {
         Self::with_capacity(n_heads, nblk, 0)
     }
 
+    /// Like [`SelectionBuilder::new`] with `cap` entries preallocated.
     pub fn with_capacity(n_heads: usize, nblk: usize, cap: usize) -> Self {
         let rows = n_heads * nblk;
         let mut row_offsets = Vec::with_capacity(rows + 1);
@@ -395,6 +402,7 @@ impl SelectionBuilder {
         self.counts.push(count);
     }
 
+    /// Seal the builder into a validated-shape [`Selection`].
     pub fn finish(self) -> Selection {
         assert_eq!(
             self.counts.len(),
@@ -811,7 +819,9 @@ pub trait KvBlocks: Sync {
     fn n_tokens(&self) -> usize;
     /// Tokens per block (= KV page size = attention block).
     fn block_tokens(&self) -> usize;
+    /// K/V heads stored (GQA groups).
     fn n_kv_heads(&self) -> usize;
+    /// Head dimension of the stored rows.
     fn head_dim(&self) -> usize;
     /// Contiguous `[block_len(b), head_dim]` K slab of block `b` for
     /// kv-head `hkv`.
@@ -820,6 +830,7 @@ pub trait KvBlocks: Sync {
     /// kv-head `hkv`.
     fn v_block(&self, hkv: usize, b: usize) -> &[f32];
 
+    /// Blocks covering the cached tokens (tail partial).
     fn n_blocks(&self) -> usize {
         self.n_tokens().div_ceil(self.block_tokens())
     }
@@ -835,9 +846,13 @@ pub trait KvBlocks: Sync {
 /// token count `n_tokens <= N` — the dense fixture decode tests and
 /// benches score the paged kernels against.
 pub struct TensorKv<'a> {
+    /// Keys, `[Hk, N, dh]`.
     pub k: &'a Tensor,
+    /// Values, `[Hk, N, dh]`.
     pub v: &'a Tensor,
+    /// Logical token count (`<= N`; the tail block is partial).
     pub n_tokens: usize,
+    /// Tokens per attention block.
     pub block: usize,
 }
 

@@ -8,10 +8,15 @@
 /// Hyper-parameters of the Token Position-Decay strategy.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TpdConfig {
+    /// Block budget at the first position.
     pub k_start: f64,
+    /// Decay floor multiplier: budget approaches `mu·k_start`.
     pub mu: f64,
+    /// Leading blocks always kept (attention sinks).
     pub init_keep: usize,
+    /// Trailing blocks always kept (local window).
     pub local_keep: usize,
+    /// Hard floor on kept blocks per row.
     pub min_total: usize,
 }
 
@@ -22,6 +27,7 @@ impl Default for TpdConfig {
 }
 
 impl TpdConfig {
+    /// Reject configurations outside the schedule's domain.
     pub fn validate(&self) -> Result<(), String> {
         if !(self.mu > 0.0 && self.mu <= 1.0) {
             return Err(format!("mu must be in (0,1], got {}", self.mu));

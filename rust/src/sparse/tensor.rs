@@ -4,52 +4,64 @@
 //! attention reference, the simulator and the tests need — this is *not*
 //! a general ndarray (XLA owns the heavy math on the request path).
 
+/// Row-major dense f32 tensor with an explicit shape (see module docs).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
+    /// Row-major element storage (`shape` product elements).
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// All-zero tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Self {
         let n: usize = shape.iter().product();
         Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
     }
 
+    /// Wrap existing row-major data (must match the shape product).
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
         Tensor { shape: shape.to_vec(), data }
     }
 
+    /// Standard-normal tensor drawn from `rng`.
     pub fn randn(shape: &[usize], rng: &mut crate::util::rng::Rng) -> Self {
         let n: usize = shape.iter().product();
         Tensor { shape: shape.to_vec(), data: (0..n).map(|_| rng.normal() as f32).collect() }
     }
 
+    /// Number of dimensions.
     pub fn rank(&self) -> usize {
         self.shape.len()
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Element `[i, j]` of a rank-2 tensor.
     #[inline]
     pub fn at2(&self, i: usize, j: usize) -> f32 {
         debug_assert_eq!(self.rank(), 2);
         self.data[i * self.shape[1] + j]
     }
 
+    /// Element `[h, i, j]` of a rank-3 tensor.
     #[inline]
     pub fn at3(&self, h: usize, i: usize, j: usize) -> f32 {
         debug_assert_eq!(self.rank(), 3);
         self.data[(h * self.shape[1] + i) * self.shape[2] + j]
     }
 
+    /// Set element `[h, i, j]` of a rank-3 tensor.
     #[inline]
     pub fn set3(&mut self, h: usize, i: usize, j: usize, v: f32) {
         debug_assert_eq!(self.rank(), 3);
@@ -73,6 +85,7 @@ impl Tensor {
         &self.data[off..off + block * d]
     }
 
+    /// Mutable contiguous row `[h, i, :]` of a rank-3 tensor.
     #[inline]
     pub fn row3_mut(&mut self, h: usize, i: usize) -> &mut [f32] {
         let d = self.shape[2];
@@ -80,6 +93,7 @@ impl Tensor {
         &mut self.data[off..off + d]
     }
 
+    /// Largest absolute element difference against `other` (same shape).
     pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
         assert_eq!(self.shape, other.shape);
         self.data
@@ -89,6 +103,7 @@ impl Tensor {
             .fold(0.0f32, f32::max)
     }
 
+    /// Mean squared element difference against `other` (same shape).
     pub fn mse(&self, other: &Tensor) -> f64 {
         assert_eq!(self.shape, other.shape);
         let s: f64 = self
@@ -104,6 +119,7 @@ impl Tensor {
     }
 }
 
+/// Dot product of two equal-length slices (manually 4-way unrolled).
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let mut s = 0.0f32;
@@ -124,6 +140,7 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     s + s0 + s1 + s2 + s3
 }
 
+/// `acc += alpha · x`, elementwise.
 pub fn axpy(acc: &mut [f32], alpha: f32, x: &[f32]) {
     debug_assert_eq!(acc.len(), x.len());
     for (a, b) in acc.iter_mut().zip(x) {
@@ -131,6 +148,7 @@ pub fn axpy(acc: &mut [f32], alpha: f32, x: &[f32]) {
     }
 }
 
+/// Euclidean norm of a slice.
 pub fn norm2(x: &[f32]) -> f32 {
     dot(x, x).sqrt()
 }

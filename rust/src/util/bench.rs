@@ -6,22 +6,32 @@
 
 use std::time::{Duration, Instant};
 
+/// Robust timing statistics of one benchmark.
 #[derive(Debug, Clone)]
 pub struct Stats {
+    /// Benchmark name.
     pub name: String,
+    /// Measured iterations.
     pub iters: usize,
+    /// Median ns per iteration.
     pub median_ns: f64,
+    /// Mean ns per iteration.
     pub mean_ns: f64,
+    /// 10th-percentile ns.
     pub p10_ns: f64,
+    /// 90th-percentile ns.
     pub p90_ns: f64,
+    /// Median absolute deviation, ns.
     pub mad_ns: f64,
 }
 
 impl Stats {
+    /// Median as a `Duration`.
     pub fn median(&self) -> Duration {
         Duration::from_nanos(self.median_ns as u64)
     }
 
+    /// Print the criterion-style one-liner.
     pub fn print(&self) {
         println!(
             "bench {:<44} {:>12} med {:>12} p90   ({} iters, ±{})",
@@ -34,6 +44,7 @@ impl Stats {
     }
 }
 
+/// Human-format a nanosecond count (ns/µs/ms/s).
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.0}ns")
@@ -46,10 +57,15 @@ pub fn fmt_ns(ns: f64) -> String {
     }
 }
 
+/// Warmup/iteration policy driving [`Bencher::run`].
 pub struct Bencher {
+    /// Warmup wall-time before measuring.
     pub warmup: Duration,
+    /// Total measurement wall-time budget.
     pub target: Duration,
+    /// Iteration ceiling.
     pub max_iters: usize,
+    /// Iteration floor.
     pub min_iters: usize,
 }
 
@@ -65,6 +81,7 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// Short policy for CI smoke runs (`--quick`).
     pub fn quick() -> Self {
         Bencher {
             warmup: Duration::from_millis(50),
@@ -100,6 +117,7 @@ impl Bencher {
     }
 }
 
+/// Compute [`Stats`] from raw per-iteration nanosecond samples.
 pub fn stats_from(name: &str, mut samples: Vec<f64>) -> Stats {
     assert!(!samples.is_empty());
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());

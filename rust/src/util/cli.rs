@@ -5,9 +5,12 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line (see module docs for the grammar).
 #[derive(Debug, Clone)]
 pub struct Args {
+    /// First bare token, when subcommands are enabled.
     pub subcommand: Option<String>,
+    /// Bare tokens that are not the subcommand.
     pub positional: Vec<String>,
     flags: BTreeMap<String, String>,
 }
@@ -43,30 +46,37 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments (argv[0] skipped).
     pub fn from_env(has_subcommand: bool) -> Args {
         Args::parse(std::env::args().skip(1), has_subcommand)
     }
 
+    /// Boolean flag: present and not `"false"`.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.get(name).map(|v| v != "false").unwrap_or(false)
     }
 
+    /// Raw value of `--name`, if given.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
     }
 
+    /// String value of `--name`, or `default`.
     pub fn str_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// `usize` value of `--name`, or `default` on absence/parse failure.
     pub fn usize_or(&self, name: &str, default: usize) -> usize {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// `f64` value of `--name`, or `default` on absence/parse failure.
     pub fn f64_or(&self, name: &str, default: f64) -> f64 {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// `u64` value of `--name`, or `default` on absence/parse failure.
     pub fn u64_or(&self, name: &str, default: u64) -> u64 {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }

@@ -6,24 +6,35 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (stored as f64, like javascript).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object, keys sorted (BTreeMap) for stable serialization.
     Obj(BTreeMap<String, Json>),
 }
 
+/// Parse failure with its byte position.
 #[derive(Debug, thiserror::Error)]
 #[error("json error at byte {pos}: {msg}")]
 pub struct JsonError {
+    /// Byte offset the parser stopped at.
     pub pos: usize,
+    /// What went wrong.
     pub msg: String,
 }
 
 impl Json {
+    /// Parse a complete JSON document (trailing data is an error).
     pub fn parse(s: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: s.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -37,6 +48,7 @@ impl Json {
 
     // -- typed accessors (None on type mismatch / missing key) -------------
 
+    /// Object member by key.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -44,6 +56,7 @@ impl Json {
         }
     }
 
+    /// Array element by index.
     pub fn idx(&self, i: usize) -> Option<&Json> {
         match self {
             Json::Arr(a) => a.get(i),
@@ -51,6 +64,7 @@ impl Json {
         }
     }
 
+    /// The number, if this is one.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -58,14 +72,17 @@ impl Json {
         }
     }
 
+    /// The number truncated to i64, if this is a number.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|f| f as i64)
     }
 
+    /// The number truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
     }
 
+    /// The string, if this is one.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -73,6 +90,7 @@ impl Json {
         }
     }
 
+    /// The bool, if this is one.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -80,6 +98,7 @@ impl Json {
         }
     }
 
+    /// The array slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -87,6 +106,7 @@ impl Json {
         }
     }
 
+    /// The object map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -105,22 +125,27 @@ impl Json {
 
     // -- builders ------------------------------------------------------------
 
+    /// Object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Array from an iterator of values.
     pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
         Json::Arr(items.into_iter().collect())
     }
 
+    /// Number from anything convertible to f64.
     pub fn num<N: Into<f64>>(n: N) -> Json {
         Json::Num(n.into())
     }
 
+    /// String from anything convertible to `String`.
     pub fn str<S: Into<String>>(s: S) -> Json {
         Json::Str(s.into())
     }
 
+    /// Number array from an f64 slice.
     pub fn f64s(v: &[f64]) -> Json {
         Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
     }

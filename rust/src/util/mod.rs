@@ -13,14 +13,17 @@ use std::sync::atomic::{AtomicU8, Ordering};
 
 static LOG_LEVEL: AtomicU8 = AtomicU8::new(2); // 0=off 1=error 2=info 3=debug
 
+/// Set the global log level (0=off, 1=error, 2=info, 3=debug).
 pub fn set_log_level(level: u8) {
     LOG_LEVEL.store(level, Ordering::Relaxed);
 }
 
+/// Whether messages at `level` are currently emitted.
 pub fn log_enabled(level: u8) -> bool {
     LOG_LEVEL.load(Ordering::Relaxed) >= level
 }
 
+/// Log at info level (level 2) to stderr.
 #[macro_export]
 macro_rules! info {
     ($($arg:tt)*) => {
@@ -30,6 +33,7 @@ macro_rules! info {
     };
 }
 
+/// Log at debug level (level 3) to stderr.
 #[macro_export]
 macro_rules! debug {
     ($($arg:tt)*) => {

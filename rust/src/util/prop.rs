@@ -7,6 +7,8 @@
 
 use crate::util::rng::Rng;
 
+/// Types that can propose smaller versions of themselves for
+/// counterexample minimization.
 pub trait Shrink: Sized + Clone + std::fmt::Debug {
     /// Candidate strictly-smaller values, tried in order.
     fn shrink(&self) -> Vec<Self> {

@@ -4,6 +4,7 @@
 //! pairing; passes BigCrush per its authors. Used by the workload
 //! generators, the property-test harness and the simulator.
 
+/// xoshiro256** stream seeded via SplitMix64 (see module docs).
 #[derive(Clone, Debug)]
 pub struct Rng {
     s: [u64; 4],
@@ -18,11 +19,13 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Deterministic stream from a 64-bit seed.
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         Rng { s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)] }
     }
 
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
         let t = self.s[1] << 17;
@@ -47,6 +50,7 @@ impl Rng {
         }
     }
 
+    /// Uniform in `[lo, hi)`.
     pub fn range(&mut self, lo: i64, hi: i64) -> i64 {
         assert!(lo < hi);
         lo + self.below((hi - lo) as u64) as i64
@@ -69,10 +73,12 @@ impl Rng {
         -(1.0 - self.f64()).ln() / lambda
     }
 
+    /// Bernoulli draw with probability `p`.
     pub fn bool(&mut self, p: f64) -> bool {
         self.f64() < p
     }
 
+    /// Uniformly chosen element of a non-empty slice.
     pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.below(xs.len() as u64) as usize]
     }

@@ -26,12 +26,14 @@ struct Shared {
     done_lock: Mutex<()>,
 }
 
+/// Fixed-size OS-thread pool over an mpsc work queue (see module docs).
 pub struct ThreadPool {
     shared: Arc<Shared>,
     workers: Vec<thread::JoinHandle<()>>,
 }
 
 impl ThreadPool {
+    /// Spawn a pool of `n` workers (at least one).
     pub fn new(n: usize) -> Self {
         let shared = Arc::new(Shared {
             queue: Mutex::new(std::collections::VecDeque::new()),
@@ -50,10 +52,12 @@ impl ThreadPool {
         ThreadPool { shared, workers }
     }
 
+    /// Worker-thread count.
     pub fn workers(&self) -> usize {
         self.workers.len()
     }
 
+    /// Enqueue one job for any worker to run.
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
         self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
         self.shared.queue.lock().unwrap().push_back(Box::new(f));
@@ -72,8 +76,9 @@ impl ThreadPool {
     /// accounting a worker would perform. Returns false if the queue was
     /// empty. Lets a blocked forker help drain the queue, which keeps
     /// nested `scope_parallel_borrowed` calls deadlock-free. A panicking
-    /// job is contained (see [`run_job`]): it must not unwind through a
-    /// forker whose other jobs still borrow its stack frame.
+    /// job is contained (see the private `run_job` helper): it must not
+    /// unwind through a forker whose other jobs still borrow its stack
+    /// frame.
     pub fn run_pending_one(&self) -> bool {
         let job = self.shared.queue.lock().unwrap().pop_front();
         match job {

@@ -10,10 +10,14 @@ use anyhow::{anyhow, Context, Result};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
+/// One teacher-forced eval sample (ids + where its answer span lives).
 #[derive(Debug, Clone)]
 pub struct EvalSample {
+    /// Full token sequence, answer included.
     pub ids: Vec<i32>,
+    /// Index of the first answer token within `ids`.
     pub answer_start: usize,
+    /// Answer length in tokens.
     pub answer_len: usize,
 }
 
@@ -25,6 +29,7 @@ impl EvalSample {
     }
 }
 
+/// Load an eval set JSON emitted by `aot.py`.
 pub fn load_eval_set(path: &Path) -> Result<Vec<EvalSample>> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading eval set {}", path.display()))?;

@@ -173,6 +173,45 @@ fn fanout_shares_one_prefix_across_branches_and_requests() {
 }
 
 #[test]
+fn radix_mode_serves_partial_prefix_hits() {
+    use std::sync::atomic::Ordering;
+    use stem::coordinator::PrefixMode;
+    use stem::decode::DecodePolicy;
+
+    let Some(engine) = engine() else { return };
+    // default config = radix prefix matching
+    let coord = Arc::new(Coordinator::new(engine, CoordinatorConfig::default()));
+    let pt = coord.shared_kv().page_tokens();
+    // prompt B shares exactly two pages of tokens with prompt A, then
+    // diverges; radix mode must fork the covered pages and ingest only
+    // B's suffix
+    let a: Vec<i32> = (0..2 * pt + 7).map(|i| 16 + (i % 40) as i32).collect();
+    let mut b: Vec<i32> = a[..2 * pt].to_vec();
+    b.extend((0..pt).map(|i| 60 + (i % 20) as i32));
+    let first = coord.generate_blocking(a, 6, DecodePolicy::default()).unwrap();
+    assert!(first.steps >= 1, "generation must produce at least one token");
+    let second = coord.generate_blocking(b.clone(), 6, DecodePolicy::default()).unwrap();
+    assert_eq!(second.n_prompt, b.len());
+    assert_eq!(coord.metrics.prefix_partial_hits.load(Ordering::Relaxed), 1);
+    assert!(coord.metrics.covered_token_ratio() > 0.0, "covered-token gauge must move");
+    let report = coord.report();
+    assert!(report.contains("partial=1"), "{report}");
+    assert!(report.contains("cached prefixes: 2"), "{report}");
+    // decode parity: the partially-reused continuation must equal a
+    // clean full ingest on an exact-mode coordinator
+    let Some(engine2) = engine() else { return };
+    let control_coord = Arc::new(Coordinator::new(
+        engine2,
+        CoordinatorConfig { prefix_mode: PrefixMode::Exact, ..Default::default() },
+    ));
+    let control = control_coord.generate_blocking(b, 6, DecodePolicy::default()).unwrap();
+    assert_eq!(
+        second.tokens, control.tokens,
+        "partial-prefix reuse must not change the decoded stream"
+    );
+}
+
+#[test]
 fn rejects_oversized_and_unknown() {
     let Some(engine) = engine() else { return };
     let coord = Arc::new(Coordinator::new(engine, CoordinatorConfig::default()));
