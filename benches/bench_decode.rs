@@ -1,9 +1,12 @@
 //! Decode-phase micro-benchmarks: ns/token of the single-query kernels
 //! (sparse selection + attention vs. dense full-context attention) across
-//! cached-context lengths, plus the end-to-end paged session step. Writes
-//! machine-readable results to `BENCH_decode.json` so future PRs have a
-//! decode perf trajectory (the acceptance figure is sparse beating dense
-//! ns/token at n >= 2048).
+//! cached-context lengths, the end-to-end paged session step, and the
+//! speculative draft/verify loop vs sequential decode at equal output.
+//! Writes machine-readable results to `BENCH_decode.json` so future PRs
+//! have a decode perf trajectory (acceptance figures: sparse beating
+//! dense ns/token at n >= 2048, and the `spec` section targeting ≥1.5×
+//! tokens/sec at γ=4 over sequential dense decode — with the committed
+//! stream asserted byte-identical).
 //!
 //!   cargo bench --bench bench_decode                 # full sizes
 //!   cargo bench --bench bench_decode -- --quick      # small samples
@@ -13,7 +16,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use stem::coordinator::kv_cache::KvConfig;
-use stem::decode::{DecodePolicy, DecodeSession, SharedKv, TinyLm};
+use stem::decode::{DecodePolicy, DecodeSession, SharedKv, SpecStats, TinyLm};
 use stem::model::vocab;
 use stem::sparse::{
     decode_block_scores, select_decode, sparse_decode_attention, KvBlocks, Selection, Tensor,
@@ -105,6 +108,55 @@ fn main() {
         rows.push(row(&st, n0, 0.0));
     }
 
+    // --- speculative decode: draft/verify vs sequential, equal output --
+    // Long-context dense serving is the regime speculation targets: the
+    // serving attention is the dominant, memory-bound per-token cost,
+    // and the batched verify streams the KV once per ROUND (γ+1 query
+    // rows share the walk) instead of once per token, while drafts pay
+    // only the tight sparse budget. Output equality is asserted hard;
+    // the ≥1.5× γ=4 throughput target is reported (machine-dependent).
+    let spec_n0 = if quick { 4096usize } else { 8192 };
+    let spec_new = if quick { 32usize } else { 64 };
+    let run_gen = |gamma: usize| -> (Vec<i32>, f64, SpecStats) {
+        let kvpool = SharedKv::new(KvConfig { total_pages: 1024, page_tokens: block }, hk, dh);
+        let model = Arc::new(TinyLm::new(0xD0C0DE, h, hk, dh, vocab::VOCAB_SIZE));
+        let policy = DecodePolicy { spec_gamma: gamma, ..DecodePolicy::dense() };
+        let mut session = DecodeSession::new(kvpool, model, policy, 1).unwrap();
+        let mut rng = Rng::new(11);
+        let prompt: Vec<i32> =
+            (0..spec_n0).map(|_| vocab::WORD0 + rng.below(64) as i32).collect();
+        session.prefill(&prompt).unwrap();
+        let t = Instant::now();
+        let stats = session.generate(spec_new, None, |_| true).unwrap();
+        let wall = t.elapsed().as_nanos() as f64;
+        assert_eq!(stats.steps, spec_new, "benchmark stream ended early");
+        (stats.tokens, wall / stats.steps as f64, stats.spec)
+    };
+    let (seq_tokens, seq_ns, _) = run_gen(0);
+    println!("spec baseline: sequential dense decode {seq_ns:.0} ns/token at n={spec_n0}");
+    // (gamma, ns/token, speedup, acceptance, tokens/round)
+    let mut spec_rows: Vec<(usize, f64, f64, f64, f64)> = vec![];
+    for gamma in [2usize, 4] {
+        let (tokens, ns, sp) = run_gen(gamma);
+        assert_eq!(
+            tokens, seq_tokens,
+            "speculative decode must emit the exact sequential stream (gamma={gamma})"
+        );
+        let speedup = seq_ns / ns;
+        println!(
+            "spec gamma={gamma}: {ns:.0} ns/token ({speedup:.2}x), acceptance {:.0}%, {:.2} tokens/round",
+            100.0 * sp.acceptance_rate(),
+            sp.tokens_per_round(),
+        );
+        spec_rows.push((gamma, ns, speedup, sp.acceptance_rate(), sp.tokens_per_round()));
+    }
+    if let Some(&(_, _, s4, _, _)) = spec_rows.iter().find(|r| r.0 == 4) {
+        println!(
+            "  -> spec gate (gamma=4 tokens/sec >= 1.5x sequential): {}",
+            if s4 >= 1.5 { "PASS" } else { "MISS" }
+        );
+    }
+
     let out = Json::obj(vec![
         ("bench", Json::Str("bench_decode".into())),
         ("threads", Json::Num(threads as f64)),
@@ -133,6 +185,33 @@ fn main() {
                     })
                     .collect(),
             ),
+        ),
+        (
+            "spec",
+            Json::obj(vec![
+                ("n", Json::Num(spec_n0 as f64)),
+                ("max_new", Json::Num(spec_new as f64)),
+                ("serve", Json::Str("dense".into())),
+                ("seq_ns_per_token", Json::Num(seq_ns)),
+                ("target_speedup_gamma4", Json::Num(1.5)),
+                (
+                    "rows",
+                    Json::Arr(
+                        spec_rows
+                            .iter()
+                            .map(|&(gamma, ns, speedup, acc, tpr)| {
+                                Json::obj(vec![
+                                    ("gamma", Json::Num(gamma as f64)),
+                                    ("ns_per_token", Json::Num(ns)),
+                                    ("speedup_vs_sequential", Json::Num(speedup)),
+                                    ("acceptance_rate", Json::Num(acc)),
+                                    ("tokens_per_round", Json::Num(tpr)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
         ),
     ]);
     let path = "BENCH_decode.json";

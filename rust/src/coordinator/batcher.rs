@@ -66,6 +66,11 @@ impl Default for BatcherConfig {
 pub struct DecodeStep {
     /// Sequence id of the generation this step advances.
     pub seq: u64,
+    /// Tokens this step may commit: 1 for a plain decode step, γ+1 for a
+    /// speculative draft/verify round — so one lane round can carry
+    /// multi-token steps and the dispatcher can reason about queued
+    /// *tokens*, not just queued steps.
+    pub tokens: usize,
     /// When the step entered the decode lane.
     pub enqueued: Instant,
 }
@@ -146,6 +151,13 @@ impl Batcher {
     /// timeout, not prefill's).
     pub fn decode_pending(&self) -> usize {
         self.decode_q.len()
+    }
+
+    /// Upper bound on tokens the queued decode steps may commit —
+    /// speculative rounds carry up to γ+1 tokens per step, so this can
+    /// exceed [`Batcher::decode_pending`].
+    pub fn decode_pending_tokens(&self) -> usize {
+        self.decode_q.iter().map(|s| s.tokens.max(1)).sum()
     }
 
     /// Enqueue one prefill request under its compatibility key.
@@ -337,7 +349,7 @@ mod tests {
     }
 
     fn step(seq: u64, t: Instant) -> DecodeStep {
-        DecodeStep { seq, enqueued: t }
+        DecodeStep { seq, tokens: 1, enqueued: t }
     }
 
     #[test]
@@ -410,6 +422,27 @@ mod tests {
         let seqs: Vec<u64> = batch.steps.iter().map(|s| s.seq).collect();
         assert_eq!(seqs, vec![100, 101, 102, 103], "siblings share one batch, in order");
         assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn multi_token_sibling_rounds_batch_together_and_count_tokens() {
+        // speculative fan-out siblings: each step carries γ+1 tokens but
+        // the lane still batches the whole group into one round
+        let mut b = Batcher::with_decode(
+            BatcherConfig::default(),
+            DecodeLaneConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+        );
+        let t = Instant::now();
+        b.push_decode_many(
+            (0..3).map(|i| DecodeStep { seq: 200 + i, tokens: 5, enqueued: t }).collect(),
+        );
+        b.push_decode(step(300, t)); // a plain single-token generation
+        assert_eq!(b.decode_pending(), 4);
+        assert_eq!(b.decode_pending_tokens(), 3 * 5 + 1);
+        let batch = b.pop_decode_ready(t + Duration::from_millis(2)).expect("timeout flush");
+        assert_eq!(batch.steps.len(), 4, "spec rounds and plain steps share one batch");
+        assert_eq!(batch.steps.iter().map(|s| s.tokens).sum::<usize>(), 16);
+        assert_eq!(b.decode_pending_tokens(), 0);
     }
 
     #[test]

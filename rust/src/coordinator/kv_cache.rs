@@ -55,6 +55,15 @@ pub enum KvError {
         /// The pool's page size, in tokens.
         page_tokens: usize,
     },
+    /// A tail truncation asked to keep more tokens than the sequence has
+    /// cached — rollback can only move backwards.
+    #[error("cannot truncate sequence to {n_tokens} tokens: only {have} cached")]
+    TruncateBeyondEnd {
+        /// The requested post-truncation token count.
+        n_tokens: usize,
+        /// Tokens actually cached.
+        have: usize,
+    },
 }
 
 /// Pool geometry: how many pages exist and how many tokens each holds.
@@ -328,6 +337,43 @@ impl KvCache {
         e.n_tokens = cur + extra;
         e.last_touch = t;
         Ok(Append { cow, grown })
+    }
+
+    /// Roll a sequence's tail back to `n_tokens` cached tokens (the
+    /// speculative-decode rollback path: drafted K/V past the committed
+    /// prefix is discarded). Pages no longer needed leave the table with
+    /// their refcount decremented — a page shared with a forked sibling
+    /// survives through its refcount; exclusively-owned pages return to
+    /// the free list and are appended to the freed-page log so the slab
+    /// owner GCs their payloads. The surviving tail page may keep stale
+    /// slots past `n_tokens`; the next append overwrites them (after the
+    /// usual copy-on-write remap if the page is shared). Truncating to
+    /// the current count is a no-op; growing is
+    /// [`KvError::TruncateBeyondEnd`], side-effect free. Returns the
+    /// number of pages freed.
+    pub fn truncate_tail(&mut self, seq_id: u64, n_tokens: usize) -> Result<usize, KvError> {
+        let have = self.seqs.get(&seq_id).ok_or(KvError::UnknownSeq(seq_id))?.n_tokens;
+        if n_tokens > have {
+            return Err(KvError::TruncateBeyondEnd { n_tokens, have });
+        }
+        let keep = self.pages_needed(n_tokens);
+        let t = self.tick();
+        let e = self.seqs.get_mut(&seq_id).unwrap();
+        e.n_tokens = n_tokens;
+        e.last_touch = t;
+        let dropped = e.pages.split_off(keep);
+        let mut freed = 0;
+        for p in dropped {
+            let rc = &mut self.refcount[p as usize];
+            debug_assert!(*rc > 0, "double free of page {p}");
+            *rc -= 1;
+            if *rc == 0 {
+                self.free.push(p);
+                self.freed_log.push(p);
+                freed += 1;
+            }
+        }
+        Ok(freed)
     }
 
     /// Mark a sequence's prefill complete; it becomes evictable.
@@ -708,6 +754,96 @@ mod tests {
         kv.take_freed();
         kv.allocate(4, 512).unwrap(); // forces evicting seq 3
         assert_eq!(kv.take_freed().len(), 2, "evicted pages must be logged");
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn truncate_tail_frees_owned_pages_and_logs_them() {
+        let mut kv = cache(8); // page_tokens = 64
+        kv.allocate(1, 300).unwrap(); // 5 pages
+        kv.take_freed();
+        let pages: Vec<u32> = kv.page_table(1).unwrap().to_vec();
+        // non-aligned rollback keeps the partial tail page
+        assert_eq!(kv.truncate_tail(1, 130).unwrap(), 2);
+        assert_eq!(kv.seq_tokens(1), Some(130));
+        assert_eq!(kv.page_table(1).unwrap(), &pages[..3]);
+        let mut freed = kv.take_freed();
+        freed.sort_unstable();
+        let mut want = pages[3..].to_vec();
+        want.sort_unstable();
+        assert_eq!(freed, want, "dropped pages must hit the freed log");
+        kv.check_invariants().unwrap();
+        // truncate to the same count is a no-op
+        assert_eq!(kv.truncate_tail(1, 130).unwrap(), 0);
+        assert_eq!(kv.page_table(1).unwrap().len(), 3);
+        // growing is a clean, side-effect-free error
+        assert_eq!(
+            kv.truncate_tail(1, 131),
+            Err(KvError::TruncateBeyondEnd { n_tokens: 131, have: 130 })
+        );
+        assert_eq!(kv.seq_tokens(1), Some(130));
+        // truncating to zero releases everything but keeps the sequence
+        assert_eq!(kv.truncate_tail(1, 0).unwrap(), 3);
+        assert_eq!(kv.seq_tokens(1), Some(0));
+        assert_eq!(kv.free_pages(), 8);
+        kv.check_invariants().unwrap();
+        // the empty sequence can grow again
+        assert_eq!(kv.append_tokens(1, 65).unwrap().grown.len(), 2);
+        kv.check_invariants().unwrap();
+        assert_eq!(kv.truncate_tail(9, 0), Err(KvError::UnknownSeq(9)));
+    }
+
+    #[test]
+    fn truncate_tail_never_frees_pages_shared_with_a_sibling() {
+        // rollback invariant: a forked tail rolled back must decrement,
+        // never free, pages a sibling still references
+        let mut kv = cache(8); // page_tokens = 64
+        kv.allocate(1, 200).unwrap(); // 4 pages, tail partial
+        kv.fork(1, 2).unwrap();
+        kv.take_freed();
+        let shared: Vec<u32> = kv.page_table(1).unwrap().to_vec();
+        // the fork diverges: CoW remaps its tail, then it grows a page
+        let app = kv.append_tokens(2, 100).unwrap(); // 300 tokens -> 5 pages
+        assert!(app.cow.is_some());
+        assert_eq!(app.grown.len(), 1);
+        kv.take_freed();
+        // roll the fork all the way back to the shared prefix length
+        let freed = kv.truncate_tail(2, 128).unwrap(); // keeps 2 shared pages
+        // freed: the CoW'd tail copy + the grown page (exclusively owned);
+        // the two surviving pages are shared and must stay referenced
+        assert_eq!(freed, 2);
+        assert_eq!(kv.take_freed().len(), 2);
+        assert_eq!(kv.page_table(2).unwrap(), &shared[..2]);
+        assert!(kv.page_table(1).unwrap() == &shared[..], "sibling table untouched");
+        assert_eq!(kv.seq_tokens(1), Some(200), "sibling token count untouched");
+        kv.check_invariants().unwrap();
+        // dropping the rolled-back fork frees nothing shared
+        kv.drop_seq(2).unwrap();
+        assert_eq!(kv.take_freed(), vec![], "shared pages survive the fork");
+        assert_eq!(kv.used_pages(), 4);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn append_after_truncate_cows_a_still_shared_tail() {
+        // a rolled-back fork whose surviving tail page is still shared
+        // must CoW before its next write, exactly like a fresh fork
+        let mut kv = cache(8);
+        kv.allocate(1, 100).unwrap(); // 2 pages, tail partial
+        kv.fork(1, 2).unwrap();
+        // diverge the fork (CoW) then roll it back INTO the shared page
+        kv.append_tokens(2, 30).unwrap();
+        kv.truncate_tail(2, 70).unwrap(); // 70 % 64 != 0: tail is page 1
+        // after rollback the fork's tail slot holds its own CoW copy (the
+        // remap happened before the rollback), so appends are direct...
+        let a = kv.append_tokens(2, 1).unwrap();
+        assert_eq!(a.cow, None);
+        // ...but a fork rolled back before ever diverging still shares
+        // its tail and must CoW on append
+        kv.fork(1, 3).unwrap();
+        kv.truncate_tail(3, 70).unwrap();
+        let a = kv.append_tokens(3, 1).unwrap();
+        assert!(a.cow.is_some(), "shared post-rollback tail must copy-on-write");
         kv.check_invariants().unwrap();
     }
 

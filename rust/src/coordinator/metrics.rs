@@ -116,6 +116,16 @@ pub struct Metrics {
     pub decode_step: LatencyHisto,
     /// sum of per-step decode budget fractions * 1e6, for the mean
     pub decode_budget_sum_micro: AtomicU64,
+    // --- speculative decode ---------------------------------------------
+    /// Speculative draft/verify rounds executed in the decode lane.
+    pub spec_rounds: AtomicU64,
+    /// Draft tokens proposed across all rounds (γ per round).
+    pub spec_drafted: AtomicU64,
+    /// Draft tokens the batched verify accepted.
+    pub spec_accepted: AtomicU64,
+    /// Tokens committed by speculative rounds (accepted drafts + one
+    /// verify correction/bonus per round, after stop/budget trims).
+    pub spec_committed: AtomicU64,
     // --- shared-prefix fan-out ------------------------------------------
     /// Branch sessions forked off a refcounted prefix (every admitted
     /// generation branch forks exactly once).
@@ -182,6 +192,36 @@ impl Metrics {
         }
     }
 
+    /// Record one speculative draft/verify round (its committed tokens
+    /// are recorded per token via [`Metrics::record_decode_step`]).
+    pub fn record_spec_round(&self, drafted: u64, accepted: u64, committed: u64) {
+        self.spec_rounds.fetch_add(1, Ordering::Relaxed);
+        self.spec_drafted.fetch_add(drafted, Ordering::Relaxed);
+        self.spec_accepted.fetch_add(accepted, Ordering::Relaxed);
+        self.spec_committed.fetch_add(committed, Ordering::Relaxed);
+    }
+
+    /// Fraction of drafted tokens the verify accepted (0 before any
+    /// speculative round runs).
+    pub fn spec_acceptance_rate(&self) -> f64 {
+        let drafted = self.spec_drafted.load(Ordering::Relaxed);
+        if drafted == 0 {
+            0.0
+        } else {
+            self.spec_accepted.load(Ordering::Relaxed) as f64 / drafted as f64
+        }
+    }
+
+    /// Mean tokens committed per speculative round (0 before any runs).
+    pub fn spec_tokens_per_round(&self) -> f64 {
+        let rounds = self.spec_rounds.load(Ordering::Relaxed);
+        if rounds == 0 {
+            0.0
+        } else {
+            self.spec_committed.load(Ordering::Relaxed) as f64 / rounds as f64
+        }
+    }
+
     /// Render the multi-line serving report (rates computed over
     /// `wall`, the coordinator's uptime).
     pub fn report(&self, wall: Duration) -> String {
@@ -226,6 +266,17 @@ impl Metrics {
                 self.decode_step.percentile_us(0.9) as f64,
                 self.decode_dense_steps.load(Ordering::Relaxed),
                 self.mean_decode_budget(),
+            ));
+        }
+        let rounds = self.spec_rounds.load(Ordering::Relaxed);
+        if rounds > 0 {
+            out.push_str(&format!(
+                "\nspec: rounds={rounds} drafted={} accepted={} ({:.0}% acceptance) | \
+                 tokens/round={:.2}",
+                self.spec_drafted.load(Ordering::Relaxed),
+                self.spec_accepted.load(Ordering::Relaxed),
+                100.0 * self.spec_acceptance_rate(),
+                self.spec_tokens_per_round(),
             ));
         }
         let forks = self.forks.load(Ordering::Relaxed);
@@ -297,6 +348,21 @@ mod tests {
         assert!(loud.contains("tokens generated: 2"));
         assert_eq!(m.decode_dense_steps.load(Ordering::Relaxed), 1);
         assert!((m.mean_decode_budget() - 0.625).abs() < 1e-6);
+    }
+
+    #[test]
+    fn spec_section_appears_once_rounds_recorded() {
+        let m = Metrics::new();
+        assert!(!m.report(Duration::from_secs(1)).contains("spec:"));
+        assert_eq!(m.spec_acceptance_rate(), 0.0);
+        assert_eq!(m.spec_tokens_per_round(), 0.0);
+        m.record_spec_round(4, 3, 4);
+        m.record_spec_round(4, 1, 2);
+        let r = m.report(Duration::from_secs(1));
+        assert!(r.contains("spec: rounds=2 drafted=8 accepted=4 (50% acceptance)"), "{r}");
+        assert!(r.contains("tokens/round=3.00"), "{r}");
+        assert!((m.spec_acceptance_rate() - 0.5).abs() < 1e-12);
+        assert!((m.spec_tokens_per_round() - 3.0).abs() < 1e-12);
     }
 
     #[test]

@@ -63,10 +63,15 @@ use super::kv_cache::{KvConfig, KvError};
 use super::metrics::Metrics;
 use super::prefix::{PrefixIndex, PrefixMode, RadixIndex};
 use super::request::{GenerateRequest, GenerateResponse, Method, PrefillRequest, PrefillResponse};
-use crate::decode::{DecodeError, DecodePolicy, DecodeSession, SharedKv, StepPlan, TinyLm};
+use crate::decode::{
+    DecodeError, DecodePolicy, DecodeSession, SharedKv, StepInfo, StepPlan, TinyLm,
+};
 use crate::model::vocab;
 use crate::runtime::Engine;
-use crate::sim::cost::{estimate_generate_ns, estimate_ingest_ns, Geometry};
+use crate::sim::cost::{
+    estimate_generate_ns, estimate_ingest_ns, estimate_spec_step_ns, Geometry,
+    SPEC_ASSUMED_ACCEPTANCE,
+};
 use crate::util::threadpool::ThreadPool;
 
 /// Parked prefix holders kept as a cache before the lightest are
@@ -159,8 +164,10 @@ enum Msg {
     /// A prefix holder finished (or failed) its one-time prompt ingest
     /// on a worker; the session comes back to be parked in the cache.
     PrefixFilled { key: u64, session: Result<Box<DecodeSession>, String> },
-    /// A generation finished a step and wants its next one scheduled.
-    DecodeReady(u64),
+    /// A generation finished a step and wants its next one scheduled;
+    /// the second field is the step's token width (γ+1 for speculative
+    /// rounds, 1 otherwise) so the decode lane carries it.
+    DecodeReady(u64, usize),
     Shutdown,
 }
 
@@ -422,14 +429,37 @@ impl Coordinator {
             StepPlan::Dense => None,
             StepPlan::Sparse { budget_blocks } => Some(budget_blocks as f64),
         };
-        let full_ns = estimate_generate_ns(
-            &self.geometry,
-            prompt.len(),
-            max_new_tokens,
-            budget,
-            policy.stride,
-            self.workers,
-        );
+        let full_ns = if policy.spec_gamma >= 1 {
+            // speculative branch: charge draft/verify rounds at the
+            // conservative assumed acceptance instead of per-token steps
+            let mean_ctx = prompt.len() + max_new_tokens / 2;
+            let draft = policy.draft();
+            let draft_budget = match draft.plan(mean_ctx, 0, self.geometry.block) {
+                StepPlan::Dense => None,
+                StepPlan::Sparse { budget_blocks } => Some(budget_blocks as f64),
+            };
+            let round_ns = estimate_spec_step_ns(
+                &self.geometry,
+                mean_ctx,
+                policy.spec_gamma,
+                draft_budget,
+                budget,
+                policy.stride,
+                self.workers,
+            );
+            let commits = 1.0 + policy.spec_gamma as f64 * SPEC_ASSUMED_ACCEPTANCE;
+            estimate_ingest_ns(&self.geometry, prompt.len())
+                + (max_new_tokens as f64 / commits).ceil() * round_ns
+        } else {
+            estimate_generate_ns(
+                &self.geometry,
+                prompt.len(),
+                max_new_tokens,
+                budget,
+                policy.stride,
+                self.workers,
+            )
+        };
         let full_ingest_ns = estimate_ingest_ns(&self.geometry, prompt.len());
         let decode_ns = (full_ns - full_ingest_ns).max(0.0);
         let prefix_hash = prompt_hash(&prompt);
@@ -974,8 +1004,8 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                     }
                     retire_excess_holders(&mut holders, tables, &kv);
                 }
-                Msg::DecodeReady(seq) => {
-                    batcher.push_decode(DecodeStep { seq, enqueued: Instant::now() });
+                Msg::DecodeReady(seq, tokens) => {
+                    batcher.push_decode(DecodeStep { seq, tokens, enqueued: Instant::now() });
                 }
             }
         }
@@ -1106,7 +1136,11 @@ fn launch_branches(
                     admit_ns: spec.admit.ns,
                 };
                 tasks.lock().unwrap().insert(spec.seq, task);
-                steps.push(DecodeStep { seq: spec.seq, enqueued: spec.enqueued });
+                steps.push(DecodeStep {
+                    seq: spec.seq,
+                    tokens: spec.policy.spec_gamma + 1,
+                    enqueued: spec.enqueued,
+                });
             }
             Err(DecodeError::Kv(KvError::UnknownSeq(_))) => bounced.push(spec),
             Err(e) => fail_branch(
@@ -1219,8 +1253,12 @@ fn retire_excess_holders(
     }
 }
 
-/// Advance one generation by one token on a worker thread, then either
-/// complete it or hand it back to the dispatcher for its next step.
+/// Advance one generation on a worker thread — one token for plain
+/// decode, up to γ+1 tokens for a speculative draft/verify round — then
+/// either complete it or hand it back to the dispatcher for its next
+/// step. Either way the generation occupies exactly one decode-lane slot
+/// per round, so fork fan-out siblings keep batching together whether or
+/// not they speculate.
 fn run_decode_step(
     seq: u64,
     tasks: &DecodeTasks,
@@ -1245,21 +1283,42 @@ fn run_decode_step(
     if task.first_step_at.is_none() {
         task.first_step_at = Some(Instant::now());
     }
-    match task.session.step_once() {
-        Ok(info) => {
-            metrics.record_decode_step(
-                Duration::from_nanos(info.step_ns),
-                info.budget_fraction,
-                info.dense,
-            );
-            task.tokens.push(info.token);
-            let done = task.tokens.len() >= task.max_new || info.token == vocab::END;
+    let gamma = task.session.policy().spec_gamma;
+    let stepped: Result<(Vec<StepInfo>, bool), DecodeError> = if gamma >= 1 {
+        let remaining = task.max_new.saturating_sub(task.tokens.len()).max(1);
+        task.session.spec_round(gamma.min(remaining), remaining, Some(vocab::END), |_| true).map(
+            |round| {
+                metrics.record_spec_round(
+                    round.drafted as u64,
+                    round.accepted as u64,
+                    round.infos.len() as u64,
+                );
+                (round.infos, round.halt)
+            },
+        )
+    } else {
+        task.session.step_once().map(|info| {
+            let halt = info.token == vocab::END;
+            (vec![info], halt)
+        })
+    };
+    match stepped {
+        Ok((infos, halt)) => {
+            for info in &infos {
+                metrics.record_decode_step(
+                    Duration::from_nanos(info.step_ns),
+                    info.budget_fraction,
+                    info.dense,
+                );
+                task.tokens.push(info.token);
+            }
+            let done = task.tokens.len() >= task.max_new || halt;
             if done {
                 let resp = generate_response(seq, &mut task);
                 finish(task, Ok(resp));
             } else {
                 tasks.lock().unwrap().insert(seq, task);
-                if tx.send(Msg::DecodeReady(seq)).is_err() {
+                if tx.send(Msg::DecodeReady(seq, gamma + 1)).is_err() {
                     // dispatcher gone: complete what we have so the
                     // caller is not left hanging
                     if let Some(mut task) = tasks.lock().unwrap().remove(&seq) {

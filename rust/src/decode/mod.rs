@@ -28,20 +28,35 @@
 //!   prefix and ingest the rest (the radix prefix cache's primitive).
 //!   [`TinyLm`] is the deterministic reference LM standing in for
 //!   per-step decode HLO modules.
+//! * [`spec`] — speculative multi-token decode:
+//!   [`DecodeSession::spec_round`] drafts γ tokens with the cheap
+//!   [`DecodePolicy::draft`] variant, verifies all γ+1 positions under
+//!   the serving policy in one batched multi-query kernel pass, commits
+//!   the longest agreeing prefix (plus the verify's correction/bonus
+//!   token) and rolls the drafted K/V tail back through
+//!   `truncate_tail`. The emitted stream is *bit-exactly* the
+//!   non-speculative greedy stream — the decode-equivalence property
+//!   suite (`rust/tests/spec_equivalence.rs`) enforces that, not an
+//!   epsilon.
 //!
 //! The coordinator drives sessions through `Coordinator::submit_generate`
-//! / `submit_generate_many` (shared-prefix fan-out) with decode steps
-//! continuously batched between prefill batches; the `stem generate`
-//! subcommand (`--fanout N`) and `examples/generate_stream.rs` /
+//! / `submit_generate_many` (shared-prefix fan-out) with decode steps —
+//! single-token or speculative multi-token rounds — continuously batched
+//! between prefill batches; the `stem generate` subcommand (`--fanout N`,
+//! `--spec N`) and `examples/generate_stream.rs` /
 //! `examples/fanout_stream.rs` drive sessions directly (no artifacts
 //! needed).
 
 pub mod policy;
 pub mod session;
 pub mod sparse_decode;
+pub mod spec;
 pub mod store;
 
 pub use policy::{DecodePolicy, StepPlan};
 pub use session::{DecodeError, DecodeSession, SessionStats, StepInfo, TinyLm};
-pub use sparse_decode::{decode_attend, decode_attend_dense_reference, DecodeAttnOut};
+pub use sparse_decode::{
+    decode_attend, decode_attend_dense_reference, verify_attend, DecodeAttnOut, VerifyAttnOut,
+};
+pub use spec::{SpecRound, SpecStats};
 pub use store::{PagedKv, SeqKvView, SharedKv};

@@ -35,6 +35,14 @@ pub struct DecodePolicy {
     pub beta: f32,
     /// Within-block sampling stride of the decode routing metric.
     pub stride: usize,
+    /// Speculative-decode draft depth γ: `0` decodes one token per step
+    /// (the PR 2 path); `γ >= 1` drafts γ tokens per round with the
+    /// cheap [`DecodePolicy::draft`] variant of this policy, verifies
+    /// all γ+1 positions in one batched kernel under *this* policy, and
+    /// commits the longest agreeing prefix — so the emitted stream is
+    /// exactly what non-speculative decode under this policy would
+    /// produce (see `decode::spec`).
+    pub spec_gamma: usize,
 }
 
 impl Default for DecodePolicy {
@@ -49,6 +57,7 @@ impl Default for DecodePolicy {
             min_blocks: 4,
             beta: 0.2,
             stride: 8,
+            spec_gamma: 0,
         }
     }
 }
@@ -69,6 +78,25 @@ impl DecodePolicy {
     /// A policy that always decodes dense (the Lil baseline / fallback).
     pub fn dense() -> Self {
         DecodePolicy { dense_below: usize::MAX, ..Default::default() }
+    }
+
+    /// The cheap draft variant of this (serving) policy used by the
+    /// speculative loop: the same TPD/OAM machinery, but forced sparse
+    /// beyond a short dense window so every draft step pays a tight
+    /// block budget instead of the serving policy's full attention —
+    /// sinks and the recent window stay force-kept (Lil), which is what
+    /// keeps draft/serve argmax agreement (the acceptance rate) high.
+    /// Draft outputs are only *proposals*; the batched verify re-scores
+    /// every position under the serving policy, so an aggressive draft
+    /// can change throughput but never the emitted stream.
+    pub fn draft(&self) -> DecodePolicy {
+        let forced = (self.sink_blocks + self.recent_blocks).max(1);
+        DecodePolicy {
+            dense_below: self.dense_below.min(512),
+            k_start: self.k_start.max(forced as f64 + 1.0),
+            spec_gamma: 0,
+            ..*self
+        }
     }
 
     /// Reject configurations the planner cannot honor (bad decay,
@@ -171,6 +199,30 @@ mod tests {
         let f = DecodePolicy::plan_fraction(StepPlan::Sparse { budget_blocks: 8 }, 4096, 64);
         assert!((f - 8.0 / 64.0).abs() < 1e-12);
         assert_eq!(DecodePolicy::plan_fraction(StepPlan::Dense, 4096, 64), 1.0);
+    }
+
+    #[test]
+    fn draft_policy_is_sparse_and_cheaper_where_the_serving_policy_is_dense() {
+        // the dense serving baseline drafts sparse beyond a short window
+        let serve = DecodePolicy::dense();
+        let draft = serve.draft();
+        draft.validate().unwrap();
+        assert_eq!(draft.spec_gamma, 0, "a draft never recurses into speculation");
+        assert_eq!(serve.plan(4096, 0, 64), StepPlan::Dense);
+        match draft.plan(4096, 0, 64) {
+            StepPlan::Sparse { budget_blocks } => {
+                assert!(budget_blocks < 4096 / 64, "draft must attend a strict subset")
+            }
+            StepPlan::Dense => panic!("draft of a dense policy must go sparse at long context"),
+        }
+        // short contexts still draft dense (selection overhead dominates)
+        assert_eq!(draft.plan(256, 0, 64), StepPlan::Dense);
+        // forced keeps survive so acceptance does not collapse
+        assert_eq!(draft.sink_blocks, serve.sink_blocks);
+        assert_eq!(draft.recent_blocks, serve.recent_blocks);
+        // drafting an already-sparse policy keeps its budget shape
+        let sparse = DecodePolicy { dense_below: 0, k_start: 6.0, ..Default::default() };
+        assert_eq!(sparse.draft().k_start, 6.0);
     }
 
     #[test]

@@ -116,8 +116,27 @@ impl TinyLm {
     }
 
     fn matvec(w: &Tensor, x: &[f32]) -> Vec<f32> {
+        use crate::sparse::tensor::dot;
         let (out, dm) = (w.shape[0], w.shape[1]);
-        (0..out).map(|o| crate::sparse::tensor::dot(&w.data[o * dm..(o + 1) * dm], x)).collect()
+        // fan output-row chunks over the global pool for wide
+        // projections: each output element is one independent dot, so the
+        // result is bitwise identical at any thread count — projections
+        // were the dominant *serial* cost of a decode step
+        const CHUNK: usize = 64;
+        let pool = crate::util::threadpool::global();
+        if out < 2 * CHUNK || pool.workers() == 1 {
+            return (0..out).map(|o| dot(&w.data[o * dm..(o + 1) * dm], x)).collect();
+        }
+        let chunks = out.div_ceil(CHUNK);
+        let parts = crate::util::threadpool::scope_parallel_borrowed(pool, chunks, |c| {
+            let (lo, hi) = (c * CHUNK, ((c + 1) * CHUNK).min(out));
+            (lo..hi).map(|o| dot(&w.data[o * dm..(o + 1) * dm], x)).collect::<Vec<f32>>()
+        });
+        let mut y = Vec::with_capacity(out);
+        for p in parts {
+            y.extend_from_slice(&p);
+        }
+        y
     }
 
     /// Project one token at `pos`: `(Some(q) if with_q, k, v)`, each
@@ -181,25 +200,36 @@ pub struct SessionStats {
     pub mean_budget_fraction: f64,
     /// Summed per-step wall time in nanoseconds.
     pub decode_ns: u64,
+    /// Speculative draft/verify round statistics (all zero when the
+    /// policy's `spec_gamma` is 0 — the plain one-token-per-step path).
+    pub spec: super::spec::SpecStats,
 }
 
 /// An autoregressive generation against the shared paged KV store (see
 /// module docs). The sequence stays pinned in the pool for the session's
 /// lifetime (unless [`DecodeSession::unpin`] parks it as a prefix
 /// holder); `Drop` releases and frees its exclusively-owned pages.
+///
+/// Fields are `pub(super)` so the speculative draft/verify loop
+/// (`decode::spec`) can drive the same append/attend/rollback state
+/// machine without widening the public API.
 pub struct DecodeSession {
-    seq: u64,
-    kv: Arc<SharedKv>,
-    model: Arc<TinyLm>,
-    policy: DecodePolicy,
-    page_tokens: usize,
-    table: Vec<u32>,
-    n_ctx: usize,
-    step: usize,
-    last_token: i32,
-    budget_sum: f64,
-    dense_steps: usize,
-    decode_ns: u64,
+    pub(super) seq: u64,
+    pub(super) kv: Arc<SharedKv>,
+    pub(super) model: Arc<TinyLm>,
+    pub(super) policy: DecodePolicy,
+    pub(super) page_tokens: usize,
+    pub(super) table: Vec<u32>,
+    pub(super) n_ctx: usize,
+    pub(super) step: usize,
+    pub(super) last_token: i32,
+    pub(super) budget_sum: f64,
+    pub(super) dense_steps: usize,
+    pub(super) decode_ns: u64,
+    pub(super) spec_rounds: u64,
+    pub(super) spec_drafted: u64,
+    pub(super) spec_accepted: u64,
+    pub(super) spec_committed: u64,
     closed: bool,
 }
 
@@ -232,6 +262,10 @@ impl DecodeSession {
             budget_sum: 0.0,
             dense_steps: 0,
             decode_ns: 0,
+            spec_rounds: 0,
+            spec_drafted: 0,
+            spec_accepted: 0,
+            spec_committed: 0,
             closed: false,
         })
     }
@@ -259,6 +293,10 @@ impl DecodeSession {
             budget_sum: 0.0,
             dense_steps: 0,
             decode_ns: 0,
+            spec_rounds: 0,
+            spec_drafted: 0,
+            spec_accepted: 0,
+            spec_committed: 0,
             closed: false,
         })
     }
@@ -293,6 +331,10 @@ impl DecodeSession {
             budget_sum: 0.0,
             dense_steps: 0,
             decode_ns: 0,
+            spec_rounds: 0,
+            spec_drafted: 0,
+            spec_accepted: 0,
+            spec_committed: 0,
             closed: false,
         })
     }
@@ -331,6 +373,11 @@ impl DecodeSession {
         self.last_token
     }
 
+    /// The per-step policy this session decodes under.
+    pub fn policy(&self) -> &DecodePolicy {
+        &self.policy
+    }
+
     /// The model this session projects with.
     pub fn model(&self) -> &Arc<TinyLm> {
         &self.model
@@ -351,7 +398,7 @@ impl DecodeSession {
         Ok(f(&view))
     }
 
-    fn append_kv(&mut self, k_rows: &[f32], v_rows: &[f32]) -> Result<(), DecodeError> {
+    pub(super) fn append_kv(&mut self, k_rows: &[f32], v_rows: &[f32]) -> Result<(), DecodeError> {
         let pos = self.n_ctx;
         let app = self.kv.append_tokens(self.seq, 1)?;
         // patch the cached table from the append delta instead of
@@ -365,6 +412,19 @@ impl DecodeSession {
         let page = self.table[pos / self.page_tokens];
         self.kv.write_token(page, pos % self.page_tokens, k_rows, v_rows)?;
         self.n_ctx = pos + 1;
+        Ok(())
+    }
+
+    /// Roll the cached tail back to `n_tokens` (speculative-decode
+    /// rollback): the pool/store drop pages past the target (shared
+    /// pages survive through their refcounts, freed slabs are GC'd) and
+    /// the cached page table and context count shrink to match. K/V for
+    /// the surviving prefix is untouched, so the session state is
+    /// exactly as if the discarded tokens had never been appended.
+    pub(super) fn rewind_to(&mut self, n_tokens: usize) -> Result<(), DecodeError> {
+        self.kv.truncate_tail(self.seq, n_tokens)?;
+        self.table.truncate(n_tokens.div_ceil(self.page_tokens.max(1)));
+        self.n_ctx = n_tokens;
         Ok(())
     }
 
@@ -432,13 +492,20 @@ impl DecodeSession {
 
     /// Generate up to `max_new` tokens, streaming each through
     /// `on_token`; the callback returning `false` — or `stop_token`
-    /// being emitted — ends the generation early.
+    /// being emitted — ends the generation early. When the policy's
+    /// `spec_gamma` is `>= 1` the tokens are produced by speculative
+    /// draft/verify rounds ([`DecodeSession::generate_spec`]) — the
+    /// emitted stream, cache state and per-step accounting are exactly
+    /// what this non-speculative loop would produce.
     pub fn generate(
         &mut self,
         max_new: usize,
         stop_token: Option<i32>,
         mut on_token: impl FnMut(&StepInfo) -> bool,
     ) -> Result<SessionStats, DecodeError> {
+        if self.policy.spec_gamma >= 1 {
+            return self.generate_spec(max_new, stop_token, on_token);
+        }
         let mut tokens = Vec::with_capacity(max_new);
         for _ in 0..max_new {
             let info = self.step_once()?;
@@ -454,6 +521,7 @@ impl DecodeSession {
             dense_steps: self.dense_steps,
             mean_budget_fraction: self.mean_budget_fraction(),
             decode_ns: self.decode_ns,
+            spec: self.spec_stats(),
         })
     }
 
@@ -475,6 +543,17 @@ impl DecodeSession {
     /// Summed per-step wall time in nanoseconds.
     pub fn decode_ns(&self) -> u64 {
         self.decode_ns
+    }
+
+    /// Lifetime speculative round statistics (zeros when speculation
+    /// never ran on this session).
+    pub fn spec_stats(&self) -> super::spec::SpecStats {
+        super::spec::SpecStats {
+            rounds: self.spec_rounds,
+            drafted: self.spec_drafted,
+            accepted: self.spec_accepted,
+            committed: self.spec_committed,
+        }
     }
 
     /// Release the sequence and free its exclusively-owned pages;

@@ -1,17 +1,29 @@
-//! One decode attention step: plan → rank → select → attend.
+//! One decode attention step: plan → rank → select → attend; plus the
+//! batched multi-position verify pass behind speculative decode.
 //!
 //! Thin orchestration over the single-query kernels in
 //! `sparse::attention` (`decode_block_scores` / `select_decode` /
 //! `sparse_decode_attention`): the [`DecodePolicy`] picks dense or
 //! sparse for this step, sparse steps rank the cached blocks with the
 //! decode Output-Aware Metric and keep the top budget (sinks + recent
-//! window forced), and both paths run the same online-softmax kernel —
-//! dense is just the full selection. Head-level work fans over
-//! `util::threadpool::global()` inside the kernels.
+//! window forced). The dense plan takes a fast path — there is nothing
+//! to rank, so it runs the selection-free [`dense_decode_attention`]
+//! kernel without scoring or materializing a `Selection`
+//! ([`DecodeAttnOut::ranked`] pins which path ran). Head-level work fans
+//! over `util::threadpool::global()` inside the kernels.
+//!
+//! [`verify_attend`] is the speculative-verify analogue of one step: it
+//! re-scores G consecutive stream positions under the serving policy in
+//! one batched kernel pass ([`sparse_verify_attention`]), with each
+//! position planned, scored and selected exactly as a sequential
+//! [`decode_attend`] at the same width and step counter would be — the
+//! property the `decode::spec` commit rule turns into bit-exact
+//! equivalence with non-speculative decode.
 
 use crate::sparse::{
-    decode_block_scores, dense_decode_attention_reference, select_decode,
-    sparse_decode_attention, KvBlocks, Selection, Tensor,
+    decode_block_scores, dense_decode_attention, dense_decode_attention_reference, select_decode,
+    sparse_decode_attention, sparse_verify_attention, KvBlocks, KvPrefix, Selection,
+    SelectionBuilder, Tensor,
 };
 
 use super::policy::{DecodePolicy, StepPlan};
@@ -27,6 +39,10 @@ pub struct DecodeAttnOut {
     pub dense: bool,
     /// Blocks attended per head (== context blocks when dense).
     pub selected_blocks: usize,
+    /// Whether top-k ranking (scoring + selection) actually ran: `false`
+    /// on the dense fast path, which attends the whole context without
+    /// computing scores or materializing a [`Selection`].
+    pub ranked: bool,
 }
 
 /// Run one policy-directed decode attention step. `q` is `[H, dh]` (all
@@ -43,24 +59,126 @@ pub fn decode_attend(
     let block = kv.block_tokens();
     let nblk = kv.n_blocks();
     let plan = policy.plan(n_ctx, step, block);
-    let (sel, dense) = match plan {
-        StepPlan::Dense => (Selection::decode_full(q.shape[0], nblk), true),
+    match plan {
+        StepPlan::Dense => {
+            // dense fast path: nothing to rank, so skip scoring and the
+            // full-Selection allocation entirely
+            let out = dense_decode_attention(q, kv);
+            DecodeAttnOut {
+                out,
+                budget_fraction: 1.0,
+                dense: true,
+                selected_blocks: nblk,
+                ranked: false,
+            }
+        }
         StepPlan::Sparse { budget_blocks } => {
             let scores = decode_block_scores(q, kv, policy.stride, policy.beta);
-            (
-                select_decode(&scores, budget_blocks, policy.sink_blocks, policy.recent_blocks),
-                false,
-            )
+            let sel =
+                select_decode(&scores, budget_blocks, policy.sink_blocks, policy.recent_blocks);
+            debug_assert!(sel.validate_decode(nblk).is_ok());
+            let out = sparse_decode_attention(q, kv, &sel);
+            DecodeAttnOut {
+                out,
+                budget_fraction: DecodePolicy::plan_fraction(plan, n_ctx, block),
+                dense: false,
+                selected_blocks: sel.count(0, 0),
+                ranked: true,
+            }
         }
-    };
-    debug_assert!(sel.validate_decode(nblk).is_ok());
-    let out = sparse_decode_attention(q, kv, &sel);
-    DecodeAttnOut {
-        out,
-        budget_fraction: DecodePolicy::plan_fraction(plan, n_ctx, block),
-        dense,
-        selected_blocks: sel.count(0, 0),
     }
+}
+
+/// Output of the batched verify pass ([`verify_attend`]).
+#[derive(Debug, Clone)]
+pub struct VerifyAttnOut {
+    /// `[G·H·dh]` position-major attention outputs (`out[g·H·dh..]` is
+    /// position `g`'s `[H·dh]` row, ready for the unembedding).
+    pub out: Vec<f32>,
+    /// The serving plan each position ran — exactly what a sequential
+    /// step at the same width and step counter would have planned, so
+    /// the caller's per-token budget/dense accounting matches
+    /// non-speculative decode.
+    pub plans: Vec<StepPlan>,
+}
+
+/// Batched serving-policy attention over G consecutive stream positions
+/// (the speculative verify): `q` is `[G, H, dh]`, position `g` has
+/// causal width `base_tokens + g` and serving step counter `step0 + g`.
+///
+/// Each position is *planned, scored and selected* exactly as a
+/// sequential [`decode_attend`] over a width-clamped view would be
+/// ([`KvPrefix`]) — per-position selections are required for the
+/// bit-exact equivalence guarantee, since the serving policy's plan and
+/// scores depend on the position's own width, step and query row. The
+/// per-position rows are emitted as ONE CSR grid over the whole
+/// (head × position) block and executed by one
+/// [`sparse_verify_attention`] pass, so the K/V walk — the dominant cost
+/// at long context — is shared across all G positions; when every
+/// position plans dense (the common serving case) the positions
+/// literally share one [`Selection::verify_full`] object and no scoring
+/// runs at all.
+pub fn verify_attend(
+    q: &Tensor,
+    kv: &impl KvBlocks,
+    policy: &DecodePolicy,
+    base_tokens: usize,
+    step0: usize,
+) -> VerifyAttnOut {
+    let (g_rows, h, dh) = (q.shape[0], q.shape[1], q.shape[2]);
+    debug_assert!(g_rows >= 1 && base_tokens >= 1);
+    debug_assert!(base_tokens + g_rows - 1 <= kv.n_tokens());
+    let block = kv.block_tokens();
+    let nblk_max = kv.n_blocks();
+    let plans: Vec<StepPlan> =
+        (0..g_rows).map(|g| policy.plan(base_tokens + g, step0 + g, block)).collect();
+    let sel = if plans.iter().all(|p| matches!(p, StepPlan::Dense)) {
+        // all-dense batch: one shared full selection, no scoring
+        Selection::verify_full(h, g_rows, nblk_max)
+    } else {
+        let mut row_sels: Vec<Option<Selection>> = Vec::with_capacity(g_rows);
+        for (g, plan) in plans.iter().enumerate() {
+            match *plan {
+                StepPlan::Dense => row_sels.push(None),
+                StepPlan::Sparse { budget_blocks } => {
+                    let pre = KvPrefix::new(kv, base_tokens + g);
+                    let qg = Tensor::from_vec(
+                        &[h, dh],
+                        q.data[g * h * dh..(g + 1) * h * dh].to_vec(),
+                    );
+                    let scores = decode_block_scores(&qg, &pre, policy.stride, policy.beta);
+                    row_sels.push(Some(select_decode(
+                        &scores,
+                        budget_blocks,
+                        policy.sink_blocks,
+                        policy.recent_blocks,
+                    )));
+                }
+            }
+        }
+        // dense positions inside a mixed batch keep all their causal
+        // blocks, ascending — one shared row sliced per position
+        let full_row: Vec<u32> = (0..nblk_max as u32).collect();
+        let mut b = SelectionBuilder::new(h, g_rows);
+        for hh in 0..h {
+            for (g, s) in row_sels.iter().enumerate() {
+                match s {
+                    None => {
+                        let nb = (base_tokens + g).div_ceil(block.max(1));
+                        b.push_row(&full_row[..nb], nb as u32);
+                    }
+                    Some(s) => {
+                        let row = s.selected(hh, 0);
+                        b.push_row(row, row.len() as u32);
+                    }
+                }
+            }
+        }
+        b.finish()
+    };
+    debug_assert!(sel.validate_verify(nblk_max).is_ok());
+    let out = sparse_verify_attention(q, kv, &sel, base_tokens);
+    VerifyAttnOut { out, plans }
 }
 
 /// Scalar full-context oracle (re-export for tests and benches).
@@ -71,6 +189,7 @@ pub fn decode_attend_dense_reference(q: &Tensor, kv: &impl KvBlocks) -> Vec<f32>
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sparse::TensorKv;
     use crate::util::rng::Rng;
 
     #[test]
@@ -102,5 +221,79 @@ mod tests {
         // k_at floors the schedule: budget lands in [min_blocks, k_start]
         assert!((4..=6).contains(&sparse.selected_blocks), "{}", sparse.selected_blocks);
         assert!(sparse.out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn dense_plan_takes_the_unranked_fast_path() {
+        // regression (dense fast-path satellite): a step whose policy
+        // resolves to the dense plan must not run scoring/selection —
+        // `ranked` pins which path executed
+        let mut r = Rng::new(33);
+        let (h, hk, dh, block, n) = (4usize, 2usize, 16usize, 32usize, 300usize);
+        let q = Tensor::randn(&[h, dh], &mut r);
+        let k = Tensor::randn(&[hk, 512, dh], &mut r);
+        let v = Tensor::randn(&[hk, 512, dh], &mut r);
+        let kv = TensorKv { k: &k, v: &v, n_tokens: n, block };
+        // explicit dense policy and budget-covers-everything both resolve
+        // to the dense plan and must skip ranking
+        for policy in [
+            DecodePolicy::dense(),
+            DecodePolicy { dense_below: 0, k_start: 1e6, ..Default::default() },
+        ] {
+            let out = decode_attend(&q, &kv, &policy, 0);
+            assert!(out.dense);
+            assert!(!out.ranked, "dense plan must skip top-k selection");
+            assert_eq!(out.selected_blocks, kv.n_blocks());
+            // and the fast path is bit-identical to the full selection
+            let full = Selection::decode_full(h, kv.n_blocks());
+            assert_eq!(out.out, sparse_decode_attention(&q, &kv, &full));
+        }
+        // the sparse plan still ranks
+        let sparse = decode_attend(
+            &q,
+            &kv,
+            &DecodePolicy { dense_below: 0, k_start: 4.0, ..Default::default() },
+            0,
+        );
+        assert!(sparse.ranked, "sparse plan must rank");
+    }
+
+    #[test]
+    fn verify_attend_rows_match_sequential_decode_attend_bitwise() {
+        // the verify half of decode-equivalence: every batched position
+        // must reproduce a sequential decode_attend over the same
+        // clamped width, bit for bit, for dense, sparse and mixed plans
+        let mut r = Rng::new(37);
+        let (g_rows, h, hk, dh, block) = (4usize, 4usize, 2usize, 16usize, 32usize);
+        let k = Tensor::randn(&[hk, 512, dh], &mut r);
+        let v = Tensor::randn(&[hk, 512, dh], &mut r);
+        for (base, policy) in [
+            (200, DecodePolicy::dense()),
+            (200, DecodePolicy { dense_below: 0, k_start: 4.0, ..Default::default() }),
+            // dense_below inside the staircase: plans mix dense + sparse
+            (126, DecodePolicy { dense_below: 128, k_start: 3.0, ..Default::default() }),
+        ] {
+            let q = Tensor::randn(&[g_rows, h, dh], &mut r);
+            let kv = TensorKv { k: &k, v: &v, n_tokens: base + g_rows - 1, block };
+            let step0 = 5usize;
+            let ver = verify_attend(&q, &kv, &policy, base, step0);
+            for g in 0..g_rows {
+                let pre = KvPrefix::new(&kv, base + g);
+                let qg =
+                    Tensor::from_vec(&[h, dh], q.data[g * h * dh..(g + 1) * h * dh].to_vec());
+                let seq = decode_attend(&qg, &pre, &policy, step0 + g);
+                assert_eq!(
+                    &ver.out[g * h * dh..(g + 1) * h * dh],
+                    &seq.out[..],
+                    "position {g} deviates from its sequential step"
+                );
+                assert_eq!(ver.plans[g] == StepPlan::Dense, seq.dense, "plan mismatch at {g}");
+                assert_eq!(
+                    DecodePolicy::plan_fraction(ver.plans[g], base + g, block),
+                    seq.budget_fraction,
+                    "budget accounting mismatch at {g}"
+                );
+            }
+        }
     }
 }

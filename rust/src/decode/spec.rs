@@ -1,0 +1,454 @@
+//! Self-speculative multi-token decode: cheap sparse draft, exact
+//! batched verify, commit the longest agreeing prefix.
+//!
+//! One [`DecodeSession::spec_round`] advances a generation by up to
+//! γ + 1 tokens while emitting *exactly* the stream non-speculative
+//! greedy decode under the same serving policy would produce:
+//!
+//! 1. **Draft** — γ ordinary decode steps under the cheap
+//!    [`DecodePolicy::draft`](super::DecodePolicy::draft) variant (tight
+//!    TPD budget, sinks + recent window kept): each projects its token,
+//!    appends K/V into the paged cache and proposes the next token. One
+//!    extra projection appends the last draft's K/V and forms the γ+1-th
+//!    query, so the verify can also produce the *bonus* token beyond a
+//!    fully-accepted draft window.
+//! 2. **Verify** — all γ+1 positions re-attended under the *serving*
+//!    policy in one batched multi-query kernel pass
+//!    ([`verify_attend`] → `sparse::sparse_verify_attention`): one CSR
+//!    selection grid over the whole (head × position) block, one shared
+//!    K/V walk, per-position plans/scores/selections identical to what
+//!    sequential steps at the same widths would compute. The verified
+//!    argmax at position `g` is therefore *bit-identical* to the token a
+//!    sequential `step_once` would have emitted there — drafting only
+//!    decides how many of those tokens commit per round, never their
+//!    values.
+//! 3. **Commit + rollback** — the longest prefix where draft and verify
+//!    agree commits (plus the correction/bonus token from the verify);
+//!    K/V drafted past the committed prefix is rolled back through
+//!    [`KvCache::truncate_tail`](crate::coordinator::kv_cache::KvCache::truncate_tail)
+//!    (CoW-safe: pages shared with forked siblings survive through their
+//!    refcounts, freed slabs are GC'd via the freed-page log), leaving
+//!    the cache exactly as sequential decode would have left it.
+//!
+//! Acceptance-rate economics: a round costs γ cheap draft steps plus one
+//! batched verify; it commits `accepted + 1` tokens. The verify shares
+//! its K/V walk across positions, which is where the throughput comes
+//! from at long context — the serving-policy attention (the dominant,
+//! bandwidth-bound cost) is paid roughly once per round instead of once
+//! per token, while wrong drafts only waste their own cheap steps.
+
+use std::time::Instant;
+
+use crate::sparse::Tensor;
+use crate::util::threadpool;
+
+use super::policy::{DecodePolicy, StepPlan};
+use super::session::{DecodeSession, SessionStats, StepInfo, TinyLm};
+use super::sparse_decode::{decode_attend, verify_attend};
+use super::store::SeqKvView;
+use super::DecodeError;
+
+/// Lifetime statistics of the speculative loop (see
+/// [`DecodeSession::spec_stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpecStats {
+    /// Draft/verify rounds executed.
+    pub rounds: u64,
+    /// Draft tokens proposed across all rounds (γ per round).
+    pub drafted: u64,
+    /// Draft tokens the verify accepted (the agreeing prefix, before any
+    /// stop-token / budget trim).
+    pub accepted: u64,
+    /// Tokens actually committed to the stream across all rounds
+    /// (accepted drafts + one verify correction/bonus per round, after
+    /// trims).
+    pub committed: u64,
+}
+
+impl SpecStats {
+    /// Fraction of drafted tokens the verify accepted (0 before any
+    /// round runs).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+
+    /// Mean committed tokens per round (0 before any round runs).
+    pub fn tokens_per_round(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.committed as f64 / self.rounds as f64
+        }
+    }
+
+    /// Fold another stats block into this one (per-request aggregation).
+    pub fn merge(&mut self, other: &SpecStats) {
+        self.rounds += other.rounds;
+        self.drafted += other.drafted;
+        self.accepted += other.accepted;
+        self.committed += other.committed;
+    }
+}
+
+/// Outcome of one [`DecodeSession::spec_round`].
+#[derive(Debug, Clone)]
+pub struct SpecRound {
+    /// Committed tokens this round, in stream order (at least one; at
+    /// most γ+1, further trimmed by `max_commit` / the stop token / the
+    /// callback). Each entry carries exactly the accounting a sequential
+    /// step at that position would have reported.
+    pub infos: Vec<StepInfo>,
+    /// Draft tokens proposed this round (γ).
+    pub drafted: usize,
+    /// Drafts the verify accepted (before trims).
+    pub accepted: usize,
+    /// The stream ended inside this round: the stop token was emitted or
+    /// the callback returned `false`. The caller must not schedule
+    /// further rounds.
+    pub halt: bool,
+}
+
+impl DecodeSession {
+    /// One speculative draft/verify round (see module docs): draft
+    /// `gamma` tokens with the cheap policy, verify all `gamma + 1`
+    /// positions under the serving policy in one batched kernel pass,
+    /// commit the longest agreeing prefix plus the verify's
+    /// correction/bonus token, and roll the drafted K/V tail back to the
+    /// committed boundary.
+    ///
+    /// At most `max_commit` tokens commit (`>= 1`); `stop_token` and the
+    /// `on_token` callback trim the commit exactly like the sequential
+    /// [`DecodeSession::generate`] loop would — the cache, step counter
+    /// and accounting afterwards are indistinguishable from having run
+    /// that many `step_once` calls.
+    pub fn spec_round(
+        &mut self,
+        gamma: usize,
+        max_commit: usize,
+        stop_token: Option<i32>,
+        mut on_token: impl FnMut(&StepInfo) -> bool,
+    ) -> Result<SpecRound, DecodeError> {
+        let gamma = gamma.max(1);
+        let max_commit = max_commit.max(1);
+        let t0 = Instant::now();
+        let n0 = self.n_ctx;
+        let step0 = self.step;
+        let serve = self.policy;
+        let draft = serve.draft();
+        let (h, dh) = (self.model.h, self.model.dh);
+        let block = self.page_tokens;
+
+        // ---- draft: γ cheap steps + the bonus position's K/V ----------
+        let mut q_rows: Vec<f32> = Vec::with_capacity((gamma + 1) * h * dh);
+        let mut drafts: Vec<i32> = Vec::with_capacity(gamma);
+        let mut tok = self.last_token;
+        let drafted = self.draft_phase(gamma, &draft, step0, &mut tok, &mut q_rows, &mut drafts);
+        if let Err(e) = drafted {
+            // roll the partially-appended tail back so the session is
+            // exactly where it was before the round (last_token and the
+            // step counter were never touched); surface the original
+            // error even if the rewind itself fails on a poisoned store
+            let _ = self.rewind_to(n0);
+            return Err(e);
+        }
+
+        // ---- verify: γ+1 positions, one batched serving-policy pass ---
+        let g1 = gamma + 1;
+        let q_block = Tensor::from_vec(&[g1, h, dh], q_rows);
+        let ver = {
+            // like the draft phase, a failure here rewinds the drafted
+            // tail so the session stays exactly pre-round
+            let slabs = match self.kv.slabs() {
+                Ok(s) => s,
+                Err(e) => {
+                    let _ = self.rewind_to(n0);
+                    return Err(e.into());
+                }
+            };
+            let view = SeqKvView { store: &*slabs, table: &self.table, n_tokens: self.n_ctx };
+            verify_attend(&q_block, &view, &serve, n0 + 1, step0)
+        };
+        // unembed every position in parallel — in sequential decode these
+        // γ+1 logit projections are serial, one per step
+        let verified: Vec<i32> = {
+            let pool = threadpool::global();
+            let outs = &ver.out;
+            let model = &*self.model;
+            let argmax_at =
+                |g: usize| TinyLm::argmax(&model.logits(&outs[g * h * dh..(g + 1) * h * dh]));
+            if g1 <= 1 || pool.workers() == 1 {
+                (0..g1).map(argmax_at).collect()
+            } else {
+                threadpool::scope_parallel_borrowed(pool, g1, argmax_at)
+            }
+        };
+
+        // ---- commit: longest agreeing prefix + correction/bonus -------
+        let mut accepted = 0usize;
+        while accepted < gamma && drafts[accepted] == verified[accepted] {
+            accepted += 1;
+        }
+        // the verify already did the round's heavy work; amortize it over
+        // the committable tokens for the per-step accounting
+        let committable = accepted + 1;
+        let per_tok_ns = t0.elapsed().as_nanos() as u64 / committable as u64;
+        let mut infos: Vec<StepInfo> = Vec::with_capacity(committable.min(max_commit));
+        let mut halt = false;
+        for (i, &tok) in verified.iter().enumerate().take(committable) {
+            if infos.len() >= max_commit {
+                break;
+            }
+            let plan = ver.plans[i];
+            let info = StepInfo {
+                step: step0 + i,
+                token: tok,
+                n_ctx: n0 + i + 1,
+                budget_fraction: DecodePolicy::plan_fraction(plan, n0 + i + 1, block),
+                dense: plan == StepPlan::Dense,
+                step_ns: per_tok_ns,
+            };
+            infos.push(info);
+            let keep = on_token(&info);
+            if !keep || stop_token == Some(tok) {
+                halt = true;
+                break;
+            }
+        }
+        let take = infos.len(); // >= 1: max_commit >= 1 and committable >= 1
+
+        // ---- rollback + state: exactly `take` sequential steps --------
+        // sequential decode after emitting take tokens holds K/V through
+        // position n0 + take - 1 (the last emitted token's own K/V is
+        // appended by the NEXT step), i.e. n0 + take cached tokens
+        if n0 + take < self.n_ctx {
+            self.rewind_to(n0 + take)?;
+        }
+        debug_assert_eq!(self.n_ctx, n0 + take, "commit boundary mismatch");
+        self.last_token = infos[take - 1].token;
+        self.step = step0 + take;
+        for info in &infos {
+            self.budget_sum += info.budget_fraction;
+            self.dense_steps += info.dense as usize;
+        }
+        self.decode_ns += t0.elapsed().as_nanos() as u64;
+        self.spec_rounds += 1;
+        self.spec_drafted += gamma as u64;
+        self.spec_accepted += accepted as u64;
+        self.spec_committed += take as u64;
+        Ok(SpecRound { infos, drafted: gamma, accepted, halt })
+    }
+
+    /// The draft half of a round: γ cheap decode steps (each appends its
+    /// conditioning token's K/V, attends under the draft policy and
+    /// proposes the next token) plus the bonus position's append +
+    /// query. On success the cache holds `n0 + γ + 1` tokens and
+    /// `q_rows` the γ+1 query rows; on error the caller rewinds.
+    fn draft_phase(
+        &mut self,
+        gamma: usize,
+        draft: &DecodePolicy,
+        step0: usize,
+        tok: &mut i32,
+        q_rows: &mut Vec<f32>,
+        drafts: &mut Vec<i32>,
+    ) -> Result<(), DecodeError> {
+        let (h, dh) = (self.model.h, self.model.dh);
+        for g in 0..gamma {
+            let pos = self.n_ctx;
+            let (q, k, v) = self.model.project(*tok, pos, true);
+            self.append_kv(&k, &v)?;
+            let q = q.expect("with_q");
+            let att = {
+                let slabs = self.kv.slabs()?;
+                let view =
+                    SeqKvView { store: &*slabs, table: &self.table, n_tokens: self.n_ctx };
+                let qt = Tensor::from_vec(&[h, dh], q.clone());
+                decode_attend(&qt, &view, draft, step0 + g)
+            };
+            let logits = self.model.logits(&att.out);
+            *tok = TinyLm::argmax(&logits);
+            drafts.push(*tok);
+            q_rows.extend_from_slice(&q);
+        }
+        // bonus position: the last draft's own K/V + query, so the verify
+        // can emit one token beyond a fully-accepted window
+        let pos = self.n_ctx;
+        let (q, k, v) = self.model.project(*tok, pos, true);
+        self.append_kv(&k, &v)?;
+        q_rows.extend_from_slice(&q.expect("with_q"));
+        Ok(())
+    }
+
+    /// Speculative analogue of [`DecodeSession::generate`]: run
+    /// draft/verify rounds (γ from the policy's `spec_gamma`, clamped to
+    /// the remaining budget) until `max_new` tokens are out, the stop
+    /// token appears, or the callback ends the stream. Token stream,
+    /// cache state and per-step accounting are exactly those of the
+    /// sequential loop under the same serving policy — only the
+    /// wall-clock (and the [`SessionStats::spec`] block) differ.
+    pub fn generate_spec(
+        &mut self,
+        max_new: usize,
+        stop_token: Option<i32>,
+        mut on_token: impl FnMut(&StepInfo) -> bool,
+    ) -> Result<SessionStats, DecodeError> {
+        let gamma = self.policy.spec_gamma.max(1);
+        let mut tokens = Vec::with_capacity(max_new);
+        while tokens.len() < max_new {
+            let remaining = max_new - tokens.len();
+            let round =
+                self.spec_round(gamma.min(remaining), remaining, stop_token, &mut on_token)?;
+            tokens.extend(round.infos.iter().map(|i| i.token));
+            if round.halt {
+                break;
+            }
+        }
+        Ok(SessionStats {
+            steps: tokens.len(),
+            tokens,
+            dense_steps: self.dense_steps,
+            mean_budget_fraction: self.mean_budget_fraction(),
+            decode_ns: self.decode_ns,
+            spec: self.spec_stats(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::super::policy::DecodePolicy;
+    use super::super::session::DecodeSession;
+    use super::super::store::SharedKv;
+    use super::super::TinyLm;
+    use super::*;
+    use crate::coordinator::kv_cache::KvConfig;
+    use crate::model::vocab;
+
+    fn pool(pages: usize, page_tokens: usize) -> Arc<SharedKv> {
+        SharedKv::new(KvConfig { total_pages: pages, page_tokens }, 2, 8)
+    }
+
+    fn model() -> Arc<TinyLm> {
+        Arc::new(TinyLm::new(7, 4, 2, 8, vocab::VOCAB_SIZE))
+    }
+
+    fn prompt(n: usize) -> Vec<i32> {
+        let mut p = vec![vocab::BOS];
+        p.extend((0..n.saturating_sub(1)).map(|i| vocab::WORD0 + (i % 40) as i32));
+        p
+    }
+
+    fn spec_policy(gamma: usize) -> DecodePolicy {
+        DecodePolicy { spec_gamma: gamma, ..Default::default() }
+    }
+
+    #[test]
+    fn spec_stream_equals_sequential_stream_exactly() {
+        for gamma in [1usize, 2, 4, 6] {
+            let seq_tokens = {
+                let kv = pool(256, 16);
+                let mut s =
+                    DecodeSession::new(kv, model(), DecodePolicy::default(), 1).unwrap();
+                s.prefill(&prompt(80)).unwrap();
+                s.generate(20, None, |_| true).unwrap().tokens
+            };
+            let kv = pool(256, 16);
+            let mut s = DecodeSession::new(Arc::clone(&kv), model(), spec_policy(gamma), 1)
+                .unwrap();
+            s.prefill(&prompt(80)).unwrap();
+            let st = s.generate(20, None, |_| true).unwrap();
+            assert_eq!(st.tokens, seq_tokens, "gamma={gamma}: stream diverges");
+            assert_eq!(st.steps, 20);
+            assert!(st.spec.rounds > 0, "speculative path must actually run");
+            assert_eq!(st.spec.committed, 20);
+            // cache state matches sequential semantics: one K/V append
+            // per emitted token, drafted overshoot rolled back
+            assert_eq!(s.n_ctx(), 80 + 20);
+            kv.pool().unwrap().check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn spec_round_commits_at_least_one_and_respects_max_commit() {
+        let kv = pool(256, 16);
+        let mut s = DecodeSession::new(Arc::clone(&kv), model(), spec_policy(4), 1).unwrap();
+        s.prefill(&prompt(60)).unwrap();
+        let n0 = s.n_ctx();
+        let round = s.spec_round(4, 2, None, |_| true).unwrap();
+        assert!(!round.infos.is_empty() && round.infos.len() <= 2);
+        assert_eq!(round.drafted, 4);
+        assert_eq!(s.n_ctx(), n0 + round.infos.len(), "rollback must land on the commit");
+        assert_eq!(s.steps(), round.infos.len());
+        assert_eq!(s.last_token(), round.infos.last().unwrap().token);
+        kv.pool().unwrap().check_invariants().unwrap();
+        // every drafted-but-discarded page is gone again
+        let pt = kv.page_tokens();
+        assert_eq!(
+            kv.pool().unwrap().page_table(1).unwrap().len(),
+            s.n_ctx().div_ceil(pt),
+            "table must be exactly sized after rollback"
+        );
+    }
+
+    #[test]
+    fn spec_respects_callback_stop_mid_round() {
+        // a callback that stops after the first token must leave the
+        // session exactly where one sequential step would have
+        let want = {
+            let kv = pool(256, 16);
+            let mut s = DecodeSession::new(kv, model(), DecodePolicy::default(), 1).unwrap();
+            s.prefill(&prompt(40)).unwrap();
+            let st = s.generate(10, None, |_| false).unwrap(); // stop after 1st
+            (st.tokens, s.n_ctx(), s.last_token(), s.steps())
+        };
+        let kv = pool(256, 16);
+        let mut s = DecodeSession::new(kv, model(), spec_policy(4), 1).unwrap();
+        s.prefill(&prompt(40)).unwrap();
+        let st = s.generate(10, None, |_| false).unwrap();
+        assert_eq!((st.tokens, s.n_ctx(), s.last_token(), s.steps()), want);
+        assert_eq!(st.tokens.len(), 1, "callback false must stop after one token");
+    }
+
+    #[test]
+    fn draft_failure_rolls_the_tail_back() {
+        // pool sized so the prompt fits but a deep draft cannot: the
+        // round must fail cleanly with the session state untouched
+        let kv = pool(4, 16); // 64 tokens capacity
+        let mut s = DecodeSession::new(Arc::clone(&kv), model(), spec_policy(6), 1).unwrap();
+        s.prefill(&prompt(62)).unwrap(); // 2 free tokens, γ+1 = 7 needed
+        let (n0, last0, step0) = (s.n_ctx(), s.last_token(), s.steps());
+        let err = s.spec_round(6, 8, None, |_| true);
+        assert!(err.is_err(), "draft past capacity must fail");
+        assert_eq!(s.n_ctx(), n0, "failed round must rewind the tail");
+        assert_eq!(s.last_token(), last0);
+        assert_eq!(s.steps(), step0);
+        kv.pool().unwrap().check_invariants().unwrap();
+        assert_eq!(
+            kv.pool().unwrap().page_table(1).unwrap().len(),
+            n0.div_ceil(16),
+            "rolled-back table must match the pre-round context"
+        );
+    }
+
+    #[test]
+    fn spec_stats_accumulate_and_rate_is_bounded() {
+        let kv = pool(256, 16);
+        let mut s = DecodeSession::new(kv, model(), spec_policy(3), 1).unwrap();
+        s.prefill(&prompt(50)).unwrap();
+        let st = s.generate_spec(15, None, |_| true).unwrap();
+        assert_eq!(st.spec.committed as usize, st.tokens.len());
+        assert!(st.spec.drafted >= st.spec.rounds, "gamma >= 1 per round");
+        assert!(st.spec.acceptance_rate() >= 0.0 && st.spec.acceptance_rate() <= 1.0);
+        assert!(st.spec.tokens_per_round() >= 1.0, "every round commits at least one");
+        let mut merged = SpecStats::default();
+        merged.merge(&st.spec);
+        merged.merge(&st.spec);
+        assert_eq!(merged.rounds, 2 * st.spec.rounds);
+    }
+}

@@ -276,6 +276,23 @@ impl SharedKv {
         res
     }
 
+    /// Pool [`KvCache::truncate_tail`] + slab GC: roll a sequence's tail
+    /// back to `n_tokens` cached tokens (the speculative-decode rollback
+    /// path). Pages whose refcount hits zero are drained from the
+    /// freed-page log and their slab payloads dropped *before* the pool
+    /// lock is released, so a concurrent allocate can never adopt a page
+    /// id whose stale draft payload is still resident. Pages shared with
+    /// forked siblings survive through their refcounts — only the
+    /// rolled-back sequence's exclusive tail is freed. Returns the pages
+    /// freed.
+    pub fn truncate_tail(&self, seq: u64, n_tokens: usize) -> Result<usize, KvError> {
+        let mut pool = self.pool()?;
+        let res = pool.truncate_tail(seq, n_tokens);
+        let freed = pool.take_freed();
+        self.gc_locked(&mut pool, freed)?;
+        res
+    }
+
     /// Unpin a sequence (it becomes LRU-evictable). Like every other
     /// pool mutation this drains the freed-page log before returning —
     /// unpin itself frees nothing today, but a drain here keeps slab
@@ -446,6 +463,67 @@ mod tests {
         assert_eq!(kv.pages_resident(), 2, "stale slab awaiting a drain");
         kv.release(2).unwrap(); // unpin path must drain the log too
         assert_eq!(kv.pages_resident(), 1, "release must GC stale freed pages");
+        kv.pool().unwrap().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn truncate_tail_gcs_exclusive_slabs_and_spares_shared_ones() {
+        // rollback invariant at the store level: rolling a forked tail
+        // back drops exactly the divergent slabs, drains the freed-page
+        // log, and leaves every sibling payload byte-identical
+        let kv = shared(8, 4); // page_tokens = 4
+        let table = kv.allocate(1, 6).unwrap(); // 2 pages, tail partial
+        for (tag, slot, page) in [(1.0, 0, table[0]), (2.0, 1, table[0]), (3.0, 1, table[1])] {
+            kv.write_token(page, slot, &rows(tag, 2, 4), &rows(tag + 0.5, 2, 4)).unwrap();
+        }
+        let ftable = kv.fork(1, 2).unwrap();
+        assert_eq!(ftable, table);
+        // the fork diverges: CoW remaps its tail page, then grows one
+        let app = kv.append_tokens(2, 4).unwrap(); // 10 tokens -> 3 pages
+        let (_, cow_new) = app.cow.expect("shared tail must CoW");
+        assert_eq!(app.grown.len(), 1);
+        kv.write_token(cow_new, 2, &rows(9.0, 2, 4), &rows(9.5, 2, 4)).unwrap();
+        kv.write_token(app.grown[0], 0, &rows(8.0, 2, 4), &rows(8.5, 2, 4)).unwrap();
+        assert_eq!(kv.pages_resident(), 4, "source 2 + CoW copy + grown tail");
+        // roll the fork back to the shared prefix: its exclusive slabs
+        // (CoW copy + grown page) must be GC'd in the same call
+        assert_eq!(kv.truncate_tail(2, 4).unwrap(), 2);
+        assert_eq!(kv.pages_resident(), 2, "rollback must GC the divergent slabs");
+        assert_eq!(kv.seq_tokens(2).unwrap(), Some(4));
+        // sibling payloads byte-identical after the rollback
+        let slabs = kv.slabs().unwrap();
+        let src = SeqKvView { store: &slabs, table: &table, n_tokens: 6 };
+        assert_eq!(src.k_block(0, 0)[4], 2.0, "sibling K slot 1 intact");
+        assert_eq!(src.k_block(0, 1)[4], 3.0, "sibling K tail slot intact");
+        drop(slabs);
+        kv.pool().unwrap().check_invariants().unwrap();
+        // the rolled-back fork still aliases the shared prefix
+        assert_eq!(kv.pool().unwrap().page_table(2).unwrap(), &table[..1]);
+        // beyond-end rollback is a clean error through the store too
+        assert_eq!(
+            kv.truncate_tail(2, 5).unwrap_err(),
+            KvError::TruncateBeyondEnd { n_tokens: 5, have: 4 }
+        );
+    }
+
+    #[test]
+    fn truncate_tail_drains_stale_freed_pages_too() {
+        // like release/fork: any truncate drains freed ids left behind by
+        // direct pool mutations, keeping slab residency exact
+        let kv = shared(8, 4);
+        let t1 = kv.allocate(1, 4).unwrap();
+        kv.write_token(t1[0], 0, &rows(1.0, 2, 4), &rows(2.0, 2, 4)).unwrap();
+        let t2 = kv.allocate(2, 8).unwrap();
+        kv.write_token(t2[0], 0, &rows(3.0, 2, 4), &rows(4.0, 2, 4)).unwrap();
+        kv.write_token(t2[1], 0, &rows(5.0, 2, 4), &rows(6.0, 2, 4)).unwrap();
+        {
+            let mut pool = kv.pool().unwrap();
+            pool.release(1).unwrap();
+            pool.drop_seq(1).unwrap(); // freed id logged, slab NOT dropped
+        }
+        assert_eq!(kv.pages_resident(), 3, "stale slab awaiting a drain");
+        assert_eq!(kv.truncate_tail(2, 4).unwrap(), 1);
+        assert_eq!(kv.pages_resident(), 1, "truncate must GC stale freed pages too");
         kv.pool().unwrap().check_invariants().unwrap();
     }
 

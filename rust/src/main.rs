@@ -41,8 +41,9 @@ USAGE: stem <subcommand> [flags]
   serve     [--requests N] [--rps R] [--method stem|dense|...] [--mix]
             [--prefix-mode exact|radix]
   generate  [--prompt 1,16,17 | --prompt-len N] [--max-new N] [--dense]
-            [--fanout N] [--k-start K] [--mu MU] [--sink S] [--recent R]
-            [--dense-below TOKENS] [--block B] [--pages P] [--seed S]
+            [--fanout N] [--spec N] [--k-start K] [--mu MU] [--sink S]
+            [--recent R] [--dense-below TOKENS] [--block B] [--pages P]
+            [--seed S]
   table1    [--limit N]
   table2    [--limit N] [--buckets 512,1024,2048]
   table3    [--limit N] [--buckets ...] [--native-k K]
@@ -279,7 +280,7 @@ fn generate(args: &Args) -> Result<()> {
         }
     };
 
-    let policy = if args.flag("dense") {
+    let mut policy = if args.flag("dense") {
         DecodePolicy::dense()
     } else {
         DecodePolicy {
@@ -292,6 +293,10 @@ fn generate(args: &Args) -> Result<()> {
             ..Default::default()
         }
     };
+    // --spec N: draft N tokens per round with the cheap draft policy and
+    // verify them batched under the policy above — same output stream,
+    // fewer serving-attention passes per token
+    policy.spec_gamma = args.usize_or("spec", 0);
     policy.validate().map_err(|e| anyhow!("invalid policy: {e}"))?;
 
     let kv = SharedKv::new(KvConfig { total_pages: pages, page_tokens: block }, hk, dh);
@@ -340,6 +345,16 @@ fn generate(args: &Args) -> Result<()> {
         stats.dense_steps,
         100.0 * stats.mean_budget_fraction,
     );
+    if stats.spec.rounds > 0 {
+        println!(
+            "spec: {} rounds, {} drafted, {} accepted ({:.0}% acceptance), {:.2} tokens/round",
+            stats.spec.rounds,
+            stats.spec.drafted,
+            stats.spec.accepted,
+            100.0 * stats.spec.acceptance_rate(),
+            stats.spec.tokens_per_round(),
+        );
+    }
     Ok(())
 }
 
@@ -359,6 +374,7 @@ fn generate_fanout(
     let t0 = Instant::now();
     let mut total_tokens = 0usize;
     let mut total_ns = 0u64;
+    let mut spec = stem::decode::SpecStats::default();
     // keep every branch alive so the page report shows true fan-out
     // residency (shared prefix counted once + per-branch CoW tails)
     let mut branches = Vec::with_capacity(fanout);
@@ -379,6 +395,7 @@ fn generate_fanout(
         );
         total_tokens += stats.steps;
         total_ns += stats.decode_ns;
+        spec.merge(&stats.spec);
     }
     let wall = t0.elapsed();
     let (used, total, _) = kv.occupancy();
@@ -392,6 +409,14 @@ fn generate_fanout(
     println!(
         "shared prefix: {prefix_pages} pages ingested once vs ~{independent_pages} for {fanout} independent sessions",
     );
+    if spec.rounds > 0 {
+        println!(
+            "spec: {} rounds across branches, {:.0}% acceptance, {:.2} tokens/round",
+            spec.rounds,
+            100.0 * spec.acceptance_rate(),
+            spec.tokens_per_round(),
+        );
+    }
     Ok(())
 }
 

@@ -8,9 +8,11 @@
 //!   Eq. (2)/(4)/(8) budget algebra into attention/metric/linear FLOPs
 //!   and the BUD fraction for any [`MethodCost`].
 //! * **Calibrated estimators** — [`estimate_core_prefill_ns`],
-//!   [`estimate_decode_step_ns`], [`estimate_ingest_ns`] and
-//!   [`estimate_generate_ns`] convert those counts into nanoseconds
-//!   using measured per-op constants ([`RUST_CORE`], [`DECODE_CORE`]).
+//!   [`estimate_decode_step_ns`], [`estimate_spec_step_ns`],
+//!   [`estimate_ingest_ns`] and [`estimate_generate_ns`] convert those
+//!   counts into nanoseconds using measured per-op constants
+//!   ([`RUST_CORE`], [`DECODE_CORE`], the speculative-round constants
+//!   [`SPEC_EXTRA_ROW_COST`] / [`SPEC_ASSUMED_ACCEPTANCE`]).
 //!
 //! **Re-fitting the constants from `BENCH_*.json`:** the constants are
 //! throughput measurements of the pure-rust kernels, so they drift
@@ -238,11 +240,69 @@ pub fn estimate_decode_step_ns(
     let attn_ns = attended * g.d_head as f64 * heads_layers * cal.ns_per_pair_dh
         + metric_samples * g.d_head as f64 * heads_layers * cal.ns_per_metric_sample_dh
         + candidates * heads_layers * cal.ns_per_select_candidate;
-    // projections + unembedding are serial per step (qkv + output + tied
-    // unembed ≈ 4·d_model² MACs per layer)
-    let proj_ns = 4.0 * (g.d_model * g.d_model) as f64 * g.n_layers as f64 * cal.ns_per_proj_mac;
     let speedup = 1.0 + (threads.max(1) as f64 - 1.0) * cal.parallel_efficiency;
-    attn_ns / speedup + proj_ns
+    attn_ns / speedup + decode_proj_ns(g, threads)
+}
+
+/// Thread-amortized projection + unembedding cost of one decode step
+/// (qkv + output + tied unembed ≈ 4·d_model² MACs per layer): the TinyLm
+/// matvec fans output-row chunks over the pool, but at half the
+/// attention grid's efficiency — the chunks are fine-grained and the
+/// narrow matrices stay serial. Shared by [`estimate_decode_step_ns`]
+/// and [`estimate_spec_step_ns`] so a re-fit cannot skew one without the
+/// other.
+fn decode_proj_ns(g: &Geometry, threads: usize) -> f64 {
+    let proj_speedup =
+        1.0 + (threads.max(1) as f64 - 1.0) * DECODE_CORE.parallel_efficiency * 0.5;
+    4.0 * (g.d_model * g.d_model) as f64 * g.n_layers as f64 * DECODE_CORE.ns_per_proj_mac
+        / proj_speedup
+}
+
+/// Fraction of a verify row's attention cost charged to each position
+/// beyond the first in the batched speculative verify kernel: the rows
+/// share one K/V walk (`sparse::sparse_verify_attention` iterates blocks
+/// outer, rows inner), so extra positions pay compute but mostly reuse
+/// the first row's memory traffic. Re-fit from `BENCH_decode.json`'s
+/// `spec` section (round ns vs sequential step ns at the same context).
+pub const SPEC_EXTRA_ROW_COST: f64 = 0.45;
+
+/// Draft acceptance rate assumed by admission when budgeting a
+/// speculative generation: expected committed tokens per round is
+/// `1 + gamma * SPEC_ASSUMED_ACCEPTANCE`. Deliberately conservative —
+/// overestimating acceptance would under-charge admission and let the
+/// decode lane overcommit. Re-fit from the measured `acceptance_rate` in
+/// `BENCH_decode.json`'s `spec` section.
+pub const SPEC_ASSUMED_ACCEPTANCE: f64 = 0.6;
+
+/// Estimated wall-clock ns for ONE speculative draft/verify ROUND at a
+/// cached context of `n_ctx` tokens: `gamma` cheap draft steps (budget
+/// `draft_budget_blocks`, `None` = dense) plus one batched verify of
+/// `gamma + 1` positions under the serving policy (budget
+/// `serve_budget_blocks`), whose shared K/V walk discounts every row
+/// beyond the first by [`SPEC_EXTRA_ROW_COST`]. Divide by the expected
+/// commits per round (`1 + gamma ·` [`SPEC_ASSUMED_ACCEPTANCE`]) for a
+/// per-token figure.
+#[allow(clippy::too_many_arguments)]
+pub fn estimate_spec_step_ns(
+    g: &Geometry,
+    n_ctx: usize,
+    gamma: usize,
+    draft_budget_blocks: Option<f64>,
+    serve_budget_blocks: Option<f64>,
+    stride: usize,
+    threads: usize,
+) -> f64 {
+    let gamma = gamma.max(1);
+    let draft_ns: f64 = (0..gamma)
+        .map(|i| estimate_decode_step_ns(g, n_ctx + i, draft_budget_blocks, stride, threads))
+        .sum();
+    // first verify row pays full freight; each extra row a discounted
+    // attention share (the walk is shared) plus its own thread-amortized
+    // unembedding (rows project in parallel)
+    let full = estimate_decode_step_ns(g, n_ctx + gamma, serve_budget_blocks, stride, threads);
+    let proj_ns = decode_proj_ns(g, threads);
+    let attn_ns = (full - proj_ns).max(0.0);
+    draft_ns + full + gamma as f64 * (attn_ns * SPEC_EXTRA_ROW_COST + proj_ns)
 }
 
 /// Estimated wall-clock ns of prompt ingest alone (k/v projections per
@@ -371,6 +431,29 @@ mod tests {
         let t1 = estimate_decode_step_ns(&g, 65536, None, 8, 1);
         let t8 = estimate_decode_step_ns(&g, 65536, None, 8, 8);
         assert!(t1 > t8);
+    }
+
+    #[test]
+    fn spec_round_estimate_is_conservative_and_bounded() {
+        // admission must never *under*-charge a speculative round: the
+        // estimate sits between one sequential step and the fully
+        // unshared equivalent (γ drafts + γ+1 independent serving steps)
+        let g = Geometry { n_layers: 1, n_heads: 8, d_head: 32, d_model: 256, d_ff: 1024, block: 64 };
+        let (n, gamma, stride, threads) = (8192usize, 4usize, 8usize, 8usize);
+        // dense serving, sparse 8-block draft — the bench_decode scenario
+        let round = estimate_spec_step_ns(&g, n, gamma, Some(8.0), None, stride, threads);
+        let seq_step = estimate_decode_step_ns(&g, n, None, stride, threads);
+        let draft_step = estimate_decode_step_ns(&g, n, Some(8.0), stride, threads);
+        assert!(round > seq_step, "a round does strictly more work than one step");
+        assert!(
+            round < gamma as f64 * draft_step + (gamma + 1) as f64 * seq_step,
+            "the shared verify walk must undercut γ+1 independent serving steps"
+        );
+        // monotone in gamma, and the cheap draft policy matters
+        let r2 = estimate_spec_step_ns(&g, n, 2, Some(8.0), None, stride, threads);
+        assert!(r2 < round, "fewer drafted positions must cost less");
+        let dense_draft = estimate_spec_step_ns(&g, n, gamma, None, None, stride, threads);
+        assert!(round < dense_draft, "sparse drafts must undercut dense drafts");
     }
 
     #[test]

@@ -60,8 +60,36 @@
 //!   [`Selection::validate_decode`]).
 //! * [`sparse_decode_attention`] — single-query online-softmax attention
 //!   over the selected blocks, parallel across heads.
+//! * [`dense_decode_attention`] — the selection-free dense fast path:
+//!   when the policy resolves to the dense plan there is nothing to rank,
+//!   so the kernel walks every cached block directly without
+//!   materializing a [`Selection`] (bit-identical to the sparse kernel
+//!   under a full selection).
 //! * [`dense_decode_attention_reference`] — scalar full-context oracle the
 //!   property tests pin the sparse kernel to within 1e-5.
+//!
+//! # Batched multi-query verify kernels (speculative decode)
+//!
+//! The speculative draft/verify loop (`decode::spec`) re-scores a block
+//! of G consecutive stream positions in one pass. Position `g`'s causal
+//! width is `base_tokens + g` cached tokens, so the batch is a causal
+//! staircase over one K/V view:
+//!
+//! * [`KvPrefix`] — clamps any [`KvBlocks`] view to its leading
+//!   `n_tokens`, giving each verify position exactly the context a
+//!   sequential decode step would have seen.
+//! * [`Selection::verify_full`] / [`Selection::validate_verify`] — one
+//!   CSR selection object covering the whole (head × position) verify
+//!   grid.
+//! * [`sparse_verify_attention`] — the batched kernel: blocks outer,
+//!   query rows inner within each head, so one K/V slab load serves
+//!   every position that selected it (the bandwidth win of batching),
+//!   while each row folds its blocks in ascending order through the
+//!   same online-softmax update as the single-query kernel — making
+//!   every row bit-identical to a sequential pass at the same width.
+//! * [`dense_verify_attention_reference`] — scalar per-position oracle
+//!   ([`dense_decode_attention_reference`] over a clamped [`KvPrefix`]),
+//!   pinned at 1e-5 by the verify property tests.
 
 use super::schedule::TpdConfig;
 use super::tensor::{axpy, dot, norm2, score_tile, score_tile_causal, Tensor};
@@ -356,6 +384,62 @@ impl Selection {
                 }
                 if t > 0 && sel[t - 1] >= b {
                     return Err(format!("head {h}: blocks not strictly ascending"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// A verify-shaped selection shared by a whole speculative query
+    /// block: `n_rows` consecutive stream positions per head, every row
+    /// keeping all `n_key_blocks` cached blocks. Positions narrower than
+    /// the widest clamp the excess blocks away at execution
+    /// ([`sparse_verify_attention`]), so one CSR object serves the whole
+    /// causal staircase — the dense-plan fast path of the batched verify.
+    pub fn verify_full(n_heads: usize, n_rows: usize, n_key_blocks: usize) -> Selection {
+        let mut b =
+            SelectionBuilder::with_capacity(n_heads, n_rows, n_heads * n_rows * n_key_blocks);
+        let row: Vec<u32> = (0..n_key_blocks as u32).collect();
+        for _ in 0..n_heads * n_rows {
+            b.push_row(&row, n_key_blocks as u32);
+        }
+        b.finish()
+    }
+
+    /// Validate a verify-shaped selection: `self.nblk` query positions
+    /// per head over a widest causal width of `n_key_blocks` cached
+    /// blocks. Checks CSR structure, non-empty rows, ids in range and
+    /// strictly ascending order. Rows narrower than the widest may list
+    /// blocks beyond their own causal width — the kernel clamps those to
+    /// zero valid tokens — so the id bound checked here is the widest
+    /// position's.
+    pub fn validate_verify(&self, n_key_blocks: usize) -> Result<(), String> {
+        let rows = self.n_heads * self.nblk;
+        if self.row_offsets.len() != rows + 1 || self.counts.len() != rows {
+            return Err("verify selection: CSR length mismatch".into());
+        }
+        if self.row_offsets[0] != 0 || self.row_offsets[rows] as usize != self.indices.len() {
+            return Err("verify selection: row_offsets must span exactly indices".into());
+        }
+        for r in 0..rows {
+            let (lo, hi) = (self.row_offsets[r] as usize, self.row_offsets[r + 1] as usize);
+            if hi < lo || hi > self.indices.len() {
+                return Err(format!("row {r}: row_offsets not monotone"));
+            }
+            let c = self.counts[r] as usize;
+            if c == 0 || c > n_key_blocks {
+                return Err(format!("row {r}: count {c} out of range (ctx {n_key_blocks})"));
+            }
+            if c > hi - lo {
+                return Err(format!("row {r}: count {c} exceeds row width {}", hi - lo));
+            }
+            let sel = &self.indices[lo..lo + c];
+            for (t, &b) in sel.iter().enumerate() {
+                if b as usize >= n_key_blocks {
+                    return Err(format!("row {r}: block {b} beyond context"));
+                }
+                if t > 0 && sel[t - 1] >= b {
+                    return Err(format!("row {r}: blocks not strictly ascending"));
                 }
             }
         }
@@ -890,6 +974,51 @@ impl KvBlocks for TensorKv<'_> {
     }
 }
 
+/// A causal-prefix view over cached K/V: the same blocks as `inner`,
+/// clamped to the leading `n_tokens`. The speculative verify path wraps
+/// one shared view in per-position prefixes so each batched query row
+/// scores and attends *exactly* the context a sequential decode step
+/// would have seen — the planning/scoring half of the bit-exact
+/// decode-equivalence guarantee.
+pub struct KvPrefix<'a, K: KvBlocks> {
+    inner: &'a K,
+    n_tokens: usize,
+}
+
+impl<'a, K: KvBlocks> KvPrefix<'a, K> {
+    /// Clamp `inner` to its leading `n_tokens` (`<= inner.n_tokens()`).
+    pub fn new(inner: &'a K, n_tokens: usize) -> Self {
+        debug_assert!(n_tokens <= inner.n_tokens(), "prefix cannot exceed the cached context");
+        KvPrefix { inner, n_tokens }
+    }
+}
+
+impl<K: KvBlocks> KvBlocks for KvPrefix<'_, K> {
+    fn n_tokens(&self) -> usize {
+        self.n_tokens
+    }
+
+    fn block_tokens(&self) -> usize {
+        self.inner.block_tokens()
+    }
+
+    fn n_kv_heads(&self) -> usize {
+        self.inner.n_kv_heads()
+    }
+
+    fn head_dim(&self) -> usize {
+        self.inner.head_dim()
+    }
+
+    fn k_block(&self, hkv: usize, b: usize) -> &[f32] {
+        &self.inner.k_block(hkv, b)[..self.block_len(b) * self.head_dim()]
+    }
+
+    fn v_block(&self, hkv: usize, b: usize) -> &[f32] {
+        &self.inner.v_block(hkv, b)[..self.block_len(b) * self.head_dim()]
+    }
+}
+
 /// Decode-time Output-Aware routing scores: for the single query row of
 /// each head, score every cached key block as the *max* strided q·k
 /// sample in the block (scaled) plus the `beta·max(0, log‖v‖)`
@@ -966,6 +1095,44 @@ pub fn select_decode(
     b.finish()
 }
 
+/// One block's worth of the single-query online-softmax update: fold
+/// `len` cached tokens of a K/V slab into the running `(m, l, acc)`
+/// state. Every decode/verify kernel routes through this helper so the
+/// per-row floating-point operation sequence is *identical* across the
+/// single-query, dense-fast-path and batched-verify kernels — the
+/// speculative decode-equivalence guarantee depends on that, not on an
+/// epsilon.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn online_softmax_block(
+    qrow: &[f32],
+    ks: &[f32],
+    vs: &[f32],
+    len: usize,
+    dh: usize,
+    scale: f32,
+    m: &mut f32,
+    l: &mut f32,
+    acc: &mut [f32],
+) {
+    for t in 0..len {
+        let s = dot(qrow, &ks[t * dh..(t + 1) * dh]) * scale;
+        if s > *m {
+            if *l > 0.0 {
+                let corr = (*m - s).exp();
+                *l *= corr;
+                for a in acc.iter_mut() {
+                    *a *= corr;
+                }
+            }
+            *m = s;
+        }
+        let p = (s - *m).exp();
+        *l += p;
+        axpy(acc, p, &vs[t * dh..(t + 1) * dh]);
+    }
+}
+
 /// Single-query block-sparse attention over cached K/V: one online-softmax
 /// pass per head over that head's selected blocks (decode-shaped
 /// [`Selection`], see [`select_decode`]), the last partial block handled
@@ -990,22 +1157,7 @@ pub fn sparse_decode_attention(q: &Tensor, kv: &impl KvBlocks, sel: &Selection) 
             }
             let ks = kv.k_block(hkv, b);
             let vs = kv.v_block(hkv, b);
-            for t in 0..len {
-                let s = dot(qrow, &ks[t * dh..(t + 1) * dh]) * scale;
-                if s > m {
-                    if l > 0.0 {
-                        let corr = (m - s).exp();
-                        l *= corr;
-                        for a in acc.iter_mut() {
-                            *a *= corr;
-                        }
-                    }
-                    m = s;
-                }
-                let p = (s - m).exp();
-                l += p;
-                axpy(&mut acc, p, &vs[t * dh..(t + 1) * dh]);
-            }
+            online_softmax_block(qrow, ks, vs, len, dh, scale, &mut m, &mut l, &mut acc);
         }
         if l > 0.0 {
             let inv = 1.0 / l;
@@ -1018,6 +1170,165 @@ pub fn sparse_decode_attention(q: &Tensor, kv: &impl KvBlocks, sel: &Selection) 
     let mut out = vec![0.0f32; h * dh];
     for (hh, row) in rows.iter().enumerate() {
         out[hh * dh..(hh + 1) * dh].copy_from_slice(row);
+    }
+    out
+}
+
+/// Selection-free single-query dense attention over the whole cached
+/// context — the decode fast path when the policy resolves to the dense
+/// plan. Walks every cached block in ascending order through the same
+/// online-softmax update as [`sparse_decode_attention`] under a full
+/// selection (bit-identical output) without materializing a
+/// [`Selection`] or ranking anything. Parallel across heads; returns
+/// `[H·dh]` row-major.
+pub fn dense_decode_attention(q: &Tensor, kv: &impl KvBlocks) -> Vec<f32> {
+    let (h, dh) = (q.shape[0], q.shape[1]);
+    let hk = kv.n_kv_heads();
+    let rep = h / hk;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let nblk = kv.n_blocks();
+    let rows = parallel_items(h, |hh| {
+        let hkv = hh / rep;
+        let qrow = &q.data[hh * dh..(hh + 1) * dh];
+        let mut m = f32::NEG_INFINITY;
+        let mut l = 0.0f32;
+        let mut acc = vec![0.0f32; dh];
+        for b in 0..nblk {
+            let len = kv.block_len(b);
+            if len == 0 {
+                continue;
+            }
+            let ks = kv.k_block(hkv, b);
+            let vs = kv.v_block(hkv, b);
+            online_softmax_block(qrow, ks, vs, len, dh, scale, &mut m, &mut l, &mut acc);
+        }
+        if l > 0.0 {
+            let inv = 1.0 / l;
+            for a in acc.iter_mut() {
+                *a *= inv;
+            }
+        }
+        acc
+    });
+    let mut out = vec![0.0f32; h * dh];
+    for (hh, row) in rows.iter().enumerate() {
+        out[hh * dh..(hh + 1) * dh].copy_from_slice(row);
+    }
+    out
+}
+
+/// Batched multi-query sparse attention for the speculative verify step.
+///
+/// `q` is `[G, H, dh]` — the query rows of G *consecutive* stream
+/// positions — and row `(h, g)` of the verify-shaped `sel` lists the key
+/// blocks position `g` attends. Position `g`'s causal width is
+/// `base_tokens + g` cached tokens (its own K/V included), so the batch
+/// is a causal staircase; selected blocks (or block tails) beyond a
+/// row's width are clamped away, which is what lets one shared
+/// [`Selection::verify_full`] serve every row of a dense-plan batch.
+///
+/// Within each head the kernel walks blocks OUTER and query rows INNER,
+/// so one K/V slab load serves every row that selected it — the
+/// bandwidth win of batching γ+1 positions. Each row still folds its
+/// blocks in ascending order through `online_softmax_block`, the exact
+/// update of the single-query kernels, so every row's output is
+/// bit-identical to a sequential [`sparse_decode_attention`] pass over
+/// the same selection at the same width. Parallel across heads; returns
+/// `[G·H·dh]` position-major (`out[g·H·dh..]` is position `g`'s output).
+pub fn sparse_verify_attention(
+    q: &Tensor,
+    kv: &impl KvBlocks,
+    sel: &Selection,
+    base_tokens: usize,
+) -> Vec<f32> {
+    let (g_rows, h, dh) = (q.shape[0], q.shape[1], q.shape[2]);
+    debug_assert_eq!(sel.n_heads, h, "verify selection must cover every query head");
+    debug_assert_eq!(sel.nblk, g_rows, "verify selection must cover every position");
+    debug_assert!(
+        base_tokens >= 1 && base_tokens + g_rows - 1 <= kv.n_tokens(),
+        "verify positions must fit the cached context"
+    );
+    let hk = kv.n_kv_heads();
+    let rep = h / hk;
+    let bt = kv.block_tokens();
+    let nblk = kv.n_blocks();
+    let scale = 1.0 / (dh as f32).sqrt();
+    let heads = parallel_items(h, |hh| {
+        let hkv = hh / rep;
+        let mut m = vec![f32::NEG_INFINITY; g_rows];
+        let mut l = vec![0.0f32; g_rows];
+        let mut acc = vec![0.0f32; g_rows * dh];
+        let mut cursor = vec![0usize; g_rows];
+        let sel_rows: Vec<&[u32]> = (0..g_rows).map(|g| sel.selected(hh, g)).collect();
+        for b in 0..nblk {
+            // fetch the slabs lazily: blocks nobody selected cost nothing
+            let mut slabs: Option<(&[f32], &[f32])> = None;
+            for g in 0..g_rows {
+                let row = sel_rows[g];
+                if cursor[g] >= row.len() || row[cursor[g]] as usize != b {
+                    continue;
+                }
+                cursor[g] += 1;
+                let width = base_tokens + g;
+                if width <= b * bt {
+                    continue; // block fully beyond this row's causal width
+                }
+                let len = kv.block_len(b).min(width - b * bt);
+                if len == 0 {
+                    continue;
+                }
+                let (ks, vs) =
+                    *slabs.get_or_insert_with(|| (kv.k_block(hkv, b), kv.v_block(hkv, b)));
+                online_softmax_block(
+                    q.row3(g, hh),
+                    ks,
+                    vs,
+                    len,
+                    dh,
+                    scale,
+                    &mut m[g],
+                    &mut l[g],
+                    &mut acc[g * dh..(g + 1) * dh],
+                );
+            }
+        }
+        for g in 0..g_rows {
+            if l[g] > 0.0 {
+                let inv = 1.0 / l[g];
+                for a in acc[g * dh..(g + 1) * dh].iter_mut() {
+                    *a *= inv;
+                }
+            }
+        }
+        acc
+    });
+    let mut out = vec![0.0f32; g_rows * h * dh];
+    for (hh, buf) in heads.iter().enumerate() {
+        for g in 0..g_rows {
+            let dst = (g * h + hh) * dh;
+            out[dst..dst + dh].copy_from_slice(&buf[g * dh..(g + 1) * dh]);
+        }
+    }
+    out
+}
+
+/// Scalar multi-query verify oracle: position `g` scored independently by
+/// [`dense_decode_attention_reference`] over a [`KvPrefix`] clamped to
+/// its own causal width `base_tokens + g`. The verify property tests pin
+/// [`sparse_verify_attention`] under a full verify selection to this
+/// within 1e-5.
+pub fn dense_verify_attention_reference(
+    q: &Tensor,
+    kv: &impl KvBlocks,
+    base_tokens: usize,
+) -> Vec<f32> {
+    let (g_rows, h, dh) = (q.shape[0], q.shape[1], q.shape[2]);
+    let mut out = vec![0.0f32; g_rows * h * dh];
+    for g in 0..g_rows {
+        let qg = Tensor::from_vec(&[h, dh], q.data[g * h * dh..(g + 1) * h * dh].to_vec());
+        let pre = KvPrefix::new(kv, base_tokens + g);
+        let row = dense_decode_attention_reference(&qg, &pre);
+        out[g * h * dh..(g + 1) * h * dh].copy_from_slice(&row);
     }
     out
 }
@@ -1296,6 +1607,126 @@ mod tests {
         let mut b = SelectionBuilder::new(1, 1);
         b.push_row(&[0, 2, 3], 3);
         b.finish().validate_decode(4).unwrap();
+    }
+
+    #[test]
+    fn dense_fast_path_is_bitwise_equal_to_full_selection() {
+        // the dense decode fast path must not merely approximate the
+        // full-selection kernel: speculative equivalence relies on the
+        // two producing the same bits
+        for n_tokens in [1usize, 31, 32, 200] {
+            let (q, k, v) = decode_qkv(17, 4, 2, 256, 16);
+            let kv = TensorKv { k: &k, v: &v, n_tokens, block: 32 };
+            let sel = Selection::decode_full(4, kv.n_blocks());
+            let full = sparse_decode_attention(&q, &kv, &sel);
+            let fast = dense_decode_attention(&q, &kv);
+            assert_eq!(full, fast, "n_tokens={n_tokens}: fast path diverges from full selection");
+        }
+    }
+
+    #[test]
+    fn verify_kernel_matches_per_position_dense_oracle() {
+        // degenerate rows (width 1), G > base context, page-boundary
+        // straddles and partial tails, all against the scalar oracle
+        for (base, g_rows, n_cap, block) in [
+            (1usize, 3usize, 64usize, 32usize), // widths 1..3: G > base
+            (31, 4, 128, 32),                   // staircase straddles block 0 -> 1
+            (64, 2, 128, 32),                   // base exactly on a boundary
+            (197, 6, 256, 32),                  // deep context, partial tail
+            (5, 1, 64, 16),                     // single-row batch
+        ] {
+            let mut r = Rng::new(23 + base as u64);
+            let (h, hk, dh) = (4usize, 2usize, 16usize);
+            let q = Tensor::randn(&[g_rows, h, dh], &mut r);
+            let k = Tensor::randn(&[hk, n_cap, dh], &mut r);
+            let v = Tensor::randn(&[hk, n_cap, dh], &mut r);
+            let n_tokens = base + g_rows - 1;
+            let kv = TensorKv { k: &k, v: &v, n_tokens, block };
+            let sel = Selection::verify_full(h, g_rows, kv.n_blocks());
+            sel.validate_verify(kv.n_blocks()).unwrap();
+            let got = sparse_verify_attention(&q, &kv, &sel, base);
+            let want = dense_verify_attention_reference(&q, &kv, base);
+            let d = got.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+            assert!(d < 1e-5, "base={base} G={g_rows} block={block}: verify deviates by {d}");
+        }
+    }
+
+    #[test]
+    fn verify_rows_are_bitwise_equal_to_single_query_passes() {
+        // the speculative decode-equivalence guarantee: each verify row
+        // must reproduce a sequential single-query pass over the same
+        // per-row selection at the same width, bit for bit
+        let mut r = Rng::new(29);
+        let (g_rows, h, hk, dh, block, base) = (5usize, 4usize, 2usize, 16usize, 32usize, 150usize);
+        let q = Tensor::randn(&[g_rows, h, dh], &mut r);
+        let k = Tensor::randn(&[hk, 256, dh], &mut r);
+        let v = Tensor::randn(&[hk, 256, dh], &mut r);
+        let kv = TensorKv { k: &k, v: &v, n_tokens: base + g_rows - 1, block };
+        // per-row sparse selections, exactly as the sequential step would
+        // compute them over its own clamped width
+        let mut row_sels: Vec<Selection> = vec![];
+        for g in 0..g_rows {
+            let pre = KvPrefix::new(&kv, base + g);
+            let qg = Tensor::from_vec(&[h, dh], q.data[g * h * dh..(g + 1) * h * dh].to_vec());
+            let scores = decode_block_scores(&qg, &pre, 8, 0.2);
+            row_sels.push(select_decode(&scores, 3, 1, 1));
+        }
+        let mut b = SelectionBuilder::new(h, g_rows);
+        for hh in 0..h {
+            for s in &row_sels {
+                let row = s.selected(hh, 0);
+                b.push_row(row, row.len() as u32);
+            }
+        }
+        let sel = b.finish();
+        sel.validate_verify(kv.n_blocks()).unwrap();
+        let got = sparse_verify_attention(&q, &kv, &sel, base);
+        for g in 0..g_rows {
+            let pre = KvPrefix::new(&kv, base + g);
+            let qg = Tensor::from_vec(&[h, dh], q.data[g * h * dh..(g + 1) * h * dh].to_vec());
+            let want = sparse_decode_attention(&qg, &pre, &row_sels[g]);
+            assert_eq!(
+                &got[g * h * dh..(g + 1) * h * dh],
+                &want[..],
+                "row {g} is not bitwise-equal to its sequential pass"
+            );
+        }
+    }
+
+    #[test]
+    fn kv_prefix_clamps_blocks_and_tokens() {
+        let mut r = Rng::new(31);
+        let k = Tensor::randn(&[1, 64, 8], &mut r);
+        let v = Tensor::randn(&[1, 64, 8], &mut r);
+        let kv = TensorKv { k: &k, v: &v, n_tokens: 50, block: 16 };
+        let pre = KvPrefix::new(&kv, 35); // 2 full blocks + a 3-token tail
+        assert_eq!(pre.n_tokens(), 35);
+        assert_eq!(pre.n_blocks(), 3);
+        assert_eq!(pre.block_len(2), 3);
+        assert_eq!(pre.k_block(0, 2).len(), 3 * 8);
+        assert_eq!(pre.k_block(0, 0), kv.k_block(0, 0), "full blocks pass through");
+        assert_eq!(&kv.v_block(0, 2)[..3 * 8], pre.v_block(0, 2), "tail is a prefix slice");
+    }
+
+    #[test]
+    fn validate_verify_rejects_malformed_rows() {
+        // shared full selection validates
+        Selection::verify_full(2, 3, 4).validate_verify(4).unwrap();
+        // empty row
+        let mut b = SelectionBuilder::new(1, 2);
+        b.push_row(&[0], 1);
+        b.push_row(&[], 0);
+        assert!(b.finish().validate_verify(4).is_err());
+        // out-of-range block
+        let mut b = SelectionBuilder::new(1, 2);
+        b.push_row(&[0], 1);
+        b.push_row(&[4], 1);
+        assert!(b.finish().validate_verify(4).is_err());
+        // non-ascending
+        let mut b = SelectionBuilder::new(1, 2);
+        b.push_row(&[0], 1);
+        b.push_row(&[2, 1], 2);
+        assert!(b.finish().validate_verify(4).is_err());
     }
 
     #[test]

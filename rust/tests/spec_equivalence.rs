@@ -1,0 +1,433 @@
+//! Decode-equivalence property suite for speculative decode (ISSUE 5).
+//!
+//! The hard contract: speculative draft/verify decode must emit
+//! *exactly* — byte-for-byte, not within 1e-5 — the token stream that
+//! non-speculative greedy decode under the same serving policy emits,
+//! for random prompts, random policies, γ ∈ 1..=6, and across `fork()`
+//! siblings; the session state afterwards (context length, last token,
+//! step counter, dense/budget accounting) must be indistinguishable
+//! too. Failures shrink to a minimal counterexample via `util::prop`.
+//!
+//! The suite also pins the batched multi-query verify kernel against the
+//! dense single-query oracle at 1e-5 (degenerate one-token rows, γ
+//! exceeding the base context, page-boundary-straddling tails) and
+//! checks the rollback invariants of `truncate_tail` under forked tails
+//! (no sibling page ever freed, freed-page log always drained — pool
+//! invariants + zero residency after teardown).
+//!
+//! Artifact-free; CI runs it under `cargo test --release` in a
+//! dedicated `spec-equivalence` job.
+
+use std::sync::Arc;
+
+use stem::coordinator::kv_cache::KvConfig;
+use stem::decode::{DecodePolicy, DecodeSession, SharedKv, TinyLm};
+use stem::model::vocab;
+use stem::sparse::{
+    decode_block_scores, dense_verify_attention_reference, select_decode,
+    sparse_decode_attention, sparse_verify_attention, KvPrefix, Selection, SelectionBuilder,
+    Tensor, TensorKv,
+};
+use stem::util::prop::forall;
+use stem::util::rng::Rng;
+
+const H: usize = 4;
+const HK: usize = 2;
+const DH: usize = 16;
+
+fn pool(pages: usize, page_tokens: usize) -> Arc<SharedKv> {
+    SharedKv::new(KvConfig { total_pages: pages, page_tokens }, HK, DH)
+}
+
+fn model() -> Arc<TinyLm> {
+    Arc::new(TinyLm::new(0xBEEF, H, HK, DH, vocab::VOCAB_SIZE))
+}
+
+fn prompt_from(seed: u64, len: usize) -> Vec<i32> {
+    let mut r = Rng::new(seed.wrapping_mul(2654435761).wrapping_add(1));
+    let mut p = vec![vocab::BOS];
+    p.extend((1..len.max(1)).map(|_| vocab::WORD0 + r.below(64) as i32));
+    p
+}
+
+/// Serving disciplines the properties cycle through: always-dense,
+/// the default mixed policy, aggressive always-sparse, and a sparse
+/// policy with wide forced sets + fast decay.
+fn policy_for(knob: usize, gamma: usize) -> DecodePolicy {
+    let base = match knob % 4 {
+        0 => DecodePolicy::dense(),
+        1 => DecodePolicy::default(),
+        2 => DecodePolicy {
+            dense_below: 0,
+            k_start: 4.0,
+            min_blocks: 2,
+            recent_blocks: 1,
+            ..Default::default()
+        },
+        _ => DecodePolicy {
+            dense_below: 48,
+            k_start: 6.0,
+            sink_blocks: 2,
+            recent_blocks: 2,
+            mu: 0.5,
+            horizon: 8,
+            ..Default::default()
+        },
+    };
+    DecodePolicy { spec_gamma: gamma, ..base }
+}
+
+/// Everything an emitted stream must agree on, bit for bit. The budget
+/// sum is compared through its f64 bits: speculative accounting adds the
+/// same plan fractions in the same order, so even the floats must match.
+#[derive(Debug, PartialEq, Eq)]
+struct StreamFingerprint {
+    tokens: Vec<i32>,
+    n_ctx: usize,
+    last_token: i32,
+    steps: usize,
+    dense_steps: usize,
+    budget_bits: u64,
+}
+
+fn run_once(
+    policy: DecodePolicy,
+    prompt: &[i32],
+    max_new: usize,
+    page_tokens: usize,
+) -> Result<StreamFingerprint, String> {
+    let kv = pool(512, page_tokens);
+    let mut s = DecodeSession::new(Arc::clone(&kv), model(), policy, 1)
+        .map_err(|e| format!("session: {e}"))?;
+    s.prefill(prompt).map_err(|e| format!("prefill: {e}"))?;
+    let st = s.generate(max_new, None, |_| true).map_err(|e| format!("generate: {e}"))?;
+    let fp = StreamFingerprint {
+        tokens: st.tokens,
+        n_ctx: s.n_ctx(),
+        last_token: s.last_token(),
+        steps: s.steps(),
+        dense_steps: s.dense_steps(),
+        budget_bits: (s.mean_budget_fraction() * s.steps().max(1) as f64).to_bits(),
+    };
+    kv.pool().map_err(|e| format!("pool: {e}"))?.check_invariants()?;
+    drop(s);
+    if kv.pool().map_err(|e| format!("pool: {e}"))?.used_pages() != 0 {
+        return Err("session drop leaked pages".into());
+    }
+    if kv.pages_resident() != 0 {
+        return Err("session drop leaked slabs".into());
+    }
+    Ok(fp)
+}
+
+#[test]
+fn prop_spec_stream_equals_sequential_exactly() {
+    forall(
+        0xA11CE,
+        24,
+        |r: &mut Rng| {
+            (
+                r.below(120) as usize + 1, // prompt length
+                r.below(6) as usize + 1,   // gamma 1..=6
+                r.below(4) as usize,       // serving-policy knob
+                r.below(18) as usize + 3,  // max_new 3..=20
+                r.below(2) == 0,           // small (16) vs larger (32) pages
+            )
+        },
+        |&(plen, gamma, knob, max_new, small_pages)| {
+            let pt = if small_pages { 16 } else { 32 };
+            let prompt = prompt_from(plen as u64, plen);
+            let seq = run_once(policy_for(knob, 0), &prompt, max_new, pt)?;
+            let spec = run_once(policy_for(knob, gamma), &prompt, max_new, pt)?;
+            if seq != spec {
+                return Err(format!(
+                    "spec(γ={gamma}) diverged from sequential\n  seq:  {seq:?}\n  spec: {spec:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_spec_equals_sequential_across_fork_siblings() {
+    forall(
+        0xF0CA,
+        12,
+        |r: &mut Rng| {
+            (
+                r.below(90) as usize + 8, // prompt length
+                r.below(6) as usize + 1,  // gamma 1..=6
+                r.below(4) as usize,      // serving-policy knob
+                r.below(3) as usize + 2,  // fanout 2..=4
+            )
+        },
+        |&(plen, gamma, knob, fanout)| {
+            let (pt, max_new) = (16usize, 12usize);
+            let prompt = prompt_from(plen as u64 ^ 0x51b1, plen);
+            let kv = pool(1024, pt);
+            let m = model();
+            let mut root =
+                DecodeSession::new(Arc::clone(&kv), Arc::clone(&m), policy_for(knob, 0), 1)
+                    .map_err(|e| format!("root: {e}"))?;
+            root.prefill(&prompt).map_err(|e| format!("root prefill: {e}"))?;
+            // alternate speculative / sequential siblings over one shared
+            // refcounted prefix; all stay alive so CoW isolation is live
+            let mut branches = Vec::with_capacity(fanout);
+            let mut streams = Vec::with_capacity(fanout);
+            for i in 0..fanout {
+                let mut b = root.fork(10 + i as u64).map_err(|e| format!("fork {i}: {e}"))?;
+                b.set_policy(policy_for(knob, if i % 2 == 0 { gamma } else { 0 }));
+                let steer = vocab::WORD0 + i as i32;
+                b.prefill(&[steer]).map_err(|e| format!("steer {i}: {e}"))?;
+                let st =
+                    b.generate(max_new, None, |_| true).map_err(|e| format!("gen {i}: {e}"))?;
+                streams.push(st.tokens);
+                branches.push(b);
+            }
+            kv.pool().map_err(|e| format!("pool: {e}"))?.check_invariants()?;
+            // every sibling — speculative or not — must match a fresh
+            // independent sequential session over (prompt + its steer)
+            for (i, stream) in streams.iter().enumerate() {
+                let mut full = prompt.clone();
+                full.push(vocab::WORD0 + i as i32);
+                let want = run_once(policy_for(knob, 0), &full, max_new, pt)?;
+                if stream != &want.tokens {
+                    return Err(format!(
+                        "sibling {i} (spec={}) diverged from its independent twin:\n  got:  {stream:?}\n  want: {:?}",
+                        i % 2 == 0,
+                        want.tokens
+                    ));
+                }
+            }
+            // speculative siblings must never leak into the shared root
+            let root_stream = root
+                .generate(6, None, |_| true)
+                .map_err(|e| format!("root gen: {e}"))?
+                .tokens;
+            let control = run_once(policy_for(knob, 0), &prompt, 6, pt)?;
+            if root_stream != control.tokens {
+                return Err("speculative siblings leaked into the root".into());
+            }
+            // rollback invariant: tearing everything down frees every
+            // page and slab (drafted overshoot included)
+            drop(branches);
+            drop(root);
+            if kv.pool().map_err(|e| format!("pool: {e}"))?.used_pages() != 0 {
+                return Err("teardown leaked pool pages".into());
+            }
+            if kv.pages_resident() != 0 {
+                return Err("teardown leaked slab payloads".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn spec_stop_token_trims_exactly_like_sequential() {
+    // pick a token the sequential stream actually emits mid-way and use
+    // it as the stop token in both modes: streams and session state must
+    // still agree exactly
+    let prompt = prompt_from(99, 60);
+    let seq_full = run_once(policy_for(1, 0), &prompt, 16, 16).unwrap();
+    assert!(seq_full.tokens.len() >= 6, "need a few tokens to pick a stop from");
+    let stop = seq_full.tokens[seq_full.tokens.len() / 2];
+    let run_stop = |gamma: usize| {
+        let kv = pool(512, 16);
+        let mut s =
+            DecodeSession::new(Arc::clone(&kv), model(), policy_for(1, gamma), 1).unwrap();
+        s.prefill(&prompt).unwrap();
+        let st = s.generate(16, Some(stop), |_| true).unwrap();
+        (st.tokens, s.n_ctx(), s.last_token(), s.steps())
+    };
+    let want = run_stop(0);
+    assert_eq!(want.0.last(), Some(&stop), "sequential run must stop on the stop token");
+    for gamma in 1..=6 {
+        assert_eq!(run_stop(gamma), want, "gamma={gamma}: stop-token trim diverged");
+    }
+}
+
+#[test]
+fn prop_verify_kernel_matches_dense_oracle_across_degenerate_shapes() {
+    // satellite: the batched verify kernel vs the scalar per-position
+    // oracle at 1e-5 — one-token rows, γ > base context, tails
+    // straddling page boundaries, blocks of several sizes
+    forall(
+        0x5EED,
+        40,
+        |r: &mut Rng| {
+            (
+                r.below(200) as usize + 1, // base width of position 0
+                r.below(7) as usize + 1,   // G positions (up to γ+1 = 7)
+                r.below(3) as usize,       // block-size selector
+                r.below(1 << 16),          // data seed (u64)
+            )
+        },
+        |&(base, g_rows, bsel, seed)| {
+            if base == 0 || g_rows == 0 {
+                return Ok(()); // shrinker floor: vacuous
+            }
+            let block = [16usize, 32, 48][bsel % 3];
+            let n = base + g_rows - 1;
+            let mut r = Rng::new(seed ^ 0xD1CE);
+            let q = Tensor::randn(&[g_rows, H, DH], &mut r);
+            let k = Tensor::randn(&[HK, n, DH], &mut r);
+            let v = Tensor::randn(&[HK, n, DH], &mut r);
+            let kv = TensorKv { k: &k, v: &v, n_tokens: n, block };
+            let nblk = kv.n_blocks();
+            // full (dense-plan) verify selection vs the oracle
+            let sel = Selection::verify_full(H, g_rows, nblk);
+            sel.validate_verify(nblk)?;
+            let got = sparse_verify_attention(&q, &kv, &sel, base);
+            let want = dense_verify_attention_reference(&q, &kv, base);
+            let d = got.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+            if d >= 1e-5 {
+                return Err(format!(
+                    "verify kernel deviates from oracle by {d} (base={base}, G={g_rows}, block={block})"
+                ));
+            }
+            // sparse per-position selections: the batched walk must be
+            // BITWISE equal to independent single-query passes
+            let budget = (nblk / 2).max(1);
+            let mut row_sels = Vec::with_capacity(g_rows);
+            for g in 0..g_rows {
+                let pre = KvPrefix::new(&kv, base + g);
+                let qg =
+                    Tensor::from_vec(&[H, DH], q.data[g * H * DH..(g + 1) * H * DH].to_vec());
+                let scores = decode_block_scores(&qg, &pre, 4, 0.2);
+                row_sels.push(select_decode(&scores, budget, 1, 1));
+            }
+            let mut b = SelectionBuilder::new(H, g_rows);
+            for hh in 0..H {
+                for s in &row_sels {
+                    let row = s.selected(hh, 0);
+                    b.push_row(row, row.len() as u32);
+                }
+            }
+            let sparse_sel = b.finish();
+            sparse_sel.validate_verify(nblk)?;
+            let got = sparse_verify_attention(&q, &kv, &sparse_sel, base);
+            for g in 0..g_rows {
+                let pre = KvPrefix::new(&kv, base + g);
+                let qg =
+                    Tensor::from_vec(&[H, DH], q.data[g * H * DH..(g + 1) * H * DH].to_vec());
+                let want = sparse_decode_attention(&qg, &pre, &row_sels[g]);
+                if got[g * H * DH..(g + 1) * H * DH] != want[..] {
+                    return Err(format!(
+                        "verify row {g} not bitwise-equal to its single-query pass (base={base}, G={g_rows}, block={block})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_truncate_tail_rollback_invariants_under_forks() {
+    // satellite: random fork/append/truncate workloads — a truncate
+    // never frees a page a sibling still references, the freed-page log
+    // drains into slab GC, and pool invariants hold throughout
+    forall(
+        0x70C4,
+        30,
+        |r: &mut Rng| {
+            (0..24)
+                .map(|_| (r.below(4) as usize, r.below(40) as usize + 1))
+                .collect::<Vec<(usize, usize)>>()
+        },
+        |ops| {
+            let pt = 8usize;
+            let kv = pool(64, pt);
+            let mut next = 1u64;
+            let mut live: Vec<(u64, usize)> = vec![]; // (seq, n_tokens)
+            kv.allocate(next, 0).map_err(|e| format!("alloc: {e}"))?;
+            live.push((next, 0));
+            for &(op, size) in ops {
+                match op {
+                    // append + write the new slots (so slab GC has
+                    // payloads to collect)
+                    0 => {
+                        if let Some(e) = live.last_mut() {
+                            if let Ok(app) = kv.append_tokens(e.0, size) {
+                                for &p in app.cow.iter().map(|(_, n)| n).chain(app.grown.iter())
+                                {
+                                    let rows = vec![p as f32; HK * DH];
+                                    kv.write_token(p, 0, &rows, &rows)
+                                        .map_err(|x| format!("write: {x}"))?;
+                                }
+                                e.1 += size;
+                            }
+                        }
+                    }
+                    // fork the most recent live sequence
+                    1 => {
+                        if let Some(&(src, n)) = live.last() {
+                            next += 1;
+                            if kv.fork(src, next).is_ok() {
+                                live.push((next, n));
+                            }
+                        }
+                    }
+                    // truncate a live sequence's tail
+                    2 => {
+                        if !live.is_empty() {
+                            let i = size % live.len();
+                            let (seq, n) = live[i];
+                            let target = n.saturating_sub(size);
+                            kv.truncate_tail(seq, target)
+                                .map_err(|e| format!("truncate: {e}"))?;
+                            live[i].1 = target;
+                        }
+                    }
+                    // drop a sequence
+                    _ => {
+                        if live.len() > 1 {
+                            let i = size % live.len();
+                            let (seq, _) = live.remove(i);
+                            kv.drop_seq(seq).map_err(|e| format!("drop: {e}"))?;
+                        }
+                    }
+                }
+                let pool = kv.pool().map_err(|e| format!("pool: {e}"))?;
+                pool.check_invariants()?;
+                // every live sequence still has a consistent table: a
+                // truncate that freed a sibling's page would break this
+                for &(seq, n) in &live {
+                    match pool.page_table(seq) {
+                        Some(t) if t.len() == n.div_ceil(pt) => {}
+                        Some(t) => {
+                            return Err(format!(
+                                "seq {seq}: table {} pages for {n} tokens",
+                                t.len()
+                            ))
+                        }
+                        None => return Err(format!("seq {seq} vanished")),
+                    }
+                }
+                // slab residency never exceeds referenced pages (drained
+                // freed-page log ⇒ no zombie payloads)
+                let used = pool.used_pages();
+                drop(pool);
+                if kv.pages_resident() > used {
+                    return Err(format!(
+                        "zombie slabs: {} resident > {} used",
+                        kv.pages_resident(),
+                        used
+                    ));
+                }
+            }
+            for (seq, _) in live.drain(..) {
+                let _ = kv.release(seq);
+                kv.drop_seq(seq).map_err(|e| format!("final drop: {e}"))?;
+            }
+            if kv.pool().map_err(|e| format!("pool: {e}"))?.used_pages() != 0
+                || kv.pages_resident() != 0
+            {
+                return Err("teardown leaked pages or slabs".into());
+            }
+            Ok(())
+        },
+    );
+}
