@@ -19,6 +19,7 @@ fn req(id: u64) -> PrefillRequest {
         ids: vec![],
         diag: false,
         enqueued: Instant::now(),
+        deadline: None,
     }
 }
 

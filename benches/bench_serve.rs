@@ -1,0 +1,198 @@
+//! Overload-behavior macro-benchmark: the serving stack at 2x admission
+//! capacity must fail *crisply* — every excess request shed immediately
+//! with a typed error or deadline-expired, none hanging — while the
+//! admitted share keeps flowing. Runs against the artifact-free
+//! synthetic backend so CI exercises the full coordinator (admission →
+//! dispatcher → prefix holders → decode lane) without PJRT.
+//!
+//! Hard gates (the `overload` section of `BENCH_serve.json`):
+//!   * every submission reaches a terminal outcome (no hangs);
+//!   * every non-admitted request fails typed at submission, and every
+//!     deadline miss surfaces as `ServeError::DeadlineExceeded` or a
+//!     `Finish::DeadlineExceeded` partial — never an opaque hang;
+//!   * admitted throughput under 2x overload stays within 10% of the
+//!     uncontended run (overload must not poison the admitted lane).
+//!
+//!   cargo bench --bench bench_serve              # full sizes
+//!   cargo bench --bench bench_serve -- --quick   # small samples
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use stem::coordinator::admission::AdmissionConfig;
+use stem::coordinator::{Coordinator, CoordinatorConfig, Finish};
+use stem::decode::DecodePolicy;
+use stem::runtime::{PrefillBackend, SyntheticEngine};
+use stem::util::cli::Args;
+use stem::util::json::Json;
+
+/// Terminal-outcome bound: anything that takes this long under a
+/// synthetic backend is a hang, not load.
+const TERMINAL: Duration = Duration::from_secs(60);
+
+fn coordinator(max_requests: usize) -> Coordinator {
+    let engine: Arc<dyn PrefillBackend> = Arc::new(SyntheticEngine::new(&[128, 256]));
+    Coordinator::with_backend(
+        engine,
+        CoordinatorConfig {
+            workers: 4,
+            kv_pages: 1024,
+            admission: AdmissionConfig {
+                max_tokens: 1 << 20,
+                max_requests,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+}
+
+struct Phase {
+    submitted: usize,
+    completed: usize,
+    shed_at_submit: usize,
+    deadline_terminal: usize,
+    errors: usize,
+    tokens_out: usize,
+    wall: Duration,
+}
+
+impl Phase {
+    fn admitted_tokens_per_sec(&self) -> f64 {
+        self.tokens_out as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Push `n` generations through `coord` as fast as submission allows
+/// and wait for every terminal outcome.
+fn run_phase(coord: &Coordinator, n: usize, max_new: usize) -> Phase {
+    let t0 = Instant::now();
+    let mut tickets = Vec::new();
+    let mut shed_at_submit = 0usize;
+    for i in 0..n {
+        // distinct prompts: no prefix reuse, every request pays ingest
+        let prompt: Vec<i32> = (0..16).map(|j| 16 + ((i * 7 + j) % 64) as i32).collect();
+        match coord.submit_generate_tickets(prompt, max_new, DecodePolicy::default(), 1, None) {
+            Ok(ts) => tickets.extend(ts),
+            Err(_) => shed_at_submit += 1,
+        }
+    }
+    let mut completed = 0usize;
+    let mut deadline_terminal = 0usize;
+    let mut errors = 0usize;
+    let mut tokens_out = 0usize;
+    for mut t in tickets {
+        match t.recv_timeout(TERMINAL) {
+            Ok(resp) => {
+                tokens_out += resp.tokens.len();
+                match resp.finish {
+                    Finish::Complete => completed += 1,
+                    Finish::DeadlineExceeded => deadline_terminal += 1,
+                    Finish::Cancelled => errors += 1,
+                }
+            }
+            Err(e) if e.to_string().contains("timed out") => {
+                panic!("request hung past {TERMINAL:?} — overload must shed, not stall")
+            }
+            Err(_) => errors += 1,
+        }
+    }
+    Phase {
+        submitted: n,
+        completed,
+        shed_at_submit,
+        deadline_terminal,
+        errors,
+        tokens_out,
+        wall: t0.elapsed(),
+    }
+}
+
+fn phase_json(p: &Phase) -> Json {
+    Json::obj(vec![
+        ("submitted", Json::Num(p.submitted as f64)),
+        ("completed", Json::Num(p.completed as f64)),
+        ("shed_at_submit", Json::Num(p.shed_at_submit as f64)),
+        ("deadline_terminal", Json::Num(p.deadline_terminal as f64)),
+        ("errors", Json::Num(p.errors as f64)),
+        ("tokens_out", Json::Num(p.tokens_out as f64)),
+        ("wall_ns", Json::Num(p.wall.as_nanos() as f64)),
+        ("admitted_tokens_per_sec", Json::Num(p.admitted_tokens_per_sec())),
+    ])
+}
+
+fn main() {
+    let args = Args::from_env(false);
+    let quick = args.flag("quick");
+    let capacity = if quick { 8 } else { 16 };
+    let n = if quick { 32 } else { 96 };
+    let max_new = if quick { 16 } else { 32 };
+
+    // uncontended: same workload, admission ceiling far above it
+    let uncontended = {
+        let coord = coordinator(4 * n);
+        run_phase(&coord, n, max_new)
+    };
+    // overload: ceiling at `capacity` outstanding, 2x that submitted in
+    // a burst — excess must shed typed at submission (retryable), the
+    // admitted share must keep its throughput
+    let overload = {
+        let coord = coordinator(capacity);
+        run_phase(&coord, n, max_new)
+    };
+
+    // gates -----------------------------------------------------------
+    assert_eq!(
+        uncontended.completed, uncontended.submitted,
+        "uncontended run must complete everything"
+    );
+    assert_eq!(overload.errors, 0, "overload produced non-typed failures");
+    assert_eq!(
+        overload.completed + overload.shed_at_submit + overload.deadline_terminal,
+        overload.submitted,
+        "every overloaded request must be terminal: completed, typed-shed or expired"
+    );
+    assert!(
+        overload.shed_at_submit > 0,
+        "2x capacity must actually shed (capacity {capacity}, submitted {n})"
+    );
+    let ratio = overload.admitted_tokens_per_sec() / uncontended.admitted_tokens_per_sec();
+    println!(
+        "uncontended: {} reqs, {:.0} tok/s | overload(cap {capacity}): {} completed, {} shed, \
+         {:.0} tok/s | admitted-throughput ratio {ratio:.3} (gate >= 0.9)",
+        uncontended.completed,
+        uncontended.admitted_tokens_per_sec(),
+        overload.completed,
+        overload.shed_at_submit,
+        overload.admitted_tokens_per_sec(),
+    );
+    assert!(
+        ratio >= 0.9,
+        "admitted throughput collapsed under overload: {ratio:.3} < 0.9"
+    );
+
+    let out = Json::obj(vec![
+        (
+            "config",
+            Json::obj(vec![
+                ("quick", Json::Bool(quick)),
+                ("capacity", Json::Num(capacity as f64)),
+                ("requests", Json::Num(n as f64)),
+                ("max_new", Json::Num(max_new as f64)),
+            ]),
+        ),
+        (
+            "overload",
+            Json::obj(vec![
+                ("uncontended", phase_json(&uncontended)),
+                ("overload_2x", phase_json(&overload)),
+                ("admitted_throughput_ratio", Json::Num(ratio)),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_serve.json";
+    match std::fs::write(path, format!("{out}")) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -25,7 +25,7 @@ fn main() -> Result<()> {
     let engine = Arc::new(Engine::new(&stem::artifacts_dir())?);
     let coord = Arc::new(Coordinator::new(engine, CoordinatorConfig::default()));
     let ev = Evaluator { coordinator: Arc::clone(&coord), limit };
-    let man = coord.engine().manifest().clone();
+    let man = coord.manifest().clone();
     let d = man.defaults_for(bucket)?.clone();
     let fams: Vec<&str> = FAMILIES.to_vec();
 

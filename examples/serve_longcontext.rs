@@ -40,7 +40,7 @@ fn run_trace(
     rps: f64,
     seed: u64,
 ) -> Result<RunStats> {
-    let man = coord.engine().manifest().clone();
+    let man = coord.manifest().clone();
     let mut rng = Rng::new(seed);
     let trace = poisson_trace(&mut rng, n_requests, rps, pool.len());
     let start = Instant::now();
@@ -97,7 +97,7 @@ fn main() -> Result<()> {
     let artifacts = stem::artifacts_dir();
     let engine = Arc::new(Engine::new(&artifacts)?);
     let coord = Arc::new(Coordinator::new(engine, CoordinatorConfig::default()));
-    let man = coord.engine().manifest().clone();
+    let man = coord.manifest().clone();
 
     // mixed long-context pool: every LongBench-proxy family and bucket
     let mut pool = vec![];
@@ -109,7 +109,9 @@ fn main() -> Result<()> {
     println!("sample pool: {} prompts across {} eval sets", pool.len(), man.eval_sets.len());
 
     // compile everything up front so the trace measures serving, not JIT
-    coord.engine().warmup(&["prefill_dense", "prefill_stem"], &[512, 1024, 2048])?;
+    if let Some(engine) = coord.engine() {
+        engine.warmup(&["prefill_dense", "prefill_stem"], &[512, 1024, 2048])?;
+    }
 
     let mut rows = vec![];
     for m in ["dense", "stem"] {

@@ -9,7 +9,7 @@
 //! Shed-on-overflow semantics (caller may retry); the serve example turns
 //! rejections into client backoff.
 
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard};
 
 /// Backpressure ceilings (see module docs for the three dimensions).
 #[derive(Debug, Clone, Copy)]
@@ -63,6 +63,15 @@ impl Admission {
         Admission { cfg, state: Mutex::new(State::default()), freed: Condvar::new() }
     }
 
+    /// Lock the counter state, recovering from poisoning: the state is
+    /// three plain counters that are never left mid-update (no panic can
+    /// occur between the reads and writes of one critical section), so a
+    /// poisoned lock is safe to adopt — and refusing would wedge every
+    /// Condvar waiter behind one panicked worker forever.
+    fn lock_state(&self) -> MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     /// Non-blocking admission attempt.
     pub fn try_admit(&self, n_tokens: usize) -> Admit {
         self.try_admit_work(n_tokens, 0.0)
@@ -80,7 +89,7 @@ impl Admission {
     /// [`Admission::release_work`] individually, so the request count
     /// must be charged per branch up front to stay balanced).
     pub fn try_admit_work_n(&self, n_requests: usize, n_tokens: usize, est_ns: f64) -> Admit {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.lock_state();
         // checked adds: caller-supplied group sizes must reject, never
         // wrap past the ceilings in release builds
         match s.requests.checked_add(n_requests) {
@@ -106,9 +115,9 @@ impl Admission {
 
     /// Blocking admission (used by the synchronous eval harness).
     pub fn admit_blocking(&self, n_tokens: usize) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.lock_state();
         while s.requests + 1 > self.cfg.max_requests || s.tokens + n_tokens > self.cfg.max_tokens {
-            s = self.freed.wait(s).unwrap();
+            s = self.freed.wait(s).unwrap_or_else(|p| p.into_inner());
         }
         s.tokens += n_tokens;
         s.requests += 1;
@@ -122,7 +131,7 @@ impl Admission {
     /// Release a completed request's token share and the work estimate
     /// it was admitted with.
     pub fn release_work(&self, n_tokens: usize, est_ns: f64) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.lock_state();
         s.tokens = s.tokens.saturating_sub(n_tokens);
         s.requests = s.requests.saturating_sub(1);
         s.work_ns = (s.work_ns - est_ns).max(0.0);
@@ -132,13 +141,13 @@ impl Admission {
 
     /// Currently admitted `(tokens, requests)`.
     pub fn outstanding(&self) -> (usize, usize) {
-        let s = self.state.lock().unwrap();
+        let s = self.lock_state();
         (s.tokens, s.requests)
     }
 
     /// Summed work estimate (ns) of currently admitted requests.
     pub fn outstanding_work_ns(&self) -> f64 {
-        self.state.lock().unwrap().work_ns
+        self.lock_state().work_ns
     }
 }
 

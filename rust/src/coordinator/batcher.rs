@@ -197,10 +197,14 @@ impl Batcher {
                 .filter(|(_, q)| {
                     q.front().is_some_and(|r| now.duration_since(r.enqueued) >= self.cfg.max_wait)
                 })
-                .min_by_key(|(_, q)| q.front().map(|r| r.enqueued).unwrap())
+                // None sorts first but cannot occur (the filter requires a
+                // head); using Option as the key keeps this panic-free
+                .min_by_key(|(_, q)| q.front().map(|r| r.enqueued))
                 .map(|(k, _)| k.clone())
         })?;
-        let q = self.queues.get_mut(&key).unwrap();
+        // key selected above so the lookup cannot miss; `?` keeps it
+        // panic-free regardless
+        let q = self.queues.get_mut(&key)?;
         let n = q.len().min(self.cfg.max_batch);
         let requests: Vec<_> = q.drain(..n).collect();
         if q.is_empty() {
@@ -249,7 +253,9 @@ impl Batcher {
         let mut out = vec![];
         let keys: Vec<_> = self.queues.keys().cloned().collect();
         for key in keys {
-            let mut q = self.queues.remove(&key).unwrap();
+            let Some(mut q) = self.queues.remove(&key) else {
+                continue; // keys snapshotted above; unreachable, panic-free
+            };
             while !q.is_empty() {
                 let n = q.len().min(self.cfg.max_batch);
                 let requests: Vec<_> = q.drain(..n).collect();
@@ -294,6 +300,7 @@ mod tests {
             ids: vec![1, 2, 3],
             diag: false,
             enqueued: t,
+            deadline: None,
         }
     }
 

@@ -1,0 +1,237 @@
+//! Graceful-degradation ladder: a hysteresis state machine the
+//! dispatcher consults to step service quality down (and back up)
+//! under sustained overload, instead of collapsing ad hoc.
+//!
+//! Pressure signals are KV-pool occupancy and the shed/reject rate
+//! since the last evaluation. The ladder has four levels, applied to
+//! *newly launched* branches only (in-flight work is never mutated, so
+//! every step is reversible):
+//!
+//! * **0** — full service.
+//! * **1** — speculative drafting halved (γ → γ/2): drafts burn decode
+//!   throughput that overload needs for committed tokens.
+//! * **2** — drafting off (γ = 0) and the prefix-holder cap shrunk:
+//!   parked holders pin KV pages that queued work is waiting for.
+//! * **3** — decode top-k budgets tightened toward the schedule floor
+//!   (Lil-style: decode-stage sparsity degrades more gracefully than
+//!   prefill, so the budget is the last thing cut and the first
+//!   restored).
+//!
+//! Transitions need `up_patience` consecutive pressured evaluations to
+//! step down and `down_patience` calm ones to step up, so a single
+//! burst cannot flap the ladder.
+
+use std::time::{Duration, Instant};
+
+/// Tuning knobs of the [`Degrader`] (see module docs).
+#[derive(Debug, Clone)]
+pub struct DegradeConfig {
+    /// Occupancy fraction at or above which an evaluation counts as
+    /// pressured.
+    pub hi_occupancy: f64,
+    /// Occupancy fraction below which an evaluation counts as calm
+    /// (between the two thresholds neither streak advances).
+    pub lo_occupancy: f64,
+    /// Requests shed/rejected since the previous evaluation at or above
+    /// which an evaluation counts as pressured regardless of occupancy.
+    pub shed_per_eval: u64,
+    /// Consecutive pressured evaluations before stepping down a level.
+    pub up_patience: u32,
+    /// Consecutive calm evaluations before stepping back up a level.
+    pub down_patience: u32,
+    /// Minimum spacing between evaluations; [`Degrader::observe`] calls
+    /// inside the window return the current level unchanged.
+    pub eval_every: Duration,
+}
+
+impl Default for DegradeConfig {
+    fn default() -> Self {
+        DegradeConfig {
+            hi_occupancy: 0.85,
+            lo_occupancy: 0.60,
+            shed_per_eval: 4,
+            up_patience: 3,
+            down_patience: 6,
+            eval_every: Duration::from_millis(5),
+        }
+    }
+}
+
+/// Deepest ladder level (see module docs for what each level disables).
+pub const MAX_LEVEL: u8 = 3;
+
+/// The ladder's state: current level plus the pressured/calm streaks
+/// driving hysteresis. Purely computational — the dispatcher owns one
+/// and applies the level to new branches.
+#[derive(Debug)]
+pub struct Degrader {
+    cfg: DegradeConfig,
+    level: u8,
+    pressured_streak: u32,
+    calm_streak: u32,
+    last_eval: Option<Instant>,
+}
+
+impl Degrader {
+    /// A ladder at level 0 with the given tuning.
+    pub fn new(cfg: DegradeConfig) -> Degrader {
+        Degrader { cfg, level: 0, pressured_streak: 0, calm_streak: 0, last_eval: None }
+    }
+
+    /// Current level (0 = full service ..= [`MAX_LEVEL`]).
+    pub fn level(&self) -> u8 {
+        self.level
+    }
+
+    /// Feed one observation (`now` is passed in so tests drive time):
+    /// KV occupancy as a fraction and requests shed/rejected since the
+    /// previous evaluation. Returns the possibly-updated level.
+    /// Evaluations are rate-limited by `eval_every`; calls inside the
+    /// window are no-ops.
+    pub fn observe(&mut self, now: Instant, occupancy: f64, shed_delta: u64) -> u8 {
+        if let Some(last) = self.last_eval {
+            if now.duration_since(last) < self.cfg.eval_every {
+                return self.level;
+            }
+        }
+        self.last_eval = Some(now);
+        let pressured = occupancy >= self.cfg.hi_occupancy || shed_delta >= self.cfg.shed_per_eval;
+        let calm = occupancy < self.cfg.lo_occupancy && shed_delta == 0;
+        if pressured {
+            self.calm_streak = 0;
+            self.pressured_streak += 1;
+            if self.pressured_streak >= self.cfg.up_patience && self.level < MAX_LEVEL {
+                self.level += 1;
+                self.pressured_streak = 0;
+            }
+        } else if calm {
+            self.pressured_streak = 0;
+            self.calm_streak += 1;
+            if self.calm_streak >= self.cfg.down_patience && self.level > 0 {
+                self.level -= 1;
+                self.calm_streak = 0;
+            }
+        } else {
+            // between the thresholds: hold both the level and the streaks
+            self.pressured_streak = 0;
+            self.calm_streak = 0;
+        }
+        self.level
+    }
+
+    /// Speculative draft length to launch new branches with: the
+    /// requested γ at level 0, halved at level 1, zero from level 2.
+    pub fn effective_gamma(&self, requested: usize) -> usize {
+        match self.level {
+            0 => requested,
+            1 => requested / 2,
+            _ => 0,
+        }
+    }
+
+    /// Prefix-holder cap under the current level: the full cap until
+    /// level 2, then a quarter of it (≥ 1) so parked holders stop
+    /// pinning pages queued work needs.
+    pub fn holder_cap(&self, full: usize) -> usize {
+        if self.level >= 2 {
+            (full / 4).max(1)
+        } else {
+            full
+        }
+    }
+
+    /// Decode top-k starting budget under the current level: unchanged
+    /// until level 3, then halved but never below `floor_blocks` (the
+    /// schedule's min-blocks floor).
+    pub fn effective_k_start(&self, requested: f64, floor_blocks: usize) -> f64 {
+        if self.level >= MAX_LEVEL {
+            (requested / 2.0).max(floor_blocks as f64)
+        } else {
+            requested
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn degrader() -> Degrader {
+        // 1ms eval window so tests can step time explicitly
+        Degrader::new(DegradeConfig {
+            up_patience: 2,
+            down_patience: 3,
+            eval_every: Duration::from_millis(1),
+            ..DegradeConfig::default()
+        })
+    }
+
+    /// Advance a degrader through `n` evaluations of the same signal.
+    fn feed(d: &mut Degrader, t0: Instant, start: u32, n: u32, occ: f64, shed: u64) -> u8 {
+        let mut lvl = d.level();
+        for i in start..start + n {
+            lvl = d.observe(t0 + Duration::from_millis(2 * (i as u64 + 1)), occ, shed);
+        }
+        lvl
+    }
+
+    #[test]
+    fn steps_down_only_after_sustained_pressure() {
+        let mut d = degrader();
+        let t0 = Instant::now();
+        assert_eq!(feed(&mut d, t0, 0, 1, 0.95, 0), 0, "one pressured eval is not enough");
+        assert_eq!(feed(&mut d, t0, 1, 1, 0.95, 0), 1, "second consecutive steps down");
+        assert_eq!(feed(&mut d, t0, 2, 2, 0.95, 0), 2, "pressure keeps stepping");
+        assert_eq!(feed(&mut d, t0, 4, 10, 0.95, 0), 3, "clamped at MAX_LEVEL");
+    }
+
+    #[test]
+    fn shed_rate_alone_is_pressure() {
+        let mut d = degrader();
+        let t0 = Instant::now();
+        assert_eq!(feed(&mut d, t0, 0, 2, 0.1, 10), 1, "shedding counts even at low occupancy");
+    }
+
+    #[test]
+    fn recovers_with_hysteresis() {
+        let mut d = degrader();
+        let t0 = Instant::now();
+        feed(&mut d, t0, 0, 4, 0.95, 0); // down to level 2
+        assert_eq!(d.level(), 2);
+        // calm evals: down_patience=3 per step up
+        assert_eq!(feed(&mut d, t0, 4, 2, 0.1, 0), 2, "two calm evals hold the level");
+        assert_eq!(feed(&mut d, t0, 6, 1, 0.1, 0), 1, "third steps back up");
+        assert_eq!(feed(&mut d, t0, 7, 3, 0.1, 0), 0, "and eventually recovers fully");
+        // mid-band neither advances: streaks reset, level holds
+        feed(&mut d, t0, 10, 1, 0.95, 0); // pressured streak = 1
+        assert_eq!(feed(&mut d, t0, 11, 8, 0.7, 0), 0, "between thresholds holds steady");
+        assert_eq!(feed(&mut d, t0, 19, 1, 0.95, 0), 0, "mid-band reset the pressured streak");
+    }
+
+    #[test]
+    fn rate_limited_evaluations() {
+        let mut d = degrader();
+        let t0 = Instant::now();
+        d.observe(t0, 0.95, 0);
+        // same instant: inside the window, ignored no matter how often
+        for _ in 0..10 {
+            d.observe(t0, 0.95, 0);
+        }
+        assert_eq!(d.level(), 0, "rapid re-observations must not fast-forward the ladder");
+    }
+
+    #[test]
+    fn level_maps_to_knobs() {
+        let mut d = degrader();
+        assert_eq!(d.effective_gamma(4), 4);
+        assert_eq!(d.holder_cap(32), 32);
+        assert_eq!(d.effective_k_start(8.0, 4), 8.0);
+        let t0 = Instant::now();
+        feed(&mut d, t0, 0, 20, 0.95, 0); // ride to MAX_LEVEL
+        assert_eq!(d.level(), MAX_LEVEL);
+        assert_eq!(d.effective_gamma(4), 0);
+        assert_eq!(d.holder_cap(32), 8);
+        assert_eq!(d.effective_k_start(8.0, 4), 4.0, "halved");
+        assert_eq!(d.effective_k_start(6.0, 4), 4.0, "never below the floor");
+    }
+}

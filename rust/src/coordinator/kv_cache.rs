@@ -64,6 +64,12 @@ pub enum KvError {
         /// Tokens actually cached.
         have: usize,
     },
+    /// A fault deterministically injected by the active
+    /// [`crate::util::fault::FaultPlan`] (chaos testing). The operation
+    /// fails exactly as a real allocation failure would, exercising the
+    /// caller's cleanup path.
+    #[error("injected KV fault (chaos testing)")]
+    Injected,
 }
 
 /// Pool geometry: how many pages exist and how many tokens each holds.
@@ -278,7 +284,9 @@ impl KvCache {
         };
         if extra == 0 {
             let t = self.tick();
-            self.seqs.get_mut(&seq_id).unwrap().last_touch = t;
+            if let Some(e) = self.seqs.get_mut(&seq_id) {
+                e.last_touch = t;
+            }
             return Ok(Append { cow: None, grown: vec![] });
         }
         let tail_shared = |kv: &Self| -> bool {
@@ -305,7 +313,13 @@ impl KvCache {
                 return Err(KvError::OutOfPages { need, free: 0 });
             };
             self.refcount[new as usize] = 1;
-            let e = self.seqs.get_mut(&seq_id).unwrap();
+            let Some(e) = self.seqs.get_mut(&seq_id) else {
+                // the entry cannot vanish under our &mut borrow, but keep
+                // the no-panic guarantee: hand the page back and report
+                self.refcount[new as usize] = 0;
+                self.free.push(new);
+                return Err(KvError::UnknownSeq(seq_id));
+            };
             let old = std::mem::replace(&mut e.pages[cur / pt], new);
             self.refcount[old as usize] -= 1;
             cow = Some((old, new));
@@ -321,8 +335,10 @@ impl KvCache {
                     self.free.push(p);
                 }
                 if let Some((old, new)) = cow.take() {
-                    self.seqs.get_mut(&seq_id).unwrap().pages[cur / pt] = old;
-                    self.refcount[old as usize] += 1;
+                    if let Some(e) = self.seqs.get_mut(&seq_id) {
+                        e.pages[cur / pt] = old;
+                        self.refcount[old as usize] += 1;
+                    }
                     self.refcount[new as usize] = 0;
                     self.free.push(new);
                 }
@@ -332,7 +348,18 @@ impl KvCache {
             grown.push(p);
         }
         let t = self.tick();
-        let e = self.seqs.get_mut(&seq_id).unwrap();
+        let Some(e) = self.seqs.get_mut(&seq_id) else {
+            // unreachable under the exclusive borrow; stay panic-free
+            for p in grown {
+                self.refcount[p as usize] = 0;
+                self.free.push(p);
+            }
+            if let Some((_, new)) = cow {
+                self.refcount[new as usize] = 0;
+                self.free.push(new);
+            }
+            return Err(KvError::UnknownSeq(seq_id));
+        };
         e.pages.extend_from_slice(&grown);
         e.n_tokens = cur + extra;
         e.last_touch = t;
@@ -358,7 +385,7 @@ impl KvCache {
         }
         let keep = self.pages_needed(n_tokens);
         let t = self.tick();
-        let e = self.seqs.get_mut(&seq_id).unwrap();
+        let e = self.seqs.get_mut(&seq_id).ok_or(KvError::UnknownSeq(seq_id))?;
         e.n_tokens = n_tokens;
         e.last_touch = t;
         let dropped = e.pages.split_off(keep);

@@ -146,6 +146,26 @@ pub struct Metrics {
     /// instead of being re-ingested. Advisory: a holder evicted between
     /// routing and fork can make this overcount slightly.
     pub prefix_tokens_covered: AtomicU64,
+    // --- failure domains --------------------------------------------------
+    /// Requests shed because their deadline passed while still queued
+    /// (typed [`crate::coordinator::request::ServeError::DeadlineExceeded`]).
+    pub shed_deadline: AtomicU64,
+    /// Generation branches cut off mid-decode by their deadline (partial
+    /// result returned with `Finish::DeadlineExceeded`).
+    pub deadline_exceeded: AtomicU64,
+    /// Generation branches cancelled by a cancel handle or an abandoned
+    /// ticket (partial result with `Finish::Cancelled`, or response
+    /// discarded because the receiver was dropped).
+    pub cancelled: AtomicU64,
+    /// Worker panics caught and isolated (each became a per-request
+    /// error + full cleanup; the worker kept serving).
+    pub worker_panics: AtomicU64,
+    // --- degradation ladder -----------------------------------------------
+    /// Current degradation level (0 = full service; see
+    /// [`crate::coordinator::degrade`]). A gauge, not a counter.
+    pub degradation_level: AtomicU64,
+    /// Degradation-level transitions (either direction) since start.
+    pub degradation_transitions: AtomicU64,
     /// Serving-path error strings, newest last (drained by operators).
     pub errors: Mutex<Vec<String>>,
 }
@@ -156,9 +176,11 @@ impl Metrics {
         Self::default()
     }
 
-    /// Append a serving-path error string.
+    /// Append a serving-path error string. A poisoned error log is
+    /// recovered, not propagated — losing one diagnostic string must
+    /// never fail a request.
     pub fn record_error(&self, e: String) {
-        self.errors.lock().unwrap().push(e);
+        self.errors.lock().unwrap_or_else(|p| p.into_inner()).push(e);
     }
 
     /// Mean prefill budget fraction over completed requests.
@@ -293,6 +315,19 @@ impl Metrics {
                 100.0 * pcov as f64 / ptot.max(1) as f64,
             ));
         }
+        let shed = self.shed_deadline.load(Ordering::Relaxed);
+        let expired = self.deadline_exceeded.load(Ordering::Relaxed);
+        let cancelled = self.cancelled.load(Ordering::Relaxed);
+        let panics = self.worker_panics.load(Ordering::Relaxed);
+        let level = self.degradation_level.load(Ordering::Relaxed);
+        let trans = self.degradation_transitions.load(Ordering::Relaxed);
+        if shed + expired + cancelled + panics + level + trans > 0 {
+            out.push_str(&format!(
+                "\nfailures: shed_deadline={shed} deadline_exceeded={expired} \
+                 cancelled={cancelled} worker_panics={panics} | \
+                 degradation level={level} transitions={trans}"
+            ));
+        }
         out
     }
 
@@ -381,5 +416,33 @@ mod tests {
         assert!(r.contains("hits=3 partial=2 misses=1 (75% reuse)"), "{r}");
         assert!(r.contains("prompt tokens covered: 750/1000 (75%)"), "{r}");
         assert!((m.covered_token_ratio() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn failure_section_appears_once_anything_fails() {
+        let m = Metrics::new();
+        assert!(!m.report(Duration::from_secs(1)).contains("failures:"));
+        m.shed_deadline.fetch_add(3, Ordering::Relaxed);
+        m.worker_panics.fetch_add(1, Ordering::Relaxed);
+        m.degradation_level.store(2, Ordering::Relaxed);
+        m.degradation_transitions.fetch_add(2, Ordering::Relaxed);
+        let r = m.report(Duration::from_secs(1));
+        assert!(r.contains("failures: shed_deadline=3"), "{r}");
+        assert!(r.contains("worker_panics=1"), "{r}");
+        assert!(r.contains("degradation level=2 transitions=2"), "{r}");
+    }
+
+    #[test]
+    fn poisoned_error_log_recovers() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let m2 = std::sync::Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.errors.lock().unwrap();
+            panic!("poison the error log");
+        })
+        .join();
+        m.record_error("after poison".into());
+        let errs = m.errors.lock().unwrap_or_else(|p| p.into_inner());
+        assert_eq!(errs.last().map(String::as_str), Some("after poison"));
     }
 }

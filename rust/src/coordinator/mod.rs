@@ -15,12 +15,16 @@
 
 pub mod admission;
 pub mod batcher;
+pub mod degrade;
 pub mod kv_cache;
 pub mod metrics;
 pub mod prefix;
 pub mod request;
 pub mod server;
 
+pub use degrade::{DegradeConfig, Degrader};
 pub use prefix::{PrefixIndex, PrefixMode, RadixIndex, RadixMatch};
-pub use request::{GenerateRequest, GenerateResponse, Method, PrefillRequest, PrefillResponse};
-pub use server::{prompt_hash, Coordinator, CoordinatorConfig};
+pub use request::{
+    Finish, GenerateRequest, GenerateResponse, Method, PrefillRequest, PrefillResponse, ServeError,
+};
+pub use server::{prompt_hash, CancelHandle, Coordinator, CoordinatorConfig, GenerateTicket};

@@ -134,6 +134,10 @@ pub struct PrefillRequest {
     pub diag: bool,
     /// Submission time (queue-latency accounting).
     pub enqueued: Instant,
+    /// Absolute deadline: the dispatcher sheds the request (typed
+    /// [`ServeError::DeadlineExceeded`], admission unwound) instead of
+    /// executing it once this instant passes. `None` = no deadline.
+    pub deadline: Option<Instant>,
 }
 
 /// Result of one prefill execution.
@@ -183,6 +187,40 @@ pub struct GenerateRequest {
     pub prefix_hash: u64,
     /// Submission time (queue-latency accounting).
     pub enqueued: Instant,
+    /// Absolute deadline. A queued generation past it is shed whole
+    /// ([`ServeError::DeadlineExceeded`]); a branch already decoding
+    /// stops at its next step and returns the tokens generated so far
+    /// with [`Finish::DeadlineExceeded`]. `None` = no deadline.
+    pub deadline: Option<Instant>,
+}
+
+/// How a generation branch terminated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Finish {
+    /// Ran to the length cap or the END token.
+    #[default]
+    Complete,
+    /// The deadline fired mid-decode; `tokens` holds the partial output.
+    DeadlineExceeded,
+    /// A cancel handle fired (or the client abandoned the ticket);
+    /// `tokens` holds the partial output.
+    Cancelled,
+}
+
+/// Typed serving failures the coordinator returns for requests that
+/// never produce a (possibly partial) response. Carried through
+/// `anyhow::Error`; match with `err.downcast_ref::<ServeError>()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+pub enum ServeError {
+    /// The deadline passed while the request was still queued — it was
+    /// shed without executing.
+    #[error("deadline exceeded before execution")]
+    DeadlineExceeded,
+    /// The worker executing this request panicked; the panic was
+    /// isolated, the request's resources were reclaimed, and sibling
+    /// requests kept serving.
+    #[error("worker panicked while executing this request")]
+    WorkerPanic,
 }
 
 /// Final result of a generation (per-token streaming happens inside the
@@ -208,6 +246,8 @@ pub struct GenerateResponse {
     pub exec_us: u64,
     /// Mean decode latency per generated token.
     pub ns_per_token: f64,
+    /// How the branch terminated (complete / deadline / cancelled).
+    pub finish: Finish,
 }
 
 impl PrefillResponse {

@@ -46,10 +46,34 @@
 //!     sibling branches of one fan-out enter the decode lane together
 //!     and share a dispatch round
 //!   * completions flow back through per-request channels
+//!
+//! Failure domains (see `docs/ARCHITECTURE.md` §Failure domains):
+//!
+//! * **Deadlines** — requests may carry an absolute deadline. Queued
+//!   work past it is shed with a typed [`ServeError::DeadlineExceeded`]
+//!   (never executed, admission unwound, `shed_deadline` counted); a
+//!   generation already decoding stops at its next step and returns its
+//!   partial tokens with [`Finish::DeadlineExceeded`].
+//! * **Cancellation** — every generation branch carries a cancel flag
+//!   ([`CancelHandle`]); dropping an unconsumed [`GenerateTicket`]
+//!   raises it, so an abandoned client reaps its own session: the next
+//!   step unwinds admission, frees the branch's KV pages and answers
+//!   the (possibly dead) channel with [`Finish::Cancelled`].
+//! * **Panic isolation** — worker closures wrap execution in
+//!   `catch_unwind`: a panicking batch item becomes a per-request
+//!   [`ServeError::WorkerPanic`] with full session/admission cleanup
+//!   while the worker thread keeps serving the next item.
+//! * **Fault injection** — a [`FaultPlan`] (env `STEM_FAULTS`) drives
+//!   deterministic failures at KV allocation, engine execution,
+//!   decode-step dispatch and worker stalls for the chaos suite.
+//! * **Graceful degradation** — a [`Degrader`] ladder steps service
+//!   quality down reversibly under sustained shedding or KV pressure
+//!   (spec drafting off, holder cap shrunk, decode budgets tightened).
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -59,23 +83,30 @@ use super::admission::{Admission, AdmissionConfig, Admit};
 use super::batcher::{
     AnyBatch, BatchKey, Batcher, BatcherConfig, DecodeLaneConfig, DecodeStep,
 };
+use super::degrade::{DegradeConfig, Degrader};
 use super::kv_cache::{KvConfig, KvError};
 use super::metrics::Metrics;
 use super::prefix::{PrefixIndex, PrefixMode, RadixIndex};
-use super::request::{GenerateRequest, GenerateResponse, Method, PrefillRequest, PrefillResponse};
+use super::request::{
+    Finish, GenerateRequest, GenerateResponse, Method, PrefillRequest, PrefillResponse, ServeError,
+};
 use crate::decode::{
     DecodeError, DecodePolicy, DecodeSession, SharedKv, StepInfo, StepPlan, TinyLm,
 };
 use crate::model::vocab;
-use crate::runtime::Engine;
+use crate::model::Manifest;
+use crate::runtime::{Engine, PrefillBackend};
 use crate::sim::cost::{
     estimate_generate_ns, estimate_ingest_ns, estimate_spec_step_ns, Geometry,
     SPEC_ASSUMED_ACCEPTANCE,
 };
+use crate::util::fault::{FaultPlan, FaultPoint};
 use crate::util::threadpool::ThreadPool;
 
 /// Parked prefix holders kept as a cache before the lightest are
 /// retired (their pages also yield to LRU eviction under pool pressure).
+/// The degradation ladder shrinks the effective cap under pressure
+/// ([`Degrader::holder_cap`]).
 pub const MAX_PREFIX_HOLDERS: usize = 32;
 
 /// Construction-time knobs of a [`Coordinator`].
@@ -94,6 +125,12 @@ pub struct CoordinatorConfig {
     /// exact prompt-hash equality, or token-granular radix matching with
     /// partial (page-aligned) reuse. Defaults to radix.
     pub prefix_mode: PrefixMode,
+    /// Deterministic fault-injection plan for chaos testing. Defaults to
+    /// whatever the `STEM_FAULTS` env var specifies — `None` when unset,
+    /// which keeps every injection point zero-cost.
+    pub faults: Option<Arc<FaultPlan>>,
+    /// Hysteresis tuning of the graceful-degradation ladder.
+    pub degrade: DegradeConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -105,6 +142,8 @@ impl Default for CoordinatorConfig {
             admission: AdmissionConfig::default(),
             kv_pages: 4096,
             prefix_mode: PrefixMode::default(),
+            faults: FaultPlan::from_env().map(Arc::new),
+            degrade: DegradeConfig::default(),
         }
     }
 }
@@ -120,6 +159,73 @@ pub fn prompt_hash(prompt: &[i32]) -> u64 {
         }
     }
     h
+}
+
+/// A clonable handle that cancels one generation branch: the branch
+/// stops at its next decode step, returns the tokens generated so far
+/// with [`Finish::Cancelled`], and releases its KV pages and admission
+/// share. Cancelling an already-finished branch is a no-op.
+#[derive(Clone)]
+pub struct CancelHandle(Arc<AtomicBool>);
+
+impl CancelHandle {
+    /// Raise the cancel flag (idempotent).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether the flag has been raised.
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// One generation branch's response slot plus its cancel flag.
+/// Dropping a ticket before receiving its response counts as client
+/// abandonment and cancels the branch — the serving side reaps the
+/// session instead of decoding for a caller that went away.
+pub struct GenerateTicket {
+    rx: mpsc::Receiver<Result<GenerateResponse>>,
+    cancel: Arc<AtomicBool>,
+    received: bool,
+}
+
+impl GenerateTicket {
+    /// Block until the branch's terminal outcome arrives.
+    pub fn recv(&mut self) -> Result<GenerateResponse> {
+        let out = self.rx.recv().map_err(|_| anyhow!("response channel closed"))?;
+        self.received = true;
+        out
+    }
+
+    /// Like [`GenerateTicket::recv`] with a timeout; timing out does
+    /// *not* consume or cancel the ticket.
+    pub fn recv_timeout(&mut self, timeout: Duration) -> Result<GenerateResponse> {
+        let out = match self.rx.recv_timeout(timeout) {
+            Ok(out) => out,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                return Err(anyhow!("timed out waiting for generation"))
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                return Err(anyhow!("response channel closed"))
+            }
+        };
+        self.received = true;
+        out
+    }
+
+    /// A handle that cancels this branch from another thread.
+    pub fn cancel_handle(&self) -> CancelHandle {
+        CancelHandle(Arc::clone(&self.cancel))
+    }
+}
+
+impl Drop for GenerateTicket {
+    fn drop(&mut self) {
+        if !self.received {
+            self.cancel.store(true, Ordering::SeqCst);
+        }
+    }
 }
 
 /// Mode-dispatched view over the two prefix indexes, so holder
@@ -159,8 +265,13 @@ struct BranchAdmit {
 enum Msg {
     Request(PrefillRequest, mpsc::Sender<Result<PrefillResponse>>),
     /// One fan-out group: `req.fanout` branches over one shared prompt,
-    /// one response channel + admission share per branch.
-    Generate(GenerateRequest, Vec<mpsc::Sender<Result<GenerateResponse>>>, Vec<BranchAdmit>),
+    /// one (response channel, cancel flag) pair + admission share per
+    /// branch.
+    Generate(
+        GenerateRequest,
+        Vec<(mpsc::Sender<Result<GenerateResponse>>, Arc<AtomicBool>)>,
+        Vec<BranchAdmit>,
+    ),
     /// A prefix holder finished (or failed) its one-time prompt ingest
     /// on a worker; the session comes back to be parked in the cache.
     PrefixFilled { key: u64, session: Result<Box<DecodeSession>, String> },
@@ -185,9 +296,21 @@ struct DecodeTask {
     /// Admission bookkeeping to release on completion.
     admit_tokens: usize,
     admit_ns: f64,
+    /// Client-side cancel flag; checked before every step.
+    cancel: Arc<AtomicBool>,
+    /// Absolute deadline; checked before every step.
+    deadline: Option<Instant>,
 }
 
 type DecodeTasks = Arc<Mutex<HashMap<u64, DecodeTask>>>;
+
+/// Lock the decode-task map, recovering from poisoning: tasks are
+/// inserted/removed whole (no critical section mutates one in place
+/// across a panic point), so a poisoned map is safe to adopt — and
+/// refusing would turn one isolated worker panic into a cascade.
+fn lock_tasks(tasks: &DecodeTasks) -> MutexGuard<'_, HashMap<u64, DecodeTask>> {
+    tasks.lock().unwrap_or_else(|p| p.into_inner())
+}
 
 /// One branch of a fan-out group waiting to fork its prefix.
 struct BranchSpec {
@@ -198,6 +321,8 @@ struct BranchSpec {
     n_prompt: usize,
     enqueued: Instant,
     admit: BranchAdmit,
+    cancel: Arc<AtomicBool>,
+    deadline: Option<Instant>,
 }
 
 /// A prefix-holder entry: the session that ingested (or is ingesting)
@@ -214,7 +339,10 @@ struct Holder {
 
 /// The serving runtime (see module docs for the threading model).
 pub struct Coordinator {
-    engine: Arc<Engine>,
+    backend: Arc<dyn PrefillBackend>,
+    /// The PJRT engine when serving compiled artifacts; `None` under a
+    /// synthetic backend (chaos tests, benches).
+    pjrt: Option<Arc<Engine>>,
     tx: mpsc::Sender<Msg>,
     dispatcher: Option<thread::JoinHandle<()>>,
     /// Serving counters/histograms behind [`Coordinator::report`].
@@ -236,9 +364,25 @@ impl Coordinator {
     /// dispatcher thread, size the shared KV pool from the manifest
     /// geometry, and wire up admission + both prefix indexes.
     pub fn new(engine: Arc<Engine>, cfg: CoordinatorConfig) -> Coordinator {
+        let backend: Arc<dyn PrefillBackend> = Arc::clone(&engine) as Arc<dyn PrefillBackend>;
+        Coordinator::boot(backend, Some(engine), cfg)
+    }
+
+    /// Boot the serving stack over any [`PrefillBackend`] — the
+    /// artifact-free [`crate::runtime::SyntheticEngine`] lets chaos
+    /// tests and benches exercise the full coordinator without PJRT.
+    pub fn with_backend(backend: Arc<dyn PrefillBackend>, cfg: CoordinatorConfig) -> Coordinator {
+        Coordinator::boot(backend, None, cfg)
+    }
+
+    fn boot(
+        backend: Arc<dyn PrefillBackend>,
+        pjrt: Option<Arc<Engine>>,
+        cfg: CoordinatorConfig,
+    ) -> Coordinator {
         let metrics = Arc::new(Metrics::new());
         let admission = Arc::new(Admission::new(cfg.admission));
-        let m = &engine.manifest().model;
+        let m = &backend.manifest().model;
         // decode stand-in LM shares the manifest geometry (see
         // decode::session docs); one attention layer today.
         let decode_model =
@@ -248,6 +392,9 @@ impl Coordinator {
             decode_model.hk,
             decode_model.dh,
         );
+        if let Some(plan) = &cfg.faults {
+            kv.set_fault_plan(Arc::clone(plan));
+        }
         let prefix_index = Arc::new(PrefixIndex::default());
         let radix_index = Arc::new(RadixIndex::new(m.block));
         let geometry = Geometry {
@@ -261,7 +408,7 @@ impl Coordinator {
         let (tx, rx) = mpsc::channel::<Msg>();
 
         let dispatcher = {
-            let engine = Arc::clone(&engine);
+            let backend = Arc::clone(&backend);
             let metrics = Arc::clone(&metrics);
             let admission = Arc::clone(&admission);
             let kv = Arc::clone(&kv);
@@ -272,12 +419,14 @@ impl Coordinator {
             let batcher_cfg = cfg.batcher.clone();
             let decode_cfg = cfg.decode_lane.clone();
             let workers = cfg.workers;
+            let faults = cfg.faults.clone();
+            let degrade_cfg = cfg.degrade.clone();
             let tx2 = tx.clone();
             thread::spawn(move || {
                 dispatcher_loop(DispatcherCtx {
                     rx,
                     tx: tx2,
-                    engine,
+                    backend,
                     metrics,
                     admission,
                     kv,
@@ -288,12 +437,15 @@ impl Coordinator {
                     batcher_cfg,
                     decode_cfg,
                     workers,
+                    faults,
+                    degrade_cfg,
                 })
             })
         };
 
         Coordinator {
-            engine,
+            backend,
+            pjrt,
             tx,
             dispatcher: Some(dispatcher),
             metrics,
@@ -310,9 +462,21 @@ impl Coordinator {
         }
     }
 
-    /// The PJRT engine executing prefill graphs.
-    pub fn engine(&self) -> &Arc<Engine> {
-        &self.engine
+    /// The artifacts manifest the serving backend executes against.
+    pub fn manifest(&self) -> &Manifest {
+        self.backend.manifest()
+    }
+
+    /// The PJRT engine executing prefill graphs, when this coordinator
+    /// serves compiled artifacts (`None` under a synthetic backend).
+    pub fn engine(&self) -> Option<&Arc<Engine>> {
+        self.pjrt.as_ref()
+    }
+
+    /// The admission gate (exposed so tests can assert the outstanding
+    /// counters return to zero after a drain).
+    pub fn admission(&self) -> &Arc<Admission> {
+        &self.admission
     }
 
     /// The deterministic decode LM (exposed so tests/benches can share
@@ -361,8 +525,22 @@ impl Coordinator {
         ids: Vec<i32>,
         diag: bool,
     ) -> Result<mpsc::Receiver<Result<PrefillResponse>>> {
+        self.submit_with_deadline(checkpoint, method, ids, diag, None)
+    }
+
+    /// [`Coordinator::submit`] with an absolute deadline: if it passes
+    /// while the request is still queued, the dispatcher sheds it with a
+    /// typed [`ServeError::DeadlineExceeded`] instead of executing it.
+    pub fn submit_with_deadline(
+        &self,
+        checkpoint: &str,
+        method: Method,
+        ids: Vec<i32>,
+        diag: bool,
+        deadline: Option<Instant>,
+    ) -> Result<mpsc::Receiver<Result<PrefillResponse>>> {
         let bucket = self
-            .engine
+            .backend
             .manifest()
             .bucket_for(ids.len())
             .ok_or_else(|| anyhow!("request of {} tokens exceeds every bucket", ids.len()))?;
@@ -380,6 +558,7 @@ impl Coordinator {
             ids,
             diag,
             enqueued: Instant::now(),
+            deadline,
         };
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = mpsc::channel();
@@ -415,6 +594,40 @@ impl Coordinator {
         policy: DecodePolicy,
         fanout: usize,
     ) -> Result<Vec<mpsc::Receiver<Result<GenerateResponse>>>> {
+        let (rxs, _cancels) =
+            self.submit_generate_inner(prompt, max_new_tokens, policy, fanout, None)?;
+        Ok(rxs)
+    }
+
+    /// Like [`Coordinator::submit_generate_many`] but returns one
+    /// [`GenerateTicket`] per branch — cancel handle plus abandonment
+    /// semantics — and takes an optional absolute deadline shared by
+    /// every branch.
+    pub fn submit_generate_tickets(
+        &self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        policy: DecodePolicy,
+        fanout: usize,
+        deadline: Option<Instant>,
+    ) -> Result<Vec<GenerateTicket>> {
+        let (rxs, cancels) =
+            self.submit_generate_inner(prompt, max_new_tokens, policy, fanout, deadline)?;
+        Ok(rxs
+            .into_iter()
+            .zip(cancels)
+            .map(|(rx, cancel)| GenerateTicket { rx, cancel, received: false })
+            .collect())
+    }
+
+    fn submit_generate_inner(
+        &self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        policy: DecodePolicy,
+        fanout: usize,
+        deadline: Option<Instant>,
+    ) -> Result<(Vec<mpsc::Receiver<Result<GenerateResponse>>>, Vec<Arc<AtomicBool>>)> {
         policy.validate().map_err(|e| anyhow!("invalid decode policy: {e}"))?;
         if max_new_tokens == 0 {
             return Err(anyhow!("max_new_tokens must be >= 1"));
@@ -519,19 +732,23 @@ impl Coordinator {
             fanout,
             prefix_hash,
             enqueued: Instant::now(),
+            deadline,
         };
         self.metrics.generates_submitted.fetch_add(fanout as u64, Ordering::Relaxed);
-        let mut txs = Vec::with_capacity(fanout);
+        let mut lines = Vec::with_capacity(fanout);
         let mut rxs = Vec::with_capacity(fanout);
+        let mut cancels = Vec::with_capacity(fanout);
         for _ in 0..fanout {
             let (rtx, rrx) = mpsc::channel();
-            txs.push(rtx);
+            let cancel = Arc::new(AtomicBool::new(false));
+            cancels.push(Arc::clone(&cancel));
+            lines.push((rtx, cancel));
             rxs.push(rrx);
         }
         self.tx
-            .send(Msg::Generate(req, txs, admits))
+            .send(Msg::Generate(req, lines, admits))
             .map_err(|_| anyhow!("coordinator stopped"))?;
-        Ok(rxs)
+        Ok((rxs, cancels))
     }
 
     /// Submit a single autoregressive generation (fan-out of one); the
@@ -542,10 +759,9 @@ impl Coordinator {
         max_new_tokens: usize,
         policy: DecodePolicy,
     ) -> Result<mpsc::Receiver<Result<GenerateResponse>>> {
-        Ok(self
-            .submit_generate_many(prompt, max_new_tokens, policy, 1)?
+        self.submit_generate_many(prompt, max_new_tokens, policy, 1)?
             .pop()
-            .expect("fanout=1 yields exactly one channel"))
+            .ok_or_else(|| anyhow!("fanout=1 yielded no channel"))
     }
 
     /// Synchronous convenience wrapper around [`Coordinator::submit_generate`].
@@ -595,7 +811,7 @@ impl Drop for Coordinator {
 struct DispatcherCtx {
     rx: mpsc::Receiver<Msg>,
     tx: mpsc::Sender<Msg>,
-    engine: Arc<Engine>,
+    backend: Arc<dyn PrefillBackend>,
     metrics: Arc<Metrics>,
     admission: Arc<Admission>,
     kv: Arc<SharedKv>,
@@ -606,13 +822,15 @@ struct DispatcherCtx {
     batcher_cfg: BatcherConfig,
     decode_cfg: DecodeLaneConfig,
     workers: usize,
+    faults: Option<Arc<FaultPlan>>,
+    degrade_cfg: DegradeConfig,
 }
 
 fn dispatcher_loop(ctx: DispatcherCtx) {
     let DispatcherCtx {
         rx,
         tx,
-        engine,
+        backend,
         metrics,
         admission,
         kv,
@@ -623,6 +841,8 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
         batcher_cfg,
         decode_cfg,
         workers,
+        faults,
+        degrade_cfg,
     } = ctx;
     let tables = PrefixTables { mode: prefix_mode, exact: &prefix_index, radix: &radix_index };
     let pool = ThreadPool::new(workers);
@@ -638,6 +858,12 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
     // on a filling holder, in the batcher, or running a step)
     let active_decodes = Arc::new(AtomicUsize::new(0));
     let shutdown = AtomicBool::new(false);
+    // graceful-degradation ladder, evaluated on the dispatcher's own
+    // cadence from KV occupancy + the shed/reject delta
+    let degrade_every = degrade_cfg.eval_every;
+    let mut degrader = Degrader::new(degrade_cfg);
+    let mut degrade_last_eval = Instant::now();
+    let mut degrade_last_shed: u64 = 0;
 
     loop {
         // 1. pull what's available (block briefly if nothing pending);
@@ -671,7 +897,20 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                     shutdown.store(true, Ordering::SeqCst);
                 }
                 Msg::Request(req, ch) => {
-                    let bucket = engine.manifest().bucket_for(req.ids.len()).unwrap();
+                    // submit() validated the length against this same
+                    // immutable manifest, so a miss here is a logic bug;
+                    // answer it as an error instead of panicking the
+                    // dispatcher (admission charged a bucket's tokens —
+                    // the request length is the closest approximation).
+                    let Some(bucket) = backend.manifest().bucket_for(req.ids.len()) else {
+                        metrics.record_error(format!(
+                            "no bucket for {}-token request at dispatch",
+                            req.ids.len()
+                        ));
+                        admission.release(req.ids.len());
+                        let _ = ch.send(Err(anyhow!("no bucket for request length")));
+                        continue;
+                    };
                     let key = BatchKey {
                         kind: req.method.kind(req.diag),
                         bucket,
@@ -680,26 +919,46 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                     channels.insert(req.id, ch);
                     batcher.push(key, req);
                 }
-                Msg::Generate(req, chs, admits) => {
+                Msg::Generate(req, lines, admits) => {
                     let n_prompt = req.prompt.len();
-                    let specs: Vec<BranchSpec> = chs
+                    // degradation ladder: newly launched branches take the
+                    // stepped-down policy (reversible — in-flight work is
+                    // never mutated)
+                    let mut policy = req.policy;
+                    policy.spec_gamma = degrader.effective_gamma(policy.spec_gamma);
+                    policy.k_start = degrader.effective_k_start(policy.k_start, policy.min_blocks);
+                    let specs: Vec<BranchSpec> = lines
                         .into_iter()
                         .zip(admits)
                         .enumerate()
-                        .map(|(i, (ch, admit))| BranchSpec {
+                        .map(|(i, ((ch, cancel), admit))| BranchSpec {
                             seq: req.id + 1 + i as u64,
                             ch,
                             max_new: req.max_new_tokens,
-                            policy: req.policy,
+                            policy,
                             n_prompt,
                             enqueued: req.enqueued,
                             admit,
+                            cancel,
+                            deadline: req.deadline,
                         })
                         .collect();
                     if shutdown.load(Ordering::SeqCst) {
                         for spec in specs {
                             admission.release_work(spec.admit.tokens, spec.admit.ns);
                             let _ = spec.ch.send(Err(anyhow!("coordinator shutting down")));
+                        }
+                        continue;
+                    }
+                    if req.deadline.is_some_and(|d| Instant::now() >= d) {
+                        // queued past its deadline: shed the whole group
+                        // before it touches the KV store or a worker
+                        for spec in specs {
+                            metrics.shed_deadline.fetch_add(1, Ordering::Relaxed);
+                            admission.release_work(spec.admit.tokens, spec.admit.ns);
+                            let _ = spec
+                                .ch
+                                .send(Err(anyhow::Error::new(ServeError::DeadlineExceeded)));
                         }
                         continue;
                     }
@@ -784,53 +1043,102 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                     };
                     match route {
                         Route::Hit(key) => {
-                            metrics.prefix_hits.fetch_add(specs.len() as u64, Ordering::Relaxed);
-                            metrics
-                                .prefix_tokens_covered
-                                .fetch_add(n_prompt as u64, Ordering::Relaxed);
                             // touch the holder so cap-retirement favors
-                            // hot prefixes
+                            // hot prefixes; take it out for the launch and
+                            // put it back after — ownership instead of
+                            // unwraps on the double lookup
                             holder_clock += 1;
-                            let holder = holders.get_mut(&key).unwrap();
-                            holder.last_used = holder_clock;
-                            let bounced = launch_branches(
-                                holder.session.as_ref().unwrap(),
-                                specs,
-                                &tasks,
-                                &mut batcher,
-                                &metrics,
-                                &admission,
-                                &active_decodes,
-                            );
-                            if !bounced.is_empty() {
-                                // the parked holder was evicted between the
-                                // freshness check and the fork: retire it
-                                // and re-ingest for the bounced branches
-                                metrics
-                                    .prefix_hits
-                                    .fetch_sub(bounced.len() as u64, Ordering::Relaxed);
-                                let stale = holders.remove(&key).unwrap();
-                                tables.remove(key, &stale.prompt);
-                                let fresh = match prefix_mode {
-                                    PrefixMode::Exact => key,
-                                    PrefixMode::Radix => req.id,
-                                };
-                                start_prefix_fill(
-                                    fresh,
-                                    req,
-                                    bounced,
-                                    None,
-                                    &mut holders,
-                                    &mut holder_clock,
-                                    tables,
-                                    &kv,
-                                    &decode_model,
-                                    &metrics,
-                                    &admission,
-                                    &active_decodes,
-                                    &pool,
-                                    &tx,
-                                );
+                            match holders.remove(&key) {
+                                Some(mut holder) => match holder.session.take() {
+                                    Some(session) => {
+                                        metrics
+                                            .prefix_hits
+                                            .fetch_add(specs.len() as u64, Ordering::Relaxed);
+                                        metrics
+                                            .prefix_tokens_covered
+                                            .fetch_add(n_prompt as u64, Ordering::Relaxed);
+                                        holder.last_used = holder_clock;
+                                        let bounced = launch_branches(
+                                            &session,
+                                            specs,
+                                            &tasks,
+                                            &mut batcher,
+                                            &metrics,
+                                            &admission,
+                                            &active_decodes,
+                                        );
+                                        if bounced.is_empty() {
+                                            holder.session = Some(session);
+                                            holders.insert(key, holder);
+                                        } else {
+                                            // the parked holder was evicted
+                                            // between the freshness check
+                                            // and the fork: retire it and
+                                            // re-ingest for the bounced
+                                            // branches
+                                            metrics.prefix_hits.fetch_sub(
+                                                bounced.len() as u64,
+                                                Ordering::Relaxed,
+                                            );
+                                            tables.remove(key, &holder.prompt);
+                                            drop(session);
+                                            let fresh = match prefix_mode {
+                                                PrefixMode::Exact => key,
+                                                PrefixMode::Radix => req.id,
+                                            };
+                                            start_prefix_fill(
+                                                fresh,
+                                                req,
+                                                bounced,
+                                                None,
+                                                &mut holders,
+                                                &mut holder_clock,
+                                                tables,
+                                                &kv,
+                                                &decode_model,
+                                                &metrics,
+                                                &admission,
+                                                &active_decodes,
+                                                &pool,
+                                                &tx,
+                                                &faults,
+                                            );
+                                        }
+                                    }
+                                    None => {
+                                        // routed as Hit but mid-ingest
+                                        // after all (defensive): queue the
+                                        // branches like Filling would
+                                        holder.waiting.extend(specs);
+                                        holders.insert(key, holder);
+                                    }
+                                },
+                                None => {
+                                    // routing desync (unreachable on the
+                                    // single-threaded dispatcher): recover
+                                    // with a fresh ingest instead of panic
+                                    let fresh = match prefix_mode {
+                                        PrefixMode::Exact => key,
+                                        PrefixMode::Radix => req.id,
+                                    };
+                                    start_prefix_fill(
+                                        fresh,
+                                        req,
+                                        specs,
+                                        None,
+                                        &mut holders,
+                                        &mut holder_clock,
+                                        tables,
+                                        &kv,
+                                        &decode_model,
+                                        &metrics,
+                                        &admission,
+                                        &active_decodes,
+                                        &pool,
+                                        &tx,
+                                        &faults,
+                                    );
+                                }
                             }
                         }
                         Route::Filling(key) => {
@@ -839,13 +1147,26 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                             metrics
                                 .prefix_tokens_covered
                                 .fetch_add(n_prompt as u64, Ordering::Relaxed);
-                            holders.get_mut(&key).unwrap().waiting.extend(specs);
+                            if let Some(h) = holders.get_mut(&key) {
+                                h.waiting.extend(specs);
+                            } else {
+                                for spec in specs {
+                                    fail_branch(
+                                        spec,
+                                        anyhow!("prefix holder vanished mid-ingest"),
+                                        &metrics,
+                                        &admission,
+                                        &active_decodes,
+                                    );
+                                }
+                            }
                         }
                         Route::Refill { stale, fresh } => {
                             // the parked prefix was evicted under pressure:
                             // retire the stale holder and ingest afresh
-                            let old = holders.remove(&stale).unwrap();
-                            tables.remove(stale, &old.prompt);
+                            if let Some(old) = holders.remove(&stale) {
+                                tables.remove(stale, &old.prompt);
+                            }
                             start_prefix_fill(
                                 fresh,
                                 req,
@@ -861,6 +1182,7 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                                 &active_decodes,
                                 &pool,
                                 &tx,
+                                &faults,
                             );
                         }
                         Route::Partial { src, covered } => {
@@ -870,14 +1192,20 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                             // suffix on a worker; branches queue on the
                             // new holder exactly like a fresh ingest
                             holder_clock += 1;
-                            let src_holder = holders.get_mut(&src).unwrap();
-                            src_holder.last_used = holder_clock;
                             let last_tok = req.prompt[covered - 1];
-                            let forked = src_holder
-                                .session
-                                .as_ref()
-                                .unwrap()
-                                .fork_prefix(req.id, covered, last_tok);
+                            let forked = match holders.get_mut(&src) {
+                                Some(h) => match h.session.as_ref() {
+                                    Some(s) => {
+                                        h.last_used = holder_clock;
+                                        s.fork_prefix(req.id, covered, last_tok)
+                                    }
+                                    // routed as Partial but no parked
+                                    // session (defensive): same fallback as
+                                    // a vanished sequence
+                                    None => Err(DecodeError::Kv(KvError::UnknownSeq(req.id))),
+                                },
+                                None => Err(DecodeError::Kv(KvError::UnknownSeq(req.id))),
+                            };
                             match forked {
                                 Ok(session) => {
                                     metrics
@@ -901,14 +1229,16 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                                         &active_decodes,
                                         &pool,
                                         &tx,
+                                        &faults,
                                     );
                                 }
                                 Err(DecodeError::Kv(KvError::UnknownSeq(_))) => {
                                     // holder pages vanished between the
                                     // freshness check and the fork: retire
                                     // it and fall back to a full ingest
-                                    let stale = holders.remove(&src).unwrap();
-                                    tables.remove(src, &stale.prompt);
+                                    if let Some(stale) = holders.remove(&src) {
+                                        tables.remove(src, &stale.prompt);
+                                    }
                                     start_prefix_fill(
                                         req.id,
                                         req,
@@ -924,6 +1254,7 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                                         &active_decodes,
                                         &pool,
                                         &tx,
+                                        &faults,
                                     );
                                 }
                                 Err(e) => {
@@ -931,7 +1262,7 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                                     for spec in specs {
                                         fail_branch(
                                             spec,
-                                            msg.clone(),
+                                            anyhow!(msg.clone()),
                                             &metrics,
                                             &admission,
                                             &active_decodes,
@@ -955,58 +1286,99 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                             &active_decodes,
                             &pool,
                             &tx,
+                            &faults,
                         ),
                     }
                 }
                 Msg::PrefixFilled { key, session } => {
-                    if !holders.contains_key(&key) {
-                        // holder retired while filling; dropping `session`
-                        // (if Ok) closes the seq and frees its pages
-                        continue;
-                    }
                     match session {
                         Ok(sess) => {
-                            let holder = holders.get_mut(&key).unwrap();
-                            let specs = std::mem::take(&mut holder.waiting);
-                            let bounced = launch_branches(
-                                &sess,
-                                specs,
-                                &tasks,
-                                &mut batcher,
-                                &metrics,
-                                &admission,
-                                &active_decodes,
-                            );
-                            // the holder is still pinned here, so its seq
-                            // cannot have been evicted mid-fork
-                            for spec in bounced {
-                                fail_branch(
-                                    spec,
-                                    "prefix vanished during ingest".into(),
+                            if let Some(holder) = holders.get_mut(&key) {
+                                let specs = std::mem::take(&mut holder.waiting);
+                                let bounced = launch_branches(
+                                    &sess,
+                                    specs,
+                                    &tasks,
+                                    &mut batcher,
                                     &metrics,
                                     &admission,
                                     &active_decodes,
                                 );
+                                // the holder is still pinned here, so its
+                                // seq cannot have been evicted mid-fork
+                                for spec in bounced {
+                                    fail_branch(
+                                        spec,
+                                        anyhow!("prefix vanished during ingest"),
+                                        &metrics,
+                                        &admission,
+                                        &active_decodes,
+                                    );
+                                }
+                                // park unpinned: the cached prefix yields
+                                // to live traffic under page pressure
+                                // (forks re-pin themselves)
+                                let _ = sess.unpin();
+                                holder.session = Some(*sess);
                             }
-                            // park unpinned: the cached prefix yields to
-                            // live traffic under page pressure (forks
-                            // re-pin themselves)
-                            let _ = sess.unpin();
-                            holder.session = Some(*sess);
+                            // else: holder retired while filling; dropping
+                            // `sess` closes the seq and frees its pages
                         }
                         Err(msg) => {
-                            let holder = holders.remove(&key).unwrap();
-                            tables.remove(key, &holder.prompt);
-                            for spec in holder.waiting {
-                                fail_branch(spec, msg.clone(), &metrics, &admission, &active_decodes);
+                            if let Some(holder) = holders.remove(&key) {
+                                tables.remove(key, &holder.prompt);
+                                for spec in holder.waiting {
+                                    fail_branch(
+                                        spec,
+                                        anyhow!(msg.clone()),
+                                        &metrics,
+                                        &admission,
+                                        &active_decodes,
+                                    );
+                                }
                             }
                         }
                     }
-                    retire_excess_holders(&mut holders, tables, &kv);
+                    retire_excess_holders(
+                        &mut holders,
+                        tables,
+                        &kv,
+                        degrader.holder_cap(MAX_PREFIX_HOLDERS),
+                    );
                 }
                 Msg::DecodeReady(seq, tokens) => {
                     batcher.push_decode(DecodeStep { seq, tokens, enqueued: Instant::now() });
                 }
+            }
+        }
+
+        // 1.5 evaluate the degradation ladder on its cadence (the
+        // Degrader rate-limits itself too, but tracking the shed delta
+        // needs a dispatcher-side window so deltas are only consumed by
+        // evaluations that actually run)
+        if degrade_last_eval.elapsed() >= degrade_every {
+            let now = Instant::now();
+            let shed_total = metrics.rejected.load(Ordering::Relaxed)
+                + metrics.shed_deadline.load(Ordering::Relaxed);
+            let before = degrader.level();
+            let level = degrader.observe(
+                now,
+                kv.occupancy().2,
+                shed_total.saturating_sub(degrade_last_shed),
+            );
+            degrade_last_eval = now;
+            degrade_last_shed = shed_total;
+            metrics.degradation_level.store(level as u64, Ordering::Relaxed);
+            if level != before {
+                metrics.degradation_transitions.fetch_add(1, Ordering::Relaxed);
+                // stepping past level 2 shrinks the holder cap: retire
+                // parked prefixes early so their pages free up
+                retire_excess_holders(
+                    &mut holders,
+                    tables,
+                    &kv,
+                    degrader.holder_cap(MAX_PREFIX_HOLDERS),
+                );
             }
         }
 
@@ -1028,15 +1400,56 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                 AnyBatch::Prefill(batch) => {
                     metrics.batches.fetch_add(1, Ordering::Relaxed);
                     for req in batch.requests {
-                        let ch = channels.remove(&req.id).unwrap();
-                        let engine = Arc::clone(&engine);
+                        let bucket = batch.key.bucket;
+                        let Some(ch) = channels.remove(&req.id) else {
+                            // channel lost (logic bug): keep the admission
+                            // counters balanced and move on
+                            metrics.record_error(format!(
+                                "no response channel for request {}",
+                                req.id
+                            ));
+                            admission.release(bucket);
+                            continue;
+                        };
+                        if req.deadline.is_some_and(|d| now >= d) {
+                            // queued past its deadline: shed instead of
+                            // burning a worker on an answer nobody wants
+                            metrics.shed_deadline.fetch_add(1, Ordering::Relaxed);
+                            admission.release(bucket);
+                            let _ =
+                                ch.send(Err(anyhow::Error::new(ServeError::DeadlineExceeded)));
+                            continue;
+                        }
+                        let backend = Arc::clone(&backend);
                         let metrics = Arc::clone(&metrics);
                         let admission = Arc::clone(&admission);
                         let kv = Arc::clone(&kv);
-                        let bucket = batch.key.bucket;
+                        let faults = faults.clone();
                         let kind = batch.key.kind;
                         pool.submit(move || {
-                            let out = execute_one(&engine, &kv, kind, bucket, &req);
+                            if let Some(f) = &faults {
+                                f.maybe_stall();
+                            }
+                            // panic isolation: a panicking execution (real
+                            // or injected downstream) becomes a typed
+                            // per-request error; the pages are reclaimed
+                            // and the worker serves the next item
+                            let out = catch_unwind(AssertUnwindSafe(|| {
+                                execute_one(
+                                    backend.as_ref(),
+                                    &kv,
+                                    kind,
+                                    bucket,
+                                    &req,
+                                    faults.as_deref(),
+                                )
+                            }))
+                            .unwrap_or_else(|_| {
+                                metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+                                let _ = kv.release(req.id);
+                                let _ = kv.drop_seq(req.id);
+                                Err(anyhow::Error::new(ServeError::WorkerPanic))
+                            });
                             match &out {
                                 Ok(resp) => {
                                     metrics.completed.fetch_add(1, Ordering::Relaxed);
@@ -1067,9 +1480,21 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                         let admission = Arc::clone(&admission);
                         let tasks = Arc::clone(&tasks);
                         let active = Arc::clone(&active_decodes);
+                        let faults = faults.clone();
                         let tx = tx.clone();
                         pool.submit(move || {
-                            run_decode_step(step.seq, &tasks, &metrics, &admission, &active, &tx);
+                            if let Some(f) = &faults {
+                                f.maybe_stall();
+                            }
+                            run_decode_step(
+                                step.seq,
+                                &tasks,
+                                &metrics,
+                                &admission,
+                                &active,
+                                &tx,
+                                faults.as_deref(),
+                            );
                         });
                     }
                 }
@@ -1091,23 +1516,50 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
 /// channel, and retire it from the active count.
 fn fail_branch(
     spec: BranchSpec,
-    msg: String,
+    err: anyhow::Error,
     metrics: &Arc<Metrics>,
     admission: &Arc<Admission>,
     active: &Arc<AtomicUsize>,
 ) {
-    metrics.record_error(msg.clone());
+    metrics.record_error(err.to_string());
     admission.release_work(spec.admit.tokens, spec.admit.ns);
-    let _ = spec.ch.send(Err(anyhow!(msg)));
+    let _ = spec.ch.send(Err(err));
+    active.fetch_sub(1, Ordering::SeqCst);
+}
+
+/// Answer a branch that terminated before its first decode step (cancel
+/// or deadline caught at launch) with an empty, typed partial result.
+fn answer_unstarted(
+    spec: BranchSpec,
+    finish: Finish,
+    admission: &Arc<Admission>,
+    active: &Arc<AtomicUsize>,
+) {
+    let resp = GenerateResponse {
+        id: spec.seq,
+        tokens: Vec::new(),
+        n_prompt: spec.n_prompt,
+        steps: 0,
+        mean_budget_fraction: 0.0,
+        dense_steps: 0,
+        queue_us: spec.enqueued.elapsed().as_micros() as u64,
+        exec_us: 0,
+        ns_per_token: 0.0,
+        finish,
+    };
+    admission.release_work(spec.admit.tokens, spec.admit.ns);
+    let _ = spec.ch.send(Ok(resp));
     active.fetch_sub(1, Ordering::SeqCst);
 }
 
 /// Fork every branch off the (prefilled) holder session and push their
-/// first decode steps into the lane as one sibling group. Returns the
-/// specs whose fork found the holder's sequence *gone* — a parked,
-/// unpinned holder can be LRU-evicted by a concurrent worker between
-/// the dispatcher's freshness check and the fork — so the caller can
-/// fall back to a fresh ingest instead of failing the request.
+/// first decode steps into the lane as one sibling group. Branches
+/// whose cancel flag or deadline already fired are answered here
+/// without forking. Returns the specs whose fork found the holder's
+/// sequence *gone* — a parked, unpinned holder can be LRU-evicted by a
+/// concurrent worker between the dispatcher's freshness check and the
+/// fork — so the caller can fall back to a fresh ingest instead of
+/// failing the request.
 fn launch_branches(
     holder: &DecodeSession,
     specs: Vec<BranchSpec>,
@@ -1120,6 +1572,24 @@ fn launch_branches(
     let mut steps = Vec::with_capacity(specs.len());
     let mut bounced = Vec::new();
     for spec in specs {
+        if spec.cancel.load(Ordering::SeqCst) {
+            // abandoned before its first step: reap without forking
+            metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+            answer_unstarted(spec, Finish::Cancelled, admission, active);
+            continue;
+        }
+        if spec.deadline.is_some_and(|d| Instant::now() >= d) {
+            // deadline passed while queued on the holder: typed shed
+            metrics.shed_deadline.fetch_add(1, Ordering::Relaxed);
+            fail_branch(
+                spec,
+                anyhow::Error::new(ServeError::DeadlineExceeded),
+                metrics,
+                admission,
+                active,
+            );
+            continue;
+        }
         match holder.fork(spec.seq) {
             Ok(mut session) => {
                 session.set_policy(spec.policy);
@@ -1134,8 +1604,10 @@ fn launch_branches(
                     first_step_at: None,
                     admit_tokens: spec.admit.tokens,
                     admit_ns: spec.admit.ns,
+                    cancel: spec.cancel,
+                    deadline: spec.deadline,
                 };
-                tasks.lock().unwrap().insert(spec.seq, task);
+                lock_tasks(tasks).insert(spec.seq, task);
                 steps.push(DecodeStep {
                     seq: spec.seq,
                     tokens: spec.policy.spec_gamma + 1,
@@ -1145,7 +1617,7 @@ fn launch_branches(
             Err(DecodeError::Kv(KvError::UnknownSeq(_))) => bounced.push(spec),
             Err(e) => fail_branch(
                 spec,
-                format!("prefix fork failed: {e}"),
+                anyhow!("prefix fork failed: {e}"),
                 metrics,
                 admission,
                 active,
@@ -1163,7 +1635,9 @@ fn launch_branches(
 /// `base` is `None` for a full ingest (counted as a prefix miss) or
 /// `Some((forked_session, covered))` when the leading `covered` tokens
 /// were already forked off a matched holder and only the remaining
-/// suffix needs projecting.
+/// suffix needs projecting. A panic during the ingest is isolated: the
+/// holder fails like any ingest error and its waiting branches get
+/// typed errors instead of hanging.
 #[allow(clippy::too_many_arguments)]
 fn start_prefix_fill(
     key: u64,
@@ -1180,6 +1654,7 @@ fn start_prefix_fill(
     active: &Arc<AtomicUsize>,
     pool: &ThreadPool,
     tx: &mpsc::Sender<Msg>,
+    faults: &Option<Arc<FaultPlan>>,
 ) {
     // `mut`: the move closure below ingests through `&mut self`
     let (mut session, covered) = match base {
@@ -1189,9 +1664,11 @@ fn start_prefix_fill(
             match DecodeSession::new(Arc::clone(kv), Arc::clone(model), req.policy, req.id) {
                 Ok(s) => (s, 0),
                 Err(e) => {
+                    // KvAlloc fault injection surfaces here too: the
+                    // whole group fails with the allocation error
                     let msg = format!("kv allocation failed: {e}");
                     for spec in specs {
-                        fail_branch(spec, msg.clone(), metrics, admission, active);
+                        fail_branch(spec, anyhow!(msg.clone()), metrics, admission, active);
                     }
                     return;
                 }
@@ -1211,33 +1688,51 @@ fn start_prefix_fill(
     );
     tables.insert(key, &req.prompt);
     let suffix: Vec<i32> = req.prompt[covered..].to_vec();
+    let n_suffix = suffix.len();
     let metrics = Arc::clone(metrics);
+    let faults = faults.clone();
     let tx = tx.clone();
     pool.submit(move || {
-        let res = match session.extend_prompt(&suffix) {
-            Ok(()) => {
-                metrics.tokens_in.fetch_add(suffix.len() as u64, Ordering::Relaxed);
+        if let Some(f) = &faults {
+            f.maybe_stall();
+        }
+        // panic isolation: the PrefixFilled message MUST reach the
+        // dispatcher either way, or the holder would sit mid-ingest
+        // forever with branches queued on it. An unwinding panic drops
+        // the moved-in session, freeing its pages.
+        let res = match catch_unwind(AssertUnwindSafe(move || {
+            session.extend_prompt(&suffix).map(|()| session)
+        })) {
+            Ok(Ok(session)) => {
+                metrics.tokens_in.fetch_add(n_suffix as u64, Ordering::Relaxed);
                 Ok(Box::new(session))
             }
-            Err(e) => Err(format!("prompt ingest failed: {e}")),
+            Ok(Err(e)) => Err(format!("prompt ingest failed: {e}")),
+            Err(_) => {
+                metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+                Err("worker panicked during prompt ingest".to_string())
+            }
         };
         let _ = tx.send(Msg::PrefixFilled { key, session: res });
     });
 }
 
-/// Retire parked holders beyond [`MAX_PREFIX_HOLDERS`] (never one
-/// mid-ingest or with branches still waiting). Victim selection is
-/// LCP-aware, not blind LRU: the holder with the lowest covered-tokens ×
-/// refcount weight ([`SharedKv::seq_weight`]) goes first — an evicted or
-/// short, unshared prefix before a long, heavily-forked one — with the
-/// LRU clock as the tie-break. Dropping the session frees the prefix
-/// pages not shared with live forks.
+/// Retire parked holders beyond `cap` (never one mid-ingest or with
+/// branches still waiting). The cap is [`MAX_PREFIX_HOLDERS`] at full
+/// service, shrunk by the degradation ladder under pressure
+/// ([`Degrader::holder_cap`]). Victim selection is LCP-aware, not blind
+/// LRU: the holder with the lowest covered-tokens × refcount weight
+/// ([`SharedKv::seq_weight`]) goes first — an evicted or short,
+/// unshared prefix before a long, heavily-forked one — with the LRU
+/// clock as the tie-break. Dropping the session frees the prefix pages
+/// not shared with live forks.
 fn retire_excess_holders(
     holders: &mut HashMap<u64, Holder>,
     tables: PrefixTables<'_>,
     kv: &SharedKv,
+    cap: usize,
 ) {
-    while holders.len() > MAX_PREFIX_HOLDERS {
+    while holders.len() > cap {
         let victim = holders
             .iter()
             .filter(|(_, h)| h.session.is_some() && h.waiting.is_empty())
@@ -1245,8 +1740,9 @@ fn retire_excess_holders(
             .map(|(&k, _)| k);
         match victim {
             Some(k) => {
-                let h = holders.remove(&k).unwrap();
-                tables.remove(k, &h.prompt);
+                if let Some(h) = holders.remove(&k) {
+                    tables.remove(k, &h.prompt);
+                }
             }
             None => break,
         }
@@ -1259,6 +1755,14 @@ fn retire_excess_holders(
 /// step. Either way the generation occupies exactly one decode-lane slot
 /// per round, so fork fan-out siblings keep batching together whether or
 /// not they speculate.
+///
+/// Failure handling, all while the task is exclusively owned (out of
+/// the map): a raised cancel flag or passed deadline completes the
+/// branch with its partial tokens ([`Finish::Cancelled`] /
+/// [`Finish::DeadlineExceeded`]); a panic inside the step (real or
+/// injected) is caught and becomes [`ServeError::WorkerPanic`] with the
+/// same admission/active cleanup — dropping the task frees the branch's
+/// KV pages either way.
 fn run_decode_step(
     seq: u64,
     tasks: &DecodeTasks,
@@ -1266,8 +1770,9 @@ fn run_decode_step(
     admission: &Arc<Admission>,
     active: &Arc<AtomicUsize>,
     tx: &mpsc::Sender<Msg>,
+    faults: Option<&FaultPlan>,
 ) {
-    let Some(mut task) = tasks.lock().unwrap().remove(&seq) else {
+    let Some(mut task) = lock_tasks(tasks).remove(&seq) else {
         return; // task vanished (completed with an error elsewhere)
     };
     let finish = |task: DecodeTask, out: Result<GenerateResponse>| {
@@ -1280,27 +1785,62 @@ fn run_decode_step(
         let _ = task.ch.send(out);
         active.fetch_sub(1, Ordering::SeqCst);
     };
+    if task.cancel.load(Ordering::SeqCst) {
+        // client cancelled (or abandoned the ticket): return the tokens
+        // generated so far; dropping the task frees its pages
+        metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+        let mut resp = generate_response(seq, &mut task);
+        resp.finish = Finish::Cancelled;
+        finish(task, Ok(resp));
+        return;
+    }
+    if task.deadline.is_some_and(|d| Instant::now() >= d) {
+        metrics.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+        let mut resp = generate_response(seq, &mut task);
+        resp.finish = Finish::DeadlineExceeded;
+        finish(task, Ok(resp));
+        return;
+    }
     if task.first_step_at.is_none() {
         task.first_step_at = Some(Instant::now());
     }
     let gamma = task.session.policy().spec_gamma;
-    let stepped: Result<(Vec<StepInfo>, bool), DecodeError> = if gamma >= 1 {
-        let remaining = task.max_new.saturating_sub(task.tokens.len()).max(1);
-        task.session.spec_round(gamma.min(remaining), remaining, Some(vocab::END), |_| true).map(
-            |round| {
-                metrics.record_spec_round(
-                    round.drafted as u64,
-                    round.accepted as u64,
-                    round.infos.len() as u64,
-                );
-                (round.infos, round.halt)
-            },
-        )
-    } else {
-        task.session.step_once().map(|info| {
-            let halt = info.token == vocab::END;
-            (vec![info], halt)
-        })
+    // panic isolation: the session steps inside catch_unwind while the
+    // task is owned by this worker, so a panic (injected DecodeStep
+    // faults included) unwinds into a per-branch WorkerPanic error with
+    // full cleanup instead of poisoning the serving stack
+    let caught = catch_unwind(AssertUnwindSafe(|| {
+        if let Some(f) = faults {
+            if f.should_fire(FaultPoint::DecodeStep) {
+                panic!("injected decode-step fault (chaos)");
+            }
+        }
+        if gamma >= 1 {
+            let remaining = task.max_new.saturating_sub(task.tokens.len()).max(1);
+            task.session
+                .spec_round(gamma.min(remaining), remaining, Some(vocab::END), |_| true)
+                .map(|round| {
+                    metrics.record_spec_round(
+                        round.drafted as u64,
+                        round.accepted as u64,
+                        round.infos.len() as u64,
+                    );
+                    (round.infos, round.halt)
+                })
+        } else {
+            task.session.step_once().map(|info| {
+                let halt = info.token == vocab::END;
+                (vec![info], halt)
+            })
+        }
+    }));
+    let stepped: Result<(Vec<StepInfo>, bool), DecodeError> = match caught {
+        Ok(r) => r,
+        Err(_) => {
+            metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+            finish(task, Err(anyhow::Error::new(ServeError::WorkerPanic)));
+            return;
+        }
     };
     match stepped {
         Ok((infos, halt)) => {
@@ -1317,11 +1857,11 @@ fn run_decode_step(
                 let resp = generate_response(seq, &mut task);
                 finish(task, Ok(resp));
             } else {
-                tasks.lock().unwrap().insert(seq, task);
+                lock_tasks(tasks).insert(seq, task);
                 if tx.send(Msg::DecodeReady(seq, gamma + 1)).is_err() {
                     // dispatcher gone: complete what we have so the
                     // caller is not left hanging
-                    if let Some(mut task) = tasks.lock().unwrap().remove(&seq) {
+                    if let Some(mut task) = lock_tasks(tasks).remove(&seq) {
                         let resp = generate_response(seq, &mut task);
                         finish(task, Ok(resp));
                     }
@@ -1333,8 +1873,9 @@ fn run_decode_step(
 }
 
 /// Assemble the final [`GenerateResponse`] from a task's accumulated
-/// state (single construction point for the done and dispatcher-gone
-/// paths). `exec_us` is the *summed step execution time* from the
+/// state (single construction point for the done, cancelled, deadline
+/// and dispatcher-gone paths — callers override `finish` for partial
+/// outcomes). `exec_us` is the *summed step execution time* from the
 /// session's own clocks; scheduling gaps between steps show up in
 /// end-to-end wall time, not here.
 fn generate_response(seq: u64, task: &mut DecodeTask) -> GenerateResponse {
@@ -1353,15 +1894,17 @@ fn generate_response(seq: u64, task: &mut DecodeTask) -> GenerateResponse {
         queue_us,
         exec_us: task.session.decode_ns() / 1_000,
         ns_per_token: task.session.decode_ns() as f64 / steps.max(1) as f64,
+        finish: Finish::Complete,
     }
 }
 
 fn execute_one(
-    engine: &Engine,
+    backend: &dyn PrefillBackend,
     kv: &SharedKv,
     kind: &'static str,
     bucket: usize,
     req: &PrefillRequest,
+    faults: Option<&FaultPlan>,
 ) -> Result<PrefillResponse> {
     let queue_us = req.enqueued.elapsed().as_micros() as u64;
     // KV pages for the prefilled sequence. Pure-prefill requests read the
@@ -1371,7 +1914,14 @@ fn execute_one(
     let mut ids = req.ids.clone();
     ids.resize(bucket, vocab::PAD);
     let t0 = Instant::now();
-    let result = engine.prefill(&req.checkpoint, kind, bucket, &ids, &req.method.scalars());
+    // EngineExec injection point: an injected failure takes the exact
+    // error path a real execution failure would, cleanup included
+    let result = match faults {
+        Some(f) if f.should_fire(FaultPoint::EngineExec) => {
+            Err(anyhow!("injected engine-execution fault (chaos)"))
+        }
+        _ => backend.prefill(&req.checkpoint, kind, bucket, &ids, &req.method.scalars()),
+    };
     let exec_us = t0.elapsed().as_micros() as u64;
     let _ = kv.release(req.id);
     let _ = kv.drop_seq(req.id);
@@ -1392,6 +1942,7 @@ fn execute_one(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::SyntheticEngine;
 
     #[test]
     fn prompt_hash_distinguishes_prompts_not_order_of_calls() {
@@ -1402,4 +1953,99 @@ mod tests {
         assert_ne!(prompt_hash(&[]), prompt_hash(&[0]));
     }
 
+    fn tiny_coordinator() -> Coordinator {
+        let backend = Arc::new(SyntheticEngine::new(&[64, 128]));
+        Coordinator::with_backend(
+            backend,
+            CoordinatorConfig {
+                workers: 2,
+                kv_pages: 256,
+                faults: None,
+                ..CoordinatorConfig::default()
+            },
+        )
+    }
+
+    #[test]
+    fn synthetic_backend_serves_prefill_and_generate() {
+        let coord = tiny_coordinator();
+        assert!(coord.engine().is_none(), "synthetic backend has no PJRT engine");
+        let resp = coord
+            .prefill_blocking(
+                "tiny",
+                Method::Stem { k_start: 4.0, mu: 0.7, beta: 0.2 },
+                vec![1, 2, 3],
+                false,
+            )
+            .expect("synthetic prefill");
+        assert_eq!(resp.n_input, 3);
+        let gen = coord
+            .generate_blocking(vec![1, 2, 3, 4], 4, DecodePolicy::default())
+            .expect("synthetic generate");
+        assert_eq!(gen.finish, Finish::Complete);
+        assert!(!gen.tokens.is_empty());
+    }
+
+    #[test]
+    fn expired_deadline_sheds_with_typed_error() {
+        let coord = tiny_coordinator();
+        let past = Instant::now() - Duration::from_millis(5);
+        let mut tickets = coord
+            .submit_generate_tickets(vec![1, 2, 3], 8, DecodePolicy::default(), 2, Some(past))
+            .expect("admission accepts; the shed happens at dispatch");
+        for t in &mut tickets {
+            let err = t.recv().expect_err("expired deadline must not produce tokens");
+            assert_eq!(
+                err.downcast_ref::<ServeError>(),
+                Some(&ServeError::DeadlineExceeded),
+                "typed shed, got: {err}"
+            );
+        }
+        assert!(coord.metrics.shed_deadline.load(Ordering::Relaxed) >= 2);
+    }
+
+    #[test]
+    fn dropped_ticket_cancels_and_releases_everything() {
+        let coord = tiny_coordinator();
+        let admission = Arc::clone(coord.admission());
+        let kv = Arc::clone(coord.shared_kv());
+        // long generations the client abandons immediately
+        let tickets = coord
+            .submit_generate_tickets(vec![1, 2, 3, 4, 5], 5_000, DecodePolicy::default(), 2, None)
+            .expect("submit");
+        drop(tickets); // abandonment: raises every branch's cancel flag
+        // the reap happens at each branch's next decode step
+        let t0 = Instant::now();
+        while admission.outstanding() != (0, 0) {
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "abandoned branches must release admission, still at {:?}",
+                admission.outstanding()
+            );
+            thread::sleep(Duration::from_millis(2));
+        }
+        assert!(coord.metrics.cancelled.load(Ordering::Relaxed) >= 2, "both branches reaped");
+        drop(coord);
+        let (used, _, _) = kv.occupancy();
+        assert_eq!(used, 0, "no leaked KV pages after drain");
+    }
+
+    #[test]
+    fn cancel_handle_stops_decode_with_partial_result() {
+        let coord = tiny_coordinator();
+        // long prompt: its worker-side ingest gives the immediate cancel
+        // below a deterministic head start over the branch launch
+        let prompt: Vec<i32> = (0..1024).map(|i| 20 + (i % 64) as i32).collect();
+        let mut tickets = coord
+            .submit_generate_tickets(prompt, 64, DecodePolicy::default(), 1, None)
+            .expect("submit");
+        let mut ticket = tickets.pop().expect("one branch");
+        let handle = ticket.cancel_handle();
+        handle.cancel();
+        assert!(handle.is_cancelled());
+        let resp =
+            ticket.recv_timeout(Duration::from_secs(10)).expect("cancelled branch still answers");
+        assert_eq!(resp.finish, Finish::Cancelled);
+        assert!(resp.tokens.len() < 64, "stopped before the length cap");
+    }
 }

@@ -26,10 +26,11 @@
 //! opposite direction, so the pair cannot deadlock.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 use crate::coordinator::kv_cache::{Append, KvCache, KvConfig, KvError};
 use crate::sparse::KvBlocks;
+use crate::util::fault::{FaultPlan, FaultPoint};
 
 /// Per-page K/V slab map addressed by [`KvCache`] page ids (see module
 /// docs for the identity/payload split).
@@ -147,6 +148,7 @@ pub struct SharedKv {
     dh: usize,
     pool: Mutex<KvCache>,
     slabs: RwLock<PagedKv>,
+    faults: OnceLock<Arc<FaultPlan>>,
 }
 
 impl SharedKv {
@@ -160,7 +162,16 @@ impl SharedKv {
             dh,
             slabs: RwLock::new(PagedKv::new(page_tokens, hk, dh)),
             pool: Mutex::new(KvCache::new(cfg)),
+            faults: OnceLock::new(),
         })
+    }
+
+    /// Arm deterministic fault injection on this store (chaos testing):
+    /// page allocations consult the plan's [`FaultPoint::KvAlloc`] stream
+    /// and fail with [`KvError::Injected`] when it fires. Write-once; a
+    /// second call is ignored. Costs one branch per allocate when unset.
+    pub fn set_fault_plan(&self, plan: Arc<FaultPlan>) {
+        let _ = self.faults.set(plan);
     }
 
     /// Tokens per page.
@@ -217,6 +228,11 @@ impl SharedKv {
 
     /// Pool `allocate` + slab GC; returns the new page table.
     pub fn allocate(&self, seq: u64, n_tokens: usize) -> Result<Vec<u32>, KvError> {
+        if let Some(f) = self.faults.get() {
+            if f.should_fire(FaultPoint::KvAlloc) {
+                return Err(KvError::Injected);
+            }
+        }
         let mut pool = self.pool()?;
         let res = pool.allocate(seq, n_tokens).map(<[u32]>::to_vec);
         let freed = pool.take_freed();

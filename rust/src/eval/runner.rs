@@ -102,7 +102,7 @@ impl Evaluator {
     }
 
     fn samples_for(&self, suite: &str, family: &str, n_ctx: usize) -> Result<Vec<EvalSample>> {
-        let man = self.coordinator.engine().manifest();
+        let man = self.coordinator.manifest();
         let info = man
             .eval_sets
             .iter()
@@ -125,7 +125,7 @@ impl Evaluator {
         families: &[&str],
         buckets: &[usize],
     ) -> Result<EvalOutcome> {
-        let man = self.coordinator.engine().manifest();
+        let man = self.coordinator.manifest();
         let mut cells = BTreeMap::new();
         for &n_ctx in buckets {
             let defaults = man.defaults_for(n_ctx)?.clone();

@@ -64,7 +64,7 @@ pub fn diag_loss(
 ) -> Result<DiagLoss> {
     let dense = coord.prefill_blocking(checkpoint, Method::Dense, ids.to_vec(), true)?;
     let sparse = coord.prefill_blocking(checkpoint, method, ids.to_vec(), true)?;
-    let man = coord.engine().manifest();
+    let man = coord.manifest();
     let (l, n, d) = (man.model.n_layers, dense.n_ctx, man.model.d_model);
     let dh = dense.hidden.as_ref().ok_or_else(|| anyhow!("dense diag returned no hidden"))?;
     let sh = sparse.hidden.as_ref().ok_or_else(|| anyhow!("sparse diag returned no hidden"))?;
@@ -85,7 +85,7 @@ pub fn diag_loss(
 /// depths plus the head-logit loss, averaged over `limit` samples of the
 /// `syn` family at the largest diag bucket.
 pub fn table1(coord: &Arc<Coordinator>, limit: usize) -> Result<String> {
-    let man = coord.engine().manifest();
+    let man = coord.manifest();
     let n_ctx = man
         .modules
         .iter()
@@ -336,7 +336,7 @@ pub fn figure1() -> String {
 /// Figure 3: sparsify one query-block segment at a time (fixed budget and
 /// dynamic ratio arms) and report head-logit MSE vs the segment position.
 pub fn figure3(coord: &Arc<Coordinator>, limit: usize) -> Result<String> {
-    let man = coord.engine().manifest();
+    let man = coord.manifest();
     let n_ctx = man
         .modules
         .iter()
@@ -419,7 +419,7 @@ pub fn figure3(coord: &Arc<Coordinator>, limit: usize) -> Result<String> {
 /// sink/local floors clamp every μ to the same budget — the small-scale
 /// analogue of the paper's 54-block minimum).
 pub fn figure5(ev: &Evaluator, buckets: &[usize]) -> Result<String> {
-    let man = ev.coordinator.engine().manifest();
+    let man = ev.coordinator.manifest();
     let mut out = String::new();
 
     // μ sweep (β fixed at default)

@@ -19,7 +19,7 @@
 
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -39,7 +39,7 @@ stem — Stem sparse-attention serving system (paper reproduction)
 USAGE: stem <subcommand> [flags]
 
   serve     [--requests N] [--rps R] [--method stem|dense|...] [--mix]
-            [--prefix-mode exact|radix]
+            [--prefix-mode exact|radix] [--deadline-ms MS]
   generate  [--prompt 1,16,17 | --prompt-len N] [--max-new N] [--dense]
             [--fanout N] [--spec N] [--k-start K] [--mu MU] [--sink S]
             [--recent R] [--dense-below TOKENS] [--block B] [--pages P]
@@ -59,7 +59,11 @@ flags: --artifacts DIR  --workers N  --threads N  --limit N  --quiet
        --prefix-mode exact|radix  (how the coordinator matches cached
        prompt prefixes: byte-identical prompts only, or token-granular
        longest-common-prefix reuse with partial-page forks; default radix)
-       (--threads / STEM_THREADS size the pure-rust sparse-core pool)
+       --deadline-ms MS  (serve: per-request TTL — queued work past it is
+       shed with a typed error instead of executed; default none)
+       (--threads / STEM_THREADS size the pure-rust sparse-core pool;
+       STEM_FAULTS=seed=S,kv=R,exec=R,step=R,stall=R,stall_us=U arms
+       deterministic fault injection in the coordinator for chaos runs)
 ";
 
 fn main() {
@@ -169,11 +173,16 @@ fn run(args: &Args) -> Result<()> {
 /// examples/serve_longcontext.rs).
 fn serve(args: &Args) -> Result<()> {
     let (coord, _) = boot(args)?;
-    let man = coord.engine().manifest().clone();
+    let man = coord.manifest().clone();
     let n_requests = args.usize_or("requests", 64);
     let rps = args.f64_or("rps", 8.0);
     let method_name = args.str_or("method", "stem");
     let mix = args.flag("mix");
+    // --deadline-ms: per-request TTL measured from submission
+    let deadline_ms: Option<u64> = match args.get("deadline-ms") {
+        Some(v) => Some(v.parse().map_err(|_| anyhow!("--deadline-ms must be an integer"))?),
+        None => None,
+    };
 
     // sample pool: every longbench eval set, mixed families and lengths
     let mut pool = vec![];
@@ -207,23 +216,36 @@ fn serve(args: &Args) -> Result<()> {
         } else {
             Evaluator::method_for(&method_name, defaults)
         };
-        match coord.submit("base", method, sample.ids.clone(), false) {
+        let deadline = deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+        match coord.submit_with_deadline("base", method, sample.ids.clone(), false, deadline) {
             Ok(rx) => rxs.push((rx, item.sample)),
             Err(e) => eprintln!("[stem:serve] rejected: {e}"),
         }
     }
     let mut ok = 0usize;
     let mut em = 0usize;
+    let mut shed = 0usize;
     for (rx, si) in rxs {
-        let resp = rx.recv().map_err(|_| anyhow!("response channel closed"))??;
-        let score = stem::eval::score_sample(&resp, &pool[si]);
-        ok += 1;
-        em += score.exact_match as usize;
+        match rx.recv().map_err(|_| anyhow!("response channel closed"))? {
+            Ok(resp) => {
+                let score = stem::eval::score_sample(&resp, &pool[si]);
+                ok += 1;
+                em += score.exact_match as usize;
+            }
+            // deadline sheds are an expected outcome under --deadline-ms,
+            // not a driver failure
+            Err(e) => {
+                shed += 1;
+                if deadline_ms.is_none() {
+                    eprintln!("[stem:serve] failed: {e}");
+                }
+            }
+        }
     }
     let wall = start.elapsed();
     println!("{}", coord.report());
     println!(
-        "served {ok}/{n_requests} requests in {:.2}s ({:.1} req/s), exact-match {:.1}%",
+        "served {ok}/{n_requests} requests ({shed} shed) in {:.2}s ({:.1} req/s), exact-match {:.1}%",
         wall.as_secs_f64(),
         ok as f64 / wall.as_secs_f64(),
         100.0 * em as f64 / ok.max(1) as f64
@@ -242,7 +264,11 @@ fn pre_warm(coord: &Arc<Coordinator>, method: &str) -> Result<()> {
     };
     let kinds: Vec<&str> =
         if method == "dense" { vec!["prefill_dense"] } else { vec!["prefill_dense", sparse_kind] };
-    coord.engine().warmup(&kinds, &[512, 1024, 2048])
+    match coord.engine() {
+        Some(engine) => engine.warmup(&kinds, &[512, 1024, 2048]),
+        // synthetic backends have nothing to JIT
+        None => Ok(()),
+    }
 }
 
 /// `stem generate`: stream tokens from a decode session against the

@@ -24,6 +24,44 @@ pub enum ScalarValue {
     I32(i32),
 }
 
+/// A prefill executor the coordinator can serve from: the PJRT
+/// [`Engine`] in production, the artifact-free
+/// [`crate::runtime::SyntheticEngine`] in chaos tests and benches. The
+/// trait covers exactly what the serving path touches — the manifest
+/// (geometry, buckets) and prefill execution; everything engine-specific
+/// (weights upload, warmup, module compilation) stays on [`Engine`].
+pub trait PrefillBackend: Send + Sync {
+    /// The artifacts manifest this backend serves.
+    fn manifest(&self) -> &Manifest;
+
+    /// Execute a prefill/diag module (see [`Engine::prefill`]).
+    fn prefill(
+        &self,
+        checkpoint: &str,
+        kind: &str,
+        n_ctx: usize,
+        ids: &[i32],
+        scalars: &[ScalarValue],
+    ) -> Result<PrefillOutput>;
+}
+
+impl PrefillBackend for Engine {
+    fn manifest(&self) -> &Manifest {
+        Engine::manifest(self)
+    }
+
+    fn prefill(
+        &self,
+        checkpoint: &str,
+        kind: &str,
+        n_ctx: usize,
+        ids: &[i32],
+        scalars: &[ScalarValue],
+    ) -> Result<PrefillOutput> {
+        Engine::prefill(self, checkpoint, kind, n_ctx, ids, scalars)
+    }
+}
+
 /// Outputs of one prefill execution.
 #[derive(Debug)]
 pub struct PrefillOutput {

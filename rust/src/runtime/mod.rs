@@ -1,7 +1,9 @@
-//! L3 ⇄ XLA bridge: PJRT engine, weights loader.
+//! L3 ⇄ XLA bridge: PJRT engine, weights loader, synthetic stand-in.
 
 pub mod engine;
+pub mod synthetic;
 pub mod weights;
 
-pub use engine::{Engine, PrefillOutput, ScalarValue};
+pub use engine::{Engine, PrefillBackend, PrefillOutput, ScalarValue};
+pub use synthetic::SyntheticEngine;
 pub use weights::WeightsFile;

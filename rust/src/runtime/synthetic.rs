@@ -1,0 +1,118 @@
+//! Artifact-free [`PrefillBackend`]: a hand-built manifest plus cheap
+//! deterministic logits, so serving-stack tests and benches (chaos,
+//! overload) exercise the full coordinator — admission, batching, KV
+//! paging, decode, shedding — without PJRT artifacts on disk. The decode
+//! lane never touches PJRT anyway (it runs on the in-process `TinyLm`);
+//! only prefill needs this stand-in.
+
+use anyhow::{bail, Result};
+
+use crate::model::manifest::{Manifest, ModelConfig, ModuleInfo};
+use crate::runtime::engine::{PrefillBackend, PrefillOutput, ScalarValue};
+
+/// In-memory prefill backend over a synthetic manifest (see module docs).
+pub struct SyntheticEngine {
+    manifest: Manifest,
+}
+
+impl SyntheticEngine {
+    /// A backend with the default tiny model and `prefill_stem` modules
+    /// at the given context buckets.
+    pub fn new(buckets: &[usize]) -> SyntheticEngine {
+        SyntheticEngine::with_model(SyntheticEngine::tiny_model(), buckets)
+    }
+
+    /// A backend over an explicit model geometry.
+    pub fn with_model(model: ModelConfig, buckets: &[usize]) -> SyntheticEngine {
+        let modules = buckets
+            .iter()
+            .map(|&n| ModuleInfo {
+                name: format!("prefill_stem_{n}"),
+                kind: "prefill_stem".into(),
+                n_ctx: n,
+                file: String::new(),
+                scalars: vec![],
+                outputs: vec!["logits".into(), "budget_fraction".into()],
+            })
+            .collect();
+        let manifest = Manifest {
+            root: std::path::PathBuf::new(),
+            model,
+            param_spec: vec![],
+            weights: vec![],
+            modules,
+            eval_sets: vec![],
+            defaults: vec![],
+        };
+        SyntheticEngine { manifest }
+    }
+
+    /// The default geometry: small enough that a chaos test's decode
+    /// steps cost microseconds, shaped like the real compiled model.
+    pub fn tiny_model() -> ModelConfig {
+        ModelConfig {
+            vocab_size: crate::model::vocab::VOCAB_SIZE,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 128,
+            block: 16,
+            init_keep: 1,
+            local_keep: 2,
+            min_total: 3,
+            d_head: 16,
+        }
+    }
+}
+
+impl PrefillBackend for SyntheticEngine {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn prefill(
+        &self,
+        _checkpoint: &str,
+        kind: &str,
+        n_ctx: usize,
+        ids: &[i32],
+        _scalars: &[ScalarValue],
+    ) -> Result<PrefillOutput> {
+        let module = self.manifest.module(kind, n_ctx)?;
+        if ids.len() != module.n_ctx {
+            bail!("ids len {} != module n_ctx {}", ids.len(), module.n_ctx);
+        }
+        let vocab = self.manifest.model.vocab_size;
+        // one deterministic hot logit per row, a pure function of the
+        // token and its position — enough for argmax-based assertions
+        let mut logits = vec![0.0f32; n_ctx * vocab];
+        for (t, &id) in ids.iter().enumerate() {
+            let hot = (id as u64).wrapping_mul(0x9e37_79b9).wrapping_add(t as u64) % vocab as u64;
+            logits[t * vocab + hot as usize] = 1.0;
+        }
+        Ok(PrefillOutput { logits, n_ctx, vocab, budget_fraction: 0.42, hidden: None })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serves_prefill_without_artifacts() {
+        let eng = SyntheticEngine::new(&[128, 256]);
+        assert_eq!(eng.manifest().bucket_for(100), Some(128));
+        assert_eq!(eng.manifest().bucket_for(200), Some(256));
+        let ids = vec![3i32; 128];
+        let out = eng.prefill("any", "prefill_stem", 128, &ids, &[]).unwrap();
+        assert_eq!(out.logits.len(), 128 * eng.manifest().model.vocab_size);
+        assert!(out.budget_fraction > 0.0);
+        // deterministic: same inputs, same logits
+        let again = eng.prefill("any", "prefill_stem", 128, &ids, &[]).unwrap();
+        assert_eq!(out.logits, again.logits);
+        // wrong bucket and wrong ids length are clean errors
+        assert!(eng.prefill("any", "prefill_stem", 512, &ids, &[]).is_err());
+        assert!(eng.prefill("any", "prefill_stem", 256, &ids, &[]).is_err());
+    }
+}

@@ -1,0 +1,219 @@
+//! Deterministic fault injection for chaos-testing the serving stack.
+//!
+//! A [`FaultPlan`] is a seeded, rate-based schedule of injected failures.
+//! Components that opt in (the shared KV store, the dispatcher's worker
+//! closures) ask `should_fire(point)` at well-defined injection points:
+//!
+//! * [`FaultPoint::KvAlloc`] — KV page allocation fails with
+//!   [`crate::coordinator::kv_cache::KvError::Injected`].
+//! * [`FaultPoint::EngineExec`] — a prefill execution returns an error.
+//! * [`FaultPoint::DecodeStep`] — a decode-step worker panics (exercising
+//!   the coordinator's `catch_unwind` isolation).
+//! * [`FaultPoint::WorkerStall`] — a worker sleeps for `stall` before its
+//!   work item, widening race windows.
+//!
+//! Decisions are a pure function of `(seed, point, nth-call)` via a
+//! splitmix64 hash, so a given seed replays the same per-call decision
+//! sequence; under concurrency only the interleaving varies. Plans are
+//! carried as `Option<Arc<FaultPlan>>` — `None` (the default) costs one
+//! branch at each injection point.
+//!
+//! The env var `STEM_FAULTS` configures a plan for binaries and CI:
+//! `seed=42,kv=0.05,exec=0.05,step=0.02,stall=0.05,stall_us=200`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Where in the serving path a fault is injected (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// KV page allocation (`SharedKv::allocate`).
+    KvAlloc = 0,
+    /// Engine prefill execution on a worker.
+    EngineExec = 1,
+    /// Decode-step dispatch on a worker (injected as a panic).
+    DecodeStep = 2,
+    /// Artificial worker stall before a work item.
+    WorkerStall = 3,
+}
+
+const N_POINTS: usize = 4;
+
+const POINT_NAMES: [&str; N_POINTS] = ["kv", "exec", "step", "stall"];
+
+/// A seeded, rate-based fault schedule (see module docs).
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    rates: [f64; N_POINTS],
+    stall: Duration,
+    calls: [AtomicU64; N_POINTS],
+    hits: [AtomicU64; N_POINTS],
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+impl FaultPlan {
+    /// A plan with the given seed and every rate zero (nothing fires
+    /// until rates are set via the builder methods).
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            rates: [0.0; N_POINTS],
+            stall: Duration::from_micros(200),
+            calls: Default::default(),
+            hits: Default::default(),
+        }
+    }
+
+    /// Builder: set the firing probability of one injection point.
+    pub fn with_rate(mut self, point: FaultPoint, rate: f64) -> FaultPlan {
+        self.rates[point as usize] = rate.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Builder: set how long an injected worker stall sleeps.
+    pub fn with_stall(mut self, stall: Duration) -> FaultPlan {
+        self.stall = stall;
+        self
+    }
+
+    /// The plan's seed (chaos tests print it on failure for replay).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Deterministically decide whether the n-th call at `point` fires;
+    /// fired faults are counted for [`FaultPlan::injected`].
+    pub fn should_fire(&self, point: FaultPoint) -> bool {
+        let i = point as usize;
+        let rate = self.rates[i];
+        if rate <= 0.0 {
+            return false;
+        }
+        let n = self.calls[i].fetch_add(1, Ordering::Relaxed);
+        let h = splitmix64(self.seed ^ ((i as u64 + 1) << 56) ^ n);
+        let frac = (h >> 11) as f64 / (1u64 << 53) as f64;
+        let fire = frac < rate;
+        if fire {
+            self.hits[i].fetch_add(1, Ordering::Relaxed);
+        }
+        fire
+    }
+
+    /// Sleep for the configured stall when the stall point fires.
+    pub fn maybe_stall(&self) {
+        if self.should_fire(FaultPoint::WorkerStall) {
+            std::thread::sleep(self.stall);
+        }
+    }
+
+    /// Faults injected so far at `point`.
+    pub fn injected(&self, point: FaultPoint) -> u64 {
+        self.hits[point as usize].load(Ordering::Relaxed)
+    }
+
+    /// Total injection-point calls observed so far at `point`.
+    pub fn calls(&self, point: FaultPoint) -> u64 {
+        self.calls[point as usize].load(Ordering::Relaxed)
+    }
+
+    /// Parse a `STEM_FAULTS`-style spec, e.g.
+    /// `seed=42,kv=0.05,exec=0.05,step=0.02,stall=0.05,stall_us=200`.
+    /// Unknown keys are an error so typos cannot silently disable chaos.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::new(0);
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (k, v) = part.split_once('=').ok_or_else(|| format!("missing `=` in `{part}`"))?;
+            let (k, v) = (k.trim(), v.trim());
+            match k {
+                "seed" => plan.seed = v.parse().map_err(|_| format!("bad seed `{v}`"))?,
+                "stall_us" => {
+                    let us: u64 = v.parse().map_err(|_| format!("bad stall_us `{v}`"))?;
+                    plan.stall = Duration::from_micros(us);
+                }
+                _ => {
+                    let i = POINT_NAMES
+                        .iter()
+                        .position(|n| *n == k)
+                        .ok_or_else(|| format!("unknown fault key `{k}`"))?;
+                    let rate: f64 = v.parse().map_err(|_| format!("bad rate `{v}` for `{k}`"))?;
+                    plan.rates[i] = rate.clamp(0.0, 1.0);
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Build a plan from the `STEM_FAULTS` env var; `None` when unset or
+    /// empty. A malformed spec aborts loudly — silently running a chaos
+    /// job with no faults would pass vacuously.
+    pub fn from_env() -> Option<FaultPlan> {
+        let spec = std::env::var("STEM_FAULTS").ok()?;
+        if spec.trim().is_empty() {
+            return None;
+        }
+        match FaultPlan::parse(&spec) {
+            Ok(p) => Some(p),
+            Err(e) => panic!("invalid STEM_FAULTS=`{spec}`: {e}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_rate_never_fires_and_counts_nothing() {
+        let p = FaultPlan::new(7);
+        for _ in 0..100 {
+            assert!(!p.should_fire(FaultPoint::KvAlloc));
+        }
+        assert_eq!(p.injected(FaultPoint::KvAlloc), 0);
+        assert_eq!(p.calls(FaultPoint::KvAlloc), 0, "disabled points skip the counter");
+    }
+
+    #[test]
+    fn same_seed_replays_the_same_decision_sequence() {
+        let run = |seed| {
+            let p = FaultPlan::new(seed).with_rate(FaultPoint::EngineExec, 0.3);
+            (0..200).map(|_| p.should_fire(FaultPoint::EngineExec)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(1), run(1));
+        assert_ne!(run(1), run(2), "different seeds diverge");
+        let fired = run(1).iter().filter(|&&f| f).count();
+        assert!(fired > 20 && fired < 120, "rate roughly honored: {fired}/200");
+    }
+
+    #[test]
+    fn points_are_independent_streams() {
+        let p = FaultPlan::new(3).with_rate(FaultPoint::KvAlloc, 1.0);
+        assert!(p.should_fire(FaultPoint::KvAlloc));
+        assert!(!p.should_fire(FaultPoint::DecodeStep), "other points stay silent");
+        assert_eq!(p.injected(FaultPoint::KvAlloc), 1);
+        assert_eq!(p.injected(FaultPoint::DecodeStep), 0);
+    }
+
+    #[test]
+    fn parses_full_spec() {
+        let p = FaultPlan::parse("seed=42, kv=0.5, exec=0.25, step=0.1, stall=1.5, stall_us=99")
+            .expect("valid spec");
+        assert_eq!(p.seed(), 42);
+        assert_eq!(p.rates, [0.5, 0.25, 0.1, 1.0], "rates clamp to [0,1]");
+        assert_eq!(p.stall, Duration::from_micros(99));
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_garbage() {
+        assert!(FaultPlan::parse("kv").is_err(), "missing =");
+        assert!(FaultPlan::parse("bogus=1").is_err(), "unknown key");
+        assert!(FaultPlan::parse("kv=abc").is_err(), "bad rate");
+        assert!(FaultPlan::parse("seed=x").is_err(), "bad seed");
+    }
+}

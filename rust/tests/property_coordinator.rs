@@ -28,6 +28,7 @@ fn req(id: u64) -> PrefillRequest {
         ids: vec![],
         diag: false,
         enqueued: Instant::now(),
+        deadline: None,
     }
 }
 
@@ -197,6 +198,82 @@ fn admission_never_exceeds_limits() {
                 if tok != live.iter().sum::<usize>() || reqs != live.len() {
                     return Err("accounting drift".into());
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Satellite: concurrent admission churn. Several threads hammer
+/// accept / reject / release (rejections modelled as client timeouts
+/// that give back an older admission) while a blocking admitter waits
+/// on the Condvar. Every thread must finish — a wedged Condvar waiter
+/// hangs the test — and the counters must balance back to zero.
+#[test]
+fn admission_concurrent_churn_balances_and_never_wedges() {
+    use std::sync::Arc;
+
+    forall(
+        115,
+        6,
+        |r: &mut Rng| (r.below(1 << 31), 2 + r.below(3) as usize),
+        |&(seed, n_threads)| {
+            let adm = Arc::new(Admission::new(AdmissionConfig {
+                max_tokens: 4096,
+                max_requests: 8,
+                max_work_ns: 1e9,
+            }));
+            let mut churners = vec![];
+            for t in 0..n_threads {
+                let adm = Arc::clone(&adm);
+                churners.push(std::thread::spawn(move || {
+                    let mut rng = Rng::new(seed ^ (t as u64 + 1));
+                    let mut live: Vec<(usize, f64)> = vec![];
+                    for _ in 0..400 {
+                        let tokens = 1 + rng.below(1024) as usize;
+                        let est = rng.f64() * 1e7;
+                        match adm.try_admit_work(tokens, est) {
+                            Admit::Accepted => live.push((tokens, est)),
+                            // shed: model the client timing out an older
+                            // admission of ours, freeing capacity
+                            Admit::Rejected { .. } => {
+                                if let Some((tk, e)) = live.pop() {
+                                    adm.release_work(tk, e);
+                                }
+                            }
+                        }
+                        if rng.below(3) == 0 {
+                            if let Some((tk, e)) = live.pop() {
+                                adm.release_work(tk, e);
+                            }
+                        }
+                    }
+                    for (tk, e) in live.drain(..) {
+                        adm.release_work(tk, e);
+                    }
+                }));
+            }
+            // a blocking admitter racing the churn: it must wake and
+            // finish once capacity frees up, never wedge on the Condvar
+            let blocker = {
+                let adm = Arc::clone(&adm);
+                std::thread::spawn(move || {
+                    adm.admit_blocking(64);
+                    adm.release(64);
+                })
+            };
+            for h in churners {
+                h.join().map_err(|_| "churn thread panicked".to_string())?;
+            }
+            blocker.join().map_err(|_| "blocking admitter panicked".to_string())?;
+            let (tok, reqs) = adm.outstanding();
+            if (tok, reqs) != (0, 0) {
+                return Err(format!("counters did not balance: {tok} tokens / {reqs} reqs"));
+            }
+            // release clamps at zero, so fp drift may only leave a
+            // negligible positive residue
+            if adm.outstanding_work_ns() > 1.0 {
+                return Err(format!("work_ns residue {}", adm.outstanding_work_ns()));
             }
             Ok(())
         },
