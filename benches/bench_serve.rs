@@ -13,9 +13,17 @@
 //!   * admitted throughput under 2x overload stays within 10% of the
 //!     uncontended run (overload must not poison the admitted lane).
 //!
+//! The `telemetry_overhead` section runs the same uncontended workload
+//! with the flight recorder armed + a snapshot poller (as `stem serve
+//! --metrics-out` would run it) vs. tracing fully off, best-of-2 per
+//! arm, and gates the traced/untraced admitted-throughput ratio at
+//! >= 0.95 — observability may cost at most 5%. The traced run's final
+//! snapshot is written to `metrics.json` for the CI schema check.
+//!
 //!   cargo bench --bench bench_serve              # full sizes
 //!   cargo bench --bench bench_serve -- --quick   # small samples
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -30,13 +38,14 @@ use stem::util::json::Json;
 /// synthetic backend is a hang, not load.
 const TERMINAL: Duration = Duration::from_secs(60);
 
-fn coordinator(max_requests: usize) -> Coordinator {
+fn coordinator(max_requests: usize, trace_events: usize) -> Coordinator {
     let engine: Arc<dyn PrefillBackend> = Arc::new(SyntheticEngine::new(&[128, 256]));
     Coordinator::with_backend(
         engine,
         CoordinatorConfig {
             workers: 4,
             kv_pages: 1024,
+            trace_events,
             admission: AdmissionConfig {
                 max_tokens: 1 << 20,
                 max_requests,
@@ -121,6 +130,28 @@ fn phase_json(p: &Phase) -> Json {
     ])
 }
 
+/// One telemetry arm: the uncontended workload with `trace_events`
+/// ring slots, a snapshot poller running alongside (as `stem serve
+/// --metrics-out` would), returning the phase and — when tracing is on
+/// — the final snapshot JSON for the `metrics.json` artifact.
+fn run_telemetry_arm(trace_events: usize, n: usize, max_new: usize) -> (Phase, Option<Json>) {
+    let coord = coordinator(4 * n, trace_events);
+    let stop = AtomicBool::new(false);
+    let mut phase = None;
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            while !stop.load(Ordering::Relaxed) {
+                let _ = coord.snapshot();
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        });
+        phase = Some(run_phase(&coord, n, max_new));
+        stop.store(true, Ordering::Relaxed);
+    });
+    let snap = (trace_events > 0).then(|| coord.snapshot().to_json());
+    (phase.expect("scoped phase ran"), snap)
+}
+
 fn main() {
     let args = Args::from_env(false);
     let quick = args.flag("quick");
@@ -130,16 +161,30 @@ fn main() {
 
     // uncontended: same workload, admission ceiling far above it
     let uncontended = {
-        let coord = coordinator(4 * n);
+        let coord = coordinator(4 * n, 4096);
         run_phase(&coord, n, max_new)
     };
     // overload: ceiling at `capacity` outstanding, 2x that submitted in
     // a burst — excess must shed typed at submission (retryable), the
     // admitted share must keep its throughput
     let overload = {
-        let coord = coordinator(capacity);
+        let coord = coordinator(capacity, 4096);
         run_phase(&coord, n, max_new)
     };
+
+    // telemetry overhead: tracing + snapshot polling on vs fully off,
+    // best-of-2 per arm to damp scheduler noise
+    let best_of_2 = |trace_events: usize| {
+        let (a, ja) = run_telemetry_arm(trace_events, n, max_new);
+        let (b, jb) = run_telemetry_arm(trace_events, n, max_new);
+        if a.admitted_tokens_per_sec() >= b.admitted_tokens_per_sec() {
+            (a, ja)
+        } else {
+            (b, jb)
+        }
+    };
+    let (traced, metrics_json) = best_of_2(4096);
+    let (untraced, _) = best_of_2(0);
 
     // gates -----------------------------------------------------------
     assert_eq!(
@@ -171,6 +216,25 @@ fn main() {
         "admitted throughput collapsed under overload: {ratio:.3} < 0.9"
     );
 
+    // telemetry gates: both arms complete everything; tracing costs at
+    // most 5% of admitted throughput
+    assert_eq!(traced.completed, traced.submitted, "traced arm must complete everything");
+    assert_eq!(untraced.completed, untraced.submitted, "untraced arm must complete everything");
+    let tel_ratio = traced.admitted_tokens_per_sec() / untraced.admitted_tokens_per_sec();
+    println!(
+        "telemetry: traced {:.0} tok/s, untraced {:.0} tok/s | ratio {tel_ratio:.3} (gate >= 0.95)",
+        traced.admitted_tokens_per_sec(),
+        untraced.admitted_tokens_per_sec(),
+    );
+    assert!(tel_ratio >= 0.95, "tracing overhead above 5%: ratio {tel_ratio:.3} < 0.95");
+    if let Some(j) = &metrics_json {
+        let path = "metrics.json";
+        match std::fs::write(path, format!("{j}\n")) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+
     let out = Json::obj(vec![
         (
             "config",
@@ -187,6 +251,14 @@ fn main() {
                 ("uncontended", phase_json(&uncontended)),
                 ("overload_2x", phase_json(&overload)),
                 ("admitted_throughput_ratio", Json::Num(ratio)),
+            ]),
+        ),
+        (
+            "telemetry_overhead",
+            Json::obj(vec![
+                ("traced", phase_json(&traced)),
+                ("untraced", phase_json(&untraced)),
+                ("admitted_throughput_ratio", Json::Num(tel_ratio)),
             ]),
         ),
     ]);

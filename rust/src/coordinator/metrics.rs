@@ -1,10 +1,18 @@
 //! Serving metrics: counters + log-bucketed latency histograms with
 //! percentile estimation (the TTFT / throughput numbers in EXPERIMENTS.md
-//! come from here).
+//! come from here). The machine-readable view of this block — JSON and
+//! Prometheus exposition with exact bucket export — lives in
+//! [`crate::obs::snapshot`]; the flight recorder and per-band sparsity
+//! telemetry ride along inside [`Metrics`] so every code path holding the
+//! shared metrics handle can trace and observe without extra plumbing.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
+
+use crate::obs::sparsity::{SparsityStats, StepTelemetry};
+use crate::obs::trace::Trace;
 
 /// Log-scale histogram: bucket i covers [2^i, 2^(i+1)) microseconds.
 pub struct LatencyHisto {
@@ -55,7 +63,14 @@ impl LatencyHisto {
         self.max_us.load(Ordering::Relaxed)
     }
 
-    /// Percentile estimate (upper bucket bound), p in [0, 1].
+    /// Total microseconds across all recorded samples.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Percentile estimate, p in [0, 1]: the upper bound of the bucket the
+    /// target sample falls in, clamped to the largest observed sample (a
+    /// power-of-two bucket bound can otherwise overstate the tail ~2x).
     pub fn percentile_us(&self, p: f64) -> u64 {
         let total = self.count();
         if total == 0 {
@@ -66,16 +81,96 @@ impl LatencyHisto {
         for (i, b) in self.buckets.iter().enumerate() {
             acc += b.load(Ordering::Relaxed);
             if acc >= target {
-                return 1u64 << (i + 1);
+                return (1u64 << (i + 1)).min(self.max_us());
             }
         }
         self.max_us()
+    }
+
+    /// Raw per-bucket counts; bucket `i` covers `[2^i, 2^(i+1))` µs (the
+    /// last bucket absorbs everything larger). Exact export for the
+    /// metrics snapshot — no percentile estimation in between.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
     }
 }
 
 impl Default for LatencyHisto {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+/// Default capacity of the serving-path error ring.
+pub const ERROR_LOG_CAP: usize = 64;
+
+/// Capped ring of serving-path error strings: keeps the newest
+/// [`ERROR_LOG_CAP`] entries and counts the rest as dropped, so a flapping
+/// backend logging one error per request can never grow memory without
+/// bound (the log used to be an unbounded `Vec`).
+pub struct ErrorRing {
+    cap: usize,
+    logged: u64,
+    dropped: u64,
+    entries: VecDeque<String>,
+}
+
+impl Default for ErrorRing {
+    fn default() -> Self {
+        Self::with_capacity(ERROR_LOG_CAP)
+    }
+}
+
+impl ErrorRing {
+    /// A ring keeping the newest `cap` entries (min 1).
+    pub fn with_capacity(cap: usize) -> Self {
+        let cap = cap.max(1);
+        ErrorRing { cap, logged: 0, dropped: 0, entries: VecDeque::with_capacity(cap) }
+    }
+
+    /// Append an error, evicting the oldest entry once full.
+    pub fn push(&mut self, e: String) {
+        self.logged += 1;
+        if self.entries.len() == self.cap {
+            self.entries.pop_front();
+            self.dropped += 1;
+        }
+        self.entries.push_back(e);
+    }
+
+    /// The newest retained entry.
+    pub fn last(&self) -> Option<&String> {
+        self.entries.back()
+    }
+
+    /// Retained entries, oldest first.
+    pub fn iter(&self) -> impl Iterator<Item = &String> {
+        self.entries.iter()
+    }
+
+    /// Clone the retained entries, oldest first.
+    pub fn to_vec(&self) -> Vec<String> {
+        self.entries.iter().cloned().collect()
+    }
+
+    /// Entries currently retained.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing has been retained.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total errors ever logged (retained + dropped).
+    pub fn logged(&self) -> u64 {
+        self.logged
+    }
+
+    /// Errors evicted by the cap.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
     }
 }
 
@@ -166,8 +261,18 @@ pub struct Metrics {
     pub degradation_level: AtomicU64,
     /// Degradation-level transitions (either direction) since start.
     pub degradation_transitions: AtomicU64,
-    /// Serving-path error strings, newest last (drained by operators).
-    pub errors: Mutex<Vec<String>>,
+    /// Serving-path error strings, newest last — a capped ring (see
+    /// [`ErrorRing`]): the newest [`ERROR_LOG_CAP`] survive, older
+    /// entries are counted as dropped.
+    pub errors: Mutex<ErrorRing>,
+    // --- observability ----------------------------------------------------
+    /// Flight-recorder handle. Off (`Trace::off()`) by default; the
+    /// coordinator arms it from `CoordinatorConfig::trace_events` so every
+    /// code path holding the shared metrics can record span events.
+    pub trace: Trace,
+    /// Per-context-band sparsity telemetry fed by the decode kernels (see
+    /// [`crate::obs::sparsity`]).
+    pub sparsity: SparsityStats,
 }
 
 impl Metrics {
@@ -212,6 +317,13 @@ impl Metrics {
         if dense {
             self.decode_dense_steps.fetch_add(1, Ordering::Relaxed);
         }
+    }
+
+    /// Fold one step's kernel-level sparsity observation into the
+    /// per-band telemetry (blocks visited vs kept, realized vs planned k,
+    /// dense-fallback cause, captured OAM score mass).
+    pub fn record_step_telemetry(&self, n_ctx: usize, t: &StepTelemetry) {
+        self.sparsity.observe(n_ctx, t);
     }
 
     /// Record one speculative draft/verify round (its committed tokens
@@ -315,17 +427,38 @@ impl Metrics {
                 100.0 * pcov as f64 / ptot.max(1) as f64,
             ));
         }
+        if self.sparsity.total_steps() > 0 {
+            out.push_str("\nsparsity (context bands):");
+            for b in self.sparsity.bands().iter().filter(|b| b.steps > 0) {
+                out.push_str(&format!(
+                    "\n  {:>7}: steps={} dense={}(short)/{}(budget) | kept {:.1}% of blocks \
+                     (planned {:.1}%) | score mass {:.1}%",
+                    b.label,
+                    b.steps,
+                    b.dense_short_context,
+                    b.dense_budget_covers,
+                    100.0 * b.kept_fraction(),
+                    100.0 * b.planned_fraction(),
+                    100.0 * b.mean_score_mass(),
+                ));
+            }
+        }
         let shed = self.shed_deadline.load(Ordering::Relaxed);
         let expired = self.deadline_exceeded.load(Ordering::Relaxed);
         let cancelled = self.cancelled.load(Ordering::Relaxed);
         let panics = self.worker_panics.load(Ordering::Relaxed);
         let level = self.degradation_level.load(Ordering::Relaxed);
         let trans = self.degradation_transitions.load(Ordering::Relaxed);
-        if shed + expired + cancelled + panics + level + trans > 0 {
+        let (errs, errs_dropped) = {
+            let e = self.errors.lock().unwrap_or_else(|p| p.into_inner());
+            (e.logged(), e.dropped())
+        };
+        if shed + expired + cancelled + panics + level + trans + errs > 0 {
             out.push_str(&format!(
                 "\nfailures: shed_deadline={shed} deadline_exceeded={expired} \
                  cancelled={cancelled} worker_panics={panics} | \
-                 degradation level={level} transitions={trans}"
+                 degradation level={level} transitions={trans} | \
+                 errors logged={errs} dropped={errs_dropped}"
             ));
         }
         out
@@ -369,6 +502,86 @@ mod tests {
         let h = LatencyHisto::new();
         assert_eq!(h.percentile_us(0.9), 0);
         assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn percentile_never_exceeds_max_sample() {
+        // regression: the raw upper bucket bound 1<<(i+1) overstates the
+        // tail — 1000µs lands in [512, 1024) and used to report p99=1024
+        let h = LatencyHisto::new();
+        h.record(Duration::from_micros(1000));
+        assert_eq!(h.percentile_us(0.99), 1000);
+        assert_eq!(h.percentile_us(0.5), 1000);
+
+        let h = LatencyHisto::new();
+        h.record(Duration::from_micros(5));
+        assert_eq!(h.percentile_us(1.0), 5, "single 5µs sample must not report 8µs");
+
+        // mixed: every percentile stays within the observed range
+        let h = LatencyHisto::new();
+        for us in [3u64, 700, 999] {
+            h.record(Duration::from_micros(us));
+        }
+        for p in [0.5, 0.9, 0.99, 1.0] {
+            assert!(h.percentile_us(p) <= h.max_us(), "p{p} exceeds max_us");
+        }
+    }
+
+    #[test]
+    fn bucket_counts_export_is_exact() {
+        let h = LatencyHisto::new();
+        h.record(Duration::from_micros(1)); // bucket 0
+        h.record(Duration::from_micros(3)); // bucket 1
+        h.record(Duration::from_micros(3)); // bucket 1
+        h.record(Duration::from_micros(1000)); // bucket 9
+        let counts = h.bucket_counts();
+        assert_eq!(counts.len(), 40);
+        assert_eq!(counts[0], 1);
+        assert_eq!(counts[1], 2);
+        assert_eq!(counts[9], 1);
+        assert_eq!(counts.iter().sum::<u64>(), h.count());
+        assert_eq!(h.sum_us(), 1 + 3 + 3 + 1000);
+    }
+
+    #[test]
+    fn error_ring_caps_and_counts_drops() {
+        let mut r = ErrorRing::with_capacity(3);
+        assert!(r.is_empty());
+        for i in 0..10 {
+            r.push(format!("err {i}"));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.logged(), 10);
+        assert_eq!(r.dropped(), 7);
+        assert_eq!(r.to_vec(), vec!["err 7", "err 8", "err 9"]);
+        assert_eq!(r.last().map(String::as_str), Some("err 9"));
+        assert_eq!(r.iter().count(), 3);
+    }
+
+    #[test]
+    fn metrics_error_log_is_bounded() {
+        let m = Metrics::new();
+        for i in 0..(ERROR_LOG_CAP + 50) {
+            m.record_error(format!("backend flap {i}"));
+        }
+        let e = m.errors.lock().unwrap();
+        assert_eq!(e.len(), ERROR_LOG_CAP);
+        assert_eq!(e.logged(), (ERROR_LOG_CAP + 50) as u64);
+        assert_eq!(e.dropped(), 50);
+        // newest survive
+        assert_eq!(e.last().map(String::as_str), Some(format!("backend flap {}", ERROR_LOG_CAP + 49).as_str()));
+    }
+
+    #[test]
+    fn sparsity_section_appears_once_observed() {
+        use crate::obs::sparsity::StepTelemetry;
+        let m = Metrics::new();
+        assert!(!m.report(Duration::from_secs(1)).contains("sparsity"));
+        m.record_step_telemetry(5000, &StepTelemetry::sparse(100, 25, 30, 0.95));
+        let r = m.report(Duration::from_secs(1));
+        assert!(r.contains("sparsity (context bands):"), "{r}");
+        assert!(r.contains("4k-16k"), "{r}");
+        assert!(r.contains("kept 25.0% of blocks"), "{r}");
     }
 
     #[test]

@@ -95,6 +95,8 @@ use crate::decode::{
 };
 use crate::model::vocab;
 use crate::model::Manifest;
+use crate::obs::snapshot::{KvGauges, MetricsSnapshot};
+use crate::obs::trace::{EventKind, FlightRecorder, Outcome, PanicSite, RouteKind, Trace};
 use crate::runtime::{Engine, PrefillBackend};
 use crate::sim::cost::{
     estimate_generate_ns, estimate_ingest_ns, estimate_spec_step_ns, Geometry,
@@ -131,6 +133,10 @@ pub struct CoordinatorConfig {
     pub faults: Option<Arc<FaultPlan>>,
     /// Hysteresis tuning of the graceful-degradation ladder.
     pub degrade: DegradeConfig,
+    /// Flight-recorder ring capacity in events; `0` disables tracing
+    /// entirely (every record call collapses to one branch — the
+    /// `telemetry_overhead` bench gate measures exactly this toggle).
+    pub trace_events: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -144,6 +150,7 @@ impl Default for CoordinatorConfig {
             prefix_mode: PrefixMode::default(),
             faults: FaultPlan::from_env().map(Arc::new),
             degrade: DegradeConfig::default(),
+            trace_events: 4096,
         }
     }
 }
@@ -188,6 +195,7 @@ pub struct GenerateTicket {
     rx: mpsc::Receiver<Result<GenerateResponse>>,
     cancel: Arc<AtomicBool>,
     received: bool,
+    seq: u64,
 }
 
 impl GenerateTicket {
@@ -217,6 +225,12 @@ impl GenerateTicket {
     /// A handle that cancels this branch from another thread.
     pub fn cancel_handle(&self) -> CancelHandle {
         CancelHandle(Arc::clone(&self.cancel))
+    }
+
+    /// The branch's sequence id — its *span* in the flight recorder
+    /// ([`FlightRecorder::span_events`] replays this branch's timeline).
+    pub fn seq(&self) -> u64 {
+        self.seq
     }
 }
 
@@ -380,7 +394,9 @@ impl Coordinator {
         pjrt: Option<Arc<Engine>>,
         cfg: CoordinatorConfig,
     ) -> Coordinator {
-        let metrics = Arc::new(Metrics::new());
+        let mut metrics = Metrics::new();
+        metrics.trace = Trace::new(cfg.trace_events);
+        let metrics = Arc::new(metrics);
         let admission = Arc::new(Admission::new(cfg.admission));
         let m = &backend.manifest().model;
         // decode stand-in LM shares the manifest geometry (see
@@ -548,6 +564,7 @@ impl Coordinator {
             Admit::Accepted => {}
             Admit::Rejected { reason } => {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                self.metrics.trace.record(0, EventKind::Reject);
                 return Err(anyhow!("rejected: {reason}"));
             }
         }
@@ -561,6 +578,7 @@ impl Coordinator {
             deadline,
         };
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.metrics.trace.record(req.id, EventKind::Submit { tokens: req.ids.len() as u32 });
         let (rtx, rrx) = mpsc::channel();
         self.tx.send(Msg::Request(req, rtx)).map_err(|_| anyhow!("coordinator stopped"))?;
         Ok(rrx)
@@ -594,7 +612,7 @@ impl Coordinator {
         policy: DecodePolicy,
         fanout: usize,
     ) -> Result<Vec<mpsc::Receiver<Result<GenerateResponse>>>> {
-        let (rxs, _cancels) =
+        let (rxs, _cancels, _first_seq) =
             self.submit_generate_inner(prompt, max_new_tokens, policy, fanout, None)?;
         Ok(rxs)
     }
@@ -611,12 +629,18 @@ impl Coordinator {
         fanout: usize,
         deadline: Option<Instant>,
     ) -> Result<Vec<GenerateTicket>> {
-        let (rxs, cancels) =
+        let (rxs, cancels, first_seq) =
             self.submit_generate_inner(prompt, max_new_tokens, policy, fanout, deadline)?;
         Ok(rxs
             .into_iter()
             .zip(cancels)
-            .map(|(rx, cancel)| GenerateTicket { rx, cancel, received: false })
+            .enumerate()
+            .map(|(i, (rx, cancel))| GenerateTicket {
+                rx,
+                cancel,
+                received: false,
+                seq: first_seq + i as u64,
+            })
             .collect())
     }
 
@@ -627,7 +651,7 @@ impl Coordinator {
         policy: DecodePolicy,
         fanout: usize,
         deadline: Option<Instant>,
-    ) -> Result<(Vec<mpsc::Receiver<Result<GenerateResponse>>>, Vec<Arc<AtomicBool>>)> {
+    ) -> Result<(Vec<mpsc::Receiver<Result<GenerateResponse>>>, Vec<Arc<AtomicBool>>, u64)> {
         policy.validate().map_err(|e| anyhow!("invalid decode policy: {e}"))?;
         if max_new_tokens == 0 {
             return Err(anyhow!("max_new_tokens must be >= 1"));
@@ -704,6 +728,7 @@ impl Coordinator {
             fanout.checked_mul(max_new_tokens).and_then(|t| t.checked_add(suffix_len))
         else {
             self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            self.metrics.trace.record(0, EventKind::Reject);
             return Err(anyhow!("rejected: fanout x max_new_tokens overflows"));
         };
         let total_ns = fanout as f64 * decode_ns + ingest_ns;
@@ -711,6 +736,7 @@ impl Coordinator {
             Admit::Accepted => {}
             Admit::Rejected { reason } => {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                self.metrics.trace.record(0, EventKind::Reject);
                 return Err(anyhow!("rejected: {reason}"));
             }
         }
@@ -735,6 +761,13 @@ impl Coordinator {
             deadline,
         };
         self.metrics.generates_submitted.fetch_add(fanout as u64, Ordering::Relaxed);
+        if self.metrics.trace.enabled() {
+            // one span per branch: every branch timeline starts at submit
+            let tokens = req.prompt.len() as u32;
+            for i in 0..fanout as u64 {
+                self.metrics.trace.record(id + 1 + i, EventKind::Submit { tokens });
+            }
+        }
         let mut lines = Vec::with_capacity(fanout);
         let mut rxs = Vec::with_capacity(fanout);
         let mut cancels = Vec::with_capacity(fanout);
@@ -748,7 +781,7 @@ impl Coordinator {
         self.tx
             .send(Msg::Generate(req, lines, admits))
             .map_err(|_| anyhow!("coordinator stopped"))?;
-        Ok((rxs, cancels))
+        Ok((rxs, cancels, id + 1))
     }
 
     /// Submit a single autoregressive generation (fan-out of one); the
@@ -796,6 +829,27 @@ impl Coordinator {
             self.kv.pages_resident(),
             self.cached_prefixes(),
         )
+    }
+
+    /// Structured metrics snapshot: every counter, exact histogram
+    /// buckets, KV-pool gauges, per-band sparsity telemetry and
+    /// flight-recorder stats — the machine-readable sibling of
+    /// [`Coordinator::report`]. Serialize with
+    /// [`MetricsSnapshot::to_json`] or [`MetricsSnapshot::to_prometheus`].
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let (used, total, _) = self.kv_occupancy();
+        let gauges = KvGauges {
+            pages_used: used as u64,
+            pages_total: total as u64,
+            slab_pages: self.kv.pages_resident() as u64,
+        };
+        MetricsSnapshot::collect(&self.metrics, Some(gauges), self.uptime())
+    }
+
+    /// The flight recorder, when tracing is armed
+    /// (`CoordinatorConfig::trace_events > 0`).
+    pub fn flight_recorder(&self) -> Option<&FlightRecorder> {
+        self.metrics.trace.recorder()
     }
 }
 
@@ -907,6 +961,7 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                             "no bucket for {}-token request at dispatch",
                             req.ids.len()
                         ));
+                        metrics.trace.record(req.id, EventKind::Finish { outcome: Outcome::Error });
                         admission.release(req.ids.len());
                         let _ = ch.send(Err(anyhow!("no bucket for request length")));
                         continue;
@@ -945,6 +1000,9 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                         .collect();
                     if shutdown.load(Ordering::SeqCst) {
                         for spec in specs {
+                            metrics
+                                .trace
+                                .record(spec.seq, EventKind::Finish { outcome: Outcome::Error });
                             admission.release_work(spec.admit.tokens, spec.admit.ns);
                             let _ = spec.ch.send(Err(anyhow!("coordinator shutting down")));
                         }
@@ -955,6 +1013,11 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                         // before it touches the KV store or a worker
                         for spec in specs {
                             metrics.shed_deadline.fetch_add(1, Ordering::Relaxed);
+                            metrics.trace.record(spec.seq, EventKind::Shed);
+                            metrics.trace.record(
+                                spec.seq,
+                                EventKind::Finish { outcome: Outcome::DeadlineExceeded },
+                            );
                             admission.release_work(spec.admit.tokens, spec.admit.ns);
                             let _ = spec
                                 .ch
@@ -1041,6 +1104,19 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                             },
                         },
                     };
+                    if metrics.trace.enabled() {
+                        let (outcome, covered) = match &route {
+                            Route::Hit(_) => (RouteKind::Hit, n_prompt),
+                            Route::Filling(_) => (RouteKind::Filling, n_prompt),
+                            Route::Refill { .. } => (RouteKind::Refill, 0),
+                            Route::Partial { covered, .. } => (RouteKind::Partial, *covered),
+                            Route::Miss(_) => (RouteKind::Miss, 0),
+                        };
+                        let kind = EventKind::PrefixRoute { outcome, covered: covered as u32 };
+                        for spec in &specs {
+                            metrics.trace.record(spec.seq, kind);
+                        }
+                    }
                     match route {
                         Route::Hit(key) => {
                             // touch the holder so cap-retirement favors
@@ -1371,6 +1447,7 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
             metrics.degradation_level.store(level as u64, Ordering::Relaxed);
             if level != before {
                 metrics.degradation_transitions.fetch_add(1, Ordering::Relaxed);
+                metrics.trace.record(0, EventKind::Degrade { from: before, to: level });
                 // stepping past level 2 shrinks the holder cap: retire
                 // parked prefixes early so their pages free up
                 retire_excess_holders(
@@ -1399,6 +1476,7 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
             match batch {
                 AnyBatch::Prefill(batch) => {
                     metrics.batches.fetch_add(1, Ordering::Relaxed);
+                    let batch_size = batch.requests.len() as u32;
                     for req in batch.requests {
                         let bucket = batch.key.bucket;
                         let Some(ch) = channels.remove(&req.id) else {
@@ -1408,6 +1486,9 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                                 "no response channel for request {}",
                                 req.id
                             ));
+                            metrics
+                                .trace
+                                .record(req.id, EventKind::Finish { outcome: Outcome::Error });
                             admission.release(bucket);
                             continue;
                         };
@@ -1415,11 +1496,17 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                             // queued past its deadline: shed instead of
                             // burning a worker on an answer nobody wants
                             metrics.shed_deadline.fetch_add(1, Ordering::Relaxed);
+                            metrics.trace.record(req.id, EventKind::Shed);
+                            metrics.trace.record(
+                                req.id,
+                                EventKind::Finish { outcome: Outcome::DeadlineExceeded },
+                            );
                             admission.release(bucket);
                             let _ =
                                 ch.send(Err(anyhow::Error::new(ServeError::DeadlineExceeded)));
                             continue;
                         }
+                        metrics.trace.record(req.id, EventKind::Batch { size: batch_size });
                         let backend = Arc::clone(&backend);
                         let metrics = Arc::clone(&metrics);
                         let admission = Arc::clone(&admission);
@@ -1446,6 +1533,17 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                             }))
                             .unwrap_or_else(|_| {
                                 metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+                                metrics.trace.record(
+                                    req.id,
+                                    EventKind::Panic { site: PanicSite::Prefill },
+                                );
+                                if let Some(r) = metrics.trace.recorder() {
+                                    let replay = faults.as_deref().map(|f| f.spec_string());
+                                    eprintln!(
+                                        "{}",
+                                        r.render_failure_dump(Some(req.id), replay.as_deref())
+                                    );
+                                }
                                 let _ = kv.release(req.id);
                                 let _ = kv.drop_seq(req.id);
                                 Err(anyhow::Error::new(ServeError::WorkerPanic))
@@ -1465,8 +1563,22 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                                         (resp.budget_fraction as f64 * 1e6) as u64,
                                         Ordering::Relaxed,
                                     );
+                                    metrics.trace.record(
+                                        req.id,
+                                        EventKind::Exec { us: resp.exec_us.min(u32::MAX as u64) as u32 },
+                                    );
+                                    metrics.trace.record(
+                                        req.id,
+                                        EventKind::Finish { outcome: Outcome::Complete },
+                                    );
                                 }
-                                Err(e) => metrics.record_error(e.to_string()),
+                                Err(e) => {
+                                    metrics.record_error(e.to_string());
+                                    metrics.trace.record(
+                                        req.id,
+                                        EventKind::Finish { outcome: Outcome::Error },
+                                    );
+                                }
                             }
                             admission.release(bucket);
                             let _ = ch.send(out);
@@ -1522,6 +1634,7 @@ fn fail_branch(
     active: &Arc<AtomicUsize>,
 ) {
     metrics.record_error(err.to_string());
+    metrics.trace.record(spec.seq, EventKind::Finish { outcome: Outcome::Error });
     admission.release_work(spec.admit.tokens, spec.admit.ns);
     let _ = spec.ch.send(Err(err));
     active.fetch_sub(1, Ordering::SeqCst);
@@ -1532,9 +1645,11 @@ fn fail_branch(
 fn answer_unstarted(
     spec: BranchSpec,
     finish: Finish,
+    metrics: &Arc<Metrics>,
     admission: &Arc<Admission>,
     active: &Arc<AtomicUsize>,
 ) {
+    metrics.trace.record(spec.seq, EventKind::Finish { outcome: outcome_of(finish) });
     let resp = GenerateResponse {
         id: spec.seq,
         tokens: Vec::new(),
@@ -1550,6 +1665,15 @@ fn answer_unstarted(
     admission.release_work(spec.admit.tokens, spec.admit.ns);
     let _ = spec.ch.send(Ok(resp));
     active.fetch_sub(1, Ordering::SeqCst);
+}
+
+/// The flight-recorder terminal outcome matching a [`Finish`] variant.
+fn outcome_of(finish: Finish) -> Outcome {
+    match finish {
+        Finish::Complete => Outcome::Complete,
+        Finish::Cancelled => Outcome::Cancelled,
+        Finish::DeadlineExceeded => Outcome::DeadlineExceeded,
+    }
 }
 
 /// Fork every branch off the (prefilled) holder session and push their
@@ -1575,12 +1699,14 @@ fn launch_branches(
         if spec.cancel.load(Ordering::SeqCst) {
             // abandoned before its first step: reap without forking
             metrics.cancelled.fetch_add(1, Ordering::Relaxed);
-            answer_unstarted(spec, Finish::Cancelled, admission, active);
+            metrics.trace.record(spec.seq, EventKind::Cancel);
+            answer_unstarted(spec, Finish::Cancelled, metrics, admission, active);
             continue;
         }
         if spec.deadline.is_some_and(|d| Instant::now() >= d) {
             // deadline passed while queued on the holder: typed shed
             metrics.shed_deadline.fetch_add(1, Ordering::Relaxed);
+            metrics.trace.record(spec.seq, EventKind::Shed);
             fail_branch(
                 spec,
                 anyhow::Error::new(ServeError::DeadlineExceeded),
@@ -1594,6 +1720,7 @@ fn launch_branches(
             Ok(mut session) => {
                 session.set_policy(spec.policy);
                 metrics.forks.fetch_add(1, Ordering::Relaxed);
+                metrics.trace.record(spec.seq, EventKind::Fork);
                 let task = DecodeTask {
                     session,
                     ch: spec.ch,
@@ -1676,10 +1803,11 @@ fn start_prefix_fill(
         }
     };
     *holder_clock += 1;
+    let holder_seq = session.seq_id();
     holders.insert(
         key,
         Holder {
-            seq: session.seq_id(),
+            seq: holder_seq,
             prompt: req.prompt.clone(),
             session: None,
             waiting: specs,
@@ -1705,11 +1833,19 @@ fn start_prefix_fill(
         })) {
             Ok(Ok(session)) => {
                 metrics.tokens_in.fetch_add(n_suffix as u64, Ordering::Relaxed);
+                metrics
+                    .trace
+                    .record(holder_seq, EventKind::IngestDone { tokens: n_suffix as u32 });
                 Ok(Box::new(session))
             }
             Ok(Err(e)) => Err(format!("prompt ingest failed: {e}")),
             Err(_) => {
                 metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+                metrics.trace.record(holder_seq, EventKind::Panic { site: PanicSite::Ingest });
+                if let Some(r) = metrics.trace.recorder() {
+                    let replay = faults.as_deref().map(|f| f.spec_string());
+                    eprintln!("{}", r.render_failure_dump(Some(holder_seq), replay.as_deref()));
+                }
                 Err("worker panicked during prompt ingest".to_string())
             }
         };
@@ -1776,6 +1912,11 @@ fn run_decode_step(
         return; // task vanished (completed with an error elsewhere)
     };
     let finish = |task: DecodeTask, out: Result<GenerateResponse>| {
+        let outcome = match &out {
+            Ok(resp) => outcome_of(resp.finish),
+            Err(_) => Outcome::Error,
+        };
+        metrics.trace.record(seq, EventKind::Finish { outcome });
         if let Err(e) = &out {
             metrics.record_error(e.to_string());
         } else {
@@ -1789,6 +1930,7 @@ fn run_decode_step(
         // client cancelled (or abandoned the ticket): return the tokens
         // generated so far; dropping the task frees its pages
         metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+        metrics.trace.record(seq, EventKind::Cancel);
         let mut resp = generate_response(seq, &mut task);
         resp.finish = Finish::Cancelled;
         finish(task, Ok(resp));
@@ -1796,6 +1938,7 @@ fn run_decode_step(
     }
     if task.deadline.is_some_and(|d| Instant::now() >= d) {
         metrics.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+        metrics.trace.record(seq, EventKind::DeadlineExceeded);
         let mut resp = generate_response(seq, &mut task);
         resp.finish = Finish::DeadlineExceeded;
         finish(task, Ok(resp));
@@ -1825,6 +1968,13 @@ fn run_decode_step(
                         round.accepted as u64,
                         round.infos.len() as u64,
                     );
+                    metrics.trace.record(
+                        seq,
+                        EventKind::SpecRound {
+                            drafted: round.drafted as u32,
+                            accepted: round.accepted as u32,
+                        },
+                    );
                     (round.infos, round.halt)
                 })
         } else {
@@ -1838,6 +1988,11 @@ fn run_decode_step(
         Ok(r) => r,
         Err(_) => {
             metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+            metrics.trace.record(seq, EventKind::Panic { site: PanicSite::Decode });
+            if let Some(r) = metrics.trace.recorder() {
+                let replay = faults.map(|f| f.spec_string());
+                eprintln!("{}", r.render_failure_dump(Some(seq), replay.as_deref()));
+            }
             finish(task, Err(anyhow::Error::new(ServeError::WorkerPanic)));
             return;
         }
@@ -1850,7 +2005,17 @@ fn run_decode_step(
                     info.budget_fraction,
                     info.dense,
                 );
+                metrics.record_step_telemetry(info.n_ctx, &info.telemetry);
                 task.tokens.push(info.token);
+            }
+            if let Some(last) = infos.last() {
+                metrics.trace.record(
+                    seq,
+                    EventKind::DecodeStep {
+                        tokens: infos.len() as u32,
+                        n_ctx: last.n_ctx as u32,
+                    },
+                );
             }
             let done = task.tokens.len() >= task.max_new || halt;
             if done {
@@ -2047,5 +2212,88 @@ mod tests {
             ticket.recv_timeout(Duration::from_secs(10)).expect("cancelled branch still answers");
         assert_eq!(resp.finish, Finish::Cancelled);
         assert!(resp.tokens.len() < 64, "stopped before the length cap");
+    }
+
+    #[test]
+    fn flight_recorder_captures_full_branch_span() {
+        let coord = tiny_coordinator();
+        let mut tickets = coord
+            .submit_generate_tickets(vec![1, 2, 3, 4], 4, DecodePolicy::default(), 1, None)
+            .expect("submit");
+        let mut ticket = tickets.pop().expect("one branch");
+        let seq = ticket.seq();
+        let resp = ticket.recv().expect("generate");
+        assert_eq!(resp.finish, Finish::Complete);
+        let rec = coord.flight_recorder().expect("tracing is on by default");
+        let ev = rec.span_events(seq);
+        assert!(
+            matches!(ev.first().map(|e| e.kind), Some(EventKind::Submit { tokens: 4 })),
+            "span must open with submit: {ev:?}"
+        );
+        assert!(
+            matches!(
+                ev.last().map(|e| e.kind),
+                Some(EventKind::Finish { outcome: Outcome::Complete })
+            ),
+            "span must close with its terminal outcome: {ev:?}"
+        );
+        for probe in ["prefix-route", "fork", "decode-step"] {
+            assert!(
+                ev.iter().any(|e| e.kind.to_string().starts_with(probe)),
+                "span missing {probe}: {ev:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn trace_events_zero_disables_tracing() {
+        let backend = Arc::new(SyntheticEngine::new(&[64, 128]));
+        let coord = Coordinator::with_backend(
+            backend,
+            CoordinatorConfig {
+                workers: 2,
+                kv_pages: 256,
+                faults: None,
+                trace_events: 0,
+                ..CoordinatorConfig::default()
+            },
+        );
+        let gen = coord
+            .generate_blocking(vec![1, 2, 3], 4, DecodePolicy::default())
+            .expect("generate");
+        assert_eq!(gen.finish, Finish::Complete);
+        assert!(coord.flight_recorder().is_none());
+        assert!(coord.snapshot().trace.is_none(), "snapshot reports tracing off");
+    }
+
+    #[test]
+    fn snapshot_carries_kv_gauges_trace_stats_and_counters() {
+        let coord = tiny_coordinator();
+        coord
+            .prefill_blocking(
+                "tiny",
+                Method::Stem { k_start: 4.0, mu: 0.7, beta: 0.2 },
+                vec![1, 2, 3],
+                false,
+            )
+            .expect("prefill");
+        let gen = coord
+            .generate_blocking(vec![1, 2, 3, 4], 4, DecodePolicy::default())
+            .expect("generate");
+        assert_eq!(gen.finish, Finish::Complete);
+        let snap = coord.snapshot();
+        assert_eq!(snap.submitted, 1);
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.generates_completed, 1);
+        assert!(snap.decode_steps >= 4);
+        let kv = snap.kv.expect("coordinator snapshots carry KV gauges");
+        assert_eq!(kv.pages_total, 256);
+        let trace = snap.trace.expect("tracing armed by default");
+        assert!(trace.recorded > 0, "serving traffic must have recorded events");
+        // kernel-level sparsity telemetry reached the aggregate bands
+        let steps: u64 = snap.sparsity.iter().map(|b| b.steps).sum();
+        assert_eq!(steps, snap.decode_steps, "every decode step observed once");
+        let json = snap.to_json().to_string();
+        assert!(json.contains("\"schema_version\""), "{json}");
     }
 }

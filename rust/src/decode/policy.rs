@@ -10,6 +10,7 @@
 //! (`dense_below`), and the attention sinks plus the most recent blocks
 //! are always kept regardless of score (`sink_blocks` / `recent_blocks`).
 
+use crate::obs::sparsity::DenseCause;
 use crate::sparse::schedule;
 
 /// Decode-phase sparsity policy (see module docs).
@@ -140,6 +141,18 @@ impl DecodePolicy {
         }
     }
 
+    /// Telemetry classification of a [`StepPlan::Dense`] outcome for a
+    /// context of `n_ctx` tokens: Lil's short-context floor, or the TPD
+    /// budget simply covering every causal block. Only meaningful when
+    /// [`DecodePolicy::plan`] actually returned the dense plan.
+    pub fn dense_cause(&self, n_ctx: usize) -> DenseCause {
+        if n_ctx < self.dense_below {
+            DenseCause::ShortContext
+        } else {
+            DenseCause::BudgetCovers
+        }
+    }
+
     /// Fraction of the cached context a plan attends (the decode analogue
     /// of the prefill budget fraction).
     pub fn plan_fraction(plan: StepPlan, n_ctx: usize, block: usize) -> f64 {
@@ -223,6 +236,15 @@ mod tests {
         // drafting an already-sparse policy keeps its budget shape
         let sparse = DecodePolicy { dense_below: 0, k_start: 6.0, ..Default::default() };
         assert_eq!(sparse.draft().k_start, 6.0);
+    }
+
+    #[test]
+    fn dense_cause_distinguishes_floor_from_coverage() {
+        let p = DecodePolicy::default(); // dense_below = 1024
+        assert_eq!(p.dense_cause(512), DenseCause::ShortContext);
+        assert_eq!(p.dense_cause(2048), DenseCause::BudgetCovers);
+        // boundary: n_ctx == dense_below is not "short"
+        assert_eq!(p.dense_cause(1024), DenseCause::BudgetCovers);
     }
 
     #[test]

@@ -29,6 +29,7 @@ use std::time::Instant;
 
 use crate::coordinator::kv_cache::KvError;
 use crate::model::vocab;
+use crate::obs::sparsity::StepTelemetry;
 use crate::sparse::Tensor;
 use crate::util::rng::Rng;
 
@@ -185,6 +186,10 @@ pub struct StepInfo {
     pub dense: bool,
     /// Wall-clock of the step (projection + append + attention + unembed).
     pub step_ns: u64,
+    /// The step's sparsity observation (blocks visited/planned/kept,
+    /// dense cause, captured OAM score mass) — see
+    /// [`crate::obs::sparsity::StepTelemetry`].
+    pub telemetry: StepTelemetry,
 }
 
 /// Aggregate result of [`DecodeSession::generate`].
@@ -481,6 +486,7 @@ impl DecodeSession {
             budget_fraction: att.budget_fraction,
             dense: att.dense,
             step_ns,
+            telemetry: att.telemetry,
         };
         self.last_token = token;
         self.step += 1;

@@ -20,10 +20,11 @@
 //! property the `decode::spec` commit rule turns into bit-exact
 //! equivalence with non-speculative decode.
 
+use crate::obs::sparsity::StepTelemetry;
 use crate::sparse::{
-    decode_block_scores, dense_decode_attention, dense_decode_attention_reference, select_decode,
-    sparse_decode_attention, sparse_verify_attention, KvBlocks, KvPrefix, Selection,
-    SelectionBuilder, Tensor,
+    decode_block_scores, dense_decode_attention, dense_decode_attention_reference,
+    select_decode, selection_score_mass, sparse_decode_attention, sparse_verify_attention,
+    KvBlocks, KvPrefix, Selection, SelectionBuilder, Tensor,
 };
 
 use super::policy::{DecodePolicy, StepPlan};
@@ -43,6 +44,11 @@ pub struct DecodeAttnOut {
     /// on the dense fast path, which attends the whole context without
     /// computing scores or materializing a [`Selection`].
     pub ranked: bool,
+    /// Sparsity observation for this step (blocks visited/planned/kept,
+    /// dense cause, captured OAM score mass) — what
+    /// `coordinator::Metrics::record_step_telemetry` folds into the
+    /// per-band gauges.
+    pub telemetry: StepTelemetry,
 }
 
 /// Run one policy-directed decode attention step. `q` is `[H, dh]` (all
@@ -70,6 +76,7 @@ pub fn decode_attend(
                 dense: true,
                 selected_blocks: nblk,
                 ranked: false,
+                telemetry: StepTelemetry::dense(nblk, policy.dense_cause(n_ctx)),
             }
         }
         StepPlan::Sparse { budget_blocks } => {
@@ -77,6 +84,7 @@ pub fn decode_attend(
             let sel =
                 select_decode(&scores, budget_blocks, policy.sink_blocks, policy.recent_blocks);
             debug_assert!(sel.validate_decode(nblk).is_ok());
+            let mass = selection_score_mass(&scores, &sel);
             let out = sparse_decode_attention(q, kv, &sel);
             DecodeAttnOut {
                 out,
@@ -84,6 +92,7 @@ pub fn decode_attend(
                 dense: false,
                 selected_blocks: sel.count(0, 0),
                 ranked: true,
+                telemetry: StepTelemetry::sparse(nblk, sel.count(0, 0), budget_blocks, mass),
             }
         }
     }
@@ -100,6 +109,10 @@ pub struct VerifyAttnOut {
     /// the caller's per-token budget/dense accounting matches
     /// non-speculative decode.
     pub plans: Vec<StepPlan>,
+    /// Per-position sparsity observations, parallel to `plans` — each
+    /// entry is what a sequential [`decode_attend`] at that width would
+    /// have reported in [`DecodeAttnOut::telemetry`].
+    pub telemetry: Vec<StepTelemetry>,
 }
 
 /// Batched serving-policy attention over G consecutive stream positions
@@ -132,14 +145,25 @@ pub fn verify_attend(
     let nblk_max = kv.n_blocks();
     let plans: Vec<StepPlan> =
         (0..g_rows).map(|g| policy.plan(base_tokens + g, step0 + g, block)).collect();
+    let nblk_at = |g: usize| (base_tokens + g).div_ceil(block.max(1));
+    let mut telemetry: Vec<StepTelemetry> = Vec::with_capacity(g_rows);
     let sel = if plans.iter().all(|p| matches!(p, StepPlan::Dense)) {
         // all-dense batch: one shared full selection, no scoring
+        for g in 0..g_rows {
+            telemetry.push(StepTelemetry::dense(nblk_at(g), policy.dense_cause(base_tokens + g)));
+        }
         Selection::verify_full(h, g_rows, nblk_max)
     } else {
         let mut row_sels: Vec<Option<Selection>> = Vec::with_capacity(g_rows);
         for (g, plan) in plans.iter().enumerate() {
             match *plan {
-                StepPlan::Dense => row_sels.push(None),
+                StepPlan::Dense => {
+                    telemetry.push(StepTelemetry::dense(
+                        nblk_at(g),
+                        policy.dense_cause(base_tokens + g),
+                    ));
+                    row_sels.push(None);
+                }
                 StepPlan::Sparse { budget_blocks } => {
                     let pre = KvPrefix::new(kv, base_tokens + g);
                     let qg = Tensor::from_vec(
@@ -147,12 +171,19 @@ pub fn verify_attend(
                         q.data[g * h * dh..(g + 1) * h * dh].to_vec(),
                     );
                     let scores = decode_block_scores(&qg, &pre, policy.stride, policy.beta);
-                    row_sels.push(Some(select_decode(
+                    let s = select_decode(
                         &scores,
                         budget_blocks,
                         policy.sink_blocks,
                         policy.recent_blocks,
-                    )));
+                    );
+                    telemetry.push(StepTelemetry::sparse(
+                        nblk_at(g),
+                        s.count(0, 0),
+                        budget_blocks,
+                        selection_score_mass(&scores, &s),
+                    ));
+                    row_sels.push(Some(s));
                 }
             }
         }
@@ -177,8 +208,9 @@ pub fn verify_attend(
         b.finish()
     };
     debug_assert!(sel.validate_verify(nblk_max).is_ok());
+    debug_assert_eq!(telemetry.len(), g_rows);
     let out = sparse_verify_attention(q, kv, &sel, base_tokens);
-    VerifyAttnOut { out, plans }
+    VerifyAttnOut { out, plans, telemetry }
 }
 
 /// Scalar full-context oracle (re-export for tests and benches).
@@ -221,6 +253,21 @@ mod tests {
         // k_at floors the schedule: budget lands in [min_blocks, k_start]
         assert!((4..=6).contains(&sparse.selected_blocks), "{}", sparse.selected_blocks);
         assert!(sparse.out.iter().all(|x| x.is_finite()));
+
+        // telemetry pins both paths: dense reports full capture with a
+        // cause, sparse reports the realized selection and its mass
+        use crate::obs::sparsity::DenseCause;
+        assert_eq!(dense.telemetry.dense_cause, Some(DenseCause::ShortContext));
+        assert_eq!(dense.telemetry.blocks_kept, kv.n_blocks() as u32);
+        assert_eq!(dense.telemetry.score_mass, 1.0);
+        assert_eq!(sparse.telemetry.dense_cause, None);
+        assert_eq!(sparse.telemetry.blocks_total, kv.n_blocks() as u32);
+        assert_eq!(sparse.telemetry.blocks_kept, sparse.selected_blocks as u32);
+        assert!(
+            sparse.telemetry.score_mass > 0.0 && sparse.telemetry.score_mass <= 1.0,
+            "{}",
+            sparse.telemetry.score_mass
+        );
     }
 
     #[test]
@@ -292,6 +339,10 @@ mod tests {
                     DecodePolicy::plan_fraction(ver.plans[g], base + g, block),
                     seq.budget_fraction,
                     "budget accounting mismatch at {g}"
+                );
+                assert_eq!(
+                    ver.telemetry[g], seq.telemetry,
+                    "sparsity telemetry mismatch at {g}"
                 );
             }
         }

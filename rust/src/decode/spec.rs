@@ -210,6 +210,7 @@ impl DecodeSession {
                 budget_fraction: DecodePolicy::plan_fraction(plan, n0 + i + 1, block),
                 dense: plan == StepPlan::Dense,
                 step_ns: per_tok_ns,
+                telemetry: ver.telemetry[i],
             };
             infos.push(info);
             let keep = on_token(&info);

@@ -27,6 +27,8 @@
 //!   simulator and the scheduler.
 //! * [`eval`] — accuracy harness + paper table/figure drivers.
 //! * [`sim`] — Eq. (2)/(4)/(8) cost model and H20 latency projection.
+//! * [`obs`] — observability: flight-recorder tracing, structured metrics
+//!   snapshots (JSON + Prometheus), per-band sparsity telemetry.
 //!
 //! The serving-stack architecture (dataflow, KV ownership, the page
 //! refcount/CoW lifecycle) is documented in `docs/ARCHITECTURE.md`.
@@ -37,6 +39,7 @@ pub mod coordinator;
 pub mod decode;
 pub mod eval;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod sparse;

@@ -17,7 +17,8 @@
 //! Common flags: --artifacts <dir>  --limit <n per eval set>  --workers <n>
 //!               --buckets 512,1024,2048  --quiet
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -40,6 +41,7 @@ USAGE: stem <subcommand> [flags]
 
   serve     [--requests N] [--rps R] [--method stem|dense|...] [--mix]
             [--prefix-mode exact|radix] [--deadline-ms MS]
+            [--metrics-out FILE] [--metrics-interval-ms N]
   generate  [--prompt 1,16,17 | --prompt-len N] [--max-new N] [--dense]
             [--fanout N] [--spec N] [--k-start K] [--mu MU] [--sink S]
             [--recent R] [--dense-below TOKENS] [--block B] [--pages P]
@@ -61,6 +63,9 @@ flags: --artifacts DIR  --workers N  --threads N  --limit N  --quiet
        longest-common-prefix reuse with partial-page forks; default radix)
        --deadline-ms MS  (serve: per-request TTL — queued work past it is
        shed with a typed error instead of executed; default none)
+       --metrics-out FILE  (serve: write the structured metrics snapshot
+       as JSON to FILE and Prometheus text to FILE.prom, every
+       --metrics-interval-ms (default 1000) and once more at shutdown)
        (--threads / STEM_THREADS size the pure-rust sparse-core pool;
        STEM_FAULTS=seed=S,kv=R,exec=R,step=R,stall=R,stall_us=U arms
        deterministic fault injection in the coordinator for chaos runs)
@@ -183,6 +188,32 @@ fn serve(args: &Args) -> Result<()> {
         Some(v) => Some(v.parse().map_err(|_| anyhow!("--deadline-ms must be an integer"))?),
         None => None,
     };
+    // --metrics-out FILE: periodic structured metrics export (JSON at
+    // FILE, Prometheus text at FILE.prom) plus a final snapshot once the
+    // trace drains — the scrape-free monitoring path (obs::snapshot)
+    let metrics_out: Option<PathBuf> = args.get("metrics-out").map(PathBuf::from);
+    let metrics_interval = Duration::from_millis(args.u64_or("metrics-interval-ms", 1000));
+    let stop_exporter = Arc::new(AtomicBool::new(false));
+    let exporter = metrics_out.clone().map(|path| {
+        let coord = Arc::clone(&coord);
+        let stop = Arc::clone(&stop_exporter);
+        std::thread::spawn(move || {
+            // tick in small slices so shutdown joins promptly even with
+            // a long export interval
+            const TICK: Duration = Duration::from_millis(20);
+            let mut since = Duration::ZERO;
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(TICK);
+                since += TICK;
+                if since >= metrics_interval {
+                    since = Duration::ZERO;
+                    if let Err(e) = write_metrics(&coord, &path) {
+                        eprintln!("[stem:serve] metrics export failed: {e}");
+                    }
+                }
+            }
+        })
+    });
 
     // sample pool: every longbench eval set, mixed families and lengths
     let mut pool = vec![];
@@ -243,6 +274,10 @@ fn serve(args: &Args) -> Result<()> {
         }
     }
     let wall = start.elapsed();
+    stop_exporter.store(true, Ordering::Relaxed);
+    if let Some(h) = exporter {
+        let _ = h.join();
+    }
     println!("{}", coord.report());
     println!(
         "served {ok}/{n_requests} requests ({shed} shed) in {:.2}s ({:.1} req/s), exact-match {:.1}%",
@@ -250,6 +285,22 @@ fn serve(args: &Args) -> Result<()> {
         ok as f64 / wall.as_secs_f64(),
         100.0 * em as f64 / ok.max(1) as f64
     );
+    // final artifact: one last snapshot after every response has landed
+    if let Some(path) = &metrics_out {
+        write_metrics(&coord, path)?;
+        println!("metrics written to {} (+ .prom)", path.display());
+    }
+    Ok(())
+}
+
+/// Write the coordinator's current metrics snapshot to `path` (JSON) and
+/// `path.prom` (Prometheus text exposition).
+fn write_metrics(coord: &Coordinator, path: &Path) -> Result<()> {
+    let snap = coord.snapshot();
+    std::fs::write(path, format!("{}\n", snap.to_json()))?;
+    let mut prom = path.as_os_str().to_owned();
+    prom.push(".prom");
+    std::fs::write(PathBuf::from(prom), snap.to_prometheus())?;
     Ok(())
 }
 

@@ -1,0 +1,35 @@
+//! Observability subsystem: flight-recorder tracing, structured metrics
+//! export, and sparsity telemetry.
+//!
+//! Three layers, threaded through the whole serving stack:
+//!
+//! * [`trace`] — a lock-free ring-buffer **flight recorder** of typed
+//!   trace events (submit, shed, batch, exec, fork, prefix routing,
+//!   decode steps, speculative rounds, degradation transitions,
+//!   deadline/cancel/panic, terminal outcomes) keyed by per-request span
+//!   ids. Dumped automatically — together with the `STEM_FAULTS` replay
+//!   line — when a chaos test fails or a worker panic is caught.
+//! * [`snapshot`] — [`MetricsSnapshot`]: a machine-readable point-in-time
+//!   export of every serving counter with *exact* histogram buckets, as
+//!   JSON (`util::json`) and Prometheus text exposition. Written
+//!   periodically by `stem serve --metrics-out FILE
+//!   --metrics-interval-ms N` and schema-checked in CI.
+//! * [`sparsity`] — per-context-band telemetry from the decode kernels
+//!   up: blocks visited vs kept, realized k vs the TPD schedule,
+//!   dense-fallback causes, and captured OAM score mass — the
+//!   measurement substrate for the paper's decode-stage sparsity claims.
+//!
+//! The recorder handle ([`Trace`]) and the band counters
+//! ([`sparsity::SparsityStats`]) live *inside* `coordinator::Metrics`, so
+//! any code path holding the shared metrics block can trace and observe
+//! without new plumbing; both are branch-on-`Option`/relaxed-atomic cheap
+//! (the `telemetry_overhead` gate in `BENCH_serve.json` holds the whole
+//! layer to ≤ 5% of admitted throughput).
+
+pub mod snapshot;
+pub mod sparsity;
+pub mod trace;
+
+pub use snapshot::{HistoBucket, HistoSnapshot, KvGauges, MetricsSnapshot, TraceStats};
+pub use sparsity::{band_index, band_label, BandSnapshot, DenseCause, SparsityStats, StepTelemetry};
+pub use trace::{EventKind, FlightRecorder, Outcome, PanicSite, RouteKind, Trace, TraceEvent};

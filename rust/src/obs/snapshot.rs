@@ -1,0 +1,686 @@
+//! Structured metrics export: a point-in-time [`MetricsSnapshot`] of the
+//! serving counters, exact histogram buckets, sparsity bands and trace
+//! stats, serializable as JSON (via `util::json`, the crate has no serde)
+//! and as Prometheus text exposition.
+//!
+//! `stem serve --metrics-out FILE --metrics-interval-ms N` writes the JSON
+//! form periodically (plus a final artifact at shutdown) and the Prometheus
+//! form next to it as `FILE.prom`; `benches/bench_serve.rs` emits one as
+//! `metrics.json` so CI can schema-check the export. The snapshot is
+//! collected with relaxed atomic loads — taking one costs microseconds and
+//! never blocks the serving path.
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use crate::coordinator::metrics::{LatencyHisto, Metrics};
+use crate::obs::sparsity::BandSnapshot;
+use crate::util::json::Json;
+
+/// Schema version stamped into the JSON export; bump on breaking changes.
+pub const SNAPSHOT_SCHEMA_VERSION: u64 = 1;
+
+/// One cumulative histogram bucket: samples `<= le_us` microseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistoBucket {
+    /// Inclusive upper bound of the bucket in microseconds.
+    pub le_us: u64,
+    /// Cumulative sample count at or below `le_us`.
+    pub count: u64,
+}
+
+/// Exact export of one [`LatencyHisto`]: cumulative power-of-two buckets
+/// (Prometheus `le` convention) plus count/sum/max and clamped percentiles.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistoSnapshot {
+    /// Samples recorded.
+    pub count: u64,
+    /// Sum of all samples in microseconds.
+    pub sum_us: u64,
+    /// Largest sample in microseconds.
+    pub max_us: u64,
+    /// p50 estimate (bucket bound clamped to `max_us`).
+    pub p50_us: u64,
+    /// p90 estimate.
+    pub p90_us: u64,
+    /// p99 estimate.
+    pub p99_us: u64,
+    /// Cumulative buckets up to the highest non-empty one (empty when no
+    /// samples were recorded). The implicit `+Inf` bucket equals `count`.
+    pub buckets: Vec<HistoBucket>,
+}
+
+impl HistoSnapshot {
+    /// Snapshot a live histogram.
+    pub fn collect(h: &LatencyHisto) -> HistoSnapshot {
+        let raw = h.bucket_counts();
+        let hi = raw.iter().rposition(|&c| c > 0);
+        let mut buckets = Vec::new();
+        if let Some(hi) = hi {
+            let mut acc = 0u64;
+            for (i, &c) in raw.iter().enumerate().take(hi + 1) {
+                acc += c;
+                buckets.push(HistoBucket { le_us: (1u64 << (i + 1)) - 1, count: acc });
+            }
+        }
+        HistoSnapshot {
+            count: h.count(),
+            sum_us: h.sum_us(),
+            max_us: h.max_us(),
+            p50_us: h.percentile_us(0.5),
+            p90_us: h.percentile_us(0.9),
+            p99_us: h.percentile_us(0.99),
+            buckets,
+        }
+    }
+
+    /// JSON form (`{count, sum_us, max_us, p50_us, p90_us, p99_us,
+    /// buckets: [{le_us, count}, ...]}`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("sum_us", Json::Num(self.sum_us as f64)),
+            ("max_us", Json::Num(self.max_us as f64)),
+            ("p50_us", Json::Num(self.p50_us as f64)),
+            ("p90_us", Json::Num(self.p90_us as f64)),
+            ("p99_us", Json::Num(self.p99_us as f64)),
+            (
+                "buckets",
+                Json::arr(self.buckets.iter().map(|b| {
+                    Json::obj(vec![
+                        ("le_us", Json::Num(b.le_us as f64)),
+                        ("count", Json::Num(b.count as f64)),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// KV-pool gauges attached by the coordinator (absent when snapshotting a
+/// bare [`Metrics`] block with no pool).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvGauges {
+    /// Pages currently allocated to live sequences.
+    pub pages_used: u64,
+    /// Total pages in the pool.
+    pub pages_total: u64,
+    /// K/V slab pages resident in the payload store.
+    pub slab_pages: u64,
+}
+
+/// Flight-recorder stats attached when tracing is armed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceStats {
+    /// Events ever recorded.
+    pub recorded: u64,
+    /// Ring capacity in events.
+    pub capacity: u64,
+    /// Events lost to ring wrap.
+    pub dropped: u64,
+}
+
+/// A point-in-time, plain-data view of the whole serving metrics surface.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Coordinator uptime when the snapshot was taken, microseconds.
+    pub uptime_us: u64,
+    /// Prefill requests accepted by admission.
+    pub submitted: u64,
+    /// Prefill requests completed.
+    pub completed: u64,
+    /// Requests shed by admission.
+    pub rejected: u64,
+    /// Prefill batches emitted.
+    pub batches: u64,
+    /// Tokens ingested.
+    pub tokens_in: u64,
+    /// Generation branches accepted.
+    pub generates_submitted: u64,
+    /// Generation branches completed.
+    pub generates_completed: u64,
+    /// Queue-wait latency histogram.
+    pub queue: HistoSnapshot,
+    /// Worker-execution latency histogram.
+    pub exec: HistoSnapshot,
+    /// Time-to-first-token histogram.
+    pub ttft: HistoSnapshot,
+    /// Per-decode-step latency histogram.
+    pub decode_step: HistoSnapshot,
+    /// Decode-step batches emitted by the continuous-batching lane.
+    pub decode_batches: u64,
+    /// Decode steps executed (== tokens generated).
+    pub decode_steps: u64,
+    /// Steps that ran the dense fallback.
+    pub decode_dense_steps: u64,
+    /// Mean per-step decode budget fraction.
+    pub mean_decode_budget: f64,
+    /// Speculative rounds executed.
+    pub spec_rounds: u64,
+    /// Draft tokens proposed.
+    pub spec_drafted: u64,
+    /// Draft tokens accepted by the verifier.
+    pub spec_accepted: u64,
+    /// Tokens committed by speculative rounds.
+    pub spec_committed: u64,
+    /// Branch sessions forked off a cached prefix.
+    pub forks: u64,
+    /// Exact prefix hits.
+    pub prefix_hits: u64,
+    /// Radix partial prefix hits.
+    pub prefix_partial_hits: u64,
+    /// Prefix misses (full ingest).
+    pub prefix_misses: u64,
+    /// Prompt tokens routed (covered-ratio denominator).
+    pub prefix_tokens_total: u64,
+    /// Prompt tokens served from cached prefixes.
+    pub prefix_tokens_covered: u64,
+    /// Requests shed in queue by their deadline.
+    pub shed_deadline: u64,
+    /// Branches cut mid-decode by their deadline.
+    pub deadline_exceeded: u64,
+    /// Branches cancelled or abandoned.
+    pub cancelled: u64,
+    /// Worker panics caught and isolated.
+    pub worker_panics: u64,
+    /// Current degradation level (gauge).
+    pub degradation_level: u64,
+    /// Degradation transitions since start.
+    pub degradation_transitions: u64,
+    /// Total errors ever logged.
+    pub errors_logged: u64,
+    /// Errors evicted from the capped ring.
+    pub errors_dropped: u64,
+    /// The retained (newest) error strings, oldest first.
+    pub recent_errors: Vec<String>,
+    /// Per-context-band sparsity telemetry.
+    pub sparsity: Vec<BandSnapshot>,
+    /// KV-pool gauges, when a pool was attached.
+    pub kv: Option<KvGauges>,
+    /// Flight-recorder stats, when tracing is armed.
+    pub trace: Option<TraceStats>,
+}
+
+impl MetricsSnapshot {
+    /// Collect a snapshot from a live metrics block. `kv` carries the
+    /// pool gauges when the caller owns one (the coordinator does).
+    pub fn collect(m: &Metrics, kv: Option<KvGauges>, uptime: Duration) -> MetricsSnapshot {
+        let (errors_logged, errors_dropped, recent_errors) = {
+            let e = m.errors.lock().unwrap_or_else(|p| p.into_inner());
+            (e.logged(), e.dropped(), e.to_vec())
+        };
+        let trace = m.trace.recorder().map(|r| TraceStats {
+            recorded: r.recorded(),
+            capacity: r.capacity() as u64,
+            dropped: r.dropped(),
+        });
+        MetricsSnapshot {
+            uptime_us: uptime.as_micros() as u64,
+            submitted: m.submitted.load(Ordering::Relaxed),
+            completed: m.completed.load(Ordering::Relaxed),
+            rejected: m.rejected.load(Ordering::Relaxed),
+            batches: m.batches.load(Ordering::Relaxed),
+            tokens_in: m.tokens_in.load(Ordering::Relaxed),
+            generates_submitted: m.generates_submitted.load(Ordering::Relaxed),
+            generates_completed: m.generates_completed.load(Ordering::Relaxed),
+            queue: HistoSnapshot::collect(&m.queue),
+            exec: HistoSnapshot::collect(&m.exec),
+            ttft: HistoSnapshot::collect(&m.ttft),
+            decode_step: HistoSnapshot::collect(&m.decode_step),
+            decode_batches: m.decode_batches.load(Ordering::Relaxed),
+            decode_steps: m.decode_steps.load(Ordering::Relaxed),
+            decode_dense_steps: m.decode_dense_steps.load(Ordering::Relaxed),
+            mean_decode_budget: m.mean_decode_budget(),
+            spec_rounds: m.spec_rounds.load(Ordering::Relaxed),
+            spec_drafted: m.spec_drafted.load(Ordering::Relaxed),
+            spec_accepted: m.spec_accepted.load(Ordering::Relaxed),
+            spec_committed: m.spec_committed.load(Ordering::Relaxed),
+            forks: m.forks.load(Ordering::Relaxed),
+            prefix_hits: m.prefix_hits.load(Ordering::Relaxed),
+            prefix_partial_hits: m.prefix_partial_hits.load(Ordering::Relaxed),
+            prefix_misses: m.prefix_misses.load(Ordering::Relaxed),
+            prefix_tokens_total: m.prefix_tokens_total.load(Ordering::Relaxed),
+            prefix_tokens_covered: m.prefix_tokens_covered.load(Ordering::Relaxed),
+            shed_deadline: m.shed_deadline.load(Ordering::Relaxed),
+            deadline_exceeded: m.deadline_exceeded.load(Ordering::Relaxed),
+            cancelled: m.cancelled.load(Ordering::Relaxed),
+            worker_panics: m.worker_panics.load(Ordering::Relaxed),
+            degradation_level: m.degradation_level.load(Ordering::Relaxed),
+            degradation_transitions: m.degradation_transitions.load(Ordering::Relaxed),
+            errors_logged,
+            errors_dropped,
+            recent_errors,
+            sparsity: m.sparsity.bands(),
+            kv,
+            trace,
+        }
+    }
+
+    /// Serialize as the versioned JSON schema checked by CI (see the
+    /// bench-smoke schema step in `.github/workflows/ci.yml`).
+    pub fn to_json(&self) -> Json {
+        let band_json = |b: &BandSnapshot| {
+            Json::obj(vec![
+                ("band", Json::str(b.label)),
+                ("steps", Json::Num(b.steps as f64)),
+                ("sparse_steps", Json::Num(b.sparse_steps() as f64)),
+                ("dense_short_context", Json::Num(b.dense_short_context as f64)),
+                ("dense_budget_covers", Json::Num(b.dense_budget_covers as f64)),
+                ("blocks_total", Json::Num(b.blocks_total as f64)),
+                ("blocks_kept", Json::Num(b.blocks_kept as f64)),
+                ("blocks_planned", Json::Num(b.blocks_planned as f64)),
+                ("kept_fraction", Json::Num(b.kept_fraction())),
+                ("planned_fraction", Json::Num(b.planned_fraction())),
+                ("mean_score_mass", Json::Num(b.mean_score_mass())),
+            ])
+        };
+        let spec_acceptance = if self.spec_drafted == 0 {
+            0.0
+        } else {
+            self.spec_accepted as f64 / self.spec_drafted as f64
+        };
+        let covered_ratio = if self.prefix_tokens_total == 0 {
+            0.0
+        } else {
+            self.prefix_tokens_covered as f64 / self.prefix_tokens_total as f64
+        };
+        Json::obj(vec![
+            ("schema_version", Json::Num(SNAPSHOT_SCHEMA_VERSION as f64)),
+            ("uptime_us", Json::Num(self.uptime_us as f64)),
+            (
+                "requests",
+                Json::obj(vec![
+                    ("submitted", Json::Num(self.submitted as f64)),
+                    ("completed", Json::Num(self.completed as f64)),
+                    ("rejected", Json::Num(self.rejected as f64)),
+                    ("batches", Json::Num(self.batches as f64)),
+                    ("tokens_in", Json::Num(self.tokens_in as f64)),
+                    ("generates_submitted", Json::Num(self.generates_submitted as f64)),
+                    ("generates_completed", Json::Num(self.generates_completed as f64)),
+                ]),
+            ),
+            (
+                "latency_us",
+                Json::obj(vec![
+                    ("queue", self.queue.to_json()),
+                    ("exec", self.exec.to_json()),
+                    ("ttft", self.ttft.to_json()),
+                    ("decode_step", self.decode_step.to_json()),
+                ]),
+            ),
+            (
+                "decode",
+                Json::obj(vec![
+                    ("batches", Json::Num(self.decode_batches as f64)),
+                    ("steps", Json::Num(self.decode_steps as f64)),
+                    ("dense_steps", Json::Num(self.decode_dense_steps as f64)),
+                    ("mean_budget_fraction", Json::Num(self.mean_decode_budget)),
+                ]),
+            ),
+            (
+                "spec",
+                Json::obj(vec![
+                    ("rounds", Json::Num(self.spec_rounds as f64)),
+                    ("drafted", Json::Num(self.spec_drafted as f64)),
+                    ("accepted", Json::Num(self.spec_accepted as f64)),
+                    ("committed", Json::Num(self.spec_committed as f64)),
+                    ("acceptance", Json::Num(spec_acceptance)),
+                ]),
+            ),
+            (
+                "prefix",
+                Json::obj(vec![
+                    ("hits", Json::Num(self.prefix_hits as f64)),
+                    ("partial_hits", Json::Num(self.prefix_partial_hits as f64)),
+                    ("misses", Json::Num(self.prefix_misses as f64)),
+                    ("forks", Json::Num(self.forks as f64)),
+                    ("tokens_total", Json::Num(self.prefix_tokens_total as f64)),
+                    ("tokens_covered", Json::Num(self.prefix_tokens_covered as f64)),
+                    ("covered_ratio", Json::Num(covered_ratio)),
+                ]),
+            ),
+            (
+                "failures",
+                Json::obj(vec![
+                    ("shed_deadline", Json::Num(self.shed_deadline as f64)),
+                    ("deadline_exceeded", Json::Num(self.deadline_exceeded as f64)),
+                    ("cancelled", Json::Num(self.cancelled as f64)),
+                    ("worker_panics", Json::Num(self.worker_panics as f64)),
+                    ("errors_logged", Json::Num(self.errors_logged as f64)),
+                    ("errors_dropped", Json::Num(self.errors_dropped as f64)),
+                    (
+                        "recent_errors",
+                        Json::arr(self.recent_errors.iter().map(|e| Json::str(e.clone()))),
+                    ),
+                ]),
+            ),
+            (
+                "degradation",
+                Json::obj(vec![
+                    ("level", Json::Num(self.degradation_level as f64)),
+                    ("transitions", Json::Num(self.degradation_transitions as f64)),
+                ]),
+            ),
+            (
+                "kv",
+                match &self.kv {
+                    Some(kv) => Json::obj(vec![
+                        ("pages_used", Json::Num(kv.pages_used as f64)),
+                        ("pages_total", Json::Num(kv.pages_total as f64)),
+                        (
+                            "occupancy",
+                            Json::Num(if kv.pages_total == 0 {
+                                0.0
+                            } else {
+                                kv.pages_used as f64 / kv.pages_total as f64
+                            }),
+                        ),
+                        ("slab_pages", Json::Num(kv.slab_pages as f64)),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "sparsity",
+                Json::obj(vec![("bands", Json::arr(self.sparsity.iter().map(band_json)))]),
+            ),
+            (
+                "trace",
+                match &self.trace {
+                    Some(t) => Json::obj(vec![
+                        ("recorded", Json::Num(t.recorded as f64)),
+                        ("capacity", Json::Num(t.capacity as f64)),
+                        ("dropped", Json::Num(t.dropped as f64)),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    /// Serialize as Prometheus text exposition (counters, gauges, and
+    /// full `_bucket{le=...}` histograms with `_sum`/`_count`).
+    pub fn to_prometheus(&self) -> String {
+        let mut s = String::new();
+        let mut counter = |name: &str, v: u64| {
+            s.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+        };
+        counter("stem_requests_submitted_total", self.submitted);
+        counter("stem_requests_completed_total", self.completed);
+        counter("stem_requests_rejected_total", self.rejected);
+        counter("stem_prefill_batches_total", self.batches);
+        counter("stem_tokens_in_total", self.tokens_in);
+        counter("stem_generates_submitted_total", self.generates_submitted);
+        counter("stem_generates_completed_total", self.generates_completed);
+        counter("stem_decode_batches_total", self.decode_batches);
+        counter("stem_decode_steps_total", self.decode_steps);
+        counter("stem_decode_dense_steps_total", self.decode_dense_steps);
+        counter("stem_spec_rounds_total", self.spec_rounds);
+        counter("stem_spec_drafted_total", self.spec_drafted);
+        counter("stem_spec_accepted_total", self.spec_accepted);
+        counter("stem_spec_committed_total", self.spec_committed);
+        counter("stem_forks_total", self.forks);
+        counter("stem_prefix_hits_total", self.prefix_hits);
+        counter("stem_prefix_partial_hits_total", self.prefix_partial_hits);
+        counter("stem_prefix_misses_total", self.prefix_misses);
+        counter("stem_prefix_tokens_total", self.prefix_tokens_total);
+        counter("stem_prefix_tokens_covered_total", self.prefix_tokens_covered);
+        counter("stem_shed_deadline_total", self.shed_deadline);
+        counter("stem_deadline_exceeded_total", self.deadline_exceeded);
+        counter("stem_cancelled_total", self.cancelled);
+        counter("stem_worker_panics_total", self.worker_panics);
+        counter("stem_errors_logged_total", self.errors_logged);
+        counter("stem_errors_dropped_total", self.errors_dropped);
+        counter("stem_degradation_transitions_total", self.degradation_transitions);
+
+        let mut gauge = |name: &str, v: f64| {
+            s.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+        };
+        gauge("stem_uptime_seconds", self.uptime_us as f64 / 1e6);
+        gauge("stem_degradation_level", self.degradation_level as f64);
+        gauge("stem_decode_mean_budget_fraction", self.mean_decode_budget);
+        if let Some(kv) = &self.kv {
+            gauge("stem_kv_pages_used", kv.pages_used as f64);
+            gauge("stem_kv_pages_total", kv.pages_total as f64);
+            gauge("stem_kv_slab_pages", kv.slab_pages as f64);
+        }
+        if let Some(t) = &self.trace {
+            gauge("stem_trace_events_recorded", t.recorded as f64);
+            gauge("stem_trace_events_dropped", t.dropped as f64);
+        }
+
+        let mut histo = |name: &str, h: &HistoSnapshot| {
+            s.push_str(&format!("# TYPE {name} histogram\n"));
+            for b in &h.buckets {
+                s.push_str(&format!("{name}_bucket{{le=\"{}\"}} {}\n", b.le_us, b.count));
+            }
+            s.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+            s.push_str(&format!("{name}_sum {}\n", h.sum_us));
+            s.push_str(&format!("{name}_count {}\n", h.count));
+        };
+        histo("stem_queue_us", &self.queue);
+        histo("stem_exec_us", &self.exec);
+        histo("stem_ttft_us", &self.ttft);
+        histo("stem_decode_step_us", &self.decode_step);
+
+        for b in &self.sparsity {
+            if b.steps == 0 {
+                continue;
+            }
+            let l = b.label;
+            s.push_str(&format!("stem_sparsity_steps_total{{band=\"{l}\"}} {}\n", b.steps));
+            s.push_str(&format!(
+                "stem_sparsity_dense_steps_total{{band=\"{l}\",cause=\"short_context\"}} {}\n",
+                b.dense_short_context
+            ));
+            s.push_str(&format!(
+                "stem_sparsity_dense_steps_total{{band=\"{l}\",cause=\"budget_covers\"}} {}\n",
+                b.dense_budget_covers
+            ));
+            s.push_str(&format!(
+                "stem_sparsity_kept_fraction{{band=\"{l}\"}} {}\n",
+                b.kept_fraction()
+            ));
+            s.push_str(&format!(
+                "stem_sparsity_planned_fraction{{band=\"{l}\"}} {}\n",
+                b.planned_fraction()
+            ));
+            s.push_str(&format!(
+                "stem_sparsity_score_mass{{band=\"{l}\"}} {}\n",
+                b.mean_score_mass()
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::degrade::{DegradeConfig, Degrader};
+    use crate::obs::sparsity::StepTelemetry;
+    use std::time::Instant;
+
+    fn busy_metrics() -> Metrics {
+        let m = Metrics::new();
+        m.submitted.store(10, Ordering::Relaxed);
+        m.completed.store(9, Ordering::Relaxed);
+        m.rejected.store(1, Ordering::Relaxed);
+        m.tokens_in.store(1024, Ordering::Relaxed);
+        for us in [100u64, 900, 4000] {
+            m.ttft.record(Duration::from_micros(us));
+            m.queue.record(Duration::from_micros(us / 2));
+            m.exec.record(Duration::from_micros(us / 2));
+        }
+        m.record_decode_step(Duration::from_micros(150), 0.3, false);
+        m.record_step_telemetry(5000, &StepTelemetry::sparse(80, 20, 24, 0.93));
+        m.record_error("one bad thing".into());
+        m
+    }
+
+    #[test]
+    fn histo_snapshot_buckets_are_cumulative_and_exact() {
+        let h = LatencyHisto::new();
+        for us in [1u64, 3, 3, 1000] {
+            h.record(Duration::from_micros(us));
+        }
+        let s = HistoSnapshot::collect(&h);
+        assert_eq!(s.count, 4);
+        assert_eq!(s.sum_us, 1007);
+        assert_eq!(s.max_us, 1000);
+        // cumulative counts never decrease, bounds strictly increase, and
+        // the last bucket carries every sample
+        let mut prev_le = 0u64;
+        let mut prev_c = 0u64;
+        for b in &s.buckets {
+            assert!(b.le_us > prev_le);
+            assert!(b.count >= prev_c);
+            prev_le = b.le_us;
+            prev_c = b.count;
+        }
+        assert_eq!(s.buckets.last().unwrap().count, s.count);
+        // bucket bounds: 1µs -> le 1, 3µs -> le 3, 1000µs -> le 1023
+        assert_eq!(s.buckets[0], HistoBucket { le_us: 1, count: 1 });
+        assert_eq!(s.buckets[1], HistoBucket { le_us: 3, count: 3 });
+        assert_eq!(s.buckets.last().unwrap().le_us, 1023);
+    }
+
+    #[test]
+    fn empty_histo_snapshot_has_no_buckets() {
+        let s = HistoSnapshot::collect(&LatencyHisto::new());
+        assert_eq!(s.count, 0);
+        assert!(s.buckets.is_empty());
+    }
+
+    #[test]
+    fn json_roundtrips_with_required_keys() {
+        let m = busy_metrics();
+        let snap = MetricsSnapshot::collect(
+            &m,
+            Some(KvGauges { pages_used: 10, pages_total: 100, slab_pages: 8 }),
+            Duration::from_secs(2),
+        );
+        let j = Json::parse(&snap.to_json().to_string()).expect("export must be valid JSON");
+        for key in [
+            "schema_version",
+            "uptime_us",
+            "requests.submitted",
+            "requests.completed",
+            "latency_us.ttft.count",
+            "latency_us.ttft.buckets",
+            "latency_us.queue.p99_us",
+            "latency_us.decode_step.count",
+            "decode.steps",
+            "spec.rounds",
+            "prefix.covered_ratio",
+            "failures.worker_panics",
+            "failures.errors_dropped",
+            "degradation.level",
+            "kv.occupancy",
+            "sparsity.bands",
+            "trace",
+        ] {
+            assert!(j.path(key).is_some(), "missing key {key}");
+        }
+        assert_eq!(j.path("requests.submitted").unwrap().as_i64(), Some(10));
+        let bands = j.path("sparsity.bands").unwrap().as_arr().unwrap();
+        assert_eq!(bands.len(), crate::obs::sparsity::N_BANDS);
+        // the 4k-16k band saw our sparse step
+        let b = bands.iter().find(|b| b.get("band").unwrap().as_str() == Some("4k-16k")).unwrap();
+        assert_eq!(b.get("steps").unwrap().as_i64(), Some(1));
+        assert!((b.get("mean_score_mass").unwrap().as_f64().unwrap() - 0.93).abs() < 1e-3);
+        assert_eq!(
+            j.path("failures.recent_errors").unwrap().idx(0).unwrap().as_str(),
+            Some("one bad thing")
+        );
+    }
+
+    #[test]
+    fn prometheus_exposition_is_well_formed() {
+        let mut m = busy_metrics();
+        m.trace = crate::obs::trace::Trace::new(64);
+        m.trace.record(1, crate::obs::trace::EventKind::Reject);
+        let snap = MetricsSnapshot::collect(
+            &m,
+            Some(KvGauges { pages_used: 1, pages_total: 4, slab_pages: 1 }),
+            Duration::from_secs(1),
+        );
+        let text = snap.to_prometheus();
+        assert!(text.contains("# TYPE stem_requests_submitted_total counter"));
+        assert!(text.contains("stem_requests_submitted_total 10"));
+        assert!(text.contains("# TYPE stem_ttft_us histogram"));
+        assert!(text.contains("stem_ttft_us_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("stem_ttft_us_count 3"));
+        assert!(text.contains("stem_kv_pages_total 4"));
+        assert!(text.contains("stem_sparsity_steps_total{band=\"4k-16k\"} 1"));
+        assert!(text.contains("stem_trace_events_recorded 1"));
+        // every +Inf bucket count equals its _count line
+        for name in ["stem_queue_us", "stem_exec_us", "stem_ttft_us", "stem_decode_step_us"] {
+            let inf = text
+                .lines()
+                .find(|l| l.starts_with(&format!("{name}_bucket{{le=\"+Inf\"}}")))
+                .unwrap();
+            let cnt =
+                text.lines().find(|l| l.starts_with(&format!("{name}_count"))).unwrap();
+            assert_eq!(
+                inf.rsplit(' ').next().unwrap(),
+                cnt.rsplit(' ').next().unwrap(),
+                "{name}"
+            );
+        }
+    }
+
+    /// Satellite: the `degradation_level` / `degradation_transitions`
+    /// gauges surfaced in the snapshot must track `coordinator::degrade`
+    /// state exactly across a forced up-then-down cycle, mirroring the
+    /// dispatcher's wiring (store level + bump transitions on change).
+    #[test]
+    fn degradation_gauges_track_ladder_cycle() {
+        let m = Metrics::new();
+        let cfg = DegradeConfig {
+            up_patience: 2,
+            down_patience: 2,
+            eval_every: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let mut d = Degrader::new(cfg);
+        let t0 = Instant::now();
+        let mut now = t0;
+        let mut transitions = 0u64;
+        let mirror = |d: &Degrader, before: u8, transitions: &mut u64| {
+            if d.level() != before {
+                *transitions += 1;
+                m.degradation_level.store(d.level() as u64, Ordering::Relaxed);
+                m.degradation_transitions.fetch_add(1, Ordering::Relaxed);
+            }
+        };
+        // force the ladder all the way up under sustained pressure
+        for _ in 0..40 {
+            now += Duration::from_millis(2);
+            let before = d.level();
+            d.observe(now, 0.99, 10);
+            mirror(&d, before, &mut transitions);
+        }
+        assert!(d.level() > 0, "sustained pressure must degrade");
+        let top = d.level();
+        let snap = MetricsSnapshot::collect(&m, None, t0.elapsed());
+        assert_eq!(snap.degradation_level, top as u64, "snapshot gauge != ladder level");
+        assert_eq!(snap.degradation_transitions, transitions);
+
+        // then all the way back down under sustained calm
+        for _ in 0..200 {
+            now += Duration::from_millis(2);
+            let before = d.level();
+            d.observe(now, 0.0, 0);
+            mirror(&d, before, &mut transitions);
+        }
+        assert_eq!(d.level(), 0, "sustained calm must fully recover");
+        let snap = MetricsSnapshot::collect(&m, None, t0.elapsed());
+        assert_eq!(snap.degradation_level, 0);
+        assert_eq!(snap.degradation_transitions, transitions);
+        assert!(
+            snap.degradation_transitions >= 2 * top as u64,
+            "a full cycle transitions at least up and down through each level"
+        );
+    }
+}

@@ -1,0 +1,271 @@
+//! Sparsity telemetry: what the decode kernels *actually realized* of the
+//! paper's TPD budget schedule and OAM block selection, aggregated by
+//! context-length band.
+//!
+//! Every decode/verify attention call emits one [`StepTelemetry`]
+//! observation: how many key blocks existed, how many the TPD schedule
+//! planned to keep, how many the selection really kept, whether the step
+//! fell back to dense (and why — `Lil`'s short-context floor vs the budget
+//! simply covering every block), and how much of the softmax score mass
+//! over the OAM block scores the kept set captured. [`SparsityStats`]
+//! folds those observations into lock-free per-band counters surfaced by
+//! the metrics snapshot and `report()` — the measurement substrate for the
+//! paper's claim that decode-stage sparsity behaves differently across
+//! position regimes.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of context-length bands tracked by [`SparsityStats`].
+pub const N_BANDS: usize = 5;
+
+const BAND_LABELS: [&str; N_BANDS] = ["lt1k", "1k-4k", "4k-16k", "16k-64k", "ge64k"];
+
+/// Band index for a context length (tokens).
+pub fn band_index(n_ctx: usize) -> usize {
+    match n_ctx {
+        0..=1023 => 0,
+        1024..=4095 => 1,
+        4096..=16383 => 2,
+        16384..=65535 => 3,
+        _ => 4,
+    }
+}
+
+/// Human label for a band index (e.g. `"4k-16k"`).
+pub fn band_label(band: usize) -> &'static str {
+    BAND_LABELS[band.min(N_BANDS - 1)]
+}
+
+/// Why a decode step ran dense attention instead of the sparse kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DenseCause {
+    /// Context below the policy's `dense_below` floor (Lil's finding that
+    /// short-context sparsity hurts — sparsity is not worth it yet).
+    ShortContext,
+    /// The TPD budget at this position covers every causal block, so the
+    /// "sparse" selection would be the full set anyway.
+    BudgetCovers,
+}
+
+/// One attention call's sparsity observation, emitted by the kernels.
+///
+/// Dense steps report `blocks_kept == blocks_planned == blocks_total` and
+/// `score_mass == 1.0` (dense attention captures all mass by definition);
+/// sparse steps report the realized selection against the schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepTelemetry {
+    /// Cached key blocks visible to the step (the causal total).
+    pub blocks_total: u32,
+    /// Blocks the selection actually kept (realized k).
+    pub blocks_kept: u32,
+    /// Blocks the TPD schedule budgeted for this position (planned k).
+    pub blocks_planned: u32,
+    /// `Some(cause)` when the step ran the dense path.
+    pub dense_cause: Option<DenseCause>,
+    /// Fraction of the softmax mass over the OAM block scores captured by
+    /// the kept blocks, in `[0, 1]` (1.0 for dense steps).
+    pub score_mass: f32,
+}
+
+impl StepTelemetry {
+    /// Telemetry for a dense step over `nblk` blocks.
+    pub fn dense(nblk: usize, cause: DenseCause) -> StepTelemetry {
+        StepTelemetry {
+            blocks_total: nblk as u32,
+            blocks_kept: nblk as u32,
+            blocks_planned: nblk as u32,
+            dense_cause: Some(cause),
+            score_mass: 1.0,
+        }
+    }
+
+    /// Telemetry for a sparse step: `kept` of `nblk` blocks retained
+    /// against a planned budget of `planned`, capturing `score_mass`.
+    pub fn sparse(nblk: usize, kept: usize, planned: usize, score_mass: f64) -> StepTelemetry {
+        StepTelemetry {
+            blocks_total: nblk as u32,
+            blocks_kept: kept as u32,
+            blocks_planned: planned as u32,
+            dense_cause: None,
+            score_mass: score_mass.clamp(0.0, 1.0) as f32,
+        }
+    }
+}
+
+/// Fixed-point scale for accumulating score mass in an integer atomic.
+const MASS_SCALE: f64 = 1e6;
+
+#[derive(Default)]
+struct Band {
+    steps: AtomicU64,
+    dense_short_context: AtomicU64,
+    dense_budget_covers: AtomicU64,
+    blocks_total: AtomicU64,
+    blocks_kept: AtomicU64,
+    blocks_planned: AtomicU64,
+    score_mass_micro: AtomicU64,
+}
+
+/// A plain-data snapshot of one band's counters (see [`SparsityStats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BandSnapshot {
+    /// Band label (`"lt1k"` .. `"ge64k"`).
+    pub label: &'static str,
+    /// Decode/verify steps observed in this band.
+    pub steps: u64,
+    /// Steps that ran dense because the context was under `dense_below`.
+    pub dense_short_context: u64,
+    /// Steps that ran dense because the budget covered every block.
+    pub dense_budget_covers: u64,
+    /// Sum of causal blocks visible across steps.
+    pub blocks_total: u64,
+    /// Sum of blocks actually kept across steps.
+    pub blocks_kept: u64,
+    /// Sum of blocks the TPD schedule planned across steps.
+    pub blocks_planned: u64,
+    /// Sum of captured score mass, in micro-units (1e-6).
+    pub score_mass_micro: u64,
+}
+
+impl BandSnapshot {
+    /// Steps that took the sparse kernel path.
+    pub fn sparse_steps(&self) -> u64 {
+        self.steps - self.dense_short_context - self.dense_budget_covers
+    }
+
+    /// Mean fraction of visible blocks kept (realized sparsity).
+    pub fn kept_fraction(&self) -> f64 {
+        if self.blocks_total == 0 {
+            return 0.0;
+        }
+        self.blocks_kept as f64 / self.blocks_total as f64
+    }
+
+    /// Mean fraction of visible blocks the schedule planned to keep.
+    pub fn planned_fraction(&self) -> f64 {
+        if self.blocks_total == 0 {
+            return 0.0;
+        }
+        self.blocks_planned as f64 / self.blocks_total as f64
+    }
+
+    /// Mean captured OAM score mass per step, in `[0, 1]`.
+    pub fn mean_score_mass(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        (self.score_mass_micro as f64 / MASS_SCALE) / self.steps as f64
+    }
+}
+
+/// Lock-free per-band sparsity counters: one [`StepTelemetry`] observation
+/// per decode/verify attention call, folded with relaxed atomics so the
+/// decode hot path pays a handful of uncontended `fetch_add`s.
+#[derive(Default)]
+pub struct SparsityStats {
+    bands: [Band; N_BANDS],
+}
+
+impl SparsityStats {
+    /// Fold one step's observation into the band of `n_ctx`.
+    pub fn observe(&self, n_ctx: usize, t: &StepTelemetry) {
+        let b = &self.bands[band_index(n_ctx)];
+        b.steps.fetch_add(1, Ordering::Relaxed);
+        match t.dense_cause {
+            Some(DenseCause::ShortContext) => {
+                b.dense_short_context.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(DenseCause::BudgetCovers) => {
+                b.dense_budget_covers.fetch_add(1, Ordering::Relaxed);
+            }
+            None => {}
+        }
+        b.blocks_total.fetch_add(t.blocks_total as u64, Ordering::Relaxed);
+        b.blocks_kept.fetch_add(t.blocks_kept as u64, Ordering::Relaxed);
+        b.blocks_planned.fetch_add(t.blocks_planned as u64, Ordering::Relaxed);
+        let micro = (t.score_mass.clamp(0.0, 1.0) as f64 * MASS_SCALE) as u64;
+        b.score_mass_micro.fetch_add(micro, Ordering::Relaxed);
+    }
+
+    /// Snapshot one band's counters.
+    pub fn band(&self, i: usize) -> BandSnapshot {
+        let b = &self.bands[i.min(N_BANDS - 1)];
+        BandSnapshot {
+            label: band_label(i),
+            steps: b.steps.load(Ordering::Relaxed),
+            dense_short_context: b.dense_short_context.load(Ordering::Relaxed),
+            dense_budget_covers: b.dense_budget_covers.load(Ordering::Relaxed),
+            blocks_total: b.blocks_total.load(Ordering::Relaxed),
+            blocks_kept: b.blocks_kept.load(Ordering::Relaxed),
+            blocks_planned: b.blocks_planned.load(Ordering::Relaxed),
+            score_mass_micro: b.score_mass_micro.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Snapshot every band, lowest context band first.
+    pub fn bands(&self) -> Vec<BandSnapshot> {
+        (0..N_BANDS).map(|i| self.band(i)).collect()
+    }
+
+    /// Total steps observed across all bands.
+    pub fn total_steps(&self) -> u64 {
+        (0..N_BANDS).map(|i| self.band(i).steps).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn band_index_covers_boundaries() {
+        assert_eq!(band_index(0), 0);
+        assert_eq!(band_index(1023), 0);
+        assert_eq!(band_index(1024), 1);
+        assert_eq!(band_index(4096), 2);
+        assert_eq!(band_index(16384), 3);
+        assert_eq!(band_index(65536), 4);
+        assert_eq!(band_index(1 << 30), 4);
+        for i in 0..N_BANDS {
+            assert!(!band_label(i).is_empty());
+        }
+    }
+
+    #[test]
+    fn observe_aggregates_by_band_and_cause() {
+        let s = SparsityStats::default();
+        s.observe(100, &StepTelemetry::dense(2, DenseCause::ShortContext));
+        s.observe(100, &StepTelemetry::dense(3, DenseCause::BudgetCovers));
+        s.observe(5000, &StepTelemetry::sparse(100, 25, 30, 0.9));
+        s.observe(5000, &StepTelemetry::sparse(100, 25, 30, 0.7));
+
+        let b0 = s.band(band_index(100));
+        assert_eq!(b0.steps, 2);
+        assert_eq!(b0.dense_short_context, 1);
+        assert_eq!(b0.dense_budget_covers, 1);
+        assert_eq!(b0.sparse_steps(), 0);
+        assert!((b0.mean_score_mass() - 1.0).abs() < 1e-6);
+
+        let b2 = s.band(band_index(5000));
+        assert_eq!(b2.steps, 2);
+        assert_eq!(b2.sparse_steps(), 2);
+        assert_eq!(b2.blocks_total, 200);
+        assert_eq!(b2.blocks_kept, 50);
+        assert_eq!(b2.blocks_planned, 60);
+        assert!((b2.kept_fraction() - 0.25).abs() < 1e-9);
+        assert!((b2.planned_fraction() - 0.30).abs() < 1e-9);
+        assert!((b2.mean_score_mass() - 0.8).abs() < 1e-6);
+
+        assert_eq!(s.total_steps(), 4);
+        assert_eq!(s.bands().len(), N_BANDS);
+    }
+
+    #[test]
+    fn score_mass_is_clamped() {
+        let t = StepTelemetry::sparse(10, 5, 5, 1.7);
+        assert_eq!(t.score_mass, 1.0);
+        let s = SparsityStats::default();
+        s.observe(10, &t);
+        assert!((s.band(0).mean_score_mass() - 1.0).abs() < 1e-6);
+    }
+}

@@ -1095,6 +1095,49 @@ pub fn select_decode(
     b.finish()
 }
 
+/// Softmax mass of one score row captured by a kept subset: with
+/// `p = softmax(row)`, returns `sum(p[kept])`. Max-subtracted for
+/// stability; degenerate rows (empty, or all mass at `-inf`) report 1.0
+/// so telemetry never blames the selection for an empty context.
+pub fn score_mass_row(row: &[f32], kept: &[u32]) -> f64 {
+    if row.is_empty() || kept.is_empty() {
+        return 1.0;
+    }
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        return 1.0;
+    }
+    let total: f64 = row.iter().map(|&s| ((s - m) as f64).exp()).sum();
+    if total <= 0.0 {
+        return 1.0;
+    }
+    let got: f64 = kept
+        .iter()
+        .filter(|&&b| (b as usize) < row.len())
+        .map(|&b| ((row[b as usize] - m) as f64).exp())
+        .sum();
+    (got / total).clamp(0.0, 1.0)
+}
+
+/// Captured OAM score mass of a decode-shaped selection: for each head,
+/// the softmax mass of that head's block-score row falling on its kept
+/// blocks, averaged over heads. `scores` is the `[H, nblk]` output of
+/// [`decode_block_scores`] and `sel` the matching [`select_decode`]
+/// result — this is the sparsity-telemetry measure of how much of the
+/// router's probability mass the realized selection retained.
+pub fn selection_score_mass(scores: &Tensor, sel: &Selection) -> f64 {
+    let (h, nblk) = (scores.shape[0], scores.shape[1]);
+    if h == 0 || nblk == 0 || sel.n_heads != h {
+        return 1.0;
+    }
+    let mut sum = 0.0;
+    for hh in 0..h {
+        let row = &scores.data[hh * nblk..(hh + 1) * nblk];
+        sum += score_mass_row(row, sel.selected(hh, 0));
+    }
+    sum / h as f64
+}
+
 /// One block's worth of the single-query online-softmax update: fold
 /// `len` cached tokens of a K/V slab into the running `(m, l, acc)`
 /// state. Every decode/verify kernel routes through this helper so the
@@ -1727,6 +1770,38 @@ mod tests {
         b.push_row(&[0], 1);
         b.push_row(&[2, 1], 2);
         assert!(b.finish().validate_verify(4).is_err());
+    }
+
+    #[test]
+    fn score_mass_row_matches_hand_softmax() {
+        // softmax([0, ln2, ln4]) = [1/7, 2/7, 4/7]
+        let row = [0.0f32, 2.0f32.ln(), 4.0f32.ln()];
+        assert!((score_mass_row(&row, &[2]) - 4.0 / 7.0).abs() < 1e-6);
+        assert!((score_mass_row(&row, &[0, 1]) - 3.0 / 7.0).abs() < 1e-6);
+        assert!((score_mass_row(&row, &[0, 1, 2]) - 1.0).abs() < 1e-12);
+        // out-of-range kept ids contribute nothing
+        assert!((score_mass_row(&row, &[2, 9]) - 4.0 / 7.0).abs() < 1e-6);
+        // degenerate rows report full mass
+        assert_eq!(score_mass_row(&[], &[0]), 1.0);
+        assert_eq!(score_mass_row(&[1.0], &[]), 1.0);
+        assert_eq!(score_mass_row(&[NEG_INF, NEG_INF], &[0]), 1.0);
+    }
+
+    #[test]
+    fn selection_score_mass_tracks_budget() {
+        let (q, k, v) = decode_qkv(37, 4, 2, 512, 16);
+        let kv = TensorKv { k: &k, v: &v, n_tokens: 512, block: 32 };
+        let scores = decode_block_scores(&q, &kv, 8, 0.2);
+        let mut masses = vec![];
+        for budget in [2usize, 6, 16] {
+            let sel = select_decode(&scores, budget, 1, 1);
+            masses.push(selection_score_mass(&scores, &sel));
+        }
+        for &m in &masses {
+            assert!((0.0..=1.0).contains(&m), "mass {m} out of range");
+        }
+        assert!(masses[0] <= masses[1] + 1e-9 && masses[1] <= masses[2] + 1e-9, "{masses:?}");
+        assert!((masses[2] - 1.0).abs() < 1e-9, "full budget must capture all mass");
     }
 
     #[test]

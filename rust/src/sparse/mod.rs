@@ -11,9 +11,9 @@ pub use attention::{
     antidiag_scores, block_sparse_attention, block_sparse_attention_reference,
     decode_block_scores, dense_attention, dense_decode_attention,
     dense_decode_attention_reference, dense_verify_attention_reference, oam_scores,
-    select_decode, select_stem, select_stem_reference, select_streaming,
-    sparse_decode_attention, sparse_verify_attention, value_block_logmag, KvBlocks, KvPrefix,
-    Selection, SelectionBuilder, TensorKv,
+    score_mass_row, select_decode, select_stem, select_stem_reference, select_streaming,
+    selection_score_mass, sparse_decode_attention, sparse_verify_attention, value_block_logmag,
+    KvBlocks, KvPrefix, Selection, SelectionBuilder, TensorKv,
 };
 pub use schedule::TpdConfig;
 pub use tensor::Tensor;

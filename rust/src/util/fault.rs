@@ -123,6 +123,22 @@ impl FaultPlan {
         self.calls[point as usize].load(Ordering::Relaxed)
     }
 
+    /// Render the plan back as a `STEM_FAULTS` spec that
+    /// [`FaultPlan::parse`] accepts — the replay line printed at the head
+    /// of flight-recorder failure dumps (see `obs::trace`).
+    pub fn spec_string(&self) -> String {
+        let mut s = format!("seed={}", self.seed);
+        for (i, name) in POINT_NAMES.iter().enumerate() {
+            if self.rates[i] > 0.0 {
+                s.push_str(&format!(",{name}={}", self.rates[i]));
+            }
+        }
+        if self.rates[FaultPoint::WorkerStall as usize] > 0.0 {
+            s.push_str(&format!(",stall_us={}", self.stall.as_micros()));
+        }
+        s
+    }
+
     /// Parse a `STEM_FAULTS`-style spec, e.g.
     /// `seed=42,kv=0.05,exec=0.05,step=0.02,stall=0.05,stall_us=200`.
     /// Unknown keys are an error so typos cannot silently disable chaos.
@@ -207,6 +223,26 @@ mod tests {
         assert_eq!(p.seed(), 42);
         assert_eq!(p.rates, [0.5, 0.25, 0.1, 1.0], "rates clamp to [0,1]");
         assert_eq!(p.stall, Duration::from_micros(99));
+    }
+
+    #[test]
+    fn spec_string_roundtrips_through_parse() {
+        let p = FaultPlan::new(42)
+            .with_rate(FaultPoint::KvAlloc, 0.05)
+            .with_rate(FaultPoint::DecodeStep, 0.02)
+            .with_rate(FaultPoint::WorkerStall, 0.1)
+            .with_stall(Duration::from_micros(250));
+        let spec = p.spec_string();
+        assert!(spec.starts_with("seed=42"), "{spec}");
+        let q = FaultPlan::parse(&spec).expect("spec_string must parse back");
+        assert_eq!(q.seed(), 42);
+        assert_eq!(q.rates, p.rates);
+        assert_eq!(q.stall, p.stall);
+        // quiet points are omitted so the replay line stays short
+        assert!(!spec.contains("exec="), "{spec}");
+        // a stall-free plan omits stall_us entirely
+        let bare = FaultPlan::new(7).with_rate(FaultPoint::EngineExec, 1.0).spec_string();
+        assert_eq!(bare, "seed=7,exec=1");
     }
 
     #[test]

@@ -15,7 +15,9 @@
 //! * no poisoned lock escapes to the caller as a panic.
 //!
 //! `STEM_FAULTS` (the CI chaos matrix) overrides the plan; otherwise
-//! three built-in seeds run. Failures print the seed for replay.
+//! three built-in seeds run. Invariant failures dump the coordinator's
+//! flight-recorder ring (`stem::obs::trace`) headed by a `STEM_FAULTS`
+//! replay line, so a red run ships its own event history.
 
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
@@ -193,85 +195,111 @@ fn chaos_run(plan: Arc<FaultPlan>) {
 
     let mut rng = Rng::new(seed ^ 0xC0FF_EE00);
     let mut outcomes = Outcomes::default();
-    // bounded extra waves until the run has demonstrably survived at
-    // least one injected panic and one injected KV-allocation failure
-    let mut waves = 0usize;
-    loop {
-        waves += 1;
-        let (rxs, tickets) = one_wave(&coord, &mut rng, &mut outcomes);
-        collect(seed, &mut outcomes, rxs, tickets);
-        let survived_panic = metrics.worker_panics.load(Ordering::Relaxed) >= 1;
-        let saw_kv_fault = plan.injected(FaultPoint::KvAlloc) >= 1;
-        if (survived_panic && saw_kv_fault) || waves >= 12 {
-            assert!(
-                survived_panic && saw_kv_fault,
-                "seed {seed}: after {waves} waves injected too little chaos \
-                 (worker_panics={}, kv_faults={}) — raise rates or waves",
-                metrics.worker_panics.load(Ordering::Relaxed),
-                plan.injected(FaultPoint::KvAlloc),
-            );
-            break;
+    // any invariant failure in the live phase prints the flight-recorder
+    // ring — with the STEM_FAULTS replay line — before re-panicking, so
+    // a red chaos run ships the event history needed to replay it
+    let live = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        // bounded extra waves until the run has demonstrably survived at
+        // least one injected panic and one injected KV-allocation failure
+        let mut waves = 0usize;
+        loop {
+            waves += 1;
+            let (rxs, tickets) = one_wave(&coord, &mut rng, &mut outcomes);
+            collect(seed, &mut outcomes, rxs, tickets);
+            let survived_panic = metrics.worker_panics.load(Ordering::Relaxed) >= 1;
+            let saw_kv_fault = plan.injected(FaultPoint::KvAlloc) >= 1;
+            if (survived_panic && saw_kv_fault) || waves >= 12 {
+                assert!(
+                    survived_panic && saw_kv_fault,
+                    "seed {seed}: after {waves} waves injected too little chaos \
+                     (worker_panics={}, kv_faults={}) — raise rates or waves",
+                    metrics.worker_panics.load(Ordering::Relaxed),
+                    plan.injected(FaultPoint::KvAlloc),
+                );
+                break;
+            }
         }
+
+        // a worker that ate an injected panic must still serve: drive a
+        // clean request end to end (faults stay armed, so individual
+        // attempts may legitimately eat another injection — retry a few)
+        let survived = (0..20).any(|_| {
+            matches!(
+                coord.generate_blocking(vec![1, 20, 21, 22], 4, DecodePolicy::default()),
+                Ok(resp) if resp.finish == Finish::Complete
+            )
+        });
+        assert!(survived, "seed {seed}: worker pool did not keep serving after injected panics");
+    }));
+    if let Err(payload) = live {
+        if let Some(rec) = coord.flight_recorder() {
+            eprintln!("{}", rec.render_failure_dump(None, Some(&plan.spec_string())));
+        }
+        std::panic::resume_unwind(payload);
     }
 
-    // a worker that ate an injected panic must still serve: drive a
-    // clean request end to end (faults stay armed, so individual
-    // attempts may legitimately eat another injection — retry a few)
-    let survived = (0..20).any(|_| {
-        matches!(
-            coord.generate_blocking(vec![1, 20, 21, 22], 4, DecodePolicy::default()),
-            Ok(resp) if resp.finish == Finish::Complete
-        )
-    });
-    assert!(survived, "seed {seed}: worker pool did not keep serving after injected panics");
+    // render the ring before shutdown so the post-drain leak assertions
+    // below can still print it on failure
+    let dump = coord
+        .flight_recorder()
+        .map(|rec| rec.render_failure_dump(None, Some(&plan.spec_string())));
 
     // full drain: shutdown joins the dispatcher only after every queued
     // batch and in-flight decode completed
     drop(coord);
-    assert_eq!(
-        admission.outstanding(),
-        (0, 0),
-        "seed {seed}: admission counters leaked (outcomes: {outcomes:?})"
-    );
-    let (used, _, _) = kv.occupancy();
-    assert_eq!(used, 0, "seed {seed}: KV pages leaked (outcomes: {outcomes:?})");
-    assert_eq!(kv.pages_resident(), 0, "seed {seed}: KV slabs leaked");
-    assert!(
-        admission.outstanding_work_ns() < 1.0,
-        "seed {seed}: admission work estimate leaked"
-    );
+    let drained = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        assert_eq!(
+            admission.outstanding(),
+            (0, 0),
+            "seed {seed}: admission counters leaked (outcomes: {outcomes:?})"
+        );
+        let (used, _, _) = kv.occupancy();
+        assert_eq!(used, 0, "seed {seed}: KV pages leaked (outcomes: {outcomes:?})");
+        assert_eq!(kv.pages_resident(), 0, "seed {seed}: KV slabs leaked");
+        assert!(
+            admission.outstanding_work_ns() < 1.0,
+            "seed {seed}: admission work estimate leaked"
+        );
 
-    let terminal = outcomes.prefill_ok
-        + outcomes.prefill_err
-        + outcomes.gen_complete
-        + outcomes.gen_cancelled
-        + outcomes.gen_deadline
-        + outcomes.gen_err;
-    assert!(terminal > 0, "seed {seed}: the run exercised nothing");
-    // typed worker-panic errors must be observable as such, not as hangs
-    // or process aborts — count them via the metric (some panics land in
-    // holder fills, which surface on whichever branch was waiting)
-    assert!(
-        metrics.worker_panics.load(Ordering::Relaxed) >= 1,
-        "seed {seed}: no injected panic was isolated"
-    );
-    // downcast sanity on one deliberately-typed path: an expired
-    // deadline submitted now must come back as ServeError
-    let coord2 = chaos_coordinator(&plan);
-    let past = Instant::now() - Duration::from_millis(5);
-    let mut ts = coord2
-        .submit_generate_tickets(vec![1, 2, 3], 4, DecodePolicy::default(), 1, Some(past))
-        .expect("submit");
-    let err = ts
-        .pop()
-        .expect("one branch")
-        .recv_timeout(TERMINAL)
-        .expect_err("expired deadline must shed");
-    assert_eq!(
-        err.downcast_ref::<ServeError>(),
-        Some(&ServeError::DeadlineExceeded),
-        "seed {seed}: shed was not typed"
-    );
+        let terminal = outcomes.prefill_ok
+            + outcomes.prefill_err
+            + outcomes.gen_complete
+            + outcomes.gen_cancelled
+            + outcomes.gen_deadline
+            + outcomes.gen_err;
+        assert!(terminal > 0, "seed {seed}: the run exercised nothing");
+        // typed worker-panic errors must be observable as such, not as
+        // hangs or process aborts — count them via the metric (some
+        // panics land in holder fills, which surface on whichever branch
+        // was waiting)
+        assert!(
+            metrics.worker_panics.load(Ordering::Relaxed) >= 1,
+            "seed {seed}: no injected panic was isolated"
+        );
+        // downcast sanity on one deliberately-typed path: an expired
+        // deadline submitted now must come back as ServeError
+        let coord2 = chaos_coordinator(&plan);
+        let past = Instant::now() - Duration::from_millis(5);
+        let mut ts = coord2
+            .submit_generate_tickets(vec![1, 2, 3], 4, DecodePolicy::default(), 1, Some(past))
+            .expect("submit");
+        let err = ts
+            .pop()
+            .expect("one branch")
+            .recv_timeout(TERMINAL)
+            .expect_err("expired deadline must shed");
+        assert_eq!(
+            err.downcast_ref::<ServeError>(),
+            Some(&ServeError::DeadlineExceeded),
+            "seed {seed}: shed was not typed"
+        );
+    }));
+    if let Err(payload) = drained {
+        if let Some(d) = dump {
+            eprintln!("{d}");
+        }
+        std::panic::resume_unwind(payload);
+    }
 }
 
 #[test]

@@ -1,0 +1,174 @@
+//! Observability integration suite: drives the full coordinator
+//! (synthetic backend, no artifacts) and asserts the three telemetry
+//! surfaces added by `stem::obs` hold together end to end:
+//!
+//! * the flight recorder reconstructs every generation branch as one
+//!   complete span — submit → terminal finish — out of the global ring;
+//! * an injected decode panic leaves a `panic site=decode` event on the
+//!   failing span, and its failure dump is headed by a `STEM_FAULTS`
+//!   replay line that parses back into the live plan;
+//! * [`stem::coordinator::Coordinator::snapshot`] is coherent with the
+//!   traffic driven (counters, KV gauges, trace stats, sparsity bands
+//!   accounting for every decode step) and serializes to valid JSON and
+//!   well-formed Prometheus text.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use stem::coordinator::{Coordinator, CoordinatorConfig, Finish, Method};
+use stem::decode::DecodePolicy;
+use stem::obs::trace::{EventKind, Outcome, PanicSite};
+use stem::runtime::{PrefillBackend, SyntheticEngine};
+use stem::util::fault::{FaultPlan, FaultPoint};
+use stem::util::json::Json;
+
+/// Terminal-outcome bound (synthetic backend: anything near this hangs).
+const TERMINAL: Duration = Duration::from_secs(60);
+
+fn coordinator(faults: Option<Arc<FaultPlan>>) -> Coordinator {
+    let engine: Arc<dyn PrefillBackend> = Arc::new(SyntheticEngine::new(&[128, 256]));
+    Coordinator::with_backend(
+        engine,
+        CoordinatorConfig { workers: 2, kv_pages: 256, faults, ..Default::default() },
+    )
+}
+
+#[test]
+fn every_generation_span_runs_submit_to_terminal() {
+    let coord = coordinator(None);
+    let prompt: Vec<i32> = (0..24).map(|i| 16 + (i % 64)).collect();
+    let tickets = coord
+        .submit_generate_tickets(prompt, 6, DecodePolicy::default(), 3, None)
+        .expect("submit");
+    let seqs: Vec<u64> = tickets.iter().map(|t| t.seq()).collect();
+    for mut t in tickets {
+        let resp = t.recv_timeout(TERMINAL).expect("terminal outcome");
+        assert_eq!(resp.finish, Finish::Complete);
+    }
+    let rec = coord.flight_recorder().expect("tracing is on by default");
+    for seq in seqs {
+        let ev = rec.span_events(seq);
+        assert!(
+            matches!(ev.first().map(|e| e.kind), Some(EventKind::Submit { .. })),
+            "span {seq} must open with submit: {ev:?}"
+        );
+        assert!(
+            matches!(
+                ev.last().map(|e| e.kind),
+                Some(EventKind::Finish { outcome: Outcome::Complete })
+            ),
+            "span {seq} must close complete: {ev:?}"
+        );
+        assert!(
+            ev.iter().any(|e| matches!(e.kind, EventKind::PrefixRoute { .. })),
+            "span {seq} must record its prefix-route decision: {ev:?}"
+        );
+        assert!(
+            ev.iter().any(|e| matches!(e.kind, EventKind::DecodeStep { .. })),
+            "span {seq} must record decode progress: {ev:?}"
+        );
+    }
+}
+
+#[test]
+fn injected_decode_panic_leaves_span_and_replayable_dump() {
+    let plan = Arc::new(FaultPlan::new(5).with_rate(FaultPoint::DecodeStep, 1.0));
+    let coord = coordinator(Some(Arc::clone(&plan)));
+    let mut ts = coord
+        .submit_generate_tickets(vec![1, 20, 21, 22], 4, DecodePolicy::default(), 1, None)
+        .expect("submit");
+    let mut t = ts.pop().expect("one branch");
+    let seq = t.seq();
+    t.recv_timeout(TERMINAL).expect_err("every decode step panics under step=1");
+
+    let rec = coord.flight_recorder().expect("tracing is on by default");
+    let ev = rec.span_events(seq);
+    assert!(
+        ev.iter().any(|e| matches!(e.kind, EventKind::Panic { site: PanicSite::Decode })),
+        "the caught panic must land on the failing span: {ev:?}"
+    );
+    assert!(
+        matches!(ev.last().map(|e| e.kind), Some(EventKind::Finish { outcome: Outcome::Error })),
+        "the panicked branch must still terminate its span: {ev:?}"
+    );
+
+    // the dump the panic handler prints: full span + replay header that
+    // parses back into an equivalent plan
+    let dump = rec.render_failure_dump(Some(seq), Some(&plan.spec_string()));
+    assert!(dump.contains("replay: STEM_FAULTS='seed=5,step=1'"), "{dump}");
+    assert!(dump.contains("submit tokens=4"), "{dump}");
+    assert!(dump.contains("panic site=decode"), "{dump}");
+    assert!(dump.contains("finish outcome=error"), "{dump}");
+    FaultPlan::parse(&plan.spec_string()).expect("replay line must parse");
+
+    // metrics agree: the panic was isolated, not fatal
+    assert_eq!(coord.snapshot().worker_panics, 1);
+}
+
+#[test]
+fn snapshot_json_and_prometheus_cohere_with_driven_traffic() {
+    let coord = coordinator(None);
+
+    // one prefill through the batcher + worker pool
+    let ids: Vec<i32> = (0..64).map(|i| 16 + (i % 64)).collect();
+    let method = Method::Stem { k_start: 4.0, mu: 0.7, beta: 0.2 };
+    let rx = coord.submit_with_deadline("base", method, ids, false, None).expect("submit");
+    rx.recv().expect("channel").expect("prefill completes");
+
+    // eight generation branches across four groups
+    let mut tickets = Vec::new();
+    for r in 0..4i32 {
+        let prompt: Vec<i32> = (0..12).map(|i| 20 + ((i + r) % 40)).collect();
+        tickets.extend(
+            coord
+                .submit_generate_tickets(prompt, 8, DecodePolicy::default(), 2, None)
+                .expect("submit"),
+        );
+    }
+    for mut t in tickets {
+        assert_eq!(t.recv_timeout(TERMINAL).expect("terminal").finish, Finish::Complete);
+    }
+
+    let snap = coord.snapshot();
+    assert_eq!(snap.submitted, 1);
+    assert_eq!(snap.completed, 1);
+    assert_eq!(snap.generates_submitted, 8);
+    assert_eq!(snap.generates_completed, 8);
+    assert!(snap.decode_steps >= 8, "eight branches decoded: {}", snap.decode_steps);
+    // position-band gauges account for every decode step exactly once
+    assert_eq!(snap.sparsity.iter().map(|b| b.steps).sum::<u64>(), snap.decode_steps);
+    let kv = snap.kv.expect("the coordinator attaches pool gauges");
+    assert_eq!(kv.pages_total, 256);
+    let trace = snap.trace.expect("tracing is on by default");
+    assert!(trace.recorded > 0);
+
+    // JSON: parses, carries the versioned schema and the live values
+    let j = Json::parse(&snap.to_json().to_string()).expect("export must be valid JSON");
+    assert_eq!(j.path("schema_version").and_then(Json::as_i64), Some(1));
+    assert_eq!(j.path("requests.generates_completed").and_then(Json::as_i64), Some(8));
+    assert_eq!(
+        j.path("decode.steps").and_then(Json::as_i64),
+        Some(snap.decode_steps as i64)
+    );
+    assert!(j.path("kv.occupancy").is_some());
+    assert!(j.path("trace.recorded").and_then(Json::as_i64).unwrap_or(0) > 0);
+
+    // Prometheus: key series present with matching values, histogram
+    // buckets cumulative
+    let text = snap.to_prometheus();
+    assert!(text.contains("stem_generates_completed_total 8"));
+    assert!(text.contains("# TYPE stem_decode_step_us histogram"));
+    assert!(text.contains("stem_kv_pages_total 256"));
+    assert!(text.contains("stem_trace_events_recorded"));
+    // short-context traffic lands in the lowest band
+    assert!(text.contains("stem_sparsity_steps_total{band=\"lt1k\"}"), "{text}");
+    let mut prev = 0u64;
+    for line in text.lines().filter(|l| l.starts_with("stem_decode_step_us_bucket{le=\"")) {
+        if line.contains("+Inf") {
+            continue;
+        }
+        let count: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+        assert!(count >= prev, "buckets must be cumulative: {line}");
+        prev = count;
+    }
+}
