@@ -6,7 +6,10 @@
 //! have a decode perf trajectory (acceptance figures: sparse beating
 //! dense ns/token at n >= 2048, and the `spec` section targeting ≥1.5×
 //! tokens/sec at γ=4 over sequential dense decode — with the committed
-//! stream asserted byte-identical).
+//! stream asserted byte-identical). Session steps are measured once per
+//! decode backend: `session_step_*` rows drive the TinyLm projection
+//! core, `engine_step_*` rows drive compiled `decode_step` modules
+//! through the engine-backed decode path.
 //!
 //!   cargo bench --bench bench_decode                 # full sizes
 //!   cargo bench --bench bench_decode -- --quick      # small samples
@@ -16,8 +19,11 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use stem::coordinator::kv_cache::KvConfig;
-use stem::decode::{DecodePolicy, DecodeSession, SharedKv, SpecStats, TinyLm};
+use stem::decode::{
+    DecodeBackend, DecodePolicy, DecodeSession, EngineBackend, SharedKv, SpecStats, TinyLm,
+};
 use stem::model::vocab;
+use stem::runtime::SyntheticEngine;
 use stem::sparse::{
     decode_block_scores, select_decode, sparse_decode_attention, KvBlocks, Selection, Tensor,
     TensorKv,
@@ -83,20 +89,40 @@ fn main() {
     // end-to-end paged session steps (projections + paged append +
     // policy + kernel) at one representative context; the context grows
     // by one page per `block` steps, so we measure a fixed step count
-    // by hand instead of letting the calibrated runner loop.
-    for (label, policy) in [
-        ("session_step_sparse", DecodePolicy { dense_below: 0, ..Default::default() }),
-        ("session_step_dense", DecodePolicy::dense()),
+    // by hand instead of letting the calibrated runner loop. Runs once
+    // per decode backend: `session_step_*` rows are the TinyLm
+    // projection core (the fast default), `engine_step_*` rows drive
+    // the compiled-module path (here: the synthetic engine's
+    // `decode_step` modules) — the real-model decode trajectory.
+    let n0 = 2048usize;
+    let steps = if quick { 16 } else { 64 };
+    let backend_for = |engine: bool| -> Arc<dyn DecodeBackend> {
+        if engine {
+            let mut m = SyntheticEngine::tiny_model();
+            m.n_heads = h;
+            m.n_kv_heads = hk;
+            m.d_head = dh;
+            m.d_model = h * dh;
+            m.block = block;
+            let buckets = [512usize, 1024, 2048, 4096];
+            let eng = Arc::new(SyntheticEngine::with_model(m, &buckets));
+            Arc::new(EngineBackend::new(eng, "base").expect("synthetic decode modules"))
+        } else {
+            Arc::new(TinyLm::new(0xD0C0DE, h, hk, dh, vocab::VOCAB_SIZE))
+        }
+    };
+    for (label, engine, policy) in [
+        ("session_step_sparse", false, DecodePolicy { dense_below: 0, ..Default::default() }),
+        ("session_step_dense", false, DecodePolicy::dense()),
+        ("engine_step_sparse", true, DecodePolicy { dense_below: 0, ..Default::default() }),
+        ("engine_step_dense", true, DecodePolicy::dense()),
     ] {
-        let n0 = 2048usize;
         let kvpool = SharedKv::new(KvConfig { total_pages: 1024, page_tokens: block }, hk, dh);
-        let model = Arc::new(TinyLm::new(0xD0C0DE, h, hk, dh, vocab::VOCAB_SIZE));
-        let mut session = DecodeSession::new(kvpool, model, policy, 1).unwrap();
+        let mut session = DecodeSession::new(kvpool, backend_for(engine), policy, 1).unwrap();
         let mut rng = Rng::new(11);
         let prompt: Vec<i32> =
             (0..n0).map(|_| vocab::WORD0 + rng.below(64) as i32).collect();
         session.prefill(&prompt).unwrap();
-        let steps = if quick { 16 } else { 64 };
         let mut samples = Vec::with_capacity(steps);
         for _ in 0..steps {
             let t = Instant::now();

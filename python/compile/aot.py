@@ -27,6 +27,9 @@ at serve time):
   <scalars>                method hyper-parameters, each shape-(1,) f32/i32
 Outputs (tupled): logits f32[N, V], budget_fraction f32[1]
   (+ hidden f32[L, N, d] for diag_* graphs).
+`decode_step_<n>` graphs take no scalars — serving defaults are baked in
+at lowering time; the rust decode backend feeds the padded token history
+and reads the final logits row (see rust/src/decode/backend.rs).
 """
 
 from __future__ import annotations
@@ -51,6 +54,7 @@ ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
 
 PREFILL_BUCKETS = (512, 1024, 2048)
 DIAG_BUCKETS = (1024, 2048)
+DECODE_BUCKETS = (512, 1024, 2048)   # decode_step per-step modules
 EVAL_COUNT = 24          # samples per (family, bucket)
 RULER_COUNT = 24
 
@@ -119,6 +123,21 @@ def build_graph(cfg: M.ModelConfig, n: int, kind: str):
         return out
 
     diag = kind.startswith("diag_")
+    if kind == "decode_step":
+        # Per-step decode graph (rust `DecodeBackend::Engine`): a full
+        # stem forward over the PAD-padded token history whose last row
+        # of logits is the next-token distribution. The rust caller
+        # passes NO scalars (decode/backend.rs executes
+        # `prefill(kind="decode_step", scalars=[])`), so this bucket's
+        # serving defaults are baked into the graph as constants.
+        sd = serving_defaults(n, cfg.block)
+        # as 0-d jnp scalars, matching the traced-scalar prefill path
+        hp = {"k_start": jnp.float32(sd["k_start"]),
+              "mu": jnp.float32(sd["mu"]), "beta": jnp.float32(sd["beta"])}
+        def fn(*args):
+            flat, ids = args[:nspec], args[nspec]
+            return run(flat, ids, "stem", hp, False)
+        return fn, []
     base = kind[5:] if diag else kind[8:]          # strip diag_/prefill_
 
     if base == "dense":
@@ -376,6 +395,10 @@ def main() -> None:
     for n in DIAG_BUCKETS:
         for kind in ("diag_dense", "diag_stem", "diag_segment"):
             modules.append(lower_module(cfg, kind, n, os.path.join(art, "modules")))
+    # per-step decode graphs, one per context bucket — consumed by the
+    # rust `--decode-backend engine` path (decode/backend.rs)
+    for n in DECODE_BUCKETS:
+        modules.append(lower_module(cfg, "decode_step", n, os.path.join(art, "modules")))
 
     # 4. goldens + eval sets --------------------------------------------------
     export_goldens(cfg, ckpts["base"], os.path.join(art, "golden"))

@@ -91,7 +91,8 @@ use super::request::{
     Finish, GenerateRequest, GenerateResponse, Method, PrefillRequest, PrefillResponse, ServeError,
 };
 use crate::decode::{
-    DecodeError, DecodePolicy, DecodeSession, SharedKv, StepInfo, StepPlan, TinyLm,
+    DecodeBackend, DecodeBackendKind, DecodeError, DecodePolicy, DecodeSession, SharedKv,
+    StepInfo, StepPlan,
 };
 use crate::model::vocab;
 use crate::model::Manifest;
@@ -99,8 +100,8 @@ use crate::obs::snapshot::{KvGauges, MetricsSnapshot};
 use crate::obs::trace::{EventKind, FlightRecorder, Outcome, PanicSite, RouteKind, Trace};
 use crate::runtime::{Engine, PrefillBackend};
 use crate::sim::cost::{
-    estimate_generate_ns, estimate_ingest_ns, estimate_spec_step_ns, Geometry,
-    SPEC_ASSUMED_ACCEPTANCE,
+    estimate_generate_ns_for, estimate_ingest_ns, estimate_spec_step_ns_for, DecodeCostModel,
+    Geometry, SPEC_ASSUMED_ACCEPTANCE,
 };
 use crate::util::fault::{FaultPlan, FaultPoint};
 use crate::util::threadpool::ThreadPool;
@@ -137,6 +138,14 @@ pub struct CoordinatorConfig {
     /// entirely (every record call collapses to one branch — the
     /// `telemetry_overhead` bench gate measures exactly this toggle).
     pub trace_events: usize,
+    /// Which LM the decode stack projects/unembeds through
+    /// (`--decode-backend {tiny,engine}`): the in-process [`TinyLm`]
+    /// default, or compiled per-step `decode_step` modules executed
+    /// through the prefill backend. When the manifest lacks decode
+    /// modules the coordinator logs and falls back to `tiny`.
+    ///
+    /// [`TinyLm`]: crate::decode::TinyLm
+    pub decode_backend: DecodeBackendKind,
 }
 
 impl Default for CoordinatorConfig {
@@ -151,6 +160,7 @@ impl Default for CoordinatorConfig {
             faults: FaultPlan::from_env().map(Arc::new),
             degrade: DegradeConfig::default(),
             trace_events: 4096,
+            decode_backend: DecodeBackendKind::default(),
         }
     }
 }
@@ -366,7 +376,10 @@ pub struct Coordinator {
     prefix_index: Arc<PrefixIndex>,
     radix_index: Arc<RadixIndex>,
     prefix_mode: PrefixMode,
-    decode_model: Arc<TinyLm>,
+    decode_model: Arc<dyn DecodeBackend>,
+    /// Which decode cost constants admission budgets with — matched to
+    /// the *resolved* backend (post-fallback), not the configured one.
+    cost_model: DecodeCostModel,
     geometry: Geometry,
     workers: usize,
     next_id: AtomicU64,
@@ -399,14 +412,31 @@ impl Coordinator {
         let metrics = Arc::new(metrics);
         let admission = Arc::new(Admission::new(cfg.admission));
         let m = &backend.manifest().model;
-        // decode stand-in LM shares the manifest geometry (see
-        // decode::session docs); one attention layer today.
-        let decode_model =
-            Arc::new(TinyLm::new(0xD0C0DE, m.n_heads, m.n_kv_heads.max(1), m.d_head, m.vocab_size));
+        // decode backend over the manifest geometry (see decode::backend
+        // docs). Boot stays infallible: if the configured backend cannot
+        // be built (e.g. `engine` against artifacts without decode
+        // modules), serve on `tiny` and say so instead of panicking the
+        // whole stack.
+        let decode_model: Arc<dyn DecodeBackend> = match cfg.decode_backend.build(&backend) {
+            Ok(b) => b,
+            Err(e) => {
+                crate::info!(
+                    "decode backend `{}` unavailable ({e:#}) — falling back to `tiny`",
+                    cfg.decode_backend.label()
+                );
+                DecodeBackendKind::Tiny
+                    .build(&backend)
+                    .expect("tiny decode backend construction is infallible")
+            }
+        };
+        let cost_model = match decode_model.name() {
+            "engine" => DecodeCostModel::Engine,
+            _ => DecodeCostModel::Tiny,
+        };
         let kv = SharedKv::new(
             KvConfig { total_pages: cfg.kv_pages, page_tokens: m.block },
-            decode_model.hk,
-            decode_model.dh,
+            decode_model.kv_heads(),
+            decode_model.head_dim(),
         );
         if let Some(plan) = &cfg.faults {
             kv.set_fault_plan(Arc::clone(plan));
@@ -471,6 +501,7 @@ impl Coordinator {
             radix_index,
             prefix_mode: cfg.prefix_mode,
             decode_model,
+            cost_model,
             geometry,
             workers: cfg.workers,
             next_id: AtomicU64::new(1),
@@ -489,15 +520,24 @@ impl Coordinator {
         self.pjrt.as_ref()
     }
 
+    /// The serving backend (PJRT or synthetic) executing prefill
+    /// modules — the same handle decode backends are built over, so
+    /// eval drivers can construct alternative [`DecodeBackend`]s
+    /// against the manifest this coordinator serves.
+    pub fn prefill_backend(&self) -> &Arc<dyn PrefillBackend> {
+        &self.backend
+    }
+
     /// The admission gate (exposed so tests can assert the outstanding
     /// counters return to zero after a drain).
     pub fn admission(&self) -> &Arc<Admission> {
         &self.admission
     }
 
-    /// The deterministic decode LM (exposed so tests/benches can share
-    /// the exact serving geometry).
-    pub fn decode_model(&self) -> &Arc<TinyLm> {
+    /// The decode backend serving generations (exposed so tests/benches
+    /// can share the exact serving geometry and assert the resolved
+    /// backend via [`DecodeBackend::name`]).
+    pub fn decode_model(&self) -> &Arc<dyn DecodeBackend> {
         &self.decode_model
     }
 
@@ -675,7 +715,8 @@ impl Coordinator {
                 StepPlan::Dense => None,
                 StepPlan::Sparse { budget_blocks } => Some(budget_blocks as f64),
             };
-            let round_ns = estimate_spec_step_ns(
+            let round_ns = estimate_spec_step_ns_for(
+                self.cost_model,
                 &self.geometry,
                 mean_ctx,
                 policy.spec_gamma,
@@ -688,7 +729,8 @@ impl Coordinator {
             estimate_ingest_ns(&self.geometry, prompt.len())
                 + (max_new_tokens as f64 / commits).ceil() * round_ns
         } else {
-            estimate_generate_ns(
+            estimate_generate_ns_for(
+                self.cost_model,
                 &self.geometry,
                 prompt.len(),
                 max_new_tokens,
@@ -823,11 +865,12 @@ impl Coordinator {
     pub fn report(&self) -> String {
         let (used, total, frac) = self.kv_occupancy();
         format!(
-            "{}\nkv pages: {used}/{total} in use ({:.1}%) | slab pages resident: {} | cached prefixes: {}",
+            "{}\nkv pages: {used}/{total} in use ({:.1}%) | slab pages resident: {} | cached prefixes: {} | decode backend: {}",
             self.metrics.report(self.uptime()),
             100.0 * frac,
             self.kv.pages_resident(),
             self.cached_prefixes(),
+            self.decode_model.name(),
         )
     }
 
@@ -843,7 +886,9 @@ impl Coordinator {
             pages_total: total as u64,
             slab_pages: self.kv.pages_resident() as u64,
         };
-        MetricsSnapshot::collect(&self.metrics, Some(gauges), self.uptime())
+        let mut snap = MetricsSnapshot::collect(&self.metrics, Some(gauges), self.uptime());
+        snap.decode_backend = Some(self.decode_model.name());
+        snap
     }
 
     /// The flight recorder, when tracing is armed
@@ -872,7 +917,7 @@ struct DispatcherCtx {
     prefix_index: Arc<PrefixIndex>,
     radix_index: Arc<RadixIndex>,
     prefix_mode: PrefixMode,
-    decode_model: Arc<TinyLm>,
+    decode_model: Arc<dyn DecodeBackend>,
     batcher_cfg: BatcherConfig,
     decode_cfg: DecodeLaneConfig,
     workers: usize,
@@ -1775,7 +1820,7 @@ fn start_prefix_fill(
     holder_clock: &mut u64,
     tables: PrefixTables<'_>,
     kv: &Arc<SharedKv>,
-    model: &Arc<TinyLm>,
+    model: &Arc<dyn DecodeBackend>,
     metrics: &Arc<Metrics>,
     admission: &Arc<Admission>,
     active: &Arc<AtomicUsize>,
@@ -2149,6 +2194,42 @@ mod tests {
             .expect("synthetic generate");
         assert_eq!(gen.finish, Finish::Complete);
         assert!(!gen.tokens.is_empty());
+    }
+
+    #[test]
+    fn engine_decode_backend_serves_and_labels() {
+        let backend = Arc::new(SyntheticEngine::new(&[64, 128]));
+        let coord = Coordinator::with_backend(
+            backend,
+            CoordinatorConfig {
+                workers: 2,
+                kv_pages: 256,
+                faults: None,
+                decode_backend: DecodeBackendKind::Engine,
+                ..CoordinatorConfig::default()
+            },
+        );
+        assert_eq!(coord.decode_model().name(), "engine");
+        let gen = coord
+            .generate_blocking(vec![1, 2, 3, 4], 4, DecodePolicy::default())
+            .expect("engine-backed generate");
+        assert_eq!(gen.finish, Finish::Complete);
+        assert!(!gen.tokens.is_empty());
+        // the backend label reaches every observability surface
+        assert!(coord.report().contains("decode backend: engine"), "{}", coord.report());
+        let snap = coord.snapshot();
+        assert_eq!(snap.decode_backend, Some("engine"));
+        let j = crate::util::json::Json::parse(&snap.to_json().to_string()).unwrap();
+        assert_eq!(j.path("decode.backend").unwrap().as_str(), Some("engine"));
+        assert!(snap.to_prometheus().contains("stem_decode_backend_info{backend=\"engine\"} 1"));
+    }
+
+    #[test]
+    fn default_backend_is_tiny_and_labeled() {
+        let coord = tiny_coordinator();
+        assert_eq!(coord.decode_model().name(), "tiny");
+        assert!(coord.report().contains("decode backend: tiny"));
+        assert_eq!(coord.snapshot().decode_backend, Some("tiny"));
     }
 
     #[test]

@@ -1,0 +1,496 @@
+//! Pluggable decode backends: the LM layer a [`DecodeSession`] projects,
+//! unembeds and picks tokens with.
+//!
+//! [`DecodeBackend`] extracts exactly the model surface the decode stack
+//! touches — prompt-ingest K/V projection, the single-position QKV
+//! projection of a step, logit production for a step (or a batched γ+1
+//! verify position) and greedy token selection — so the session, the
+//! speculative draft/verify loop and the coordinator hold an
+//! `Arc<dyn DecodeBackend>` instead of a concrete model:
+//!
+//! * [`TinyLm`] (the seeded in-process reference LM) implements the
+//!   trait as the fast deterministic default — every test that does not
+//!   care about the real model keeps its exact pre-trait streams.
+//! * [`EngineBackend`] routes per-step logits through compiled
+//!   `decode_step` modules served by a [`PrefillBackend`] (the PJRT
+//!   [`Engine`](crate::runtime::Engine) against real artifacts, or the
+//!   artifact-free [`SyntheticEngine`](crate::runtime::SyntheticEngine)
+//!   in CI): the token history is padded to the smallest decode context
+//!   bucket and executed as one ids→logits forward, and the logits row
+//!   at the last real position decides the token. K/V projections come
+//!   from a checkpoint-seeded projection core with the manifest
+//!   geometry, so the paged-KV store, the sparse kernels and the
+//!   speculative rollback machinery run unchanged underneath the
+//!   compiled logits.
+//!
+//! Determinism contract: `step_logits` must be a pure function of the
+//! token history prefix (plus the attention output it may fall back on),
+//! because the byte-exact spec==sequential equivalence suite
+//! (`rust/tests/spec_equivalence.rs`) runs per backend — a backend whose
+//! verify-position logits differ from its sequential-step logits would
+//! corrupt committed streams, not just waste drafts.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::model::vocab;
+use crate::runtime::engine::PrefillBackend;
+
+use super::session::TinyLm;
+
+/// Deterministic greedy pick (ties break toward the lowest id) — the
+/// shared selection rule every backend defaults to.
+pub fn greedy_argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// The LM surface of the decode stack (see module docs). Implementations
+/// must be deterministic: same inputs, same outputs, at any thread count.
+pub trait DecodeBackend: Send + Sync {
+    /// Query heads.
+    fn heads(&self) -> usize;
+
+    /// K/V heads (GQA groups).
+    fn kv_heads(&self) -> usize;
+
+    /// Head dimension.
+    fn head_dim(&self) -> usize;
+
+    /// Vocabulary size of the logits this backend produces.
+    fn vocab(&self) -> usize;
+
+    /// Model width (`heads · head_dim` unless the backend overrides).
+    fn d_model(&self) -> usize {
+        self.heads() * self.head_dim()
+    }
+
+    /// Stable label for config/metrics surfaces (`"tiny"`, `"engine"`).
+    fn name(&self) -> &'static str;
+
+    /// Project one token at `pos`: `(Some(q) if with_q, k, v)`, each
+    /// `[heads·dh]` row-major. Prompt ingestion skips the q projection.
+    fn project(&self, token: i32, pos: usize, with_q: bool)
+        -> (Option<Vec<f32>>, Vec<f32>, Vec<f32>);
+
+    /// Unembed an attention output (`[heads·dh]`) into vocab logits —
+    /// the context-free half of a step; backends whose logits depend on
+    /// the token history override [`DecodeBackend::step_logits`] instead.
+    fn logits(&self, attn_out: &[f32]) -> Vec<f32>;
+
+    /// Logits for the decode step conditioned on `history` — every token
+    /// whose K/V is cached, in stream order (the step's own conditioning
+    /// token last). `attn_out` is that step's policy-directed attention
+    /// output; the default implementation unembeds it via
+    /// [`DecodeBackend::logits`], while module-executing backends use
+    /// the history as the ids of a compiled forward. The speculative
+    /// verify calls this once per γ+1 position with the matching history
+    /// prefix, so it must be a pure function of its inputs.
+    fn step_logits(&self, history: &[i32], attn_out: &[f32]) -> Vec<f32> {
+        let _ = history;
+        self.logits(attn_out)
+    }
+
+    /// Pick the emitted token from a step's logits (greedy, lowest-id
+    /// tie-break by default).
+    fn select(&self, logits: &[f32]) -> i32 {
+        greedy_argmax(logits)
+    }
+}
+
+impl DecodeBackend for TinyLm {
+    fn heads(&self) -> usize {
+        self.h
+    }
+
+    fn kv_heads(&self) -> usize {
+        self.hk
+    }
+
+    fn head_dim(&self) -> usize {
+        self.dh
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn d_model(&self) -> usize {
+        TinyLm::d_model(self)
+    }
+
+    fn name(&self) -> &'static str {
+        "tiny"
+    }
+
+    fn project(
+        &self,
+        token: i32,
+        pos: usize,
+        with_q: bool,
+    ) -> (Option<Vec<f32>>, Vec<f32>, Vec<f32>) {
+        TinyLm::project(self, token, pos, with_q)
+    }
+
+    fn logits(&self, attn_out: &[f32]) -> Vec<f32> {
+        TinyLm::logits(self, attn_out)
+    }
+}
+
+/// Which decode backend a serving stack should construct — the config
+/// surface behind `CoordinatorConfig::decode_backend` and the
+/// `--decode-backend {tiny,engine}` CLI flag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DecodeBackendKind {
+    /// The in-process deterministic [`TinyLm`] (fast test default).
+    #[default]
+    Tiny,
+    /// Compiled per-step decode modules through [`EngineBackend`].
+    Engine,
+}
+
+impl DecodeBackendKind {
+    /// Parse the CLI spelling (`"tiny"` / `"engine"`).
+    pub fn parse(s: &str) -> Option<DecodeBackendKind> {
+        match s {
+            "tiny" => Some(DecodeBackendKind::Tiny),
+            "engine" => Some(DecodeBackendKind::Engine),
+            _ => None,
+        }
+    }
+
+    /// The stable label ([`DecodeBackend::name`]) this kind resolves to.
+    pub fn label(self) -> &'static str {
+        match self {
+            DecodeBackendKind::Tiny => "tiny",
+            DecodeBackendKind::Engine => "engine",
+        }
+    }
+
+    /// Resolve this kind into a live backend over `engine`'s manifest.
+    /// `Tiny` seeds the deterministic in-process LM with the manifest
+    /// geometry (the serving seed every pre-trait stream was pinned
+    /// under); `Engine` wraps the manifest's compiled `decode_step`
+    /// modules under its first listed checkpoint (or `"base"` when the
+    /// manifest names none). Only the `Engine` arm can fail — on
+    /// artifacts that predate the decode lowering.
+    pub fn build(self, engine: &Arc<dyn PrefillBackend>) -> Result<Arc<dyn DecodeBackend>> {
+        let m = &engine.manifest().model;
+        match self {
+            DecodeBackendKind::Tiny => Ok(Arc::new(TinyLm::new(
+                0xD0C0DE,
+                m.n_heads,
+                m.n_kv_heads.max(1),
+                m.d_head,
+                m.vocab_size,
+            ))),
+            DecodeBackendKind::Engine => {
+                let checkpoint = engine
+                    .manifest()
+                    .weights
+                    .first()
+                    .map(|(name, _)| name.clone())
+                    .unwrap_or_else(|| "base".to_string());
+                Ok(Arc::new(EngineBackend::new(Arc::clone(engine), &checkpoint)?))
+            }
+        }
+    }
+}
+
+/// Decode backend over compiled `decode_step` modules (see module docs):
+/// per-step logits execute the token history through the smallest
+/// manifest decode bucket that covers it, via the same
+/// [`PrefillBackend`] weight-pinning path prefill uses; K/V projections
+/// come from a checkpoint-seeded projection core with the manifest
+/// geometry, so paging, sparse attention and speculative rollback are
+/// exercised unchanged.
+pub struct EngineBackend {
+    engine: Arc<dyn PrefillBackend>,
+    checkpoint: String,
+    /// Checkpoint-seeded projection core with the manifest geometry —
+    /// supplies K/V (and q) rows plus the unembed fallback once the
+    /// context outgrows every decode bucket.
+    proj: TinyLm,
+    /// Sorted distinct `decode_step` context buckets from the manifest.
+    buckets: Vec<usize>,
+    vocab: usize,
+    overflow_warned: AtomicBool,
+}
+
+impl EngineBackend {
+    /// Module kind of the per-step decode graphs this backend executes.
+    pub const KIND: &'static str = "decode_step";
+
+    /// Build over `engine`'s manifest: geometry from `manifest.model`,
+    /// buckets from its `decode_step` modules (at least one required —
+    /// artifacts predating the decode lowering fail loudly here instead
+    /// of silently decoding with the projection core).
+    pub fn new(engine: Arc<dyn PrefillBackend>, checkpoint: &str) -> Result<EngineBackend> {
+        let m = engine.manifest();
+        let mut buckets: Vec<usize> = m
+            .modules
+            .iter()
+            .filter(|mo| mo.kind == Self::KIND)
+            .map(|mo| mo.n_ctx)
+            .collect();
+        buckets.sort_unstable();
+        buckets.dedup();
+        if buckets.is_empty() {
+            bail!(
+                "manifest has no `{}` modules — re-run the aot compile path \
+                 (python/compile/aot.py) to lower per-step decode graphs",
+                Self::KIND
+            );
+        }
+        let (model, vocab) = (&m.model, m.model.vocab_size);
+        let proj = TinyLm::new(
+            Self::seed_for(checkpoint),
+            model.n_heads,
+            model.n_kv_heads.max(1),
+            model.d_head,
+            vocab,
+        );
+        Ok(EngineBackend {
+            engine,
+            checkpoint: checkpoint.to_string(),
+            proj,
+            buckets,
+            vocab,
+            overflow_warned: AtomicBool::new(false),
+        })
+    }
+
+    /// Deterministic per-checkpoint projection seed (FNV-1a over the
+    /// checkpoint name): distinct checkpoints get distinct K/V streams,
+    /// and — by construction — streams distinct from the default
+    /// `TinyLm` test seeds, so per-backend test pins actually
+    /// discriminate.
+    fn seed_for(checkpoint: &str) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for b in checkpoint.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
+    /// Sorted decode context buckets this backend can execute.
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    /// Smallest decode bucket covering a history of `n` tokens (`None`
+    /// once the context outgrows every lowered module).
+    pub fn bucket_for(&self, n: usize) -> Option<usize> {
+        self.buckets.iter().copied().find(|&b| b >= n)
+    }
+}
+
+impl DecodeBackend for EngineBackend {
+    fn heads(&self) -> usize {
+        self.proj.h
+    }
+
+    fn kv_heads(&self) -> usize {
+        self.proj.hk
+    }
+
+    fn head_dim(&self) -> usize {
+        self.proj.dh
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn name(&self) -> &'static str {
+        "engine"
+    }
+
+    fn project(
+        &self,
+        token: i32,
+        pos: usize,
+        with_q: bool,
+    ) -> (Option<Vec<f32>>, Vec<f32>, Vec<f32>) {
+        self.proj.project(token, pos, with_q)
+    }
+
+    fn logits(&self, attn_out: &[f32]) -> Vec<f32> {
+        self.proj.logits(attn_out)
+    }
+
+    fn step_logits(&self, history: &[i32], attn_out: &[f32]) -> Vec<f32> {
+        let n = history.len();
+        let bucket = match (n > 0).then(|| self.bucket_for(n)).flatten() {
+            Some(b) => b,
+            None => {
+                // context outgrew every lowered decode bucket (or an
+                // empty history): fall back to unembedding the attention
+                // output — deterministic, but no longer the compiled
+                // model. Warn once so the degradation is visible.
+                if n > 0 && !self.overflow_warned.swap(true, Ordering::Relaxed) {
+                    crate::info!(
+                        "engine decode: context {} outgrew the largest decode bucket {} — \
+                         falling back to the projection-core unembed",
+                        n,
+                        self.buckets.last().copied().unwrap_or(0)
+                    );
+                }
+                return self.proj.logits(attn_out);
+            }
+        };
+        let mut ids = history.to_vec();
+        ids.resize(bucket, vocab::PAD);
+        match self.engine.prefill(&self.checkpoint, Self::KIND, bucket, &ids, &[]) {
+            Ok(out) => {
+                debug_assert_eq!(out.vocab, self.vocab, "manifest vocab drift");
+                out.logits[(n - 1) * out.vocab..n * out.vocab].to_vec()
+            }
+            Err(e) => {
+                // execution failure degrades to the deterministic local
+                // unembed rather than poisoning the whole session; the
+                // flight recorder / logs carry the cause
+                if !self.overflow_warned.swap(true, Ordering::Relaxed) {
+                    crate::info!("engine decode: module execution failed ({e:#}) — falling back");
+                }
+                self.proj.logits(attn_out)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::{Manifest, ModelConfig, ModuleInfo};
+    use crate::runtime::engine::{PrefillOutput, ScalarValue};
+    use crate::runtime::SyntheticEngine;
+
+    #[test]
+    fn tiny_lm_implements_the_trait_faithfully() {
+        let lm = TinyLm::new(7, 4, 2, 8, vocab::VOCAB_SIZE);
+        let b: &dyn DecodeBackend = &lm;
+        assert_eq!((b.heads(), b.kv_heads(), b.head_dim()), (4, 2, 8));
+        assert_eq!(b.d_model(), 32);
+        assert_eq!(b.name(), "tiny");
+        let attn = vec![0.25f32; 32];
+        assert_eq!(b.logits(&attn), lm.logits(&attn));
+        // the default step_logits ignores the history entirely
+        assert_eq!(b.step_logits(&[1, 2, 3], &attn), lm.logits(&attn));
+        let l = b.logits(&attn);
+        assert_eq!(b.select(&l), TinyLm::argmax(&l));
+    }
+
+    #[test]
+    fn engine_backend_executes_decode_modules() {
+        let eng = Arc::new(SyntheticEngine::new(&[64, 128]));
+        let be = EngineBackend::new(eng.clone(), "base").unwrap();
+        assert_eq!(be.name(), "engine");
+        assert_eq!(be.buckets(), &[64, 128]);
+        assert_eq!(be.bucket_for(65), Some(128));
+        assert_eq!(be.bucket_for(129), None);
+        let m = eng.manifest().model.clone();
+        assert_eq!((be.heads(), be.kv_heads(), be.head_dim()), (4, 2, 16));
+        let history = [vocab::BOS, 5, 9, 2];
+        let attn = vec![0.0f32; be.d_model()];
+        let logits = be.step_logits(&history, &attn);
+        assert_eq!(logits.len(), m.vocab_size);
+        // the synthetic engine's hot logit is a pure function of the last
+        // real (token, position) pair — exactly the row the backend reads
+        let n = history.len();
+        let hot = (history[n - 1] as u64)
+            .wrapping_mul(0x9e37_79b9)
+            .wrapping_add((n - 1) as u64)
+            % m.vocab_size as u64;
+        assert_eq!(be.select(&logits), hot as i32);
+        // deterministic per history prefix
+        assert_eq!(be.step_logits(&history, &attn), logits);
+        // and genuinely different from the TinyLm default for the same
+        // attention output (the whole point of the backend split)
+        let tiny = TinyLm::new(7, 4, 2, 16, m.vocab_size);
+        assert_ne!(DecodeBackend::step_logits(&tiny, &history, &attn), logits);
+    }
+
+    #[test]
+    fn engine_backend_falls_back_past_the_largest_bucket() {
+        let eng = Arc::new(SyntheticEngine::new(&[64]));
+        let be = EngineBackend::new(eng, "base").unwrap();
+        let history = vec![3i32; 65]; // > largest decode bucket
+        let attn = vec![0.5f32; be.d_model()];
+        assert_eq!(be.step_logits(&history, &attn), be.logits(&attn));
+        // empty history (no cached tokens) also unembeds locally
+        assert_eq!(be.step_logits(&[], &attn), be.logits(&attn));
+    }
+
+    #[test]
+    fn distinct_checkpoints_project_distinct_kv() {
+        let eng = Arc::new(SyntheticEngine::new(&[64]));
+        let a = EngineBackend::new(eng.clone(), "base").unwrap();
+        let b = EngineBackend::new(eng, "other").unwrap();
+        let (_, ka, _) = a.project(5, 3, false);
+        let (_, kb, _) = b.project(5, 3, false);
+        assert_ne!(ka, kb, "checkpoint seed must differentiate projections");
+    }
+
+    /// A manifest without decode modules (pre-refactor artifacts).
+    struct PrefillOnly(Manifest);
+
+    impl PrefillBackend for PrefillOnly {
+        fn manifest(&self) -> &Manifest {
+            &self.0
+        }
+
+        fn prefill(
+            &self,
+            _checkpoint: &str,
+            _kind: &str,
+            _n_ctx: usize,
+            _ids: &[i32],
+            _scalars: &[ScalarValue],
+        ) -> Result<PrefillOutput> {
+            bail!("unused")
+        }
+    }
+
+    #[test]
+    fn construction_fails_loudly_without_decode_modules() {
+        let man = Manifest {
+            root: std::path::PathBuf::new(),
+            model: ModelConfig {
+                vocab_size: vocab::VOCAB_SIZE,
+                d_model: 64,
+                n_layers: 2,
+                n_heads: 4,
+                n_kv_heads: 2,
+                d_ff: 128,
+                block: 16,
+                init_keep: 1,
+                local_keep: 2,
+                min_total: 3,
+                d_head: 16,
+            },
+            param_spec: vec![],
+            weights: vec![],
+            modules: vec![ModuleInfo {
+                name: "prefill_stem_128".into(),
+                kind: "prefill_stem".into(),
+                n_ctx: 128,
+                file: String::new(),
+                scalars: vec![],
+                outputs: vec!["logits".into(), "budget_fraction".into()],
+            }],
+            eval_sets: vec![],
+            defaults: vec![],
+        };
+        let err = EngineBackend::new(Arc::new(PrefillOnly(man)), "base").unwrap_err();
+        assert!(err.to_string().contains("decode_step"), "{err}");
+    }
+}

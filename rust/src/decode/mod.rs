@@ -26,8 +26,14 @@
 //!   variant [`DecodeSession::fork_prefix`] +
 //!   [`DecodeSession::extend_prompt`], which share only a page-aligned
 //!   prefix and ingest the rest (the radix prefix cache's primitive).
-//!   [`TinyLm`] is the deterministic reference LM standing in for
-//!   per-step decode HLO modules.
+//! * [`backend`] — [`DecodeBackend`]: the pluggable LM layer sessions
+//!   project/unembed/select through. [`TinyLm`] is the deterministic
+//!   in-process default; [`EngineBackend`] executes compiled
+//!   `decode_step` modules (per context bucket, from the artifacts
+//!   manifest) through the same weight-pinned
+//!   [`PrefillBackend`](crate::runtime::PrefillBackend) path prefill
+//!   uses — selected via [`DecodeBackendKind`]
+//!   (`--decode-backend {tiny,engine}`).
 //! * [`spec`] — speculative multi-token decode:
 //!   [`DecodeSession::spec_round`] drafts γ tokens with the cheap
 //!   [`DecodePolicy::draft`] variant, verifies all γ+1 positions under
@@ -47,12 +53,14 @@
 //! `examples/fanout_stream.rs` drive sessions directly (no artifacts
 //! needed).
 
+pub mod backend;
 pub mod policy;
 pub mod session;
 pub mod sparse_decode;
 pub mod spec;
 pub mod store;
 
+pub use backend::{greedy_argmax, DecodeBackend, DecodeBackendKind, EngineBackend};
 pub use policy::{DecodePolicy, StepPlan};
 pub use session::{DecodeError, DecodeSession, SessionStats, StepInfo, TinyLm};
 pub use sparse_decode::{

@@ -4,10 +4,13 @@
 //!
 //! * [`TinyLm`] — a deterministic seeded reference LM (embedding +
 //!   sinusoidal positions + tied-unembedding, single attention layer)
-//!   sharing the manifest geometry. The PJRT engine only lowers prefill
-//!   graphs, so the decode phase runs the pure-rust core end-to-end with
-//!   this stand-in; swapping in per-step decode HLO modules is a ROADMAP
-//!   item and only replaces the projection calls here.
+//!   sharing the manifest geometry. It is the default
+//!   [`DecodeBackend`](super::DecodeBackend) implementation; sessions
+//!   hold an `Arc<dyn DecodeBackend>`, so the same loop also drives
+//!   compiled per-step decode modules through
+//!   [`EngineBackend`](super::EngineBackend) — the session additionally
+//!   tracks the full token history because module-executing backends
+//!   need the conditioning ids, not just an attention output.
 //! * [`DecodeSession`] — ingests a prompt, then generates tokens one
 //!   step at a time: project q/k/v for the last token, append K/V into
 //!   pages (pool append + shared slab writes), run the policy-directed
@@ -33,6 +36,7 @@ use crate::obs::sparsity::StepTelemetry;
 use crate::sparse::Tensor;
 use crate::util::rng::Rng;
 
+use super::backend::DecodeBackend;
 use super::policy::DecodePolicy;
 use super::sparse_decode::decode_attend;
 use super::store::{SeqKvView, SharedKv};
@@ -159,15 +163,11 @@ impl TinyLm {
         Self::matvec(&self.embed, &y)
     }
 
-    /// Deterministic greedy pick (ties break toward the lowest id).
+    /// Deterministic greedy pick (ties break toward the lowest id) —
+    /// the same rule every backend's default
+    /// [`DecodeBackend::select`] uses.
     pub fn argmax(logits: &[f32]) -> i32 {
-        let mut best = 0usize;
-        for (i, &v) in logits.iter().enumerate() {
-            if v > logits[best] {
-                best = i;
-            }
-        }
-        best as i32
+        super::backend::greedy_argmax(logits)
     }
 }
 
@@ -221,10 +221,15 @@ pub struct SessionStats {
 pub struct DecodeSession {
     pub(super) seq: u64,
     pub(super) kv: Arc<SharedKv>,
-    pub(super) model: Arc<TinyLm>,
+    pub(super) model: Arc<dyn DecodeBackend>,
     pub(super) policy: DecodePolicy,
     pub(super) page_tokens: usize,
     pub(super) table: Vec<u32>,
+    /// Token history in stream order: `tokens[p]` is the token whose K/V
+    /// sits at cache position `p` — exactly the ids a module-executing
+    /// backend conditions on. 4 bytes/token against the KV pages'
+    /// hundreds, so it is kept unconditionally.
+    pub(super) tokens: Vec<i32>,
     pub(super) n_ctx: usize,
     pub(super) step: usize,
     pub(super) last_token: i32,
@@ -243,12 +248,12 @@ impl DecodeSession {
     /// shared store.
     pub fn new(
         kv: Arc<SharedKv>,
-        model: Arc<TinyLm>,
+        model: Arc<dyn DecodeBackend>,
         policy: DecodePolicy,
         seq: u64,
     ) -> Result<Self, DecodeError> {
         debug_assert_eq!(
-            (model.hk, model.dh),
+            (model.kv_heads(), model.head_dim()),
             (kv.kv_heads(), kv.head_dim()),
             "model geometry must match the shared store"
         );
@@ -261,6 +266,7 @@ impl DecodeSession {
             policy,
             page_tokens,
             table: vec![],
+            tokens: vec![],
             n_ctx: 0,
             step: 0,
             last_token: vocab::BOS,
@@ -292,6 +298,7 @@ impl DecodeSession {
             policy: self.policy,
             page_tokens: self.page_tokens,
             table,
+            tokens: self.tokens.clone(),
             n_ctx: self.n_ctx,
             step: 0,
             last_token: self.last_token,
@@ -323,6 +330,8 @@ impl DecodeSession {
         last_token: i32,
     ) -> Result<DecodeSession, DecodeError> {
         let table = self.kv.fork_prefix(self.seq, new_seq, n_tokens)?;
+        let mut tokens = self.tokens.clone();
+        tokens.truncate(n_tokens);
         Ok(DecodeSession {
             seq: new_seq,
             kv: Arc::clone(&self.kv),
@@ -330,6 +339,7 @@ impl DecodeSession {
             policy: self.policy,
             page_tokens: self.page_tokens,
             table,
+            tokens,
             n_ctx: n_tokens,
             step: 0,
             last_token,
@@ -383,9 +393,16 @@ impl DecodeSession {
         &self.policy
     }
 
-    /// The model this session projects with.
-    pub fn model(&self) -> &Arc<TinyLm> {
+    /// The decode backend this session projects and unembeds with.
+    pub fn model(&self) -> &Arc<dyn DecodeBackend> {
         &self.model
+    }
+
+    /// The token history in stream order: `token_history()[p]` is the
+    /// token whose K/V is cached at position `p` (prompt + committed
+    /// generations; length equals [`DecodeSession::n_ctx`]).
+    pub fn token_history(&self) -> &[i32] {
+        &self.tokens
     }
 
     /// The shared store this session decodes against.
@@ -403,7 +420,12 @@ impl DecodeSession {
         Ok(f(&view))
     }
 
-    pub(super) fn append_kv(&mut self, k_rows: &[f32], v_rows: &[f32]) -> Result<(), DecodeError> {
+    pub(super) fn append_kv(
+        &mut self,
+        token: i32,
+        k_rows: &[f32],
+        v_rows: &[f32],
+    ) -> Result<(), DecodeError> {
         let pos = self.n_ctx;
         let app = self.kv.append_tokens(self.seq, 1)?;
         // patch the cached table from the append delta instead of
@@ -416,6 +438,7 @@ impl DecodeSession {
         self.table.extend_from_slice(&app.grown);
         let page = self.table[pos / self.page_tokens];
         self.kv.write_token(page, pos % self.page_tokens, k_rows, v_rows)?;
+        self.tokens.push(token);
         self.n_ctx = pos + 1;
         Ok(())
     }
@@ -429,6 +452,7 @@ impl DecodeSession {
     pub(super) fn rewind_to(&mut self, n_tokens: usize) -> Result<(), DecodeError> {
         self.kv.truncate_tail(self.seq, n_tokens)?;
         self.table.truncate(n_tokens.div_ceil(self.page_tokens.max(1)));
+        self.tokens.truncate(n_tokens);
         self.n_ctx = n_tokens;
         Ok(())
     }
@@ -452,7 +476,7 @@ impl DecodeSession {
     pub fn extend_prompt(&mut self, suffix: &[i32]) -> Result<(), DecodeError> {
         for &t in suffix {
             let (_, k, v) = self.model.project(t, self.n_ctx, false);
-            self.append_kv(&k, &v)?;
+            self.append_kv(t, &k, &v)?;
         }
         if let Some(&last) = suffix.last() {
             self.last_token = last;
@@ -461,14 +485,14 @@ impl DecodeSession {
     }
 
     /// One decode step: project the last token, append its K/V into the
-    /// paged cache, attend under the policy, unembed and pick the next
-    /// token greedily.
+    /// paged cache, attend under the policy, produce the step's logits
+    /// through the backend and pick the next token greedily.
     pub fn step_once(&mut self) -> Result<StepInfo, DecodeError> {
         let t0 = Instant::now();
         let pos = self.n_ctx;
         let (q, k, v) = self.model.project(self.last_token, pos, true);
-        self.append_kv(&k, &v)?;
-        let q = Tensor::from_vec(&[self.model.h, self.model.dh], q.expect("with_q"));
+        self.append_kv(self.last_token, &k, &v)?;
+        let q = Tensor::from_vec(&[self.model.heads(), self.model.head_dim()], q.expect("with_q"));
         let att = {
             // hold the slab read lock only for the attention step itself;
             // sibling forks attend concurrently under the same read lock
@@ -476,8 +500,8 @@ impl DecodeSession {
             let view = SeqKvView { store: &*slabs, table: &self.table, n_tokens: self.n_ctx };
             decode_attend(&q, &view, &self.policy, self.step)
         };
-        let logits = self.model.logits(&att.out);
-        let token = TinyLm::argmax(&logits);
+        let logits = self.model.step_logits(&self.tokens, &att.out);
+        let token = self.model.select(&logits);
         let step_ns = t0.elapsed().as_nanos() as u64;
         let info = StepInfo {
             step: self.step,

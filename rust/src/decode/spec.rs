@@ -42,8 +42,9 @@ use std::time::Instant;
 use crate::sparse::Tensor;
 use crate::util::threadpool;
 
+use super::backend::DecodeBackend;
 use super::policy::{DecodePolicy, StepPlan};
-use super::session::{DecodeSession, SessionStats, StepInfo, TinyLm};
+use super::session::{DecodeSession, SessionStats, StepInfo};
 use super::sparse_decode::{decode_attend, verify_attend};
 use super::store::SeqKvView;
 use super::DecodeError;
@@ -139,7 +140,7 @@ impl DecodeSession {
         let step0 = self.step;
         let serve = self.policy;
         let draft = serve.draft();
-        let (h, dh) = (self.model.h, self.model.dh);
+        let (h, dh) = (self.model.heads(), self.model.head_dim());
         let block = self.page_tokens;
 
         // ---- draft: γ cheap steps + the bonus position's K/V ----------
@@ -172,18 +173,26 @@ impl DecodeSession {
             let view = SeqKvView { store: &*slabs, table: &self.table, n_tokens: self.n_ctx };
             verify_attend(&q_block, &view, &serve, n0 + 1, step0)
         };
-        // unembed every position in parallel — in sequential decode these
-        // γ+1 logit projections are serial, one per step
+        // produce every position's logits in parallel — in sequential
+        // decode these γ+1 backend steps are serial, one per step. Each
+        // position g conditions on the history prefix through its own
+        // token (n0 + 1 + g cached tokens), exactly what a sequential
+        // `step_once` at that position would hand the backend, so the
+        // verified token is bit-identical per backend.
         let verified: Vec<i32> = {
             let pool = threadpool::global();
             let outs = &ver.out;
-            let model = &*self.model;
-            let argmax_at =
-                |g: usize| TinyLm::argmax(&model.logits(&outs[g * h * dh..(g + 1) * h * dh]));
+            let model: &dyn DecodeBackend = &*self.model;
+            let history: &[i32] = &self.tokens;
+            let pick_at = |g: usize| {
+                let logits =
+                    model.step_logits(&history[..n0 + 1 + g], &outs[g * h * dh..(g + 1) * h * dh]);
+                model.select(&logits)
+            };
             if g1 <= 1 || pool.workers() == 1 {
-                (0..g1).map(argmax_at).collect()
+                (0..g1).map(pick_at).collect()
             } else {
-                threadpool::scope_parallel_borrowed(pool, g1, argmax_at)
+                threadpool::scope_parallel_borrowed(pool, g1, pick_at)
             }
         };
 
@@ -257,11 +266,11 @@ impl DecodeSession {
         q_rows: &mut Vec<f32>,
         drafts: &mut Vec<i32>,
     ) -> Result<(), DecodeError> {
-        let (h, dh) = (self.model.h, self.model.dh);
+        let (h, dh) = (self.model.heads(), self.model.head_dim());
         for g in 0..gamma {
             let pos = self.n_ctx;
             let (q, k, v) = self.model.project(*tok, pos, true);
-            self.append_kv(&k, &v)?;
+            self.append_kv(*tok, &k, &v)?;
             let q = q.expect("with_q");
             let att = {
                 let slabs = self.kv.slabs()?;
@@ -270,8 +279,8 @@ impl DecodeSession {
                 let qt = Tensor::from_vec(&[h, dh], q.clone());
                 decode_attend(&qt, &view, draft, step0 + g)
             };
-            let logits = self.model.logits(&att.out);
-            *tok = TinyLm::argmax(&logits);
+            let logits = self.model.step_logits(&self.tokens, &att.out);
+            *tok = self.model.select(&logits);
             drafts.push(*tok);
             q_rows.extend_from_slice(&q);
         }
@@ -279,7 +288,7 @@ impl DecodeSession {
         // can emit one token beyond a fully-accepted window
         let pos = self.n_ctx;
         let (q, k, v) = self.model.project(*tok, pos, true);
-        self.append_kv(&k, &v)?;
+        self.append_kv(*tok, &k, &v)?;
         q_rows.extend_from_slice(&q.expect("with_q"));
         Ok(())
     }

@@ -42,15 +42,17 @@ USAGE: stem <subcommand> [flags]
   serve     [--requests N] [--rps R] [--method stem|dense|...] [--mix]
             [--prefix-mode exact|radix] [--deadline-ms MS]
             [--metrics-out FILE] [--metrics-interval-ms N]
+            [--decode-backend tiny|engine]
   generate  [--prompt 1,16,17 | --prompt-len N] [--max-new N] [--dense]
             [--fanout N] [--spec N] [--k-start K] [--mu MU] [--sink S]
             [--recent R] [--dense-below TOKENS] [--block B] [--pages P]
-            [--seed S]
+            [--seed S] [--decode-backend tiny|engine]
   table1    [--limit N]
   table2    [--limit N] [--buckets 512,1024,2048]
   table3    [--limit N] [--buckets ...] [--native-k K]
   table4    [--limit N] [--buckets ...]
   table5    [--limit N] [--buckets ...]
+  table6    [--max-new N]   (decode backends: µs/token + spec per backend)
   figure1
   figure3   [--limit N]
   figure5   [--limit N] [--buckets ...]
@@ -58,6 +60,9 @@ USAGE: stem <subcommand> [flags]
   selftest
 
 flags: --artifacts DIR  --workers N  --threads N  --limit N  --quiet
+       --decode-backend tiny|engine  (which DecodeBackend serves decode
+       steps: the in-process TinyLm projection core, or compiled
+       per-step decode_step modules through the runtime; default tiny)
        --prefix-mode exact|radix  (how the coordinator matches cached
        prompt prefixes: byte-identical prompts only, or token-granular
        longest-common-prefix reuse with partial-page forks; default radix)
@@ -103,6 +108,10 @@ fn boot(args: &Args) -> Result<(Arc<Coordinator>, Evaluator)> {
     if let Some(pm) = args.get("prefix-mode") {
         cfg.prefix_mode = pm.parse().map_err(|e: String| anyhow!(e))?;
     }
+    if let Some(b) = args.get("decode-backend") {
+        cfg.decode_backend = stem::decode::DecodeBackendKind::parse(b)
+            .ok_or_else(|| anyhow!("--decode-backend must be `tiny` or `engine`"))?;
+    }
     let coordinator = Arc::new(Coordinator::new(engine, cfg));
     let limit = args.usize_or("limit", 12);
     Ok((Arc::clone(&coordinator), Evaluator { coordinator, limit }))
@@ -147,6 +156,11 @@ fn run(args: &Args) -> Result<()> {
             let (_, ev) = boot(args)?;
             let b = buckets_from(args, &[512, 1024, 2048]);
             println!("{}", tables::table5(&ev, &b)?);
+            Ok(())
+        }
+        Some("table6") => {
+            let (coord, _) = boot(args)?;
+            println!("{}", tables::decode_table(&coord, args.usize_or("max-new", 32))?);
             Ok(())
         }
         Some("figure1") => {
@@ -331,8 +345,12 @@ fn pre_warm(coord: &Arc<Coordinator>, method: &str) -> Result<()> {
 fn generate(args: &Args) -> Result<()> {
     use std::sync::Arc;
     use stem::coordinator::kv_cache::KvConfig;
-    use stem::decode::{DecodePolicy, DecodeSession, SharedKv, TinyLm};
+    use stem::decode::{
+        DecodeBackend, DecodeBackendKind, DecodePolicy, DecodeSession, EngineBackend, SharedKv,
+        TinyLm,
+    };
     use stem::model::vocab;
+    use stem::runtime::SyntheticEngine;
 
     let block = args.usize_or("block", 64);
     let pages = args.usize_or("pages", 4096);
@@ -376,8 +394,44 @@ fn generate(args: &Args) -> Result<()> {
     policy.spec_gamma = args.usize_or("spec", 0);
     policy.validate().map_err(|e| anyhow!("invalid policy: {e}"))?;
 
+    let backend_kind = match args.get("decode-backend") {
+        Some(b) => DecodeBackendKind::parse(b)
+            .ok_or_else(|| anyhow!("--decode-backend must be `tiny` or `engine`"))?,
+        None => DecodeBackendKind::Tiny,
+    };
     let kv = SharedKv::new(KvConfig { total_pages: pages, page_tokens: block }, hk, dh);
-    let model = Arc::new(TinyLm::new(0xD0C0DE, h, hk, dh, vocab::VOCAB_SIZE));
+    let model: Arc<dyn DecodeBackend> = match backend_kind {
+        DecodeBackendKind::Tiny => {
+            Arc::new(TinyLm::new(0xD0C0DE, h, hk, dh, vocab::VOCAB_SIZE))
+        }
+        DecodeBackendKind::Engine => {
+            // Compiled per-step decode. With real artifacts present the
+            // coordinator path (`stem serve --decode-backend engine`)
+            // exercises PJRT modules; here `generate` stays artifact-free
+            // by serving the decode_step modules from the synthetic
+            // engine at the CLI geometry, with context buckets sized to
+            // cover the whole stream.
+            let mut m = SyntheticEngine::tiny_model();
+            m.n_heads = h;
+            m.n_kv_heads = hk;
+            m.d_head = dh;
+            m.d_model = h * dh;
+            m.block = block;
+            let need = prompt.len() + max_new + 2;
+            let mut buckets = vec![];
+            let mut b = 512usize;
+            loop {
+                buckets.push(b);
+                if b >= need {
+                    break;
+                }
+                b *= 2;
+            }
+            let engine = Arc::new(SyntheticEngine::with_model(m, &buckets));
+            Arc::new(EngineBackend::new(engine, "base")?)
+        }
+    };
+    println!("decode backend: {}", model.name());
     let mut session = DecodeSession::new(Arc::clone(&kv), model, policy, 1)?;
 
     let t0 = Instant::now();

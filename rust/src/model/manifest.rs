@@ -67,12 +67,19 @@ impl ModuleInfo {
         self.kind
             .strip_prefix("prefill_")
             .or_else(|| self.kind.strip_prefix("diag_"))
+            .or_else(|| self.kind.strip_prefix("decode_"))
             .unwrap_or(&self.kind)
     }
 
     /// Whether this is a diagnostic module (returns hidden states).
     pub fn is_diag(&self) -> bool {
         self.kind.starts_with("diag_")
+    }
+
+    /// Whether this is a per-step decode module (`decode_step` buckets
+    /// executed by `decode::EngineBackend`, not the prefill lane).
+    pub fn is_decode(&self) -> bool {
+        self.kind.starts_with("decode_")
     }
 }
 
@@ -307,10 +314,15 @@ impl Manifest {
             .ok_or_else(|| anyhow!("no module {kind}@{n_ctx} in manifest"))
     }
 
-    /// Smallest bucket whose n_ctx >= the request length.
+    /// Smallest *prefill* bucket whose n_ctx >= the request length
+    /// (diag and decode_step modules have their own selection paths).
     pub fn bucket_for(&self, n_tokens: usize) -> Option<usize> {
-        let mut buckets: Vec<usize> =
-            self.modules.iter().filter(|m| !m.is_diag()).map(|m| m.n_ctx).collect();
+        let mut buckets: Vec<usize> = self
+            .modules
+            .iter()
+            .filter(|m| !m.is_diag() && !m.is_decode())
+            .map(|m| m.n_ctx)
+            .collect();
         buckets.sort();
         buckets.dedup();
         buckets.into_iter().find(|&b| b >= n_tokens)
@@ -369,13 +381,29 @@ mod tests {
             },
             param_spec: vec![],
             weights: vec![],
-            modules: vec![mk(512), mk(1024), mk(2048)],
+            modules: vec![
+                mk(512),
+                mk(1024),
+                mk(2048),
+                // a decode bucket must never satisfy prefill selection
+                ModuleInfo {
+                    name: "decode_step_4096".into(),
+                    kind: "decode_step".into(),
+                    n_ctx: 4096,
+                    file: String::new(),
+                    scalars: vec![],
+                    outputs: vec![],
+                },
+            ],
             eval_sets: vec![],
             defaults: vec![],
         };
         assert_eq!(man.bucket_for(100), Some(512));
         assert_eq!(man.bucket_for(512), Some(512));
         assert_eq!(man.bucket_for(513), Some(1024));
-        assert_eq!(man.bucket_for(4096), None);
+        assert_eq!(man.bucket_for(4096), None, "decode buckets are not prefill buckets");
+        assert!(man.module("decode_step", 4096).unwrap().is_decode());
+        assert_eq!(man.module("decode_step", 4096).unwrap().method(), "step");
+        assert!(!man.module("prefill_stem", 512).unwrap().is_decode());
     }
 }

@@ -199,6 +199,10 @@ pub struct MetricsSnapshot {
     pub kv: Option<KvGauges>,
     /// Flight-recorder stats, when tracing is armed.
     pub trace: Option<TraceStats>,
+    /// Stable label of the decode backend serving generations
+    /// (`"tiny"` / `"engine"`), set post-collect by the coordinator;
+    /// `None` when snapshotting a bare [`Metrics`] block.
+    pub decode_backend: Option<&'static str>,
 }
 
 impl MetricsSnapshot {
@@ -253,6 +257,7 @@ impl MetricsSnapshot {
             sparsity: m.sparsity.bands(),
             kv,
             trace,
+            decode_backend: None,
         }
     }
 
@@ -311,6 +316,13 @@ impl MetricsSnapshot {
             (
                 "decode",
                 Json::obj(vec![
+                    (
+                        "backend",
+                        match self.decode_backend {
+                            Some(b) => Json::str(b),
+                            None => Json::Null,
+                        },
+                    ),
                     ("batches", Json::Num(self.decode_batches as f64)),
                     ("steps", Json::Num(self.decode_steps as f64)),
                     ("dense_steps", Json::Num(self.decode_dense_steps as f64)),
@@ -447,6 +459,12 @@ impl MetricsSnapshot {
         if let Some(t) = &self.trace {
             gauge("stem_trace_events_recorded", t.recorded as f64);
             gauge("stem_trace_events_dropped", t.dropped as f64);
+        }
+        if let Some(b) = self.decode_backend {
+            // info-style series: the label carries the value
+            s.push_str(&format!(
+                "# TYPE stem_decode_backend_info gauge\nstem_decode_backend_info{{backend=\"{b}\"}} 1\n"
+            ));
         }
 
         let mut histo = |name: &str, h: &HistoSnapshot| {
@@ -628,6 +646,24 @@ mod tests {
                 "{name}"
             );
         }
+    }
+
+    #[test]
+    fn decode_backend_label_flows_to_json_and_prometheus() {
+        let m = busy_metrics();
+        let mut snap = MetricsSnapshot::collect(&m, None, Duration::from_secs(1));
+        // a bare metrics block has no serving backend attached
+        assert_eq!(snap.decode_backend, None);
+        let j = Json::parse(&snap.to_json().to_string()).unwrap();
+        assert!(j.path("decode.backend").is_some(), "key present even when null");
+        assert!(!snap.to_prometheus().contains("stem_decode_backend_info"));
+        // the coordinator stamps its backend post-collect
+        snap.decode_backend = Some("engine");
+        let j = Json::parse(&snap.to_json().to_string()).unwrap();
+        assert_eq!(j.path("decode.backend").unwrap().as_str(), Some("engine"));
+        assert!(snap
+            .to_prometheus()
+            .contains("stem_decode_backend_info{backend=\"engine\"} 1"));
     }
 
     /// Satellite: the `degradation_level` / `degradation_transitions`

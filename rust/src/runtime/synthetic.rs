@@ -1,9 +1,12 @@
 //! Artifact-free [`PrefillBackend`]: a hand-built manifest plus cheap
 //! deterministic logits, so serving-stack tests and benches (chaos,
 //! overload) exercise the full coordinator — admission, batching, KV
-//! paging, decode, shedding — without PJRT artifacts on disk. The decode
-//! lane never touches PJRT anyway (it runs on the in-process `TinyLm`);
-//! only prefill needs this stand-in.
+//! paging, decode, shedding — without PJRT artifacts on disk. It serves
+//! both the prefill lane (`prefill_stem` buckets) and the decode lane's
+//! compiled path (`decode_step` buckets executed per step by
+//! [`crate::decode::EngineBackend`]), so `--decode-backend engine` is
+//! CI-testable end-to-end without PJRT; only the `tiny` decode backend
+//! skips the runtime entirely.
 
 use anyhow::{bail, Result};
 
@@ -22,17 +25,21 @@ impl SyntheticEngine {
         SyntheticEngine::with_model(SyntheticEngine::tiny_model(), buckets)
     }
 
-    /// A backend over an explicit model geometry.
+    /// A backend over an explicit model geometry. Every bucket gets both
+    /// a `prefill_stem` module and a `decode_step` module (same ids →
+    /// logits shape), mirroring what `python/compile/aot.py` lowers.
     pub fn with_model(model: ModelConfig, buckets: &[usize]) -> SyntheticEngine {
         let modules = buckets
             .iter()
-            .map(|&n| ModuleInfo {
-                name: format!("prefill_stem_{n}"),
-                kind: "prefill_stem".into(),
-                n_ctx: n,
-                file: String::new(),
-                scalars: vec![],
-                outputs: vec!["logits".into(), "budget_fraction".into()],
+            .flat_map(|&n| {
+                ["prefill_stem", "decode_step"].into_iter().map(move |kind| ModuleInfo {
+                    name: format!("{kind}_{n}"),
+                    kind: kind.into(),
+                    n_ctx: n,
+                    file: String::new(),
+                    scalars: vec![],
+                    outputs: vec!["logits".into(), "budget_fraction".into()],
+                })
             })
             .collect();
         let manifest = Manifest {
@@ -114,5 +121,19 @@ mod tests {
         // wrong bucket and wrong ids length are clean errors
         assert!(eng.prefill("any", "prefill_stem", 512, &ids, &[]).is_err());
         assert!(eng.prefill("any", "prefill_stem", 256, &ids, &[]).is_err());
+    }
+
+    #[test]
+    fn serves_decode_step_modules_alongside_prefill() {
+        let eng = SyntheticEngine::new(&[128, 256]);
+        // decode buckets exist per prefill bucket but never satisfy
+        // prefill bucket selection
+        assert!(eng.manifest().module("decode_step", 128).unwrap().is_decode());
+        assert_eq!(eng.manifest().bucket_for(200), Some(256));
+        let ids = vec![7i32; 128];
+        let out = eng.prefill("any", "decode_step", 128, &ids, &[]).unwrap();
+        let prefill = eng.prefill("any", "prefill_stem", 128, &ids, &[]).unwrap();
+        assert_eq!(out.logits, prefill.logits, "same deterministic ids→logits function");
+        assert_eq!(out.logits.len(), 128 * eng.manifest().model.vocab_size);
     }
 }

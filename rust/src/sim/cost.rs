@@ -21,13 +21,25 @@
 //! `BENCH_sparse_core.json` (per-stage ns for selection/attention →
 //! [`RUST_CORE`]'s `ns_per_pair_dh` / `ns_per_select_candidate` /
 //! `ns_per_metric_flop`), `bench_decode` writes `BENCH_decode.json`
-//! (sparse-vs-dense ns/token → [`DECODE_CORE`]), and `bench_fanout`
-//! writes `BENCH_fanout.json` (ingest vs decode split → sanity for
-//! [`estimate_ingest_ns`]'s `ns_per_proj_mac` share). To re-fit, divide
-//! the measured ns by the op counts the estimator charges for the same
-//! shape and update the constant; the admission limits (`max_work_ns`)
-//! then keep rejecting at the same *wall-clock* backlog after a kernel
-//! speedup, instead of at a stale token count.
+//! (sparse-vs-dense ns/token → [`DECODE_CORE`]; its per-backend
+//! `decode_backend` rows re-fit [`ENGINE_DECODE`] — divide the measured
+//! engine-minus-tiny ns/token gap by the padded-bucket MAC count
+//! [`engine_module_ns`] charges for the same context), and
+//! `bench_fanout` writes `BENCH_fanout.json` (ingest vs decode split →
+//! sanity for [`estimate_ingest_ns`]'s `ns_per_proj_mac` share). To
+//! re-fit, divide the measured ns by the op counts the estimator charges
+//! for the same shape and update the constant; the admission limits
+//! (`max_work_ns`) then keep rejecting at the same *wall-clock* backlog
+//! after a kernel speedup, instead of at a stale token count.
+//!
+//! Decode estimates are **per backend** ([`DecodeCostModel`]): the base
+//! [`DECODE_CORE`] constants price the `tiny` backend's matvec glue,
+//! while the `engine` backend additionally executes one compiled
+//! `decode_step` module per emitted position — a *full padded-bucket
+//! forward*, not a single-token matvec — so the coordinator's admission
+//! must budget through [`estimate_decode_step_ns_for`] /
+//! [`estimate_spec_step_ns_for`] or it would underprice engine steps by
+//! orders of magnitude.
 //!
 //! Token-granular prefix reuse relies on [`estimate_ingest_ns`] being
 //! linear in the prompt length: the coordinator charges it on the
@@ -207,6 +219,8 @@ pub struct RustDecodeCalibration {
 }
 
 /// Current decode-step calibration (re-fit from `BENCH_decode.json`).
+/// These price the `tiny` backend's per-step matvec glue; the `engine`
+/// backend's module-execution surcharge lives in [`ENGINE_DECODE`].
 pub const DECODE_CORE: RustDecodeCalibration = RustDecodeCalibration {
     ns_per_pair_dh: 0.15,
     ns_per_metric_sample_dh: 0.25,
@@ -214,6 +228,54 @@ pub const DECODE_CORE: RustDecodeCalibration = RustDecodeCalibration {
     ns_per_proj_mac: 0.6,
     parallel_efficiency: 0.50,
 };
+
+/// Which decode backend an estimate prices
+/// (`CoordinatorConfig::decode_backend` → admission).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DecodeCostModel {
+    /// In-process reference LM: per-step matvec glue only
+    /// ([`DECODE_CORE`]).
+    #[default]
+    Tiny,
+    /// Compiled per-step decode modules: every emitted position
+    /// additionally executes one padded-bucket ids→logits forward
+    /// ([`engine_module_ns`]).
+    Engine,
+}
+
+/// Throughput constants of one compiled `decode_step` module execution
+/// (the `engine` decode backend). Re-fit from `BENCH_decode.json`'s
+/// engine-backend rows: subtract the tiny-backend ns/token at the same
+/// context, divide by the padded-bucket MAC count charged below.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineDecodeCalibration {
+    /// ns per model MAC of the compiled forward (projections + MLP over
+    /// every padded position)
+    pub ns_per_mac: f64,
+    /// flat per-execution dispatch overhead (argument staging, runtime
+    /// call, logits readback), ns
+    pub dispatch_ns: f64,
+}
+
+/// Current engine decode calibration (re-fit from `BENCH_decode.json`).
+pub const ENGINE_DECODE: EngineDecodeCalibration =
+    EngineDecodeCalibration { ns_per_mac: 0.05, dispatch_ns: 50_000.0 };
+
+/// Estimated ns of ONE compiled `decode_step` module execution at a
+/// cached context of `n_ctx` tokens: the history is padded to its
+/// context bucket (modeled as the next power of two, at least 512 — the
+/// smallest bucket `python/compile/aot.py` lowers) and the whole padded
+/// sequence runs the model's projections + MLP, so the cost is bucket-
+/// shaped, not context-shaped — a 513-token history prices like 1024.
+pub fn engine_module_ns(g: &Geometry, n_ctx: usize) -> f64 {
+    let padded = n_ctx.max(1).next_power_of_two().max(512) as f64;
+    // qkvo projections (4·d_model²) + SwiGLU MLP (3·d_model·d_ff) MACs
+    // per position per layer
+    let per_tok_macs =
+        (4.0 * (g.d_model * g.d_model) as f64 + 3.0 * (g.d_model * g.d_ff) as f64)
+            * g.n_layers as f64;
+    padded * per_tok_macs * ENGINE_DECODE.ns_per_mac + ENGINE_DECODE.dispatch_ns
+}
 
 /// Estimated wall-clock ns for ONE decode step at a cached context of
 /// `n_ctx` tokens. `budget_blocks = None` is the dense path (attend
@@ -305,6 +367,60 @@ pub fn estimate_spec_step_ns(
     draft_ns + full + gamma as f64 * (attn_ns * SPEC_EXTRA_ROW_COST + proj_ns)
 }
 
+/// Per-backend [`estimate_decode_step_ns`]: the `tiny` model is the base
+/// estimate unchanged; the `engine` model adds one compiled module
+/// execution ([`engine_module_ns`]) on top of the same kernel + glue
+/// work (the attention path and K/V projections run in-process for both
+/// backends — only the unembed routes through the module).
+pub fn estimate_decode_step_ns_for(
+    model: DecodeCostModel,
+    g: &Geometry,
+    n_ctx: usize,
+    budget_blocks: Option<f64>,
+    stride: usize,
+    threads: usize,
+) -> f64 {
+    let base = estimate_decode_step_ns(g, n_ctx, budget_blocks, stride, threads);
+    match model {
+        DecodeCostModel::Tiny => base,
+        DecodeCostModel::Engine => base + engine_module_ns(g, n_ctx),
+    }
+}
+
+/// Per-backend [`estimate_spec_step_ns`]: under the `engine` model a
+/// speculative round executes `2γ+1` compiled modules — one per draft
+/// step plus one per verify position (each verify position re-runs its
+/// own history prefix; the batched kernel shares the K/V walk but the
+/// module executions do not batch) — all at the round's deepest context.
+#[allow(clippy::too_many_arguments)]
+pub fn estimate_spec_step_ns_for(
+    model: DecodeCostModel,
+    g: &Geometry,
+    n_ctx: usize,
+    gamma: usize,
+    draft_budget_blocks: Option<f64>,
+    serve_budget_blocks: Option<f64>,
+    stride: usize,
+    threads: usize,
+) -> f64 {
+    let base = estimate_spec_step_ns(
+        g,
+        n_ctx,
+        gamma,
+        draft_budget_blocks,
+        serve_budget_blocks,
+        stride,
+        threads,
+    );
+    match model {
+        DecodeCostModel::Tiny => base,
+        DecodeCostModel::Engine => {
+            let gamma = gamma.max(1);
+            base + (2 * gamma + 1) as f64 * engine_module_ns(g, n_ctx + gamma)
+        }
+    }
+}
+
 /// Estimated wall-clock ns of prompt ingest alone (k/v projections per
 /// token, no attention): the part of a generation that shared-prefix
 /// fan-out pays exactly once per unique prefix, however many
@@ -333,6 +449,25 @@ pub fn estimate_generate_ns(
     let mean_ctx = n_prompt + max_new / 2;
     estimate_ingest_ns(g, n_prompt)
         + max_new as f64 * estimate_decode_step_ns(g, mean_ctx, budget_blocks, stride, threads)
+}
+
+/// Per-backend [`estimate_generate_ns`]: ingest (projection-only, the
+/// same for both backends) plus `max_new` per-backend decode steps at
+/// the mean context.
+#[allow(clippy::too_many_arguments)]
+pub fn estimate_generate_ns_for(
+    model: DecodeCostModel,
+    g: &Geometry,
+    n_prompt: usize,
+    max_new: usize,
+    budget_blocks: Option<f64>,
+    stride: usize,
+    threads: usize,
+) -> f64 {
+    let mean_ctx = n_prompt + max_new / 2;
+    estimate_ingest_ns(g, n_prompt)
+        + max_new as f64
+            * estimate_decode_step_ns_for(model, g, mean_ctx, budget_blocks, stride, threads)
 }
 
 /// Estimated wall-clock ns for one pure-rust reference prefill of length
@@ -481,6 +616,50 @@ mod tests {
         assert!(e64 > e32, "more steps must cost more");
         assert!(long_prompt > e32, "longer prompts must cost more");
         assert!(e32 > 0.0);
+    }
+
+    #[test]
+    fn engine_cost_model_never_underprices_tiny() {
+        // the whole point of the per-backend split: admission under the
+        // engine model charges strictly more per step/round than tiny,
+        // and the tiny model is byte-identical to the un-suffixed fns
+        let g = Geometry { n_layers: 1, n_heads: 8, d_head: 32, d_model: 256, d_ff: 1024, block: 64 };
+        for &n in &[256usize, 2048, 8192] {
+            let tiny = estimate_decode_step_ns_for(DecodeCostModel::Tiny, &g, n, Some(8.0), 8, 4);
+            assert_eq!(tiny, estimate_decode_step_ns(&g, n, Some(8.0), 8, 4));
+            let engine =
+                estimate_decode_step_ns_for(DecodeCostModel::Engine, &g, n, Some(8.0), 8, 4);
+            assert!(
+                engine >= tiny + ENGINE_DECODE.dispatch_ns,
+                "engine step at n={n} must add at least the dispatch overhead"
+            );
+        }
+        let tiny_round =
+            estimate_spec_step_ns_for(DecodeCostModel::Tiny, &g, 2048, 4, Some(8.0), None, 8, 4);
+        assert_eq!(tiny_round, estimate_spec_step_ns(&g, 2048, 4, Some(8.0), None, 8, 4));
+        let engine_round =
+            estimate_spec_step_ns_for(DecodeCostModel::Engine, &g, 2048, 4, Some(8.0), None, 8, 4);
+        // γ drafts + γ+1 verify positions each execute one module
+        assert!(engine_round >= tiny_round + 9.0 * ENGINE_DECODE.dispatch_ns);
+        let tiny_gen =
+            estimate_generate_ns_for(DecodeCostModel::Tiny, &g, 2048, 32, Some(8.0), 8, 4);
+        assert_eq!(tiny_gen, estimate_generate_ns(&g, 2048, 32, Some(8.0), 8, 4));
+        assert!(
+            estimate_generate_ns_for(DecodeCostModel::Engine, &g, 2048, 32, Some(8.0), 8, 4)
+                > tiny_gen
+        );
+    }
+
+    #[test]
+    fn engine_module_cost_is_bucket_shaped() {
+        let g = Geometry { n_layers: 1, n_heads: 8, d_head: 32, d_model: 256, d_ff: 1024, block: 64 };
+        // within one padded bucket the charge is flat...
+        assert_eq!(engine_module_ns(&g, 513), engine_module_ns(&g, 1024));
+        // ...and stepping over a bucket boundary doubles the forward
+        assert!(engine_module_ns(&g, 1025) > 1.9 * engine_module_ns(&g, 1024));
+        // short histories still pay the smallest lowered bucket (512)
+        assert_eq!(engine_module_ns(&g, 1), engine_module_ns(&g, 512));
+        assert!(engine_module_ns(&g, 1) > ENGINE_DECODE.dispatch_ns);
     }
 
     #[test]

@@ -12,8 +12,10 @@ pub mod cost;
 pub mod h20;
 
 pub use cost::{
-    estimate_core_prefill_ns, estimate_decode_step_ns, estimate_generate_ns, estimate_ingest_ns,
-    method_cost, CostBreakdown, Geometry, MethodCost, RustCoreCalibration, RustDecodeCalibration,
-    DECODE_CORE, RUST_CORE,
+    engine_module_ns, estimate_core_prefill_ns, estimate_decode_step_ns,
+    estimate_decode_step_ns_for, estimate_generate_ns, estimate_generate_ns_for,
+    estimate_ingest_ns, estimate_spec_step_ns, estimate_spec_step_ns_for, method_cost,
+    CostBreakdown, DecodeCostModel, EngineDecodeCalibration, Geometry, MethodCost,
+    RustCoreCalibration, RustDecodeCalibration, DECODE_CORE, ENGINE_DECODE, RUST_CORE,
 };
 pub use h20::{project_figure1, H20Model, LLAMA31_8B};

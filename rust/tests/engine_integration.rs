@@ -1,12 +1,15 @@
 //! Integration tests over the compiled artifacts: engine execution,
 //! python↔rust logits agreement, coordinator request conservation,
 //! method/budget behaviour. All tests skip gracefully when artifacts are
-//! missing so `cargo test` works pre-`make artifacts`.
+//! missing so `cargo test` works pre-`make artifacts` — except the
+//! synthetic-backend decode cases at the bottom, which serve
+//! `decode_step` modules in-process and run everywhere.
 
 use std::sync::Arc;
 
 use stem::coordinator::{Coordinator, CoordinatorConfig, Method};
-use stem::runtime::Engine;
+use stem::decode::DecodeBackendKind;
+use stem::runtime::{Engine, PrefillBackend, SyntheticEngine};
 use stem::util::json::Json;
 
 fn engine() -> Option<Arc<Engine>> {
@@ -209,6 +212,51 @@ fn radix_mode_serves_partial_prefix_hits() {
         second.tokens, control.tokens,
         "partial-prefix reuse must not change the decoded stream"
     );
+}
+
+#[test]
+fn synthetic_backend_serves_the_compiled_decode_lane() {
+    // runs without artifacts: the synthetic engine publishes
+    // `decode_step` modules per bucket, so the EngineBackend code path —
+    // bucket selection, history padding, per-step module execution — is
+    // exercised end to end through the coordinator in every CI run
+    use stem::decode::DecodePolicy;
+
+    let engine: Arc<dyn PrefillBackend> = Arc::new(SyntheticEngine::new(&[128, 256]));
+    let coord = Arc::new(Coordinator::with_backend(
+        engine,
+        CoordinatorConfig { decode_backend: DecodeBackendKind::Engine, ..Default::default() },
+    ));
+    assert_eq!(coord.decode_model().name(), "engine");
+    let prompt: Vec<i32> = (0..48).map(|i| 16 + (i % 50) as i32).collect();
+    let resp = coord.generate_blocking(prompt, 8, DecodePolicy::default()).unwrap();
+    assert_eq!(resp.steps, 8, "engine-backed decode must run to completion");
+    assert!(coord.report().contains("decode backend: engine"), "{}", coord.report());
+    let snap = coord.snapshot();
+    assert_eq!(snap.decode_backend, Some("engine"));
+}
+
+#[test]
+fn real_artifacts_decode_through_compiled_step_modules() {
+    // gated twice: on artifacts existing, and on the manifest carrying
+    // decode_step modules (artifact sets predating the decode lowering
+    // log the fallback instead of failing here)
+    let Some(engine) = engine() else { return };
+    if !engine.manifest().modules.iter().any(|m| m.kind == "decode_step") {
+        eprintln!("skipping: artifacts predate the decode_step lowering (re-run `make artifacts`)");
+        return;
+    }
+    use stem::decode::DecodePolicy;
+
+    let coord = Arc::new(Coordinator::new(
+        engine,
+        CoordinatorConfig { decode_backend: DecodeBackendKind::Engine, ..Default::default() },
+    ));
+    assert_eq!(coord.decode_model().name(), "engine");
+    let prompt: Vec<i32> = (0..200).map(|i| 16 + (i % 50) as i32).collect();
+    let resp = coord.generate_blocking(prompt, 6, DecodePolicy::default()).unwrap();
+    assert_eq!(resp.steps, 6);
+    assert!(resp.tokens.iter().all(|&t| t >= 0), "decoded tokens must be valid vocab ids");
 }
 
 #[test]

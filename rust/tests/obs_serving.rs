@@ -11,12 +11,17 @@
 //!   traffic driven (counters, KV gauges, trace stats, sparsity bands
 //!   accounting for every decode step) and serializes to valid JSON and
 //!   well-formed Prometheus text.
+//!
+//! The decode-driving properties run once per decode backend (`tiny`
+//! and `engine` — the latter served by the synthetic engine's
+//! `decode_step` modules), so the telemetry contract holds whichever
+//! backend the coordinator decodes with.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use stem::coordinator::{Coordinator, CoordinatorConfig, Finish, Method};
-use stem::decode::DecodePolicy;
+use stem::decode::{DecodeBackendKind, DecodePolicy};
 use stem::obs::trace::{EventKind, Outcome, PanicSite};
 use stem::runtime::{PrefillBackend, SyntheticEngine};
 use stem::util::fault::{FaultPlan, FaultPoint};
@@ -25,17 +30,25 @@ use stem::util::json::Json;
 /// Terminal-outcome bound (synthetic backend: anything near this hangs).
 const TERMINAL: Duration = Duration::from_secs(60);
 
-fn coordinator(faults: Option<Arc<FaultPlan>>) -> Coordinator {
+const BACKENDS: [DecodeBackendKind; 2] = [DecodeBackendKind::Tiny, DecodeBackendKind::Engine];
+
+fn coordinator(faults: Option<Arc<FaultPlan>>, decode_backend: DecodeBackendKind) -> Coordinator {
     let engine: Arc<dyn PrefillBackend> = Arc::new(SyntheticEngine::new(&[128, 256]));
     Coordinator::with_backend(
         engine,
-        CoordinatorConfig { workers: 2, kv_pages: 256, faults, ..Default::default() },
+        CoordinatorConfig { workers: 2, kv_pages: 256, faults, decode_backend, ..Default::default() },
     )
 }
 
 #[test]
 fn every_generation_span_runs_submit_to_terminal() {
-    let coord = coordinator(None);
+    for kind in BACKENDS {
+        every_generation_span_case(kind);
+    }
+}
+
+fn every_generation_span_case(kind: DecodeBackendKind) {
+    let coord = coordinator(None, kind);
     let prompt: Vec<i32> = (0..24).map(|i| 16 + (i % 64)).collect();
     let tickets = coord
         .submit_generate_tickets(prompt, 6, DecodePolicy::default(), 3, None)
@@ -73,7 +86,7 @@ fn every_generation_span_runs_submit_to_terminal() {
 #[test]
 fn injected_decode_panic_leaves_span_and_replayable_dump() {
     let plan = Arc::new(FaultPlan::new(5).with_rate(FaultPoint::DecodeStep, 1.0));
-    let coord = coordinator(Some(Arc::clone(&plan)));
+    let coord = coordinator(Some(Arc::clone(&plan)), DecodeBackendKind::default());
     let mut ts = coord
         .submit_generate_tickets(vec![1, 20, 21, 22], 4, DecodePolicy::default(), 1, None)
         .expect("submit");
@@ -107,7 +120,13 @@ fn injected_decode_panic_leaves_span_and_replayable_dump() {
 
 #[test]
 fn snapshot_json_and_prometheus_cohere_with_driven_traffic() {
-    let coord = coordinator(None);
+    for kind in BACKENDS {
+        snapshot_coherence_case(kind);
+    }
+}
+
+fn snapshot_coherence_case(kind: DecodeBackendKind) {
+    let coord = coordinator(None, kind);
 
     // one prefill through the batcher + worker pool
     let ids: Vec<i32> = (0..64).map(|i| 16 + (i % 64)).collect();
@@ -130,6 +149,11 @@ fn snapshot_json_and_prometheus_cohere_with_driven_traffic() {
     }
 
     let snap = coord.snapshot();
+    assert_eq!(
+        snap.decode_backend,
+        Some(kind.label()),
+        "snapshot must carry the decode backend it was driven with"
+    );
     assert_eq!(snap.submitted, 1);
     assert_eq!(snap.completed, 1);
     assert_eq!(snap.generates_submitted, 8);
@@ -150,6 +174,7 @@ fn snapshot_json_and_prometheus_cohere_with_driven_traffic() {
         j.path("decode.steps").and_then(Json::as_i64),
         Some(snap.decode_steps as i64)
     );
+    assert_eq!(j.path("decode.backend").and_then(Json::as_str), Some(kind.label()));
     assert!(j.path("kv.occupancy").is_some());
     assert!(j.path("trace.recorded").and_then(Json::as_i64).unwrap_or(0) > 0);
 
@@ -160,6 +185,10 @@ fn snapshot_json_and_prometheus_cohere_with_driven_traffic() {
     assert!(text.contains("# TYPE stem_decode_step_us histogram"));
     assert!(text.contains("stem_kv_pages_total 256"));
     assert!(text.contains("stem_trace_events_recorded"));
+    assert!(
+        text.contains(&format!("stem_decode_backend_info{{backend=\"{}\"}} 1", kind.label())),
+        "{text}"
+    );
     // short-context traffic lands in the lowest band
     assert!(text.contains("stem_sparsity_steps_total{band=\"lt1k\"}"), "{text}");
     let mut prev = 0u64;

@@ -15,14 +15,23 @@
 //! (no sibling page ever freed, freed-page log always drained — pool
 //! invariants + zero residency after teardown).
 //!
+//! Every decode property runs once per decode backend — the in-process
+//! `TinyLm` projection core and the compiled-module `EngineBackend`
+//! served by the synthetic engine — and the equivalence contract is
+//! byte-exact *per backend* (the two backends emit different streams
+//! from each other; each must agree with its own sequential twin).
+//!
 //! Artifact-free; CI runs it under `cargo test --release` in a
 //! dedicated `spec-equivalence` job.
 
 use std::sync::Arc;
 
 use stem::coordinator::kv_cache::KvConfig;
-use stem::decode::{DecodePolicy, DecodeSession, SharedKv, TinyLm};
+use stem::decode::{
+    DecodeBackend, DecodePolicy, DecodeSession, EngineBackend, SharedKv, TinyLm,
+};
 use stem::model::vocab;
+use stem::runtime::SyntheticEngine;
 use stem::sparse::{
     decode_block_scores, dense_verify_attention_reference, select_decode,
     sparse_decode_attention, sparse_verify_attention, KvPrefix, Selection, SelectionBuilder,
@@ -39,8 +48,30 @@ fn pool(pages: usize, page_tokens: usize) -> Arc<SharedKv> {
     SharedKv::new(KvConfig { total_pages: pages, page_tokens }, HK, DH)
 }
 
-fn model() -> Arc<TinyLm> {
-    Arc::new(TinyLm::new(0xBEEF, H, HK, DH, vocab::VOCAB_SIZE))
+/// The decode backends every property must hold for, independently.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Backend {
+    Tiny,
+    Engine,
+}
+const BACKENDS: [Backend; 2] = [Backend::Tiny, Backend::Engine];
+
+fn model_for(b: Backend) -> Arc<dyn DecodeBackend> {
+    match b {
+        Backend::Tiny => Arc::new(TinyLm::new(0xBEEF, H, HK, DH, vocab::VOCAB_SIZE)),
+        Backend::Engine => {
+            // compiled per-step decode over the synthetic engine at the
+            // suite geometry; one bucket comfortably covers every
+            // prompt + stream these properties generate
+            let mut m = SyntheticEngine::tiny_model();
+            m.n_heads = H;
+            m.n_kv_heads = HK;
+            m.d_head = DH;
+            m.d_model = H * DH;
+            let engine = Arc::new(SyntheticEngine::with_model(m, &[512]));
+            Arc::new(EngineBackend::new(engine, "base").expect("synthetic decode modules"))
+        }
+    }
 }
 
 fn prompt_from(seed: u64, len: usize) -> Vec<i32> {
@@ -91,13 +122,14 @@ struct StreamFingerprint {
 }
 
 fn run_once(
+    backend: Backend,
     policy: DecodePolicy,
     prompt: &[i32],
     max_new: usize,
     page_tokens: usize,
 ) -> Result<StreamFingerprint, String> {
     let kv = pool(512, page_tokens);
-    let mut s = DecodeSession::new(Arc::clone(&kv), model(), policy, 1)
+    let mut s = DecodeSession::new(Arc::clone(&kv), model_for(backend), policy, 1)
         .map_err(|e| format!("session: {e}"))?;
     s.prefill(prompt).map_err(|e| format!("prefill: {e}"))?;
     let st = s.generate(max_new, None, |_| true).map_err(|e| format!("generate: {e}"))?;
@@ -137,12 +169,14 @@ fn prop_spec_stream_equals_sequential_exactly() {
         |&(plen, gamma, knob, max_new, small_pages)| {
             let pt = if small_pages { 16 } else { 32 };
             let prompt = prompt_from(plen as u64, plen);
-            let seq = run_once(policy_for(knob, 0), &prompt, max_new, pt)?;
-            let spec = run_once(policy_for(knob, gamma), &prompt, max_new, pt)?;
-            if seq != spec {
-                return Err(format!(
-                    "spec(γ={gamma}) diverged from sequential\n  seq:  {seq:?}\n  spec: {spec:?}"
-                ));
+            for backend in BACKENDS {
+                let seq = run_once(backend, policy_for(knob, 0), &prompt, max_new, pt)?;
+                let spec = run_once(backend, policy_for(knob, gamma), &prompt, max_new, pt)?;
+                if seq != spec {
+                    return Err(format!(
+                        "[{backend:?}] spec(γ={gamma}) diverged from sequential\n  seq:  {seq:?}\n  spec: {spec:?}"
+                    ));
+                }
             }
             Ok(())
         },
@@ -163,88 +197,109 @@ fn prop_spec_equals_sequential_across_fork_siblings() {
             )
         },
         |&(plen, gamma, knob, fanout)| {
-            let (pt, max_new) = (16usize, 12usize);
-            let prompt = prompt_from(plen as u64 ^ 0x51b1, plen);
-            let kv = pool(1024, pt);
-            let m = model();
-            let mut root =
-                DecodeSession::new(Arc::clone(&kv), Arc::clone(&m), policy_for(knob, 0), 1)
-                    .map_err(|e| format!("root: {e}"))?;
-            root.prefill(&prompt).map_err(|e| format!("root prefill: {e}"))?;
-            // alternate speculative / sequential siblings over one shared
-            // refcounted prefix; all stay alive so CoW isolation is live
-            let mut branches = Vec::with_capacity(fanout);
-            let mut streams = Vec::with_capacity(fanout);
-            for i in 0..fanout {
-                let mut b = root.fork(10 + i as u64).map_err(|e| format!("fork {i}: {e}"))?;
-                b.set_policy(policy_for(knob, if i % 2 == 0 { gamma } else { 0 }));
-                let steer = vocab::WORD0 + i as i32;
-                b.prefill(&[steer]).map_err(|e| format!("steer {i}: {e}"))?;
-                let st =
-                    b.generate(max_new, None, |_| true).map_err(|e| format!("gen {i}: {e}"))?;
-                streams.push(st.tokens);
-                branches.push(b);
-            }
-            kv.pool().map_err(|e| format!("pool: {e}"))?.check_invariants()?;
-            // every sibling — speculative or not — must match a fresh
-            // independent sequential session over (prompt + its steer)
-            for (i, stream) in streams.iter().enumerate() {
-                let mut full = prompt.clone();
-                full.push(vocab::WORD0 + i as i32);
-                let want = run_once(policy_for(knob, 0), &full, max_new, pt)?;
-                if stream != &want.tokens {
-                    return Err(format!(
-                        "sibling {i} (spec={}) diverged from its independent twin:\n  got:  {stream:?}\n  want: {:?}",
-                        i % 2 == 0,
-                        want.tokens
-                    ));
-                }
-            }
-            // speculative siblings must never leak into the shared root
-            let root_stream = root
-                .generate(6, None, |_| true)
-                .map_err(|e| format!("root gen: {e}"))?
-                .tokens;
-            let control = run_once(policy_for(knob, 0), &prompt, 6, pt)?;
-            if root_stream != control.tokens {
-                return Err("speculative siblings leaked into the root".into());
-            }
-            // rollback invariant: tearing everything down frees every
-            // page and slab (drafted overshoot included)
-            drop(branches);
-            drop(root);
-            if kv.pool().map_err(|e| format!("pool: {e}"))?.used_pages() != 0 {
-                return Err("teardown leaked pool pages".into());
-            }
-            if kv.pages_resident() != 0 {
-                return Err("teardown leaked slab payloads".into());
+            for backend in BACKENDS {
+                fork_siblings_case(backend, plen, gamma, knob, fanout)?;
             }
             Ok(())
         },
     );
 }
 
+fn fork_siblings_case(
+    backend: Backend,
+    plen: usize,
+    gamma: usize,
+    knob: usize,
+    fanout: usize,
+) -> Result<(), String> {
+    let (pt, max_new) = (16usize, 12usize);
+    let prompt = prompt_from(plen as u64 ^ 0x51b1, plen);
+    let kv = pool(1024, pt);
+    let m = model_for(backend);
+    let mut root = DecodeSession::new(Arc::clone(&kv), Arc::clone(&m), policy_for(knob, 0), 1)
+        .map_err(|e| format!("root: {e}"))?;
+    root.prefill(&prompt).map_err(|e| format!("root prefill: {e}"))?;
+    // alternate speculative / sequential siblings over one shared
+    // refcounted prefix; all stay alive so CoW isolation is live
+    let mut branches = Vec::with_capacity(fanout);
+    let mut streams = Vec::with_capacity(fanout);
+    for i in 0..fanout {
+        let mut b = root.fork(10 + i as u64).map_err(|e| format!("fork {i}: {e}"))?;
+        b.set_policy(policy_for(knob, if i % 2 == 0 { gamma } else { 0 }));
+        let steer = vocab::WORD0 + i as i32;
+        b.prefill(&[steer]).map_err(|e| format!("steer {i}: {e}"))?;
+        let st = b.generate(max_new, None, |_| true).map_err(|e| format!("gen {i}: {e}"))?;
+        streams.push(st.tokens);
+        branches.push(b);
+    }
+    kv.pool().map_err(|e| format!("pool: {e}"))?.check_invariants()?;
+    // every sibling — speculative or not — must match a fresh
+    // independent sequential session over (prompt + its steer)
+    for (i, stream) in streams.iter().enumerate() {
+        let mut full = prompt.clone();
+        full.push(vocab::WORD0 + i as i32);
+        let want = run_once(backend, policy_for(knob, 0), &full, max_new, pt)?;
+        if stream != &want.tokens {
+            return Err(format!(
+                "[{backend:?}] sibling {i} (spec={}) diverged from its independent twin:\n  got:  {stream:?}\n  want: {:?}",
+                i % 2 == 0,
+                want.tokens
+            ));
+        }
+    }
+    // speculative siblings must never leak into the shared root
+    let root_stream =
+        root.generate(6, None, |_| true).map_err(|e| format!("root gen: {e}"))?.tokens;
+    let control = run_once(backend, policy_for(knob, 0), &prompt, 6, pt)?;
+    if root_stream != control.tokens {
+        return Err(format!("[{backend:?}] speculative siblings leaked into the root"));
+    }
+    // rollback invariant: tearing everything down frees every
+    // page and slab (drafted overshoot included)
+    drop(branches);
+    drop(root);
+    if kv.pool().map_err(|e| format!("pool: {e}"))?.used_pages() != 0 {
+        return Err("teardown leaked pool pages".into());
+    }
+    if kv.pages_resident() != 0 {
+        return Err("teardown leaked slab payloads".into());
+    }
+    Ok(())
+}
+
 #[test]
 fn spec_stop_token_trims_exactly_like_sequential() {
     // pick a token the sequential stream actually emits mid-way and use
     // it as the stop token in both modes: streams and session state must
-    // still agree exactly
+    // still agree exactly — independently for each decode backend (each
+    // backend emits its own stream, so each picks its own stop token)
     let prompt = prompt_from(99, 60);
-    let seq_full = run_once(policy_for(1, 0), &prompt, 16, 16).unwrap();
-    assert!(seq_full.tokens.len() >= 6, "need a few tokens to pick a stop from");
-    let stop = seq_full.tokens[seq_full.tokens.len() / 2];
-    let run_stop = |gamma: usize| {
-        let kv = pool(512, 16);
-        let mut s =
-            DecodeSession::new(Arc::clone(&kv), model(), policy_for(1, gamma), 1).unwrap();
-        s.prefill(&prompt).unwrap();
-        let st = s.generate(16, Some(stop), |_| true).unwrap();
-        (st.tokens, s.n_ctx(), s.last_token(), s.steps())
-    };
-    let want = run_stop(0);
-    assert_eq!(want.0.last(), Some(&stop), "sequential run must stop on the stop token");
-    for gamma in 1..=6 {
-        assert_eq!(run_stop(gamma), want, "gamma={gamma}: stop-token trim diverged");
+    for backend in BACKENDS {
+        let seq_full = run_once(backend, policy_for(1, 0), &prompt, 16, 16).unwrap();
+        assert!(seq_full.tokens.len() >= 6, "need a few tokens to pick a stop from");
+        let stop = seq_full.tokens[seq_full.tokens.len() / 2];
+        let run_stop = |gamma: usize| {
+            let kv = pool(512, 16);
+            let mut s =
+                DecodeSession::new(Arc::clone(&kv), model_for(backend), policy_for(1, gamma), 1)
+                    .unwrap();
+            s.prefill(&prompt).unwrap();
+            let st = s.generate(16, Some(stop), |_| true).unwrap();
+            (st.tokens, s.n_ctx(), s.last_token(), s.steps())
+        };
+        let want = run_stop(0);
+        assert_eq!(
+            want.0.last(),
+            Some(&stop),
+            "[{backend:?}] sequential run must stop on the stop token"
+        );
+        for gamma in 1..=6 {
+            assert_eq!(
+                run_stop(gamma),
+                want,
+                "[{backend:?}] gamma={gamma}: stop-token trim diverged"
+            );
+        }
     }
 }
 
