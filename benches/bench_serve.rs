@@ -20,6 +20,20 @@
 //! >= 0.95 — observability may cost at most 5%. The traced run's final
 //! snapshot is written to `metrics.json` for the CI schema check.
 //!
+//! The `latency` section is the chunked-ingest load harness:
+//!
+//!   * **head-of-line gate** — a single-worker coordinator ingests one
+//!     64K-token prompt while a burst of short generates queues behind
+//!     it, once monolithic (`chunk_tokens = 0`) and once chunked. Short
+//!     p99 latency must improve >= 3x chunked vs monolithic while
+//!     admitted goodput stays within 10% (chunking must not tax
+//!     throughput for its latency win);
+//!   * **synthesized traffic** — an open-loop `workload::synthesize`
+//!     trace (bursty arrivals, heavy-tailed lognormal prompt/output
+//!     lengths, fan-out families, tenant deadlines) driven through the
+//!     chunked coordinator, reporting TTFT/TPOT p50/p99 from the
+//!     coordinator's histograms plus goodput and shed counts.
+//!
 //!   cargo bench --bench bench_serve              # full sizes
 //!   cargo bench --bench bench_serve -- --quick   # small samples
 
@@ -30,9 +44,11 @@ use std::time::{Duration, Instant};
 use stem::coordinator::admission::AdmissionConfig;
 use stem::coordinator::{Coordinator, CoordinatorConfig, Finish};
 use stem::decode::DecodePolicy;
+use stem::obs::MetricsSnapshot;
 use stem::runtime::{PrefillBackend, SyntheticEngine};
 use stem::util::cli::Args;
 use stem::util::json::Json;
+use stem::workload::{synthesize, ArrivalModel, LengthModel, TenantClass, TrafficConfig};
 
 /// Terminal-outcome bound: anything that takes this long under a
 /// synthetic backend is a hang, not load.
@@ -152,6 +168,170 @@ fn run_telemetry_arm(trace_events: usize, n: usize, max_new: usize) -> (Phase, O
     (phase.expect("scoped phase ran"), snap)
 }
 
+/// Sorted-latency percentile (nearest-rank on the client-observed walls).
+fn pctl(sorted: &[Duration], p: f64) -> Duration {
+    sorted[((sorted.len() - 1) as f64 * p).round() as usize]
+}
+
+/// One head-of-line arm: a single-worker coordinator, one huge prompt
+/// ingest submitted first, then a burst of short generates that queue
+/// behind it. Returns the shorts' client-observed wall latencies
+/// (sorted) and the arm's admitted goodput in tokens/sec. With
+/// `chunk_tokens = 0` the ingest is monolithic and the shorts eat the
+/// full head-of-line stall; chunked, they cut in at chunk boundaries.
+fn hol_arm(chunk_tokens: usize, long_tokens: usize, shorts: usize) -> (Vec<Duration>, f64) {
+    let engine: Arc<dyn PrefillBackend> = Arc::new(SyntheticEngine::new(&[128, 256]));
+    let coord = Coordinator::with_backend(
+        engine,
+        CoordinatorConfig {
+            workers: 1,
+            kv_pages: 2048,
+            chunk_tokens,
+            admission: AdmissionConfig {
+                max_tokens: 1 << 22,
+                max_requests: 256,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let t0 = Instant::now();
+    let long_prompt: Vec<i32> = (0..long_tokens).map(|j| 16 + (j % 64) as i32).collect();
+    let long_tickets = coord
+        .submit_generate_tickets(long_prompt, 8, DecodePolicy::default(), 1, None)
+        .expect("long ingest must admit");
+    let mut lats = Vec::new();
+    let mut tokens = 0usize;
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for i in 0..shorts {
+            let prompt: Vec<i32> = (0..16).map(|j| 16 + ((i * 11 + j) % 64) as i32).collect();
+            let submitted = Instant::now();
+            let ts = coord
+                .submit_generate_tickets(prompt, 4, DecodePolicy::default(), 1, None)
+                .expect("short generate must admit");
+            for mut t in ts {
+                handles.push(s.spawn(move || {
+                    let resp = t.recv_timeout(TERMINAL).expect("short must reach terminal");
+                    (submitted.elapsed(), resp.tokens.len())
+                }));
+            }
+        }
+        for h in handles {
+            let (lat, n) = h.join().expect("latency thread");
+            lats.push(lat);
+            tokens += n;
+        }
+    });
+    for mut t in long_tickets {
+        let resp = t.recv_timeout(TERMINAL).expect("long ingest must complete");
+        tokens += resp.tokens.len();
+    }
+    let wall = t0.elapsed();
+    lats.sort();
+    (lats, tokens as f64 / wall.as_secs_f64().max(1e-9))
+}
+
+struct LoadResult {
+    completed: usize,
+    shed: usize,
+    tokens_out: usize,
+    wall: Duration,
+    snap: MetricsSnapshot,
+}
+
+/// Drive a synthesized open-loop trace (bursty arrivals, heavy-tailed
+/// lognormal lengths, fan-out families, tenant deadlines) through a
+/// chunked-ingest coordinator. Branch outcomes are counted client-side;
+/// TTFT/TPOT come from the coordinator's own histograms afterwards.
+fn run_load_harness(quick: bool) -> LoadResult {
+    let cfg = TrafficConfig {
+        seed: 42,
+        n_requests: if quick { 24 } else { 64 },
+        arrivals: ArrivalModel::Bursty { rps: if quick { 48.0 } else { 24.0 }, burst: 4.0 },
+        prompt_len: LengthModel {
+            log_mean: 5.0,
+            log_sigma: 1.0,
+            min: 16,
+            cap: if quick { 512 } else { 1024 },
+        },
+        output_len: LengthModel {
+            log_mean: 2.3,
+            log_sigma: 0.7,
+            min: 2,
+            cap: if quick { 12 } else { 24 },
+        },
+        fanout_weights: vec![(1, 0.85), (2, 0.10), (4, 0.05)],
+        tenants: vec![
+            TenantClass { weight: 0.75, deadline_ms: None },
+            TenantClass { weight: 0.25, deadline_ms: Some(if quick { 250 } else { 400 }) },
+        ],
+    };
+    let trace = synthesize(&cfg);
+    let engine: Arc<dyn PrefillBackend> = Arc::new(SyntheticEngine::new(&[128, 256]));
+    let coord = Coordinator::with_backend(
+        engine,
+        CoordinatorConfig {
+            workers: 2,
+            kv_pages: 2048,
+            chunk_tokens: 256,
+            admission: AdmissionConfig {
+                max_tokens: 48 * 1024,
+                max_requests: 64,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let start = Instant::now();
+    let mut tickets = Vec::new();
+    let mut shed = 0usize;
+    for (i, r) in trace.iter().enumerate() {
+        let now = start.elapsed();
+        if r.at > now {
+            std::thread::sleep(r.at - now);
+        }
+        let prompt: Vec<i32> =
+            (0..r.prompt_tokens).map(|j| 16 + ((i * 13 + j) % 64) as i32).collect();
+        let deadline = r.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+        let sub = coord.submit_generate_tickets(
+            prompt,
+            r.max_new,
+            DecodePolicy::default(),
+            r.fanout,
+            deadline,
+        );
+        match sub {
+            Ok(ts) => tickets.extend(ts),
+            // admission shed at submit: typed, retryable, counts against
+            // goodput but is exactly what overload should produce
+            Err(_) => shed += 1,
+        }
+    }
+    let mut completed = 0usize;
+    let mut tokens_out = 0usize;
+    for mut t in tickets {
+        match t.recv_timeout(TERMINAL) {
+            Ok(resp) => match resp.finish {
+                Finish::Complete => {
+                    completed += 1;
+                    tokens_out += resp.tokens.len();
+                }
+                // deadline/cancel partials are not goodput
+                Finish::DeadlineExceeded | Finish::Cancelled => shed += 1,
+            },
+            Err(e) if e.to_string().contains("timed out") => {
+                panic!("load-harness request hung past {TERMINAL:?}")
+            }
+            // typed failures (e.g. deadline expired before start)
+            Err(_) => shed += 1,
+        }
+    }
+    let wall = start.elapsed();
+    let snap = coord.snapshot();
+    LoadResult { completed, shed, tokens_out, wall, snap }
+}
+
 fn main() {
     let args = Args::from_env(false);
     let quick = args.flag("quick");
@@ -227,6 +407,55 @@ fn main() {
         untraced.admitted_tokens_per_sec(),
     );
     assert!(tel_ratio >= 0.95, "tracing overhead above 5%: ratio {tel_ratio:.3} < 0.95");
+
+    // chunked-ingest head-of-line gate: one concurrent 64K-token ingest,
+    // short decode latency p99 must improve >= 3x chunked vs monolithic
+    // while admitted goodput stays within 10%
+    let long_tokens = if quick { 32 * 1024 } else { 64 * 1024 };
+    let hol_chunk = if quick { 1024 } else { 2048 };
+    let hol_shorts = 12;
+    let (mono_lats, mono_goodput) = hol_arm(0, long_tokens, hol_shorts);
+    let (chunk_lats, chunk_goodput) = hol_arm(hol_chunk, long_tokens, hol_shorts);
+    let mono_p99_us = pctl(&mono_lats, 0.99).as_secs_f64() * 1e6;
+    let chunk_p99_us = (pctl(&chunk_lats, 0.99).as_secs_f64() * 1e6).max(1.0);
+    let hol_ratio = mono_p99_us / chunk_p99_us;
+    let hol_goodput_ratio = chunk_goodput / mono_goodput.max(1e-9);
+    println!(
+        "hol({long_tokens}-token ingest, chunk {hol_chunk}): short p99 mono {:.1}ms vs chunked \
+         {:.1}ms | ratio {hol_ratio:.1} (gate >= 3) | goodput ratio {hol_goodput_ratio:.3} \
+         (gate >= 0.9)",
+        mono_p99_us / 1e3,
+        chunk_p99_us / 1e3,
+    );
+    assert!(
+        hol_ratio >= 3.0,
+        "chunked ingest must cut head-of-line p99 >= 3x: mono {mono_p99_us:.0}us vs chunked \
+         {chunk_p99_us:.0}us (ratio {hol_ratio:.2})"
+    );
+    assert!(
+        hol_goodput_ratio >= 0.9,
+        "chunking taxed goodput more than 10%: ratio {hol_goodput_ratio:.3} < 0.9"
+    );
+
+    // synthesized-traffic load harness: TTFT/TPOT histograms + goodput
+    let load = run_load_harness(quick);
+    let ttft = &load.snap.gen_ttft;
+    let tpot = &load.snap.tpot;
+    let goodput = load.tokens_out as f64 / load.wall.as_secs_f64().max(1e-9);
+    println!(
+        "load harness: {} branches completed, {} shed | ttft p50 {}us p99 {}us | tpot p50 {}us \
+         p99 {}us | goodput {goodput:.0} tok/s",
+        load.completed,
+        load.shed,
+        ttft.p50_us,
+        ttft.p99_us,
+        tpot.p50_us,
+        tpot.p99_us,
+    );
+    assert!(load.completed > 0, "load harness completed nothing");
+    assert!(ttft.count > 0 && tpot.count > 0, "latency histograms must be populated");
+    assert!(ttft.p50_us <= ttft.p99_us && tpot.p50_us <= tpot.p99_us, "p50/p99 monotonicity");
+
     if let Some(j) = &metrics_json {
         let path = "metrics.json";
         match std::fs::write(path, format!("{j}\n")) {
@@ -259,6 +488,43 @@ fn main() {
                 ("traced", phase_json(&traced)),
                 ("untraced", phase_json(&untraced)),
                 ("admitted_throughput_ratio", Json::Num(tel_ratio)),
+            ]),
+        ),
+        (
+            "latency",
+            Json::obj(vec![
+                (
+                    "ttft_us",
+                    Json::obj(vec![
+                        ("p50", Json::Num(ttft.p50_us as f64)),
+                        ("p99", Json::Num(ttft.p99_us as f64)),
+                        ("count", Json::Num(ttft.count as f64)),
+                    ]),
+                ),
+                (
+                    "tpot_us",
+                    Json::obj(vec![
+                        ("p50", Json::Num(tpot.p50_us as f64)),
+                        ("p99", Json::Num(tpot.p99_us as f64)),
+                        ("count", Json::Num(tpot.count as f64)),
+                    ]),
+                ),
+                ("goodput_tok_per_s", Json::Num(goodput)),
+                ("completed", Json::Num(load.completed as f64)),
+                ("shed", Json::Num(load.shed as f64)),
+                (
+                    "hol_gate",
+                    Json::obj(vec![
+                        ("long_tokens", Json::Num(long_tokens as f64)),
+                        ("chunk_tokens", Json::Num(hol_chunk as f64)),
+                        ("monolithic_p99_us", Json::Num(mono_p99_us)),
+                        ("chunked_p99_us", Json::Num(chunk_p99_us)),
+                        ("ratio", Json::Num(hol_ratio)),
+                        ("monolithic_goodput", Json::Num(mono_goodput)),
+                        ("chunked_goodput", Json::Num(chunk_goodput)),
+                        ("goodput_ratio", Json::Num(hol_goodput_ratio)),
+                    ]),
+                ),
             ]),
         ),
     ]);

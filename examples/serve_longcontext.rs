@@ -18,7 +18,6 @@ use stem::coordinator::{Coordinator, CoordinatorConfig, Method};
 use stem::eval::{score_sample, Evaluator};
 use stem::runtime::Engine;
 use stem::util::cli::Args;
-use stem::util::rng::Rng;
 use stem::workload::{load_eval_set, poisson_trace, EvalSample};
 
 struct RunStats {
@@ -41,8 +40,7 @@ fn run_trace(
     seed: u64,
 ) -> Result<RunStats> {
     let man = coord.manifest().clone();
-    let mut rng = Rng::new(seed);
-    let trace = poisson_trace(&mut rng, n_requests, rps, pool.len());
+    let trace = poisson_trace(seed, n_requests, rps, pool.len());
     let start = Instant::now();
     let mut rxs = vec![];
     for item in &trace {

@@ -15,6 +15,17 @@
 //! Decode uses a much shorter timeout — a step is one token of someone's
 //! stream. Pure logic, no threads: the server drives it, the tests poke
 //! it directly.
+//!
+//! Chunked prompt ingest adds a third lane: a long prompt is split into
+//! fixed-token chunks and each chunk becomes one [`IngestStep`] the
+//! dispatcher re-enqueues after the previous chunk lands, so a 128K-token
+//! ingest no longer occupies a worker for a whole prefill turn while
+//! decode stalls. Ingest competes with decode under an SLO-aware pick
+//! rule: oldest-deadline-first (a step without a deadline sorts after
+//! every step with one), with a never-starve bound on consecutive
+//! same-lane pops — and the hard invariant that the batcher never emits
+//! two consecutive ingest rounds while a ready decode head has waited
+//! past the decode lane's `max_wait`.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
@@ -102,6 +113,42 @@ impl Default for DecodeLaneConfig {
     }
 }
 
+/// One pending prompt-ingest chunk of a resumable chunked prefill. The
+/// holder key is enough — the dispatcher owns the session and the
+/// remaining-suffix cursor; the batcher only schedules *when* the next
+/// chunk runs relative to decode traffic.
+#[derive(Debug, Clone, Copy)]
+pub struct IngestStep {
+    /// Prefix-holder key whose ingest this chunk advances.
+    pub key: u64,
+    /// Tokens the chunk will ingest (for queued-token accounting).
+    pub tokens: usize,
+    /// Earliest deadline among the branches waiting on this ingest —
+    /// the SLO the pick rule orders by. `None` sorts after every
+    /// deadline-carrying step.
+    pub deadline: Option<Instant>,
+    /// When the chunk entered the ingest lane.
+    pub enqueued: Instant,
+}
+
+/// Policy of the ingest lane. Chunks are coarse units of work (whole
+/// `extend_prompt` calls), so there is no size-or-timeout batching —
+/// a queued chunk is always ready; the knob is the fairness bound.
+#[derive(Debug, Clone)]
+pub struct IngestLaneConfig {
+    /// Never-starve bound: maximum consecutive pops from one lane of the
+    /// decode/ingest pair while the other lane has ready work. Tightened
+    /// to 1 for ingest whenever a ready decode head has already waited
+    /// past the decode lane's `max_wait`.
+    pub starve_bound: usize,
+}
+
+impl Default for IngestLaneConfig {
+    fn default() -> Self {
+        IngestLaneConfig { starve_bound: 2 }
+    }
+}
+
 /// Either kind of ready work ([`Batcher::pop_ready_any`]).
 #[derive(Debug)]
 pub enum AnyBatch {
@@ -109,6 +156,8 @@ pub enum AnyBatch {
     Prefill(Batch),
     /// A decode-step batch from the continuous-batching lane.
     Decode(DecodeBatch),
+    /// One prompt-ingest chunk from the chunked-prefill lane.
+    Ingest(IngestStep),
 }
 
 /// The two-lane dynamic batcher (see module docs). Pure logic, no
@@ -116,11 +165,17 @@ pub enum AnyBatch {
 pub struct Batcher {
     cfg: BatcherConfig,
     decode_cfg: DecodeLaneConfig,
+    ingest_cfg: IngestLaneConfig,
     queues: BTreeMap<BatchKey, VecDeque<PrefillRequest>>,
     decode_q: VecDeque<DecodeStep>,
+    ingest_q: Vec<IngestStep>,
     pending: usize,
     /// Lane-fairness toggle: flips after every emitted batch.
     prefer_decode: bool,
+    /// Consecutive ingest pops while decode had ready work (never-starve).
+    consecutive_ingest: usize,
+    /// Consecutive decode pops while ingest had queued work (never-starve).
+    consecutive_decode: usize,
 }
 
 impl Batcher {
@@ -134,11 +189,21 @@ impl Batcher {
         Batcher {
             cfg,
             decode_cfg,
+            ingest_cfg: IngestLaneConfig::default(),
             queues: BTreeMap::new(),
             decode_q: VecDeque::new(),
+            ingest_q: Vec::new(),
             pending: 0,
             prefer_decode: true,
+            consecutive_ingest: 0,
+            consecutive_decode: 0,
         }
+    }
+
+    /// Override the ingest-lane fairness policy (builder style).
+    pub fn with_ingest_cfg(mut self, ingest_cfg: IngestLaneConfig) -> Self {
+        self.ingest_cfg = ingest_cfg;
+        self
     }
 
     /// Pending work across both lanes.
@@ -180,6 +245,30 @@ impl Batcher {
     pub fn push_decode_many(&mut self, steps: Vec<DecodeStep>) {
         self.pending += steps.len();
         self.decode_q.extend(steps);
+    }
+
+    /// Enqueue one prompt-ingest chunk. A holder has at most one chunk
+    /// queued at a time: the dispatcher pushes the next chunk only after
+    /// the previous one lands.
+    pub fn push_ingest(&mut self, step: IngestStep) {
+        self.ingest_q.push(step);
+        self.pending += 1;
+    }
+
+    /// Queued ingest chunks.
+    pub fn ingest_pending(&self) -> usize {
+        self.ingest_q.len()
+    }
+
+    /// Drop the queued ingest chunk for `key`, if any (holder abandoned
+    /// mid-ingest: every waiting branch cancelled or past deadline).
+    /// Returns whether a chunk was removed.
+    pub fn remove_ingest(&mut self, key: u64) -> bool {
+        let before = self.ingest_q.len();
+        self.ingest_q.retain(|s| s.key != key);
+        let removed = before - self.ingest_q.len();
+        self.pending -= removed;
+        removed > 0
     }
 
     /// Next ready batch under the size-or-timeout policy; `now` is passed
@@ -230,15 +319,105 @@ impl Batcher {
         Some(DecodeBatch { steps, formed_at: now })
     }
 
-    /// Next ready batch from either lane, alternating lanes after every
-    /// emission so neither phase starves the other under sustained load.
+    /// Whether the decode lane would emit a batch right now (size or
+    /// timeout), without popping.
+    fn decode_ready(&self, now: Instant) -> bool {
+        self.decode_q.len() >= self.decode_cfg.max_batch
+            || self
+                .decode_q
+                .front()
+                .is_some_and(|s| now.duration_since(s.enqueued) >= self.decode_cfg.max_wait)
+    }
+
+    /// Index of the ingest chunk the SLO rule picks next:
+    /// oldest-deadline-first, deadline-free steps after every
+    /// deadline-carrying one, earliest-enqueued as the tie break.
+    fn ingest_pick(&self) -> Option<usize> {
+        self.ingest_q
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, s)| (s.deadline.is_none(), s.deadline, s.enqueued))
+            .map(|(i, _)| i)
+    }
+
+    /// Emit the ingest chunk at `i`, updating the never-starve counters.
+    fn pop_ingest_at(&mut self, i: usize, decode_has_ready: bool) -> AnyBatch {
+        let step = self.ingest_q.swap_remove(i);
+        self.pending -= 1;
+        self.consecutive_ingest =
+            if decode_has_ready { self.consecutive_ingest + 1 } else { 0 };
+        self.consecutive_decode = 0;
+        AnyBatch::Ingest(step)
+    }
+
+    /// Pick between the decode and ingest lanes — the generation-side
+    /// pair — under the SLO rule. A ready decode head's implicit deadline
+    /// is `enqueued + max_wait` (the latest the lane policy would have
+    /// flushed it); ingest chunks carry the earliest waiter deadline.
+    /// Oldest deadline wins, bounded by `IngestLaneConfig::starve_bound`
+    /// consecutive same-lane pops — tightened so two ingest chunks never
+    /// go back to back while a ready decode head is already past
+    /// `max_wait`.
+    fn pop_generation_side(&mut self, now: Instant) -> Option<AnyBatch> {
+        let decode_ready = self.decode_ready(now);
+        let ingest = self.ingest_pick();
+        match (decode_ready, ingest) {
+            (false, None) => None,
+            (false, Some(i)) => Some(self.pop_ingest_at(i, false)),
+            (true, None) => {
+                let b = self.pop_decode_ready(now)?;
+                self.consecutive_ingest = 0;
+                self.consecutive_decode = 0; // no ingest waiting: not starving it
+                Some(AnyBatch::Decode(b))
+            }
+            (true, Some(i)) => {
+                // hard invariant: a ready decode head past its own
+                // max_wait bound allows at most one consecutive ingest pop
+                let decode_expired = self
+                    .decode_q
+                    .front()
+                    .is_some_and(|s| now.duration_since(s.enqueued) >= self.decode_cfg.max_wait);
+                let ingest_bound =
+                    if decode_expired { 1 } else { self.ingest_cfg.starve_bound.max(1) };
+                let pick_ingest = if self.consecutive_ingest >= ingest_bound {
+                    false // ingest has had its run: decode's turn
+                } else if self.consecutive_decode >= self.ingest_cfg.starve_bound.max(1) {
+                    true // decode has had its run: ingest's turn
+                } else {
+                    // oldest-deadline-first; a deadline-free chunk defers
+                    // to any ready decode head (whose deadline is finite)
+                    let decode_deadline =
+                        self.decode_q.front().map(|s| s.enqueued + self.decode_cfg.max_wait);
+                    match (self.ingest_q[i].deadline, decode_deadline) {
+                        (Some(id), Some(dd)) => id < dd,
+                        (Some(_), None) => true,
+                        (None, _) => false,
+                    }
+                };
+                if pick_ingest {
+                    Some(self.pop_ingest_at(i, true))
+                } else {
+                    let b = self.pop_decode_ready(now)?;
+                    self.consecutive_ingest = 0;
+                    self.consecutive_decode += 1;
+                    Some(AnyBatch::Decode(b))
+                }
+            }
+        }
+    }
+
+    /// Next ready batch from any lane. The outer rule alternates the
+    /// generation side (decode + ingest) with the prefill side after
+    /// every emission so neither phase starves the other under sustained
+    /// load; within the generation side, decode and ingest are picked by
+    /// the SLO rule of [`Batcher::pop_generation_side`].
     pub fn pop_ready_any(&mut self, now: Instant) -> Option<AnyBatch> {
         let decode_first = self.prefer_decode;
         for lane in [decode_first, !decode_first] {
             if lane {
-                if let Some(b) = self.pop_decode_ready(now) {
+                if let Some(any) = self.pop_generation_side(now) {
                     self.prefer_decode = false;
-                    return Some(AnyBatch::Decode(b));
+                    return Some(any);
                 }
             } else if let Some(b) = self.pop_ready(now) {
                 self.prefer_decode = true;
@@ -276,14 +455,21 @@ impl Batcher {
         Some(DecodeBatch { steps, formed_at: now })
     }
 
+    /// Flush the ingest lane regardless of fairness state (shutdown
+    /// path), in SLO order.
+    pub fn drain_ingest(&mut self) -> Vec<IngestStep> {
+        let mut steps = std::mem::take(&mut self.ingest_q);
+        steps.sort_by_key(|s| (s.deadline.is_none(), s.deadline, s.enqueued));
+        self.pending -= steps.len();
+        steps
+    }
+
     /// Earliest enqueue time among all queued work (for sleep timing).
     pub fn oldest_enqueue(&self) -> Option<Instant> {
         let prefill = self.queues.values().filter_map(|q| q.front()).map(|r| r.enqueued).min();
         let decode = self.decode_q.front().map(|s| s.enqueued);
-        match (prefill, decode) {
-            (Some(a), Some(b)) => Some(a.min(b)),
-            (a, b) => a.or(b),
-        }
+        let ingest = self.ingest_q.iter().map(|s| s.enqueued).min();
+        [prefill, decode, ingest].into_iter().flatten().min()
     }
 }
 
@@ -472,6 +658,216 @@ mod tests {
         b.push(key(512), req(1, t + Duration::from_millis(10)));
         b.push_decode(step(2, t));
         assert_eq!(b.oldest_enqueue(), Some(t));
+    }
+
+    fn ingest(key: u64, deadline: Option<Instant>, t: Instant) -> IngestStep {
+        IngestStep { key, tokens: 2048, deadline, enqueued: t }
+    }
+
+    #[test]
+    fn ingest_lane_emits_when_nothing_else_is_ready() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        let t = Instant::now();
+        b.push_ingest(ingest(7, None, t));
+        assert_eq!(b.ingest_pending(), 1);
+        assert_eq!(b.pending(), 1);
+        match b.pop_ready_any(t) {
+            Some(AnyBatch::Ingest(s)) => assert_eq!(s.key, 7),
+            other => panic!("expected ingest chunk, got {other:?}"),
+        }
+        assert_eq!(b.pending(), 0);
+        assert!(b.pop_ready_any(t).is_none());
+    }
+
+    #[test]
+    fn ingest_pops_oldest_deadline_first() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        let t = Instant::now();
+        b.push_ingest(ingest(1, None, t));
+        b.push_ingest(ingest(2, Some(t + Duration::from_millis(50)), t));
+        b.push_ingest(ingest(3, Some(t + Duration::from_millis(10)), t));
+        let mut order = vec![];
+        while let Some(AnyBatch::Ingest(s)) = b.pop_ready_any(t) {
+            order.push(s.key);
+        }
+        assert_eq!(order, vec![3, 2, 1], "earliest deadline first, None last");
+    }
+
+    #[test]
+    fn urgent_ingest_preempts_decode_once_but_never_twice() {
+        // decode head is already past max_wait (expired => ready), and a
+        // stream of urgent ingest chunks tries to hog the lane: the
+        // never-starve invariant caps consecutive ingest pops at one
+        let mut b = Batcher::with_decode(
+            BatcherConfig::default(),
+            DecodeLaneConfig { max_batch: 1, max_wait: Duration::from_millis(10) },
+        );
+        let t = Instant::now();
+        for i in 0..4 {
+            b.push_decode(step(100 + i, t));
+            // deadline earlier than the decode head's implicit
+            // enqueued+max_wait deadline, so the SLO rule prefers ingest
+            b.push_ingest(ingest(i, Some(t + Duration::from_millis(1)), t));
+        }
+        let now = t + Duration::from_millis(20); // decode head long expired
+        let mut kinds = vec![];
+        while let Some(any) = b.pop_ready_any(now) {
+            kinds.push(match any {
+                AnyBatch::Ingest(_) => 'i',
+                AnyBatch::Decode(_) => 'd',
+                AnyBatch::Prefill(_) => 'p',
+            });
+        }
+        assert_eq!(kinds, vec!['i', 'd', 'i', 'd', 'i', 'd', 'i', 'd']);
+    }
+
+    #[test]
+    fn decode_cannot_starve_a_deadline_free_ingest() {
+        // sustained expired decode traffic vs one chunk without any
+        // deadline: the symmetric starve bound forces the chunk through
+        // after `starve_bound` consecutive decode pops
+        let mut b = Batcher::with_decode(
+            BatcherConfig::default(),
+            DecodeLaneConfig { max_batch: 1, max_wait: Duration::ZERO },
+        )
+        .with_ingest_cfg(IngestLaneConfig { starve_bound: 2 });
+        let t = Instant::now();
+        for i in 0..6 {
+            b.push_decode(step(100 + i, t));
+        }
+        b.push_ingest(ingest(42, None, t));
+        let now = t + Duration::from_millis(1);
+        let mut kinds = vec![];
+        while let Some(any) = b.pop_ready_any(now) {
+            kinds.push(match any {
+                AnyBatch::Ingest(_) => 'i',
+                AnyBatch::Decode(_) => 'd',
+                AnyBatch::Prefill(_) => 'p',
+            });
+        }
+        assert_eq!(kinds, vec!['d', 'd', 'i', 'd', 'd', 'd', 'd']);
+    }
+
+    #[test]
+    fn remove_ingest_conserves_pending() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        let t = Instant::now();
+        b.push_ingest(ingest(1, None, t));
+        b.push_ingest(ingest(2, None, t));
+        assert!(b.remove_ingest(1));
+        assert!(!b.remove_ingest(1), "already removed");
+        assert_eq!(b.pending(), 1);
+        assert_eq!(b.ingest_pending(), 1);
+        let steps = b.drain_ingest();
+        assert_eq!(steps.len(), 1);
+        assert_eq!(steps[0].key, 2);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn prefill_alternation_survives_ingest_traffic() {
+        // the outer decode<->prefill alternation is pinned by
+        // `lanes_alternate_so_neither_starves`; with ingest chunks in the
+        // mix the prefill lane must still get every other emission
+        let mut b = Batcher::with_decode(
+            BatcherConfig { max_batch: 1, max_wait: Duration::ZERO },
+            DecodeLaneConfig { max_batch: 1, max_wait: Duration::ZERO },
+        );
+        let t = Instant::now();
+        for i in 0..2 {
+            b.push(key(512), req(i, t));
+            b.push_ingest(ingest(i, Some(t), t));
+        }
+        let now = t + Duration::from_secs(1);
+        let mut kinds = vec![];
+        while let Some(any) = b.pop_ready_any(now) {
+            kinds.push(match any {
+                AnyBatch::Ingest(_) => 'i',
+                AnyBatch::Decode(_) => 'd',
+                AnyBatch::Prefill(_) => 'p',
+            });
+        }
+        assert_eq!(kinds, vec!['i', 'p', 'i', 'p'], "prefill gets every other turn");
+    }
+
+    #[test]
+    fn fairness_under_random_interleavings() {
+        // satellite property: under randomized interleavings of long
+        // ingests and decode lanes, (a) work is conserved, (b) the lane
+        // never emits two consecutive ingest chunks while a ready decode
+        // head is past the decode max_wait bound
+        use crate::util::prop::forall;
+        use crate::util::rng::Rng;
+        forall(
+            11,
+            60,
+            |r: &mut Rng| {
+                (0..40)
+                    .map(|_| {
+                        // 0 => decode step, 1 => urgent ingest, 2 => lazy ingest
+                        (r.below(3) as u32, r.below(4))
+                    })
+                    .collect::<Vec<(u32, u64)>>()
+            },
+            |ops| {
+                let mut b = Batcher::with_decode(
+                    BatcherConfig::default(),
+                    DecodeLaneConfig { max_batch: 2, max_wait: Duration::ZERO },
+                );
+                let t = Instant::now();
+                let mut n_decode = 0usize;
+                let mut n_ingest = 0usize;
+                for (i, &(op, jitter)) in ops.iter().enumerate() {
+                    let at = t + Duration::from_micros(jitter);
+                    match op {
+                        0 => {
+                            b.push_decode(step(i as u64, at));
+                            n_decode += 1;
+                        }
+                        1 => {
+                            b.push_ingest(ingest(i as u64, Some(at), at));
+                            n_ingest += 1;
+                        }
+                        _ => {
+                            b.push_ingest(ingest(i as u64, None, at));
+                            n_ingest += 1;
+                        }
+                    }
+                }
+                let now = t + Duration::from_millis(5);
+                let mut got_decode = 0usize;
+                let mut got_ingest = 0usize;
+                let mut prev_was_ingest = false;
+                while let Some(any) = {
+                    let decode_head_expired = b.decode_ready(now);
+                    let popped = b.pop_ready_any(now);
+                    if let Some(AnyBatch::Ingest(_)) = popped {
+                        if prev_was_ingest && decode_head_expired {
+                            return Err("two ingest rounds past a ready decode lane".into());
+                        }
+                        prev_was_ingest = true;
+                    } else if popped.is_some() {
+                        prev_was_ingest = false;
+                    }
+                    popped
+                } {
+                    match any {
+                        AnyBatch::Decode(batch) => got_decode += batch.steps.len(),
+                        AnyBatch::Ingest(_) => got_ingest += 1,
+                        AnyBatch::Prefill(_) => return Err("no prefill was pushed".into()),
+                    }
+                }
+                if b.pending() != 0 {
+                    return Err(format!("pending stuck at {}", b.pending()));
+                }
+                if got_decode != n_decode || got_ingest != n_ingest {
+                    return Err(format!(
+                        "lost work: decode {got_decode}/{n_decode}, ingest {got_ingest}/{n_ingest}"
+                    ));
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

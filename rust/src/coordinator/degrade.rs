@@ -10,12 +10,14 @@
 //! * **0** — full service.
 //! * **1** — speculative drafting halved (γ → γ/2): drafts burn decode
 //!   throughput that overload needs for committed tokens.
-//! * **2** — drafting off (γ = 0) and the prefix-holder cap shrunk:
-//!   parked holders pin KV pages that queued work is waiting for.
+//! * **2** — drafting off (γ = 0), the prefix-holder cap shrunk
+//!   (parked holders pin KV pages that queued work is waiting for) and
+//!   the ingest chunk size halved, so long prompts yield to decode
+//!   lanes more often.
 //! * **3** — decode top-k budgets tightened toward the schedule floor
 //!   (Lil-style: decode-stage sparsity degrades more gracefully than
 //!   prefill, so the budget is the last thing cut and the first
-//!   restored).
+//!   restored) and the ingest chunk size quartered.
 //!
 //! Transitions need `up_patience` consecutive pressured evaluations to
 //! step down and `down_patience` calm ones to step up, so a single
@@ -150,6 +152,23 @@ impl Degrader {
             requested
         }
     }
+
+    /// Ingest chunk size under the current level: the configured size
+    /// until level 2, halved there and quartered at level 3 (floor 256
+    /// tokens), so a pressured scheduler yields to decode lanes more
+    /// often. `base == 0` (chunking disabled, monolithic ingest) is
+    /// passed through untouched.
+    pub fn effective_chunk_tokens(&self, base: usize) -> usize {
+        if base == 0 {
+            return 0;
+        }
+        let scaled = match self.level {
+            0 | 1 => base,
+            2 => base / 2,
+            _ => base / 4,
+        };
+        scaled.max(256.min(base))
+    }
 }
 
 #[cfg(test)]
@@ -226,6 +245,7 @@ mod tests {
         assert_eq!(d.effective_gamma(4), 4);
         assert_eq!(d.holder_cap(32), 32);
         assert_eq!(d.effective_k_start(8.0, 4), 8.0);
+        assert_eq!(d.effective_chunk_tokens(2048), 2048);
         let t0 = Instant::now();
         feed(&mut d, t0, 0, 20, 0.95, 0); // ride to MAX_LEVEL
         assert_eq!(d.level(), MAX_LEVEL);
@@ -233,5 +253,9 @@ mod tests {
         assert_eq!(d.holder_cap(32), 8);
         assert_eq!(d.effective_k_start(8.0, 4), 4.0, "halved");
         assert_eq!(d.effective_k_start(6.0, 4), 4.0, "never below the floor");
+        assert_eq!(d.effective_chunk_tokens(2048), 512, "quartered at MAX_LEVEL");
+        assert_eq!(d.effective_chunk_tokens(512), 256, "floored at 256 tokens");
+        assert_eq!(d.effective_chunk_tokens(128), 128, "small bases pass through");
+        assert_eq!(d.effective_chunk_tokens(0), 0, "monolithic stays monolithic");
     }
 }

@@ -209,6 +209,15 @@ pub struct Metrics {
     pub decode_dense_steps: AtomicU64,
     /// Per-step decode latency.
     pub decode_step: LatencyHisto,
+    /// Generation time-to-first-token: submit → first committed decode
+    /// token of the branch (includes routing, queued chunked ingest and
+    /// the first decode dispatch — the latency chunked ingest exists to
+    /// protect).
+    pub gen_ttft: LatencyHisto,
+    /// Time-per-output-token: inter-commit gap per generated token
+    /// (speculative rounds committing k tokens record the gap / k once
+    /// per token).
+    pub tpot: LatencyHisto,
     /// sum of per-step decode budget fractions * 1e6, for the mean
     pub decode_budget_sum_micro: AtomicU64,
     // --- speculative decode ---------------------------------------------
@@ -241,6 +250,9 @@ pub struct Metrics {
     /// instead of being re-ingested. Advisory: a holder evicted between
     /// routing and fork can make this overcount slightly.
     pub prefix_tokens_covered: AtomicU64,
+    /// Ingest chunk steps completed by the chunked-prefill lane (a
+    /// monolithic ingest counts as zero; see `coordinator::batcher`).
+    pub ingest_chunks: AtomicU64,
     // --- failure domains --------------------------------------------------
     /// Requests shed because their deadline passed while still queued
     /// (typed [`crate::coordinator::request::ServeError::DeadlineExceeded`]).
@@ -400,6 +412,17 @@ impl Metrics {
                 self.decode_step.percentile_us(0.9) as f64,
                 self.decode_dense_steps.load(Ordering::Relaxed),
                 self.mean_decode_budget(),
+            ));
+        }
+        if self.gen_ttft.count() > 0 {
+            out.push_str(&format!(
+                "\ngen TTFT p50={:.1}ms p99={:.1}ms | TPOT p50={:.1}µs p99={:.1}µs | \
+                 ingest chunks={}",
+                self.gen_ttft.percentile_us(0.5) as f64 / 1e3,
+                self.gen_ttft.percentile_us(0.99) as f64 / 1e3,
+                self.tpot.percentile_us(0.5) as f64,
+                self.tpot.percentile_us(0.99) as f64,
+                self.ingest_chunks.load(Ordering::Relaxed),
             ));
         }
         let rounds = self.spec_rounds.load(Ordering::Relaxed);
@@ -611,6 +634,18 @@ mod tests {
         assert!(r.contains("tokens/round=3.00"), "{r}");
         assert!((m.spec_acceptance_rate() - 0.5).abs() < 1e-12);
         assert!((m.spec_tokens_per_round() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gen_latency_section_appears_once_ttft_recorded() {
+        let m = Metrics::new();
+        assert!(!m.report(Duration::from_secs(1)).contains("gen TTFT"));
+        m.gen_ttft.record(Duration::from_millis(5));
+        m.tpot.record(Duration::from_micros(200));
+        m.ingest_chunks.fetch_add(3, Ordering::Relaxed);
+        let r = m.report(Duration::from_secs(1));
+        assert!(r.contains("gen TTFT"), "{r}");
+        assert!(r.contains("ingest chunks=3"), "{r}");
     }
 
     #[test]

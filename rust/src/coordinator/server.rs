@@ -81,7 +81,7 @@ use anyhow::{anyhow, Result};
 
 use super::admission::{Admission, AdmissionConfig, Admit};
 use super::batcher::{
-    AnyBatch, BatchKey, Batcher, BatcherConfig, DecodeLaneConfig, DecodeStep,
+    AnyBatch, BatchKey, Batcher, BatcherConfig, DecodeLaneConfig, DecodeStep, IngestStep,
 };
 use super::degrade::{DegradeConfig, Degrader};
 use super::kv_cache::{KvConfig, KvError};
@@ -128,6 +128,15 @@ pub struct CoordinatorConfig {
     /// exact prompt-hash equality, or token-granular radix matching with
     /// partial (page-aligned) reuse. Defaults to radix.
     pub prefix_mode: PrefixMode,
+    /// Chunked prompt ingest (`--chunk-tokens`): a holder's prompt
+    /// suffix is projected in fixed-token chunks scheduled through the
+    /// batcher's ingest lane against decode traffic, so one long prompt
+    /// can no longer head-of-line-block every decode stream for a full
+    /// prefill turn (see `coordinator::batcher`). `0` disables chunking
+    /// and ingests monolithically on a worker. The degradation ladder
+    /// shrinks the effective size under pressure
+    /// ([`Degrader::effective_chunk_tokens`]). Defaults to 2048.
+    pub chunk_tokens: usize,
     /// Deterministic fault-injection plan for chaos testing. Defaults to
     /// whatever the `STEM_FAULTS` env var specifies — `None` when unset,
     /// which keeps every injection point zero-cost.
@@ -157,6 +166,7 @@ impl Default for CoordinatorConfig {
             admission: AdmissionConfig::default(),
             kv_pages: 4096,
             prefix_mode: PrefixMode::default(),
+            chunk_tokens: 2048,
             faults: FaultPlan::from_env().map(Arc::new),
             degrade: DegradeConfig::default(),
             trace_events: 4096,
@@ -286,19 +296,30 @@ struct BranchAdmit {
     ns: f64,
 }
 
+impl BranchAdmit {
+    /// A share that releases nothing (the drained/placeholder state).
+    const ZERO: BranchAdmit = BranchAdmit { tokens: 0, ns: 0.0 };
+}
+
 enum Msg {
     Request(PrefillRequest, mpsc::Sender<Result<PrefillResponse>>),
     /// One fan-out group: `req.fanout` branches over one shared prompt,
     /// one (response channel, cancel flag) pair + admission share per
-    /// branch.
+    /// branch, plus the group's shared ingest share (the uncovered
+    /// prompt suffix — zero on a full prefix hit), released
+    /// progressively as chunks land.
     Generate(
         GenerateRequest,
         Vec<(mpsc::Sender<Result<GenerateResponse>>, Arc<AtomicBool>)>,
         Vec<BranchAdmit>,
+        BranchAdmit,
     ),
     /// A prefix holder finished (or failed) its one-time prompt ingest
     /// on a worker; the session comes back to be parked in the cache.
     PrefixFilled { key: u64, session: Result<Box<DecodeSession>, String> },
+    /// One ingest chunk of a chunked prefill landed (or failed) on a
+    /// worker; `tokens` is the chunk length just projected.
+    ChunkDone { key: u64, tokens: usize, session: Result<Box<DecodeSession>, String> },
     /// A generation finished a step and wants its next one scheduled;
     /// the second field is the step's token width (γ+1 for speculative
     /// rounds, 1 otherwise) so the decode lane carries it.
@@ -317,6 +338,8 @@ struct DecodeTask {
     tokens: Vec<i32>,
     enqueued: Instant,
     first_step_at: Option<Instant>,
+    /// When this branch last committed tokens (TPOT inter-commit gap).
+    last_commit: Option<Instant>,
     /// Admission bookkeeping to release on completion.
     admit_tokens: usize,
     admit_ns: f64,
@@ -357,8 +380,27 @@ struct Holder {
     /// Parked after ingest; `None` while the prefill job runs on a worker.
     session: Option<DecodeSession>,
     waiting: Vec<BranchSpec>,
+    /// Resumable chunked-ingest state; `None` once ingest completes (or
+    /// for monolithic fills, which never enter the ingest lane).
+    ingest: Option<IngestJob>,
+    /// The group's unreleased ingest admission share, drained
+    /// chunk-by-chunk as work lands and flushed on completion/failure.
+    ingest_admit: BranchAdmit,
     /// LRU clock for cap-retirement: bumped on creation and every hit.
     last_used: u64,
+}
+
+/// Chunked-prefill progress of one holder: the suffix still being
+/// projected, how much of it has landed, and the chunk size frozen at
+/// fill start (so one ingest never changes granularity mid-flight even
+/// if the degradation ladder moves).
+struct IngestJob {
+    /// Present while the next chunk waits in the batcher's ingest lane;
+    /// taken (moved onto a worker) while a chunk runs.
+    session: Option<DecodeSession>,
+    suffix: Vec<i32>,
+    done: usize,
+    chunk: usize,
 }
 
 /// The serving runtime (see module docs for the threading model).
@@ -467,6 +509,7 @@ impl Coordinator {
             let workers = cfg.workers;
             let faults = cfg.faults.clone();
             let degrade_cfg = cfg.degrade.clone();
+            let chunk_tokens = cfg.chunk_tokens;
             let tx2 = tx.clone();
             thread::spawn(move || {
                 dispatcher_loop(DispatcherCtx {
@@ -485,6 +528,8 @@ impl Coordinator {
                     workers,
                     faults,
                     degrade_cfg,
+                    geometry,
+                    chunk_tokens,
                 })
             })
         };
@@ -782,14 +827,15 @@ impl Coordinator {
                 return Err(anyhow!("rejected: {reason}"));
             }
         }
+        // each branch carries its decode estimate; the uncovered-suffix
+        // ingest estimate rides separately with the group so the
+        // dispatcher can release it chunk-by-chunk as ingest lands
+        // (fanout * decode + ingest == the totals admitted above)
         let mut admits = Vec::with_capacity(fanout);
-        for i in 0..fanout {
-            let first = i == 0 && suffix_len > 0;
-            admits.push(BranchAdmit {
-                tokens: max_new_tokens + if first { suffix_len } else { 0 },
-                ns: decode_ns + if first { ingest_ns } else { 0.0 },
-            });
+        for _ in 0..fanout {
+            admits.push(BranchAdmit { tokens: max_new_tokens, ns: decode_ns });
         }
+        let ingest_admit = BranchAdmit { tokens: suffix_len, ns: ingest_ns };
         // id block: holder seq = id, branch seqs = id+1 ..= id+fanout
         let id = self.next_id.fetch_add(1 + fanout as u64, Ordering::Relaxed);
         let req = GenerateRequest {
@@ -821,7 +867,7 @@ impl Coordinator {
             rxs.push(rrx);
         }
         self.tx
-            .send(Msg::Generate(req, lines, admits))
+            .send(Msg::Generate(req, lines, admits, ingest_admit))
             .map_err(|_| anyhow!("coordinator stopped"))?;
         Ok((rxs, cancels, id + 1))
     }
@@ -923,6 +969,12 @@ struct DispatcherCtx {
     workers: usize,
     faults: Option<Arc<FaultPlan>>,
     degrade_cfg: DegradeConfig,
+    /// Model geometry for per-chunk ingest cost estimates
+    /// (`estimate_ingest_ns` is linear, so chunk estimates sum to the
+    /// admitted total).
+    geometry: Geometry,
+    /// Configured ingest chunk size (0 = monolithic).
+    chunk_tokens: usize,
 }
 
 fn dispatcher_loop(ctx: DispatcherCtx) {
@@ -942,6 +994,8 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
         workers,
         faults,
         degrade_cfg,
+        geometry,
+        chunk_tokens,
     } = ctx;
     let tables = PrefixTables { mode: prefix_mode, exact: &prefix_index, radix: &radix_index };
     let pool = ThreadPool::new(workers);
@@ -1019,8 +1073,11 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                     channels.insert(req.id, ch);
                     batcher.push(key, req);
                 }
-                Msg::Generate(req, lines, admits) => {
+                Msg::Generate(req, lines, admits, ingest_admit) => {
                     let n_prompt = req.prompt.len();
+                    // chunk granularity for any fill this group starts,
+                    // frozen here (the ladder may move mid-ingest)
+                    let chunk_now = degrader.effective_chunk_tokens(chunk_tokens);
                     // degradation ladder: newly launched branches take the
                     // stepped-down policy (reversible — in-flight work is
                     // never mutated)
@@ -1044,6 +1101,7 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                         })
                         .collect();
                     if shutdown.load(Ordering::SeqCst) {
+                        release_ingest_share(&admission, ingest_admit);
                         for spec in specs {
                             metrics
                                 .trace
@@ -1056,6 +1114,7 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                     if req.deadline.is_some_and(|d| Instant::now() >= d) {
                         // queued past its deadline: shed the whole group
                         // before it touches the KV store or a worker
+                        release_ingest_share(&admission, ingest_admit);
                         for spec in specs {
                             metrics.shed_deadline.fetch_add(1, Ordering::Relaxed);
                             metrics.trace.record(spec.seq, EventKind::Shed);
@@ -1189,6 +1248,10 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                                             &active_decodes,
                                         );
                                         if bounced.is_empty() {
+                                            // nothing left to ingest: the
+                                            // suffix estimate (if any) was
+                                            // for a prefix this hit covers
+                                            release_ingest_share(&admission, ingest_admit);
                                             holder.session = Some(session);
                                             holders.insert(key, holder);
                                         } else {
@@ -1212,11 +1275,14 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                                                 req,
                                                 bounced,
                                                 None,
+                                                ingest_admit,
+                                                chunk_now,
                                                 &mut holders,
                                                 &mut holder_clock,
                                                 tables,
                                                 &kv,
                                                 &decode_model,
+                                                &mut batcher,
                                                 &metrics,
                                                 &admission,
                                                 &active_decodes,
@@ -1230,6 +1296,7 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                                         // routed as Hit but mid-ingest
                                         // after all (defensive): queue the
                                         // branches like Filling would
+                                        release_ingest_share(&admission, ingest_admit);
                                         holder.waiting.extend(specs);
                                         holders.insert(key, holder);
                                     }
@@ -1247,11 +1314,14 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                                         req,
                                         specs,
                                         None,
+                                        ingest_admit,
+                                        chunk_now,
                                         &mut holders,
                                         &mut holder_clock,
                                         tables,
                                         &kv,
                                         &decode_model,
+                                        &mut batcher,
                                         &metrics,
                                         &admission,
                                         &active_decodes,
@@ -1264,6 +1334,8 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                         }
                         Route::Filling(key) => {
                             // ingest already in flight: ride it for free
+                            // (this group's own suffix estimate is surplus)
+                            release_ingest_share(&admission, ingest_admit);
                             metrics.prefix_hits.fetch_add(specs.len() as u64, Ordering::Relaxed);
                             metrics
                                 .prefix_tokens_covered
@@ -1293,11 +1365,14 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                                 req,
                                 specs,
                                 None,
+                                ingest_admit,
+                                chunk_now,
                                 &mut holders,
                                 &mut holder_clock,
                                 tables,
                                 &kv,
                                 &decode_model,
+                                &mut batcher,
                                 &metrics,
                                 &admission,
                                 &active_decodes,
@@ -1340,11 +1415,14 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                                         req,
                                         specs,
                                         Some((session, covered)),
+                                        ingest_admit,
+                                        chunk_now,
                                         &mut holders,
                                         &mut holder_clock,
                                         tables,
                                         &kv,
                                         &decode_model,
+                                        &mut batcher,
                                         &metrics,
                                         &admission,
                                         &active_decodes,
@@ -1365,11 +1443,14 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                                         req,
                                         specs,
                                         None,
+                                        ingest_admit,
+                                        chunk_now,
                                         &mut holders,
                                         &mut holder_clock,
                                         tables,
                                         &kv,
                                         &decode_model,
+                                        &mut batcher,
                                         &metrics,
                                         &admission,
                                         &active_decodes,
@@ -1380,6 +1461,7 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                                 }
                                 Err(e) => {
                                     let msg = format!("prefix fork failed: {e}");
+                                    release_ingest_share(&admission, ingest_admit);
                                     for spec in specs {
                                         fail_branch(
                                             spec,
@@ -1397,11 +1479,14 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                             req,
                             specs,
                             None,
+                            ingest_admit,
+                            chunk_now,
                             &mut holders,
                             &mut holder_clock,
                             tables,
                             &kv,
                             &decode_model,
+                            &mut batcher,
                             &metrics,
                             &admission,
                             &active_decodes,
@@ -1415,38 +1500,23 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                     match session {
                         Ok(sess) => {
                             if let Some(holder) = holders.get_mut(&key) {
-                                let specs = std::mem::take(&mut holder.waiting);
-                                let bounced = launch_branches(
-                                    &sess,
-                                    specs,
+                                release_holder_ingest(&admission, holder);
+                                park_filled_holder(
+                                    sess,
+                                    holder,
                                     &tasks,
                                     &mut batcher,
                                     &metrics,
                                     &admission,
                                     &active_decodes,
                                 );
-                                // the holder is still pinned here, so its
-                                // seq cannot have been evicted mid-fork
-                                for spec in bounced {
-                                    fail_branch(
-                                        spec,
-                                        anyhow!("prefix vanished during ingest"),
-                                        &metrics,
-                                        &admission,
-                                        &active_decodes,
-                                    );
-                                }
-                                // park unpinned: the cached prefix yields
-                                // to live traffic under page pressure
-                                // (forks re-pin themselves)
-                                let _ = sess.unpin();
-                                holder.session = Some(*sess);
                             }
                             // else: holder retired while filling; dropping
                             // `sess` closes the seq and frees its pages
                         }
                         Err(msg) => {
-                            if let Some(holder) = holders.remove(&key) {
+                            if let Some(mut holder) = holders.remove(&key) {
+                                release_holder_ingest(&admission, &mut holder);
                                 tables.remove(key, &holder.prompt);
                                 for spec in holder.waiting {
                                     fail_branch(
@@ -1466,6 +1536,106 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                         &kv,
                         degrader.holder_cap(MAX_PREFIX_HOLDERS),
                     );
+                }
+                Msg::ChunkDone { key, tokens, session } => {
+                    match session {
+                        Ok(sess) => {
+                            let mut finished_fill = false;
+                            if let Some(holder) = holders.get_mut(&key) {
+                                // progressive release: the landed chunk's
+                                // share of the admitted ingest estimate
+                                // (linear cost model, so chunk estimates
+                                // sum to the admitted total)
+                                let chunk_ns = estimate_ingest_ns(&geometry, tokens);
+                                let rel_tokens = tokens.min(holder.ingest_admit.tokens);
+                                let rel_ns = chunk_ns.min(holder.ingest_admit.ns);
+                                if rel_tokens > 0 || rel_ns > 0.0 {
+                                    admission.release_work(rel_tokens, rel_ns);
+                                    holder.ingest_admit.tokens -= rel_tokens;
+                                    holder.ingest_admit.ns -= rel_ns;
+                                }
+                                let next = match holder.ingest.as_mut() {
+                                    Some(job) => {
+                                        job.done += tokens;
+                                        if job.done >= job.suffix.len() {
+                                            None
+                                        } else {
+                                            Some((job.suffix.len() - job.done).min(job.chunk))
+                                        }
+                                    }
+                                    // no job state (defensive): park as done
+                                    None => None,
+                                };
+                                match next {
+                                    None => {
+                                        // last chunk landed: flush any
+                                        // rounding remainder of the share
+                                        // and launch the queued branches
+                                        holder.ingest = None;
+                                        release_holder_ingest(&admission, holder);
+                                        park_filled_holder(
+                                            sess,
+                                            holder,
+                                            &tasks,
+                                            &mut batcher,
+                                            &metrics,
+                                            &admission,
+                                            &active_decodes,
+                                        );
+                                        finished_fill = true;
+                                    }
+                                    Some(n_next) => {
+                                        // hand the session back to the job
+                                        // and queue the next chunk into the
+                                        // ingest lane, against the earliest
+                                        // waiting-branch deadline
+                                        let deadline = holder
+                                            .waiting
+                                            .iter()
+                                            .filter_map(|s| s.deadline)
+                                            .min();
+                                        if let Some(job) = holder.ingest.as_mut() {
+                                            job.session = Some(*sess);
+                                        }
+                                        batcher.push_ingest(IngestStep {
+                                            key,
+                                            tokens: n_next,
+                                            deadline,
+                                            enqueued: Instant::now(),
+                                        });
+                                    }
+                                }
+                            }
+                            // else: holder retired/abandoned while the
+                            // chunk ran; dropping `sess` closes the seq
+                            // and frees its pages
+                            if finished_fill {
+                                retire_excess_holders(
+                                    &mut holders,
+                                    tables,
+                                    &kv,
+                                    degrader.holder_cap(MAX_PREFIX_HOLDERS),
+                                );
+                            }
+                        }
+                        Err(msg) => {
+                            // a failed chunk fails the whole fill exactly
+                            // like a failed monolithic ingest would
+                            if let Some(mut holder) = holders.remove(&key) {
+                                release_holder_ingest(&admission, &mut holder);
+                                tables.remove(key, &holder.prompt);
+                                for spec in holder.waiting {
+                                    fail_branch(
+                                        spec,
+                                        anyhow!(msg.clone()),
+                                        &metrics,
+                                        &admission,
+                                        &active_decodes,
+                                    );
+                                }
+                            }
+                        }
+                    }
                 }
                 Msg::DecodeReady(seq, tokens) => {
                     batcher.push_decode(DecodeStep { seq, tokens, enqueued: Instant::now() });
@@ -1512,6 +1682,10 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
             if let Some(d) = batcher.drain_decode(now) {
                 any.push(AnyBatch::Decode(d));
             }
+            // chunked fills keep stepping during the drain: each landed
+            // chunk re-queues the next until the fill completes or its
+            // waiting branches are all answered
+            any.extend(batcher.drain_ingest().into_iter().map(AnyBatch::Ingest));
         } else {
             while let Some(b) = batcher.pop_ready_any(now) {
                 any.push(b);
@@ -1655,6 +1829,112 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
                         });
                     }
                 }
+                AnyBatch::Ingest(step) => {
+                    let key = step.key;
+                    let Some(holder) = holders.get_mut(&key) else {
+                        continue; // holder failed/retired since queueing
+                    };
+                    // prune at the chunk boundary: branches cancelled or
+                    // past their deadline while the fill was queued are
+                    // answered now, and a fill nobody waits for anymore
+                    // is abandoned before burning a worker on it
+                    let waiting = std::mem::take(&mut holder.waiting);
+                    let mut still = Vec::with_capacity(waiting.len());
+                    for spec in waiting {
+                        if spec.cancel.load(Ordering::SeqCst) {
+                            metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+                            metrics.trace.record(spec.seq, EventKind::Cancel);
+                            answer_unstarted(
+                                spec,
+                                Finish::Cancelled,
+                                &metrics,
+                                &admission,
+                                &active_decodes,
+                            );
+                        } else if spec.deadline.is_some_and(|d| now >= d) {
+                            metrics.shed_deadline.fetch_add(1, Ordering::Relaxed);
+                            metrics.trace.record(spec.seq, EventKind::Shed);
+                            fail_branch(
+                                spec,
+                                anyhow::Error::new(ServeError::DeadlineExceeded),
+                                &metrics,
+                                &admission,
+                                &active_decodes,
+                            );
+                        } else {
+                            still.push(spec);
+                        }
+                    }
+                    holder.waiting = still;
+                    let abandoned = holder.waiting.is_empty();
+                    if abandoned {
+                        // dropping the half-ingested session frees its
+                        // pages; the unreleased share unwinds with it
+                        if let Some(mut holder) = holders.remove(&key) {
+                            release_holder_ingest(&admission, &mut holder);
+                            tables.remove(key, &holder.prompt);
+                        }
+                        continue;
+                    }
+                    let Some(job) = holder.ingest.as_mut() else {
+                        continue; // monolithic fill raced in (defensive)
+                    };
+                    let Some(mut session) = job.session.take() else {
+                        continue; // a chunk is already in flight (defensive)
+                    };
+                    let end = (job.done + job.chunk).min(job.suffix.len());
+                    let chunk: Vec<i32> = job.suffix[job.done..end].to_vec();
+                    let n_chunk = chunk.len();
+                    let holder_seq = holder.seq;
+                    let metrics2 = Arc::clone(&metrics);
+                    let faults2 = faults.clone();
+                    let tx2 = tx.clone();
+                    pool.submit(move || {
+                        if let Some(f) = &faults2 {
+                            f.maybe_stall();
+                        }
+                        // panic isolation: the ChunkDone message MUST
+                        // reach the dispatcher either way, or the holder
+                        // would sit mid-ingest forever (same contract as
+                        // the monolithic fill closure)
+                        let faults3 = faults2.clone();
+                        let res = match catch_unwind(AssertUnwindSafe(move || {
+                            if let Some(f) = &faults3 {
+                                if f.should_fire(FaultPoint::IngestChunk) {
+                                    panic!("injected ingest-chunk fault (chaos)");
+                                }
+                            }
+                            session.extend_prompt(&chunk).map(|()| session)
+                        })) {
+                            Ok(Ok(session)) => {
+                                metrics2.tokens_in.fetch_add(n_chunk as u64, Ordering::Relaxed);
+                                metrics2.ingest_chunks.fetch_add(1, Ordering::Relaxed);
+                                metrics2.trace.record(
+                                    holder_seq,
+                                    EventKind::IngestDone { tokens: n_chunk as u32 },
+                                );
+                                Ok(Box::new(session))
+                            }
+                            Ok(Err(e)) => Err(format!("prompt ingest failed: {e}")),
+                            Err(_) => {
+                                metrics2.worker_panics.fetch_add(1, Ordering::Relaxed);
+                                metrics2.trace.record(
+                                    holder_seq,
+                                    EventKind::Panic { site: PanicSite::Ingest },
+                                );
+                                if let Some(r) = metrics2.trace.recorder() {
+                                    let replay = faults2.as_deref().map(|f| f.spec_string());
+                                    eprintln!(
+                                        "{}",
+                                        r.render_failure_dump(Some(holder_seq), replay.as_deref())
+                                    );
+                                }
+                                Err("worker panicked during prompt ingest".to_string())
+                            }
+                        };
+                        let _ = tx2.send(Msg::ChunkDone { key, tokens: n_chunk, session: res });
+                    });
+                }
             }
         }
 
@@ -1667,6 +1947,44 @@ fn dispatcher_loop(ctx: DispatcherCtx) {
     }
     pool.wait_idle();
     // parked prefix holders drop here, freeing their cached pages
+}
+
+/// Release a group's (remaining) ingest admission share, if any.
+fn release_ingest_share(admission: &Arc<Admission>, share: BranchAdmit) {
+    if share.tokens > 0 || share.ns > 0.0 {
+        admission.release_work(share.tokens, share.ns);
+    }
+}
+
+/// Flush whatever is left of a holder's ingest share (progressive
+/// chunk releases may have drained part of it) and zero it, so every
+/// terminal path releases the share exactly once.
+fn release_holder_ingest(admission: &Arc<Admission>, holder: &mut Holder) {
+    release_ingest_share(admission, std::mem::replace(&mut holder.ingest_admit, BranchAdmit::ZERO));
+}
+
+/// A holder's ingest just completed (monolithic or final chunk): launch
+/// every queued branch off the filled session and park it unpinned in
+/// the cache. The holder is still pinned here, so its seq cannot have
+/// been evicted mid-fork — a bounce is a logic error answered typed.
+fn park_filled_holder(
+    sess: Box<DecodeSession>,
+    holder: &mut Holder,
+    tasks: &DecodeTasks,
+    batcher: &mut Batcher,
+    metrics: &Arc<Metrics>,
+    admission: &Arc<Admission>,
+    active: &Arc<AtomicUsize>,
+) {
+    let specs = std::mem::take(&mut holder.waiting);
+    let bounced = launch_branches(&sess, specs, tasks, batcher, metrics, admission, active);
+    for spec in bounced {
+        fail_branch(spec, anyhow!("prefix vanished during ingest"), metrics, admission, active);
+    }
+    // park unpinned: the cached prefix yields to live traffic under
+    // page pressure (forks re-pin themselves)
+    let _ = sess.unpin();
+    holder.session = Some(*sess);
 }
 
 /// Fail one branch: record, release its admission share, answer its
@@ -1774,6 +2092,7 @@ fn launch_branches(
                     tokens: Vec::new(),
                     enqueued: spec.enqueued,
                     first_step_at: None,
+                    last_commit: None,
                     admit_tokens: spec.admit.tokens,
                     admit_ns: spec.admit.ns,
                     cancel: spec.cancel,
@@ -1801,9 +2120,13 @@ fn launch_branches(
 }
 
 /// Start a prefix holder for `req.prompt` under `key`: allocate (or
-/// adopt, for a radix partial hit) its session now — cheap — then run
-/// the prompt-suffix ingest on a worker and report back via
-/// [`Msg::PrefixFilled`]. Branches queue on the holder meanwhile.
+/// adopt, for a radix partial hit) its session now — cheap — then
+/// ingest the prompt suffix. With `chunk_tokens == 0` the whole suffix
+/// runs monolithically on a worker and reports back via
+/// [`Msg::PrefixFilled`]; otherwise the fill becomes a resumable
+/// sequence of chunk steps through the batcher's ingest lane
+/// (scheduled against decode traffic, each landing as
+/// [`Msg::ChunkDone`]). Branches queue on the holder meanwhile.
 /// `base` is `None` for a full ingest (counted as a prefix miss) or
 /// `Some((forked_session, covered))` when the leading `covered` tokens
 /// were already forked off a matched holder and only the remaining
@@ -1816,11 +2139,14 @@ fn start_prefix_fill(
     req: GenerateRequest,
     specs: Vec<BranchSpec>,
     base: Option<(DecodeSession, usize)>,
+    ingest_admit: BranchAdmit,
+    chunk_tokens: usize,
     holders: &mut HashMap<u64, Holder>,
     holder_clock: &mut u64,
     tables: PrefixTables<'_>,
     kv: &Arc<SharedKv>,
     model: &Arc<dyn DecodeBackend>,
+    batcher: &mut Batcher,
     metrics: &Arc<Metrics>,
     admission: &Arc<Admission>,
     active: &Arc<AtomicUsize>,
@@ -1828,7 +2154,7 @@ fn start_prefix_fill(
     tx: &mpsc::Sender<Msg>,
     faults: &Option<Arc<FaultPlan>>,
 ) {
-    // `mut`: the move closure below ingests through `&mut self`
+    // `mut`: the monolithic closure below ingests through `&mut self`
     let (mut session, covered) = match base {
         Some((session, covered)) => (session, covered),
         None => {
@@ -1839,6 +2165,7 @@ fn start_prefix_fill(
                     // KvAlloc fault injection surfaces here too: the
                     // whole group fails with the allocation error
                     let msg = format!("kv allocation failed: {e}");
+                    release_ingest_share(admission, ingest_admit);
                     for spec in specs {
                         fail_branch(spec, anyhow!(msg.clone()), metrics, admission, active);
                     }
@@ -1849,6 +2176,39 @@ fn start_prefix_fill(
     };
     *holder_clock += 1;
     let holder_seq = session.seq_id();
+    let suffix: Vec<i32> = req.prompt[covered..].to_vec();
+    let n_suffix = suffix.len();
+    if chunk_tokens > 0 && n_suffix > 0 {
+        // chunked fill: the session parks inside the holder's IngestJob
+        // and advances one ingest-lane step at a time (see the
+        // AnyBatch::Ingest arm and Msg::ChunkDone)
+        let deadline = specs.iter().filter_map(|s| s.deadline).min();
+        holders.insert(
+            key,
+            Holder {
+                seq: holder_seq,
+                prompt: req.prompt.clone(),
+                session: None,
+                waiting: specs,
+                ingest: Some(IngestJob {
+                    session: Some(session),
+                    suffix,
+                    done: 0,
+                    chunk: chunk_tokens,
+                }),
+                ingest_admit,
+                last_used: *holder_clock,
+            },
+        );
+        tables.insert(key, &req.prompt);
+        batcher.push_ingest(IngestStep {
+            key,
+            tokens: n_suffix.min(chunk_tokens),
+            deadline,
+            enqueued: Instant::now(),
+        });
+        return;
+    }
     holders.insert(
         key,
         Holder {
@@ -1856,12 +2216,12 @@ fn start_prefix_fill(
             prompt: req.prompt.clone(),
             session: None,
             waiting: specs,
+            ingest: None,
+            ingest_admit,
             last_used: *holder_clock,
         },
     );
     tables.insert(key, &req.prompt);
-    let suffix: Vec<i32> = req.prompt[covered..].to_vec();
-    let n_suffix = suffix.len();
     let metrics = Arc::clone(metrics);
     let faults = faults.clone();
     let tx = tx.clone();
@@ -2044,6 +2404,8 @@ fn run_decode_step(
     };
     match stepped {
         Ok((infos, halt)) => {
+            let committed_at = Instant::now();
+            let was_empty = task.tokens.is_empty();
             for info in &infos {
                 metrics.record_decode_step(
                     Duration::from_nanos(info.step_ns),
@@ -2052,6 +2414,23 @@ fn run_decode_step(
                 );
                 metrics.record_step_telemetry(info.n_ctx, &info.telemetry);
                 task.tokens.push(info.token);
+            }
+            if !infos.is_empty() {
+                if was_empty {
+                    // generation TTFT: submit → first committed token,
+                    // queueing and (chunked) ingest included — the
+                    // latency chunked prefill exists to protect
+                    metrics.gen_ttft.record(committed_at - task.enqueued);
+                }
+                if let Some(prev) = task.last_commit {
+                    // inter-commit gap per generated token; speculative
+                    // rounds committing k tokens amortize the gap over k
+                    let per = (committed_at - prev) / infos.len() as u32;
+                    for _ in 0..infos.len() {
+                        metrics.tpot.record(per);
+                    }
+                }
+                task.last_commit = Some(committed_at);
             }
             if let Some(last) = infos.last() {
                 metrics.trace.record(
@@ -2376,5 +2755,76 @@ mod tests {
         assert_eq!(steps, snap.decode_steps, "every decode step observed once");
         let json = snap.to_json().to_string();
         assert!(json.contains("\"schema_version\""), "{json}");
+    }
+
+    fn chunked_coordinator(chunk: usize) -> Coordinator {
+        let backend = Arc::new(SyntheticEngine::new(&[64, 128]));
+        Coordinator::with_backend(
+            backend,
+            CoordinatorConfig {
+                workers: 2,
+                kv_pages: 256,
+                faults: None,
+                chunk_tokens: chunk,
+                ..CoordinatorConfig::default()
+            },
+        )
+    }
+
+    #[test]
+    fn chunked_ingest_runs_through_the_ingest_lane() {
+        let coord = chunked_coordinator(16);
+        let prompt: Vec<i32> = (0..100).map(|i| 20 + (i % 64) as i32).collect();
+        let gen = coord
+            .generate_blocking(prompt, 6, DecodePolicy::default())
+            .expect("chunked generate");
+        assert_eq!(gen.finish, Finish::Complete);
+        assert!(!gen.tokens.is_empty());
+        // 100 prompt tokens over 16-token chunks: ceil(100/16) = 7 steps
+        assert_eq!(coord.metrics.ingest_chunks.load(Ordering::Relaxed), 7);
+        assert!(coord.metrics.gen_ttft.count() >= 1, "TTFT observed for the branch");
+        assert!(coord.metrics.tpot.count() >= 1, "TPOT gaps observed past the first token");
+    }
+
+    #[test]
+    fn chunked_and_monolithic_streams_are_identical() {
+        let prompt: Vec<i32> = (0..90).map(|i| 20 + (i * 7 % 64) as i32).collect();
+        let chunked = chunked_coordinator(16)
+            .generate_blocking(prompt.clone(), 12, DecodePolicy::default())
+            .expect("chunked generate");
+        let monolithic = chunked_coordinator(0)
+            .generate_blocking(prompt, 12, DecodePolicy::default())
+            .expect("monolithic generate");
+        // K/V depend only on (token, position), decode is deterministic:
+        // chunk granularity must be invisible in the token stream
+        assert_eq!(chunked.tokens, monolithic.tokens, "byte-identical streams");
+        assert_eq!(chunked.finish, monolithic.finish);
+    }
+
+    #[test]
+    fn cancelled_mid_chunk_unwinds_admission_and_pages() {
+        let coord = chunked_coordinator(32);
+        let admission = Arc::clone(coord.admission());
+        let kv = Arc::clone(coord.shared_kv());
+        // long chunked ingest the client abandons immediately: the
+        // boundary prune must answer the branches and drop the
+        // half-ingested holder, unwinding admission and pages
+        let prompt: Vec<i32> = (0..400).map(|i| 20 + (i % 64) as i32).collect();
+        let tickets = coord
+            .submit_generate_tickets(prompt, 64, DecodePolicy::default(), 2, None)
+            .expect("submit");
+        drop(tickets);
+        let t0 = Instant::now();
+        while admission.outstanding() != (0, 0) {
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "abandoned chunked ingest must release admission, still at {:?}",
+                admission.outstanding()
+            );
+            thread::sleep(Duration::from_millis(2));
+        }
+        drop(coord);
+        let (used, _, _) = kv.occupancy();
+        assert_eq!(used, 0, "no leaked KV pages after an abandoned chunked ingest");
     }
 }

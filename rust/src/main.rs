@@ -42,7 +42,7 @@ USAGE: stem <subcommand> [flags]
   serve     [--requests N] [--rps R] [--method stem|dense|...] [--mix]
             [--prefix-mode exact|radix] [--deadline-ms MS]
             [--metrics-out FILE] [--metrics-interval-ms N]
-            [--decode-backend tiny|engine]
+            [--decode-backend tiny|engine] [--chunk-tokens N] [--seed S]
   generate  [--prompt 1,16,17 | --prompt-len N] [--max-new N] [--dense]
             [--fanout N] [--spec N] [--k-start K] [--mu MU] [--sink S]
             [--recent R] [--dense-below TOKENS] [--block B] [--pages P]
@@ -68,12 +68,16 @@ flags: --artifacts DIR  --workers N  --threads N  --limit N  --quiet
        longest-common-prefix reuse with partial-page forks; default radix)
        --deadline-ms MS  (serve: per-request TTL — queued work past it is
        shed with a typed error instead of executed; default none)
+       --chunk-tokens N  (serve: split prompt ingest into N-token chunks
+       interleaved with decode rounds so long prompts stop head-of-line
+       blocking decode; 0 = monolithic one-shot ingest; default 2048)
        --metrics-out FILE  (serve: write the structured metrics snapshot
        as JSON to FILE and Prometheus text to FILE.prom, every
        --metrics-interval-ms (default 1000) and once more at shutdown)
        (--threads / STEM_THREADS size the pure-rust sparse-core pool;
-       STEM_FAULTS=seed=S,kv=R,exec=R,step=R,stall=R,stall_us=U arms
-       deterministic fault injection in the coordinator for chaos runs)
+       STEM_FAULTS=seed=S,kv=R,exec=R,step=R,stall=R,stall_us=U,ingest=R
+       arms deterministic fault injection in the coordinator for chaos
+       runs; `ingest` fires at chunked-prefill chunk boundaries)
 ";
 
 fn main() {
@@ -107,6 +111,9 @@ fn boot(args: &Args) -> Result<(Arc<Coordinator>, Evaluator)> {
     }
     if let Some(pm) = args.get("prefix-mode") {
         cfg.prefix_mode = pm.parse().map_err(|e: String| anyhow!(e))?;
+    }
+    if let Some(c) = args.get("chunk-tokens") {
+        cfg.chunk_tokens = c.parse().map_err(|_| anyhow!("--chunk-tokens must be an integer"))?;
     }
     if let Some(b) = args.get("decode-backend") {
         cfg.decode_backend = stem::decode::DecodeBackendKind::parse(b)
@@ -241,8 +248,7 @@ fn serve(args: &Args) -> Result<()> {
     }
     pre_warm(&coord, &method_name)?;
 
-    let mut rng = Rng::new(args.u64_or("seed", 42));
-    let trace = poisson_trace(&mut rng, n_requests, rps, pool.len());
+    let trace = poisson_trace(args.u64_or("seed", 42), n_requests, rps, pool.len());
     let start = Instant::now();
     let mut rxs = vec![];
     for item in &trace {

@@ -147,6 +147,11 @@ pub struct MetricsSnapshot {
     pub ttft: HistoSnapshot,
     /// Per-decode-step latency histogram.
     pub decode_step: HistoSnapshot,
+    /// Generation time-to-first-token histogram (submit → first
+    /// committed token; the SLO chunked ingest protects).
+    pub gen_ttft: HistoSnapshot,
+    /// Time-per-output-token histogram (inter-commit gap per token).
+    pub tpot: HistoSnapshot,
     /// Decode-step batches emitted by the continuous-batching lane.
     pub decode_batches: u64,
     /// Decode steps executed (== tokens generated).
@@ -175,6 +180,8 @@ pub struct MetricsSnapshot {
     pub prefix_tokens_total: u64,
     /// Prompt tokens served from cached prefixes.
     pub prefix_tokens_covered: u64,
+    /// Ingest chunk steps completed by the chunked-prefill lane.
+    pub ingest_chunks: u64,
     /// Requests shed in queue by their deadline.
     pub shed_deadline: u64,
     /// Branches cut mid-decode by their deadline.
@@ -231,6 +238,8 @@ impl MetricsSnapshot {
             exec: HistoSnapshot::collect(&m.exec),
             ttft: HistoSnapshot::collect(&m.ttft),
             decode_step: HistoSnapshot::collect(&m.decode_step),
+            gen_ttft: HistoSnapshot::collect(&m.gen_ttft),
+            tpot: HistoSnapshot::collect(&m.tpot),
             decode_batches: m.decode_batches.load(Ordering::Relaxed),
             decode_steps: m.decode_steps.load(Ordering::Relaxed),
             decode_dense_steps: m.decode_dense_steps.load(Ordering::Relaxed),
@@ -245,6 +254,7 @@ impl MetricsSnapshot {
             prefix_misses: m.prefix_misses.load(Ordering::Relaxed),
             prefix_tokens_total: m.prefix_tokens_total.load(Ordering::Relaxed),
             prefix_tokens_covered: m.prefix_tokens_covered.load(Ordering::Relaxed),
+            ingest_chunks: m.ingest_chunks.load(Ordering::Relaxed),
             shed_deadline: m.shed_deadline.load(Ordering::Relaxed),
             deadline_exceeded: m.deadline_exceeded.load(Ordering::Relaxed),
             cancelled: m.cancelled.load(Ordering::Relaxed),
@@ -311,6 +321,8 @@ impl MetricsSnapshot {
                     ("exec", self.exec.to_json()),
                     ("ttft", self.ttft.to_json()),
                     ("decode_step", self.decode_step.to_json()),
+                    ("gen_ttft", self.gen_ttft.to_json()),
+                    ("tpot", self.tpot.to_json()),
                 ]),
             ),
             (
@@ -349,6 +361,7 @@ impl MetricsSnapshot {
                     ("tokens_total", Json::Num(self.prefix_tokens_total as f64)),
                     ("tokens_covered", Json::Num(self.prefix_tokens_covered as f64)),
                     ("covered_ratio", Json::Num(covered_ratio)),
+                    ("ingest_chunks", Json::Num(self.ingest_chunks as f64)),
                 ]),
             ),
             (
@@ -437,6 +450,7 @@ impl MetricsSnapshot {
         counter("stem_prefix_misses_total", self.prefix_misses);
         counter("stem_prefix_tokens_total", self.prefix_tokens_total);
         counter("stem_prefix_tokens_covered_total", self.prefix_tokens_covered);
+        counter("stem_ingest_chunks_total", self.ingest_chunks);
         counter("stem_shed_deadline_total", self.shed_deadline);
         counter("stem_deadline_exceeded_total", self.deadline_exceeded);
         counter("stem_cancelled_total", self.cancelled);
@@ -480,6 +494,8 @@ impl MetricsSnapshot {
         histo("stem_exec_us", &self.exec);
         histo("stem_ttft_us", &self.ttft);
         histo("stem_decode_step_us", &self.decode_step);
+        histo("stem_gen_ttft_us", &self.gen_ttft);
+        histo("stem_tpot_us", &self.tpot);
 
         for b in &self.sparsity {
             if b.steps == 0 {
@@ -531,6 +547,9 @@ mod tests {
             m.exec.record(Duration::from_micros(us / 2));
         }
         m.record_decode_step(Duration::from_micros(150), 0.3, false);
+        m.gen_ttft.record(Duration::from_micros(2500));
+        m.tpot.record(Duration::from_micros(180));
+        m.ingest_chunks.store(5, Ordering::Relaxed);
         m.record_step_telemetry(5000, &StepTelemetry::sparse(80, 20, 24, 0.93));
         m.record_error("one bad thing".into());
         m
@@ -588,9 +607,12 @@ mod tests {
             "latency_us.ttft.buckets",
             "latency_us.queue.p99_us",
             "latency_us.decode_step.count",
+            "latency_us.gen_ttft.p99_us",
+            "latency_us.tpot.p99_us",
             "decode.steps",
             "spec.rounds",
             "prefix.covered_ratio",
+            "prefix.ingest_chunks",
             "failures.worker_panics",
             "failures.errors_dropped",
             "degradation.level",
@@ -632,8 +654,16 @@ mod tests {
         assert!(text.contains("stem_kv_pages_total 4"));
         assert!(text.contains("stem_sparsity_steps_total{band=\"4k-16k\"} 1"));
         assert!(text.contains("stem_trace_events_recorded 1"));
+        assert!(text.contains("stem_ingest_chunks_total 5"));
         // every +Inf bucket count equals its _count line
-        for name in ["stem_queue_us", "stem_exec_us", "stem_ttft_us", "stem_decode_step_us"] {
+        for name in [
+            "stem_queue_us",
+            "stem_exec_us",
+            "stem_ttft_us",
+            "stem_decode_step_us",
+            "stem_gen_ttft_us",
+            "stem_tpot_us",
+        ] {
             let inf = text
                 .lines()
                 .find(|l| l.starts_with(&format!("{name}_bucket{{le=\"+Inf\"}}")))

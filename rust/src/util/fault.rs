@@ -11,6 +11,8 @@
 //!   the coordinator's `catch_unwind` isolation).
 //! * [`FaultPoint::WorkerStall`] — a worker sleeps for `stall` before its
 //!   work item, widening race windows.
+//! * [`FaultPoint::IngestChunk`] — one chunk of a chunked prompt ingest
+//!   panics on a worker (exercising chunk-boundary unwind paths).
 //!
 //! Decisions are a pure function of `(seed, point, nth-call)` via a
 //! splitmix64 hash, so a given seed replays the same per-call decision
@@ -35,11 +37,13 @@ pub enum FaultPoint {
     DecodeStep = 2,
     /// Artificial worker stall before a work item.
     WorkerStall = 3,
+    /// One chunk of a chunked prompt ingest (injected as a panic).
+    IngestChunk = 4,
 }
 
-const N_POINTS: usize = 4;
+const N_POINTS: usize = 5;
 
-const POINT_NAMES: [&str; N_POINTS] = ["kv", "exec", "step", "stall"];
+const POINT_NAMES: [&str; N_POINTS] = ["kv", "exec", "step", "stall", "ingest"];
 
 /// A seeded, rate-based fault schedule (see module docs).
 #[derive(Debug)]
@@ -221,8 +225,12 @@ mod tests {
         let p = FaultPlan::parse("seed=42, kv=0.5, exec=0.25, step=0.1, stall=1.5, stall_us=99")
             .expect("valid spec");
         assert_eq!(p.seed(), 42);
-        assert_eq!(p.rates, [0.5, 0.25, 0.1, 1.0], "rates clamp to [0,1]");
+        assert_eq!(p.rates, [0.5, 0.25, 0.1, 1.0, 0.0], "rates clamp to [0,1]");
         assert_eq!(p.stall, Duration::from_micros(99));
+        // the chunk-boundary point parses and roundtrips like the others
+        let q = FaultPlan::parse("seed=7,ingest=0.3").expect("ingest key");
+        assert_eq!(q.rates[FaultPoint::IngestChunk as usize], 0.3);
+        assert_eq!(q.spec_string(), "seed=7,ingest=0.3");
     }
 
     #[test]

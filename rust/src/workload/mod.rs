@@ -1,9 +1,15 @@
 //! Workload handling: eval-set loading (JSON emitted by aot.py — the
 //! python generators are the single source of truth, so there is no
-//! dual-implementation drift) and open-loop traffic synthesis for the
-//! serving example.
+//! dual-implementation drift) and open/closed-loop traffic synthesis
+//! for the serving example and the load harness in `bench_serve`.
+//!
+//! All generators take a `u64` seed (the shared `util::rng` convention:
+//! the caller passes a seed, the generator owns its stream), so the same
+//! seed always reproduces the same trace regardless of what the caller
+//! did with its own RNG beforehand.
 
 use std::path::Path;
+use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
 
@@ -63,20 +69,207 @@ pub fn load_eval_set(path: &Path) -> Result<Vec<EvalSample>> {
 #[derive(Debug, Clone)]
 pub struct TraceItem {
     /// offset from trace start
-    pub at: std::time::Duration,
+    pub at: Duration,
     /// index into the sample pool
     pub sample: usize,
 }
 
-/// Poisson open-loop arrival trace over a sample pool.
-pub fn poisson_trace(rng: &mut Rng, n_requests: usize, rps: f64, pool: usize) -> Vec<TraceItem> {
+/// Poisson open-loop arrival trace over a sample pool. The seed fully
+/// determines the trace (shared `util::rng` convention).
+pub fn poisson_trace(seed: u64, n_requests: usize, rps: f64, pool: usize) -> Vec<TraceItem> {
+    let mut rng = Rng::new(seed);
     let mut t = 0.0f64;
     (0..n_requests)
         .map(|_| {
             t += rng.exp(rps);
-            TraceItem {
-                at: std::time::Duration::from_secs_f64(t),
-                sample: rng.below(pool as u64) as usize,
+            TraceItem { at: Duration::from_secs_f64(t), sample: rng.below(pool as u64) as usize }
+        })
+        .collect()
+}
+
+/// Arrival-time process of a synthesized trace.
+#[derive(Debug, Clone)]
+pub enum ArrivalModel {
+    /// Memoryless arrivals at a constant mean rate (requests/second).
+    Poisson {
+        /// Mean arrival rate in requests per second.
+        rps: f64,
+    },
+    /// Two-state burst-modulated arrivals: the process alternates between
+    /// a hot phase (rate `rps * burst`) and a cold phase (rate
+    /// `rps / burst`), flipping state with probability 1/8 after each
+    /// arrival, so bursts have geometric length (mean 8 requests). The
+    /// long-run rate is near — not exactly — `rps`; the point is
+    /// clustered arrivals that stress admission and the degrade ladder,
+    /// not rate precision.
+    Bursty {
+        /// Baseline rate in requests per second; hot/cold phases run at
+        /// `rps * burst` and `rps / burst`.
+        rps: f64,
+        /// Burstiness factor (> 1); 1.0 degenerates to Poisson.
+        burst: f64,
+    },
+}
+
+/// Heavy-tailed (lognormal) length distribution with hard caps, used for
+/// both prompt and output lengths. `exp(log_mean + log_sigma · N(0,1))`
+/// rounded and clamped into `[min, cap]`.
+#[derive(Debug, Clone)]
+pub struct LengthModel {
+    /// Mean of the underlying normal (`ln` of the median length).
+    pub log_mean: f64,
+    /// Standard deviation of the underlying normal; bigger = heavier tail.
+    pub log_sigma: f64,
+    /// Smallest length ever emitted.
+    pub min: usize,
+    /// Largest length ever emitted — the tail is truncated here so a
+    /// synthesized trace can never exceed the harness's KV budget.
+    pub cap: usize,
+}
+
+impl LengthModel {
+    /// Draw one length. Float-to-int casts saturate, so even an extreme
+    /// tail draw lands on `cap` rather than wrapping.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let x = (self.log_mean + self.log_sigma * rng.normal()).exp();
+        (x.round() as usize).clamp(self.min, self.cap)
+    }
+}
+
+/// One tenant priority class of a synthesized workload.
+#[derive(Debug, Clone)]
+pub struct TenantClass {
+    /// Relative share of traffic this class receives.
+    pub weight: f64,
+    /// Per-request TTL for this class (`None` = best-effort, never shed
+    /// on deadline). Latency-sensitive classes get tight deadlines so
+    /// goodput-under-overload measures what the SLO pick rule protects.
+    pub deadline_ms: Option<u64>,
+}
+
+/// Full specification of a synthesized traffic trace: arrivals,
+/// heavy-tailed lengths, fan-out families and tenant priorities. One
+/// config + one seed = one exact trace (see [`synthesize`]).
+#[derive(Debug, Clone)]
+pub struct TrafficConfig {
+    /// Seed for the whole trace (shared `util::rng` convention).
+    pub seed: u64,
+    /// Number of requests to synthesize.
+    pub n_requests: usize,
+    /// Arrival-time process.
+    pub arrivals: ArrivalModel,
+    /// Prompt-length distribution.
+    pub prompt_len: LengthModel,
+    /// Output-length (max-new-tokens) distribution.
+    pub output_len: LengthModel,
+    /// `(fanout, weight)` families: each request decodes `fanout`
+    /// branches off one shared prompt ingest. Empty = every request has
+    /// fan-out 1.
+    pub fanout_weights: Vec<(usize, f64)>,
+    /// Tenant classes sampled by weight. Empty = one best-effort tenant.
+    pub tenants: Vec<TenantClass>,
+}
+
+impl Default for TrafficConfig {
+    /// A small mixed workload: Poisson 8 rps, median 512-token prompts
+    /// with a heavy tail capped at 4096, short outputs, mostly fan-out 1
+    /// with occasional families, and a latency-sensitive minority tenant.
+    fn default() -> Self {
+        TrafficConfig {
+            seed: 42,
+            n_requests: 64,
+            arrivals: ArrivalModel::Poisson { rps: 8.0 },
+            prompt_len: LengthModel { log_mean: 6.24, log_sigma: 0.8, min: 16, cap: 4096 },
+            output_len: LengthModel { log_mean: 3.46, log_sigma: 0.6, min: 4, cap: 256 },
+            fanout_weights: vec![(1, 0.9), (2, 0.07), (4, 0.03)],
+            tenants: vec![
+                TenantClass { weight: 0.8, deadline_ms: None },
+                TenantClass { weight: 0.2, deadline_ms: Some(250) },
+            ],
+        }
+    }
+}
+
+/// One synthesized request of a load-harness trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SyntheticRequest {
+    /// Arrival offset from trace start.
+    pub at: Duration,
+    /// Prompt length in tokens.
+    pub prompt_tokens: usize,
+    /// Decode budget (max new tokens per branch).
+    pub max_new: usize,
+    /// Number of decode branches sharing this request's prompt ingest.
+    pub fanout: usize,
+    /// Index into [`TrafficConfig::tenants`] (0 when that list is empty).
+    pub tenant: usize,
+    /// TTL inherited from the tenant class.
+    pub deadline_ms: Option<u64>,
+}
+
+/// Weighted index pick; returns 0 on an empty or all-zero table.
+fn weighted_pick(rng: &mut Rng, weights: &[f64]) -> usize {
+    let total: f64 = weights.iter().filter(|w| w.is_finite() && **w > 0.0).sum();
+    if total <= 0.0 {
+        return 0;
+    }
+    let mut x = rng.f64() * total;
+    for (i, &w) in weights.iter().enumerate() {
+        if w.is_finite() && w > 0.0 {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+    }
+    weights.len().saturating_sub(1)
+}
+
+/// Synthesize a full load-harness trace from a [`TrafficConfig`]. Purely
+/// deterministic: the same config (including seed) always produces the
+/// identical request list — the regression suite pins this, so traces in
+/// bench artifacts are replayable by seed alone.
+pub fn synthesize(cfg: &TrafficConfig) -> Vec<SyntheticRequest> {
+    let mut rng = Rng::new(cfg.seed);
+    let fan_w: Vec<f64> = cfg.fanout_weights.iter().map(|&(_, w)| w).collect();
+    let ten_w: Vec<f64> = cfg.tenants.iter().map(|t| t.weight).collect();
+    let mut t = 0.0f64;
+    let mut hot = false;
+    (0..cfg.n_requests)
+        .map(|_| {
+            let rate = match cfg.arrivals {
+                ArrivalModel::Poisson { rps } => rps,
+                ArrivalModel::Bursty { rps, burst } => {
+                    if rng.bool(1.0 / 8.0) {
+                        hot = !hot;
+                    }
+                    let b = burst.max(1.0);
+                    if hot {
+                        rps * b
+                    } else {
+                        rps / b
+                    }
+                }
+            };
+            t += rng.exp(rate.max(1e-9));
+            let fanout = if cfg.fanout_weights.is_empty() {
+                1
+            } else {
+                cfg.fanout_weights[weighted_pick(&mut rng, &fan_w)].0.max(1)
+            };
+            let (tenant, deadline_ms) = if cfg.tenants.is_empty() {
+                (0, None)
+            } else {
+                let i = weighted_pick(&mut rng, &ten_w);
+                (i, cfg.tenants[i].deadline_ms)
+            };
+            SyntheticRequest {
+                at: Duration::from_secs_f64(t),
+                prompt_tokens: cfg.prompt_len.sample(&mut rng),
+                max_new: cfg.output_len.sample(&mut rng),
+                fanout,
+                tenant,
+                deadline_ms,
             }
         })
         .collect()
@@ -99,13 +292,105 @@ mod tests {
 
     #[test]
     fn poisson_trace_monotone() {
-        let mut rng = Rng::new(5);
-        let tr = poisson_trace(&mut rng, 100, 50.0, 10);
+        let tr = poisson_trace(5, 100, 50.0, 10);
         assert_eq!(tr.len(), 100);
         for w in tr.windows(2) {
             assert!(w[0].at <= w[1].at);
         }
         let mean_gap = tr.last().unwrap().at.as_secs_f64() / 100.0;
         assert!((mean_gap - 0.02).abs() < 0.01, "gap {mean_gap}");
+    }
+
+    #[test]
+    fn poisson_trace_is_seed_deterministic() {
+        let a = poisson_trace(9, 50, 20.0, 7);
+        let b = poisson_trace(9, 50, 20.0, 7);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.sample, y.sample);
+        }
+        let c = poisson_trace(10, 50, 20.0, 7);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.at != y.at), "different seeds diverge");
+    }
+
+    #[test]
+    fn synthesize_same_seed_identical_trace() {
+        let cfg = TrafficConfig::default();
+        assert_eq!(synthesize(&cfg), synthesize(&cfg), "same seed → byte-identical trace");
+        let other = TrafficConfig { seed: 43, ..cfg };
+        assert_ne!(synthesize(&other), synthesize(&TrafficConfig::default()));
+    }
+
+    #[test]
+    fn lengths_stay_inside_configured_caps() {
+        // huge sigma: the untruncated lognormal would routinely blow past
+        // the cap, so every draw landing inside [min, cap] is the clamp
+        let cfg = TrafficConfig {
+            n_requests: 500,
+            prompt_len: LengthModel { log_mean: 6.0, log_sigma: 3.0, min: 8, cap: 1024 },
+            output_len: LengthModel { log_mean: 3.0, log_sigma: 3.0, min: 2, cap: 64 },
+            ..TrafficConfig::default()
+        };
+        let tr = synthesize(&cfg);
+        assert_eq!(tr.len(), 500);
+        let mut hit_prompt_cap = false;
+        for r in &tr {
+            assert!((8..=1024).contains(&r.prompt_tokens), "prompt {}", r.prompt_tokens);
+            assert!((2..=64).contains(&r.max_new), "output {}", r.max_new);
+            hit_prompt_cap |= r.prompt_tokens == 1024;
+        }
+        assert!(hit_prompt_cap, "sigma=3 must actually exercise the cap");
+    }
+
+    #[test]
+    fn synthesize_arrivals_monotone_for_both_models() {
+        let models =
+            [ArrivalModel::Poisson { rps: 40.0 }, ArrivalModel::Bursty { rps: 40.0, burst: 8.0 }];
+        for arrivals in models {
+            let cfg = TrafficConfig { n_requests: 200, arrivals, ..TrafficConfig::default() };
+            let tr = synthesize(&cfg);
+            for w in tr.windows(2) {
+                assert!(w[0].at <= w[1].at);
+            }
+        }
+    }
+
+    #[test]
+    fn fanout_and_tenants_come_from_the_config_tables() {
+        let cfg = TrafficConfig {
+            n_requests: 300,
+            fanout_weights: vec![(2, 1.0), (8, 1.0)],
+            tenants: vec![
+                TenantClass { weight: 1.0, deadline_ms: None },
+                TenantClass { weight: 1.0, deadline_ms: Some(50) },
+            ],
+            ..TrafficConfig::default()
+        };
+        let tr = synthesize(&cfg);
+        let mut saw = [false; 2];
+        for r in &tr {
+            assert!(r.fanout == 2 || r.fanout == 8, "fanout {}", r.fanout);
+            assert!(r.tenant < 2);
+            saw[r.tenant] = true;
+            // deadline rides with the tenant class
+            assert_eq!(r.deadline_ms, cfg.tenants[r.tenant].deadline_ms);
+        }
+        assert!(saw[0] && saw[1], "equal weights must hit both classes");
+    }
+
+    #[test]
+    fn empty_tables_degenerate_to_single_class() {
+        let cfg = TrafficConfig {
+            n_requests: 20,
+            fanout_weights: vec![],
+            tenants: vec![],
+            ..TrafficConfig::default()
+        };
+        for r in synthesize(&cfg) {
+            assert_eq!(r.fanout, 1);
+            assert_eq!(r.tenant, 0);
+            assert_eq!(r.deadline_ms, None);
+        }
     }
 }

@@ -1,9 +1,10 @@
 //! Chaos suite: drives the full coordinator (synthetic backend, no
 //! artifacts) through randomized request mixes — prefills, fan-out
-//! generations, shared and partially-shared prefixes, speculative
-//! decode, tiny deadlines, abandoned clients — under a seeded
-//! [`FaultPlan`] injecting KV-allocation failures, engine errors,
-//! decode-step panics and worker stalls. Invariants checked:
+//! generations over multi-chunk prompt ingests, shared and
+//! partially-shared prefixes, speculative decode, tiny deadlines,
+//! abandoned clients — under a seeded [`FaultPlan`] injecting
+//! KV-allocation failures, engine errors, decode-step panics,
+//! chunk-boundary ingest panics and worker stalls. Invariants checked:
 //!
 //! * every submitted request reaches exactly one terminal outcome
 //!   (success, typed shed, typed error, or typed partial) — nothing
@@ -42,6 +43,7 @@ fn default_plan(seed: u64) -> FaultPlan {
         .with_rate(FaultPoint::EngineExec, 0.06)
         .with_rate(FaultPoint::DecodeStep, 0.05)
         .with_rate(FaultPoint::WorkerStall, 0.05)
+        .with_rate(FaultPoint::IngestChunk, 0.06)
         .with_stall(Duration::from_micros(200))
 }
 
@@ -52,6 +54,10 @@ fn chaos_coordinator(plan: &Arc<FaultPlan>) -> Coordinator {
         CoordinatorConfig {
             workers: 4,
             kv_pages: 256,
+            // small chunks so the wave's prompt bases span several
+            // ingest chunks — chunk-boundary faults, sheds and cancels
+            // all get real boundaries to land on
+            chunk_tokens: 48,
             admission: AdmissionConfig {
                 max_tokens: 16 * 1024,
                 max_requests: 64,
@@ -85,9 +91,11 @@ fn one_wave(
     outcomes: &mut Outcomes,
 ) -> (Vec<mpsc::Receiver<anyhow::Result<PrefillResponse>>>, Vec<GenerateTicket>) {
     // shared prompt bases: reused across the wave so holder reuse,
-    // radix partial hits (base + divergent suffix) and refills all fire
+    // radix partial hits (base + divergent suffix) and refills all
+    // fire; long enough (96/136/176 tokens) that every fill spans
+    // several 48-token ingest chunks
     let bases: Vec<Vec<i32>> = (0..3)
-        .map(|b| (0..24 + 8 * b).map(|i| 16 + ((i + 5 * b) % 64) as i32).collect())
+        .map(|b| (0..96 + 40 * b).map(|i| 16 + ((i + 5 * b) % 64) as i32).collect())
         .collect();
     let mut prefill_rxs = Vec::new();
     let mut tickets = Vec::new();
@@ -313,4 +321,88 @@ fn chaos_every_request_terminal_and_everything_balances() {
             }
         }
     }
+}
+
+/// Chunk-boundary chaos: long prompts ingested in 48-token chunks under
+/// a plan that panics ingest chunks outright, plus KV-allocation
+/// failures, stalls, tight deadlines and client cancellations landing
+/// mid-ingest. Every branch must reach a typed terminal outcome, the
+/// injected chunk panics must be isolated (not aborts), and after a
+/// full drain holders, pages and admission must balance back to zero.
+#[test]
+fn chunked_ingest_faults_and_cancels_unwind_at_chunk_boundaries() {
+    let plan = Arc::new(
+        FaultPlan::new(0x1A67)
+            .with_rate(FaultPoint::IngestChunk, 0.25)
+            .with_rate(FaultPoint::KvAlloc, 0.05)
+            .with_rate(FaultPoint::WorkerStall, 0.10)
+            .with_stall(Duration::from_micros(200)),
+    );
+    let coord = chaos_coordinator(&plan);
+    let kv = Arc::clone(coord.shared_kv());
+    let admission = Arc::clone(coord.admission());
+    let metrics = Arc::clone(&coord.metrics);
+    let mut rng = Rng::new(0xFEED);
+    let (mut terminal, mut cancelled, mut shed) = (0usize, 0usize, 0usize);
+    // bounded extra waves until an ingest-chunk fault demonstrably fired
+    // and at least one cancellation landed mid-ingest
+    for wave in 0..8usize {
+        let mut tickets = Vec::new();
+        for i in 0..16usize {
+            // 2-6 ingest chunks at chunk_tokens = 48
+            let n = 96 + rng.below(200) as usize;
+            let prompt: Vec<i32> =
+                (0..n).map(|j| 16 + ((wave + i * 3 + j) % 64) as i32).collect();
+            let deadline = (rng.below(4) == 0)
+                .then(|| Instant::now() + Duration::from_micros(500 + rng.below(4000)));
+            match coord.submit_generate_tickets(
+                prompt,
+                1 + rng.below(8) as usize,
+                DecodePolicy::default(),
+                1 + rng.below(3) as usize,
+                deadline,
+            ) {
+                Ok(ts) => {
+                    for t in ts {
+                        if rng.below(4) == 0 {
+                            // client walks away mid-ingest; the next
+                            // chunk boundary must shed the whole group
+                            t.cancel_handle().cancel();
+                            cancelled += 1;
+                        }
+                        tickets.push(t);
+                    }
+                }
+                Err(_) => shed += 1,
+            }
+        }
+        for mut t in tickets {
+            match t.recv_timeout(TERMINAL) {
+                Ok(_) => terminal += 1,
+                Err(e) if e.to_string().contains("timed out") => {
+                    panic!("chunked-ingest branch never reached a terminal outcome")
+                }
+                Err(_) => terminal += 1,
+            }
+        }
+        if wave >= 1 && cancelled >= 1 && plan.injected(FaultPoint::IngestChunk) >= 1 {
+            break;
+        }
+    }
+    assert!(terminal > 0, "the run exercised nothing (shed_at_submit={shed})");
+    assert!(
+        plan.injected(FaultPoint::IngestChunk) >= 1,
+        "no ingest-chunk fault fired — raise the rate or wave count"
+    );
+    assert!(cancelled >= 1, "no cancellation landed mid-ingest");
+    assert!(
+        metrics.worker_panics.load(Ordering::Relaxed) >= 1,
+        "an injected chunk panic was not isolated"
+    );
+    drop(coord);
+    assert_eq!(admission.outstanding(), (0, 0), "admission counters leaked");
+    let (used, _, _) = kv.occupancy();
+    assert_eq!(used, 0, "KV pages leaked");
+    assert_eq!(kv.pages_resident(), 0, "KV slabs leaked");
+    assert!(admission.outstanding_work_ns() < 1.0, "admission work estimate leaked");
 }
