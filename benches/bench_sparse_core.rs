@@ -13,9 +13,11 @@
 //!   cargo bench --bench bench_sparse_core -- --threads 1  # serial core
 
 use stem::sparse::schedule::TpdConfig;
+use stem::sparse::simd::{arm_label, SimdArm};
 use stem::sparse::{
-    antidiag_scores, block_sparse_attention, block_sparse_attention_reference, dense_attention,
-    oam_scores, select_stem, select_stem_reference, Tensor,
+    antidiag_scores, block_sparse_attention, block_sparse_attention_reference,
+    block_sparse_attention_with, dense_attention, dense_attention_with, oam_scores,
+    oam_scores_with, select_stem, select_stem_reference, Tensor,
 };
 use stem::util::bench::{black_box, Bencher, Stats};
 use stem::util::cli::Args;
@@ -118,6 +120,63 @@ fn main() {
         }
     }
 
+    // --- simd: explicit-arm A/B over the vectorized prefill kernels -------
+    // fixed inputs and one shared selection per stage, so the two arms
+    // differ only in lane math; the CI bench-smoke gate reads these rows
+    // and requires speedup >= 1.0 (target: >= 2x on the fused kernel at
+    // n=4096, single thread)
+    let simd_n = if quick { 512usize } else { 4096 };
+    // (stage, n, scalar_ns, wide_ns)
+    let mut simd_rows: Vec<(&'static str, usize, f64, f64)> = vec![];
+    {
+        let mut rng = Rng::new(5);
+        let q = Tensor::randn(&[h, simd_n, dh], &mut rng);
+        let k = Tensor::randn(&[hk, simd_n, dh], &mut rng);
+        let v = Tensor::randn(&[hk, simd_n, dh], &mut rng);
+        let nblk = (simd_n / block) as f64;
+        let cfg = TpdConfig { k_start: 0.2 * nblk, mu: 0.7, ..Default::default() };
+        let sel = select_stem(&q, &k, &v, block, stride, &cfg, 0.2);
+
+        let sc = bencher.run(&format!("simd=scalar block_sparse_attention n={simd_n}"), || {
+            black_box(block_sparse_attention_with(SimdArm::Scalar, &q, &k, &v, &sel, block));
+        });
+        sc.print();
+        let wi = bencher.run(&format!("simd=wide block_sparse_attention n={simd_n}"), || {
+            black_box(block_sparse_attention_with(SimdArm::Wide, &q, &k, &v, &sel, block));
+        });
+        wi.print();
+        simd_rows.push(("block_sparse_attention", simd_n, sc.median_ns, wi.median_ns));
+
+        let sc = bencher.run(&format!("simd=scalar oam_scores n={simd_n}"), || {
+            black_box(oam_scores_with(SimdArm::Scalar, &q, &k, &v, block, stride, 0.2));
+        });
+        sc.print();
+        let wi = bencher.run(&format!("simd=wide oam_scores n={simd_n}"), || {
+            black_box(oam_scores_with(SimdArm::Wide, &q, &k, &v, block, stride, 0.2));
+        });
+        wi.print();
+        simd_rows.push(("oam_scores", simd_n, sc.median_ns, wi.median_ns));
+
+        // dense is O(N²·dh): cap its size so the A/B stays cheap
+        let dn = if quick { 256usize } else { 1024 };
+        let mut rng = Rng::new(6);
+        let qd = Tensor::randn(&[h, dn, dh], &mut rng);
+        let kd = Tensor::randn(&[hk, dn, dh], &mut rng);
+        let vd = Tensor::randn(&[hk, dn, dh], &mut rng);
+        let sc = bencher.run(&format!("simd=scalar dense_attention n={dn}"), || {
+            black_box(dense_attention_with(SimdArm::Scalar, &qd, &kd, &vd));
+        });
+        sc.print();
+        let wi = bencher.run(&format!("simd=wide dense_attention n={dn}"), || {
+            black_box(dense_attention_with(SimdArm::Wide, &qd, &kd, &vd));
+        });
+        wi.print();
+        simd_rows.push(("dense_attention", dn, sc.median_ns, wi.median_ns));
+    }
+    for &(stage, n, sc, wi) in &simd_rows {
+        println!("  -> simd {stage} n={n}: {:.2}x ({})", sc / wi, arm_label(SimdArm::Wide));
+    }
+
     let out = Json::obj(vec![
         ("bench", Json::Str("bench_sparse_core".into())),
         ("threads", Json::Num(threads as f64)),
@@ -146,6 +205,30 @@ fn main() {
                     })
                     .collect(),
             ),
+        ),
+        (
+            "simd",
+            Json::obj(vec![
+                ("dispatch", Json::Str(arm_label(SimdArm::Wide).into())),
+                ("target_speedup", Json::Num(2.0)),
+                (
+                    "rows",
+                    Json::Arr(
+                        simd_rows
+                            .iter()
+                            .map(|&(stage, n, sc, wi)| {
+                                Json::obj(vec![
+                                    ("stage", Json::Str(stage.into())),
+                                    ("n", Json::Num(n as f64)),
+                                    ("scalar_ns", Json::Num(sc)),
+                                    ("wide_ns", Json::Num(wi)),
+                                    ("speedup", Json::Num(sc / wi)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
         ),
     ]);
     let path = "BENCH_sparse_core.json";

@@ -121,7 +121,8 @@ impl TinyLm {
     }
 
     fn matvec(w: &Tensor, x: &[f32]) -> Vec<f32> {
-        use crate::sparse::tensor::dot;
+        use crate::sparse::simd;
+        let arm = simd::active(); // resolved once per projection, not per row
         let (out, dm) = (w.shape[0], w.shape[1]);
         // fan output-row chunks over the global pool for wide
         // projections: each output element is one independent dot, so the
@@ -130,12 +131,14 @@ impl TinyLm {
         const CHUNK: usize = 64;
         let pool = crate::util::threadpool::global();
         if out < 2 * CHUNK || pool.workers() == 1 {
-            return (0..out).map(|o| dot(&w.data[o * dm..(o + 1) * dm], x)).collect();
+            return (0..out).map(|o| simd::dot(arm, &w.data[o * dm..(o + 1) * dm], x)).collect();
         }
         let chunks = out.div_ceil(CHUNK);
         let parts = crate::util::threadpool::scope_parallel_borrowed(pool, chunks, |c| {
             let (lo, hi) = (c * CHUNK, ((c + 1) * CHUNK).min(out));
-            (lo..hi).map(|o| dot(&w.data[o * dm..(o + 1) * dm], x)).collect::<Vec<f32>>()
+            (lo..hi)
+                .map(|o| simd::dot(arm, &w.data[o * dm..(o + 1) * dm], x))
+                .collect::<Vec<f32>>()
         });
         let mut y = Vec::with_capacity(out);
         for p in parts {

@@ -74,6 +74,9 @@ flags: --artifacts DIR  --workers N  --threads N  --limit N  --quiet
        --metrics-out FILE  (serve: write the structured metrics snapshot
        as JSON to FILE and Prometheus text to FILE.prom, every
        --metrics-interval-ms (default 1000) and once more at shutdown)
+       --simd auto|scalar|wide  (pin the sparse-kernel SIMD dispatch arm;
+       STEM_SIMD does the same for non-CLI entry points; default auto =
+       widest supported lanes, with a guaranteed scalar fallback)
        (--threads / STEM_THREADS size the pure-rust sparse-core pool;
        STEM_FAULTS=seed=S,kv=R,exec=R,step=R,stall=R,stall_us=U,ingest=R
        arms deterministic fault injection in the coordinator for chaos
@@ -88,6 +91,11 @@ fn main() {
     // size the sparse-core pool before any kernel runs (--threads /
     // STEM_THREADS / available cores)
     args.init_thread_pool();
+    // pin the SIMD arm before any kernel runs (--simd / STEM_SIMD)
+    if let Err(e) = args.init_simd() {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
     let code = match run(&args) {
         Ok(()) => 0,
         Err(e) => {

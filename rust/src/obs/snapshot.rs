@@ -210,6 +210,11 @@ pub struct MetricsSnapshot {
     /// (`"tiny"` / `"engine"`), set post-collect by the coordinator;
     /// `None` when snapshotting a bare [`Metrics`] block.
     pub decode_backend: Option<&'static str>,
+    /// Resolved SIMD dispatch arm of the sparse kernels (`"scalar"` /
+    /// `"wide-avx2"` / `"wide-portable"`), read from the process-global
+    /// dispatch state at collect time so a wrong-arm regression is
+    /// visible from metrics alone.
+    pub simd_dispatch: &'static str,
 }
 
 impl MetricsSnapshot {
@@ -268,6 +273,7 @@ impl MetricsSnapshot {
             kv,
             trace,
             decode_backend: None,
+            simd_dispatch: crate::sparse::simd::dispatch_label(),
         }
     }
 
@@ -341,6 +347,7 @@ impl MetricsSnapshot {
                     ("mean_budget_fraction", Json::Num(self.mean_decode_budget)),
                 ]),
             ),
+            ("simd", Json::obj(vec![("dispatch", Json::str(self.simd_dispatch))])),
             (
                 "spec",
                 Json::obj(vec![
@@ -480,6 +487,10 @@ impl MetricsSnapshot {
                 "# TYPE stem_decode_backend_info gauge\nstem_decode_backend_info{{backend=\"{b}\"}} 1\n"
             ));
         }
+        let arm = self.simd_dispatch;
+        s.push_str(&format!(
+            "# TYPE stem_simd_dispatch_info gauge\nstem_simd_dispatch_info{{arm=\"{arm}\"}} 1\n"
+        ));
 
         let mut histo = |name: &str, h: &HistoSnapshot| {
             s.push_str(&format!("# TYPE {name} histogram\n"));
@@ -694,6 +705,22 @@ mod tests {
         assert!(snap
             .to_prometheus()
             .contains("stem_decode_backend_info{backend=\"engine\"} 1"));
+    }
+
+    #[test]
+    fn simd_dispatch_label_flows_to_json_and_prometheus() {
+        let m = busy_metrics();
+        let snap = MetricsSnapshot::collect(&m, None, Duration::from_secs(1));
+        // collect reads the process-global dispatch state; whatever arm
+        // is active, the label must be one of the stable three and must
+        // flow through both exports verbatim
+        let arm = snap.simd_dispatch;
+        assert!(["scalar", "wide-avx2", "wide-portable"].contains(&arm), "{arm}");
+        let j = Json::parse(&snap.to_json().to_string()).unwrap();
+        assert_eq!(j.path("simd.dispatch").unwrap().as_str(), Some(arm));
+        assert!(snap
+            .to_prometheus()
+            .contains(&format!("stem_simd_dispatch_info{{arm=\"{arm}\"}} 1")));
     }
 
     /// Satellite: the `degradation_level` / `degradation_transitions`

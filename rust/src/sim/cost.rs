@@ -173,9 +173,14 @@ pub fn method_cost(g: &Geometry, n: usize, m: MethodCost) -> CostBreakdown {
 /// K/V-slab load per `block×block` tile instead of one gather per pair,
 /// and selection dropped from a full per-row sort to an O(width·log k)
 /// bounded heap, so the per-pair and per-candidate constants are ~2–3×
-/// below the seed scalar path. Refresh these against
-/// `BENCH_sparse_core.json` (emitted by `benches/bench_sparse_core.rs`)
-/// whenever the kernels change.
+/// below the seed scalar path. Re-fit again for the SIMD layer
+/// (`sparse::simd`): the pair/metric constants assume the Wide dispatch
+/// arm (the runtime default) — `STEM_SIMD=scalar` makes these estimates
+/// optimistic by the `simd` speedup row. Refresh against the explicit
+/// `simd` section of `BENCH_sparse_core.json` (scalar_ns/wide_ns per
+/// stage, emitted by `benches/bench_sparse_core.rs`) whenever the
+/// kernels change: divide the measured wide-arm ns by the pair count the
+/// estimator charges for the same shape.
 #[derive(Debug, Clone, Copy)]
 pub struct RustCoreCalibration {
     /// ns per computed (query, key) pair per head-dim unit, single thread,
@@ -191,8 +196,12 @@ pub struct RustCoreCalibration {
 
 /// Current prefill-core calibration (re-fit from `BENCH_sparse_core.json`).
 pub const RUST_CORE: RustCoreCalibration = RustCoreCalibration {
-    ns_per_pair_dh: 0.11,
-    ns_per_metric_flop: 0.35,
+    // 8-lane fma dot/axpy in the fused tile walk: ~2x the scalar arm's
+    // 0.11 on the n=4096 `simd` bench row
+    ns_per_pair_dh: 0.055,
+    // antidiag sampling vectorizes its dots; pooling stays scalar
+    ns_per_metric_flop: 0.25,
+    // bounded-heap offers are branchy control flow: no lane win
     ns_per_select_candidate: 2.0,
     parallel_efficiency: 0.80,
 };
@@ -201,8 +210,10 @@ pub const RUST_CORE: RustCoreCalibration = RustCoreCalibration {
 /// kernels + the reference-LM projections), used by the coordinator to
 /// budget `submit_generate` admissions. Head-level fan-out is much
 /// shallower than prefill's (head, query-block) grid, so the parallel
-/// efficiency is lower. Refresh against `BENCH_decode.json` (emitted by
-/// `benches/bench_decode.rs`) whenever the decode kernels change.
+/// efficiency is lower. Like [`RUST_CORE`], these assume the Wide SIMD
+/// dispatch arm; refresh against the `simd` section of
+/// `BENCH_decode.json` (emitted by `benches/bench_decode.rs`) whenever
+/// the decode kernels change.
 #[derive(Debug, Clone, Copy)]
 pub struct RustDecodeCalibration {
     /// ns per attended (key, query) pair per head-dim unit in the
@@ -222,10 +233,13 @@ pub struct RustDecodeCalibration {
 /// These price the `tiny` backend's per-step matvec glue; the `engine`
 /// backend's module-execution surcharge lives in [`ENGINE_DECODE`].
 pub const DECODE_CORE: RustDecodeCalibration = RustDecodeCalibration {
-    ns_per_pair_dh: 0.15,
-    ns_per_metric_sample_dh: 0.25,
+    // single-query online softmax through the lane dot/axpy: ~1.5x the
+    // scalar arm's 0.15 on the `simd` decode_attention bench row
+    ns_per_pair_dh: 0.10,
+    ns_per_metric_sample_dh: 0.18,
     ns_per_select_candidate: 3.0,
-    ns_per_proj_mac: 0.6,
+    // TinyLm::matvec rows ride the same lane dot
+    ns_per_proj_mac: 0.4,
     parallel_efficiency: 0.50,
 };
 

@@ -17,6 +17,16 @@
 //! goldens). Stem rows are emitted sorted ascending by block id so the
 //! execution kernel walks K/V monotonically.
 //!
+//! # SIMD dispatch
+//!
+//! Every vectorizable kernel comes in two forms: `kernel(...)` resolves
+//! the process-wide [`SimdArm`] once via [`simd::active`] and
+//! `kernel_with(arm, ...)` takes it explicitly (what benches and the
+//! differential suite use to force an arm). Inner loops route through
+//! [`super::simd`] — the scalar arm is bit-identical to the seed scalar
+//! loops, the wide arm matches it within 1e-5. The scalar `*_reference`
+//! oracles never dispatch: they call the seed loops directly.
+//!
 //! # Parallel decomposition
 //!
 //! Every stage fans independent `(head, query-block)` work items over the
@@ -92,7 +102,8 @@
 //!   pinned at 1e-5 by the verify property tests.
 
 use super::schedule::TpdConfig;
-use super::tensor::{axpy, dot, norm2, score_tile, score_tile_causal, Tensor};
+use super::simd::{self, SimdArm};
+use super::tensor::{axpy, dot, norm2, Tensor};
 use crate::util::threadpool;
 
 /// Masked-score sentinel: finite (unlike `f32::NEG_INFINITY`) so the
@@ -114,10 +125,12 @@ where
     }
 }
 
-/// One (head, query-block-row) of the dual-diagonal routing scores; kept
-/// bitwise-identical to the scalar loop so parallelism cannot move floats.
+/// One (head, query-block-row) of the dual-diagonal routing scores; on
+/// the scalar arm this is bitwise-identical to the seed scalar loop so
+/// parallelism cannot move floats.
 #[allow(clippy::too_many_arguments)]
 fn antidiag_row(
+    arm: SimdArm,
     q: &Tensor,
     k: &Tensor,
     hh: usize,
@@ -134,8 +147,8 @@ fn antidiag_row(
         let mut t = 0;
         while t < block {
             let qrow = q.row3(hh, i * block + t);
-            s += dot(qrow, k.row3(hkv, j * block + (block - 1 - t)));
-            s += dot(qrow, k.row3(hkv, j * block + t));
+            s += simd::dot(arm, qrow, k.row3(hkv, j * block + (block - 1 - t)));
+            s += simd::dot(arm, qrow, k.row3(hkv, j * block + t));
             t += stride;
         }
         *o = s * scale;
@@ -147,8 +160,20 @@ fn antidiag_row(
 /// relative offsets, diagonal samples cover the even band (pure
 /// anti-diagonal is blind to copy/induction edges at exact block
 /// multiples). q: [H, N, dh], k: [Hk, N, dh] -> [H, nq, nk] row-major.
-/// Parallel across (head, query-block-row) items.
+/// Parallel across (head, query-block-row) items. Dispatches on
+/// [`simd::active`]; see [`antidiag_scores_with`].
 pub fn antidiag_scores(q: &Tensor, k: &Tensor, block: usize, stride: usize) -> Tensor {
+    antidiag_scores_with(simd::active(), q, k, block, stride)
+}
+
+/// [`antidiag_scores`] with an explicit SIMD arm.
+pub fn antidiag_scores_with(
+    arm: SimdArm,
+    q: &Tensor,
+    k: &Tensor,
+    block: usize,
+    stride: usize,
+) -> Tensor {
     let (h, dh) = (q.shape[0], q.shape[2]);
     let hk = k.shape[0];
     let rep = h / hk;
@@ -157,7 +182,7 @@ pub fn antidiag_scores(q: &Tensor, k: &Tensor, block: usize, stride: usize) -> T
     let rows = parallel_items(h * nblk, |item| {
         let (hh, i) = (item / nblk, item % nblk);
         let mut row = vec![0.0f32; nblk];
-        antidiag_row(q, k, hh, hh / rep, i, nblk, block, stride, scale, &mut row);
+        antidiag_row(arm, q, k, hh, hh / rep, i, nblk, block, stride, scale, &mut row);
         row
     });
     let mut out = Tensor::zeros(&[h, nblk, nblk]);
@@ -189,7 +214,24 @@ pub fn value_block_logmag(v: &Tensor, block: usize) -> Tensor {
 /// Output-Aware Metric Eq. (7): routing + beta * max(0, logmag), causal.
 /// Only the causal triangle is computed (the strict upper triangle is
 /// NEG_INF by construction); parallel across (head, query-block-row).
+/// Dispatches on [`simd::active`]; see [`oam_scores_with`].
 pub fn oam_scores(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    block: usize,
+    stride: usize,
+    beta: f32,
+) -> Tensor {
+    oam_scores_with(simd::active(), q, k, v, block, stride, beta)
+}
+
+/// [`oam_scores`] with an explicit SIMD arm. The value-magnitude pooling
+/// ([`value_block_logmag`]) stays scalar on both arms — it is O(N·dh)
+/// against the routing scores' O(N²·dh/stride), and keeping it common
+/// means the arms differ only in dot-product reduction order.
+pub fn oam_scores_with(
+    arm: SimdArm,
     q: &Tensor,
     k: &Tensor,
     v: &Tensor,
@@ -207,7 +249,7 @@ pub fn oam_scores(
         let (hh, i) = (item / nblk, item % nblk);
         let hkv = hh / rep;
         let mut row = vec![NEG_INF; nblk];
-        antidiag_row(q, k, hh, hkv, i, i + 1, block, stride, scale, &mut row);
+        antidiag_row(arm, q, k, hh, hkv, i, i + 1, block, stride, scale, &mut row);
         for (j, o) in row.iter_mut().enumerate().take(i + 1) {
             *o += beta * mv.at3(hkv, j, 0).max(0.0);
         }
@@ -691,7 +733,13 @@ pub fn select_streaming(h: usize, nblk: usize, sink: usize, local: usize) -> Sel
 /// Exact dense causal attention (reference). q:[H,N,dh] k,v:[Hk,N,dh].
 /// Parallel across (head, query-row-chunk) items; per-row math is
 /// unchanged, so the result is identical at any thread count.
+/// Dispatches on [`simd::active`]; see [`dense_attention_with`].
 pub fn dense_attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+    dense_attention_with(simd::active(), q, k, v)
+}
+
+/// [`dense_attention`] with an explicit SIMD arm.
+pub fn dense_attention_with(arm: SimdArm, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
     let (h, n, dh) = (q.shape[0], q.shape[1], q.shape[2]);
     let hk = k.shape[0];
     let rep = h / hk;
@@ -709,7 +757,7 @@ pub fn dense_attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
             // running max initialized from the first computed score
             let mut m = f32::NEG_INFINITY;
             for j in 0..=i {
-                probs[j] = dot(qrow, k.row3(hkv, j)) * scale;
+                probs[j] = simd::dot(arm, qrow, k.row3(hkv, j)) * scale;
                 m = m.max(probs[j]);
             }
             let mut l = 0.0f32;
@@ -722,7 +770,7 @@ pub fn dense_attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
             }
             let orow = &mut out[(i - lo) * dh..(i - lo + 1) * dh];
             for j in 0..=i {
-                axpy(orow, probs[j] / l, v.row3(hkv, j));
+                simd::axpy(arm, orow, probs[j] / l, v.row3(hkv, j));
             }
         }
         out
@@ -747,7 +795,20 @@ pub fn dense_attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
 /// causal off-diagonal blocks skip masking entirely), and folds the tile
 /// into a per-row online softmax. Rows with no computable score (all
 /// selected blocks non-causal) yield zeros rather than NaN.
+/// Dispatches on [`simd::active`]; see [`block_sparse_attention_with`].
 pub fn block_sparse_attention(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    sel: &Selection,
+    block: usize,
+) -> Tensor {
+    block_sparse_attention_with(simd::active(), q, k, v, sel, block)
+}
+
+/// [`block_sparse_attention`] with an explicit SIMD arm.
+pub fn block_sparse_attention_with(
+    arm: SimdArm,
     q: &Tensor,
     k: &Tensor,
     v: &Tensor,
@@ -776,9 +837,9 @@ pub fn block_sparse_attention(
             let vs = v.block3(hkv, kb, block);
             let diag = kb == qb;
             if diag {
-                score_tile_causal(qs, ks, dh, block, scale, &mut tile);
+                simd::score_tile_causal(arm, qs, ks, dh, block, scale, &mut tile);
             } else {
-                score_tile(qs, ks, dh, block, scale, &mut tile);
+                simd::score_tile(arm, qs, ks, dh, block, scale, &mut tile);
             }
             for r in 0..block {
                 let nvalid = if diag { r + 1 } else { block };
@@ -795,15 +856,13 @@ pub fn block_sparse_attention(
                 if l[r] > 0.0 && new_m > m[r] {
                     let corr = (m[r] - new_m).exp();
                     l[r] *= corr;
-                    for a in arow.iter_mut() {
-                        *a *= corr;
-                    }
+                    simd::scale(arm, arow, corr);
                 }
                 m[r] = new_m;
                 for (t, &s) in trow.iter().enumerate() {
                     let p = (s - new_m).exp();
                     l[r] += p;
-                    axpy(arow, p, &vs[t * dh..(t + 1) * dh]);
+                    simd::axpy(arm, arow, p, &vs[t * dh..(t + 1) * dh]);
                 }
             }
         }
@@ -1024,7 +1083,19 @@ impl<K: KvBlocks> KvBlocks for KvPrefix<'_, K> {
 /// sample in the block (scaled) plus the `beta·max(0, log‖v‖)`
 /// value-magnitude term of Eq. (7) over the same samples. One row per
 /// query head; parallel across heads. q: `[H, dh]` -> `[H, n_blocks]`.
+/// Dispatches on [`simd::active`]; see [`decode_block_scores_with`].
 pub fn decode_block_scores(q: &Tensor, kv: &impl KvBlocks, stride: usize, beta: f32) -> Tensor {
+    decode_block_scores_with(simd::active(), q, kv, stride, beta)
+}
+
+/// [`decode_block_scores`] with an explicit SIMD arm.
+pub fn decode_block_scores_with(
+    arm: SimdArm,
+    q: &Tensor,
+    kv: &impl KvBlocks,
+    stride: usize,
+    beta: f32,
+) -> Tensor {
     let (h, dh) = (q.shape[0], q.shape[1]);
     let hk = kv.n_kv_heads();
     let rep = h / hk;
@@ -1043,11 +1114,11 @@ pub fn decode_block_scores(q: &Tensor, kv: &impl KvBlocks, stride: usize, beta: 
             let mut vmag = f32::MIN;
             let mut t = 0;
             while t < len {
-                let d = dot(qrow, &ks[t * dh..(t + 1) * dh]);
+                let d = simd::dot(arm, qrow, &ks[t * dh..(t + 1) * dh]);
                 if d > s {
                     s = d;
                 }
-                vmag = vmag.max((norm2(&vs[t * dh..(t + 1) * dh]) + 1e-12).ln());
+                vmag = vmag.max((simd::norm2(arm, &vs[t * dh..(t + 1) * dh]) + 1e-12).ln());
                 t += stride;
             }
             *o = s * scale + beta * vmag.max(0.0);
@@ -1138,50 +1209,40 @@ pub fn selection_score_mass(scores: &Tensor, sel: &Selection) -> f64 {
     sum / h as f64
 }
 
-/// One block's worth of the single-query online-softmax update: fold
-/// `len` cached tokens of a K/V slab into the running `(m, l, acc)`
-/// state. Every decode/verify kernel routes through this helper so the
-/// per-row floating-point operation sequence is *identical* across the
-/// single-query, dense-fast-path and batched-verify kernels — the
-/// speculative decode-equivalence guarantee depends on that, not on an
-/// epsilon.
-#[inline]
-#[allow(clippy::too_many_arguments)]
-fn online_softmax_block(
-    qrow: &[f32],
-    ks: &[f32],
-    vs: &[f32],
-    len: usize,
-    dh: usize,
-    scale: f32,
-    m: &mut f32,
-    l: &mut f32,
-    acc: &mut [f32],
-) {
-    for t in 0..len {
-        let s = dot(qrow, &ks[t * dh..(t + 1) * dh]) * scale;
-        if s > *m {
-            if *l > 0.0 {
-                let corr = (*m - s).exp();
-                *l *= corr;
-                for a in acc.iter_mut() {
-                    *a *= corr;
-                }
-            }
-            *m = s;
-        }
-        let p = (s - *m).exp();
-        *l += p;
-        axpy(acc, p, &vs[t * dh..(t + 1) * dh]);
-    }
-}
+// The shared single-query online-softmax block update lives in
+// [`simd::online_softmax_block`]: every decode/verify kernel routes
+// through it so the per-row floating-point operation sequence is
+// *identical* across the single-query, dense-fast-path and
+// batched-verify kernels within one arm — the speculative
+// decode-equivalence guarantee depends on that, not on an epsilon.
 
 /// Single-query block-sparse attention over cached K/V: one online-softmax
 /// pass per head over that head's selected blocks (decode-shaped
 /// [`Selection`], see [`select_decode`]), the last partial block handled
 /// by [`KvBlocks::block_len`]. Causality is structural — only cached
 /// tokens exist. Parallel across heads; returns `[H·dh]` row-major.
+/// Dispatches on [`simd::active`]; see [`sparse_decode_attention_with`].
 pub fn sparse_decode_attention(q: &Tensor, kv: &impl KvBlocks, sel: &Selection) -> Vec<f32> {
+    sparse_decode_attention_with(simd::active(), q, kv, sel)
+}
+
+/// [`sparse_decode_attention`] with an explicit SIMD arm.
+///
+/// Debug builds validate `sel` against the cached context first
+/// ([`Selection::validate_decode`]), so a malformed selection fails
+/// loudly instead of silently skipping or double-counting blocks; in
+/// release the kernel remains robust to out-of-range ids (an id beyond
+/// the cached context resolves to a zero-length block and is skipped).
+pub fn sparse_decode_attention_with(
+    arm: SimdArm,
+    q: &Tensor,
+    kv: &impl KvBlocks,
+    sel: &Selection,
+) -> Vec<f32> {
+    debug_assert_eq!(
+        sel.validate_decode(kv.n_blocks()).map_err(|e| format!("decode selection: {e}")),
+        Ok(()),
+    );
     let (h, dh) = (q.shape[0], q.shape[1]);
     let hk = kv.n_kv_heads();
     let rep = h / hk;
@@ -1200,7 +1261,7 @@ pub fn sparse_decode_attention(q: &Tensor, kv: &impl KvBlocks, sel: &Selection) 
             }
             let ks = kv.k_block(hkv, b);
             let vs = kv.v_block(hkv, b);
-            online_softmax_block(qrow, ks, vs, len, dh, scale, &mut m, &mut l, &mut acc);
+            simd::online_softmax_block(arm, qrow, ks, vs, len, dh, scale, &mut m, &mut l, &mut acc);
         }
         if l > 0.0 {
             let inv = 1.0 / l;
@@ -1223,8 +1284,14 @@ pub fn sparse_decode_attention(q: &Tensor, kv: &impl KvBlocks, sel: &Selection) 
 /// online-softmax update as [`sparse_decode_attention`] under a full
 /// selection (bit-identical output) without materializing a
 /// [`Selection`] or ranking anything. Parallel across heads; returns
-/// `[H·dh]` row-major.
+/// `[H·dh]` row-major. Dispatches on [`simd::active`]; see
+/// [`dense_decode_attention_with`].
 pub fn dense_decode_attention(q: &Tensor, kv: &impl KvBlocks) -> Vec<f32> {
+    dense_decode_attention_with(simd::active(), q, kv)
+}
+
+/// [`dense_decode_attention`] with an explicit SIMD arm.
+pub fn dense_decode_attention_with(arm: SimdArm, q: &Tensor, kv: &impl KvBlocks) -> Vec<f32> {
     let (h, dh) = (q.shape[0], q.shape[1]);
     let hk = kv.n_kv_heads();
     let rep = h / hk;
@@ -1243,7 +1310,7 @@ pub fn dense_decode_attention(q: &Tensor, kv: &impl KvBlocks) -> Vec<f32> {
             }
             let ks = kv.k_block(hkv, b);
             let vs = kv.v_block(hkv, b);
-            online_softmax_block(qrow, ks, vs, len, dh, scale, &mut m, &mut l, &mut acc);
+            simd::online_softmax_block(arm, qrow, ks, vs, len, dh, scale, &mut m, &mut l, &mut acc);
         }
         if l > 0.0 {
             let inv = 1.0 / l;
@@ -1278,7 +1345,25 @@ pub fn dense_decode_attention(q: &Tensor, kv: &impl KvBlocks) -> Vec<f32> {
 /// bit-identical to a sequential [`sparse_decode_attention`] pass over
 /// the same selection at the same width. Parallel across heads; returns
 /// `[G·H·dh]` position-major (`out[g·H·dh..]` is position `g`'s output).
+/// Dispatches on [`simd::active`]; see [`sparse_verify_attention_with`].
 pub fn sparse_verify_attention(
+    q: &Tensor,
+    kv: &impl KvBlocks,
+    sel: &Selection,
+    base_tokens: usize,
+) -> Vec<f32> {
+    sparse_verify_attention_with(simd::active(), q, kv, sel, base_tokens)
+}
+
+/// [`sparse_verify_attention`] with an explicit SIMD arm.
+///
+/// Debug builds validate `sel` first ([`Selection::validate_verify`]):
+/// the per-row cursor walk assumes strictly ascending ids, and a
+/// malformed row would otherwise silently skip blocks instead of
+/// failing — release builds remain memory-safe either way (out-of-range
+/// ids clamp to zero-length blocks before any slab is fetched).
+pub fn sparse_verify_attention_with(
+    arm: SimdArm,
     q: &Tensor,
     kv: &impl KvBlocks,
     sel: &Selection,
@@ -1290,6 +1375,10 @@ pub fn sparse_verify_attention(
     debug_assert!(
         base_tokens >= 1 && base_tokens + g_rows - 1 <= kv.n_tokens(),
         "verify positions must fit the cached context"
+    );
+    debug_assert_eq!(
+        sel.validate_verify(kv.n_blocks()).map_err(|e| format!("verify selection: {e}")),
+        Ok(()),
     );
     let hk = kv.n_kv_heads();
     let rep = h / hk;
@@ -1322,7 +1411,8 @@ pub fn sparse_verify_attention(
                 }
                 let (ks, vs) =
                     *slabs.get_or_insert_with(|| (kv.k_block(hkv, b), kv.v_block(hkv, b)));
-                online_softmax_block(
+                simd::online_softmax_block(
+                    arm,
                     q.row3(g, hh),
                     ks,
                     vs,

@@ -5,15 +5,20 @@
 
 pub mod attention;
 pub mod schedule;
+pub mod simd;
 pub mod tensor;
 
 pub use attention::{
-    antidiag_scores, block_sparse_attention, block_sparse_attention_reference,
-    decode_block_scores, dense_attention, dense_decode_attention,
-    dense_decode_attention_reference, dense_verify_attention_reference, oam_scores,
-    score_mass_row, select_decode, select_stem, select_stem_reference, select_streaming,
-    selection_score_mass, sparse_decode_attention, sparse_verify_attention, value_block_logmag,
-    KvBlocks, KvPrefix, Selection, SelectionBuilder, TensorKv,
+    antidiag_scores, antidiag_scores_with, block_sparse_attention,
+    block_sparse_attention_reference, block_sparse_attention_with, decode_block_scores,
+    decode_block_scores_with, dense_attention, dense_attention_with, dense_decode_attention,
+    dense_decode_attention_reference, dense_decode_attention_with,
+    dense_verify_attention_reference, oam_scores, oam_scores_with, score_mass_row, select_decode,
+    select_stem, select_stem_reference, select_streaming, selection_score_mass,
+    sparse_decode_attention, sparse_decode_attention_with, sparse_verify_attention,
+    sparse_verify_attention_with, value_block_logmag, KvBlocks, KvPrefix, Selection,
+    SelectionBuilder, TensorKv,
 };
 pub use schedule::TpdConfig;
+pub use simd::SimdArm;
 pub use tensor::Tensor;

@@ -1,0 +1,608 @@
+//! Runtime-dispatched SIMD inner loops for the sparse-attention core.
+//!
+//! Every hot kernel in this crate bottoms out in one of three inner-loop
+//! families: score dots (`q·k` over `dh` lanes), online-softmax
+//! accumulation (`acc += p·v` plus the rescale correction), and the
+//! `TinyLm` projection matvec (one dot per output row). This module owns
+//! vectorized implementations of exactly those primitives behind an
+//! explicit [`SimdArm`] parameter, so the dispatch decision is made once
+//! per kernel invocation (never per element) and every call site can be
+//! forced onto either arm for differential testing.
+//!
+//! # Arms
+//!
+//! * [`SimdArm::Scalar`] — delegates to the seed scalar loops in
+//!   [`super::tensor`] *unchanged*. This arm is the property-pinned
+//!   oracle: its floating-point operation sequence is bit-identical to
+//!   the pre-SIMD crate, so every existing golden/property suite keeps
+//!   its meaning.
+//! * [`SimdArm::Wide`] — 8-lane `f32` loops. On `x86_64` with AVX2+FMA
+//!   detected at runtime the loops run as `std::arch` intrinsics
+//!   (unaligned 256-bit loads, fused multiply-add, four independent
+//!   accumulators); everywhere else a portable unrolled-lane fallback
+//!   with the same lane structure runs, which LLVM autovectorizes to
+//!   whatever the target has. The wide arm matches the scalar arm within
+//!   1e-5 (different reduction order and FMA rounding), and is
+//!   internally deterministic: one process always takes the same code
+//!   path, so the byte-exact speculative-decode equivalence guarantee
+//!   holds *within* an arm.
+//!
+//! # Dispatch
+//!
+//! [`active`] resolves the process-wide arm: a programmatic override
+//! ([`set_override`], used by benches and the `--simd` CLI flag) wins,
+//! else the `STEM_SIMD` environment variable (`auto` / `scalar` /
+//! `wide`, read once), else `auto` = wide. [`dispatch_label`] exposes
+//! the resolved decision (including whether the AVX2 or the portable
+//! wide path is live) to the obs snapshot as the `simd_dispatch` label
+//! and the `stem_simd_dispatch_info` Prometheus series.
+//!
+//! # Data-layout contract
+//!
+//! All primitives take contiguous `&[f32]` slices: K/V slabs are
+//! `[len, dh]` row-major (exactly what [`super::attention::KvBlocks`]
+//! hands out), score tiles are `[block, block]` row-major. No alignment
+//! is required — the intrinsics use unaligned loads, which cost nothing
+//! on post-Nehalem cores — but rows must be contiguous; the scalar tail
+//! (`len % 8` lanes) is handled inside each primitive.
+
+use super::tensor;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Which inner-loop implementation the dispatched kernels execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdArm {
+    /// The seed scalar loops (bit-identical to the pre-SIMD crate); the
+    /// property-pinned oracle arm.
+    Scalar,
+    /// 8-lane vector loops: AVX2+FMA intrinsics when the CPU has them,
+    /// otherwise the portable unrolled-lane fallback.
+    Wide,
+}
+
+/// Both arms, in oracle-first order — the iteration fixture for tests
+/// that must cover every dispatch target.
+pub const ARMS: [SimdArm; 2] = [SimdArm::Scalar, SimdArm::Wide];
+
+// 0 = no override, 1 = scalar, 2 = wide.
+static OVERRIDE: AtomicU8 = AtomicU8::new(0);
+static ENV_CHOICE: OnceLock<SimdArm> = OnceLock::new();
+static HAVE_AVX2: OnceLock<bool> = OnceLock::new();
+
+/// Whether the wide arm runs as AVX2+FMA intrinsics on this machine
+/// (false = portable fallback). Detected once, then cached.
+pub fn wide_is_avx2() -> bool {
+    *HAVE_AVX2.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
+    })
+}
+
+/// Parse a `STEM_SIMD` / `--simd` value. `Ok(None)` means `auto`
+/// (clear any override and fall back to env/default resolution).
+pub fn parse(s: &str) -> Result<Option<SimdArm>, String> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "auto" => Ok(None),
+        "scalar" => Ok(Some(SimdArm::Scalar)),
+        "wide" => Ok(Some(SimdArm::Wide)),
+        other => Err(format!("unknown simd arm {other:?} (expected auto|scalar|wide)")),
+    }
+}
+
+/// Force the dispatched kernels onto one arm (`None` restores env/auto
+/// resolution). Process-global; meant for benches, the `--simd` CLI
+/// flag, and the differential suite's dispatch test — not for flipping
+/// mid-flight while kernels run on other threads.
+pub fn set_override(arm: Option<SimdArm>) {
+    let v = match arm {
+        None => 0,
+        Some(SimdArm::Scalar) => 1,
+        Some(SimdArm::Wide) => 2,
+    };
+    OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+fn env_choice() -> SimdArm {
+    *ENV_CHOICE.get_or_init(|| {
+        match std::env::var("STEM_SIMD").ok().as_deref().map(parse) {
+            Some(Ok(Some(arm))) => arm,
+            Some(Err(e)) => {
+                eprintln!("STEM_SIMD ignored: {e}");
+                SimdArm::Wide
+            }
+            // unset or explicit auto: the wide arm always works (the
+            // portable fallback needs no CPU features), so auto = wide
+            _ => SimdArm::Wide,
+        }
+    })
+}
+
+/// The arm the dispatched kernel wrappers execute right now:
+/// [`set_override`] wins, else `STEM_SIMD` (`auto`/`scalar`/`wide`,
+/// read once), else wide.
+pub fn active() -> SimdArm {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        1 => SimdArm::Scalar,
+        2 => SimdArm::Wide,
+        _ => env_choice(),
+    }
+}
+
+/// Stable label of the live dispatch decision for observability:
+/// `"scalar"`, `"wide-avx2"` or `"wide-portable"`.
+pub fn dispatch_label() -> &'static str {
+    arm_label(active())
+}
+
+/// Stable label of a specific arm (see [`dispatch_label`]).
+pub fn arm_label(arm: SimdArm) -> &'static str {
+    match arm {
+        SimdArm::Scalar => "scalar",
+        SimdArm::Wide => {
+            if wide_is_avx2() {
+                "wide-avx2"
+            } else {
+                "wide-portable"
+            }
+        }
+    }
+}
+
+const LANES: usize = 8;
+
+/// Dot product of two equal-length slices on the chosen arm.
+#[inline]
+pub fn dot(arm: SimdArm, a: &[f32], b: &[f32]) -> f32 {
+    match arm {
+        SimdArm::Scalar => tensor::dot(a, b),
+        SimdArm::Wide => {
+            #[cfg(target_arch = "x86_64")]
+            if wide_is_avx2() {
+                // SAFETY: avx2+fma presence just checked.
+                return unsafe { avx2::dot(a, b) };
+            }
+            dot_lanes(a, b)
+        }
+    }
+}
+
+/// `acc += alpha · x`, elementwise, on the chosen arm.
+#[inline]
+pub fn axpy(arm: SimdArm, acc: &mut [f32], alpha: f32, x: &[f32]) {
+    match arm {
+        SimdArm::Scalar => tensor::axpy(acc, alpha, x),
+        SimdArm::Wide => {
+            #[cfg(target_arch = "x86_64")]
+            if wide_is_avx2() {
+                // SAFETY: avx2+fma presence just checked.
+                unsafe { avx2::axpy(acc, alpha, x) };
+                return;
+            }
+            for (a, b) in acc.iter_mut().zip(x) {
+                *a += alpha * b;
+            }
+        }
+    }
+}
+
+/// `xs *= c`, elementwise, on the chosen arm — the online-softmax
+/// rescale correction.
+#[inline]
+pub fn scale(arm: SimdArm, xs: &mut [f32], c: f32) {
+    match arm {
+        SimdArm::Scalar => {
+            for x in xs.iter_mut() {
+                *x *= c;
+            }
+        }
+        SimdArm::Wide => {
+            #[cfg(target_arch = "x86_64")]
+            if wide_is_avx2() {
+                // SAFETY: avx2+fma presence just checked.
+                unsafe { avx2::scale(xs, c) };
+                return;
+            }
+            for x in xs.iter_mut() {
+                *x *= c;
+            }
+        }
+    }
+}
+
+/// Euclidean norm of a slice on the chosen arm.
+#[inline]
+pub fn norm2(arm: SimdArm, x: &[f32]) -> f32 {
+    match arm {
+        SimdArm::Scalar => tensor::norm2(x),
+        SimdArm::Wide => dot(SimdArm::Wide, x, x).sqrt(),
+    }
+}
+
+/// Portable 8-lane dot: per-lane partial sums accumulated across full
+/// lane groups, reduced pairwise, scalar tail. LLVM turns the lane loop
+/// into whatever vector ISA the target offers.
+#[inline]
+fn dot_lanes(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n8 = a.len() / LANES * LANES;
+    let mut lanes = [0.0f32; LANES];
+    let mut i = 0;
+    while i < n8 {
+        for (l, (x, y)) in lanes.iter_mut().zip(a[i..i + LANES].iter().zip(&b[i..i + LANES])) {
+            *l += x * y;
+        }
+        i += LANES;
+    }
+    let mut s = ((lanes[0] + lanes[4]) + (lanes[1] + lanes[5]))
+        + ((lanes[2] + lanes[6]) + (lanes[3] + lanes[7]));
+    for j in n8..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// Scaled `block × block` score tile between a query slab and a key slab
+/// (both `[block, d]` row-major) on the chosen arm; the scalar arm is
+/// exactly [`tensor::score_tile`].
+pub fn score_tile(
+    arm: SimdArm,
+    qs: &[f32],
+    ks: &[f32],
+    d: usize,
+    block: usize,
+    sc: f32,
+    out: &mut [f32],
+) {
+    if arm == SimdArm::Scalar {
+        return tensor::score_tile(qs, ks, d, block, sc, out);
+    }
+    debug_assert_eq!(qs.len(), block * d);
+    debug_assert_eq!(ks.len(), block * d);
+    debug_assert!(out.len() >= block * block);
+    for r in 0..block {
+        let qrow = &qs[r * d..(r + 1) * d];
+        let orow = &mut out[r * block..(r + 1) * block];
+        for (t, o) in orow.iter_mut().enumerate() {
+            *o = dot(SimdArm::Wide, qrow, &ks[t * d..(t + 1) * d]) * sc;
+        }
+    }
+}
+
+/// Like [`score_tile`] but only the within-block causal triangle
+/// (`t <= r`); entries above the diagonal are left untouched. The scalar
+/// arm is exactly [`tensor::score_tile_causal`].
+pub fn score_tile_causal(
+    arm: SimdArm,
+    qs: &[f32],
+    ks: &[f32],
+    d: usize,
+    block: usize,
+    sc: f32,
+    out: &mut [f32],
+) {
+    if arm == SimdArm::Scalar {
+        return tensor::score_tile_causal(qs, ks, d, block, sc, out);
+    }
+    debug_assert_eq!(qs.len(), block * d);
+    debug_assert_eq!(ks.len(), block * d);
+    debug_assert!(out.len() >= block * block);
+    for r in 0..block {
+        let qrow = &qs[r * d..(r + 1) * d];
+        let orow = &mut out[r * block..r * block + r + 1];
+        for (t, o) in orow.iter_mut().enumerate() {
+            *o = dot(SimdArm::Wide, qrow, &ks[t * d..(t + 1) * d]) * sc;
+        }
+    }
+}
+
+/// One block's worth of the single-query online-softmax update on the
+/// chosen arm: fold `len` cached tokens of a `[len, dh]` K/V slab pair
+/// into the running `(m, l, acc)` state.
+///
+/// Both arms run the *same* control flow (score, conditional rescale,
+/// exp-accumulate) with the arm's dot/scale/axpy primitives, so the
+/// degenerate-row semantics are identical: a row that never accumulates
+/// positive mass leaves `l == 0` and the caller emits zeros, and the
+/// `NEG_INF`-sentinel score (`-1e30`, finite) flows through `exp`
+/// without producing NaN on either arm. Every decode/verify kernel
+/// routes through this helper, which keeps the per-row floating-point
+/// operation sequence identical across the single-query,
+/// dense-fast-path and batched-verify kernels *within an arm* — the
+/// byte-exact speculative-decode equivalence guarantee.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn online_softmax_block(
+    arm: SimdArm,
+    qrow: &[f32],
+    ks: &[f32],
+    vs: &[f32],
+    len: usize,
+    dh: usize,
+    sc: f32,
+    m: &mut f32,
+    l: &mut f32,
+    acc: &mut [f32],
+) {
+    for t in 0..len {
+        let s = dot(arm, qrow, &ks[t * dh..(t + 1) * dh]) * sc;
+        if s > *m {
+            if *l > 0.0 {
+                let corr = (*m - s).exp();
+                *l *= corr;
+                scale(arm, acc, corr);
+            }
+            *m = s;
+        }
+        let p = (s - *m).exp();
+        *l += p;
+        axpy(arm, acc, p, &vs[t * dh..(t + 1) * dh]);
+    }
+}
+
+/// AVX2+FMA implementations. Callers must gate on [`wide_is_avx2`];
+/// the functions themselves only assume the features they enable.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum of a 256-bit accumulator.
+    ///
+    /// # Safety
+    /// Requires AVX2 at runtime.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps(v, 1);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 0b01));
+        _mm_cvtss_f32(s)
+    }
+
+    /// 8-lane FMA dot with four independent accumulators (32 elements
+    /// per iteration), unaligned loads, scalar tail.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA at runtime; `a` and `b` must be equal-length.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut acc2 = _mm256_setzero_ps();
+        let mut acc3 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 32 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(i + 8)),
+                _mm256_loadu_ps(bp.add(i + 8)),
+                acc1,
+            );
+            acc2 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(i + 16)),
+                _mm256_loadu_ps(bp.add(i + 16)),
+                acc2,
+            );
+            acc3 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(i + 24)),
+                _mm256_loadu_ps(bp.add(i + 24)),
+                acc3,
+            );
+            i += 32;
+        }
+        while i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+            i += 8;
+        }
+        let mut s = hsum(_mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3)));
+        while i < n {
+            s += *ap.add(i) * *bp.add(i);
+            i += 1;
+        }
+        s
+    }
+
+    /// `acc += alpha · x`, 8 lanes per FMA, scalar tail.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA at runtime; `acc` and `x` must be equal-length.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy(acc: &mut [f32], alpha: f32, x: &[f32]) {
+        debug_assert_eq!(acc.len(), x.len());
+        let n = acc.len();
+        let av = _mm256_set1_ps(alpha);
+        let (ap, xp) = (acc.as_mut_ptr(), x.as_ptr());
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let r = _mm256_fmadd_ps(av, _mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(ap.add(i)));
+            _mm256_storeu_ps(ap.add(i), r);
+            i += 8;
+        }
+        while i < n {
+            *ap.add(i) += alpha * *xp.add(i);
+            i += 1;
+        }
+    }
+
+    /// `xs *= c`, 8 lanes per multiply, scalar tail.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA at runtime.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn scale(xs: &mut [f32], c: f32) {
+        let n = xs.len();
+        let cv = _mm256_set1_ps(c);
+        let xp = xs.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            _mm256_storeu_ps(xp.add(i), _mm256_mul_ps(cv, _mm256_loadu_ps(xp.add(i))));
+            i += 8;
+        }
+        while i < n {
+            *xp.add(i) *= c;
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(seed: u64, n: usize) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal() as f32).collect()
+    }
+
+    #[test]
+    fn parse_accepts_the_three_arms() {
+        assert_eq!(parse("auto").unwrap(), None);
+        assert_eq!(parse("scalar").unwrap(), Some(SimdArm::Scalar));
+        assert_eq!(parse(" Wide ").unwrap(), Some(SimdArm::Wide));
+        assert!(parse("avx512").is_err());
+    }
+
+    #[test]
+    fn arm_labels_are_stable() {
+        assert_eq!(arm_label(SimdArm::Scalar), "scalar");
+        let w = arm_label(SimdArm::Wide);
+        assert!(w == "wide-avx2" || w == "wide-portable");
+    }
+
+    #[test]
+    fn wide_dot_matches_scalar_across_tail_lengths() {
+        // covers len < 8 (pure tail), len % 32 != 0 (8-lane loop), and
+        // the 32-element fast loop
+        for n in [0usize, 1, 3, 5, 7, 8, 9, 31, 32, 33, 64, 100, 257] {
+            let a = randv(1 + n as u64, n);
+            let b = randv(1000 + n as u64, n);
+            let s = dot(SimdArm::Scalar, &a, &b);
+            let w = dot(SimdArm::Wide, &a, &b);
+            assert!(
+                (s - w).abs() <= 1e-4 * (1.0 + s.abs()),
+                "dot mismatch at n={n}: scalar {s} wide {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn wide_axpy_and_scale_match_scalar() {
+        for n in [1usize, 7, 8, 17, 64, 130] {
+            let x = randv(n as u64, n);
+            let mut s_acc = randv(7 * n as u64, n);
+            let mut w_acc = s_acc.clone();
+            axpy(SimdArm::Scalar, &mut s_acc, 0.37, &x);
+            axpy(SimdArm::Wide, &mut w_acc, 0.37, &x);
+            for (s, w) in s_acc.iter().zip(&w_acc) {
+                assert!((s - w).abs() <= 1e-5, "axpy mismatch at n={n}");
+            }
+            scale(SimdArm::Scalar, &mut s_acc, 0.83);
+            scale(SimdArm::Wide, &mut w_acc, 0.83);
+            for (s, w) in s_acc.iter().zip(&w_acc) {
+                assert!((s - w).abs() <= 1e-5, "scale mismatch at n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn portable_lane_dot_matches_scalar_regardless_of_detection() {
+        // dot_lanes is the Wide arm's fallback on non-avx2 hosts; pin it
+        // directly so CI running on avx2 machines still covers it
+        for n in [0usize, 5, 8, 23, 64, 129] {
+            let a = randv(5 + n as u64, n);
+            let b = randv(500 + n as u64, n);
+            let s = crate::sparse::tensor::dot(&a, &b);
+            let w = dot_lanes(&a, &b);
+            assert!((s - w).abs() <= 1e-4 * (1.0 + s.abs()), "lane-dot mismatch at n={n}");
+        }
+    }
+
+    #[test]
+    fn wide_norm2_matches_scalar() {
+        for n in [1usize, 5, 8, 33, 100] {
+            let x = randv(n as u64, n);
+            assert!((norm2(SimdArm::Scalar, &x) - norm2(SimdArm::Wide, &x)).abs() <= 1e-4);
+        }
+    }
+
+    #[test]
+    fn wide_score_tiles_match_scalar() {
+        let (d, block) = (13usize, 6usize); // deliberately lane-unfriendly
+        let qs = randv(2, block * d);
+        let ks = randv(3, block * d);
+        let mut s_full = vec![0.0f32; block * block];
+        let mut w_full = vec![0.0f32; block * block];
+        score_tile(SimdArm::Scalar, &qs, &ks, d, block, 0.31, &mut s_full);
+        score_tile(SimdArm::Wide, &qs, &ks, d, block, 0.31, &mut w_full);
+        for (s, w) in s_full.iter().zip(&w_full) {
+            assert!((s - w).abs() <= 1e-5);
+        }
+        let mut s_tri = vec![f32::NAN; block * block];
+        let mut w_tri = vec![f32::NAN; block * block];
+        score_tile_causal(SimdArm::Scalar, &qs, &ks, d, block, 0.31, &mut s_tri);
+        score_tile_causal(SimdArm::Wide, &qs, &ks, d, block, 0.31, &mut w_tri);
+        for r in 0..block {
+            for t in 0..block {
+                let (s, w) = (s_tri[r * block + t], w_tri[r * block + t]);
+                if t <= r {
+                    assert!((s - w).abs() <= 1e-5);
+                } else {
+                    assert!(s.is_nan() && w.is_nan(), "above-diag must stay untouched");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn online_softmax_block_arms_agree_including_tails() {
+        for dh in [1usize, 3, 8, 11, 32, 40] {
+            for len in [1usize, 2, 5, 64] {
+                let q = randv(dh as u64, dh);
+                let ks = randv(100 + dh as u64, len * dh);
+                let vs = randv(200 + dh as u64, len * dh);
+                let sc = 1.0 / (dh as f32).sqrt();
+                let mut res: Vec<(f32, f32, Vec<f32>)> = Vec::new();
+                for arm in ARMS {
+                    let (mut m, mut l, mut acc) = (f32::NEG_INFINITY, 0.0f32, vec![0.0f32; dh]);
+                    online_softmax_block(arm, &q, &ks, &vs, len, dh, sc, &mut m, &mut l, &mut acc);
+                    res.push((m, l, acc));
+                }
+                let (sm, sl, sa) = &res[0];
+                let (wm, wl, wa) = &res[1];
+                assert!((sm - wm).abs() <= 1e-4, "m mismatch dh={dh} len={len}");
+                assert!((sl - wl).abs() <= 1e-4 * (1.0 + sl.abs()), "l mismatch dh={dh}");
+                for (s, w) in sa.iter().zip(wa) {
+                    assert!((s - w).abs() <= 1e-4, "acc mismatch dh={dh} len={len}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn online_softmax_neg_inf_sentinel_yields_no_nan_on_either_arm() {
+        // a slab whose scores all sit at the finite masked-score
+        // sentinel must still produce a finite convex combination
+        let dh = 8usize;
+        let q = vec![1.0f32; dh];
+        let ks = vec![-1e30f32 / dh as f32; 2 * dh]; // dots ≈ -1e30
+        let vs = randv(5, 2 * dh);
+        for arm in ARMS {
+            let (mut m, mut l, mut acc) = (f32::NEG_INFINITY, 0.0f32, vec![0.0f32; dh]);
+            online_softmax_block(arm, &q, &ks, &vs, 2, dh, 1.0, &mut m, &mut l, &mut acc);
+            assert!(l > 0.0, "sentinel scores must still accumulate mass");
+            assert!(acc.iter().all(|a| a.is_finite()), "NaN leaked on {:?}", arm);
+        }
+    }
+}

@@ -105,6 +105,19 @@ impl Args {
         crate::util::threadpool::init_global(n);
         crate::util::threadpool::global().workers()
     }
+
+    /// Pin the sparse-kernel SIMD arm from `--simd auto|scalar|wide`;
+    /// call once near process start, before any kernel runs. Without the
+    /// flag the `STEM_SIMD` env var (then auto-detection) decides — see
+    /// [`crate::sparse::simd::active`]. Returns the resolved dispatch
+    /// label, or an error for an unrecognized flag value.
+    pub fn init_simd(&self) -> Result<&'static str, String> {
+        if let Some(v) = self.get("simd") {
+            let arm = crate::sparse::simd::parse(v).map_err(|e| format!("--simd: {e}"))?;
+            crate::sparse::simd::set_override(arm);
+        }
+        Ok(crate::sparse::simd::dispatch_label())
+    }
 }
 
 #[cfg(test)]
@@ -146,6 +159,14 @@ mod tests {
         assert!(a.threads() >= 1);
         let a = args(&[], false);
         assert!(a.threads() >= 1);
+    }
+
+    #[test]
+    fn init_simd_rejects_unknown_arm_without_touching_dispatch() {
+        // the error path must fire before the global override is written,
+        // so this is safe to run alongside dispatch-sensitive tests
+        let a = args(&["--simd", "turbo"], false);
+        assert!(a.init_simd().is_err());
     }
 
     #[test]

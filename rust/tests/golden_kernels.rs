@@ -4,11 +4,22 @@
 //!
 //! Skips (with a note) when artifacts are absent so `cargo test` stays
 //! green pre-`make artifacts`; CI runs it after the artifact build.
+//!
+//! The degenerate-shape section at the bottom needs no artifacts: it pins
+//! all-masked rows, sub-lane tails and extreme score magnitudes against
+//! the scalar oracle under BOTH SIMD dispatch arms (explicit arms only —
+//! the process-global override is never touched, so the parallel test
+//! runner stays race-free).
 
+use stem::sparse::simd::{arm_label, ARMS};
 use stem::sparse::{
-    block_sparse_attention, block_sparse_attention_reference, oam_scores, SelectionBuilder, Tensor,
+    block_sparse_attention, block_sparse_attention_reference, block_sparse_attention_with,
+    dense_decode_attention_reference, dense_verify_attention_reference, oam_scores,
+    sparse_decode_attention_with, sparse_verify_attention_with, KvBlocks, Selection,
+    SelectionBuilder, Tensor, TensorKv,
 };
 use stem::util::json::Json;
+use stem::util::rng::Rng;
 
 struct Golden {
     block: usize,
@@ -111,4 +122,108 @@ fn rust_oam_scores_match_python_oracle() {
         }
     }
     assert!(worst < 2e-4, "rust OAM deviates from jnp oracle: {worst}");
+}
+
+// --- degenerate shapes under both dispatch arms ---------------------------
+
+#[test]
+fn all_masked_rows_zero_identically_on_both_arms() {
+    let mut r = Rng::new(41);
+    let (h, n, dh, block) = (1usize, 64usize, 8usize, 32usize);
+    let q = Tensor::randn(&[h, n, dh], &mut r);
+    let k = Tensor::randn(&[h, n, dh], &mut r);
+    let v = Tensor::randn(&[h, n, dh], &mut r);
+    // row 0 selects only block 1 (non-causal): every score in its tile is
+    // the -inf sentinel, so the whole row must come out as exact zeros
+    let mut b = SelectionBuilder::new(1, 2);
+    b.push_row(&[1], 1);
+    b.push_row(&[1, 0], 2);
+    let sel = b.finish();
+    for arm in ARMS {
+        let out = block_sparse_attention_with(arm, &q, &k, &v, &sel, block);
+        assert!(
+            out.data.iter().all(|x| x.is_finite()),
+            "{}: -inf sentinel leaked a NaN",
+            arm_label(arm)
+        );
+        assert!(
+            out.data[..block * dh].iter().all(|&x| x == 0.0),
+            "{}: masked row must be exact zeros",
+            arm_label(arm)
+        );
+        assert!(
+            out.data[block * dh..].iter().any(|&x| x != 0.0),
+            "{}: live rows must attend",
+            arm_label(arm)
+        );
+    }
+}
+
+#[test]
+fn decode_tails_shorter_than_lane_width_agree_across_arms() {
+    // context tails below the 8-lane width (and below dh) exercise the
+    // scalar tail of every wide primitive
+    for n_tokens in [1usize, 3, 7, 33] {
+        let mut r = Rng::new(43 + n_tokens as u64);
+        let (h, hk, dh) = (4usize, 2usize, 16usize);
+        let k = Tensor::randn(&[hk, 64, dh], &mut r);
+        let v = Tensor::randn(&[hk, 64, dh], &mut r);
+        let q = Tensor::randn(&[h, dh], &mut r);
+        let kv = TensorKv { k: &k, v: &v, n_tokens, block: 32 };
+        let sel = Selection::decode_full(h, kv.n_blocks());
+        let oracle = dense_decode_attention_reference(&q, &kv);
+        for arm in ARMS {
+            let out = sparse_decode_attention_with(arm, &q, &kv, &sel);
+            let d = max_abs_diff(&out, &oracle);
+            assert!(d < 1e-5, "{}: n_tokens={n_tokens} deviates by {d}", arm_label(arm));
+        }
+    }
+}
+
+#[test]
+fn verify_staircase_matches_oracle_on_both_arms() {
+    // γ-wide verify rows whose causal widths straddle a block boundary
+    let mut r = Rng::new(47);
+    let (g_rows, h, hk, dh, block, base) = (4usize, 2usize, 1usize, 8usize, 16usize, 15usize);
+    let q = Tensor::randn(&[g_rows, h, dh], &mut r);
+    let k = Tensor::randn(&[hk, 64, dh], &mut r);
+    let v = Tensor::randn(&[hk, 64, dh], &mut r);
+    let kv = TensorKv { k: &k, v: &v, n_tokens: base + g_rows - 1, block };
+    let sel = Selection::verify_full(h, g_rows, kv.n_blocks());
+    let want = dense_verify_attention_reference(&q, &kv, base);
+    for arm in ARMS {
+        let got = sparse_verify_attention_with(arm, &q, &kv, &sel, base);
+        let d = max_abs_diff(&got, &want);
+        assert!(d < 1e-5, "{}: verify staircase deviates by {d}", arm_label(arm));
+    }
+}
+
+#[test]
+fn extreme_score_magnitudes_stay_finite_on_both_arms() {
+    // ±1e4-scale q/k drive raw scores far past the exp range; the online
+    // softmax max-shift must keep both arms finite and in agreement
+    let mut r = Rng::new(53);
+    let (h, dh) = (2usize, 8usize);
+    let mut q = Tensor::randn(&[h, dh], &mut r);
+    let mut k = Tensor::randn(&[h, 40, dh], &mut r);
+    let v = Tensor::randn(&[h, 40, dh], &mut r);
+    for x in q.data.iter_mut() {
+        *x *= 1e4;
+    }
+    for x in k.data.iter_mut() {
+        *x *= 1e4;
+    }
+    let kv = TensorKv { k: &k, v: &v, n_tokens: 40, block: 16 };
+    let sel = Selection::decode_full(h, kv.n_blocks());
+    let outs: Vec<Vec<f32>> =
+        ARMS.iter().map(|&a| sparse_decode_attention_with(a, &q, &kv, &sel)).collect();
+    for (arm, out) in ARMS.iter().zip(&outs) {
+        assert!(
+            out.iter().all(|x| x.is_finite()),
+            "{}: overflow leaked a non-finite output",
+            arm_label(*arm)
+        );
+    }
+    let d = max_abs_diff(&outs[0], &outs[1]);
+    assert!(d < 1e-5, "arms diverge under extreme scores by {d}");
 }

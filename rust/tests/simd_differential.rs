@@ -1,0 +1,314 @@
+//! Paired differential property suite: the Wide SIMD arm must match the
+//! scalar oracle at 1e-5 for every vectorized kernel entry point, across
+//! lane-hostile shapes — page-straddling `KvPrefix` views, γ-wide verify
+//! staircases, sub-lane tails and GQA head fans (ISSUE 10 satellite).
+//!
+//! Every property passes arms explicitly through the `*_with` variants,
+//! so the suite is independent of the process-global dispatch state; the
+//! one test that exercises the override (`dispatch_globals_round_trip`)
+//! restores it before returning, and no other test here reads
+//! `simd::active`. CI runs this binary once per `STEM_SIMD` arm in the
+//! release lane alongside `spec_equivalence` (.github/workflows/ci.yml).
+
+use stem::sparse::simd::{self, SimdArm};
+use stem::sparse::{
+    antidiag_scores_with, block_sparse_attention_with, decode_block_scores_with,
+    dense_attention_with, dense_decode_attention_with, oam_scores_with, select_decode,
+    select_streaming, sparse_decode_attention_with, sparse_verify_attention_with, KvBlocks,
+    KvPrefix, Selection, SelectionBuilder, Tensor, TensorKv,
+};
+use stem::util::prop::forall;
+use stem::util::rng::Rng;
+
+const TOL: f32 = 1e-5;
+const S: SimdArm = SimdArm::Scalar;
+const W: SimdArm = SimdArm::Wide;
+
+fn maxdiff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "arms must agree on output shape");
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn prefill_kernels_agree_across_arms() {
+    forall(
+        61,
+        12,
+        |r: &mut Rng| {
+            (
+                r.below(1 << 31),
+                1 + r.below(4) as usize, // key blocks of 32: n in 32..=128
+                r.below(2) == 0,         // gqa
+            )
+        },
+        |&(seed, nblk, gqa)| {
+            let mut rng = Rng::new(seed);
+            let (h, dh, block, stride) = (4usize, 24usize, 32usize, 8usize);
+            let hk = if gqa { 2 } else { 4 };
+            let n = nblk * block;
+            let q = Tensor::randn(&[h, n, dh], &mut rng);
+            let k = Tensor::randn(&[hk, n, dh], &mut rng);
+            let v = Tensor::randn(&[hk, n, dh], &mut rng);
+            let d = dense_attention_with(W, &q, &k, &v)
+                .max_abs_diff(&dense_attention_with(S, &q, &k, &v));
+            if d >= TOL {
+                return Err(format!("dense_attention arms diverge by {d}"));
+            }
+            let d = antidiag_scores_with(W, &q, &k, block, stride)
+                .max_abs_diff(&antidiag_scores_with(S, &q, &k, block, stride));
+            if d >= TOL {
+                return Err(format!("antidiag_scores arms diverge by {d}"));
+            }
+            let d = oam_scores_with(W, &q, &k, &v, block, stride, 0.2)
+                .max_abs_diff(&oam_scores_with(S, &q, &k, &v, block, stride, 0.2));
+            if d >= TOL {
+                return Err(format!("oam_scores arms diverge by {d}"));
+            }
+            // one deterministic selection reused by both arms: cross-arm
+            // top-k tie-breaks must never leak into this comparison
+            let sel = select_streaming(h, nblk, 1, 2);
+            let d = block_sparse_attention_with(W, &q, &k, &v, &sel, block)
+                .max_abs_diff(&block_sparse_attention_with(S, &q, &k, &v, &sel, block));
+            if d >= TOL {
+                return Err(format!("block_sparse_attention arms diverge by {d}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn decode_kernels_agree_across_arms_on_prefix_views() {
+    forall(
+        67,
+        14,
+        |r: &mut Rng| {
+            (
+                r.below(1 << 31),
+                1 + r.below(300) as usize, // n_tokens incl. partial tails
+                1 + r.below(31) as usize,  // block size: straddles pages
+                r.below(2) == 0,           // gqa
+            )
+        },
+        |&(seed, n_tokens, block, gqa)| {
+            let mut rng = Rng::new(seed);
+            let (h, dh) = (4usize, 16usize);
+            let hk = if gqa { 2 } else { 4 };
+            let q = Tensor::randn(&[h, dh], &mut rng);
+            let k = Tensor::randn(&[hk, 320, dh], &mut rng);
+            let v = Tensor::randn(&[hk, 320, dh], &mut rng);
+            let kv = TensorKv { k: &k, v: &v, n_tokens, block };
+            // a KvPrefix clamped mid-block straddles the page boundary
+            let pre = KvPrefix::new(&kv, n_tokens.saturating_sub(block / 2).max(1));
+            let ws = decode_block_scores_with(W, &q, &pre, 4, 0.2);
+            let ss = decode_block_scores_with(S, &q, &pre, 4, 0.2);
+            let d = ws.max_abs_diff(&ss);
+            if d >= TOL {
+                return Err(format!("decode_block_scores arms diverge by {d}"));
+            }
+            // one selection (from the scalar scores) reused by both arms
+            let sel = select_decode(&ss, 4, 1, 1);
+            let d = maxdiff(
+                &sparse_decode_attention_with(W, &q, &pre, &sel),
+                &sparse_decode_attention_with(S, &q, &pre, &sel),
+            );
+            if d >= TOL {
+                return Err(format!("sparse_decode_attention arms diverge by {d}"));
+            }
+            let d = maxdiff(
+                &dense_decode_attention_with(W, &q, &kv),
+                &dense_decode_attention_with(S, &q, &kv),
+            );
+            if d >= TOL {
+                return Err(format!("dense_decode_attention arms diverge by {d}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn verify_kernel_agrees_across_arms_on_gamma_staircases() {
+    forall(
+        71,
+        12,
+        |r: &mut Rng| {
+            (
+                r.below(1 << 31),
+                1 + r.below(6) as usize,   // γ rows
+                1 + r.below(200) as usize, // base tokens
+                r.below(2) == 0,           // gqa
+            )
+        },
+        |&(seed, g_rows, base, gqa)| {
+            let mut rng = Rng::new(seed);
+            let (h, dh, block) = (4usize, 16usize, 32usize);
+            let hk = if gqa { 2 } else { 4 };
+            let q = Tensor::randn(&[g_rows, h, dh], &mut rng);
+            let k = Tensor::randn(&[hk, 256, dh], &mut rng);
+            let v = Tensor::randn(&[hk, 256, dh], &mut rng);
+            let kv = TensorKv { k: &k, v: &v, n_tokens: base + g_rows - 1, block };
+            let sel = Selection::verify_full(h, g_rows, kv.n_blocks());
+            let d = maxdiff(
+                &sparse_verify_attention_with(W, &q, &kv, &sel, base),
+                &sparse_verify_attention_with(S, &q, &kv, &sel, base),
+            );
+            if d >= TOL {
+                return Err(format!("sparse_verify_attention arms diverge by {d}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn malformed_decode_selections_are_rejected_before_the_simd_walk() {
+    // fuzz the invariants the vectorized cursor walk depends on: each
+    // mutation breaks exactly one, and validate_decode must catch it
+    // (the kernels debug_assert this validation at their entry)
+    forall(
+        73,
+        40,
+        |r: &mut Rng| (r.below(1 << 31), r.below(5) as usize),
+        |&(seed, mutation)| {
+            let mut rng = Rng::new(seed);
+            let (h, dh, block, nblk) = (2usize, 8usize, 16usize, 6usize);
+            let k = Tensor::randn(&[h, nblk * block, dh], &mut rng);
+            let v = Tensor::randn(&[h, nblk * block, dh], &mut rng);
+            let q = Tensor::randn(&[h, dh], &mut rng);
+            let kv = TensorKv { k: &k, v: &v, n_tokens: nblk * block - 3, block };
+            // start from a valid ascending row, then break one invariant
+            let mut rows: Vec<Vec<u32>> = vec![vec![0, 2, 4]; h];
+            let expect_err = match mutation {
+                0 => {
+                    rows[1] = vec![0, 2, 2]; // duplicate id: double-counts
+                    true
+                }
+                1 => {
+                    rows[1] = vec![2, 0, 4]; // misaligned: walk skips id 0
+                    true
+                }
+                2 => {
+                    rows[1] = vec![0, 2, nblk as u32]; // beyond context
+                    true
+                }
+                3 => {
+                    rows[1] = vec![]; // empty row
+                    true
+                }
+                _ => false, // control arm: stays valid
+            };
+            let mut b = SelectionBuilder::new(h, 1);
+            for row in &rows {
+                b.push_row(row, row.len() as u32);
+            }
+            let sel = b.finish();
+            let verdict = sel.validate_decode(kv.n_blocks());
+            if expect_err != verdict.is_err() {
+                return Err(format!("mutation {mutation}: validate_decode said {verdict:?}"));
+            }
+            if verdict.is_ok() {
+                // surviving selections must flow through both arms alike
+                let d = maxdiff(
+                    &sparse_decode_attention_with(W, &q, &kv, &sel),
+                    &sparse_decode_attention_with(S, &q, &kv, &sel),
+                );
+                if d >= TOL {
+                    return Err(format!("arms diverge on valid selection by {d}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn malformed_verify_selections_are_rejected_before_the_simd_walk() {
+    forall(
+        79,
+        40,
+        |r: &mut Rng| (r.below(1 << 31), r.below(5) as usize),
+        |&(seed, mutation)| {
+            let mut rng = Rng::new(seed);
+            let (g_rows, h, dh, block, nblk, base) = (2usize, 1usize, 8usize, 16usize, 6, 80usize);
+            let k = Tensor::randn(&[h, nblk * block, dh], &mut rng);
+            let v = Tensor::randn(&[h, nblk * block, dh], &mut rng);
+            let q = Tensor::randn(&[g_rows, h, dh], &mut rng);
+            let kv = TensorKv { k: &k, v: &v, n_tokens: base + g_rows - 1, block };
+            let mut rows: Vec<Vec<u32>> = vec![vec![0, 3], vec![0, 3, 5]];
+            let expect_err = match mutation {
+                0 => {
+                    rows[1] = vec![0, 3, 3];
+                    true
+                }
+                1 => {
+                    rows[1] = vec![3, 0, 5];
+                    true
+                }
+                2 => {
+                    rows[1] = vec![0, 3, nblk as u32];
+                    true
+                }
+                3 => {
+                    rows[0] = vec![];
+                    true
+                }
+                _ => false,
+            };
+            let mut b = SelectionBuilder::new(h, g_rows);
+            for row in &rows {
+                b.push_row(row, row.len() as u32);
+            }
+            let sel = b.finish();
+            let verdict = sel.validate_verify(kv.n_blocks());
+            if expect_err != verdict.is_err() {
+                return Err(format!("mutation {mutation}: validate_verify said {verdict:?}"));
+            }
+            if verdict.is_ok() {
+                let d = maxdiff(
+                    &sparse_verify_attention_with(W, &q, &kv, &sel, base),
+                    &sparse_verify_attention_with(S, &q, &kv, &sel, base),
+                );
+                if d >= TOL {
+                    return Err(format!("arms diverge on valid selection by {d}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+#[cfg_attr(not(debug_assertions), ignore)]
+#[should_panic(expected = "decode selection")]
+fn decode_kernel_asserts_on_malformed_selection_in_debug() {
+    let mut rng = Rng::new(9);
+    let (h, dh, block) = (1usize, 8usize, 16usize);
+    let k = Tensor::randn(&[h, 64, dh], &mut rng);
+    let v = Tensor::randn(&[h, 64, dh], &mut rng);
+    let q = Tensor::randn(&[h, dh], &mut rng);
+    let kv = TensorKv { k: &k, v: &v, n_tokens: 64, block };
+    let mut b = SelectionBuilder::new(1, 1);
+    b.push_row(&[2, 1], 2); // descending: the cursor walk would skip id 1
+    let sel = b.finish();
+    let _ = sparse_decode_attention_with(S, &q, &kv, &sel);
+}
+
+#[test]
+fn dispatch_globals_round_trip() {
+    // the only test in the suite that touches the process-global
+    // override; everything else passes arms explicitly, so this cannot
+    // race with concurrently running properties
+    if let Ok(env) = std::env::var("STEM_SIMD") {
+        if let Ok(Some(arm)) = simd::parse(&env) {
+            assert_eq!(simd::active(), arm, "STEM_SIMD={env} must pin dispatch");
+        }
+    }
+    simd::set_override(Some(SimdArm::Scalar));
+    assert_eq!(simd::active(), SimdArm::Scalar);
+    assert_eq!(simd::dispatch_label(), "scalar");
+    simd::set_override(Some(SimdArm::Wide));
+    assert_eq!(simd::active(), SimdArm::Wide);
+    assert!(simd::dispatch_label().starts_with("wide-"));
+    simd::set_override(None);
+}
